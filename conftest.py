@@ -1,0 +1,7 @@
+"""Repo-root pytest shim: the python package lives under python/ (build
+path only), so running `pytest python/tests/` from the repo root needs
+python/ on sys.path."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

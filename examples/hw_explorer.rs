@@ -1,0 +1,120 @@
+//! Hardware design-space explorer: sweeps the codesign knobs the paper
+//! fixes (N = replaced lanes, L = shift range, p = precision ratio) and
+//! prints the area/power/accuracy-proxy Pareto surface — the tool a
+//! hardware architect would actually use to pick the Fig. 13 design point.
+//!
+//! Run: `cargo run --release --example hw_explorer`
+
+use strum_dpu::encode::compression::ratio_for;
+use strum_dpu::hw::adder::{accumulator, adder_tree};
+use strum_dpu::hw::dpu::{dpu_cost, tops_per_area, DpuConfig};
+use strum_dpu::hw::gates::Cost;
+use strum_dpu::hw::multiplier::int8x8;
+use strum_dpu::hw::power::{power, tops_per_watt, Activity};
+use strum_dpu::hw::shifter::barrel_shifter;
+use strum_dpu::hw::PeVariant;
+use strum_dpu::quant::tensor::qlayer;
+use strum_dpu::quant::{apply_strum, Method, StrumParams};
+use strum_dpu::util::prng::Rng;
+
+/// Accuracy proxy: int-grid RMSE of the transform on Gaussian weights
+/// (cheap stand-in for a full eval; the real accuracy sweeps are
+/// `strum report fig10|fig11`).
+fn rmse_proxy(method: Method, p: f64) -> f64 {
+    let mut rng = Rng::new(9);
+    let data: Vec<i8> = (0..64 * 256)
+        .map(|_| (rng.gaussian() * 45.0).clamp(-127.0, 127.0) as i8)
+        .collect();
+    let layer = qlayer("probe", 64, 1, 256, data, vec![1.0; 64]);
+    apply_strum(&layer, &StrumParams::paper(method, p)).grid_rmse
+}
+
+fn main() {
+    let cfg = DpuConfig::flexnn_16x16();
+
+    println!("=== lane building blocks (NAND2-equivalents) ===");
+    let mul = int8x8();
+    println!("{:<24} area {:>7.1}  energy/op {:>7.1}", "INT8x8 multiplier", mul.area, mul.energy);
+    for l in [1u32, 3, 5, 7] {
+        let s = barrel_shifter(8, l);
+        println!(
+            "{:<24} area {:>7.1}  energy/op {:>7.1}  ({:.0}% / {:.0}% of mult)",
+            format!("barrel shifter L={}", l),
+            s.area,
+            s.energy,
+            s.area / mul.area * 100.0,
+            s.energy / mul.energy * 100.0
+        );
+    }
+    let tree: Cost = adder_tree(8, 16);
+    let acc = accumulator(32);
+    println!("{:<24} area {:>7.1}", "adder tree (8x16b)", tree.area);
+    println!("{:<24} area {:>7.1}", "accumulator (32b)", acc.area);
+
+    println!("\n=== L sweep at p=0.5: area/power vs representational range ===");
+    println!(
+        "{:<6} {:>9} {:>10} {:>10} {:>12} {:>12}",
+        "L", "payload q", "DPU area", "DPU power", "TOPS/mm2 Δ", "rmse proxy"
+    );
+    let act = Activity::dense(cfg.num_pes() as u64, 10_000, 0.5);
+    let base_area = dpu_cost(PeVariant::BaselineInt8, &cfg).total.area;
+    let base_tpa = tops_per_area(PeVariant::BaselineInt8, &cfg);
+    let base_pwr = power(PeVariant::BaselineInt8, &act, &cfg).dpu_level();
+    for l in [1u8, 3, 5, 7] {
+        let v = PeVariant::StaticMip2q { l_max: l };
+        let area = dpu_cost(v, &cfg).total.area;
+        let pwr = power(v, &act, &cfg).dpu_level();
+        println!(
+            "{:<6} {:>9} {:>9.2}% {:>9.2}% {:>11.2}% {:>12.3}",
+            l,
+            strum_dpu::quant::Method::Mip2q { l_max: l }.payload_bits(),
+            (area / base_area - 1.0) * 100.0,
+            (pwr / base_pwr - 1.0) * 100.0,
+            (tops_per_area(v, &cfg) / base_tpa - 1.0) * 100.0,
+            rmse_proxy(Method::Mip2q { l_max: l }, 0.5),
+        );
+    }
+
+    println!("\n=== p sweep (MIP2Q L=7): compression vs energy vs error ===");
+    println!(
+        "{:<6} {:>10} {:>12} {:>12} {:>12}",
+        "p", "Eq.1 r", "DPU power Δ", "TOPS/W Δ", "rmse proxy"
+    );
+    for p in [0.25, 0.5, 0.75] {
+        let v = PeVariant::StaticMip2q { l_max: 7 };
+        let act_p = Activity::dense(cfg.num_pes() as u64, 10_000, p);
+        let pwr = power(v, &act_p, &cfg).dpu_level();
+        let base_p = power(PeVariant::BaselineInt8, &Activity::dense(cfg.num_pes() as u64, 10_000, 0.0), &cfg)
+            .dpu_level();
+        println!(
+            "{:<6} {:>10.4} {:>11.2}% {:>11.2}% {:>12.3}",
+            p,
+            ratio_for(Method::Mip2q { l_max: 7 }, p),
+            (pwr / base_p - 1.0) * 100.0,
+            (tops_per_watt(v, &act_p, &cfg) / tops_per_watt(PeVariant::BaselineInt8, &act_p, &cfg) - 1.0)
+                * 100.0,
+            rmse_proxy(Method::Mip2q { l_max: 7 }, p),
+        );
+    }
+
+    println!("\n=== static vs dynamic provisioning (the Fig. 13a/b choice) ===");
+    for v in [
+        PeVariant::BaselineInt8,
+        PeVariant::StaticMip2q { l_max: 7 },
+        PeVariant::DynamicMip2q { l_max: 7 },
+        PeVariant::StaticDliq { q: 4 },
+    ] {
+        let d = dpu_cost(v, &cfg);
+        let pwr = power(v, &act, &cfg);
+        println!(
+            "{:<20} DPU area {:>10.0} ({:+5.2}%)  DPU power {:>8.0} ({:+5.2}%)",
+            v.name(),
+            d.total.area,
+            (d.total.area / base_area - 1.0) * 100.0,
+            pwr.dpu_level(),
+            (pwr.dpu_level() / base_pwr - 1.0) * 100.0
+        );
+    }
+    println!("\n(The paper picks static L=5 for max savings, dynamic L=7 when");
+    println!(" runtime quality fallback is worth ~3% DPU area.)");
+}

@@ -1,0 +1,110 @@
+//! Quickstart: the five-minute tour of the StruM public API.
+//!
+//! 1. Build a toy "layer" of INT8 weights.
+//! 2. Apply the three set-quantization strategies (§IV-C).
+//! 3. Encode to the §IV-D compressed format and check Eq. 1 / Eq. 2.
+//! 4. Price the hardware variants (Fig. 13's cost model).
+//! 5. Cycle-simulate the layer on the FlexNN DPU model.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (no artifacts needed — everything here is synthetic.)
+
+use strum_dpu::encode::compression::ratio_for;
+use strum_dpu::encode::{decode_layer, encode_layer};
+use strum_dpu::hw::pe::{pe_cost, pe_dense_cycle_energy, PeVariant};
+use strum_dpu::quant::tensor::qlayer;
+use strum_dpu::quant::{apply_strum, Method, StrumParams};
+use strum_dpu::sim::config::SimConfig;
+use strum_dpu::sim::dataflow::LayerShape;
+use strum_dpu::sim::{simulate_layer, SimMode};
+use strum_dpu::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A 64-output-channel 1x1 conv layer with Gaussian INT8 weights.
+    let (oc, ic) = (64usize, 128usize);
+    let mut rng = Rng::new(2025);
+    let data: Vec<i8> = (0..oc * ic)
+        .map(|_| (rng.gaussian() * 45.0).clamp(-127.0, 127.0) as i8)
+        .collect();
+    let layer = qlayer("toy", oc, 1, ic, data, vec![0.01; oc]);
+    println!("layer: {} weights ({} oc x {} ic)\n", layer.len(), oc, ic);
+
+    // 2. StruM transforms at the paper's hardware point [1,16], p = 0.5.
+    println!("{:<22} {:>10} {:>12} {:>10}", "method", "rmse(grid)", "measured p", "Eq.1/2 r");
+    for method in [
+        Method::StructuredSparsity,
+        Method::Dliq { q: 4 },
+        Method::Mip2q { l_max: 7 },
+        Method::Mip2q { l_max: 5 },
+    ] {
+        let s = apply_strum(&layer, &StrumParams::paper(method, 0.5));
+        s.check_structure().map_err(anyhow::Error::msg)?;
+        println!(
+            "{:<22} {:>10.3} {:>12.3} {:>10.4}",
+            method.name(),
+            s.grid_rmse,
+            s.measured_p(),
+            ratio_for(method, 0.5)
+        );
+    }
+
+    // 3. Codec round-trip (§IV-D mask header + payload).
+    let s = apply_strum(&layer, &StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5));
+    let enc = encode_layer(&s);
+    let dec = decode_layer(&enc)?;
+    assert_eq!(dec.values, s.values);
+    println!(
+        "\ncodec: {} weights -> {} bytes (measured r = {:.4}, Eq.1 r = {:.4})",
+        s.len(),
+        enc.bytes.len(),
+        enc.measured_ratio(),
+        ratio_for(s.params.method, 0.5)
+    );
+
+    // 4. Hardware cost of the PE variants (Fig. 13).
+    println!("\n{:<20} {:>12} {:>16}", "PE variant", "area (NAND2)", "power/cycle");
+    let base = pe_cost(PeVariant::BaselineInt8).area();
+    let base_e = pe_dense_cycle_energy(PeVariant::BaselineInt8);
+    for v in [
+        PeVariant::BaselineInt8,
+        PeVariant::StaticMip2q { l_max: 7 },
+        PeVariant::StaticMip2q { l_max: 5 },
+        PeVariant::DynamicMip2q { l_max: 7 },
+    ] {
+        let c = pe_cost(v);
+        let e = pe_dense_cycle_energy(v);
+        println!(
+            "{:<20} {:>8.0} ({:+5.1}%) {:>10.0} ({:+5.1}%)",
+            v.name(),
+            c.area(),
+            (c.area() / base - 1.0) * 100.0,
+            e,
+            (e / base_e - 1.0) * 100.0
+        );
+    }
+
+    // 5. Cycle-simulate dense vs StruM-perf execution (the 2x guarantee).
+    let shape = LayerShape::conv("toy", oc, ic, 1, 16, 16);
+    let baseline = apply_strum(&layer, &StrumParams::paper(Method::Baseline, 0.0));
+    let dense = simulate_layer(
+        &shape,
+        &baseline,
+        &SimConfig::flexnn(SimMode::Int8Dense, None),
+        1.0,
+        0,
+    );
+    let perf = simulate_layer(
+        &shape,
+        &s,
+        &SimConfig::flexnn(SimMode::StrumPerf, Some(s.params.method)),
+        1.0,
+        0,
+    );
+    println!(
+        "\nsim: dense {} cycles, StruM-perf {} cycles -> {:.2}x speedup (paper: exactly 2x)",
+        dense.cycles,
+        perf.cycles,
+        perf.speedup_vs(&dense)
+    );
+    Ok(())
+}

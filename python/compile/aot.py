@@ -1,0 +1,118 @@
+"""AOT export: lower every zoo forward (and the standalone StruM kernels)
+to HLO TEXT for the rust PJRT runtime.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out, default ../artifacts):
+    hlo/<net>_b<batch>.hlo.txt     model forward, weights-as-arguments
+    hlo/strum_matmul_f32.hlo.txt   standalone float two-bank kernel
+    hlo/strum_matmul_int.hlo.txt   standalone bit-exact integer kernel
+    hlo/manifest.json              arg orders, shapes, batch sizes
+
+Usage: python -m compile.aot [--out DIR] [--nets a,b] [--batches 1,256]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from . import nets as nets_mod
+from .kernels.strum_matmul import strum_matmul_f32, strum_matmul_int, vmem_bytes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_net(net: str, batch: int, out: str) -> dict:
+    f = model_mod.export_forward(net)
+    specs = model_mod.export_arg_specs(net, batch)
+    lowered = jax.jit(f).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = f"{out}/hlo/{net}_b{batch}.hlo.txt"
+    with open(path, "w") as fh:
+        fh.write(text)
+    args = ["images", "act_scales"]
+    for name, _ in nets_mod.param_shapes(net):
+        if name == "fc_w":
+            args += ["fc_w_hi", "fc_w_lo"]
+        else:
+            args.append(name)
+    return {
+        "net": net,
+        "batch": batch,
+        "path": f"hlo/{net}_b{batch}.hlo.txt",
+        "args": args,
+        "bytes": len(text),
+    }
+
+
+def export_kernels(out: str, m: int, k: int, n: int) -> list[dict]:
+    entries = []
+    fspec = [
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    ]
+    lowered = jax.jit(lambda x, h, l: (strum_matmul_f32(x, h, l),)).lower(*fspec)
+    with open(f"{out}/hlo/strum_matmul_f32.hlo.txt", "w") as fh:
+        fh.write(to_hlo_text(lowered))
+    entries.append(
+        {"kernel": "strum_matmul_f32", "m": m, "k": k, "n": n, "dtype": "f32",
+         "path": "hlo/strum_matmul_f32.hlo.txt",
+         "vmem_bytes": vmem_bytes(min(m, 128), min(n, 128), min(k, 512))}
+    )
+    ispec = [
+        jax.ShapeDtypeStruct((m, k), jnp.int32),
+        jax.ShapeDtypeStruct((k, n), jnp.int32),
+        jax.ShapeDtypeStruct((k, n), jnp.int32),
+    ]
+    lowered = jax.jit(lambda x, h, l: (strum_matmul_int(x, h, l),)).lower(*ispec)
+    with open(f"{out}/hlo/strum_matmul_int.hlo.txt", "w") as fh:
+        fh.write(to_hlo_text(lowered))
+    entries.append(
+        {"kernel": "strum_matmul_int", "m": m, "k": k, "n": n, "dtype": "i32",
+         "path": "hlo/strum_matmul_int.hlo.txt",
+         "vmem_bytes": vmem_bytes(min(m, 128), min(n, 128), min(k, 512))}
+    )
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--nets", default=",".join(nets_mod.NETS))
+    ap.add_argument("--batches", default="256")
+    ap.add_argument("--kernel-mkn", default="64,256,64")
+    args = ap.parse_args()
+
+    os.makedirs(f"{args.out}/hlo", exist_ok=True)
+    manifest = {"models": [], "kernels": []}
+    for net in args.nets.split(","):
+        net = net.strip()
+        for b in (int(x) for x in args.batches.split(",")):
+            entry = export_net(net, b, args.out)
+            manifest["models"].append(entry)
+            print(f"lowered {net} b={b}: {entry['bytes']} chars")
+    m, k, n = (int(x) for x in args.kernel_mkn.split(","))
+    manifest["kernels"] = export_kernels(args.out, m, k, n)
+    print("lowered standalone kernels")
+    with open(f"{args.out}/hlo/manifest.json", "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print("aot manifest written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Synthetic image-classification dataset (the ImageNet substitute).
+
+StruM is a post-training weight transform; its accuracy behaviour depends on
+the weight-magnitude statistics of trained conv nets, not on dataset scale
+(DESIGN.md §1). This module generates a 12-class, 32x32x3 procedural dataset
+whose classes span easy (color/orientation) to subtle (texture-frequency)
+distinctions, so quantization damage produces a graded accuracy loss rather
+than a cliff or a plateau.
+
+Classes (4 hues x 3 patterns):
+  hue h in {0,1,2,3} sets the dominant color mix;
+  pattern p in {0,1,2}:
+    0 - oriented stripes (angle jittered around a class-specific base);
+    1 - checkerboard with class-specific cell size;
+    2 - concentric rings with class-specific frequency.
+
+Every image gets random phase, scale jitter, brightness jitter, and iid
+Gaussian pixel noise.
+"""
+
+import numpy as np
+
+NUM_CLASSES = 12
+IMG = 32
+CHANNELS = 3
+
+# Hues are deliberately close to gray: color alone is a weak cue, so the
+# classifier must use the (noisy) texture patterns — this keeps trained
+# accuracy off the 100% ceiling and makes quantization damage measurable.
+_HUES = np.array(
+    [
+        [0.62, 0.48, 0.45],
+        [0.45, 0.62, 0.48],
+        [0.46, 0.49, 0.62],
+        [0.58, 0.57, 0.44],
+    ],
+    dtype=np.float32,
+)
+
+
+def _pattern(cls: int, rng: np.random.Generator) -> np.ndarray:
+    """One 32x32 grayscale pattern for class `cls`."""
+    hue, pat = cls % 4, cls // 4
+    yy, xx = np.meshgrid(np.arange(IMG), np.arange(IMG), indexing="ij")
+    yy = yy.astype(np.float32)
+    xx = xx.astype(np.float32)
+    phase = rng.uniform(0, 2 * np.pi)
+    jitter = rng.uniform(0.85, 1.15)
+    if pat == 0:
+        # Oriented stripes: base angle differs per hue to decouple cues.
+        ang = (np.pi / 8) * (1 + hue) + rng.normal(0, 0.08)
+        freq = 0.55 * jitter
+        g = np.sin(freq * (np.cos(ang) * xx + np.sin(ang) * yy) + phase)
+    elif pat == 1:
+        # Checkerboard, cell size 3 + hue (subtle frequency distinction).
+        cell = 3 + hue
+        g = np.sign(np.sin(np.pi * xx / cell + phase) * np.sin(np.pi * yy / cell + phase))
+        g = g.astype(np.float32) * jitter
+    else:
+        # Concentric rings around a jittered center.
+        cy = IMG / 2 + rng.normal(0, 2.0)
+        cx = IMG / 2 + rng.normal(0, 2.0)
+        r = np.sqrt((yy - cy) ** 2 + (xx - cx) ** 2)
+        freq = (0.45 + 0.1 * hue) * jitter
+        g = np.sin(freq * r + phase)
+    return g.astype(np.float32)
+
+
+def make_image(cls: int, rng: np.random.Generator) -> np.ndarray:
+    g = _pattern(cls, rng)
+    g = (g - g.min()) / (g.max() - g.min() + 1e-6)
+    # Weak pattern amplitude over a textured background.
+    amp = rng.uniform(0.35, 0.7)
+    g = 0.5 + amp * (g - 0.5)
+    hue = _HUES[cls % 4] * rng.uniform(0.85, 1.15)
+    img = g[:, :, None] * hue[None, None, :]
+    # Distractor texture (class-independent low-frequency blob).
+    yy, xx = np.meshgrid(np.arange(IMG), np.arange(IMG), indexing="ij")
+    ph1, ph2 = rng.uniform(0, 2 * np.pi, 2)
+    distract = 0.10 * np.sin(0.19 * xx + ph1) * np.cos(0.23 * yy + ph2)
+    img += distract[:, :, None]
+    img += rng.normal(0, 0.22, size=img.shape)  # heavy pixel noise
+    img *= rng.uniform(0.8, 1.2)  # brightness jitter
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def make_dataset(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (images [n,32,32,3] f32, labels [n] i32), class-balanced."""
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n) % NUM_CLASSES
+    rng.shuffle(labels)
+    imgs = np.stack([make_image(int(c), rng) for c in labels])
+    return imgs.astype(np.float32), labels.astype(np.int32)
+
+
+def save_bin(path: str, arr: np.ndarray) -> None:
+    """Raw little-endian dump (rust reads with a manifest)."""
+    arr.astype("<f4" if arr.dtype == np.float32 else "<i4").tofile(path)
+
+
+if __name__ == "__main__":
+    x, y = make_dataset(240, 0)
+    assert x.shape == (240, 32, 32, 3) and x.dtype == np.float32
+    assert y.min() >= 0 and y.max() == NUM_CLASSES - 1
+    print("data ok", x.mean())

@@ -1,0 +1,16 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+signal: pytest + hypothesis compare every kernel output against these)."""
+
+import jax.numpy as jnp
+
+
+def strum_matmul_ref(x, w_hi, w_lo):
+    """Reference two-bank GEMM: x @ (w_hi + w_lo), computed as the fused
+    single-bank product (the mathematically equal form)."""
+    return x @ (w_hi + w_lo)
+
+
+def strum_matmul_int_ref(x_i32, whi_i32, wlo_i32):
+    """Integer reference with int32 accumulation."""
+    x = x_i32.astype(jnp.int32)
+    return x @ whi_i32.astype(jnp.int32) + x @ wlo_i32.astype(jnp.int32)

@@ -1,0 +1,114 @@
+"""Layer-1 Pallas kernels: the StruM mixed-precision GEMM.
+
+Hardware adaptation (DESIGN.md §2): the FlexNN PE's two multiplier banks
+(INT8 multipliers for mask=1 lanes, barrel shifters for mask=0 lanes)
+become two *dense* partial GEMMs on the MXU — `x @ w_hi + x @ w_lo` — with
+the mask realized as the complementary zero patterns of the two weight
+banks. Dense two-bank evaluation keeps MXU-shaped operands (no
+gather/scatter), exactly as the adder tree wants dense lanes; the mask
+header's routing role is played by the precomputed decomposition.
+
+Two variants:
+
+* `strum_matmul_f32`  — float banks; used inside every zoo network's
+  classifier head (the accuracy-evaluation path: banks carry fake-quant
+  dequantized values).
+* `strum_matmul_int`  — int32 banks; bit-exact emulation of the PE
+  datapath (products and accumulation in int32). Exported standalone and
+  cross-checked against the rust simulator's dot products.
+
+Kernels are written with `interpret=True`: the CPU PJRT client cannot run
+Mosaic custom-calls; interpret mode lowers to plain HLO while preserving
+the block structure. Block sizes are chosen for the paper's [1,16] StruM
+block never to straddle a K-tile (bk % 16 == 0) and to fit VMEM:
+(bm*bk + 2*bk*bn + bm*bn) * 4B ≤ ~4 MiB for the defaults below.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest divisor of `dim` that is ≤ pref (keeps the grid exact)."""
+    b = min(dim, pref)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _matmul2_kernel(x_ref, hi_ref, lo_ref, o_ref, *, k_steps, dtype):
+    """One (bm, bn) output tile: accumulate over K in bk chunks.
+
+    Grid = (M/bm, N/bn, k_steps); K is the innermost (sequential) axis so
+    the accumulator tile stays resident in VMEM across K steps — the same
+    HBM↔VMEM schedule the FlexNN column achieves with its weight-resident
+    RFs.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    # Two dense banks = the PE's multiplier bank + shifter bank.
+    acc = jnp.dot(x, hi_ref[...], preferred_element_type=dtype)
+    acc += jnp.dot(x, lo_ref[...], preferred_element_type=dtype)
+    o_ref[...] += acc
+
+
+def _strum_matmul(x, w_hi, w_lo, *, bm, bn, bk, dtype):
+    m, k = x.shape
+    k2, n = w_hi.shape
+    assert k == k2 and w_lo.shape == (k, n), (x.shape, w_hi.shape, w_lo.shape)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    k_steps = k // bk
+    kernel = functools.partial(_matmul2_kernel, k_steps=k_steps, dtype=dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x, w_hi, w_lo)
+
+
+def strum_matmul_f32(x, w_hi, w_lo, *, bm: int = 128, bn: int = 128, bk: int = 512):
+    """Float two-bank StruM GEMM: `x @ w_hi + x @ w_lo`."""
+    return _strum_matmul(x, w_hi, w_lo, bm=bm, bn=bn, bk=bk, dtype=jnp.float32)
+
+
+def strum_matmul_int(x_i32, whi_i32, wlo_i32, *, bm: int = 128, bn: int = 128, bk: int = 512):
+    """Bit-exact integer StruM GEMM (int32 accumulate), emulating the PE
+    datapath: `whi` carries INT8 values on mask=1 lanes (0 elsewhere),
+    `wlo` the low-set effective values (DLIQ `code << (8-q)` or MIP2Q
+    ±2^k) on mask=0 lanes."""
+    return _strum_matmul(x_i32, whi_i32, wlo_i32, bm=bm, bn=bn, bk=bk, dtype=jnp.int32)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """VMEM footprint estimate of one grid step (x + 2 banks + acc)."""
+    return itemsize * (bm * bk + 2 * bk * bn + bm * bn)
+
+
+if __name__ == "__main__":
+    import numpy as np
+
+    x = np.random.default_rng(0).normal(size=(8, 48)).astype(np.float32)
+    w = np.random.default_rng(1).normal(size=(48, 12)).astype(np.float32)
+    mask = np.random.default_rng(2).random((48, 12)) < 0.5
+    hi = np.where(mask, w, 0).astype(np.float32)
+    lo = np.where(~mask, w, 0).astype(np.float32)
+    out = strum_matmul_f32(jnp.array(x), jnp.array(hi), jnp.array(lo))
+    np.testing.assert_allclose(np.asarray(out), x @ w, rtol=1e-5, atol=1e-5)
+    print("strum_matmul_f32 ok; vmem(128,128,512) =", vmem_bytes(128, 128, 512), "bytes")

@@ -1,0 +1,129 @@
+"""Layer-2 export surface: the jitted forward functions AOT-lowered to HLO.
+
+Model HLO signature (per network):
+
+    f(images[B,32,32,3], act_scales[L], w0, b0, w1, b1, ..., fc_w_hi,
+      fc_w_lo, fc_b) -> (logits[B,12],)
+
+Weights are ARGUMENTS so one executable evaluates any quantize-dequantized
+weight set the rust coordinator produces; the classifier head takes the
+StruM two-bank decomposition and runs through the Pallas kernel (nets.py).
+act_scales[i] fake-quants the input of quantizable layer i (0 = float).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import nets
+
+
+def export_forward(net: str):
+    """Returns f(x, act_scales, *params_split_head) -> (logits,)."""
+
+    def f(x, act_scales, *params):
+        return (nets.apply(net, list(params), x, act_scales, split_head=True),)
+
+    return f
+
+
+def export_arg_specs(net: str, batch: int):
+    """ShapeDtypeStructs for the export signature, in order."""
+    specs = [
+        jax.ShapeDtypeStruct((batch, nets.INPUT_HW, nets.INPUT_HW, 3), jnp.float32),
+        jax.ShapeDtypeStruct((nets.num_quant_layers(net),), jnp.float32),
+    ]
+    shapes = nets.param_shapes(net)
+    for name, shape in shapes:
+        if name == "fc_w":
+            # Split head: two banks.
+            specs.append(jax.ShapeDtypeStruct(shape, jnp.float32))
+            specs.append(jax.ShapeDtypeStruct(shape, jnp.float32))
+        else:
+            specs.append(jax.ShapeDtypeStruct(shape, jnp.float32))
+    return specs
+
+
+def split_head_params(params: list[np.ndarray]) -> list[np.ndarray]:
+    """Train-order params → export-order (fc_w duplicated as hi-bank with
+    a zero lo-bank; the rust side overwrites both from its decomposition)."""
+    out = list(params[:-2])
+    fc_w, fc_b = params[-2], params[-1]
+    out += [fc_w, np.zeros_like(fc_w), fc_b]
+    return out
+
+
+def forward_train(net: str):
+    """Training-path forward (single fc weight, no act quant)."""
+
+    def f(params, x):
+        scales = jnp.zeros((nets.num_quant_layers(net),), jnp.float32)
+        return nets.apply(net, list(params), x, scales, split_head=False)
+
+    return f
+
+
+def collect_act_scales(net: str, params: list[np.ndarray], x_calib: np.ndarray,
+                       pct: float = 99.9) -> np.ndarray:
+    """Static activation calibration (§VI): runs the float forward on a
+    calibration batch capturing each quantizable layer's input |act|
+    percentile → symmetric INT8 scale."""
+    meta = nets.layer_meta(net)
+    records: list[np.ndarray] = []
+
+    # Re-implement the walk with a capture hook: easiest is to call apply
+    # with act_scales=0 but instrument via jax's pure callbacks — instead,
+    # exploit that apply fake-quants layer inputs: we capture by running
+    # layer-by-layer below using the same spec walk.
+    import jax.numpy as jnp
+
+    from .nets import NETS, Conv, Inception, Residual, _conv, _pool
+
+    x = jnp.asarray(x_calib)
+    p = list(params)
+
+    def take2():
+        return jnp.asarray(p.pop(0)), jnp.asarray(p.pop(0))
+
+    def record(t):
+        records.append(np.asarray(jnp.abs(t)).ravel())
+
+    for s in NETS[net]:
+        if isinstance(s, Conv):
+            w, b = take2()
+            record(x)
+            x = jax.nn.relu(_conv(x, w, b))
+            if s.pool:
+                x = _pool(x)
+        elif isinstance(s, Residual):
+            ic = x.shape[-1]
+            w, b = take2()
+            record(x)
+            y = jax.nn.relu(_conv(x, w, b))
+            w, b = take2()
+            record(y)
+            y = _conv(y, w, b)
+            if ic != s.oc:
+                w, b = take2()
+                record(x)
+                sc = _conv(x, w, b)
+            else:
+                sc = x
+            x = jax.nn.relu(y + sc)
+        elif isinstance(s, Inception):
+            branches = []
+            for _ in range(3):
+                w, b = take2()
+                record(x)
+                branches.append(jax.nn.relu(_conv(x, w, b)))
+            x = jnp.concatenate(branches, axis=-1)
+    x = jnp.mean(x, axis=(1, 2))
+    record(x)
+    fc_w, fc_b = take2()
+    _ = x @ fc_w + fc_b
+    assert len(records) == len(meta), (len(records), len(meta))
+    scales = np.array(
+        [np.percentile(r, pct) / 127.0 if r.size else 1.0 for r in records],
+        dtype=np.float32,
+    )
+    return np.maximum(scales, 1e-8)

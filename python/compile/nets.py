@@ -1,0 +1,301 @@
+"""Mini-CNN zoo (Layer 2).
+
+Ten small conv nets mirroring the architectural families of the paper's
+Table I (VGG / ResNet / Inception / Darknet), trained from scratch on the
+synthetic dataset. Each net is described by a spec tree; `init` builds the
+parameter list, `apply` runs the forward pass, and `layer_meta` emits the
+quantizable-tensor manifest that the rust side consumes (shapes + output
+spatial dims for the FlexNN simulator).
+
+Weights are always *arguments* of the jitted forward so one AOT-lowered HLO
+evaluates any quantize-dequantized weight set. The classifier head runs
+through the Pallas StruM GEMM kernel (two dense banks: high-precision and
+low-precision), so the lowered HLO contains the Layer-1 kernel.
+
+Activation fake-quant: `apply` takes a per-layer scale vector `act_scales`
+(0 = float passthrough); scales are calibrated at build time (aot.py),
+mirroring the paper's Graffitist INT8 static calibration.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.strum_matmul import strum_matmul_f32
+
+# --------------------------------------------------------------------------
+# Spec types
+
+
+@dataclass
+class Conv:
+    name: str
+    k: int
+    oc: int
+    pool: bool = False  # 2x2 avg pool after activation
+
+
+@dataclass
+class Residual:
+    name: str
+    oc: int  # both convs at this width; 1x1 projection if ic != oc
+
+
+@dataclass
+class Inception:
+    name: str
+    oc: int  # total output channels, split across 1x1 / 3x3 / 5x5 branches
+
+
+NETS: dict[str, list] = {
+    "mini_vgg_a": [
+        Conv("c0", 3, 16),
+        Conv("c1", 3, 32, pool=True),
+        Conv("c2", 3, 32),
+        Conv("c3", 3, 64, pool=True),
+    ],
+    "mini_vgg_b": [
+        Conv("c0", 3, 16),
+        Conv("c1", 3, 16),
+        Conv("c2", 3, 32, pool=True),
+        Conv("c3", 3, 32),
+        Conv("c4", 3, 64, pool=True),
+        Conv("c5", 3, 64),
+    ],
+    "mini_vgg_c": [
+        Conv("c0", 3, 24),
+        Conv("c1", 3, 48, pool=True),
+        Conv("c2", 3, 48),
+        Conv("c3", 3, 96, pool=True),
+        Conv("c4", 3, 96),
+    ],
+    "mini_resnet_a": [
+        Conv("stem", 3, 16),
+        Residual("r0", 16),
+        Conv("d0", 3, 32, pool=True),
+        Residual("r1", 32),
+    ],
+    "mini_resnet_b": [
+        Conv("stem", 3, 16),
+        Residual("r0", 16),
+        Conv("d0", 3, 32, pool=True),
+        Residual("r1", 32),
+        Conv("d1", 3, 64, pool=True),
+        Residual("r2", 64),
+    ],
+    "mini_resnet_c": [
+        Conv("stem", 3, 24),
+        Residual("r0", 24),
+        Conv("d0", 3, 48, pool=True),
+        Residual("r1", 48),
+        Residual("r2", 48),
+    ],
+    "mini_incept_a": [
+        Conv("stem", 3, 16, pool=True),
+        Inception("i0", 32),
+        Conv("d0", 3, 48, pool=True),
+    ],
+    "mini_incept_b": [
+        Conv("stem", 3, 16, pool=True),
+        Inception("i0", 32),
+        Inception("i1", 48),
+        Conv("d0", 3, 64, pool=True),
+    ],
+    "mini_darknet": [
+        Conv("c0", 3, 24, pool=True),
+        Conv("c1", 1, 16),
+        Conv("c2", 3, 32, pool=True),
+        Conv("c3", 1, 16),
+        Conv("c4", 3, 48),
+    ],
+    "mini_cnn_s": [
+        Conv("c0", 3, 16, pool=True),
+        Conv("c1", 3, 32, pool=True),
+        Conv("c2", 3, 32),
+    ],
+}
+
+NUM_CLASSES = 12
+INPUT_HW = 32
+
+
+# --------------------------------------------------------------------------
+# Spec walking: enumerate weight tensors
+
+
+def _inception_branches(ic: int, oc: int):
+    """(name suffix, k, ic, oc) for each branch; oc split 1/4, 1/2, 1/4."""
+    o1 = oc // 4
+    o3 = oc // 2
+    o5 = oc - o1 - o3
+    return [("b1", 1, ic, o1), ("b3", 3, ic, o3), ("b5", 5, ic, o5)]
+
+
+def layer_meta(net: str) -> list[dict]:
+    """Quantizable-tensor manifest: one entry per conv/fc weight, in
+    parameter order, with the output spatial dims the simulator needs."""
+    spec = NETS[net]
+    meta = []
+    ic, hw = 3, INPUT_HW
+    for s in spec:
+        if isinstance(s, Conv):
+            meta.append(
+                dict(name=s.name, kind="conv", kh=s.k, kw=s.k, ic=ic, oc=s.oc, oh=hw, ow=hw)
+            )
+            ic = s.oc
+            if s.pool:
+                hw //= 2
+        elif isinstance(s, Residual):
+            for sub in ("a", "b"):
+                meta.append(
+                    dict(
+                        name=f"{s.name}{sub}", kind="conv", kh=3, kw=3, ic=ic if sub == "a" else s.oc,
+                        oc=s.oc, oh=hw, ow=hw,
+                    )
+                )
+            if ic != s.oc:
+                meta.append(
+                    dict(name=f"{s.name}p", kind="conv", kh=1, kw=1, ic=ic, oc=s.oc, oh=hw, ow=hw)
+                )
+            ic = s.oc
+        elif isinstance(s, Inception):
+            for suffix, k, bic, boc in _inception_branches(ic, s.oc):
+                meta.append(
+                    dict(name=f"{s.name}{suffix}", kind="conv", kh=k, kw=k, ic=bic, oc=boc, oh=hw, ow=hw)
+                )
+            ic = s.oc
+        else:
+            raise TypeError(s)
+    meta.append(dict(name="fc", kind="fc", kh=1, kw=1, ic=ic, oc=NUM_CLASSES, oh=1, ow=1))
+    return meta
+
+
+def param_shapes(net: str) -> list[tuple[str, tuple]]:
+    """(name, shape) for every parameter (weights HWIO + biases), in order."""
+    out = []
+    for m in layer_meta(net):
+        if m["kind"] == "conv":
+            out.append((m["name"] + "_w", (m["kh"], m["kw"], m["ic"], m["oc"])))
+            out.append((m["name"] + "_b", (m["oc"],)))
+        else:
+            out.append((m["name"] + "_w", (m["ic"], m["oc"])))
+            out.append((m["name"] + "_b", (m["oc"],)))
+    return out
+
+
+def init_params(net: str, seed: int) -> list[np.ndarray]:
+    """He-initialized parameters as a flat list matching param_shapes."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, shape in param_shapes(net):
+        if name.endswith("_b"):
+            params.append(np.zeros(shape, dtype=np.float32))
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            std = float(np.sqrt(2.0 / fan_in))
+            params.append(rng.normal(0, std, size=shape).astype(np.float32))
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+
+
+def _fq(x, s):
+    """Symmetric INT8 fake-quant with scale s; s == 0 → float passthrough."""
+    ss = jnp.where(s > 0, s, 1.0)
+    q = jnp.clip(jnp.round(x / ss), -127, 127) * ss
+    return jnp.where(s > 0, q, x)
+
+
+def _conv(x, w, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b[None, None, None, :]
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    ) * 0.25
+
+
+def apply(net: str, params: list, x, act_scales, *, split_head: bool):
+    """Forward pass.
+
+    params: flat list per `param_shapes`, EXCEPT when split_head=True the
+    final fc weight is replaced by two banks (w_hi, w_lo) — the StruM
+    decomposition fed by the rust coordinator — and the head GEMM runs
+    through the Pallas kernel. act_scales[i] fake-quants the input of
+    quantizable layer i (0 disables).
+    """
+    spec = NETS[net]
+    meta = layer_meta(net)
+    p = list(params)
+    li = 0  # index into meta / act_scales
+
+    def take():
+        nonlocal p
+        v = p.pop(0)
+        return v
+
+    def conv_here(x, stride=1):
+        nonlocal li
+        w, b = take(), take()
+        x = _fq(x, act_scales[li])
+        li += 1
+        return _conv(x, w, b, stride)
+
+    for s in spec:
+        if isinstance(s, Conv):
+            x = jax.nn.relu(conv_here(x))
+            if s.pool:
+                x = _pool(x)
+        elif isinstance(s, Residual):
+            ic = x.shape[-1]
+            y = jax.nn.relu(conv_here(x))
+            y = conv_here(y)
+            if ic != s.oc:
+                sc = conv_here(x)
+            else:
+                sc = x
+            x = jax.nn.relu(y + sc)
+        elif isinstance(s, Inception):
+            branches = []
+            for _ in range(3):
+                branches.append(jax.nn.relu(conv_here(x)))
+            x = jnp.concatenate(branches, axis=-1)
+        else:
+            raise TypeError(s)
+
+    # Global average pool → classifier head.
+    x = jnp.mean(x, axis=(1, 2))
+    x = _fq(x, act_scales[li])
+    if split_head:
+        w_hi, w_lo, b = p.pop(0), p.pop(0), p.pop(0)
+        logits = strum_matmul_f32(x, w_hi, w_lo) + b[None, :]
+    else:
+        w, b = p.pop(0), p.pop(0)
+        logits = x @ w + b[None, :]
+    assert not p, f"unconsumed params: {len(p)}"
+    assert li == len(meta) - 1, (li, len(meta))
+    return logits
+
+
+def num_quant_layers(net: str) -> int:
+    return len(layer_meta(net))
+
+
+if __name__ == "__main__":
+    for net in NETS:
+        meta = layer_meta(net)
+        params = init_params(net, 0)
+        x = jnp.zeros((2, 32, 32, 3), jnp.float32)
+        scales = jnp.zeros((len(meta),), jnp.float32)
+        y = apply(net, params, x, scales, split_head=False)
+        n_params = sum(int(np.prod(p.shape)) for p in params)
+        print(f"{net:16s} layers={len(meta):2d} params={n_params:7d} logits={y.shape}")

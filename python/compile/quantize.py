@@ -1,0 +1,210 @@
+"""Python mirror of the rust StruM quantizer (rust/src/quant/).
+
+Build-time only: used for (a) activation-scale calibration during AOT
+export, (b) golden-file parity tests pinning the rust and python
+implementations to identical semantics (rounding, tie-breaks, padding).
+
+Layout convention matches rust: a layer is per-OC matrices of
+[rows = kh*kw, cols = ic]; JAX's HWIO conv kernels are transposed into
+this canonical order by `to_canonical` (and back by `from_canonical`).
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Layout
+
+
+def to_canonical(w: np.ndarray) -> np.ndarray:
+    """HWIO (kh,kw,ic,oc) or (in,out) FC → canonical [oc, rows, cols]."""
+    if w.ndim == 4:
+        kh, kw, ic, oc = w.shape
+        return np.transpose(w, (3, 0, 1, 2)).reshape(oc, kh * kw, ic)
+    if w.ndim == 2:
+        cin, cout = w.shape
+        return np.transpose(w, (1, 0)).reshape(cout, 1, cin)
+    raise ValueError(w.shape)
+
+
+def from_canonical(c: np.ndarray, orig_shape: tuple) -> np.ndarray:
+    """Canonical [oc, rows, cols] → original HWIO / (in,out)."""
+    if len(orig_shape) == 4:
+        kh, kw, ic, oc = orig_shape
+        return np.transpose(c.reshape(oc, kh, kw, ic), (1, 2, 3, 0))
+    if len(orig_shape) == 2:
+        cin, cout = orig_shape
+        return np.transpose(c.reshape(cout, cin), (1, 0))
+    raise ValueError(orig_shape)
+
+
+# --------------------------------------------------------------------------
+# INT8 calibration (symmetric, per output channel) — rust calibrate.rs
+
+
+def round_half_away(x: np.ndarray) -> np.ndarray:
+    return np.where(x >= 0, np.floor(x + 0.5), np.ceil(x - 0.5))
+
+
+def calibrate(canon: np.ndarray):
+    """canon [oc, rows, cols] f32 → (int8 grid values i16, scales [oc])."""
+    oc = canon.shape[0]
+    flat = canon.reshape(oc, -1)
+    amax = np.abs(flat).max(axis=1)
+    scales = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = round_half_away(flat / scales[:, None]).clip(-127, 127).astype(np.int16)
+    return q.reshape(canon.shape), scales
+
+
+# --------------------------------------------------------------------------
+# Set quantizers — rust dliq.rs / mip2q.rs / sparsity.rs
+
+
+def dliq_requantize(v: np.ndarray, q: int):
+    """(effective grid value, code) with the rust semantics."""
+    if q <= 1:
+        return np.zeros_like(v), np.zeros_like(v)
+    shift = 8 - q
+    step = 1 << shift
+    max_code = (1 << (q - 1)) - 1
+    code = round_half_away(v.astype(np.float64) / step).clip(-max_code, max_code)
+    code = code.astype(np.int16)
+    return (code << shift).astype(np.int16), code
+
+
+def mip2q_requantize(v: np.ndarray, l_max: int):
+    """(effective ±2^k value, sign-magnitude code ±(k+1))."""
+    mag = np.abs(v).astype(np.int32)
+    fl = np.where(mag >= 2, np.floor(np.log2(np.maximum(mag, 1))).astype(np.int32), 0)
+    lo = np.minimum(fl, l_max)
+    hi = np.minimum(fl + 1, l_max)
+    e_lo = np.abs(mag - (1 << lo))
+    e_hi = np.abs(mag - (1 << hi))
+    k = np.where(e_hi < e_lo, hi, lo)
+    k = np.where(mag <= 1, 0, k)
+    eff = (1 << k).astype(np.int16)
+    neg = v < 0
+    eff = np.where(neg, -eff, eff).astype(np.int16)
+    code = np.where(neg, -(k + 1), k + 1).astype(np.int16)
+    return eff, code
+
+
+def mip2q_payload_bits(l_max: int) -> int:
+    if l_max == 0:
+        return 1
+    return int(np.ceil(np.log2(l_max + 1))) + 1
+
+
+def pow2_error(v: np.ndarray, l_max: int) -> np.ndarray:
+    eff, _ = mip2q_requantize(v, l_max)
+    d = v.astype(np.int64) - eff
+    return (d * d).astype(np.int64)
+
+
+# --------------------------------------------------------------------------
+# Block transform — rust quant::apply_strum
+
+
+@dataclass
+class StrumResult:
+    values: np.ndarray  # effective grid values [oc, rows, cols] i16
+    mask: np.ndarray  # bool, True = high precision
+    codes: np.ndarray  # payload codes i16
+    scales: np.ndarray
+
+
+def apply_strum(
+    qvals: np.ndarray,
+    scales: np.ndarray,
+    method: str,
+    p: float,
+    l: int = 1,
+    w: int = 16,
+    q: int = 4,
+    l_max: int = 7,
+) -> StrumResult:
+    """Mirror of rust `apply_strum` on canonical [oc, rows, cols] i16.
+
+    Padding lanes (block grid beyond the matrix) prefer the low set at
+    cost 0, exactly as in rust (stable order: pads first, then by key,
+    then by block-slot index).
+    """
+    oc, rows, cols = qvals.shape
+    out_vals = qvals.astype(np.int16).copy()
+    out_codes = qvals.astype(np.int16).copy()
+    out_mask = np.ones(qvals.shape, dtype=bool)
+    if method == "baseline":
+        return StrumResult(out_vals, out_mask, out_codes, scales)
+    low_n = int(round(p * l * w))
+    if low_n == 0:
+        return StrumResult(out_vals, out_mask, out_codes, scales)
+
+    br = -(-rows // l)
+    bc = -(-cols // w)
+    for c in range(oc):
+        for bi in range(br):
+            for bj in range(bc):
+                # Gather block (pad id = -1).
+                vals, idxs = [], []
+                for dr in range(l):
+                    for dc in range(w):
+                        r, col = bi * l + dr, bj * w + dc
+                        if r < rows and col < cols:
+                            vals.append(int(qvals[c, r, col]))
+                            idxs.append((r, col))
+                        else:
+                            vals.append(0)
+                            idxs.append(None)
+                n = len(vals)
+                # Selection keys matching rust quantize_block.
+                keys = []
+                for slot in range(n):
+                    if idxs[slot] is None:
+                        keys.append((-1, slot))  # pads first
+                    elif method in ("sparsity", "dliq"):
+                        keys.append((abs(vals[slot]) * 256 + (slot & 0xFF), slot))
+                    elif method == "mip2q":
+                        err = int(pow2_error(np.array([vals[slot]], np.int16), l_max)[0])
+                        keys.append((err * 65536 + (slot & 0xFFFF), slot))
+                    else:
+                        raise ValueError(method)
+                order = sorted(range(n), key=lambda s: keys[s])
+                low_slots = set(order[:low_n])
+                for slot in low_slots:
+                    if idxs[slot] is None:
+                        continue
+                    r, col = idxs[slot]
+                    v = np.array([vals[slot]], np.int16)
+                    if method == "sparsity":
+                        eff, code = np.zeros(1, np.int16), np.zeros(1, np.int16)
+                    elif method == "dliq":
+                        eff, code = dliq_requantize(v, q)
+                    else:
+                        eff, code = mip2q_requantize(v, l_max)
+                    out_vals[c, r, col] = eff[0]
+                    out_codes[c, r, col] = code[0]
+                    out_mask[c, r, col] = False
+    return StrumResult(out_vals, out_mask, out_codes, scales)
+
+
+def dequantize(res: StrumResult) -> np.ndarray:
+    return res.values.astype(np.float32) * res.scales[:, None, None]
+
+
+def strum_transform_weight(w_f32: np.ndarray, method: str, p: float, **kw) -> np.ndarray:
+    """float weight → calibrate → strum → dequantize, in original layout."""
+    canon = to_canonical(w_f32)
+    qv, scales = calibrate(canon)
+    res = apply_strum(qv, scales, method, p, **kw)
+    return from_canonical(dequantize(res), w_f32.shape)
+
+
+if __name__ == "__main__":
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.1, size=(3, 3, 16, 32)).astype(np.float32)
+    for method in ("baseline", "sparsity", "dliq", "mip2q"):
+        out = strum_transform_weight(w, method, 0.5)
+        err = np.abs(out - w).mean()
+        print(f"{method:9s} mean |Δw| = {err:.5f}")

@@ -1,0 +1,152 @@
+"""Build-time training of the mini-CNN zoo on the synthetic dataset.
+
+Trains each network with Adam + cosine decay, logs the loss curve, and
+writes artifacts the rust coordinator consumes:
+
+    artifacts/data/train.bin / eval.bin (+ labels)   raw little-endian f32/i32
+    artifacts/weights/<net>.bin                      concatenated f32 params
+    artifacts/weights/<net>.json                     manifest (layers, shapes,
+                                                     act scales, eval top-1)
+    artifacts/train_log.json                         loss curves (E2E record)
+
+Usage: python -m compile.train [--nets a,b] [--steps N] [--out DIR]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from . import nets as nets_mod
+
+TRAIN_N = 9_600
+EVAL_N = 1_920
+BATCH = 128
+SEED = 0
+
+
+def adam_init(params):
+    return (
+        [np.zeros_like(p) for p in params],
+        [np.zeros_like(p) for p in params],
+    )
+
+
+def train_net(net: str, steps: int, xs, ys, xe, ye, log):
+    fwd = model_mod.forward_train(net)
+
+    def loss_fn(params, x, y):
+        logits = fwd(params, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    @jax.jit
+    def eval_acc(params, x, y):
+        logits = fwd(params, x)
+        return jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+
+    params = [jnp.asarray(p) for p in nets_mod.init_params(net, SEED)]
+    m, v = adam_init(params)
+    m = [jnp.asarray(t) for t in m]
+    v = [jnp.asarray(t) for t in v]
+    b1, b2, eps, lr0 = 0.9, 0.999, 1e-8, 3e-3
+
+    rng = np.random.default_rng(SEED + hash(net) % 1000)
+    t0 = time.time()
+    curve = []
+    for step in range(1, steps + 1):
+        idx = rng.integers(0, xs.shape[0], size=BATCH)
+        x, y = jnp.asarray(xs[idx]), jnp.asarray(ys[idx])
+        lr = lr0 * 0.5 * (1 + np.cos(np.pi * step / steps))
+        loss, grads = grad_fn(params, x, y)
+        new_p, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(params, grads, m, v):
+            mi = b1 * mi + (1 - b1) * g
+            vi = b2 * vi + (1 - b2) * g * g
+            mh = mi / (1 - b1**step)
+            vh = vi / (1 - b2**step)
+            new_p.append(p - lr * mh / (jnp.sqrt(vh) + eps))
+            new_m.append(mi)
+            new_v.append(vi)
+        params, m, v = new_p, new_m, new_v
+        if step % 25 == 0 or step == 1:
+            curve.append({"step": step, "loss": float(loss)})
+    acc = float(eval_acc(params, jnp.asarray(xe), jnp.asarray(ye)))
+    dt = time.time() - t0
+    log[net] = {"curve": curve, "eval_top1": acc, "seconds": round(dt, 1), "steps": steps}
+    print(f"{net:16s} top-1 {acc*100:5.2f}%  ({dt:.0f}s, final loss {curve[-1]['loss']:.4f})")
+    return [np.asarray(p) for p in params], acc
+
+
+def save_artifacts(out: str, net: str, params, acc, act_scales):
+    os.makedirs(f"{out}/weights", exist_ok=True)
+    shapes = nets_mod.param_shapes(net)
+    blob = np.concatenate([p.astype("<f4").ravel() for p in params])
+    blob.tofile(f"{out}/weights/{net}.bin")
+    manifest = {
+        "net": net,
+        "num_classes": nets_mod.NUM_CLASSES,
+        "input": [nets_mod.INPUT_HW, nets_mod.INPUT_HW, 3],
+        "eval_top1_float": acc,
+        "act_scales": [float(s) for s in act_scales],
+        "layers": nets_mod.layer_meta(net),
+        "params": [
+            {"name": n, "shape": list(s), "offset": int(off), "len": int(np.prod(s))}
+            for (n, s), off in zip(
+                shapes,
+                np.cumsum([0] + [int(np.prod(s)) for _, s in shapes])[:-1],
+            )
+        ],
+    }
+    with open(f"{out}/weights/{net}.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nets", default=",".join(nets_mod.NETS))
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    os.makedirs(f"{args.out}/data", exist_ok=True)
+    print("generating dataset ...")
+    xs, ys = data_mod.make_dataset(TRAIN_N, seed=1)
+    xe, ye = data_mod.make_dataset(EVAL_N, seed=2)
+    xs.astype("<f4").tofile(f"{args.out}/data/train_x.bin")
+    ys.astype("<i4").tofile(f"{args.out}/data/train_y.bin")
+    xe.astype("<f4").tofile(f"{args.out}/data/eval_x.bin")
+    ye.astype("<i4").tofile(f"{args.out}/data/eval_y.bin")
+    with open(f"{args.out}/data/manifest.json", "w") as f:
+        json.dump(
+            {
+                "train_n": TRAIN_N,
+                "eval_n": EVAL_N,
+                "img": nets_mod.INPUT_HW,
+                "channels": 3,
+                "classes": nets_mod.NUM_CLASSES,
+            },
+            f,
+        )
+
+    log: dict = {}
+    for net in args.nets.split(","):
+        net = net.strip()
+        params, acc = train_net(net, args.steps, xs, ys, xe, ye, log)
+        act_scales = model_mod.collect_act_scales(net, params, xe[:256])
+        save_artifacts(args.out, net, params, acc, act_scales)
+    with open(f"{args.out}/train_log.json", "w") as f:
+        json.dump(log, f, indent=1)
+    print("train artifacts written to", args.out)
+
+
+if __name__ == "__main__":
+    main()

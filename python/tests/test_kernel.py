@@ -1,0 +1,122 @@
+"""Layer-1 correctness: Pallas StruM GEMM vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/densities/dtypes; every case must match ref.py to
+float tolerance (f32) or bit-exactly (int32). This is the CORE correctness
+signal of the kernel layer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import strum_matmul_int_ref, strum_matmul_ref
+from compile.kernels.strum_matmul import (
+    strum_matmul_f32,
+    strum_matmul_int,
+    vmem_bytes,
+)
+
+
+def banks_from(w: np.ndarray, mask: np.ndarray):
+    hi = np.where(mask, w, 0).astype(w.dtype)
+    lo = np.where(~mask, w, 0).astype(w.dtype)
+    return hi, lo
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 33),
+    k=st.integers(1, 97),
+    n=st.integers(1, 24),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_f32_matches_ref_random_shapes(m, k, n, density, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    mask = rng.random((k, n)) < density
+    hi, lo = banks_from(w, mask)
+    out = strum_matmul_f32(jnp.array(x), jnp.array(hi), jnp.array(lo))
+    ref = strum_matmul_ref(jnp.array(x), jnp.array(hi), jnp.array(lo))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 17),
+    k=st.integers(1, 64),
+    n=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_int_bit_exact(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, size=(m, k)).astype(np.int32)
+    # hi bank: int8 values; lo bank: MIP2Q-style ±2^k effective values.
+    mask = rng.random((k, n)) < 0.5
+    hi = np.where(mask, rng.integers(-127, 128, size=(k, n)), 0).astype(np.int32)
+    ks = rng.integers(0, 8, size=(k, n))
+    sign = np.where(rng.random((k, n)) < 0.5, -1, 1)
+    lo = np.where(~mask, sign * (1 << ks), 0).astype(np.int32)
+    out = strum_matmul_int(jnp.array(x), jnp.array(hi), jnp.array(lo))
+    ref = strum_matmul_int_ref(jnp.array(x), jnp.array(hi), jnp.array(lo))
+    assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+def test_block_shapes_that_tile_exactly():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(256, 1024)).astype(np.float32)
+    w = rng.normal(size=(1024, 128)).astype(np.float32)
+    mask = rng.random((1024, 128)) < 0.5
+    hi, lo = banks_from(w, mask)
+    out = strum_matmul_f32(jnp.array(x), jnp.array(hi), jnp.array(lo))
+    np.testing.assert_allclose(np.asarray(out), x @ w, rtol=3e-4, atol=3e-4)
+
+
+def test_zero_low_bank_equals_plain_gemm():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(8, 48)).astype(np.float32)
+    w = rng.normal(size=(48, 12)).astype(np.float32)
+    out = strum_matmul_f32(jnp.array(x), jnp.array(w), jnp.array(np.zeros_like(w)))
+    np.testing.assert_allclose(np.asarray(out), x @ w, rtol=1e-5, atol=1e-5)
+
+
+def test_complementary_banks_reconstruct_dense():
+    # The StruM decomposition invariant: hi + lo == w exactly when masks
+    # are complementary (zero where the other bank is nonzero).
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(64, 16)).astype(np.float32)
+    mask = rng.random((64, 16)) < 0.25
+    hi, lo = banks_from(w, mask)
+    assert (hi + lo == w).all()
+    assert ((hi == 0) | (lo == 0)).all()
+    x = rng.normal(size=(4, 64)).astype(np.float32)
+    out = strum_matmul_f32(jnp.array(x), jnp.array(hi), jnp.array(lo))
+    np.testing.assert_allclose(np.asarray(out), x @ w, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_degenerate_dims(dtype):
+    x = np.ones((1, 1), dtype)
+    w = np.full((1, 1), 3, dtype)
+    z = np.zeros((1, 1), dtype)
+    out = (strum_matmul_f32 if dtype == np.float32 else strum_matmul_int)(
+        jnp.array(x), jnp.array(w), jnp.array(z)
+    )
+    assert np.asarray(out)[0, 0] == 3
+
+
+def test_int_accumulator_headroom():
+    # Worst-case magnitudes at k=4096 must not overflow int32.
+    k = 4096
+    x = np.full((1, k), 127, np.int32)
+    hi = np.full((k, 1), 127, np.int32)
+    lo = np.zeros((k, 1), np.int32)
+    out = strum_matmul_int(jnp.array(x), jnp.array(hi), jnp.array(lo))
+    assert int(np.asarray(out)[0, 0]) == 127 * 127 * k  # 66_064_384 < 2^31
+
+
+def test_vmem_budget():
+    # Default blocks stay within a 4 MiB VMEM envelope (DESIGN.md §2).
+    assert vmem_bytes(128, 128, 512) <= 4 * 1024 * 1024

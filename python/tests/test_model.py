@@ -1,0 +1,85 @@
+"""Layer-2 model tests: zoo forwards, export signatures, split-head
+equivalence (Pallas head == plain GEMM head), activation fake-quant."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_mod
+from compile import nets as nets_mod
+
+
+@pytest.mark.parametrize("net", list(nets_mod.NETS))
+def test_forward_shapes_all_nets(net):
+    params = nets_mod.init_params(net, 0)
+    x = jnp.zeros((3, 32, 32, 3), jnp.float32)
+    scales = jnp.zeros((nets_mod.num_quant_layers(net),), jnp.float32)
+    y = nets_mod.apply(net, [jnp.asarray(p) for p in params], x, scales, split_head=False)
+    assert y.shape == (3, nets_mod.NUM_CLASSES)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+@pytest.mark.parametrize("net", ["mini_cnn_s", "mini_resnet_a", "mini_incept_a"])
+def test_split_head_equals_plain_head(net):
+    """hi-bank = fc_w, lo-bank = 0 must reproduce the training forward —
+    ties the Pallas kernel head to the plain GEMM."""
+    params = [jnp.asarray(p) for p in nets_mod.init_params(net, 1)]
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 32, 32, 3)).astype(np.float32))
+    scales = jnp.zeros((nets_mod.num_quant_layers(net),), jnp.float32)
+    y_plain = nets_mod.apply(net, list(params), x, scales, split_head=False)
+    split = model_mod.split_head_params([np.asarray(p) for p in params])
+    y_split = nets_mod.apply(
+        net, [jnp.asarray(p) for p in split], x, scales, split_head=True
+    )
+    np.testing.assert_allclose(np.asarray(y_plain), np.asarray(y_split), rtol=1e-5, atol=1e-5)
+
+
+def test_export_arg_specs_order(net="mini_cnn_s"):
+    specs = model_mod.export_arg_specs(net, 4)
+    # images + act_scales + params (fc_w doubled).
+    n_params = len(nets_mod.param_shapes(net))
+    assert len(specs) == 2 + n_params + 1
+    assert specs[0].shape == (4, 32, 32, 3)
+    assert specs[1].shape == (nets_mod.num_quant_layers(net),)
+
+
+def test_export_forward_lowers(net="mini_cnn_s"):
+    f = model_mod.export_forward(net)
+    specs = model_mod.export_arg_specs(net, 2)
+    lowered = jax.jit(f).lower(*specs)
+    text = str(lowered.compiler_ir("stablehlo"))
+    assert "stablehlo" in text or "module" in text
+
+
+def test_act_fake_quant_changes_logits(net="mini_cnn_s"):
+    params = [jnp.asarray(p) for p in nets_mod.init_params(net, 2)]
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, 32, 32, 3)).astype(np.float32))
+    zeros = jnp.zeros((nets_mod.num_quant_layers(net),), jnp.float32)
+    coarse = jnp.full((nets_mod.num_quant_layers(net),), 0.5, jnp.float32)
+    y0 = nets_mod.apply(net, list(params), x, zeros, split_head=False)
+    y1 = nets_mod.apply(net, list(params), x, coarse, split_head=False)
+    assert not np.allclose(np.asarray(y0), np.asarray(y1))
+
+
+def test_collect_act_scales_positive(net="mini_cnn_s"):
+    params = nets_mod.init_params(net, 3)
+    x = np.random.default_rng(2).normal(size=(8, 32, 32, 3)).astype(np.float32)
+    scales = model_mod.collect_act_scales(net, params, x)
+    assert scales.shape == (nets_mod.num_quant_layers(net),)
+    assert (scales > 0).all()
+
+
+def test_layer_meta_consistent_with_params():
+    for net in nets_mod.NETS:
+        meta = nets_mod.layer_meta(net)
+        shapes = dict(nets_mod.param_shapes(net))
+        for m in meta:
+            w = shapes[m["name"] + "_w"]
+            if m["kind"] == "conv":
+                assert w == (m["kh"], m["kw"], m["ic"], m["oc"])
+            else:
+                assert w == (m["ic"], m["oc"])
+        # Spatial dims shrink monotonically.
+        hws = [m["oh"] for m in meta]
+        assert all(a >= b for a, b in zip(hws, hws[1:]))

@@ -1,0 +1,146 @@
+"""Python-side quantizer semantics + the rust-parity golden case.
+
+The golden block below is hardcoded identically in
+rust/tests/properties.rs (`python_parity_golden`): both implementations
+must produce these exact effective values for the same input — pinning
+rounding, tie-breaks, and padding behaviour across the language boundary.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.quantize import (
+    apply_strum,
+    calibrate,
+    dliq_requantize,
+    from_canonical,
+    mip2q_payload_bits,
+    mip2q_requantize,
+    round_half_away,
+    to_canonical,
+)
+
+# --- The shared golden case (see rust/tests/properties.rs) -----------------
+GOLDEN_INPUT = np.array(
+    [17, -3, 64, 0, -128, 5, 99, -2, 33, -77, 1, 8, -16, 120, -9, 4],
+    dtype=np.int16,
+).reshape(1, 1, 16)
+
+GOLDEN = {
+    # method -> (p, expected effective values)
+    "sparsity": (0.5, [17, 0, 64, 0, -128, 0, 99, 0, 33, -77, 0, 0, -16, 120, 0, 0]),
+    "dliq": (0.5, [17, 0, 64, 0, -128, 0, 99, 0, 33, -77, 0, 16, -16, 120, -16, 0]),
+    "mip2q": (0.5, [16, -3, 64, 0, -128, 5, 99, -2, 33, -77, 1, 8, -16, 120, -9, 4]),
+}
+
+
+def test_golden_parity_case():
+    scales = np.ones(1, np.float32)
+    for method, (p, expected) in GOLDEN.items():
+        res = apply_strum(GOLDEN_INPUT.copy(), scales, method, p, q=4, l_max=7)
+        got = res.values.ravel().tolist()
+        assert got == expected, f"{method}: {got}"
+
+
+# --- semantics --------------------------------------------------------------
+
+
+def test_round_half_away():
+    assert round_half_away(np.array([2.5, -2.5, 0.5, -0.5])).tolist() == [3, -3, 1, -1]
+
+
+@settings(max_examples=50, deadline=None)
+@given(q=st.integers(2, 8), v=st.integers(-127, 127))
+def test_dliq_error_bound(q, v):
+    eff, code = dliq_requantize(np.array([v], np.int16), q)
+    step = 1 << (8 - q)
+    max_code = (1 << (q - 1)) - 1
+    assert abs(int(code[0])) <= max_code
+    if abs(v) <= max_code * step:
+        assert abs(int(eff[0]) - v) <= step // 2
+
+
+@settings(max_examples=50, deadline=None)
+@given(l_max=st.sampled_from([1, 3, 5, 7]), v=st.integers(-127, 127))
+def test_mip2q_codebook(l_max, v):
+    eff, code = mip2q_requantize(np.array([v], np.int16), l_max)
+    mag = abs(int(eff[0]))
+    assert mag in {1 << k for k in range(l_max + 1)}
+    k = abs(int(code[0])) - 1
+    assert 0 <= k <= l_max
+    assert k < (1 << (mip2q_payload_bits(l_max) - 1))
+
+
+def test_mip2q_exact_powers_zero_error():
+    for k in range(8):
+        v = np.array([1 << k], np.int16)
+        eff, _ = mip2q_requantize(v, 7)
+        assert int(eff[0]) == 1 << k
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    oc=st.integers(1, 4),
+    rows=st.integers(1, 3),
+    cols=st.integers(1, 40),
+    p=st.sampled_from([0.25, 0.5, 0.75]),
+    method=st.sampled_from(["sparsity", "dliq", "mip2q"]),
+    seed=st.integers(0, 10_000),
+)
+def test_strum_low_count_invariant(oc, rows, cols, p, method, seed):
+    """Every [1,16] block (with pads counted low) has exactly round(p*16)
+    low lanes — the hardware balance guarantee."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-127, 128, size=(oc, rows, cols)).astype(np.int16)
+    res = apply_strum(q, np.ones(oc, np.float32), method, p)
+    low_target = round(p * 16)
+    bc = -(-cols // 16)
+    for c in range(oc):
+        for r in range(rows):
+            for bj in range(bc):
+                lo, hi_col = bj * 16, min((bj + 1) * 16, cols)
+                real_low = (~res.mask[c, r, lo:hi_col]).sum()
+                pads = 16 - (hi_col - lo)
+                assert real_low + pads == low_target or pads >= low_target and real_low == 0
+
+
+def test_calibrate_per_oc():
+    w = np.zeros((2, 1, 4), np.float32)
+    w[0] = [[1.0, -2.0, 0.5, 0.25]]
+    w[1] = [[0.1, 0.05, -0.1, 0.02]]
+    q, scales = calibrate(w)
+    assert np.isclose(scales[0], 2.0 / 127)
+    assert np.isclose(scales[1], 0.1 / 127)
+    assert q[0, 0, 1] == -127 and q[1, 0, 0] == 127
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    kh=st.integers(1, 3),
+    kw=st.integers(1, 3),
+    ic=st.integers(1, 8),
+    oc=st.integers(1, 8),
+    seed=st.integers(0, 1000),
+)
+def test_canonical_layout_roundtrip(kh, kw, ic, oc, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(kh, kw, ic, oc)).astype(np.float32)
+    back = from_canonical(to_canonical(w), w.shape)
+    assert (back == w).all()
+    w2 = rng.normal(size=(ic * kh * kw, oc)).astype(np.float32)
+    assert (from_canonical(to_canonical(w2), w2.shape) == w2).all()
+
+
+def test_error_ordering_matches_paper():
+    """mip2q ≤ dliq ≤ sparsity in weight-grid RMSE on Gaussian weights —
+    the reason Table I orders the methods the way it does."""
+    rng = np.random.default_rng(3)
+    q = np.clip(rng.normal(0, 45, size=(8, 1, 64)), -127, 127).astype(np.int16)
+    scales = np.ones(8, np.float32)
+
+    def rmse(method):
+        res = apply_strum(q, scales, method, 0.5)
+        return float(np.sqrt(((res.values - q) ** 2).mean()))
+
+    assert rmse("mip2q") < rmse("sparsity")
+    assert rmse("dliq") < rmse("sparsity")

@@ -1,0 +1,37 @@
+//! Bench/report harness for Fig. 10: DLIQ parameter sweeps (block width,
+//! q) on the ResNet-50 stand-in. Needs artifacts.
+
+use std::path::Path;
+use strum_dpu::model::zoo;
+use strum_dpu::report::{fig10, EvalCtx};
+use strum_dpu::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("hlo").exists() {
+        println!("SKIP fig10: artifacts missing (run `make train artifacts`)");
+        return Ok(());
+    }
+    let limit = match std::env::var("STRUM_EVAL_LIMIT").ok().as_deref() {
+        Some("full") => None,
+        Some(v) => v.parse().ok(),
+        None => Some(512),
+    };
+    let rt = Runtime::cpu()?;
+    let ctx = EvalCtx::new(&rt, dir, limit)?;
+    let t0 = std::time::Instant::now();
+    let (f, json) = fig10::run(&ctx, zoo::SWEEP_NET)?;
+    // Paper-shape assertions (soft): larger blocks >= smaller at p=0.5;
+    // larger q >= smaller q.
+    let p_idx = 1; // p = 0.5
+    if f.by_width[3][p_idx] + 0.02 < f.by_width[0][p_idx] {
+        println!("NOTE: width trend holds ([1,32] > [1,4] at p=0.5)");
+    }
+    if f.by_q[3][p_idx] < f.by_q[0][p_idx] {
+        println!("NOTE: q trend INVERTED vs paper");
+    }
+    println!("fig10 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    std::fs::create_dir_all("artifacts/reports")?;
+    std::fs::write("artifacts/reports/fig10.json", json.to_string_pretty())?;
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Bench/report harness for Fig. 11: MIP2Q parameter sweeps (block width,
+//! shift range L) on the ResNet-50 stand-in. Needs artifacts.
+
+use std::path::Path;
+use strum_dpu::model::zoo;
+use strum_dpu::report::{fig11, EvalCtx};
+use strum_dpu::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("hlo").exists() {
+        println!("SKIP fig11: artifacts missing (run `make train artifacts`)");
+        return Ok(());
+    }
+    let limit = match std::env::var("STRUM_EVAL_LIMIT").ok().as_deref() {
+        Some("full") => None,
+        Some(v) => v.parse().ok(),
+        None => Some(512),
+    };
+    let rt = Runtime::cpu()?;
+    let ctx = EvalCtx::new(&rt, dir, limit)?;
+    let t0 = std::time::Instant::now();
+    let (f, json) = fig11::run(&ctx, zoo::SWEEP_NET)?;
+    // The paper's key finding: L=5 ~ L=7.
+    let l5 = &f.by_l[2];
+    let l7 = &f.by_l[3];
+    let max_gap = l5
+        .iter()
+        .zip(l7.iter())
+        .map(|(a, b)| (b - a).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "L=5 vs L=7 max accuracy gap: {:.2}% (paper: comparable)",
+        max_gap * 100.0
+    );
+    println!("fig11 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    std::fs::create_dir_all("artifacts/reports")?;
+    std::fs::write("artifacts/reports/fig11.json", json.to_string_pretty())?;
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Bench/report harness for Fig. 12: top-1 vs compression ratio r for
+//! sparsity / DLIQ / MIP2Q. Needs artifacts.
+
+use std::path::Path;
+use strum_dpu::model::zoo;
+use strum_dpu::report::{fig12, EvalCtx};
+use strum_dpu::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("hlo").exists() {
+        println!("SKIP fig12: artifacts missing (run `make train artifacts`)");
+        return Ok(());
+    }
+    let limit = match std::env::var("STRUM_EVAL_LIMIT").ok().as_deref() {
+        Some("full") => None,
+        Some(v) => v.parse().ok(),
+        None => Some(512),
+    };
+    let rt = Runtime::cpu()?;
+    let ctx = EvalCtx::new(&rt, dir, limit)?;
+    let t0 = std::time::Instant::now();
+    let (series, json) = fig12::run(&ctx, zoo::SWEEP_NET)?;
+    // Paper shape: at the smallest common r region, MIP2Q >= sparsity.
+    let acc_at_min = |s: &strum_dpu::report::fig12::Series| s.points.first().map(|p| p.1).unwrap_or(0.0);
+    let sp = acc_at_min(&series[0]);
+    let mp = acc_at_min(&series[2]);
+    println!(
+        "at min-r: sparsity {:.1}% vs mip2q {:.1}%  (paper: mip2q wins small r)",
+        sp * 100.0,
+        mp * 100.0
+    );
+    println!("fig12 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    std::fs::create_dir_all("artifacts/reports")?;
+    std::fs::write("artifacts/reports/fig12.json", json.to_string_pretty())?;
+    Ok(())
+}

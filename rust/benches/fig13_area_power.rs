@@ -1,0 +1,56 @@
+//! Bench/report harness for Fig. 13: PE / PE-array / DPU area & power for
+//! the StruM PE variants (static a, dynamic b; L=7, L=5), analytic dense
+//! activity plus — when artifacts exist — the cycle-sim-driven (SAIF-
+//! equivalent) activity of a real zoo network.
+
+use std::path::Path;
+use strum_dpu::model::eval::{transform_network, EvalConfig};
+use strum_dpu::model::import::NetWeights;
+use strum_dpu::model::zoo;
+use strum_dpu::quant::Method;
+use strum_dpu::report::fig13;
+use strum_dpu::sim::config::SimConfig;
+use strum_dpu::sim::driver::simulate_network;
+use strum_dpu::sim::SimMode;
+use strum_dpu::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    println!("Fig 13 — analytic dense workload (p = 0.5):");
+    let (rows, json) = fig13::run(None);
+    for n in fig13::paper_bands(&rows) {
+        println!("  {}", n);
+    }
+    let mut out = vec![("fig13_dense".to_string(), json)];
+
+    let dir = Path::new("artifacts");
+    if dir.join("weights").exists() {
+        let net = zoo::SWEEP_NET;
+        let weights = NetWeights::load(dir, net)?;
+        let cfg = EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5);
+        let layers: Vec<_> = weights
+            .manifest
+            .layers
+            .iter()
+            .zip(transform_network(&weights, &cfg)?)
+            .map(|(lm, s)| (lm.shape_for_sim(), s))
+            .collect();
+        let (_, act) = simulate_network(
+            &layers,
+            &SimConfig::flexnn(SimMode::StrumStatic, Some(Method::Mip2q { l_max: 7 })),
+            0.7,
+            42,
+        );
+        println!("\nFig 13 — sim-driven activity ({} conv layers of {}):", layers.len(), net);
+        let (rows2, json2) = fig13::run(Some(&act));
+        for n in fig13::paper_bands(&rows2) {
+            println!("  {}", n);
+        }
+        out.push(("fig13_sim".to_string(), json2));
+    } else {
+        println!("\n(no artifacts; skipping sim-driven activity table)");
+    }
+    std::fs::create_dir_all("artifacts/reports")?;
+    let json = Json::Obj(out.into_iter().collect());
+    std::fs::write("artifacts/reports/fig13.json", json.to_string_pretty())?;
+    Ok(())
+}

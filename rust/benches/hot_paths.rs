@@ -1,0 +1,90 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf deliverable):
+//! quantization, MIP2Q search, codec encode/decode, simulator throughput,
+//! PE datapath, and end-to-end PJRT execute when artifacts exist.
+//!
+//! STRUM_BENCH_QUICK=1 shrinks budgets ~10x.
+
+use std::path::Path;
+use strum_dpu::encode::{decode_layer, encode_layer};
+use strum_dpu::model::import::{DataSet, NetWeights};
+use strum_dpu::quant::tensor::qlayer;
+use strum_dpu::quant::{apply_strum, Method, StrumParams};
+use strum_dpu::runtime::{Runtime, Tensor};
+use strum_dpu::sim::config::SimConfig;
+use strum_dpu::sim::dataflow::LayerShape;
+use strum_dpu::sim::{simulate_layer, SimMode};
+use strum_dpu::util::bench::Bench;
+use strum_dpu::util::prng::Rng;
+
+fn big_layer(oc: usize, cols: usize, seed: u64) -> strum_dpu::quant::QLayer {
+    let mut rng = Rng::new(seed);
+    let data: Vec<i8> = (0..oc * cols)
+        .map(|_| (rng.gaussian() * 45.0).clamp(-127.0, 127.0) as i8)
+        .collect();
+    qlayer("bench", oc, 1, cols, data, vec![0.01; oc])
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new();
+    let layer = big_layer(256, 4096, 1); // 1M weights
+    let n = layer.len() as f64;
+
+    b.section("quantize (weights/s)");
+    for method in [
+        Method::StructuredSparsity,
+        Method::Dliq { q: 4 },
+        Method::Mip2q { l_max: 7 },
+    ] {
+        let params = StrumParams::paper(method, 0.5);
+        b.run(&format!("apply_strum/{}", method.name()), n, || {
+            apply_strum(&layer, &params)
+        });
+    }
+
+    b.section("codec (weights/s)");
+    let s = apply_strum(&layer, &StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5));
+    b.run("encode_layer/mip2q", n, || encode_layer(&s));
+    let enc = encode_layer(&s);
+    b.run("decode_layer/mip2q", n, || decode_layer(&enc).unwrap());
+
+    b.section("cycle simulator (MAC-slots/s)");
+    let shape = LayerShape::conv("bench", 64, 256, 3, 16, 16);
+    let wl = big_layer(64, 9 * 256, 2);
+    let wl = qlayer("bench", 64, 9, 256, wl.data, wl.scales);
+    let strum = apply_strum(&wl, &StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5));
+    let macs = shape.macs() as f64;
+    for mode in [SimMode::Int8Dense, SimMode::StrumStatic, SimMode::StrumPerf] {
+        let cfg = SimConfig::flexnn(mode, Some(Method::Mip2q { l_max: 7 }));
+        b.run(&format!("simulate_layer/{}", mode.name()), macs, || {
+            simulate_layer(&shape, &strum, &cfg, 0.7, 0)
+        });
+    }
+
+    let dir = Path::new("artifacts");
+    if dir.join("hlo").exists() {
+        b.section("PJRT end-to-end (images/s)");
+        let rt = Runtime::cpu()?;
+        let net = "mini_resnet_a";
+        let weights = NetWeights::load(dir, net)?;
+        let cfg = strum_dpu::model::eval::EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5);
+        let transformed = strum_dpu::model::eval::transform_network(&weights, &cfg)?;
+        let args0 = strum_dpu::model::eval::prepare_args(&weights, &transformed, true)?;
+        let data = DataSet::load(dir, "eval")?;
+        for batch in [1usize, 16, 256] {
+            let path = dir.join(format!("hlo/{}_b{}.hlo.txt", net, batch));
+            if !path.exists() {
+                continue;
+            }
+            let exe = rt.load_hlo(&path)?;
+            let (imgs, _) = data.batch(0, batch);
+            let mut args = vec![Tensor::f32(imgs, &[batch, 32, 32, 3])];
+            args.extend(args0.iter().cloned());
+            b.run(&format!("{}_b{}/execute", net, batch), batch as f64, || {
+                exe.run_f32(&args).unwrap()
+            });
+        }
+    } else {
+        println!("(artifacts missing; skipping PJRT benches)");
+    }
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Bench/report harness for Table I: top-1 across the zoo ×
+//! {baseline, sparsity, DLIQ, MIP2Q} × p ∈ {0.25, 0.5, 0.75}.
+//!
+//! Needs artifacts (`make train artifacts`). Sample count per point via
+//! STRUM_EVAL_LIMIT (default 512; unset=512, "full" = whole eval split).
+
+use std::path::Path;
+use strum_dpu::model::zoo;
+use strum_dpu::report::{table1, EvalCtx};
+use strum_dpu::runtime::Runtime;
+
+fn limit() -> Option<usize> {
+    match std::env::var("STRUM_EVAL_LIMIT").ok().as_deref() {
+        Some("full") => None,
+        Some(v) => v.parse().ok(),
+        None => Some(512),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("hlo").exists() {
+        println!("SKIP table1: artifacts missing (run `make train artifacts`)");
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    let ctx = EvalCtx::new(&rt, dir, limit())?;
+    println!("{}", table1::header());
+    let t0 = std::time::Instant::now();
+    let nets = zoo::net_names();
+    let (rows, json) = table1::run(&ctx, &nets)?;
+    println!("-- shape checks vs paper --");
+    let notes = table1::shape_check(&rows);
+    if notes.is_empty() {
+        println!("   all paper-shape properties hold");
+    }
+    for n in notes {
+        println!("   NOTE: {}", n);
+    }
+    println!("table1 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    std::fs::create_dir_all("artifacts/reports")?;
+    std::fs::write("artifacts/reports/table1.json", json.to_string_pretty())?;
+    Ok(())
+}

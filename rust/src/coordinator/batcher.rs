@@ -1,0 +1,89 @@
+//! Deadline-driven dynamic batcher.
+//!
+//! Requests accumulate in a queue; a batch flushes when either (a) enough
+//! requests are waiting to fill the variant's largest executable, or (b)
+//! the oldest queued request has waited `max_wait`. The flushed batch is
+//! padded up to the smallest exported batch size ≥ its occupancy, keeping
+//! tail latency bounded while letting throughput-heavy load ride the big
+//! executables.
+
+use std::time::{Duration, Instant};
+
+/// One queued inference request (image + reply slot handled by server).
+pub struct Pending<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// Batching policy state machine (pure logic — tested without threads).
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    /// Decides whether to flush now given queue occupancy and the oldest
+    /// enqueue time. Returns the number of requests to take (0 = wait).
+    pub fn decide(&self, queued: usize, oldest: Option<Instant>, now: Instant) -> usize {
+        if queued == 0 {
+            return 0;
+        }
+        if queued >= self.max_batch {
+            return self.max_batch;
+        }
+        match oldest {
+            Some(t) if now.duration_since(t) >= self.max_wait => queued,
+            _ => 0,
+        }
+    }
+
+    /// How long the batcher may sleep before the oldest request's deadline.
+    pub fn nap(&self, oldest: Option<Instant>, now: Instant) -> Duration {
+        match oldest {
+            None => self.max_wait,
+            Some(t) => self
+                .max_wait
+                .checked_sub(now.duration_since(t))
+                .unwrap_or(Duration::ZERO),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_full_batch_immediately() {
+        let p = BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(5) };
+        let now = Instant::now();
+        assert_eq!(p.decide(16, Some(now), now), 16);
+        assert_eq!(p.decide(40, Some(now), now), 16);
+    }
+
+    #[test]
+    fn waits_below_batch_until_deadline() {
+        let p = BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(5) };
+        let t0 = Instant::now();
+        assert_eq!(p.decide(3, Some(t0), t0), 0);
+        let later = t0 + Duration::from_millis(6);
+        assert_eq!(p.decide(3, Some(t0), later), 3);
+    }
+
+    #[test]
+    fn empty_queue_never_flushes() {
+        let p = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+        let now = Instant::now();
+        assert_eq!(p.decide(0, None, now), 0);
+    }
+
+    #[test]
+    fn nap_shrinks_as_deadline_approaches() {
+        let p = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) };
+        let t0 = Instant::now();
+        let nap0 = p.nap(Some(t0), t0);
+        let nap1 = p.nap(Some(t0), t0 + Duration::from_millis(7));
+        assert!(nap1 < nap0);
+        assert_eq!(p.nap(Some(t0), t0 + Duration::from_millis(20)), Duration::ZERO);
+    }
+}

@@ -1,0 +1,84 @@
+//! Serving metrics: counters + latency summaries.
+
+use crate::util::stats::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Thread-safe metrics sink shared by batcher and workers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    latencies_us: Mutex<Vec<f64>>,
+    batch_sizes: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, real: usize, padded_to: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padded_slots
+            .fetch_add((padded_to - real) as u64, Ordering::Relaxed);
+        self.batch_sizes.lock().unwrap().push(real as f64);
+    }
+
+    pub fn record_done(&self, latency: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latencies_us
+            .lock()
+            .unwrap()
+            .push(latency.as_secs_f64() * 1e6);
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::from_slice(&self.latencies_us.lock().unwrap())
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        Summary::from_slice(&self.batch_sizes.lock().unwrap()).mean()
+    }
+
+    pub fn report(&self, wall: Duration) -> String {
+        let lat = self.latency_summary();
+        let done = self.completed.load(Ordering::Relaxed);
+        format!(
+            "requests={} completed={} batches={} mean_batch={:.1} padded={} \
+             thrpt={:.1} req/s  latency_us p50={:.0} p95={:.0} p99={:.0} max={:.0}",
+            self.requests.load(Ordering::Relaxed),
+            done,
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.padded_slots.load(Ordering::Relaxed),
+            done as f64 / wall.as_secs_f64().max(1e-9),
+            lat.percentile(50.0),
+            lat.percentile(95.0),
+            lat.percentile(99.0),
+            lat.max(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_accumulate() {
+        let m = Metrics::default();
+        m.record_request();
+        m.record_request();
+        m.record_batch(2, 4);
+        m.record_done(Duration::from_micros(100));
+        m.record_done(Duration::from_micros(300));
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.padded_slots.load(Ordering::Relaxed), 2);
+        assert_eq!(m.latency_summary().median(), 200.0);
+        assert!(m.report(Duration::from_secs(1)).contains("completed=2"));
+    }
+}

@@ -1,0 +1,113 @@
+//! Model-variant routing: each variant = one (net, StruM transform) with
+//! its prepared weight arguments and the set of batch-size executables
+//! exported by `make artifacts`. Weights are dequantized and staged ONCE
+//! at registration — the request path only binds the image tensor.
+
+use crate::model::eval::{prepare_args, transform_network, EvalConfig};
+use crate::model::import::NetWeights;
+use crate::runtime::{Executable, Runtime, Tensor};
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// One servable model variant.
+pub struct Variant {
+    pub key: String,
+    pub net: String,
+    pub classes: usize,
+    pub img: usize,
+    /// Ascending (batch size, executable).
+    pub executables: Vec<(usize, Arc<Executable>)>,
+    /// Static args (act_scales + weights), shared across requests.
+    pub static_args: Vec<Tensor>,
+}
+
+impl Variant {
+    /// Smallest exported batch ≥ n (or the largest available).
+    pub fn pick_batch(&self, n: usize) -> (usize, &Arc<Executable>) {
+        for (b, exe) in &self.executables {
+            if *b >= n {
+                return (*b, exe);
+            }
+        }
+        let (b, exe) = self.executables.last().expect("no executables");
+        (*b, exe)
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.executables.last().map(|(b, _)| *b).unwrap_or(1)
+    }
+}
+
+/// Routing table: variant key → prepared variant.
+pub struct Router {
+    pub rt: Arc<Runtime>,
+    variants: HashMap<String, Arc<Variant>>,
+}
+
+impl Router {
+    pub fn new(rt: Arc<Runtime>) -> Router {
+        Router {
+            rt,
+            variants: HashMap::new(),
+        }
+    }
+
+    /// Registers `net` under `key` with the given transform, discovering
+    /// exported batch sizes from `artifacts/hlo/`.
+    pub fn register(
+        &mut self,
+        key: &str,
+        artifacts: &Path,
+        net: &str,
+        cfg: &EvalConfig,
+    ) -> Result<Arc<Variant>> {
+        let weights = NetWeights::load(artifacts, net)?;
+        let transformed = transform_network(&weights, cfg)?;
+        let static_args = prepare_args(&weights, &transformed, cfg.act_quant)?;
+        let mut executables = Vec::new();
+        let hlo_dir = artifacts.join("hlo");
+        let prefix = format!("{}_b", net);
+        let mut batches: Vec<usize> = std::fs::read_dir(&hlo_dir)?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().to_string_lossy().to_string();
+                name.strip_prefix(&prefix)
+                    .and_then(|rest| rest.strip_suffix(".hlo.txt"))
+                    .and_then(|b| b.parse::<usize>().ok())
+            })
+            .collect();
+        batches.sort_unstable();
+        if batches.is_empty() {
+            return Err(anyhow!("no exported HLO for {} in {}", net, hlo_dir.display()));
+        }
+        for b in batches {
+            let exe = self
+                .rt
+                .load_hlo(&hlo_dir.join(format!("{}_b{}.hlo.txt", net, b)))?;
+            executables.push((b, exe));
+        }
+        let v = Arc::new(Variant {
+            key: key.to_string(),
+            net: net.to_string(),
+            classes: weights.manifest.num_classes,
+            img: 32,
+            executables,
+            static_args,
+        });
+        self.variants.insert(key.to_string(), v.clone());
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<Arc<Variant>> {
+        self.variants.get(key).cloned()
+    }
+
+    pub fn keys(&self) -> Vec<String> {
+        let mut k: Vec<String> = self.variants.keys().cloned().collect();
+        k.sort();
+        k
+    }
+}

@@ -1,0 +1,205 @@
+//! The serving loop: request intake → dynamic batcher → PJRT workers.
+//!
+//! One batcher thread owns the queue and applies [`BatchPolicy`]; worker
+//! threads execute flushed batches on the variant's executables and send
+//! per-request replies. `Coordinator::submit` is the client API (used by
+//! `strum serve`, `examples/serve_infer.rs`, and the integration tests).
+
+use super::batcher::BatchPolicy;
+use super::metrics::Metrics;
+use super::router::Variant;
+use crate::runtime::executable::argmax_rows;
+use crate::runtime::Tensor;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Reply to one inference request.
+#[derive(Debug, Clone)]
+pub struct InferReply {
+    pub class: usize,
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    /// Batch the request rode in (occupancy, padded size).
+    pub batch: (usize, usize),
+}
+
+struct Request {
+    image: Vec<f32>,
+    tx: mpsc::Sender<crate::Result<InferReply>>,
+    enqueued: Instant,
+}
+
+/// Coordinator tunables.
+#[derive(Debug, Clone)]
+pub struct CoordinatorOptions {
+    pub max_wait: Duration,
+    pub workers: usize,
+    /// Cap the dynamic batch (None = variant's largest executable).
+    pub max_batch: Option<usize>,
+}
+
+impl Default for CoordinatorOptions {
+    fn default() -> Self {
+        CoordinatorOptions {
+            max_wait: Duration::from_millis(4),
+            workers: 2,
+            max_batch: None,
+        }
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Request>>,
+    cv: Condvar,
+    stop: AtomicBool,
+    metrics: Metrics,
+}
+
+/// A running inference service for one variant.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    pub variant: Arc<Variant>,
+    started: Instant,
+}
+
+impl Coordinator {
+    pub fn start(variant: Arc<Variant>, opts: CoordinatorOptions) -> Coordinator {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            metrics: Metrics::default(),
+        });
+        let policy = BatchPolicy {
+            max_batch: opts.max_batch.unwrap_or_else(|| variant.max_batch()),
+            max_wait: opts.max_wait,
+        };
+        // Worker pool consumes flushed batches.
+        let (batch_tx, batch_rx) = mpsc::channel::<Vec<Request>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let mut threads = Vec::new();
+        for _ in 0..opts.workers.max(1) {
+            let rx = batch_rx.clone();
+            let v = variant.clone();
+            let sh = shared.clone();
+            threads.push(std::thread::spawn(move || loop {
+                let batch = {
+                    let guard = rx.lock().unwrap();
+                    match guard.recv_timeout(Duration::from_millis(50)) {
+                        Ok(b) => b,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            if sh.stop.load(Ordering::Relaxed) {
+                                return;
+                            }
+                            continue;
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                    }
+                };
+                execute_batch(&v, &sh, batch);
+            }));
+        }
+        // Batcher thread owns the queue.
+        {
+            let sh = shared.clone();
+            let v = variant.clone();
+            threads.push(std::thread::spawn(move || loop {
+                let mut q = sh.queue.lock().unwrap();
+                loop {
+                    if sh.stop.load(Ordering::Relaxed) && q.is_empty() {
+                        return;
+                    }
+                    let now = Instant::now();
+                    let oldest = q.front().map(|r| r.enqueued);
+                    let take = policy.decide(q.len(), oldest, now);
+                    if take > 0 {
+                        let batch: Vec<Request> = q.drain(..take).collect();
+                        drop(q);
+                        let _ = batch_tx.send(batch);
+                        let _ = v; // variant kept alive for the policy's lifetime
+                        break;
+                    }
+                    let nap = policy.nap(oldest, now);
+                    let (guard, _) = sh.cv.wait_timeout(q, nap.max(Duration::from_micros(200))).unwrap();
+                    q = guard;
+                }
+            }));
+        }
+        Coordinator {
+            shared,
+            threads,
+            variant,
+            started: Instant::now(),
+        }
+    }
+
+    /// Submits one image; returns the reply channel.
+    pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<crate::Result<InferReply>> {
+        let (tx, rx) = mpsc::channel();
+        self.shared.metrics.record_request();
+        self.shared.queue.lock().unwrap().push_back(Request {
+            image,
+            tx,
+            enqueued: Instant::now(),
+        });
+        self.shared.cv.notify_all();
+        rx
+    }
+
+    pub fn metrics_report(&self) -> String {
+        self.shared.metrics.report(self.started.elapsed())
+    }
+
+    pub fn latency_summary(&self) -> crate::util::stats::Summary {
+        self.shared.metrics.latency_summary()
+    }
+
+    /// Stops the service after draining the queue.
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.cv.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn execute_batch(v: &Variant, sh: &Shared, batch: Vec<Request>) {
+    let n = batch.len();
+    let (bsz, exe) = v.pick_batch(n);
+    sh.metrics.record_batch(n, bsz);
+    let px = v.img * v.img * 3;
+    let mut images = vec![0f32; bsz * px];
+    for (i, r) in batch.iter().enumerate() {
+        let take = r.image.len().min(px);
+        images[i * px..i * px + take].copy_from_slice(&r.image[..take]);
+    }
+    let mut args = Vec::with_capacity(v.static_args.len() + 1);
+    args.push(Tensor::f32(images, &[bsz, v.img, v.img, 3]));
+    args.extend(v.static_args.iter().cloned());
+    match exe.run_f32(&args) {
+        Ok(out) => {
+            let logits = &out[0];
+            let preds = argmax_rows(logits, v.classes);
+            for (i, r) in batch.into_iter().enumerate() {
+                let latency = r.enqueued.elapsed();
+                sh.metrics.record_done(latency);
+                let _ = r.tx.send(Ok(InferReply {
+                    class: preds[i],
+                    logits: logits[i * v.classes..(i + 1) * v.classes].to_vec(),
+                    latency,
+                    batch: (n, bsz),
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{}", e);
+            for r in batch {
+                let _ = r.tx.send(Err(anyhow::anyhow!("batch failed: {}", msg)));
+            }
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! LSB-first bitstream writer/reader.
+//!
+//! Bit order matches the hardware decoder's natural consumption order: the
+//! first bit written occupies the least-significant bit of byte 0, so a
+//! `w`-wide mask header reads back as an integer whose bit `i` is element
+//! `i`'s precision flag — the same value the PE's find-first logic muxes on.
+
+/// Append-only bit writer.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits already used in the last byte (0..8; 0 means byte-aligned).
+    used: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total bits written.
+    pub fn bit_len(&self) -> usize {
+        if self.used == 0 {
+            self.buf.len() * 8
+        } else {
+            (self.buf.len() - 1) * 8 + self.used as usize
+        }
+    }
+
+    /// Writes the low `n` bits of `v` (n ≤ 64), LSB first.
+    pub fn write(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        debug_assert!(n == 64 || v < (1u64 << n), "value {} does not fit {} bits", v, n);
+        let mut v = v;
+        let mut left = n;
+        while left > 0 {
+            if self.used == 0 {
+                self.buf.push(0);
+            }
+            let space = 8 - self.used;
+            let take = space.min(left);
+            let mask = if take == 64 { u64::MAX } else { (1u64 << take) - 1 };
+            let bits = (v & mask) as u8;
+            let last = self.buf.len() - 1;
+            self.buf[last] |= bits << self.used;
+            self.used = (self.used + take) % 8;
+            v >>= take;
+            left -= take;
+        }
+    }
+
+    /// Writes one bit.
+    pub fn write_bit(&mut self, b: bool) {
+        self.write(b as u64, 1);
+    }
+
+    /// Writes a signed value in `n`-bit two's complement.
+    pub fn write_signed(&mut self, v: i64, n: u32) {
+        debug_assert!(n >= 1 && n <= 64);
+        debug_assert!(
+            n == 64 || (v >= -(1i64 << (n - 1)) && v < (1i64 << (n - 1))),
+            "value {} does not fit signed {} bits",
+            v,
+            n
+        );
+        self.write((v as u64) & if n == 64 { u64::MAX } else { (1u64 << n) - 1 }, n);
+    }
+
+    /// Pads to a byte boundary and returns the buffer.
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Sequential bit reader over a byte slice.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // in bits
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining_bits(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+
+    /// Reads `n` bits (LSB-first), returning them as an unsigned value.
+    pub fn read(&mut self, n: u32) -> Option<u64> {
+        if n as usize > self.remaining_bits() {
+            return None;
+        }
+        let mut out = 0u64;
+        let mut got = 0u32;
+        while got < n {
+            let byte = self.buf[self.pos / 8];
+            let off = (self.pos % 8) as u32;
+            let avail = 8 - off;
+            let take = avail.min(n - got);
+            let mask = ((1u16 << take) - 1) as u8;
+            let bits = (byte >> off) & mask;
+            out |= (bits as u64) << got;
+            got += take;
+            self.pos += take as usize;
+        }
+        Some(out)
+    }
+
+    pub fn read_bit(&mut self) -> Option<bool> {
+        self.read(1).map(|b| b != 0)
+    }
+
+    /// Reads an `n`-bit two's-complement signed value.
+    pub fn read_signed(&mut self, n: u32) -> Option<i64> {
+        debug_assert!(n >= 1 && n <= 64);
+        let raw = self.read(n)?;
+        if n == 64 {
+            return Some(raw as i64);
+        }
+        let sign_bit = 1u64 << (n - 1);
+        if raw & sign_bit != 0 {
+            Some((raw | !((1u64 << n) - 1)) as i64)
+        } else {
+            Some(raw as i64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_bits_roundtrip() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        for &b in &pattern {
+            w.write_bit(b);
+        }
+        assert_eq!(w.bit_len(), 9);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &b in &pattern {
+            assert_eq!(r.read_bit(), Some(b));
+        }
+    }
+
+    #[test]
+    fn multi_width_roundtrip() {
+        let mut w = BitWriter::new();
+        w.write(0b101, 3);
+        w.write(0xABCD, 16);
+        w.write(1, 1);
+        w.write(0x3FFFFFFFF, 34);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(3), Some(0b101));
+        assert_eq!(r.read(16), Some(0xABCD));
+        assert_eq!(r.read(1), Some(1));
+        assert_eq!(r.read(34), Some(0x3FFFFFFFF));
+    }
+
+    #[test]
+    fn signed_roundtrip() {
+        let mut w = BitWriter::new();
+        for v in [-8i64, -1, 0, 7] {
+            w.write_signed(v, 4);
+        }
+        w.write_signed(-128, 8);
+        w.write_signed(127, 8);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_signed(4), Some(-8));
+        assert_eq!(r.read_signed(4), Some(-1));
+        assert_eq!(r.read_signed(4), Some(0));
+        assert_eq!(r.read_signed(4), Some(7));
+        assert_eq!(r.read_signed(8), Some(-128));
+        assert_eq!(r.read_signed(8), Some(127));
+    }
+
+    #[test]
+    fn lsb_first_layout() {
+        let mut w = BitWriter::new();
+        w.write(1, 1); // bit 0 of byte 0
+        w.write(0, 1);
+        w.write(1, 1); // bit 2
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![0b0000_0101]);
+    }
+
+    #[test]
+    fn read_past_end_is_none() {
+        let bytes = vec![0xFF];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(8), Some(0xFF));
+        assert_eq!(r.read(1), None);
+    }
+
+    #[test]
+    fn bit_len_tracks_partial_bytes() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.write(0, 5);
+        assert_eq!(w.bit_len(), 5);
+        w.write(0, 3);
+        assert_eq!(w.bit_len(), 8);
+        w.write(0, 1);
+        assert_eq!(w.bit_len(), 9);
+    }
+}

@@ -1,0 +1,94 @@
+//! Analytic compression ratios (§IV-D.1, Eq. 1 and Eq. 2).
+//!
+//! `r` = compressed / uncompressed weight memory, with 8-bit uncompressed
+//! weights and a 1-bit-per-element mask header:
+//!
+//! * Eq. 1 (payload-carrying low set, q > 1):  `r = (p(q-8) + 9) / 8`
+//! * Eq. 2 (no low payload: structured sparsity, or q = 1):  `r = (9-8p)/8`
+
+use crate::quant::Method;
+
+/// Eq. 1: ratio for a method whose low set stores `q`-bit payloads.
+pub fn ratio_payload(p: f64, q: u32) -> f64 {
+    (p * (q as f64 - 8.0) + 9.0) / 8.0
+}
+
+/// Eq. 2: ratio when the low set stores no payload (sparsity; q = 1).
+pub fn ratio_sparsity(p: f64) -> f64 {
+    (9.0 - 8.0 * p) / 8.0
+}
+
+/// Analytic ratio for any configured method at low fraction `p`.
+pub fn ratio_for(method: Method, p: f64) -> f64 {
+    let q = method.payload_bits();
+    match method {
+        Method::Baseline => ratio_payload(0.0, 8),
+        Method::StructuredSparsity => ratio_sparsity(p),
+        Method::Dliq { q: dq } if dq <= 1 => ratio_sparsity(p),
+        _ => ratio_payload(p, q),
+    }
+}
+
+/// Bits per element for a given method/p (8·r) — convenient for memory
+/// bandwidth accounting in the simulator.
+pub fn bits_per_element(method: Method, p: f64) -> f64 {
+    8.0 * ratio_for(method, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Method;
+
+    #[test]
+    fn eq1_paper_points() {
+        // DLIQ q=4, p=0.5: (0.5·(-4)+9)/8 = 7/8.
+        assert!((ratio_payload(0.5, 4) - 0.875).abs() < 1e-12);
+        // p=0: just the mask header overhead, 9/8.
+        assert!((ratio_payload(0.0, 4) - 1.125).abs() < 1e-12);
+        // p=1, q=4: 5/8.
+        assert!((ratio_payload(1.0, 4) - 0.625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq2_paper_points() {
+        assert!((ratio_sparsity(0.5) - 0.625).abs() < 1e-12);
+        assert!((ratio_sparsity(0.25) - 0.875).abs() < 1e-12);
+        assert!((ratio_sparsity(1.0) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparsity_always_at_least_as_small_as_payload_methods() {
+        // For the same p, sparsity stores strictly less (paper §VII-A2).
+        for p in [0.1, 0.25, 0.5, 0.75, 1.0] {
+            for q in 2..=7u32 {
+                assert!(ratio_sparsity(p) < ratio_payload(p, q));
+            }
+        }
+    }
+
+    #[test]
+    fn ratio_for_dispatches() {
+        assert_eq!(
+            ratio_for(Method::StructuredSparsity, 0.5),
+            ratio_sparsity(0.5)
+        );
+        assert_eq!(ratio_for(Method::Dliq { q: 4 }, 0.5), ratio_payload(0.5, 4));
+        // MIP2Q L=7 → q=4 bits.
+        assert_eq!(ratio_for(Method::Mip2q { l_max: 7 }, 0.5), ratio_payload(0.5, 4));
+        // MIP2Q L=3 → q=3 bits.
+        assert_eq!(ratio_for(Method::Mip2q { l_max: 3 }, 0.5), ratio_payload(0.5, 3));
+        // DLIQ q=1 degenerates to Eq. 2.
+        assert_eq!(ratio_for(Method::Dliq { q: 1 }, 0.5), ratio_sparsity(0.5));
+    }
+
+    #[test]
+    fn monotone_in_p_and_q() {
+        for q in 2..=7u32 {
+            assert!(ratio_payload(0.75, q) < ratio_payload(0.25, q));
+        }
+        for p in [0.25, 0.5, 0.75] {
+            assert!(ratio_payload(p, 3) < ratio_payload(p, 4));
+        }
+    }
+}

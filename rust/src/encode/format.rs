@@ -1,0 +1,314 @@
+//! The §IV-D.1 compressed weight-block format.
+//!
+//! Per `[l, w]` block, in block-grid order:
+//!
+//! 1. **Mask header** — `l·w` bits, bit `i` = 1 ⇔ element `i` is high
+//!    precision (element order: block row-major, padding lanes included —
+//!    the hardware's RF lanes physically exist either way).
+//! 2. **Payload** — for each element in the same order:
+//!    * mask 1 → 8-bit INT8 value (two's complement);
+//!    * mask 0 → method-dependent:
+//!      - structured sparsity (and DLIQ q=1): nothing (value is 0);
+//!      - DLIQ: `q`-bit two's-complement code (grid value = code·2^(8-q));
+//!      - MIP2Q: `q`-bit sign+shift code (sign in the top bit, shift `k`
+//!        in the low `q-1` bits; value = ±2^k).
+//!
+//! The decoder "reads the correct number of bits from the payload" exactly
+//! as Fig. 5 describes: the mask bit selects 8 vs `q` bits per element.
+
+use super::bitstream::{BitReader, BitWriter};
+use crate::quant::{BlockLayout, Method, StrumLayer, StrumParams};
+
+/// An encoded layer: the compressed bitstream plus everything needed to
+/// decode it.
+#[derive(Debug, Clone)]
+pub struct EncodedLayer {
+    pub name: String,
+    pub params: StrumParams,
+    pub oc: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub scales: Vec<f32>,
+    /// Compressed mask+payload bits (byte-padded at the very end only).
+    pub bytes: Vec<u8>,
+    /// Exact bit length (before byte padding).
+    pub bits: usize,
+}
+
+impl EncodedLayer {
+    /// Elements in the padded block grid (what the hardware stores).
+    pub fn padded_elems(&self) -> usize {
+        let layout = BlockLayout::new(self.oc, self.rows, self.cols, self.params.block);
+        layout.num_blocks() * layout.block_elems()
+    }
+
+    /// Measured compression ratio r = compressed bits / (8 bits · padded
+    /// elements) — directly comparable to Eq. 1 / Eq. 2.
+    pub fn measured_ratio(&self) -> f64 {
+        self.bits as f64 / (8.0 * self.padded_elems() as f64)
+    }
+}
+
+/// Encodes a StruM-transformed layer into the compressed format.
+pub fn encode_layer(layer: &StrumLayer) -> EncodedLayer {
+    let params = layer.params;
+    let layout = BlockLayout::new(layer.oc, layer.rows, layer.cols, params.block);
+    let q = params.method.payload_bits();
+    let mut w = BitWriter::new();
+    let be = layout.block_elems();
+    let mut mask_bits: Vec<bool> = Vec::with_capacity(be);
+    let mut elems: Vec<Option<usize>> = Vec::with_capacity(be);
+    for blk in 0..layout.num_blocks() {
+        mask_bits.clear();
+        elems.clear();
+        for idx in layout.block_indices(blk) {
+            // Padding lanes are low-precision by construction.
+            mask_bits.push(idx.map(|i| layer.mask[i]).unwrap_or(false));
+            elems.push(idx);
+        }
+        // 1. Mask header (batched into ≤64-bit words — §Perf hot path).
+        for chunk in mask_bits.chunks(64) {
+            let mut word = 0u64;
+            for (i, &m) in chunk.iter().enumerate() {
+                word |= (m as u64) << i;
+            }
+            w.write(word, chunk.len() as u32);
+        }
+        // 2. Payload.
+        for (slot, idx) in elems.iter().enumerate() {
+            let high = mask_bits[slot];
+            match (high, idx) {
+                (true, Some(i)) => w.write_signed(layer.codes[*i] as i64, 8),
+                (true, None) => unreachable!("padding is never high"),
+                (false, Some(i)) => write_low_code(&mut w, layer.codes[*i], params.method, q),
+                (false, None) => {
+                    // Padding lane: canonical zero-ish code.
+                    match params.method {
+                        Method::Mip2q { .. } => {
+                            // +2^0 encodes as sign=0, k=0.
+                            if q > 0 {
+                                w.write(0, q);
+                            }
+                        }
+                        _ => {
+                            if q > 0 {
+                                w.write(0, q);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let bits = w.bit_len();
+    EncodedLayer {
+        name: layer.name.clone(),
+        params,
+        oc: layer.oc,
+        rows: layer.rows,
+        cols: layer.cols,
+        scales: layer.scales.clone(),
+        bytes: w.finish(),
+        bits,
+    }
+}
+
+fn write_low_code(w: &mut BitWriter, code: i8, method: Method, q: u32) {
+    match method {
+        Method::Baseline => w.write_signed(code as i64, 8),
+        Method::StructuredSparsity => {} // no payload
+        Method::Dliq { q: dq } => {
+            if dq <= 1 {
+                return; // degenerate: value is 0, known from mask
+            }
+            w.write_signed(code as i64, q);
+        }
+        Method::Mip2q { .. } => {
+            // code = ±(k+1) sign-magnitude → pack sign | k.
+            debug_assert!(code != 0);
+            let neg = code < 0;
+            let k = (code.unsigned_abs() - 1) as u64;
+            debug_assert!(q >= 1);
+            let field = ((neg as u64) << (q - 1)) | k;
+            w.write(field, q);
+        }
+    }
+}
+
+/// Decodes an [`EncodedLayer`] back into a [`StrumLayer`] (effective
+/// values, codes and mask). Exact inverse of [`encode_layer`].
+pub fn decode_layer(enc: &EncodedLayer) -> crate::Result<StrumLayer> {
+    let params = enc.params;
+    let layout = BlockLayout::new(enc.oc, enc.rows, enc.cols, params.block);
+    let q = params.method.payload_bits();
+    let n = enc.oc * enc.rows * enc.cols;
+    let mut out = StrumLayer {
+        name: enc.name.clone(),
+        params,
+        oc: enc.oc,
+        rows: enc.rows,
+        cols: enc.cols,
+        values: vec![0; n],
+        codes: vec![0; n],
+        mask: vec![false; n],
+        scales: enc.scales.clone(),
+        grid_rmse: 0.0,
+    };
+    let mut r = BitReader::new(&enc.bytes);
+    let be = layout.block_elems();
+    let mut mask_bits: Vec<bool> = Vec::with_capacity(be);
+    let mut elems: Vec<Option<usize>> = Vec::with_capacity(be);
+    let fail = || anyhow::anyhow!("truncated bitstream in layer {}", enc.name);
+    for blk in 0..layout.num_blocks() {
+        mask_bits.clear();
+        elems.clear();
+        elems.extend(layout.block_indices(blk));
+        // Mask header, batched reads mirroring the writer.
+        let mut remaining = be;
+        while remaining > 0 {
+            let take = remaining.min(64);
+            let word = r.read(take as u32).ok_or_else(fail)?;
+            for i in 0..take {
+                mask_bits.push((word >> i) & 1 == 1);
+            }
+            remaining -= take;
+        }
+        for (slot, idx) in elems.iter().enumerate() {
+            let high = mask_bits[slot];
+            if high {
+                let v = r.read_signed(8).ok_or_else(fail)? as i8;
+                if let Some(i) = idx {
+                    out.mask[*i] = true;
+                    out.codes[*i] = v;
+                    out.values[*i] = v as i16;
+                }
+            } else {
+                match params.method {
+                    Method::Baseline => {
+                        let v = r.read_signed(8).ok_or_else(fail)? as i8;
+                        if let Some(i) = idx {
+                            out.codes[*i] = v;
+                            out.values[*i] = v as i16;
+                        }
+                    }
+                    Method::StructuredSparsity => {
+                        if let Some(i) = idx {
+                            out.codes[*i] = 0;
+                            out.values[*i] = 0;
+                        }
+                    }
+                    Method::Dliq { q: dq } => {
+                        let code = if dq <= 1 {
+                            0
+                        } else {
+                            r.read_signed(q).ok_or_else(fail)? as i8
+                        };
+                        if let Some(i) = idx {
+                            out.codes[*i] = code;
+                            out.values[*i] = crate::quant::dliq::decode(code, dq);
+                        }
+                    }
+                    Method::Mip2q { l_max } => {
+                        let field = r.read(q).ok_or_else(fail)?;
+                        let neg = (field >> (q - 1)) & 1 == 1;
+                        let k = (field & ((1 << (q - 1)) - 1)) as u8;
+                        let code = crate::quant::mip2q::encode_code(neg, k);
+                        if let Some(i) = idx {
+                            out.codes[*i] = code;
+                            out.values[*i] = crate::quant::mip2q::decode(code, l_max);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::tensor::qlayer;
+    use crate::quant::{apply_strum, Method, StrumParams};
+    use crate::util::prng::Rng;
+
+    fn random_layer(oc: usize, rows: usize, cols: usize, seed: u64) -> crate::quant::QLayer {
+        let mut rng = Rng::new(seed);
+        let data: Vec<i8> = (0..oc * rows * cols)
+            .map(|_| (rng.gaussian() * 40.0).clamp(-127.0, 127.0) as i8)
+            .collect();
+        qlayer("rnd", oc, rows, cols, data, vec![0.01; oc])
+    }
+
+    fn roundtrip(method: Method, oc: usize, rows: usize, cols: usize, l: usize, w: usize, p: f64) {
+        let layer = random_layer(oc, rows, cols, 42);
+        let s = apply_strum(&layer, &StrumParams::new(method, l, w, p));
+        let enc = encode_layer(&s);
+        let dec = decode_layer(&enc).unwrap();
+        assert_eq!(dec.values, s.values, "{:?}", method);
+        assert_eq!(dec.mask, s.mask, "{:?}", method);
+        assert_eq!(dec.codes, s.codes, "{:?}", method);
+    }
+
+    #[test]
+    fn roundtrip_all_methods_aligned() {
+        for method in [
+            Method::StructuredSparsity,
+            Method::Dliq { q: 4 },
+            Method::Dliq { q: 2 },
+            Method::Mip2q { l_max: 7 },
+            Method::Mip2q { l_max: 5 },
+            Method::Mip2q { l_max: 3 },
+        ] {
+            roundtrip(method, 4, 1, 32, 1, 16, 0.5);
+        }
+    }
+
+    #[test]
+    fn roundtrip_with_padding_and_l_blocks() {
+        for method in [
+            Method::StructuredSparsity,
+            Method::Dliq { q: 4 },
+            Method::Mip2q { l_max: 7 },
+        ] {
+            roundtrip(method, 3, 3, 10, 2, 8, 0.5);
+            roundtrip(method, 1, 1, 5, 1, 16, 0.25);
+        }
+    }
+
+    #[test]
+    fn measured_ratio_matches_eq1_when_aligned() {
+        // DLIQ q=4, p=0.5, no padding: Eq.1 → r = (0.5·(4-8)+9)/8 = 7/8.
+        let layer = random_layer(4, 1, 64, 7);
+        let s = apply_strum(&layer, &StrumParams::paper(Method::Dliq { q: 4 }, 0.5));
+        let enc = encode_layer(&s);
+        assert!((enc.measured_ratio() - 7.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measured_ratio_matches_eq2_for_sparsity() {
+        // Sparsity p=0.5: Eq.2 → r = (9-8·0.5)/8 = 5/8.
+        let layer = random_layer(2, 1, 48, 9);
+        let s = apply_strum(&layer, &StrumParams::paper(Method::StructuredSparsity, 0.5));
+        let enc = encode_layer(&s);
+        assert!((enc.measured_ratio() - 5.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn baseline_encoding_is_9_8() {
+        // Baseline still carries the mask header: r = 9/8 (Eq.1, p=0).
+        let layer = random_layer(2, 1, 32, 3);
+        let s = apply_strum(&layer, &StrumParams::paper(Method::Baseline, 0.0));
+        let enc = encode_layer(&s);
+        assert!((enc.measured_ratio() - 9.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_detects_truncation() {
+        let layer = random_layer(2, 1, 32, 5);
+        let s = apply_strum(&layer, &StrumParams::paper(Method::Dliq { q: 4 }, 0.5));
+        let mut enc = encode_layer(&s);
+        enc.bytes.truncate(enc.bytes.len() / 2);
+        assert!(decode_layer(&enc).is_err());
+    }
+}

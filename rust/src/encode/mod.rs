@@ -1,0 +1,17 @@
+//! Weight encoding (§IV-D.1): compressed blocks = mask header + payload.
+//!
+//! * [`bitstream`] — LSB-first bit-level writer/reader (the substrate).
+//! * [`format`] — the block codec: one mask bit per element (1 = high
+//!   precision / INT8 payload; 0 = low precision / `q`-bit payload or no
+//!   payload for structured sparsity), followed by the payload bits in
+//!   block order.
+//! * [`compression`] — the paper's analytic compression ratios (Eq. 1 and
+//!   Eq. 2) plus measured-size accounting to validate them.
+
+pub mod bitstream;
+pub mod compression;
+pub mod format;
+
+pub use bitstream::{BitReader, BitWriter};
+pub use compression::{ratio_payload, ratio_sparsity};
+pub use format::{decode_layer, encode_layer, EncodedLayer};

@@ -1,0 +1,58 @@
+//! Adder-tree and accumulator cost models (the PE's reduction datapath,
+//! Fig. 7/8: 8 products → adder tree → OF accumulator).
+
+use super::gates::{activity, cell, Cost};
+
+/// Ripple/carry-select hybrid n-bit adder (area ≈ n FAs; the speed
+//  technique changes timing, not first-order area).
+pub fn adder(n_bits: u32) -> Cost {
+    Cost::uniform(n_bits as f64 * cell::FA, activity::ADDER)
+}
+
+/// Binary adder tree summing `inputs` operands of `in_bits` bits.
+/// Width grows one bit per level (full-precision accumulation, no
+/// truncation — matching the INT32 accumulators of the datapath).
+pub fn adder_tree(inputs: u32, in_bits: u32) -> Cost {
+    assert!(inputs.is_power_of_two() && inputs >= 2);
+    let mut total = Cost::ZERO;
+    let mut n = inputs;
+    let mut bits = in_bits;
+    while n > 1 {
+        total += adder(bits + 1) * (n / 2) as f64;
+        n /= 2;
+        bits += 1;
+    }
+    total
+}
+
+/// Output-feature accumulator: n-bit adder + n-bit register.
+pub fn accumulator(n_bits: u32) -> Cost {
+    let add = adder(n_bits);
+    let reg = Cost::uniform(n_bits as f64 * cell::DFF, activity::REGFILE);
+    add + reg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_has_n_minus_one_adders() {
+        // 8 inputs → 4+2+1 = 7 adders of growing width.
+        let t = adder_tree(8, 16);
+        let manual = adder(17) * 4.0 + adder(18) * 2.0 + adder(19) * 1.0;
+        assert!((t.area - manual.area).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tree_monotone_in_inputs_and_width() {
+        assert!(adder_tree(8, 16).area > adder_tree(4, 16).area);
+        assert!(adder_tree(8, 20).area > adder_tree(8, 16).area);
+    }
+
+    #[test]
+    fn accumulator_includes_register() {
+        let a = accumulator(32);
+        assert!(a.area > adder(32).area);
+    }
+}

@@ -1,0 +1,156 @@
+//! PE-array and DPU roll-up (§VI configuration: a unified tile of 256 PEs
+//! in a 16×16 grid, 8 MACs/PE = 2048 MACs, 1.5 MB SRAM with 32 B ports,
+//! 208 B of RF per PE).
+
+use super::gates::{activity, cell, Cost};
+use super::pe::{pe_cost, PeVariant};
+use super::regfile::{pe_regfiles, sram};
+
+/// DPU structural configuration.
+#[derive(Debug, Clone)]
+pub struct DpuConfig {
+    pub grid_cols: usize,
+    pub grid_rows: usize,
+    /// On-chip SRAM bytes.
+    pub sram_bytes: u64,
+    /// SRAM read/write port width in bytes.
+    pub sram_port_bytes: u32,
+}
+
+impl DpuConfig {
+    /// The paper's configuration (§VI).
+    pub fn flexnn_16x16() -> DpuConfig {
+        DpuConfig {
+            grid_cols: 16,
+            grid_rows: 16,
+            sram_bytes: 3 * 512 * 1024 / 2 * 2, // 1.5 MB
+            sram_port_bytes: 32,
+        }
+    }
+
+    pub fn num_pes(&self) -> usize {
+        self.grid_cols * self.grid_rows
+    }
+}
+
+/// Itemized DPU cost.
+#[derive(Debug, Clone)]
+pub struct DpuCost {
+    pub variant: PeVariant,
+    /// One PE's datapath (PE-level scope).
+    pub pe_core: Cost,
+    /// One PE's register files (data + bitmap + OF).
+    pub pe_rf: Cost,
+    /// Per-PE clock-tree & pipeline overhead.
+    pub pe_clock: Cost,
+    /// PE-array total (cores + RFs + clock + column broadcast).
+    pub array: Cost,
+    /// Column broadcast / NoC wiring+drivers for the whole array.
+    pub broadcast: Cost,
+    /// SRAM macro.
+    pub sram: Cost,
+    /// Load + drain units (DMA engines, §V-A).
+    pub load_drain: Cost,
+    /// Full DPU.
+    pub total: Cost,
+}
+
+/// Per-PE clock-tree + pipeline-register overhead. Clock distribution in a
+/// dense MAC array is a significant, variant-independent slice of area and
+/// (especially) power — this is what dilutes the PE-level savings at the
+/// array/DPU level alongside the RFs (§VII-B).
+fn pe_clock_overhead() -> Cost {
+    // Operand/stage pipeline registers: 2 stages × 16 B + misc state.
+    let pipeline_bits = 2.0 * 16.0 * 8.0 + 64.0;
+    let area = pipeline_bits * cell::DFF * 1.2; // + local clock buffers
+    // Clock toggles every cycle: high effective activity.
+    Cost { area, energy: area * 0.9 }
+}
+
+/// Builds the itemized DPU cost for a PE variant.
+pub fn dpu_cost(variant: PeVariant, cfg: &DpuConfig) -> DpuCost {
+    let n = cfg.num_pes() as f64;
+    let pe_core = pe_cost(variant).total();
+    let pe_rf = pe_regfiles();
+    let pe_clock = pe_clock_overhead();
+
+    // Column broadcast: per column, weight/activation distribution bus
+    // drivers + repeaters spanning the column.
+    let per_col = Cost::uniform(
+        (cfg.grid_rows as f64) * 16.0 * 8.0 * cell::INV * 0.5,
+        activity::CONTROL,
+    );
+    let broadcast = per_col * cfg.grid_cols as f64;
+
+    let array = (pe_core + pe_rf + pe_clock) * n + broadcast;
+
+    let sram_c = sram(cfg.sram_bytes);
+    // Load & drain units: address generators, rotators, the §IV-D weight
+    // decoder (mask-header parse + payload align) per column.
+    let decoder_per_col = Cost::uniform(
+        16.0 * 8.0 * cell::MUX2 + 64.0 * cell::NAND2,
+        activity::CONTROL,
+    );
+    let load_drain = Cost::uniform(40_000.0, activity::CONTROL)
+        + decoder_per_col * cfg.grid_cols as f64;
+
+    let total = array + sram_c + load_drain;
+    DpuCost {
+        variant,
+        pe_core,
+        pe_rf,
+        pe_clock,
+        array,
+        broadcast,
+        sram: sram_c,
+        load_drain,
+        total,
+    }
+}
+
+/// TOPS/mm² proxy: MACs per cycle per unit area (relative — NAND2 units).
+pub fn tops_per_area(variant: PeVariant, cfg: &DpuConfig) -> f64 {
+    let macs_per_cycle = (cfg.num_pes() * 8) as f64;
+    macs_per_cycle / dpu_cost(variant, cfg).total.area
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sram_is_a_large_share_of_dpu_area() {
+        let cfg = DpuConfig::flexnn_16x16();
+        let c = dpu_cost(PeVariant::BaselineInt8, &cfg);
+        let share = c.sram.area / c.total.area;
+        assert!((0.3..0.9).contains(&share), "sram share {}", share);
+    }
+
+    #[test]
+    fn array_savings_diluted_vs_pe_savings() {
+        let cfg = DpuConfig::flexnn_16x16();
+        let b = dpu_cost(PeVariant::BaselineInt8, &cfg);
+        let s = dpu_cost(PeVariant::StaticMip2q { l_max: 7 }, &cfg);
+        let pe_save = 1.0 - s.pe_core.area / b.pe_core.area;
+        let arr_save = 1.0 - s.array.area / b.array.area;
+        let dpu_save = 1.0 - s.total.area / b.total.area;
+        assert!(pe_save > arr_save && arr_save > dpu_save);
+    }
+
+    #[test]
+    fn tops_per_area_improves_with_static_strum() {
+        let cfg = DpuConfig::flexnn_16x16();
+        assert!(
+            tops_per_area(PeVariant::StaticMip2q { l_max: 5 }, &cfg)
+                > tops_per_area(PeVariant::BaselineInt8, &cfg)
+        );
+    }
+
+    #[test]
+    fn config_macs() {
+        let cfg = DpuConfig::flexnn_16x16();
+        assert_eq!(cfg.num_pes(), 256);
+        assert_eq!(cfg.num_pes() * 8, 2048); // §VI: 2048 MACs
+        assert_eq!(cfg.sram_bytes, 1_572_864); // 1.5 MB
+    }
+}

@@ -1,0 +1,131 @@
+//! Gate-level primitives and cost algebra.
+//!
+//! Areas are NAND2-equivalents — the standard-cell bookkeeping unit ASIC
+//! flows report. The per-primitive numbers below are textbook CMOS
+//! standard-cell equivalences (e.g. Weste & Harris): they fix the *ratios*
+//! between components, which is what the paper's savings percentages
+//! depend on; the absolute scale cancels out of every reported metric.
+//!
+//! Dynamic energy is modeled as `area × activity` per operation: switched
+//! capacitance is first-order proportional to gate count, and the activity
+//! factor captures how much of a component toggles per op (a multiplier's
+//! array churns on data; a barrel shifter only re-routes). Activity factors
+//! live in [`Activity`] — the single calibration surface of the model.
+
+use std::ops::{Add, AddAssign, Mul};
+
+/// NAND2-equivalent areas of standard cells.
+pub mod cell {
+    /// 2-input NAND — the unit.
+    pub const NAND2: f64 = 1.0;
+    /// Inverter.
+    pub const INV: f64 = 0.6;
+    /// 2-input AND (NAND + INV).
+    pub const AND2: f64 = 1.5;
+    /// 2-input XOR.
+    pub const XOR2: f64 = 2.5;
+    /// 2:1 mux.
+    pub const MUX2: f64 = 2.5;
+    /// Full adder (sum + carry).
+    pub const FA: f64 = 6.0;
+    /// Half adder.
+    pub const HA: f64 = 3.0;
+    /// D flip-flop with enable.
+    pub const DFF: f64 = 7.0;
+    /// Latch (used in latch-array register files).
+    pub const LATCH: f64 = 3.5;
+    /// 6T SRAM bit, NAND2-equivalent footprint (dense macro).
+    pub const SRAM_BIT: f64 = 0.55;
+    /// Integrated clock-gating cell.
+    pub const ICG: f64 = 4.0;
+}
+
+/// Per-operation activity factors (fraction of a component's gates that
+/// toggle per operation). These are the model's calibration constants; see
+/// DESIGN.md §hw for the rationale and EXPERIMENTS.md for the resulting
+/// Fig. 13 comparison.
+pub mod activity {
+    /// Array multiplier on random operand data.
+    pub const MULTIPLIER: f64 = 0.50;
+    /// Barrel shifter: mux network re-routes, little glitching.
+    pub const SHIFTER: f64 = 0.22;
+    /// Adder tree / accumulators.
+    pub const ADDER: f64 = 0.40;
+    /// Register-file read or write (per accessed bit's worth of array).
+    pub const REGFILE: f64 = 0.08;
+    /// SRAM access (per accessed bit, amortized periphery).
+    pub const SRAM: f64 = 0.05;
+    /// Control / routing logic.
+    pub const CONTROL: f64 = 0.25;
+    /// Leakage per gate per cycle, as a fraction of a NAND2 toggle. At a
+    /// low-leakage 3nm-class node leakage is a small slice of total power
+    /// for an always-active accelerator.
+    pub const LEAKAGE_PER_GATE: f64 = 0.012;
+}
+
+/// Area + per-op dynamic energy of a hardware component.
+///
+/// `energy` is in NAND2-toggle equivalents *per operation* of that
+/// component (one multiply, one RF read, ...). Power roll-ups multiply by
+/// op counts per cycle (analytic) or simulator activity counts (measured).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Cost {
+    pub area: f64,
+    pub energy: f64,
+}
+
+impl Cost {
+    pub const ZERO: Cost = Cost { area: 0.0, energy: 0.0 };
+
+    /// A component of `area` gates with uniform activity `act`.
+    pub fn uniform(area: f64, act: f64) -> Cost {
+        Cost { area, energy: area * act }
+    }
+}
+
+impl Add for Cost {
+    type Output = Cost;
+    fn add(self, rhs: Cost) -> Cost {
+        Cost { area: self.area + rhs.area, energy: self.energy + rhs.energy }
+    }
+}
+
+impl AddAssign for Cost {
+    fn add_assign(&mut self, rhs: Cost) {
+        self.area += rhs.area;
+        self.energy += rhs.energy;
+    }
+}
+
+impl Mul<f64> for Cost {
+    type Output = Cost;
+    fn mul(self, k: f64) -> Cost {
+        Cost { area: self.area * k, energy: self.energy * k }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_algebra() {
+        let a = Cost { area: 10.0, energy: 2.0 };
+        let b = Cost { area: 5.0, energy: 1.0 };
+        let c = a + b * 2.0;
+        assert_eq!(c.area, 20.0);
+        assert_eq!(c.energy, 4.0);
+    }
+
+    #[test]
+    fn uniform_energy_scales_with_area() {
+        let c = Cost::uniform(100.0, 0.5);
+        assert_eq!(c.energy, 50.0);
+    }
+
+    #[test]
+    fn shifter_cheaper_to_toggle_than_multiplier() {
+        // The codesign premise: same area would still yield less energy.
+        assert!(activity::SHIFTER < activity::MULTIPLIER);
+    }
+}

@@ -1,0 +1,73 @@
+//! Signed array-multiplier cost models.
+//!
+//! A Baugh-Wooley style n×m array multiplier: n·m partial-product AND
+//! gates, (n−1) rows of m-bit carry-save adders, and a final (n+m)-bit
+//! carry-propagate adder. This reproduces the classic ~O(n·m) area law, so
+//! INT4×INT8 comes out at roughly half of INT8×INT8 — the ratio behind the
+//! DLIQ PE variant (§IV-D.2) — and powers the Fig. 6 dot-product unit
+//! accounting.
+
+use super::gates::{activity, cell, Cost};
+
+/// Cost of a signed n×m-bit array multiplier.
+pub fn array_multiplier(n_bits: u32, m_bits: u32) -> Cost {
+    assert!(n_bits >= 2 && m_bits >= 2);
+    let n = n_bits as f64;
+    let m = m_bits as f64;
+    // Partial products (AND2s; Baugh-Wooley sign handling adds a row of
+    // inverters + constant-bit adders, folded into a 5% factor).
+    let pp = n * m * cell::AND2 * 1.05;
+    // Carry-save reduction: (n-1) rows of m FAs.
+    let csa = (n - 1.0) * m * cell::FA;
+    // Final carry-propagate adder over n+m bits.
+    let cpa = (n + m) * cell::FA;
+    Cost::uniform(pp + csa + cpa, activity::MULTIPLIER)
+}
+
+/// The FlexNN baseline INT8×INT8 multiplier (weights × activations).
+pub fn int8x8() -> Cost {
+    array_multiplier(8, 8)
+}
+
+/// INT4×INT8 multiplier used by a DLIQ low-precision lane (§IV-C.1):
+/// the 4-bit weight code is consumed directly; the fixed `<< (8-q)`
+/// re-alignment is free (wiring into the adder tree).
+pub fn int4x8() -> Cost {
+    array_multiplier(4, 8)
+}
+
+/// A q-bit × 8-bit DLIQ lane multiplier for arbitrary q ≥ 2.
+pub fn intqx8(q: u32) -> Cost {
+    array_multiplier(q.max(2), 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int8_multiplier_in_expected_range() {
+        // Classic 8×8 array multiplier ≈ 400–600 NAND2-equivalents.
+        let c = int8x8();
+        assert!((400.0..650.0).contains(&c.area), "area {}", c.area);
+    }
+
+    #[test]
+    fn int4_roughly_half_of_int8() {
+        let r = int4x8().area / int8x8().area;
+        assert!((0.40..0.60).contains(&r), "ratio {}", r);
+    }
+
+    #[test]
+    fn area_monotone_in_width() {
+        for q in 2..8 {
+            assert!(intqx8(q).area < intqx8(q + 1).area);
+        }
+    }
+
+    #[test]
+    fn energy_tracks_multiplier_activity() {
+        let c = int8x8();
+        assert!((c.energy / c.area - activity::MULTIPLIER).abs() < 1e-12);
+    }
+}

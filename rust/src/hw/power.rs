@@ -1,0 +1,211 @@
+//! Activity-driven power estimation (the PTPX-with-SAIF substitute, §VI).
+//!
+//! Two sources of activity:
+//! * **Analytic dense workload** ([`Activity::dense`]) — every MAC lane
+//!   busy every cycle, RFs feeding at full rate: the steady-state inner
+//!   loop of a compute-bound conv layer. Used for Fig. 13's power columns.
+//! * **Simulator trace** ([`Activity`] built by `sim::driver`) — per-
+//!   component op counts from the cycle-level FlexNN simulation of a real
+//!   layer (the SAIF-equivalent path).
+//!
+//! Energy bookkeeping is in NAND2-toggle equivalents; reported *power* is
+//! energy/cycle, and all paper comparisons are ratios, so units cancel.
+
+use super::dpu::{dpu_cost, DpuConfig, DpuCost};
+use super::gates::activity::LEAKAGE_PER_GATE;
+use super::pe::{pe_cost, PeVariant};
+
+/// Per-byte access energies (NAND2-toggle equivalents), Eyeriss-class
+/// relative magnitudes: SRAM ≫ RF per byte; both comparable in aggregate
+/// to MAC energy in a dense accelerator.
+pub const RF_ACCESS_PER_BYTE: f64 = 40.0;
+pub const SRAM_ACCESS_PER_BYTE: f64 = 110.0;
+
+/// Component-level activity counts over a simulated window.
+#[derive(Debug, Clone, Default)]
+pub struct Activity {
+    /// Total cycles in the window.
+    pub cycles: u64,
+    /// High-precision multiplier ops (lane-cycles).
+    pub mult_ops: u64,
+    /// Low-precision lane ops (shifter or narrow-mult lane-cycles).
+    pub low_ops: u64,
+    /// Adder-tree reduction cycles (PE-cycles with any active lane).
+    pub tree_cycles: u64,
+    /// Accumulator updates.
+    pub accum_ops: u64,
+    /// RF bytes read + written (data + bitmap RFs).
+    pub rf_bytes: u64,
+    /// SRAM bytes read + written.
+    pub sram_bytes: u64,
+    /// PE-cycles where the PE was clocked (not clock-gated idle).
+    pub pe_active_cycles: u64,
+}
+
+impl Activity {
+    /// Dense steady-state activity for `pes` PEs over `cycles` cycles with
+    /// a `p_low` fraction of lanes running at low precision.
+    pub fn dense(pes: u64, cycles: u64, p_low: f64) -> Activity {
+        let lane_cycles = pes * cycles * 8;
+        let low = (lane_cycles as f64 * p_low) as u64;
+        Activity {
+            cycles,
+            mult_ops: lane_cycles - low,
+            low_ops: low,
+            tree_cycles: pes * cycles,
+            accum_ops: pes * cycles,
+            // IF 8 B + FL 8 B reads + 4 B OF r/w + 2 B bitmap per PE-cycle.
+            rf_bytes: pes * cycles * (8 + 8 + 8 + 2),
+            // 32 B/cycle load port + 16 B drain, amortized over the array.
+            sram_bytes: cycles * 48,
+            pe_active_cycles: pes * cycles,
+        }
+    }
+}
+
+/// Itemized power report (energy per cycle).
+#[derive(Debug, Clone)]
+pub struct PowerReport {
+    pub variant: PeVariant,
+    pub mac_datapath: f64,
+    pub regfiles: f64,
+    pub clock: f64,
+    pub sram: f64,
+    pub load_drain: f64,
+    pub leakage: f64,
+}
+
+impl PowerReport {
+    /// PE-level scope (datapath only), matching the paper's
+    /// PE-in-isolation numbers.
+    pub fn pe_level(&self) -> f64 {
+        self.mac_datapath
+    }
+    /// PE-array scope: datapath + RFs + clocking.
+    pub fn array_level(&self) -> f64 {
+        self.mac_datapath + self.regfiles + self.clock
+    }
+    /// Full DPU.
+    pub fn dpu_level(&self) -> f64 {
+        self.array_level() + self.sram + self.load_drain + self.leakage
+    }
+}
+
+/// Computes the power report for a variant from activity counts.
+pub fn power(variant: PeVariant, act: &Activity, cfg: &DpuConfig) -> PowerReport {
+    let cycles = act.cycles.max(1) as f64;
+    let pc = pe_cost(variant);
+    let dc: DpuCost = dpu_cost(variant, cfg);
+
+    // Lane energies: per-op energy of one lane = component energy / lanes.
+    let mult_lane = if matches!(variant, PeVariant::BaselineInt8 | PeVariant::DynamicMip2q { .. })
+    {
+        pc.multipliers.energy / 8.0
+    } else {
+        pc.multipliers.energy / 4.0
+    };
+    let low_lane = if pc.low_lanes.energy > 0.0 {
+        pc.low_lanes.energy / 4.0
+    } else {
+        // Baseline has no low lanes; low ops (if any) run on multipliers.
+        mult_lane
+    };
+
+    let mac = act.mult_ops as f64 * mult_lane
+        + act.low_ops as f64 * low_lane
+        + act.tree_cycles as f64 * pc.tree.energy
+        + act.accum_ops as f64 * pc.accum.energy
+        + act.pe_active_cycles as f64 * (pc.routing.energy + pc.control.energy + pc.gating.energy);
+
+    let rf = act.rf_bytes as f64 * RF_ACCESS_PER_BYTE;
+    let clock = act.pe_active_cycles as f64 * dc.pe_clock.energy;
+    let sram = act.sram_bytes as f64 * SRAM_ACCESS_PER_BYTE;
+    let load_drain = act.cycles as f64 * dc.load_drain.energy * 0.25;
+    let leakage = dc.total.area * LEAKAGE_PER_GATE * act.cycles as f64;
+
+    PowerReport {
+        variant,
+        mac_datapath: mac / cycles,
+        regfiles: rf / cycles,
+        clock: clock / cycles,
+        sram: sram / cycles,
+        load_drain: load_drain / cycles,
+        leakage: leakage / cycles,
+    }
+}
+
+/// TOPS/W proxy: MAC ops per unit energy at DPU scope.
+pub fn tops_per_watt(variant: PeVariant, act: &Activity, cfg: &DpuConfig) -> f64 {
+    let rep = power(variant, act, cfg);
+    let macs_per_cycle = (act.mult_ops + act.low_ops) as f64 / act.cycles.max(1) as f64;
+    macs_per_cycle / rep.dpu_level()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::pe::pe_dense_cycle_energy;
+    use crate::hw::regfile::pe_regfiles;
+
+    fn dense_act() -> Activity {
+        Activity::dense(256, 10_000, 0.5)
+    }
+
+    #[test]
+    fn pe_power_savings_band() {
+        // Paper: 31–34% PE-level power savings (§VII-B).
+        let cfg = DpuConfig::flexnn_16x16();
+        let act = dense_act();
+        let base = power(PeVariant::BaselineInt8, &act, &cfg).pe_level();
+        for l in [7u8, 5] {
+            let e = power(PeVariant::StaticMip2q { l_max: l }, &act, &cfg).pe_level();
+            let save = 1.0 - e / base;
+            assert!((0.25..=0.42).contains(&save), "L={} saving {}", l, save);
+        }
+    }
+
+    #[test]
+    fn dpu_power_savings_band() {
+        // Paper: 10–12% power savings at PE-array/DPU scope.
+        let cfg = DpuConfig::flexnn_16x16();
+        let act = dense_act();
+        let base = power(PeVariant::BaselineInt8, &act, &cfg).dpu_level();
+        let e = power(PeVariant::StaticMip2q { l_max: 7 }, &act, &cfg).dpu_level();
+        let save = 1.0 - e / base;
+        assert!((0.06..=0.18).contains(&save), "dpu saving {}", save);
+    }
+
+    #[test]
+    fn l5_saves_at_least_as_much_as_l7() {
+        let cfg = DpuConfig::flexnn_16x16();
+        let act = dense_act();
+        let e7 = power(PeVariant::StaticMip2q { l_max: 7 }, &act, &cfg).pe_level();
+        let e5 = power(PeVariant::StaticMip2q { l_max: 5 }, &act, &cfg).pe_level();
+        assert!(e5 <= e7);
+    }
+
+    #[test]
+    fn consistency_dense_matches_pe_dense_energy() {
+        // The analytic dense path and pe_dense_cycle_energy agree on the
+        // ordering of variants.
+        let base = pe_dense_cycle_energy(PeVariant::BaselineInt8);
+        let stat = pe_dense_cycle_energy(PeVariant::StaticMip2q { l_max: 7 });
+        assert!(stat < base);
+    }
+
+    #[test]
+    fn tops_per_watt_improves() {
+        let cfg = DpuConfig::flexnn_16x16();
+        let act = dense_act();
+        assert!(
+            tops_per_watt(PeVariant::StaticMip2q { l_max: 5 }, &act, &cfg)
+                > tops_per_watt(PeVariant::BaselineInt8, &act, &cfg)
+        );
+    }
+
+    #[test]
+    fn regfiles_used() {
+        // Silence dead-code: pe_regfiles is part of the public surface.
+        assert!(pe_regfiles().area > 0.0);
+    }
+}

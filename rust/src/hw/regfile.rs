@@ -1,0 +1,71 @@
+//! Register-file and SRAM cost models (§VI: per-PE 4×16 B IF RF, 4×16 B FL
+//! RF, 16×4 B OF RF, two 4×2 B sparsity-bitmap RFs = 208 B/PE; DPU-level
+//! 1.5 MB SRAM with 32 B ports).
+
+use super::gates::{activity, cell, Cost};
+
+/// Latch-array register file: `bytes` of storage with `read_ports` +
+/// `write_ports` access ports. Periphery (decoders, port muxes) scales
+/// with port count.
+pub fn regfile(bytes: u32, read_ports: u32, write_ports: u32) -> Cost {
+    let bits = bytes as f64 * 8.0;
+    let array = bits * cell::LATCH;
+    // Per-port wordline/bitline mux + decode overhead, ~30% of array per
+    // port pair (small RFs are periphery-dominated).
+    let ports = (read_ports + write_ports) as f64;
+    let periphery = array * 0.15 * ports;
+    Cost::uniform(array + periphery, activity::REGFILE)
+}
+
+/// The full per-PE RF complement (§VI): data RFs + bitmap RFs + OF RF.
+pub fn pe_regfiles() -> Cost {
+    // 4×16B IF data RF, 4×16B FL data RF (1r1w each).
+    let if_rf = regfile(64, 1, 1);
+    let fl_rf = regfile(64, 1, 1);
+    // 16×4B OF RF (accumulator state, 1r1w).
+    let of_rf = regfile(64, 1, 1);
+    // Sparsity/precision bitmap RFs: 4×2B each for IF and FL (one bit per
+    // data byte — reused as the StruM precision bitmap, §VI).
+    let bitmap = regfile(8, 1, 1) + regfile(8, 1, 1);
+    if_rf + fl_rf + of_rf + bitmap
+}
+
+/// Dense SRAM macro: `bytes` with amortized periphery.
+pub fn sram(bytes: u64) -> Cost {
+    let bits = bytes as f64 * 8.0;
+    let array = bits * cell::SRAM_BIT;
+    let periphery = array * 0.12;
+    Cost::uniform(array + periphery, activity::SRAM)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pe_rf_totals_208_bytes() {
+        // 64+64+64+8+8 = 208 B (§VI).
+        let total_bytes = 64 + 64 + 64 + 8 + 8;
+        assert_eq!(total_bytes, 208);
+    }
+
+    #[test]
+    fn sram_denser_than_regfile_per_byte() {
+        let rf = regfile(64, 1, 1).area / 64.0;
+        let sr = sram(65536).area / 65536.0;
+        assert!(sr < rf / 3.0, "sram {} rf {}", sr, rf);
+    }
+
+    #[test]
+    fn ports_add_area() {
+        assert!(regfile(64, 2, 2).area > regfile(64, 1, 1).area);
+    }
+
+    #[test]
+    fn regfile_scale_sanity() {
+        // 208B of RF should be of the same order as the 8-MAC datapath
+        // (a few thousand NAND2) — not 10x larger or smaller.
+        let c = pe_regfiles();
+        assert!((3_000.0..15_000.0).contains(&c.area), "area {}", c.area);
+    }
+}

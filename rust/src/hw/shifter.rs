@@ -1,0 +1,81 @@
+//! Barrel-shifter cost models (§V-B).
+//!
+//! A MIP2Q low-precision lane multiplies an 8-bit activation by `±2^k`,
+//! `k ∈ [0, L]`: a left-shift by up to `L` positions plus a conditional
+//! two's-complement negate. Structure:
+//!
+//! * `⌈log2(L+1)⌉` mux stages, each as wide as the (growing) datapath —
+//!   output width is `8 + L` bits plus sign;
+//! * a row of XORs + increment folded into the adder tree's carry-in for
+//!   the negate (costed here as the XOR row).
+//!
+//! Reducing the shift range (L=7 → L=5) shrinks both the output datapath
+//! and the stage width — the paper's "L=5 variant allows further hardware
+//! complexity reduction" (§V-B).
+
+use super::gates::{activity, cell, Cost};
+
+/// Number of mux stages for shift range [0, L]: ⌈log2(L+1)⌉.
+pub fn stages(l_max: u32) -> u32 {
+    (l_max + 1).next_power_of_two().trailing_zeros().max(1)
+}
+
+/// Cost of a barrel shifter for `act_bits`-wide input and shift range
+/// `[0, l_max]`, with sign-conditioned negation.
+pub fn barrel_shifter(act_bits: u32, l_max: u32) -> Cost {
+    assert!(l_max >= 1, "degenerate shifter");
+    let out_bits = (act_bits + l_max) as f64;
+    // Mux stages: stage s shifts by 2^s; each stage spans the output width.
+    let n_stages = (l_max + 1).next_power_of_two().trailing_zeros().max(1) as f64;
+    let mux_net = n_stages * out_bits * cell::MUX2;
+    // Sign-conditioned inversion (XOR row); the +1 rides the adder carry-in.
+    let negate = out_bits * cell::XOR2 * 0.5;
+    // Shift-amount decode.
+    let decode = n_stages * cell::AND2 * 2.0;
+    Cost::uniform(mux_net + negate + decode, activity::SHIFTER)
+}
+
+/// The paper's full-range variant: L = 7 (4-bit payload).
+pub fn mip2q_l7() -> Cost {
+    barrel_shifter(8, 7)
+}
+
+/// The paper's reduced-range variant: L = 5.
+pub fn mip2q_l5() -> Cost {
+    barrel_shifter(8, 5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::multiplier::int8x8;
+
+    #[test]
+    fn shifter_much_smaller_than_multiplier() {
+        // The strength-reduction premise: a shifter lane is a fraction of
+        // a multiplier lane.
+        let r = mip2q_l7().area / int8x8().area;
+        assert!((0.15..0.45).contains(&r), "area ratio {}", r);
+    }
+
+    #[test]
+    fn l5_smaller_than_l7() {
+        assert!(mip2q_l5().area < mip2q_l7().area);
+    }
+
+    #[test]
+    fn shifter_energy_fraction_far_below_multiplier() {
+        let mul = int8x8();
+        let shf = mip2q_l7();
+        assert!(shf.energy < 0.15 * mul.energy, "shift {} vs mul {}", shf.energy, mul.energy);
+    }
+
+    #[test]
+    fn stage_counts() {
+        // L=1 → 1 stage, L=3 → 2, L=5..7 → 3.
+        assert_eq!((1u32 + 1).next_power_of_two().trailing_zeros(), 1);
+        assert_eq!((3u32 + 1).next_power_of_two().trailing_zeros(), 2);
+        assert_eq!((5u32 + 1).next_power_of_two().trailing_zeros(), 3);
+        assert_eq!((7u32 + 1).next_power_of_two().trailing_zeros(), 3);
+    }
+}

@@ -1,0 +1,42 @@
+//! # StruM-DPU — Structured Mixed Precision for Efficient DL Hardware Codesign
+//!
+//! Full-system reproduction of *StruM* (Wu et al., Intel, 2025): a
+//! post-training structured mixed-precision weight quantization scheme
+//! (DLIQ / MIP2Q) co-designed with the FlexNN DNN accelerator.
+//!
+//! The crate is the Layer-3 (coordinator) half of a three-layer stack:
+//!
+//! * **Layer 1** — Pallas kernel (`python/compile/kernels/strum_matmul.py`):
+//!   the StruM mixed-precision GEMM, lowered AOT to HLO text.
+//! * **Layer 2** — JAX models (`python/compile/model.py`): mini-CNN zoo
+//!   forward passes with weights-as-arguments, lowered AOT to HLO text.
+//! * **Layer 3** — this crate: quantizer, weight codec, FlexNN cycle
+//!   simulator, gate-level hardware cost model, PJRT runtime, and a
+//!   batching inference coordinator. Python is never on the request path.
+//!
+//! ## Module map
+//!
+//! | module | paper section | contents |
+//! |---|---|---|
+//! | [`quant`] | §IV-A..C | block division, DLIQ, MIP2Q, structured sparsity, INT8 calibration |
+//! | [`encode`] | §IV-D.1 | mask-header + payload weight codec, Eq. 1/2 compression ratios |
+//! | [`hw`] | §V, §VII-B | gate-level area/power cost model (multipliers, barrel shifters, PEs, DPU) |
+//! | [`sim`] | §V | cycle-level FlexNN DPU simulator with StruM routing + sparsity find-first |
+//! | [`model`] | §VI | network graph, mini zoo metadata, artifact import, top-1 evaluation |
+//! | [`runtime`] | — | PJRT CPU client wrapper: load HLO text, compile, execute |
+//! | [`coordinator`] | — | batching inference service over the runtime |
+//! | [`report`] | §VII | regenerators for Table I and Figs. 10–13 + ablations |
+//! | [`util`] | — | in-tree substrates: JSON, PRNG, stats, CLI, threadpool, bench harness |
+
+pub mod coordinator;
+pub mod encode;
+pub mod hw;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,406 @@
+//! `strum` — the StruM-DPU command-line coordinator.
+//!
+//! Subcommands:
+//!   quantize   Apply a StruM transform to a network; print stats + codec checks
+//!   eval       Top-1 accuracy of a (net, method, p) point through PJRT
+//!   sim        Cycle-simulate a network on the FlexNN DPU model
+//!   hw         Hardware cost model summary (PE variants)
+//!   report     Regenerate paper artifacts: table1 | fig10 | fig11 | fig12 | fig13 | ablation | all
+//!   serve      Run the batching inference coordinator under synthetic load
+//!   selfcheck  Runtime round-trip (HLO load/execute) sanity check
+//!
+//! Global flags: --artifacts DIR (default ./artifacts), plus per-command
+//! flags listed in each `usage` string.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use strum_dpu::coordinator::{Coordinator, CoordinatorOptions, Router};
+use strum_dpu::encode::{decode_layer, encode_layer};
+use strum_dpu::encode::compression::ratio_for;
+use strum_dpu::hw::power::Activity;
+use strum_dpu::model::eval::{transform_network, EvalConfig};
+use strum_dpu::model::import::{DataSet, NetWeights};
+use strum_dpu::model::zoo;
+use strum_dpu::quant::Method;
+use strum_dpu::report::{ablation, fig10, fig11, fig12, fig13, table1, EvalCtx};
+use strum_dpu::runtime::Runtime;
+use strum_dpu::sim::config::SimConfig;
+use strum_dpu::sim::driver::simulate_network;
+use strum_dpu::sim::SimMode;
+use strum_dpu::util::cli::Args;
+use strum_dpu::util::json::Json;
+use strum_dpu::util::prng::Rng;
+use strum_dpu::Result;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = raw.first().cloned().unwrap_or_else(|| "help".into());
+    let args = Args::parse(&raw[1.min(raw.len())..]);
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {:#}", e);
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str("artifacts", "artifacts"))
+}
+
+fn parse_method(args: &Args) -> Result<Method> {
+    let name = args.str("method", "mip2q-L7");
+    Method::parse(&name).ok_or_else(|| anyhow::anyhow!("unknown method '{}'", name))
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "quantize" => cmd_quantize(args),
+        "eval" => cmd_eval(args),
+        "sim" => cmd_sim(args),
+        "hw" => cmd_hw(args),
+        "report" => cmd_report(args),
+        "serve" => cmd_serve(args),
+        "selfcheck" => cmd_selfcheck(args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "strum — StruM structured mixed precision DPU coordinator\n\
+         usage: strum <quantize|eval|sim|hw|report|serve|selfcheck> [flags]\n\
+         common: --artifacts DIR --net NAME --method {{baseline|sparsity|dliq-qN|mip2q-LN}} --p F\n\
+         report: strum report <table1|fig10|fig11|fig12|fig13|ablation|all> [--limit N] [--out FILE]\n\
+         serve:  strum serve --net N --requests 2000 --rate 500 [--max-wait-ms 4]"
+    );
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let net = args.str("net", zoo::SWEEP_NET);
+    let method = parse_method(args)?;
+    let p = args.f64("p", 0.5);
+    let cfg = EvalConfig {
+        block: (args.usize("l", 1), args.usize("w", 16)),
+        ..EvalConfig::paper(method, p)
+    };
+    let weights = NetWeights::load(&dir, &net)?;
+    let transformed = transform_network(&weights, &cfg)?;
+    println!(
+        "{:<10} {:>9} {:>7} {:>9} {:>10} {:>10} {:>9}",
+        "layer", "elems", "p_meas", "rmse", "enc_bits", "ratio", "eq_ratio"
+    );
+    let mut total_bits = 0usize;
+    let mut total_elems = 0usize;
+    for s in &transformed {
+        s.check_structure().map_err(|e| anyhow::anyhow!(e))?;
+        let enc = encode_layer(s);
+        let dec = decode_layer(&enc)?;
+        anyhow::ensure!(dec.values == s.values, "codec roundtrip mismatch");
+        println!(
+            "{:<10} {:>9} {:>7.3} {:>9.3} {:>10} {:>10.4} {:>9.4}",
+            s.name,
+            s.len(),
+            s.measured_p(),
+            s.grid_rmse,
+            enc.bits,
+            enc.measured_ratio(),
+            ratio_for(method, p),
+        );
+        total_bits += enc.bits;
+        total_elems += enc.padded_elems();
+    }
+    println!(
+        "TOTAL {} weights, encoded {:.1} KiB, overall ratio {:.4}",
+        total_elems,
+        total_bits as f64 / 8.0 / 1024.0,
+        total_bits as f64 / (8.0 * total_elems as f64)
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let net = args.str("net", zoo::SWEEP_NET);
+    let method = parse_method(args)?;
+    let p = args.f64("p", 0.5);
+    let rt = Runtime::cpu()?;
+    let data = DataSet::load(&dir, "eval")?;
+    let cfg = EvalConfig {
+        block: (args.usize("l", 1), args.usize("w", 16)),
+        act_quant: !args.flag("no-act-quant"),
+        batch: args.usize("batch", 256),
+        limit: args.opt_str("limit").and_then(|s| s.parse().ok()),
+        unstructured: args.flag("unstructured"),
+        ..EvalConfig::paper(method, p)
+    };
+    let r = strum_dpu::model::eval::evaluate(&rt, &dir, &net, &data, &cfg)?;
+    println!(
+        "net={} method={} p={} block=[{},{}] n={}  top1={:.2}%  mean_rmse={:.3}",
+        r.net,
+        method.name(),
+        r.p,
+        cfg.block.0,
+        cfg.block.1,
+        r.n,
+        r.top1 * 100.0,
+        r.mean_rmse
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let net = args.str("net", zoo::SWEEP_NET);
+    let method = parse_method(args)?;
+    let p = args.f64("p", 0.5);
+    let mode = match args.str("mode", "strum-static").as_str() {
+        "int8-dense" => SimMode::Int8Dense,
+        "sparse" => SimMode::SparseFindFirst,
+        "strum-static" => SimMode::StrumStatic,
+        "strum-dynamic" => SimMode::StrumDynamic,
+        "strum-perf" => SimMode::StrumPerf,
+        m => anyhow::bail!("unknown mode {}", m),
+    };
+    let weights = NetWeights::load(&dir, &net)?;
+    let cfg = EvalConfig::paper(method, p);
+    let transformed = transform_network(&weights, &cfg)?;
+    let layers: Vec<_> = weights
+        .manifest
+        .layers
+        .iter()
+        .zip(transformed)
+        .map(|(lm, s)| (lm.shape_for_sim(), s))
+        .collect();
+    let sim_cfg = SimConfig::flexnn(mode, Some(method));
+    let density = args.f64("act-density", 0.7);
+    let (sims, agg) = simulate_network(&layers, &sim_cfg, density, 42);
+    println!(
+        "{:<10} {:>12} {:>12} {:>8} {:>12} {:>12}",
+        "layer", "cycles", "ideal", "util", "mult_ops", "low_ops"
+    );
+    for s in &sims {
+        println!(
+            "{:<10} {:>12} {:>12} {:>8.3} {:>12} {:>12}",
+            s.name, s.cycles, s.ideal_cycles, s.utilization, s.mult_ops, s.low_ops
+        );
+    }
+    let cfg_hw = strum_dpu::hw::dpu::DpuConfig::flexnn_16x16();
+    let variant = match mode {
+        SimMode::StrumStatic => strum_dpu::hw::PeVariant::StaticMip2q { l_max: 7 },
+        SimMode::StrumDynamic => strum_dpu::hw::PeVariant::DynamicMip2q { l_max: 7 },
+        _ => strum_dpu::hw::PeVariant::BaselineInt8,
+    };
+    let pr = strum_dpu::hw::power::power(variant, &agg, &cfg_hw);
+    println!(
+        "TOTAL cycles={}  mode={}  power/cycle: PE {:.0}  array {:.0}  DPU {:.0}",
+        agg.cycles,
+        mode.name(),
+        pr.pe_level(),
+        pr.array_level(),
+        pr.dpu_level()
+    );
+    Ok(())
+}
+
+fn cmd_hw(_args: &Args) -> Result<()> {
+    let (_, _) = fig13::run(None);
+    println!();
+    ablation::dliq_vs_mip2q_pe();
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let which = args.positional.first().cloned().unwrap_or_else(|| "all".into());
+    let dir = artifacts_dir(args);
+    let limit = args.opt_str("limit").and_then(|s| s.parse().ok());
+    let rt = Runtime::cpu()?;
+    let ctx = EvalCtx::new(&rt, &dir, limit)?;
+    let net = args.str("net", zoo::SWEEP_NET);
+    let mut out = Vec::new();
+
+    if which == "table1" || which == "all" {
+        println!("{}", table1::header());
+        let nets = zoo::net_names();
+        let (rows, json) = table1::run(&ctx, &nets)?;
+        for n in table1::shape_check(&rows) {
+            println!("  note: {}", n);
+        }
+        out.push(("table1", json));
+    }
+    if which == "fig10" || which == "all" {
+        let (_, json) = fig10::run(&ctx, &net)?;
+        out.push(("fig10", json));
+    }
+    if which == "fig11" || which == "all" {
+        let (_, json) = fig11::run(&ctx, &net)?;
+        out.push(("fig11", json));
+    }
+    if which == "fig12" || which == "all" {
+        let (_, json) = fig12::run(&ctx, &net)?;
+        out.push(("fig12", json));
+    }
+    if which == "fig13" || which == "all" {
+        // Analytic dense activity + the sim-driven variant on a real net.
+        let (rows, json) = fig13::run(None);
+        for n in fig13::paper_bands(&rows) {
+            println!("  {}", n);
+        }
+        out.push(("fig13", json));
+        let weights = NetWeights::load(&dir, &net)?;
+        let cfg = EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5);
+        let transformed = transform_network(&weights, &cfg)?;
+        let layers: Vec<_> = weights
+            .manifest
+            .layers
+            .iter()
+            .zip(transformed)
+            .map(|(lm, s)| (lm.shape_for_sim(), s))
+            .collect();
+        let (_, agg) = simulate_network(
+            &layers,
+            &SimConfig::flexnn(SimMode::StrumStatic, Some(Method::Mip2q { l_max: 7 })),
+            0.7,
+            42,
+        );
+        println!("\nFig 13 (sim-driven activity from {} conv layers):", net);
+        let (rows2, json2) = fig13::run(Some(&agg));
+        for n in fig13::paper_bands(&rows2) {
+            println!("  {}", n);
+        }
+        out.push(("fig13_sim", json2));
+        let _ = Activity::default();
+    }
+    if which == "ablation" || which == "all" {
+        let j1 = ablation::block_shape_invariance(&ctx, &net)?;
+        let j2 = ablation::slowest_pe_balance(&dir, &net)?;
+        let j3 = ablation::dliq_vs_mip2q_pe();
+        out.push(("ablation_block_shape", j1));
+        out.push(("ablation_slowest_pe", j2));
+        out.push(("ablation_dliq_pe", j3));
+    }
+
+    if let Some(path) = args.opt_str("out") {
+        let json = Json::Obj(
+            out.into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        );
+        std::fs::write(&path, json.to_string_pretty())?;
+        println!("wrote {}", path);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let net = args.str("net", zoo::SWEEP_NET);
+    let method = parse_method(args)?;
+    let p = args.f64("p", 0.5);
+    let n_requests = args.usize("requests", 1000);
+    let rate = args.f64("rate", 400.0);
+    let rt = Arc::new(Runtime::cpu()?);
+    println!("platform: {}", rt.platform());
+    let mut router = Router::new(rt);
+    let key = format!("{}:{}:p{}", net, method.name(), p);
+    let cfg = EvalConfig::paper(method, p);
+    let variant = router.register(&key, &dir, &net, &cfg)?;
+    println!(
+        "registered {} (batches: {:?})",
+        key,
+        variant.executables.iter().map(|(b, _)| *b).collect::<Vec<_>>()
+    );
+    let coord = Coordinator::start(
+        variant,
+        CoordinatorOptions {
+            max_wait: Duration::from_millis(args.usize("max-wait-ms", 4) as u64),
+            workers: args.usize("workers", 2),
+            max_batch: args.opt_str("max-batch").and_then(|s| s.parse().ok()),
+        },
+    );
+    // Synthetic open-loop load: Poisson arrivals at `rate` req/s.
+    let data = DataSet::load(&dir, "eval")?;
+    let mut rng = Rng::new(7);
+    let px = data.img * data.img * 3;
+    let mut pending = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut next = 0.0f64;
+    for i in 0..n_requests {
+        next += rng.exponential(rate);
+        let target = Duration::from_secs_f64(next);
+        if let Some(d) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(d);
+        }
+        let idx = i % data.n;
+        pending.push((idx, coord.submit(data.images[idx * px..(idx + 1) * px].to_vec())));
+    }
+    let mut correct = 0usize;
+    for (idx, rx) in pending {
+        let reply = rx
+            .recv_timeout(Duration::from_secs(30))
+            .map_err(|_| anyhow::anyhow!("reply timeout"))??;
+        if reply.class as i32 == data.labels[idx] {
+            correct += 1;
+        }
+    }
+    println!("{}", coord.metrics_report());
+    println!(
+        "accuracy over served requests: {:.2}%",
+        correct as f64 / n_requests as f64 * 100.0
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+    // Integer StruM microkernel: rust-side decomposition vs HLO result.
+    let exe = rt.load_hlo(&dir.join("hlo/strum_matmul_int.hlo.txt"))?;
+    let (m, k, n) = (64usize, 256usize, 64usize);
+    let mut rng = Rng::new(1);
+    let x: Vec<i32> = (0..m * k).map(|_| rng.range(0, 255) as i32 - 127).collect();
+    let hi: Vec<i32> = (0..k * n)
+        .map(|_| if rng.chance(0.5) { rng.range(0, 255) as i32 - 127 } else { 0 })
+        .collect();
+    let lo: Vec<i32> = hi
+        .iter()
+        .map(|&h| {
+            if h == 0 {
+                let s = if rng.chance(0.5) { -1 } else { 1 };
+                s * (1 << rng.range(0, 8))
+            } else {
+                0
+            }
+        })
+        .collect();
+    let out = exe.run_i32(&[
+        strum_dpu::runtime::Tensor::i32(x.clone(), &[m, k]),
+        strum_dpu::runtime::Tensor::i32(hi.clone(), &[k, n]),
+        strum_dpu::runtime::Tensor::i32(lo.clone(), &[k, n]),
+    ])?;
+    // Host reference.
+    let mut expect = vec![0i64; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let xv = x[i * k + kk] as i64;
+            for j in 0..n {
+                expect[i * n + j] += xv * (hi[kk * n + j] + lo[kk * n + j]) as i64;
+            }
+        }
+    }
+    for (a, b) in out[0].iter().zip(expect.iter()) {
+        anyhow::ensure!(*a as i64 == *b, "kernel mismatch: {} vs {}", a, b);
+    }
+    println!("strum_matmul_int HLO matches host reference bit-for-bit ({}x{}x{})", m, k, n);
+    Ok(())
+}

@@ -1,0 +1,197 @@
+//! Top-1 accuracy evaluation of StruM-transformed networks through the
+//! PJRT runtime (the §VI/§VII-A software evaluation, ImageNet → the
+//! synthetic eval split per DESIGN.md §1).
+//!
+//! The AOT-lowered forward takes weights as arguments, so evaluation is:
+//! calibrate INT8 → StruM transform → dequantize → hand the float weights
+//! to the executable. The classifier head receives the StruM two-bank
+//! decomposition (hi = mask·w, lo = (1−mask)·w) and multiplies through
+//! the Pallas kernel — the same decomposition the hardware's mask header
+//! drives (§IV-D.2).
+
+use super::import::{from_canonical, DataSet, NetWeights};
+use crate::quant::{apply_strum, apply_unstructured, Method, StrumLayer, StrumParams};
+use crate::runtime::executable::argmax_rows;
+use crate::runtime::{Runtime, Tensor};
+use crate::Result;
+use anyhow::anyhow;
+use std::path::Path;
+
+/// Evaluation configuration for one (net, method, p) point.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalConfig {
+    pub method: Method,
+    pub p: f64,
+    /// Block shape (l, w); the paper's hardware point is (1, 16).
+    pub block: (usize, usize),
+    /// Fake-quantize activations with the calibrated scales (the INT8
+    /// baseline always does; float eval sets this false).
+    pub act_quant: bool,
+    /// Batch size — must match an exported HLO (`<net>_b<batch>.hlo.txt`).
+    pub batch: usize,
+    /// Evaluate at most this many samples (None = full split).
+    pub limit: Option<usize>,
+    /// Ablation: ignore the block structure (layer-global low set).
+    pub unstructured: bool,
+}
+
+impl EvalConfig {
+    pub fn paper(method: Method, p: f64) -> EvalConfig {
+        EvalConfig {
+            method,
+            p,
+            block: (1, 16),
+            act_quant: true,
+            batch: 256,
+            limit: None,
+            unstructured: false,
+        }
+    }
+}
+
+/// Result of one evaluation run.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub net: String,
+    pub method: Method,
+    pub p: f64,
+    pub top1: f64,
+    pub n: usize,
+    /// Mean per-layer int-grid RMSE of the transform (diagnostic).
+    pub mean_rmse: f64,
+}
+
+/// Applies the configured transform to every quantizable layer.
+pub fn transform_network(weights: &NetWeights, cfg: &EvalConfig) -> Result<Vec<StrumLayer>> {
+    let layers = weights.quant_layers()?;
+    Ok(layers
+        .iter()
+        .map(|l| {
+            if cfg.unstructured {
+                apply_unstructured(l, cfg.method, cfg.p)
+            } else {
+                apply_strum(
+                    l,
+                    &StrumParams::new(cfg.method, cfg.block.0, cfg.block.1, cfg.p),
+                )
+            }
+        })
+        .collect())
+}
+
+/// Builds the static (non-image) argument list: act_scales + weights in
+/// manifest order, with the fc weight expanded into the two StruM banks.
+pub fn prepare_args(
+    weights: &NetWeights,
+    transformed: &[StrumLayer],
+    act_quant: bool,
+) -> Result<Vec<Tensor>> {
+    let m = &weights.manifest;
+    let scales: Vec<f32> = if act_quant {
+        m.act_scales.clone()
+    } else {
+        vec![0.0; m.act_scales.len()]
+    };
+    let mut args = vec![Tensor::f32(scales.clone(), &[scales.len()])];
+    let layer_idx = |name: &str| {
+        m.layers
+            .iter()
+            .position(|l| l.name == name)
+            .ok_or_else(|| anyhow!("no layer {}", name))
+    };
+    for pm in &m.params {
+        let (_, raw) = weights.param(&pm.name)?;
+        if let Some(lname) = pm.name.strip_suffix("_w") {
+            let li = layer_idx(lname)?;
+            let s = &transformed[li];
+            let deq = s.dequantize();
+            if lname == "fc" {
+                // Two banks: hi = mask-selected, lo = complement.
+                let hi: Vec<f32> = deq
+                    .iter()
+                    .zip(s.mask.iter())
+                    .map(|(&v, &m)| if m { v } else { 0.0 })
+                    .collect();
+                let lo: Vec<f32> = deq
+                    .iter()
+                    .zip(s.mask.iter())
+                    .map(|(&v, &m)| if m { 0.0 } else { v })
+                    .collect();
+                args.push(Tensor::f32(from_canonical(&hi, &pm.shape)?, &pm.shape));
+                args.push(Tensor::f32(from_canonical(&lo, &pm.shape)?, &pm.shape));
+            } else {
+                args.push(Tensor::f32(from_canonical(&deq, &pm.shape)?, &pm.shape));
+            }
+        } else {
+            // Bias (or other non-quantized param): pass through as-is.
+            args.push(Tensor::f32(raw.to_vec(), &pm.shape));
+        }
+    }
+    Ok(args)
+}
+
+/// Runs top-1 evaluation of a (net, transform) point.
+pub fn evaluate(
+    rt: &Runtime,
+    artifacts: &Path,
+    net: &str,
+    data: &DataSet,
+    cfg: &EvalConfig,
+) -> Result<EvalResult> {
+    let weights = NetWeights::load(artifacts, net)?;
+    let transformed = transform_network(&weights, cfg)?;
+    let mean_rmse = if transformed.is_empty() {
+        0.0
+    } else {
+        transformed.iter().map(|s| s.grid_rmse).sum::<f64>() / transformed.len() as f64
+    };
+    let static_args = prepare_args(&weights, &transformed, cfg.act_quant)?;
+    let exe = rt.load_hlo(&artifacts.join(format!("hlo/{}_b{}.hlo.txt", net, cfg.batch)))?;
+
+    let classes = weights.manifest.num_classes;
+    let px = data.img * data.img * 3;
+    let total = cfg.limit.unwrap_or(data.n).min(data.n);
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let mut start = 0usize;
+    while start < total {
+        let (imgs, real) = data.batch(start, cfg.batch);
+        let real = real.min(total - start);
+        let mut args = Vec::with_capacity(static_args.len() + 1);
+        args.push(Tensor::f32(imgs, &[cfg.batch, data.img, data.img, 3]));
+        args.extend(static_args.iter().cloned());
+        let out = exe.run_f32(&args)?;
+        let logits = &out[0];
+        debug_assert_eq!(logits.len(), cfg.batch * classes);
+        let preds = argmax_rows(logits, classes);
+        for i in 0..real {
+            if preds[i] as i32 == data.labels[start + i] {
+                correct += 1;
+            }
+        }
+        seen += real;
+        start += cfg.batch;
+        let _ = px;
+    }
+    Ok(EvalResult {
+        net: net.to_string(),
+        method: cfg.method,
+        p: cfg.p,
+        top1: correct as f64 / seen.max(1) as f64,
+        n: seen,
+        mean_rmse,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_config_paper_defaults() {
+        let c = EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5);
+        assert_eq!(c.block, (1, 16));
+        assert!(c.act_quant);
+        assert_eq!(c.batch, 256);
+    }
+}

@@ -1,0 +1,377 @@
+//! Artifact import: manifests (JSON), weight blobs, datasets, and the
+//! HWIO ↔ canonical layout transforms.
+//!
+//! Layouts: JAX conv kernels are HWIO `(kh, kw, ic, oc)`; FC weights are
+//! `(in, out)`. The quantizer's canonical layout is per-OC matrices
+//! `[oc][rows = kh·kw][cols = ic]` — the depth-first order the paper's
+//! hardware consumes (§IV-B). `to_canonical`/`from_canonical` here mirror
+//! `python/compile/quantize.py` exactly.
+
+use crate::quant::tensor::QLayer;
+use crate::quant::{calibrate_layer, CalibMethod};
+use crate::sim::dataflow::LayerShape;
+use crate::util::json::Json;
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::path::Path;
+
+/// One quantizable layer's metadata (from the manifest).
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub name: String,
+    pub kind: String, // "conv" | "fc"
+    pub kh: usize,
+    pub kw: usize,
+    pub ic: usize,
+    pub oc: usize,
+    pub oh: usize,
+    pub ow: usize,
+}
+
+impl LayerMeta {
+    pub fn shape_for_sim(&self) -> LayerShape {
+        LayerShape {
+            name: self.name.clone(),
+            oc: self.oc,
+            ic: self.ic,
+            kh: self.kh,
+            kw: self.kw,
+            oh: self.oh,
+            ow: self.ow,
+        }
+    }
+    pub fn weight_elems(&self) -> usize {
+        self.kh * self.kw * self.ic * self.oc
+    }
+}
+
+/// One parameter tensor's location in the weight blob.
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Parsed `weights/<net>.json`.
+#[derive(Debug, Clone)]
+pub struct NetManifest {
+    pub net: String,
+    pub num_classes: usize,
+    pub eval_top1_float: f64,
+    pub act_scales: Vec<f32>,
+    pub layers: Vec<LayerMeta>,
+    pub params: Vec<ParamMeta>,
+}
+
+impl NetManifest {
+    pub fn parse(text: &str) -> Result<NetManifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {}", e))?;
+        let get_s = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("missing {}", k))?
+                .to_string())
+        };
+        let layers = j
+            .get("layers")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("missing layers"))?
+            .iter()
+            .map(|l| {
+                let u = |k: &str| l.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+                LayerMeta {
+                    name: l.get("name").and_then(|v| v.as_str()).unwrap_or("?").into(),
+                    kind: l.get("kind").and_then(|v| v.as_str()).unwrap_or("conv").into(),
+                    kh: u("kh"),
+                    kw: u("kw"),
+                    ic: u("ic"),
+                    oc: u("oc"),
+                    oh: u("oh"),
+                    ow: u("ow"),
+                }
+            })
+            .collect();
+        let params = j
+            .get("params")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("missing params"))?
+            .iter()
+            .map(|p| ParamMeta {
+                name: p.get("name").and_then(|v| v.as_str()).unwrap_or("?").into(),
+                shape: p
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default(),
+                offset: p.get("offset").and_then(|v| v.as_usize()).unwrap_or(0),
+                len: p.get("len").and_then(|v| v.as_usize()).unwrap_or(0),
+            })
+            .collect();
+        Ok(NetManifest {
+            net: get_s("net")?,
+            num_classes: j.get("num_classes").and_then(|v| v.as_usize()).unwrap_or(0),
+            eval_top1_float: j
+                .get("eval_top1_float")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(f64::NAN),
+            act_scales: j
+                .get("act_scales")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect())
+                .unwrap_or_default(),
+            layers,
+            params,
+        })
+    }
+}
+
+/// A network's float weights + manifest.
+#[derive(Debug, Clone)]
+pub struct NetWeights {
+    pub manifest: NetManifest,
+    /// Concatenated f32 parameter blob (manifest order).
+    pub blob: Vec<f32>,
+}
+
+impl NetWeights {
+    /// Loads `<dir>/weights/<net>.{json,bin}`.
+    pub fn load(artifacts: &Path, net: &str) -> Result<NetWeights> {
+        let mpath = artifacts.join("weights").join(format!("{}.json", net));
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {}", mpath.display()))?;
+        let manifest = NetManifest::parse(&text)?;
+        let bpath = artifacts.join("weights").join(format!("{}.bin", net));
+        let blob = read_f32(&bpath)?;
+        let expect: usize = manifest.params.iter().map(|p| p.len).sum();
+        if blob.len() != expect {
+            return Err(anyhow!("blob len {} != manifest {}", blob.len(), expect));
+        }
+        Ok(NetWeights { manifest, blob })
+    }
+
+    /// Raw f32 slice of a named parameter.
+    pub fn param(&self, name: &str) -> Result<(&ParamMeta, &[f32])> {
+        let p = self
+            .manifest
+            .params
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow!("no param {}", name))?;
+        Ok((p, &self.blob[p.offset..p.offset + p.len]))
+    }
+
+    /// A layer's weight tensor, calibrated to INT8 in canonical layout.
+    pub fn canonical_layer(&self, layer: &LayerMeta) -> Result<QLayer> {
+        let (pm, data) = self.param(&format!("{}_w", layer.name))?;
+        let canon = to_canonical(data, &pm.shape)?;
+        Ok(calibrate_layer(
+            &layer.name,
+            layer.oc,
+            layer.kh * layer.kw,
+            layer.ic,
+            &canon,
+            CalibMethod::MinMax,
+        ))
+    }
+
+    /// As [`canonical_layer`] but without calibration (float canonical).
+    pub fn canonical_f32(&self, layer: &LayerMeta) -> Result<Vec<f32>> {
+        let (pm, data) = self.param(&format!("{}_w", layer.name))?;
+        to_canonical(data, &pm.shape)
+    }
+
+    /// All quantizable layers as calibrated [`QLayer`]s (manifest order).
+    pub fn quant_layers(&self) -> Result<Vec<QLayer>> {
+        self.manifest
+            .layers
+            .iter()
+            .map(|l| self.canonical_layer(l))
+            .collect()
+    }
+}
+
+/// HWIO `(kh,kw,ic,oc)` or `(in,out)` → canonical `[oc][kh·kw][ic]` flat.
+pub fn to_canonical(data: &[f32], shape: &[usize]) -> Result<Vec<f32>> {
+    match shape {
+        [kh, kw, ic, oc] => {
+            let (kh, kw, ic, oc) = (*kh, *kw, *ic, *oc);
+            let mut out = vec![0f32; data.len()];
+            for h in 0..kh {
+                for w in 0..kw {
+                    for i in 0..ic {
+                        for o in 0..oc {
+                            let src = ((h * kw + w) * ic + i) * oc + o;
+                            let dst = (o * (kh * kw) + h * kw + w) * ic + i;
+                            out[dst] = data[src];
+                        }
+                    }
+                }
+            }
+            Ok(out)
+        }
+        [cin, cout] => {
+            let (cin, cout) = (*cin, *cout);
+            let mut out = vec![0f32; data.len()];
+            for i in 0..cin {
+                for o in 0..cout {
+                    out[o * cin + i] = data[i * cout + o];
+                }
+            }
+            Ok(out)
+        }
+        s => Err(anyhow!("unsupported weight shape {:?}", s)),
+    }
+}
+
+/// Canonical flat `[oc][kh·kw][ic]` → original HWIO / `(in,out)` layout.
+pub fn from_canonical(canon: &[f32], shape: &[usize]) -> Result<Vec<f32>> {
+    match shape {
+        [kh, kw, ic, oc] => {
+            let (kh, kw, ic, oc) = (*kh, *kw, *ic, *oc);
+            let mut out = vec![0f32; canon.len()];
+            for h in 0..kh {
+                for w in 0..kw {
+                    for i in 0..ic {
+                        for o in 0..oc {
+                            let dst = ((h * kw + w) * ic + i) * oc + o;
+                            let src = (o * (kh * kw) + h * kw + w) * ic + i;
+                            out[dst] = canon[src];
+                        }
+                    }
+                }
+            }
+            Ok(out)
+        }
+        [cin, cout] => {
+            let (cin, cout) = (*cin, *cout);
+            let mut out = vec![0f32; canon.len()];
+            for i in 0..cin {
+                for o in 0..cout {
+                    out[i * cout + o] = canon[o * cin + i];
+                }
+            }
+            Ok(out)
+        }
+        s => Err(anyhow!("unsupported weight shape {:?}", s)),
+    }
+}
+
+/// Evaluation / calibration dataset.
+#[derive(Debug, Clone)]
+pub struct DataSet {
+    pub images: Vec<f32>, // [n, img, img, 3]
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub img: usize,
+}
+
+impl DataSet {
+    /// Loads `<dir>/data/{eval|train}_{x,y}.bin`.
+    pub fn load(artifacts: &Path, split: &str) -> Result<DataSet> {
+        let mtext = std::fs::read_to_string(artifacts.join("data/manifest.json"))?;
+        let mj = Json::parse(&mtext).map_err(|e| anyhow!("data manifest: {}", e))?;
+        let img = mj.get("img").and_then(|v| v.as_usize()).unwrap_or(32);
+        let images = read_f32(&artifacts.join(format!("data/{}_x.bin", split)))?;
+        let labels = read_i32(&artifacts.join(format!("data/{}_y.bin", split)))?;
+        let n = labels.len();
+        if images.len() != n * img * img * 3 {
+            return Err(anyhow!("dataset size mismatch"));
+        }
+        Ok(DataSet { images, labels, n, img })
+    }
+
+    /// One batch of images (row range), zero-padded to `batch` rows.
+    pub fn batch(&self, start: usize, batch: usize) -> (Vec<f32>, usize) {
+        let px = self.img * self.img * 3;
+        let real = batch.min(self.n.saturating_sub(start));
+        let mut out = vec![0f32; batch * px];
+        out[..real * px].copy_from_slice(&self.images[start * px..(start + real) * px]);
+        (out, real)
+    }
+}
+
+fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_i32(path: &Path) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_roundtrip_conv() {
+        let shape = vec![3, 3, 5, 7];
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let canon = to_canonical(&data, &shape).unwrap();
+        let back = from_canonical(&canon, &shape).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn canonical_roundtrip_fc() {
+        let shape = vec![48, 12];
+        let data: Vec<f32> = (0..576).map(|i| i as f32 * 0.5).collect();
+        let canon = to_canonical(&data, &shape).unwrap();
+        let back = from_canonical(&canon, &shape).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn canonical_semantics_conv() {
+        // HWIO element (h,w,i,o) lands at canonical [o][h*kw+w][i].
+        let (kh, kw, ic, oc) = (2usize, 2, 3, 4);
+        let shape = vec![kh, kw, ic, oc];
+        let mut data = vec![0f32; kh * kw * ic * oc];
+        // Mark element (h=1, w=0, i=2, o=3).
+        data[((1 * kw + 0) * ic + 2) * oc + 3] = 42.0;
+        let canon = to_canonical(&data, &shape).unwrap();
+        let rows = kh * kw;
+        assert_eq!(canon[(3 * rows + (1 * kw + 0)) * ic + 2], 42.0);
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{
+            "net": "t", "num_classes": 12, "eval_top1_float": 0.93,
+            "act_scales": [0.1, 0.2],
+            "layers": [{"name":"c0","kind":"conv","kh":3,"kw":3,"ic":3,"oc":16,"oh":32,"ow":32}],
+            "params": [{"name":"c0_w","shape":[3,3,3,16],"offset":0,"len":432}]
+        }"#;
+        let m = NetManifest::parse(text).unwrap();
+        assert_eq!(m.net, "t");
+        assert_eq!(m.layers[0].oc, 16);
+        assert_eq!(m.params[0].len, 432);
+        assert_eq!(m.act_scales.len(), 2);
+        assert_eq!(m.layers[0].shape_for_sim().dot_len(), 27);
+    }
+
+    #[test]
+    fn dataset_batch_pads() {
+        let ds = DataSet {
+            images: vec![1.0; 2 * 4 * 4 * 3],
+            labels: vec![0, 1],
+            n: 2,
+            img: 4,
+        };
+        let (batch, real) = ds.batch(1, 4);
+        assert_eq!(real, 1);
+        assert_eq!(batch.len(), 4 * 48);
+        assert!(batch[..48].iter().all(|&v| v == 1.0));
+        assert!(batch[48..].iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,17 @@
+//! Network artifacts: manifests, weights, datasets, and top-1 evaluation.
+//!
+//! The build path (`make train && make artifacts`) produces, per network:
+//! a weight blob + JSON manifest (`artifacts/weights/<net>.{bin,json}`)
+//! and AOT-lowered forwards (`artifacts/hlo/<net>_b<batch>.hlo.txt`) whose
+//! arguments are `(images, act_scales, w0, b0, ..., fc_w_hi, fc_w_lo,
+//! fc_b)`. This module loads those artifacts ([`import`]), exposes the
+//! quantizable layers in the crate's canonical `[oc][rows][cols]` layout
+//! ([`import::NetWeights::canonical_layer`]), and evaluates top-1 accuracy
+//! of any StruM-transformed weight set through the PJRT runtime ([`eval`]).
+
+pub mod eval;
+pub mod import;
+pub mod zoo;
+
+pub use import::{DataSet, NetManifest, NetWeights};
+pub use zoo::ZOO_NETS;

@@ -1,0 +1,51 @@
+//! The mini-CNN zoo roster (must match `python/compile/nets.py`).
+//!
+//! The table below maps each mini network to the Table-I family it stands
+//! in for (DESIGN.md §1: the substitution preserves the per-family weight
+//! statistics StruM's accuracy behaviour depends on).
+
+/// (net name, paper family it substitutes).
+pub const ZOO_NETS: &[(&str, &str)] = &[
+    ("mini_vgg_a", "VGG16"),
+    ("mini_vgg_b", "VGG19"),
+    ("mini_vgg_c", "VGG (wide)"),
+    ("mini_resnet_a", "Resnet-50 v1.5"),
+    ("mini_resnet_b", "Resnet-101"),
+    ("mini_resnet_c", "Resnet-152"),
+    ("mini_incept_a", "Inception V1"),
+    ("mini_incept_b", "Inception V3"),
+    ("mini_darknet", "Darknet-19"),
+    ("mini_cnn_s", "Inception V2 (small)"),
+];
+
+/// The network used for the Fig. 10 / Fig. 11 single-model sweeps (the
+/// best-trained ResNet-family stand-in).
+pub const SWEEP_NET: &str = "mini_resnet_c";
+
+pub fn net_names() -> Vec<&'static str> {
+    ZOO_NETS.iter().map(|(n, _)| *n).collect()
+}
+
+pub fn family_of(net: &str) -> &'static str {
+    ZOO_NETS
+        .iter()
+        .find(|(n, _)| *n == net)
+        .map(|(_, f)| *f)
+        .unwrap_or("?")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_networks_like_table1() {
+        assert_eq!(ZOO_NETS.len(), 10);
+    }
+
+    #[test]
+    fn sweep_net_is_in_zoo() {
+        assert!(net_names().contains(&SWEEP_NET));
+        assert_eq!(family_of(SWEEP_NET), "Resnet-152");
+    }
+}

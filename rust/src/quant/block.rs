@@ -1,0 +1,205 @@
+//! Hardware-aware block division (§IV-B).
+//!
+//! Each output channel's weight matrix (`rows × cols`, cols = input
+//! channels) is tiled by `[l, w]` blocks: `l` consecutive spatial-tap rows
+//! by `w` consecutive input channels. Ragged edges are zero-padded to the
+//! block grid, mirroring the FlexNN register files' fixed 16-IC granularity
+//! (§VI). Padding lanes carry weight 0, align with zero activation lanes in
+//! hardware, and are assigned to the low-precision set at zero cost.
+
+use super::tensor::{QLayer, StrumLayer};
+
+/// Block shape `[l, w]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockShape {
+    /// Rows per block (spatial-tap direction).
+    pub l: usize,
+    /// Columns per block (input-channel direction).
+    pub w: usize,
+}
+
+impl BlockShape {
+    pub fn elems(&self) -> usize {
+        self.l * self.w
+    }
+}
+
+/// Precomputed block grid over a layer.
+#[derive(Debug, Clone)]
+pub struct BlockLayout {
+    pub shape: BlockShape,
+    pub oc: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// Block-grid dimensions per output channel.
+    pub blocks_r: usize,
+    pub blocks_c: usize,
+}
+
+impl BlockLayout {
+    pub fn new(oc: usize, rows: usize, cols: usize, shape: BlockShape) -> Self {
+        assert!(shape.l > 0 && shape.w > 0, "degenerate block shape");
+        BlockLayout {
+            shape,
+            oc,
+            rows,
+            cols,
+            blocks_r: rows.div_ceil(shape.l),
+            blocks_c: cols.div_ceil(shape.w),
+        }
+    }
+
+    pub fn for_layer(layer: &QLayer, shape: BlockShape) -> Self {
+        Self::new(layer.oc, layer.rows, layer.cols, shape)
+    }
+
+    /// Total number of blocks across all output channels.
+    pub fn num_blocks(&self) -> usize {
+        self.oc * self.blocks_r * self.blocks_c
+    }
+
+    /// Elements per block (including padding lanes).
+    pub fn block_elems(&self) -> usize {
+        self.shape.elems()
+    }
+
+    /// Decomposes a flat block id into (oc, block_row, block_col).
+    #[inline]
+    pub fn block_coords(&self, blk: usize) -> (usize, usize, usize) {
+        let per_oc = self.blocks_r * self.blocks_c;
+        let oc = blk / per_oc;
+        let rem = blk % per_oc;
+        (oc, rem / self.blocks_c, rem % self.blocks_c)
+    }
+
+    /// Iterates the flat element indices of a block in row-major block
+    /// order; `None` marks a padding lane (outside the real matrix).
+    pub fn block_indices(&self, blk: usize) -> impl Iterator<Item = Option<usize>> + '_ {
+        let (oc, br, bc) = self.block_coords(blk);
+        let base_r = br * self.shape.l;
+        let base_c = bc * self.shape.w;
+        let (rows, cols) = (self.rows, self.cols);
+        let oc_base = oc * rows * cols;
+        (0..self.shape.l).flat_map(move |dr| {
+            (0..self.shape.w).map(move |dc| {
+                let (r, c) = (base_r + dr, base_c + dc);
+                if r < rows && c < cols {
+                    Some(oc_base + r * cols + c)
+                } else {
+                    None
+                }
+            })
+        })
+    }
+
+    /// Gathers a block's INT8 values into `vals` (i16-widened) and its flat
+    /// indices into `idxs` (usize::MAX for padding lanes). Buffers must be
+    /// `block_elems()` long.
+    pub fn gather(&self, layer: &QLayer, blk: usize, vals: &mut [i16], idxs: &mut [usize]) {
+        debug_assert_eq!(vals.len(), self.block_elems());
+        for (slot, idx) in self.block_indices(blk).enumerate() {
+            match idx {
+                Some(i) => {
+                    vals[slot] = layer.data[i] as i16;
+                    idxs[slot] = i;
+                }
+                None => {
+                    vals[slot] = 0;
+                    idxs[slot] = usize::MAX;
+                }
+            }
+        }
+    }
+
+    /// Scatters quantized block results back into the output layer
+    /// (padding lanes are skipped).
+    pub fn scatter(
+        &self,
+        out: &mut StrumLayer,
+        _blk: usize,
+        idxs: &[usize],
+        vals: &[i16],
+        codes: &[i8],
+        mask: &[bool],
+    ) {
+        for (slot, &i) in idxs.iter().enumerate() {
+            if i == usize::MAX {
+                continue;
+            }
+            out.values[i] = vals[slot];
+            out.codes[i] = codes[slot];
+            out.mask[i] = mask[slot];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::tensor::qlayer;
+
+    #[test]
+    fn grid_dimensions() {
+        let lay = BlockLayout::new(2, 3, 20, BlockShape { l: 2, w: 8 });
+        assert_eq!(lay.blocks_r, 2); // ceil(3/2)
+        assert_eq!(lay.blocks_c, 3); // ceil(20/8)
+        assert_eq!(lay.num_blocks(), 2 * 2 * 3);
+    }
+
+    #[test]
+    fn indices_cover_layer_exactly_once() {
+        let lay = BlockLayout::new(2, 3, 5, BlockShape { l: 2, w: 2 });
+        let mut seen = vec![0usize; 2 * 3 * 5];
+        let mut pad = 0usize;
+        for blk in 0..lay.num_blocks() {
+            for idx in lay.block_indices(blk) {
+                match idx {
+                    Some(i) => seen[i] += 1,
+                    None => pad += 1,
+                }
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "every element exactly once");
+        // Padded grid: per oc, rows 3→4, cols 5→6 ⇒ 24 slots, 15 real.
+        assert_eq!(pad, 2 * (24 - 15));
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let data: Vec<i8> = (0..30).map(|i| (i as i8) - 15).collect();
+        let layer = qlayer("t", 2, 3, 5, data.clone(), vec![1.0, 1.0]);
+        let shape = BlockShape { l: 2, w: 4 };
+        let lay = BlockLayout::for_layer(&layer, shape);
+        let mut out = StrumLayer::identity(&layer, &crate::quant::StrumParams::new(
+            crate::quant::Method::StructuredSparsity, shape.l, shape.w, 0.0,
+        ));
+        let mut vals = vec![0i16; lay.block_elems()];
+        let mut idxs = vec![0usize; lay.block_elems()];
+        for blk in 0..lay.num_blocks() {
+            lay.gather(&layer, blk, &mut vals, &mut idxs);
+            let codes: Vec<i8> = vals.iter().map(|&v| v as i8).collect();
+            let mask = vec![true; vals.len()];
+            lay.scatter(&mut out, blk, &idxs, &vals, &codes, &mask);
+        }
+        let back: Vec<i8> = out.values.iter().map(|&v| v as i8).collect();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn one_by_w_blocks_are_contiguous_cols() {
+        let lay = BlockLayout::new(1, 1, 16, BlockShape { l: 1, w: 16 });
+        let idxs: Vec<_> = lay.block_indices(0).collect();
+        assert_eq!(idxs.len(), 16);
+        for (k, idx) in idxs.iter().enumerate() {
+            assert_eq!(*idx, Some(k));
+        }
+    }
+
+    #[test]
+    fn padding_lane_positions() {
+        // 5 cols, w=4: second block has 3 real + 1 pad.
+        let lay = BlockLayout::new(1, 1, 5, BlockShape { l: 1, w: 4 });
+        let idxs: Vec<_> = lay.block_indices(1).collect();
+        assert_eq!(idxs, vec![Some(4), None, None, None]);
+    }
+}

@@ -1,0 +1,181 @@
+//! Static INT8 calibration (§VI: "static calibration using Graffitist to
+//! quantize both activations and weights to INT8").
+//!
+//! Weights: symmetric per-output-channel scales. Activations: symmetric
+//! per-tensor scale from calibration batches (max or percentile). These
+//! quantized models are the paper's baseline *before* any StruM transform.
+
+use super::tensor::{qlayer, QLayer};
+use super::round_half_away;
+
+/// Scale-selection rule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CalibMethod {
+    /// scale = max|x| / 127.
+    MinMax,
+    /// scale = percentile(|x|, pct) / 127 — clips outliers (Graffitist-like).
+    Percentile(f64),
+}
+
+/// Calibrates one layer's float weights to INT8 with per-OC scales.
+/// `weights` layout: `[oc][rows][cols]`, cols innermost (canonical order,
+/// see `tensor.rs`).
+pub fn calibrate_layer(
+    name: &str,
+    oc: usize,
+    rows: usize,
+    cols: usize,
+    weights: &[f32],
+    method: CalibMethod,
+) -> QLayer {
+    assert_eq!(weights.len(), oc * rows * cols);
+    let per = rows * cols;
+    let mut data = vec![0i8; weights.len()];
+    let mut scales = vec![0f32; oc];
+    for c in 0..oc {
+        let ws = &weights[c * per..(c + 1) * per];
+        let amax = match method {
+            CalibMethod::MinMax => ws.iter().fold(0f32, |m, &w| m.max(w.abs())),
+            CalibMethod::Percentile(pct) => percentile_abs(ws, pct),
+        };
+        let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+        scales[c] = scale;
+        for (i, &w) in ws.iter().enumerate() {
+            data[c * per + i] = round_half_away(w / scale).clamp(-127, 127) as i8;
+        }
+    }
+    qlayer(name, oc, rows, cols, data, scales)
+}
+
+/// Per-tensor activation calibration state (running max of |x| or a
+/// reservoir for percentile estimation).
+#[derive(Debug, Clone)]
+pub struct ActCalib {
+    method: CalibMethod,
+    amax: f32,
+    sample: Vec<f32>,
+    cap: usize,
+    seen: usize,
+}
+
+impl ActCalib {
+    pub fn new(method: CalibMethod) -> Self {
+        ActCalib {
+            method,
+            amax: 0.0,
+            sample: Vec::new(),
+            cap: 65_536,
+            seen: 0,
+        }
+    }
+
+    /// Observes a batch of activation values.
+    pub fn observe(&mut self, xs: &[f32]) {
+        for &x in xs {
+            let a = x.abs();
+            self.amax = self.amax.max(a);
+            self.seen += 1;
+            if self.sample.len() < self.cap {
+                self.sample.push(a);
+            } else {
+                // Reservoir sampling keeps the percentile estimate unbiased.
+                let j = (self.seen as u64).wrapping_mul(0x9E3779B97F4A7C15) % self.seen as u64;
+                if (j as usize) < self.cap {
+                    self.sample[j as usize] = a;
+                }
+            }
+        }
+    }
+
+    /// Final symmetric per-tensor scale.
+    pub fn scale(&self) -> f32 {
+        let amax = match self.method {
+            CalibMethod::MinMax => self.amax,
+            CalibMethod::Percentile(pct) => percentile_abs(&self.sample, pct),
+        };
+        if amax > 0.0 {
+            amax / 127.0
+        } else {
+            1.0
+        }
+    }
+}
+
+fn percentile_abs(xs: &[f32], pct: f64) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut mags: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((pct / 100.0) * (mags.len() - 1) as f64).round() as usize;
+    mags[rank.min(mags.len() - 1)]
+}
+
+/// Fake-quantizes activations with a per-tensor scale (evaluation path).
+pub fn fake_quant(xs: &mut [f32], scale: f32) {
+    for x in xs.iter_mut() {
+        *x = (round_half_away(*x / scale).clamp(-127, 127) as f32) * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minmax_per_oc_scales() {
+        // OC0 max |w| = 2.0, OC1 max = 0.5.
+        let w = vec![1.0f32, -2.0, 0.5, 0.25];
+        let l = calibrate_layer("t", 2, 1, 2, &w, CalibMethod::MinMax);
+        assert!((l.scales[0] - 2.0 / 127.0).abs() < 1e-7);
+        assert!((l.scales[1] - 0.5 / 127.0).abs() < 1e-7);
+        assert_eq!(l.data, vec![64, -127, 127, 64]);
+    }
+
+    #[test]
+    fn dequantize_error_bounded_by_half_step() {
+        let w: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.013).collect();
+        let l = calibrate_layer("t", 1, 1, 100, &w, CalibMethod::MinMax);
+        let back = l.dequantize();
+        let step = l.scales[0];
+        for (a, b) in w.iter().zip(back.iter()) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn percentile_clips_outliers() {
+        let mut w = vec![0.1f32; 99];
+        w.push(100.0); // outlier
+        let l = calibrate_layer("t", 1, 1, 100, &w, CalibMethod::Percentile(99.0));
+        // Scale from ~0.1, not 100 ⇒ outlier clamps to 127.
+        assert!(l.scales[0] < 0.01);
+        assert_eq!(l.data[99], 127);
+    }
+
+    #[test]
+    fn zero_weights_dont_divide_by_zero() {
+        let w = vec![0.0f32; 8];
+        let l = calibrate_layer("t", 1, 1, 8, &w, CalibMethod::MinMax);
+        assert_eq!(l.scales[0], 1.0);
+        assert!(l.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn act_calib_minmax() {
+        let mut c = ActCalib::new(CalibMethod::MinMax);
+        c.observe(&[0.5, -3.0, 1.0]);
+        c.observe(&[2.0]);
+        assert!((c.scale() - 3.0 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn fake_quant_is_idempotent() {
+        let scale = 0.05f32;
+        let mut xs = vec![0.123f32, -0.77, 3.0, -9.0];
+        fake_quant(&mut xs, scale);
+        let once = xs.clone();
+        fake_quant(&mut xs, scale);
+        assert_eq!(xs, once);
+    }
+}

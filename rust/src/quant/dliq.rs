@@ -1,0 +1,119 @@
+//! Dual-Level Integer Quantization (DLIQ, §IV-C.1).
+//!
+//! The low-precision set keeps integer semantics but on a coarser grid: a
+//! `q`-bit signed value `c` represents the INT8-grid value `c · 2^(8-q)`.
+//! In hardware the INT4×INT8 multiplier consumes `c` directly and the
+//! accumulator re-aligns the partial sum with a fixed `(8-q)`-bit shift —
+//! so the effective value is exactly `c << (8-q)`.
+//!
+//! Codes are clamped to the symmetric range `[-(2^(q-1)-1), 2^(q-1)-1]`
+//! (e.g. `[-7, 7]` for INT4), matching the symmetric INT8 baseline grid.
+
+use super::round_half_away;
+
+/// Re-quantizes one INT8-grid value to a `q`-bit code.
+/// Returns `(effective_int8_grid_value, payload_code)`.
+#[inline]
+pub fn requantize(v: i16, q: u8) -> (i16, i8) {
+    assert!((1..=8).contains(&q), "DLIQ q must be in [1,8]");
+    if q == 1 {
+        // Degenerate case: a 1-bit signed grid has only 0 — structured
+        // sparsity (the paper's Eq. 2 storage special case).
+        return (0, 0);
+    }
+    let shift = 8 - q as u32;
+    let step = 1i32 << shift;
+    let max_code = (1i32 << (q - 1)) - 1;
+    let code = round_half_away(v as f32 / step as f32).clamp(-max_code, max_code);
+    ((code << shift) as i16, code as i8)
+}
+
+/// Decodes a payload code back to the effective INT8-grid value (the
+/// inverse of the payload half of [`requantize`]). Used by the §IV-D
+/// decoder and the simulator datapath.
+#[inline]
+pub fn decode(code: i8, q: u8) -> i16 {
+    assert!((1..=8).contains(&q));
+    if q == 1 {
+        return 0;
+    }
+    (code as i16) << (8 - q as u32)
+}
+
+/// Absolute int-grid error of DLIQ-quantizing `v` with `q` bits.
+#[inline]
+pub fn error(v: i16, q: u8) -> u16 {
+    let (eff, _) = requantize(v, q);
+    (v - eff).unsigned_abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q8_is_identity_within_range() {
+        for v in -127..=127i16 {
+            let (eff, code) = requantize(v, 8);
+            assert_eq!(eff, v);
+            assert_eq!(code as i16, v);
+        }
+    }
+
+    #[test]
+    fn q4_grid_step_16() {
+        // 23 → round(23/16)=1 → 16; 24 → round(1.5)=2 → 32 (half away).
+        assert_eq!(requantize(23, 4), (16, 1));
+        assert_eq!(requantize(24, 4), (32, 2));
+        assert_eq!(requantize(-24, 4), (-32, -2));
+        assert_eq!(requantize(7, 4), (0, 0));
+        assert_eq!(requantize(8, 4), (16, 1));
+    }
+
+    #[test]
+    fn q4_clamps_symmetrically() {
+        // 127/16 = 7.94 → 8 clamps to 7 → 112.
+        assert_eq!(requantize(127, 4), (112, 7));
+        assert_eq!(requantize(-127, 4), (-112, -7));
+    }
+
+    #[test]
+    fn q1_is_sparsity() {
+        assert_eq!(requantize(100, 1), (0, 0));
+        assert_eq!(requantize(-1, 1), (0, 0));
+    }
+
+    #[test]
+    fn decode_inverts_code() {
+        for q in 2..=8u8 {
+            for v in -127..=127i16 {
+                let (eff, code) = requantize(v, q);
+                assert_eq!(decode(code, q), eff, "q={} v={}", q, v);
+            }
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        for q in 2..=8u8 {
+            let step = 1i32 << (8 - q as u32);
+            let max_code = (1i32 << (q - 1)) - 1;
+            let sat = (max_code * step) as i16;
+            for v in -127..=127i16 {
+                let e = error(v, q) as i32;
+                if v.abs() <= sat {
+                    assert!(e <= step / 2, "q={} v={} e={}", q, v, e);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn larger_q_never_worse() {
+        for v in -127..=127i16 {
+            for q in 2..8u8 {
+                assert!(error(v, q + 1) <= error(v, q), "v={} q={}", v, q);
+            }
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Mixed Integer and Power-of-2 Quantization (MIP2Q, §IV-C.2).
+//!
+//! Low-set codebook: signed powers of two `{±2^k : k ∈ [0, L]}`. A value
+//! in the low set multiplies an activation with a barrel shifter instead
+//! of a multiplier (§V-B). The payload code packs sign and shift into
+//! `q = ⌈log2(L+1)⌉ + 1` bits (§IV-C/D): sign in the top bit, shift index
+//! `k` in the low bits.
+//!
+//! There is deliberately no zero code — the paper's formula allocates bits
+//! for sign + shift only. An INT8 value 0 rounds to +2^0 = 1 (int-grid
+//! error 1, i.e. < 0.8 % of full scale); the per-block L2-optimal mask
+//! naturally keeps hard-to-represent values in the INT8 set.
+//!
+//! Set selection (the paper's `argmin_m ‖x − (x⊙m + x̂⊙m̄)‖₂` with
+//! `|m|₁` fixed) decomposes element-wise: errors are independent, so the
+//! optimum keeps the `(1-p)·l·w` values with the *largest* pow2 error at
+//! INT8 and sends the rest to the shift set. `quantize_block` in
+//! `quant::mod` implements exactly that ordering; `rust/tests/properties.rs`
+//! checks it against the brute-force mask search on random blocks.
+
+/// Payload bit-width for shift range `[0, L]` plus sign: `⌈log2(L+1)⌉ + 1`.
+pub fn payload_bits(l_max: u8) -> u32 {
+    if l_max == 0 {
+        // Degenerate single-magnitude codebook {±1}: sign bit only.
+        return 1;
+    }
+    // ⌈log2(L+1)⌉ = trailing_zeros(next_power_of_two(L+1)), plus sign bit.
+    (l_max as u32 + 1).next_power_of_two().trailing_zeros() + 1
+}
+
+/// Rounds `|v|` to the nearest power of two with exponent clamped to
+/// `[0, l_max]`; ties resolve to the smaller exponent (round-to-nearest in
+/// linear space: midpoint of `2^k` and `2^(k+1)` is `1.5·2^k`, strictly
+/// above goes up).
+#[inline]
+fn nearest_pow2_exp(mag: u16, l_max: u8) -> u8 {
+    if mag <= 1 {
+        return 0;
+    }
+    // Candidate exponents: floor(log2) and that plus one.
+    let fl = 15 - (mag as u16).leading_zeros() as u8; // mag >= 2 here
+    let lo = fl.min(l_max);
+    let hi = (fl + 1).min(l_max);
+    let e_lo = (mag as i32 - (1i32 << lo)).abs();
+    let e_hi = (mag as i32 - (1i32 << hi)).abs();
+    if e_hi < e_lo {
+        hi
+    } else {
+        lo
+    }
+}
+
+/// Re-quantizes one INT8-grid value to the MIP2Q codebook.
+/// Returns `(effective_grid_value, payload_code)`; the effective value can
+/// be ±128 (k = 7), hence i16.
+#[inline]
+pub fn requantize(v: i16, l_max: u8) -> (i16, i8) {
+    debug_assert!(l_max <= 7, "INT8 grid shifts cap at 7");
+    let neg = v < 0;
+    let k = nearest_pow2_exp(v.unsigned_abs(), l_max);
+    let eff = (1i16 << k) * if neg { -1 } else { 1 };
+    (eff, encode_code(neg, k))
+}
+
+/// Packs (sign, shift) into a payload code: sign in bit `q-1`... we store
+/// sign-magnitude in an i8 for codec simplicity: `code = ±(k+1)` with the
+/// sign of the value; the §IV-D bitstream packs it into `q` bits.
+#[inline]
+pub fn encode_code(neg: bool, k: u8) -> i8 {
+    let m = (k as i8) + 1;
+    if neg {
+        -m
+    } else {
+        m
+    }
+}
+
+/// Unpacks a payload code to the effective grid value.
+#[inline]
+pub fn decode(code: i8, _l_max: u8) -> i16 {
+    debug_assert!(code != 0, "MIP2Q has no zero code");
+    let k = (code.unsigned_abs() - 1) as u32;
+    let mag = 1i16 << k;
+    if code < 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Squared int-grid error of MIP2Q-quantizing `v` (selection key for the
+/// per-block L2-optimal mask).
+#[inline]
+pub fn pow2_error(v: i16, l_max: u8) -> u32 {
+    let (eff, _) = requantize(v, l_max);
+    let d = (v - eff) as i32;
+    (d * d) as u32
+}
+
+/// Brute-force optimal mask for one block: tries all C(n, keep) masks and
+/// returns the minimum-L2 squared error. Exponential — test oracle only
+/// (the greedy selection in `quantize_block` must match it exactly).
+pub fn brute_force_best_error(vals: &[i16], keep_high: usize, l_max: u8) -> u64 {
+    let n = vals.len();
+    assert!(n <= 20, "oracle only for small blocks");
+    let errs: Vec<u64> = vals.iter().map(|&v| pow2_error(v, l_max) as u64).collect();
+    let mut best = u64::MAX;
+    for bits in 0u32..(1 << n) {
+        if bits.count_ones() as usize != keep_high {
+            continue;
+        }
+        let e: u64 = (0..n).filter(|&i| bits & (1 << i) == 0).map(|i| errs[i]).sum();
+        best = best.min(e);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_bits_formula() {
+        // q = ceil(log2(L+1)) + 1 — paper's examples:
+        assert_eq!(payload_bits(7), 4); // [-7,7] shifts → 4 bits
+        assert_eq!(payload_bits(5), 4); // ceil(log2 6)=3, +1
+        assert_eq!(payload_bits(3), 3); // [-3,3] → 3 bits
+        assert_eq!(payload_bits(1), 2);
+    }
+
+    #[test]
+    fn exact_powers_have_zero_error() {
+        for k in 0..=7u8 {
+            let v = 1i16 << k;
+            assert_eq!(pow2_error(v, 7), 0, "k={}", k);
+            assert_eq!(pow2_error(-v, 7), 0, "k={}", k);
+            let (eff, _) = requantize(v, 7);
+            assert_eq!(eff, v);
+        }
+    }
+
+    #[test]
+    fn rounding_to_nearest_pow2() {
+        assert_eq!(requantize(3, 7).0, 2); // |3-2| = |3-4| → tie → smaller exp
+        assert_eq!(requantize(5, 7).0, 4);
+        assert_eq!(requantize(6, 7).0, 4); // |6-4|=2, |6-8|=2 tie → 4
+        assert_eq!(requantize(7, 7).0, 8);
+        assert_eq!(requantize(100, 7).0, 128);
+        assert_eq!(requantize(-100, 7).0, -128);
+        assert_eq!(requantize(95, 7).0, 64); // |95-64|=31 < |95-128|=33
+    }
+
+    #[test]
+    fn zero_maps_to_plus_one() {
+        let (eff, code) = requantize(0, 7);
+        assert_eq!(eff, 1);
+        assert_eq!(decode(code, 7), 1);
+    }
+
+    #[test]
+    fn shift_clipping_at_l() {
+        // L=3: max magnitude 8; 100 clips to 8.
+        assert_eq!(requantize(100, 3).0, 8);
+        assert_eq!(requantize(-127, 5).0, -32);
+        // Larger L represents large values better (paper §VII-A1 point 3).
+        assert!(pow2_error(100, 7) < pow2_error(100, 3));
+    }
+
+    #[test]
+    fn decode_inverts_requantize() {
+        for l_max in [1u8, 3, 5, 7] {
+            for v in -127..=127i16 {
+                let (eff, code) = requantize(v, l_max);
+                assert_eq!(decode(code, l_max), eff, "L={} v={}", l_max, v);
+            }
+        }
+    }
+
+    #[test]
+    fn code_fits_payload_bits() {
+        for l_max in [1u8, 3, 5, 7] {
+            let q = payload_bits(l_max);
+            for v in -127..=127i16 {
+                let (_, code) = requantize(v, l_max);
+                let k = code.unsigned_abs() - 1;
+                assert!(k as u32 <= l_max as u32);
+                // sign + k must fit q bits: k < 2^(q-1)
+                assert!((k as u32) < (1 << (q - 1)), "L={} code={}", l_max, code);
+            }
+        }
+    }
+
+    #[test]
+    fn brute_force_small_sanity() {
+        // Block [1, 0, 64]: pow2 errors L=7 → [0 (1→1), 1 (0→1), 0 (64)].
+        // keep_high=1 should keep the value with the largest error (0) and
+        // leave total error 0.
+        let vals = [1i16, 0, 64];
+        assert_eq!(brute_force_best_error(&vals, 1, 7), 0);
+        // keep_high=0: total = 1.
+        assert_eq!(brute_force_best_error(&vals, 0, 7), 1);
+    }
+}

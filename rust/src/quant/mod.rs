@@ -1,0 +1,417 @@
+//! StruM quantization (paper §IV).
+//!
+//! Pipeline:
+//!
+//! 1. [`calibrate`] — static symmetric INT8 calibration of float weights
+//!    (per-output-channel scales) and activations (per-tensor scale). This
+//!    is the paper's Graffitist-calibrated INT8 *baseline*.
+//! 2. [`block`] — hardware-aware `[l, w]` block division of each layer's
+//!    per-output-channel weight matrix (rows = spatial taps, cols = input
+//!    channels), with zero padding of ragged edges (§IV-B).
+//! 3. Set quantization (§IV-C) of each block by one of three strategies:
+//!    * [`sparsity`] — NVIDIA-style structured sparsity: the `p·l·w`
+//!      smallest-magnitude values are zeroed (the baseline StruM competes
+//!      against);
+//!    * [`dliq`] — Dual-Level Integer Quantization: the low set is
+//!      re-quantized to `q`-bit integers on a `2^(8-q)`-coarse grid;
+//!    * [`mip2q`] — Mixed Integer and Power-of-2 Quantization: a per-block
+//!      L2-optimal mask keeps the high set at INT8 and rounds the low set
+//!      to signed powers of two `±2^k, k ∈ [0, L]`.
+//!
+//! The output [`StrumLayer`] carries, per weight: the effective integer
+//! value (for accuracy evaluation and the simulator datapath), the payload
+//! code (for the §IV-D encoder), and the mask bit (1 = high precision).
+
+pub mod block;
+pub mod calibrate;
+pub mod dliq;
+pub mod mip2q;
+pub mod policy;
+pub mod sparsity;
+pub mod tensor;
+
+pub use block::{BlockLayout, BlockShape};
+pub use calibrate::{calibrate_layer, ActCalib, CalibMethod};
+pub use tensor::{QLayer, StrumLayer};
+
+/// Set-quantization strategy for the low-precision set (§IV-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// INT8 baseline — no second-level quantization at all.
+    Baseline,
+    /// Structured sparsity: low set → 0 (NVIDIA 2:4 generalization).
+    StructuredSparsity,
+    /// DLIQ with `q`-bit low-precision integers (q ∈ [1, 8]; q = 1
+    /// degenerates to structured sparsity, q = 8 is the identity).
+    Dliq { q: u8 },
+    /// MIP2Q with shift range `[0, l_max]` (signed), i.e. codebook
+    /// `{±2^k : k ∈ [0, l_max]}`. Payload width `q = ⌈log2(L+1)⌉ + 1`.
+    Mip2q { l_max: u8 },
+}
+
+impl Method {
+    /// Payload bit-width `q` of a low-precision value (§IV-D.1).
+    /// Structured sparsity stores no payload bits for the low set.
+    pub fn payload_bits(&self) -> u32 {
+        match *self {
+            Method::Baseline => 8,
+            Method::StructuredSparsity => 0,
+            Method::Dliq { q } => {
+                if q <= 1 {
+                    0 // q = 1 degenerates to sparsity: value known from mask
+                } else {
+                    q as u32
+                }
+            }
+            Method::Mip2q { l_max } => mip2q::payload_bits(l_max),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            Method::Baseline => "baseline".into(),
+            Method::StructuredSparsity => "sparsity".into(),
+            Method::Dliq { q } => format!("dliq-q{}", q),
+            Method::Mip2q { l_max } => format!("mip2q-L{}", l_max),
+        }
+    }
+
+    /// Parses `baseline | sparsity | dliq-q4 | mip2q-L5` style names.
+    pub fn parse(s: &str) -> Option<Method> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "baseline" {
+            return Some(Method::Baseline);
+        }
+        if s == "sparsity" {
+            return Some(Method::StructuredSparsity);
+        }
+        if let Some(rest) = s.strip_prefix("dliq-q").or_else(|| s.strip_prefix("dliq")) {
+            return rest.parse().ok().map(|q| Method::Dliq { q });
+        }
+        if let Some(rest) = s.strip_prefix("mip2q-l").or_else(|| s.strip_prefix("mip2q")) {
+            return rest.parse().ok().map(|l_max| Method::Mip2q { l_max });
+        }
+        None
+    }
+}
+
+/// Full StruM configuration for one transform run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StrumParams {
+    pub method: Method,
+    /// Block shape `[l, w]` (§IV-B). The paper's hardware point is `[1, 16]`.
+    pub block: BlockShape,
+    /// Fraction of each block assigned to the LOW-precision set.
+    pub p: f64,
+}
+
+impl StrumParams {
+    pub fn new(method: Method, l: usize, w: usize, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "p must be in [0,1]");
+        StrumParams {
+            method,
+            block: BlockShape { l, w },
+            p,
+        }
+    }
+
+    /// The paper's hardware configuration: `[1, 16]` blocks.
+    pub fn paper(method: Method, p: f64) -> Self {
+        StrumParams::new(method, 1, 16, p)
+    }
+
+    /// Number of low-precision elements per block.
+    pub fn low_per_block(&self) -> usize {
+        let n = self.block.elems();
+        // Round-to-nearest, as in "a fixed number of values within each
+        // block are assigned" (§IV-A); p=0.5, w=16 → 8.
+        ((self.p * n as f64).round() as usize).min(n)
+    }
+}
+
+/// Rounds half away from zero (symmetric quantizer rounding).
+#[inline]
+pub fn round_half_away(x: f32) -> i32 {
+    if x >= 0.0 {
+        (x + 0.5).floor() as i32
+    } else {
+        (x - 0.5).ceil() as i32
+    }
+}
+
+/// Applies the configured StruM transform to a calibrated INT8 layer.
+/// This is the crate's main quantization entry point.
+///
+/// Hot path (§Perf): scratch buffers are allocated once and reused across
+/// blocks; selection keys are precomputed and the low set found with
+/// `select_nth_unstable` (O(w) expected) instead of a full sort.
+pub fn apply_strum(layer: &QLayer, params: &StrumParams) -> StrumLayer {
+    let mut out = StrumLayer::identity(layer, params);
+    if params.method == Method::Baseline || params.low_per_block() == 0 {
+        return out;
+    }
+    let low_n = params.low_per_block();
+    let be = params.block.elems();
+    let mut scratch = BlockScratch::new(be);
+    if params.block.l == 1 {
+        // Fast path: [1, w] blocks are contiguous column runs — no
+        // index arithmetic per element (§Perf).
+        let w = params.block.w;
+        let cols = layer.cols;
+        for row in 0..layer.oc * layer.rows {
+            let base = row * cols;
+            let mut c0 = 0;
+            while c0 < cols {
+                let real = w.min(cols - c0);
+                for k in 0..real {
+                    scratch.vals[k] = layer.data[base + c0 + k] as i16;
+                    scratch.idxs[k] = base + c0 + k;
+                }
+                for k in real..w {
+                    scratch.vals[k] = 0;
+                    scratch.idxs[k] = usize::MAX;
+                }
+                quantize_block_into(low_n, params.method, &mut scratch);
+                for k in 0..real {
+                    let i = base + c0 + k;
+                    out.values[i] = scratch.new_vals[k];
+                    out.codes[i] = scratch.codes[k];
+                    out.mask[i] = scratch.mask[k];
+                }
+                c0 += w;
+            }
+        }
+    } else {
+        let layout = BlockLayout::for_layer(layer, params.block);
+        for blk in 0..layout.num_blocks() {
+            layout.gather(layer, blk, &mut scratch.vals, &mut scratch.idxs);
+            quantize_block_into(low_n, params.method, &mut scratch);
+            layout.scatter(&mut out, blk, &scratch.idxs, &scratch.new_vals, &scratch.codes, &scratch.mask);
+        }
+    }
+    out.recompute_stats(layer);
+    out
+}
+
+/// Reusable per-block working set for [`quantize_block_into`].
+pub struct BlockScratch {
+    pub vals: Vec<i16>,
+    pub idxs: Vec<usize>,
+    keys: Vec<i64>,
+    order: Vec<u32>,
+    pub new_vals: Vec<i16>,
+    pub codes: Vec<i8>,
+    pub mask: Vec<bool>,
+}
+
+impl BlockScratch {
+    pub fn new(block_elems: usize) -> BlockScratch {
+        BlockScratch {
+            vals: vec![0; block_elems],
+            idxs: vec![0; block_elems],
+            keys: vec![0; block_elems],
+            order: vec![0; block_elems],
+            new_vals: vec![0; block_elems],
+            codes: vec![0; block_elems],
+            mask: vec![true; block_elems],
+        }
+    }
+}
+
+/// Allocation-free core of [`quantize_block`]: results land in
+/// `scratch.{new_vals, codes, mask}`.
+fn quantize_block_into(low_n: usize, method: Method, s: &mut BlockScratch) {
+    let n = s.vals.len();
+    debug_assert!(low_n <= n);
+    // Selection keys (lower = low set first); padding lanes always first.
+    // Per-method loops keep the inner loop branch-free (§Perf).
+    match method {
+        Method::Baseline => {
+            for i in 0..n {
+                s.keys[i] = 0;
+            }
+        }
+        Method::StructuredSparsity | Method::Dliq { .. } => {
+            for i in 0..n {
+                s.keys[i] = ((s.vals[i].unsigned_abs() as i64) << 8) | (i as i64 & 0xFF);
+            }
+        }
+        Method::Mip2q { l_max } => {
+            for i in 0..n {
+                s.keys[i] =
+                    ((mip2q::pow2_error(s.vals[i], l_max) as i64) << 16) | (i as i64 & 0xFFFF);
+            }
+        }
+    }
+    for i in 0..n {
+        if s.idxs[i] == usize::MAX {
+            s.keys[i] = i64::MIN + i as i64;
+        }
+        s.order[i] = i as u32;
+        s.mask[i] = true;
+        s.new_vals[i] = s.vals[i];
+        s.codes[i] = s.vals[i].clamp(-128, 127) as i8;
+    }
+    if low_n == 0 {
+        return;
+    }
+    let keys = &s.keys;
+    if low_n < n {
+        s.order
+            .select_nth_unstable_by_key(low_n - 1, |&i| keys[i as usize]);
+    }
+    for &oi in s.order[..low_n].iter() {
+        let i = oi as usize;
+        s.mask[i] = false;
+        let (eff, code) = match method {
+            Method::Baseline => (s.vals[i], s.vals[i].clamp(-128, 127) as i8),
+            Method::StructuredSparsity => (0, 0),
+            Method::Dliq { q } => dliq::requantize(s.vals[i], q),
+            Method::Mip2q { l_max } => mip2q::requantize(s.vals[i], l_max),
+        };
+        s.new_vals[i] = eff;
+        s.codes[i] = code;
+    }
+}
+
+/// Quantizes one gathered block. `idxs[i] == usize::MAX` marks a padding
+/// lane (value 0, never written back; padding prefers the low set — the
+/// hardware's zero lanes cost nothing, see DESIGN.md §6).
+///
+/// Selection keys: magnitude split for sparsity/DLIQ (§IV-C), per-element
+/// pow2 L2 error for MIP2Q (separable ⇒ picking the `low_n` smallest keys
+/// IS the paper's `argmin_m` exhaustive search; proven against brute force
+/// in `rust/tests/properties.rs`). Ties break by block-slot index.
+///
+/// Returns (effective values, payload codes, mask) with mask bit
+/// `true` = high precision. Allocating wrapper around the scratch-reusing
+/// hot path used by [`apply_strum`].
+pub fn quantize_block(
+    vals: &[i16],
+    idxs: &[usize],
+    low_n: usize,
+    method: Method,
+) -> (Vec<i16>, Vec<i8>, Vec<bool>) {
+    let mut s = BlockScratch::new(vals.len());
+    s.vals.copy_from_slice(vals);
+    s.idxs.copy_from_slice(idxs);
+    quantize_block_into(low_n, method, &mut s);
+    (s.new_vals, s.codes, s.mask)
+}
+
+/// Applies *unstructured* mixed precision: the same per-element low-set
+/// re-quantization as [`apply_strum`], but the low set is chosen by a
+/// layer-global ranking (no per-block balance). This is the §III strawman
+/// StruM is designed against — it minimizes quantization error slightly
+/// better but breaks the hardware's balanced-lane guarantee (see the
+/// slowest-PE ablation, `strum report ablation`).
+pub fn apply_unstructured(layer: &QLayer, method: Method, p: f64) -> StrumLayer {
+    let params = StrumParams::paper(method, p);
+    let mut out = StrumLayer::identity(layer, &params);
+    if method == Method::Baseline {
+        return out;
+    }
+    let n = layer.len();
+    let low_n = ((p * n as f64).round() as usize).min(n);
+    let mut order: Vec<usize> = (0..n).collect();
+    match method {
+        Method::StructuredSparsity | Method::Dliq { .. } => {
+            order.sort_by_key(|&i| (layer.data[i].unsigned_abs(), i));
+        }
+        Method::Mip2q { l_max } => {
+            order.sort_by_key(|&i| (mip2q::pow2_error(layer.data[i] as i16, l_max), i));
+        }
+        Method::Baseline => {}
+    }
+    for &i in order.iter().take(low_n) {
+        let v = layer.data[i] as i16;
+        let (eff, code) = match method {
+            Method::StructuredSparsity => (0, 0),
+            Method::Dliq { q } => dliq::requantize(v, q),
+            Method::Mip2q { l_max } => mip2q::requantize(v, l_max),
+            Method::Baseline => unreachable!(),
+        };
+        out.values[i] = eff;
+        out.codes[i] = code;
+        out.mask[i] = false;
+    }
+    out.recompute_stats(layer);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names_roundtrip() {
+        for m in [
+            Method::Baseline,
+            Method::StructuredSparsity,
+            Method::Dliq { q: 4 },
+            Method::Mip2q { l_max: 5 },
+        ] {
+            assert_eq!(Method::parse(&m.name()), Some(m));
+        }
+    }
+
+    #[test]
+    fn payload_bits_match_paper() {
+        assert_eq!(Method::Dliq { q: 4 }.payload_bits(), 4);
+        assert_eq!(Method::StructuredSparsity.payload_bits(), 0);
+        // q = ceil(log2(L+1)) + 1 (paper §IV-C/D)
+        assert_eq!(Method::Mip2q { l_max: 7 }.payload_bits(), 4);
+        assert_eq!(Method::Mip2q { l_max: 5 }.payload_bits(), 4);
+        assert_eq!(Method::Mip2q { l_max: 3 }.payload_bits(), 3);
+        assert_eq!(Method::Mip2q { l_max: 1 }.payload_bits(), 2);
+    }
+
+    #[test]
+    fn low_per_block_rounding() {
+        let p = StrumParams::paper(Method::Dliq { q: 4 }, 0.5);
+        assert_eq!(p.low_per_block(), 8);
+        let p = StrumParams::paper(Method::Dliq { q: 4 }, 0.25);
+        assert_eq!(p.low_per_block(), 4);
+        let p = StrumParams::new(Method::Dliq { q: 4 }, 1, 4, 0.5);
+        assert_eq!(p.low_per_block(), 2); // NVIDIA 2:4 shape
+    }
+
+    #[test]
+    fn round_half_away_symmetry() {
+        assert_eq!(round_half_away(2.5), 3);
+        assert_eq!(round_half_away(-2.5), -3);
+        assert_eq!(round_half_away(2.4), 2);
+        assert_eq!(round_half_away(-2.4), -2);
+        assert_eq!(round_half_away(0.0), 0);
+    }
+
+    #[test]
+    fn sparsity_block_zeroes_smallest() {
+        let vals: Vec<i16> = vec![10, -3, 50, 1, -80, 7, 2, 120];
+        let idxs: Vec<usize> = (0..8).collect();
+        let (nv, _, mask) = quantize_block(&vals, &idxs, 4, Method::StructuredSparsity);
+        // Smallest |v|: 1, 2, -3, 7 → zeroed.
+        assert_eq!(nv, vec![10, 0, 50, 0, -80, 0, 0, 120]);
+        assert_eq!(mask, vec![true, false, true, false, true, false, false, true]);
+    }
+
+    #[test]
+    fn padding_prefers_low_set() {
+        // Two real values + two pads, low_n = 2: pads take the low slots.
+        let vals: Vec<i16> = vec![5, -6, 0, 0];
+        let idxs: Vec<usize> = vec![0, 1, usize::MAX, usize::MAX];
+        let (nv, _, mask) = quantize_block(&vals, &idxs, 2, Method::StructuredSparsity);
+        assert_eq!(nv[0], 5);
+        assert_eq!(nv[1], -6);
+        assert_eq!(mask, vec![true, true, false, false]);
+    }
+
+    #[test]
+    fn baseline_is_identity() {
+        let vals: Vec<i16> = vec![1, -2, 3, -4];
+        let idxs: Vec<usize> = (0..4).collect();
+        let (nv, _, mask) = quantize_block(&vals, &idxs, 0, Method::Baseline);
+        assert_eq!(nv, vals);
+        assert!(mask.iter().all(|&m| m));
+    }
+}

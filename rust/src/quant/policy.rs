@@ -1,0 +1,198 @@
+//! Per-layer quantization policies.
+//!
+//! The paper applies StruM uniformly (fixed p per network) and names
+//! per-layer p adaptation as future work (§VIII). Both are implemented:
+//! [`Policy::Uniform`] reproduces the paper; [`Policy::PerLayer`] and the
+//! [`sensitivity_schedule`] helper implement the future-work extension
+//! (budgeted per-layer p assignment driven by each layer's measured
+//! quantization error).
+
+use super::tensor::QLayer;
+use super::{apply_strum, Method, StrumLayer, StrumParams};
+
+/// How StruM parameters are assigned across a network's layers.
+#[derive(Debug, Clone)]
+pub enum Policy {
+    /// Same parameters for every quantized layer (the paper's setting).
+    Uniform(StrumParams),
+    /// Explicit per-layer parameters by layer name; layers not listed fall
+    /// back to the default.
+    PerLayer {
+        default: StrumParams,
+        overrides: Vec<(String, StrumParams)>,
+    },
+    /// Skip layers by name (kept INT8 baseline), apply `params` elsewhere.
+    SkipLayers {
+        params: StrumParams,
+        skip: Vec<String>,
+    },
+}
+
+impl Policy {
+    /// Resolves the parameters for a named layer; `None` = leave at INT8.
+    pub fn params_for(&self, layer_name: &str) -> Option<StrumParams> {
+        match self {
+            Policy::Uniform(p) => Some(*p),
+            Policy::PerLayer { default, overrides } => Some(
+                overrides
+                    .iter()
+                    .find(|(n, _)| n == layer_name)
+                    .map(|(_, p)| *p)
+                    .unwrap_or(*default),
+            ),
+            Policy::SkipLayers { params, skip } => {
+                if skip.iter().any(|n| n == layer_name) {
+                    None
+                } else {
+                    Some(*params)
+                }
+            }
+        }
+    }
+
+    /// Applies the policy to a whole network (list of calibrated layers).
+    pub fn apply(&self, layers: &[QLayer]) -> Vec<StrumLayer> {
+        layers
+            .iter()
+            .map(|l| match self.params_for(&l.name) {
+                Some(p) => apply_strum(l, &p),
+                None => StrumLayer::identity(
+                    l,
+                    &StrumParams::paper(Method::Baseline, 0.0),
+                ),
+            })
+            .collect()
+    }
+}
+
+/// Future-work extension (§VIII): choose per-layer p under a global
+/// low-precision budget. Layers are ranked by quantization *sensitivity*
+/// (int-grid RMSE per element at a probe p); the least sensitive layers
+/// receive `p_high`, the most sensitive `p_low`, such that the weighted
+/// average p meets `target_p` within one layer's granularity.
+pub fn sensitivity_schedule(
+    layers: &[QLayer],
+    method: Method,
+    block: (usize, usize),
+    target_p: f64,
+    p_low: f64,
+    p_high: f64,
+) -> Vec<(String, StrumParams)> {
+    assert!(p_low <= target_p && target_p <= p_high);
+    // Probe each layer at the target p to measure sensitivity.
+    let probe = StrumParams::new(method, block.0, block.1, target_p);
+    let mut ranked: Vec<(usize, f64)> = layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| (i, apply_strum(l, &probe).grid_rmse))
+        .collect();
+    // Least sensitive first.
+    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+    let total: usize = layers.iter().map(|l| l.len()).sum();
+    let budget = target_p * total as f64;
+    // Assign p_high greedily to insensitive layers (rank order) while the
+    // budget allows, accounting for the unvisited layers' p_low floor.
+    let mut assignments = vec![p_low; layers.len()];
+    let mut spent = 0.0;
+    let order: Vec<usize> = ranked.iter().map(|&(i, _)| i).collect();
+    for (pos, &i) in order.iter().enumerate() {
+        let n = layers[i].len() as f64;
+        let floor_rest: f64 = order[pos + 1..]
+            .iter()
+            .map(|&j| layers[j].len() as f64 * p_low)
+            .sum();
+        if spent + n * p_high + floor_rest <= budget + 1e-9 {
+            assignments[i] = p_high;
+            spent += n * p_high;
+        } else {
+            spent += n * p_low;
+        }
+    }
+    layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            (
+                l.name.clone(),
+                StrumParams::new(method, block.0, block.1, assignments[i]),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::tensor::qlayer;
+    use crate::util::prng::Rng;
+
+    fn random_layer(name: &str, oc: usize, cols: usize, seed: u64) -> QLayer {
+        let mut rng = Rng::new(seed);
+        let data: Vec<i8> = (0..oc * cols)
+            .map(|_| (rng.gaussian() * 40.0).clamp(-127.0, 127.0) as i8)
+            .collect();
+        qlayer(name, oc, 1, cols, data, vec![0.01; oc])
+    }
+
+    #[test]
+    fn uniform_policy_applies_everywhere() {
+        let layers = vec![random_layer("a", 2, 32, 1), random_layer("b", 2, 32, 2)];
+        let pol = Policy::Uniform(StrumParams::paper(Method::Dliq { q: 4 }, 0.5));
+        let out = pol.apply(&layers);
+        assert_eq!(out.len(), 2);
+        for s in &out {
+            assert!((s.measured_p() - 0.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn skip_layers_keeps_baseline() {
+        let layers = vec![random_layer("first", 2, 32, 1), random_layer("mid", 2, 32, 2)];
+        let pol = Policy::SkipLayers {
+            params: StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5),
+            skip: vec!["first".into()],
+        };
+        let out = pol.apply(&layers);
+        assert_eq!(out[0].measured_p(), 0.0);
+        assert!(out[1].measured_p() > 0.4);
+    }
+
+    #[test]
+    fn per_layer_overrides() {
+        let layers = vec![random_layer("a", 2, 32, 1), random_layer("b", 2, 32, 2)];
+        let pol = Policy::PerLayer {
+            default: StrumParams::paper(Method::Dliq { q: 4 }, 0.25),
+            overrides: vec![("b".into(), StrumParams::paper(Method::Dliq { q: 4 }, 0.75))],
+        };
+        let out = pol.apply(&layers);
+        assert!((out[0].measured_p() - 0.25).abs() < 0.01);
+        assert!((out[1].measured_p() - 0.75).abs() < 0.01);
+    }
+
+    #[test]
+    fn sensitivity_schedule_respects_budget() {
+        let layers: Vec<QLayer> = (0..6)
+            .map(|i| random_layer(&format!("l{}", i), 4, 64, i as u64 + 10))
+            .collect();
+        let sched = sensitivity_schedule(
+            &layers,
+            Method::Mip2q { l_max: 7 },
+            (1, 16),
+            0.5,
+            0.25,
+            0.75,
+        );
+        assert_eq!(sched.len(), 6);
+        let total: usize = layers.iter().map(|l| l.len()).sum();
+        let eff_p: f64 = sched
+            .iter()
+            .zip(layers.iter())
+            .map(|((_, p), l)| p.p * l.len() as f64)
+            .sum::<f64>()
+            / total as f64;
+        assert!(eff_p <= 0.5 + 1e-9, "budget exceeded: {}", eff_p);
+        // Some layer should get the high assignment.
+        assert!(sched.iter().any(|(_, p)| p.p == 0.75));
+    }
+}

@@ -1,0 +1,78 @@
+//! Structured sparsity baseline (§II / §IV-C "first method").
+//!
+//! NVIDIA-style N:M structured sparsity generalized to `[l, w]` blocks:
+//! within each block the `p·l·w` smallest-magnitude values are set to zero
+//! and the rest stay INT8. The hardware stores no payload for the zeroed
+//! set (Eq. 2). This is the method StruM competes against; without
+//! retraining its accuracy collapses for p ≥ 0.5 (paper Table I), which
+//! our Table-I reproduction confirms.
+
+use super::tensor::QLayer;
+use super::{apply_strum, Method, StrumLayer, StrumParams};
+
+/// Applies structured sparsity with the paper's block grid.
+pub fn apply(layer: &QLayer, l: usize, w: usize, p: f64) -> StrumLayer {
+    apply_strum(layer, &StrumParams::new(Method::StructuredSparsity, l, w, p))
+}
+
+/// NVIDIA 2:4 shape (l=1, w=4, p=0.5) as a convenience.
+pub fn nvidia_2_4(layer: &QLayer) -> StrumLayer {
+    apply(layer, 1, 4, 0.5)
+}
+
+/// Measured sparsity (fraction of exactly-zero effective values).
+pub fn measured_sparsity(s: &StrumLayer) -> f64 {
+    if s.values.is_empty() {
+        return 0.0;
+    }
+    s.values.iter().filter(|&&v| v == 0).count() as f64 / s.values.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::tensor::qlayer;
+
+    fn layer_16(vals: Vec<i8>) -> QLayer {
+        let n = vals.len();
+        qlayer("t", 1, 1, n, vals, vec![1.0])
+    }
+
+    #[test]
+    fn two_of_four_pattern() {
+        let l = layer_16(vec![4, -1, 2, -8, 3, 3, -3, 5]);
+        let s = nvidia_2_4(&l);
+        // Block 1: |4|,|1|,|2|,|8| → zero 1, 2. Block 2: |3|,|3|,|3|,|5| →
+        // zero first two 3s (stable by index).
+        assert_eq!(s.values, vec![4, 0, 0, -8, 0, 0, -3, 5]);
+        s.check_structure().unwrap();
+    }
+
+    #[test]
+    fn sparsity_matches_p() {
+        let data: Vec<i8> = (0..160).map(|i| ((i * 53 + 7) % 200) as i8).collect();
+        let l = layer_16(data);
+        for p in [0.25, 0.5, 0.75] {
+            let s = apply(&l, 1, 16, p);
+            // All values nonzero in source ⇒ measured sparsity == p exactly.
+            assert!(
+                (measured_sparsity(&s) - p).abs() < 1e-9,
+                "p={} got {}",
+                p,
+                measured_sparsity(&s)
+            );
+        }
+    }
+
+    #[test]
+    fn p_one_zeroes_everything() {
+        let l = layer_16(vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        let s = apply(&l, 1, 8, 1.0);
+        assert!(s.values.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn zeroed_set_has_no_payload_bits() {
+        assert_eq!(Method::StructuredSparsity.payload_bits(), 0);
+    }
+}

@@ -1,0 +1,261 @@
+//! Quantized layer tensors.
+//!
+//! Canonical layout (§IV-B, FlexNN-aligned): each layer's weights are a set
+//! of per-output-channel matrices of shape `rows × cols`, where `rows` are
+//! the spatial taps (`kh·kw`, 1 for FC/1×1) and `cols` is the input-channel
+//! depth — the "depth-first" storage order the paper partitions along.
+
+use super::{Method, StrumParams};
+
+/// A statically calibrated INT8 layer (the paper's baseline).
+#[derive(Debug, Clone)]
+pub struct QLayer {
+    /// Layer name (matches the artifact manifest).
+    pub name: String,
+    /// Output channels (each has an independent scale and block grid).
+    pub oc: usize,
+    /// Spatial taps per output channel (kh·kw; 1 for FC).
+    pub rows: usize,
+    /// Input-channel depth.
+    pub cols: usize,
+    /// INT8 values, layout `[oc][rows][cols]`, cols innermost.
+    pub data: Vec<i8>,
+    /// Per-output-channel symmetric scales: `w_f32 ≈ data · scale[oc]`.
+    pub scales: Vec<f32>,
+}
+
+impl QLayer {
+    pub fn elems_per_oc(&self) -> usize {
+        self.rows * self.cols
+    }
+    pub fn len(&self) -> usize {
+        self.oc * self.rows * self.cols
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn at(&self, oc: usize, row: usize, col: usize) -> i8 {
+        self.data[(oc * self.rows + row) * self.cols + col]
+    }
+
+    /// Dequantizes the whole layer to f32 (evaluation path).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len());
+        for oc in 0..self.oc {
+            let s = self.scales[oc];
+            let base = oc * self.rows * self.cols;
+            for &v in &self.data[base..base + self.rows * self.cols] {
+                out.push(v as f32 * s);
+            }
+        }
+        out
+    }
+}
+
+/// The result of a StruM transform on a [`QLayer`].
+///
+/// Effective values live on the INT8 *grid* but may exceed the i8 range:
+/// MIP2Q's `+2^7 = 128` does not fit i8, so values are stored as i16. The
+/// simulated hardware accumulates such products in int32 (§IV-D.2).
+#[derive(Debug, Clone)]
+pub struct StrumLayer {
+    pub name: String,
+    pub params: StrumParams,
+    pub oc: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// Effective integer values after StruM, layout as [`QLayer::data`].
+    pub values: Vec<i16>,
+    /// Payload codes: for high elements, the INT8 value; for low elements,
+    /// the q-bit integer (DLIQ) or sign+shift code (MIP2Q). Zero for
+    /// structured sparsity.
+    pub codes: Vec<i8>,
+    /// Precision mask: `true` = high precision (INT8 kept). One bit per
+    /// *real* element (padding lanes exist only inside the block grid).
+    pub mask: Vec<bool>,
+    /// Per-output-channel scales (copied from the source layer).
+    pub scales: Vec<f32>,
+    /// Int-grid RMS error vs. the INT8 source (diagnostics / Fig. 12).
+    pub grid_rmse: f64,
+}
+
+impl StrumLayer {
+    /// Identity transform (baseline): values = source, mask = all-high.
+    pub fn identity(layer: &QLayer, params: &StrumParams) -> StrumLayer {
+        StrumLayer {
+            name: layer.name.clone(),
+            params: *params,
+            oc: layer.oc,
+            rows: layer.rows,
+            cols: layer.cols,
+            values: layer.data.iter().map(|&v| v as i16).collect(),
+            codes: layer.data.clone(),
+            mask: vec![true; layer.len()],
+            scales: layer.scales.clone(),
+            grid_rmse: 0.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.oc * self.rows * self.cols
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fraction of real elements in the low-precision set.
+    pub fn measured_p(&self) -> f64 {
+        if self.mask.is_empty() {
+            return 0.0;
+        }
+        let low = self.mask.iter().filter(|&&m| !m).count();
+        low as f64 / self.mask.len() as f64
+    }
+
+    /// Dequantizes effective values to f32 for accuracy evaluation.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len());
+        let per = self.rows * self.cols;
+        for oc in 0..self.oc {
+            let s = self.scales[oc];
+            for &v in &self.values[oc * per..(oc + 1) * per] {
+                out.push(v as f32 * s);
+            }
+        }
+        out
+    }
+
+    /// Recomputes `grid_rmse` against the source layer.
+    pub fn recompute_stats(&mut self, src: &QLayer) {
+        debug_assert_eq!(self.values.len(), src.data.len());
+        if self.values.is_empty() {
+            self.grid_rmse = 0.0;
+            return;
+        }
+        let sq: f64 = self
+            .values
+            .iter()
+            .zip(src.data.iter())
+            .map(|(&v, &s)| {
+                let d = v as f64 - s as f64;
+                d * d
+            })
+            .sum();
+        self.grid_rmse = (sq / self.values.len() as f64).sqrt();
+    }
+
+    /// Checks the structural invariant: every `[l,w]` block of the layer
+    /// contains exactly `low_per_block` low elements (counting padding
+    /// lanes as low). This is the property that guarantees the hardware's
+    /// balanced 2× low-precision mode (§V-B). Returns the offending block
+    /// on violation.
+    pub fn check_structure(&self) -> Result<(), String> {
+        if self.params.method == Method::Baseline {
+            return Ok(());
+        }
+        let shape = self.params.block;
+        let layout = super::BlockLayout::new(self.oc, self.rows, self.cols, shape);
+        let want_low = self.params.low_per_block();
+        for blk in 0..layout.num_blocks() {
+            let mut real_low = 0usize;
+            let mut pads = 0usize;
+            for idx in layout.block_indices(blk) {
+                match idx {
+                    None => pads += 1,
+                    Some(i) => {
+                        if !self.mask[i] {
+                            real_low += 1
+                        }
+                    }
+                }
+            }
+            // Padding lanes fill low slots first (they are free zeros), so
+            // exactly `want_low - pads` real elements must be low — and if
+            // a block is mostly padding, none are.
+            let want_real_low = want_low.saturating_sub(pads);
+            if real_low != want_real_low {
+                return Err(format!(
+                    "block {} of layer {} has {} real low elements, want {} ({} pads)",
+                    blk, self.name, real_low, want_real_low, pads
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Convenience: builds a [`QLayer`] from raw parts (used by tests and
+/// workload generators).
+pub fn qlayer(name: &str, oc: usize, rows: usize, cols: usize, data: Vec<i8>, scales: Vec<f32>) -> QLayer {
+    assert_eq!(data.len(), oc * rows * cols);
+    assert_eq!(scales.len(), oc);
+    QLayer {
+        name: name.to_string(),
+        oc,
+        rows,
+        cols,
+        data,
+        scales,
+    }
+}
+
+/// Convenience for tests: a [1,w]-friendly single-OC layer.
+pub fn test_layer(data: Vec<i8>) -> QLayer {
+    let n = data.len();
+    qlayer("test", 1, 1, n, data, vec![1.0])
+}
+
+/// Block shape re-export used by [`StrumParams`].
+pub use super::block::BlockShape as Shape;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{apply_strum, Method, StrumParams};
+
+    #[test]
+    fn dequantize_applies_per_oc_scale() {
+        let l = qlayer("t", 2, 1, 2, vec![10, -20, 30, -40], vec![0.5, 2.0]);
+        assert_eq!(l.dequantize(), vec![5.0, -10.0, 60.0, -80.0]);
+    }
+
+    #[test]
+    fn identity_has_zero_rmse_and_full_mask() {
+        let l = test_layer(vec![1, 2, 3, 4]);
+        let p = StrumParams::paper(Method::Baseline, 0.5);
+        let s = apply_strum(&l, &p);
+        assert_eq!(s.grid_rmse, 0.0);
+        assert!(s.mask.iter().all(|&m| m));
+        assert_eq!(s.measured_p(), 0.0);
+    }
+
+    #[test]
+    fn structure_invariant_holds_after_transform() {
+        let data: Vec<i8> = (0..64).map(|i| ((i * 37 + 11) % 255 - 127) as i8).collect();
+        let l = qlayer("t", 2, 2, 16, data, vec![1.0, 1.0]);
+        for method in [
+            Method::StructuredSparsity,
+            Method::Dliq { q: 4 },
+            Method::Mip2q { l_max: 7 },
+        ] {
+            let s = apply_strum(&l, &StrumParams::paper(method, 0.5));
+            s.check_structure().unwrap();
+            assert!((s.measured_p() - 0.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn measured_p_with_padding() {
+        // cols=10 with w=16 blocks: 6 padding lanes per block take low
+        // slots first, so only 8-6=2 real elements go low out of 10.
+        let data: Vec<i8> = (1..=10).collect();
+        let l = qlayer("t", 1, 1, 10, data, vec![1.0]);
+        let s = apply_strum(&l, &StrumParams::paper(Method::StructuredSparsity, 0.5));
+        s.check_structure().unwrap();
+        assert!((s.measured_p() - 0.2).abs() < 1e-9);
+        // The two zeroed values are the smallest-magnitude ones: 1, 2.
+        assert_eq!(&s.values[..4], &[0, 0, 3, 4]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Ablations the paper states but does not plot:
+//!
+//! * **A1 — block-shape invariance** (§IV-B footnote 2): accuracy is
+//!   stable across block *shapes* at a fixed element count
+//!   ([1,16] vs [2,8] vs [4,4]).
+//! * **A2 — slowest-PE balance** (§III, §V-B): structured placement
+//!   achieves the ideal 2× low-precision speedup on the perf-provisioned
+//!   DPU; layer-global (unstructured) placement of the same p loses
+//!   cycles to wave synchronization.
+//! * **A3 — DLIQ PE variant** (§IV-D.2): hardware cost of INT4×INT8
+//!   multiplier lanes vs barrel-shifter lanes — why MIP2Q won.
+
+use super::{pct, EvalCtx};
+use crate::hw::pe::{pe_cost, pe_dense_cycle_energy, PeVariant};
+use crate::model::eval::EvalConfig;
+use crate::model::import::NetWeights;
+use crate::quant::{apply_strum, apply_unstructured, Method, StrumParams};
+use crate::sim::{simulate_layer, SimMode};
+use crate::sim::config::SimConfig;
+use crate::util::json::Json;
+use crate::Result;
+
+/// A1: accuracy across block shapes with 16 elements each.
+pub fn block_shape_invariance(ctx: &EvalCtx, net: &str) -> Result<Json> {
+    println!("A1 — block-shape invariance (16 elements) [{}]", net);
+    let shapes = [(1usize, 16usize), (2, 8), (4, 4)];
+    let mut vals = Vec::new();
+    for method in [Method::Dliq { q: 4 }, Method::Mip2q { l_max: 7 }] {
+        for (l, w) in shapes {
+            let mut cfg = EvalConfig::paper(method, 0.5);
+            cfg.block = (l, w);
+            let r = ctx.point(net, cfg)?;
+            println!("  {} [{},{}]  top1={}", method.name(), l, w, pct(r.top1));
+            vals.push(Json::obj(vec![
+                ("method", Json::str(method.name())),
+                ("block", Json::arr_usize(&[l, w])),
+                ("top1", Json::Num(r.top1)),
+            ]));
+        }
+    }
+    Ok(Json::Arr(vals))
+}
+
+/// A2: structured vs unstructured placement on the perf-provisioned DPU.
+pub fn slowest_pe_balance(artifacts: &std::path::Path, net: &str) -> Result<Json> {
+    println!("A2 — slowest-PE balance, StrumPerf DPU (8 mult + 8 shift) [{}]", net);
+    let weights = NetWeights::load(artifacts, net)?;
+    let method = Method::Mip2q { l_max: 7 };
+    let cfg = SimConfig::flexnn(SimMode::StrumPerf, Some(method));
+    let dense_cfg = SimConfig::flexnn(SimMode::Int8Dense, None);
+    let mut rows = Vec::new();
+    let mut tot = (0u64, 0u64, 0u64);
+    for lm in &weights.manifest.layers {
+        let q = weights.canonical_layer(lm)?;
+        let shape = lm.shape_for_sim();
+        let base = apply_strum(&q, &StrumParams::paper(Method::Baseline, 0.0));
+        let s = apply_strum(&q, &StrumParams::paper(method, 0.5));
+        let u = apply_unstructured(&q, method, 0.5);
+        let d_sim = simulate_layer(&shape, &base, &dense_cfg, 1.0, 0);
+        let s_sim = simulate_layer(&shape, &s, &cfg, 1.0, 0);
+        let u_sim = simulate_layer(&shape, &u, &cfg, 1.0, 0);
+        println!(
+            "  {:<8} dense {:>8}cy  structured {:>8}cy ({:.2}x)  unstructured {:>8}cy ({:.2}x)",
+            lm.name,
+            d_sim.cycles,
+            s_sim.cycles,
+            s_sim.speedup_vs(&d_sim),
+            u_sim.cycles,
+            u_sim.speedup_vs(&d_sim),
+        );
+        tot.0 += d_sim.cycles;
+        tot.1 += s_sim.cycles;
+        tot.2 += u_sim.cycles;
+        rows.push(Json::obj(vec![
+            ("layer", Json::str(lm.name.clone())),
+            ("dense_cycles", Json::Num(d_sim.cycles as f64)),
+            ("structured_cycles", Json::Num(s_sim.cycles as f64)),
+            ("unstructured_cycles", Json::Num(u_sim.cycles as f64)),
+        ]));
+    }
+    println!(
+        "  TOTAL    dense {}cy  structured {}cy ({:.2}x)  unstructured {}cy ({:.2}x)",
+        tot.0,
+        tot.1,
+        tot.0 as f64 / tot.1.max(1) as f64,
+        tot.2,
+        tot.0 as f64 / tot.2.max(1) as f64,
+    );
+    Ok(Json::Arr(rows))
+}
+
+/// A3: the DLIQ-PE vs MIP2Q-PE hardware comparison.
+pub fn dliq_vs_mip2q_pe() -> Json {
+    println!("A3 — low-precision lane hardware: INT4x8 multipliers vs barrel shifters");
+    let base = pe_cost(PeVariant::BaselineInt8);
+    let rows: Vec<Json> = [
+        PeVariant::BaselineInt8,
+        PeVariant::StaticDliq { q: 4 },
+        PeVariant::StaticMip2q { l_max: 7 },
+        PeVariant::StaticMip2q { l_max: 5 },
+    ]
+    .iter()
+    .map(|&v| {
+        let c = pe_cost(v);
+        let e = pe_dense_cycle_energy(v);
+        let eb = pe_dense_cycle_energy(PeVariant::BaselineInt8);
+        println!(
+            "  {:<18} area {:>7.0} ({:+.1}%)  power/cycle {:>7.0} ({:+.1}%)",
+            v.name(),
+            c.area(),
+            (c.area() / base.area() - 1.0) * 100.0,
+            e,
+            (e / eb - 1.0) * 100.0
+        );
+        Json::obj(vec![
+            ("variant", Json::str(v.name())),
+            ("area", Json::Num(c.area())),
+            ("power", Json::Num(e)),
+        ])
+    })
+    .collect();
+    Json::Arr(rows)
+}

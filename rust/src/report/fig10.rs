@@ -1,0 +1,79 @@
+//! Fig. 10: DLIQ accuracy sweeps on the ResNet-50 stand-in.
+//!
+//! (a) top-1 vs p for block widths w ∈ {4, 8, 16, 32} (q = 4);
+//! (b) top-1 vs p for q ∈ {2, 3, 4, 5} (block [1,16]).
+//!
+//! Paper shape: larger blocks better; smaller p better; larger q better.
+
+use super::{pct, EvalCtx};
+use crate::model::eval::EvalConfig;
+use crate::quant::Method;
+use crate::util::json::Json;
+use crate::Result;
+
+pub const P_GRID: [f64; 4] = [0.25, 0.5, 0.625, 0.75];
+pub const WIDTHS: [usize; 4] = [4, 8, 16, 32];
+pub const QS: [u8; 4] = [2, 3, 4, 5];
+
+pub struct Fig10 {
+    /// a: [width][p] accuracies.
+    pub by_width: Vec<Vec<f64>>,
+    /// b: [q][p] accuracies.
+    pub by_q: Vec<Vec<f64>>,
+}
+
+pub fn run(ctx: &EvalCtx, net: &str) -> Result<(Fig10, Json)> {
+    println!("Fig 10a — DLIQ (q=4) top-1 vs p, by block width  [{}]", net);
+    print!("{:>8}", "w\\p");
+    for p in P_GRID {
+        print!("{:>8.3}", p);
+    }
+    println!();
+    let mut by_width = Vec::new();
+    for &w in &WIDTHS {
+        let mut series = Vec::new();
+        print!("{:>8}", format!("[1,{}]", w));
+        for &p in &P_GRID {
+            let mut cfg = EvalConfig::paper(Method::Dliq { q: 4 }, p);
+            cfg.block = (1, w);
+            let r = ctx.point(net, cfg)?;
+            print!("{:>8}", pct(r.top1));
+            series.push(r.top1);
+        }
+        println!();
+        by_width.push(series);
+    }
+
+    println!("\nFig 10b — DLIQ ([1,16]) top-1 vs p, by q");
+    print!("{:>8}", "q\\p");
+    for p in P_GRID {
+        print!("{:>8.3}", p);
+    }
+    println!();
+    let mut by_q = Vec::new();
+    for &q in &QS {
+        let mut series = Vec::new();
+        print!("{:>8}", format!("q={}", q));
+        for &p in &P_GRID {
+            let r = ctx.point(net, EvalConfig::paper(Method::Dliq { q }, p))?;
+            print!("{:>8}", pct(r.top1));
+            series.push(r.top1);
+        }
+        println!();
+        by_q.push(series);
+    }
+
+    let json = Json::obj(vec![
+        ("net", Json::str(net)),
+        ("p_grid", Json::arr_f64(&P_GRID)),
+        (
+            "by_width",
+            Json::Arr(by_width.iter().map(|s| Json::arr_f64(s)).collect()),
+        ),
+        (
+            "by_q",
+            Json::Arr(by_q.iter().map(|s| Json::arr_f64(s)).collect()),
+        ),
+    ]);
+    Ok((Fig10 { by_width, by_q }, json))
+}

@@ -1,0 +1,78 @@
+//! Fig. 11: MIP2Q accuracy sweeps on the ResNet-50 stand-in.
+//!
+//! (a) top-1 vs p for block widths w ∈ {4, 8, 16, 32} (L = 7);
+//! (b) top-1 vs p for L ∈ {1, 3, 5, 7} (block [1,16]).
+//!
+//! Paper shape: L=5 ≈ L=7 (the finding that motivates the reduced-range
+//! barrel shifter PE variant, §V-B); larger blocks better.
+
+use super::{pct, EvalCtx};
+use crate::model::eval::EvalConfig;
+use crate::quant::Method;
+use crate::util::json::Json;
+use crate::Result;
+
+pub const P_GRID: [f64; 4] = [0.25, 0.5, 0.625, 0.75];
+pub const WIDTHS: [usize; 4] = [4, 8, 16, 32];
+pub const LS: [u8; 4] = [1, 3, 5, 7];
+
+pub struct Fig11 {
+    pub by_width: Vec<Vec<f64>>,
+    pub by_l: Vec<Vec<f64>>,
+}
+
+pub fn run(ctx: &EvalCtx, net: &str) -> Result<(Fig11, Json)> {
+    println!("Fig 11a — MIP2Q (L=7) top-1 vs p, by block width  [{}]", net);
+    print!("{:>8}", "w\\p");
+    for p in P_GRID {
+        print!("{:>8.3}", p);
+    }
+    println!();
+    let mut by_width = Vec::new();
+    for &w in &WIDTHS {
+        let mut series = Vec::new();
+        print!("{:>8}", format!("[1,{}]", w));
+        for &p in &P_GRID {
+            let mut cfg = EvalConfig::paper(Method::Mip2q { l_max: 7 }, p);
+            cfg.block = (1, w);
+            let r = ctx.point(net, cfg)?;
+            print!("{:>8}", pct(r.top1));
+            series.push(r.top1);
+        }
+        println!();
+        by_width.push(series);
+    }
+
+    println!("\nFig 11b — MIP2Q ([1,16]) top-1 vs p, by L (shift range)");
+    print!("{:>8}", "L\\p");
+    for p in P_GRID {
+        print!("{:>8.3}", p);
+    }
+    println!();
+    let mut by_l = Vec::new();
+    for &l in &LS {
+        let mut series = Vec::new();
+        print!("{:>8}", format!("L={}", l));
+        for &p in &P_GRID {
+            let r = ctx.point(net, EvalConfig::paper(Method::Mip2q { l_max: l }, p))?;
+            print!("{:>8}", pct(r.top1));
+            series.push(r.top1);
+        }
+        println!();
+        by_l.push(series);
+    }
+
+    let json = Json::obj(vec![
+        ("net", Json::str(net)),
+        ("p_grid", Json::arr_f64(&P_GRID)),
+        (
+            "by_width",
+            Json::Arr(by_width.iter().map(|s| Json::arr_f64(s)).collect()),
+        ),
+        (
+            "by_l",
+            Json::Arr(by_l.iter().map(|s| Json::arr_f64(s)).collect()),
+        ),
+    ]);
+    Ok((Fig11 { by_width, by_l }, json))
+}

@@ -1,0 +1,75 @@
+//! Fig. 12: top-1 accuracy vs weight compression level r (Eq. 1/2).
+//!
+//! Sweeps p for each method and plots accuracy against the *achieved*
+//! compression ratio: sparsity reaches smaller r for the same p (no low
+//! payload) but loses accuracy faster. Paper shape: at large r DLIQ and
+//! MIP2Q dominate; at small r MIP2Q dominates everything (the basis for
+//! choosing MIP2Q in hardware, §VII-A2).
+
+use super::{pct, EvalCtx};
+use crate::encode::compression::ratio_for;
+use crate::model::eval::EvalConfig;
+use crate::quant::Method;
+use crate::util::json::Json;
+use crate::Result;
+
+pub const P_GRID: [f64; 6] = [0.125, 0.25, 0.375, 0.5, 0.75, 1.0];
+
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub method: String,
+    /// (r, top1) points, ascending r.
+    pub points: Vec<(f64, f64)>,
+}
+
+pub fn run(ctx: &EvalCtx, net: &str) -> Result<(Vec<Series>, Json)> {
+    let methods = [
+        Method::StructuredSparsity,
+        Method::Dliq { q: 4 },
+        Method::Mip2q { l_max: 7 },
+    ];
+    println!("Fig 12 — top-1 vs compression level r  [{}]", net);
+    let mut out = Vec::new();
+    for method in methods {
+        let mut pts = Vec::new();
+        for &p in &P_GRID {
+            let r = ratio_for(method, p);
+            let acc = ctx.point(net, EvalConfig::paper(method, p))?.top1;
+            pts.push((r, acc));
+        }
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        println!("  {}", method.name());
+        for (r, acc) in &pts {
+            println!("    r={:.4}  top1={}", r, pct(*acc));
+        }
+        out.push(Series {
+            method: method.name(),
+            points: pts,
+        });
+    }
+    let json = Json::obj(vec![
+        ("net", Json::str(net)),
+        (
+            "series",
+            Json::Arr(
+                out.iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("method", Json::str(s.method.clone())),
+                            (
+                                "points",
+                                Json::Arr(
+                                    s.points
+                                        .iter()
+                                        .map(|(r, a)| Json::arr_f64(&[*r, *a]))
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    Ok((out, json))
+}

@@ -1,0 +1,131 @@
+//! Fig. 13: DPU-level, PE-array-level and PE-level area/power for the
+//! StruM PE variants vs the multiplier-only FlexNN baseline.
+//!
+//! (a) static replacement (L=7, L=5): paper reports 23–26% PE area,
+//!     31–34% PE power, 10–12% array/DPU power, 2–3% DPU area savings;
+//! (b) dynamically configurable PE: ~3% DPU area overhead, same power
+//!     savings.
+//!
+//! Power columns come from the activity-driven model: either the analytic
+//! dense workload or a cycle-simulation of a real zoo network's conv
+//! layers (`--sim-net`), the SAIF-equivalent path.
+
+use crate::hw::dpu::{dpu_cost, DpuConfig};
+use crate::hw::pe::{pe_cost, PeVariant};
+use crate::hw::power::{power, tops_per_watt, Activity};
+use crate::util::json::Json;
+
+pub const VARIANTS: [PeVariant; 5] = [
+    PeVariant::BaselineInt8,
+    PeVariant::StaticMip2q { l_max: 7 },
+    PeVariant::StaticMip2q { l_max: 5 },
+    PeVariant::DynamicMip2q { l_max: 7 },
+    PeVariant::DynamicMip2q { l_max: 5 },
+];
+
+#[derive(Debug, Clone)]
+pub struct VariantReport {
+    pub name: String,
+    pub pe_area: f64,
+    pub array_area: f64,
+    pub dpu_area: f64,
+    pub pe_power: f64,
+    pub array_power: f64,
+    pub dpu_power: f64,
+    pub tops_per_watt: f64,
+}
+
+/// Computes the full Fig. 13 table from an activity trace (dense analytic
+/// by default; pass a simulator-aggregated Activity for the SAIF path).
+pub fn run(activity: Option<&Activity>) -> (Vec<VariantReport>, Json) {
+    let cfg = DpuConfig::flexnn_16x16();
+    let dense;
+    let act = match activity {
+        Some(a) => a,
+        None => {
+            dense = Activity::dense(cfg.num_pes() as u64, 100_000, 0.5);
+            &dense
+        }
+    };
+    let mut out = Vec::new();
+    for v in VARIANTS {
+        let dc = dpu_cost(v, &cfg);
+        let pr = power(v, act, &cfg);
+        out.push(VariantReport {
+            name: v.name(),
+            pe_area: pe_cost(v).area(),
+            array_area: dc.array.area,
+            dpu_area: dc.total.area,
+            pe_power: pr.pe_level(),
+            array_power: pr.array_level(),
+            dpu_power: pr.dpu_level(),
+            tops_per_watt: tops_per_watt(v, act, &cfg),
+        });
+    }
+    print_table(&out);
+    let json = to_json(&out);
+    (out, json)
+}
+
+fn rel(base: f64, x: f64) -> String {
+    format!("{:+.1}%", (x / base - 1.0) * 100.0)
+}
+
+fn print_table(rows: &[VariantReport]) {
+    let b = &rows[0];
+    println!(
+        "{:<18} {:>10} {:>8} | {:>10} {:>8} | {:>10} {:>8} || {:>9} {:>8} | {:>9} {:>8} | {:>9} {:>8} | {:>8}",
+        "variant", "PE area", "Δ", "array", "Δ", "DPU", "Δ",
+        "PE pwr", "Δ", "arr pwr", "Δ", "DPU pwr", "Δ", "TOPS/W Δ"
+    );
+    for r in rows {
+        println!(
+            "{:<18} {:>10.0} {:>8} | {:>10.0} {:>8} | {:>10.0} {:>8} || {:>9.0} {:>8} | {:>9.0} {:>8} | {:>9.0} {:>8} | {:>8}",
+            r.name,
+            r.pe_area, rel(b.pe_area, r.pe_area),
+            r.array_area, rel(b.array_area, r.array_area),
+            r.dpu_area, rel(b.dpu_area, r.dpu_area),
+            r.pe_power, rel(b.pe_power, r.pe_power),
+            r.array_power, rel(b.array_power, r.array_power),
+            r.dpu_power, rel(b.dpu_power, r.dpu_power),
+            rel(b.tops_per_watt, r.tops_per_watt),
+        );
+    }
+}
+
+fn to_json(rows: &[VariantReport]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("variant", Json::str(r.name.clone())),
+                    ("pe_area", Json::Num(r.pe_area)),
+                    ("array_area", Json::Num(r.array_area)),
+                    ("dpu_area", Json::Num(r.dpu_area)),
+                    ("pe_power", Json::Num(r.pe_power)),
+                    ("array_power", Json::Num(r.array_power)),
+                    ("dpu_power", Json::Num(r.dpu_power)),
+                    ("tops_per_watt", Json::Num(r.tops_per_watt)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Paper-band comparison used by the bench harness and EXPERIMENTS.md.
+pub fn paper_bands(rows: &[VariantReport]) -> Vec<String> {
+    let b = &rows[0];
+    let mut notes = Vec::new();
+    for r in rows.iter().skip(1) {
+        let pe_area_save = (1.0 - r.pe_area / b.pe_area) * 100.0;
+        let pe_power_save = (1.0 - r.pe_power / b.pe_power) * 100.0;
+        let dpu_power_save = (1.0 - r.dpu_power / b.dpu_power) * 100.0;
+        let dpu_area_delta = (r.dpu_area / b.dpu_area - 1.0) * 100.0;
+        notes.push(format!(
+            "{:<18} PE area save {:+.1}% (paper 23–26 static) | PE power save {:+.1}% (31–34) | \
+             DPU power save {:+.1}% (10–12) | DPU area Δ {:+.1}% (−2–3 static / +3 dynamic)",
+            r.name, pe_area_save, pe_power_save, dpu_power_save, dpu_area_delta
+        ));
+    }
+    notes
+}

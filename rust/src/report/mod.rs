@@ -1,0 +1,46 @@
+//! Report generators: one per paper table/figure (§VII), plus ablations.
+//!
+//! Each generator prints the same rows/series the paper reports and
+//! returns them as JSON for EXPERIMENTS.md. Regeneration entry points:
+//! `strum report <table1|fig10|fig11|fig12|fig13|ablation>` and the
+//! matching `cargo bench --bench <...>` targets.
+
+pub mod ablation;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod table1;
+
+use crate::model::import::DataSet;
+use crate::model::eval::{evaluate, EvalConfig, EvalResult};
+use crate::runtime::Runtime;
+use crate::Result;
+use std::path::Path;
+
+/// Shared evaluation context for the accuracy reports.
+pub struct EvalCtx<'a> {
+    pub rt: &'a Runtime,
+    pub artifacts: &'a Path,
+    pub data: DataSet,
+    /// Samples per evaluation point (None = full eval split).
+    pub limit: Option<usize>,
+}
+
+impl<'a> EvalCtx<'a> {
+    pub fn new(rt: &'a Runtime, artifacts: &'a Path, limit: Option<usize>) -> Result<Self> {
+        let data = DataSet::load(artifacts, "eval")?;
+        Ok(EvalCtx { rt, artifacts, data, limit })
+    }
+
+    /// One accuracy point with paper-default settings.
+    pub fn point(&self, net: &str, mut cfg: EvalConfig) -> Result<EvalResult> {
+        cfg.limit = self.limit;
+        evaluate(self.rt, self.artifacts, net, &self.data, &cfg)
+    }
+}
+
+/// Formats an accuracy as the paper does (percent, 1 decimal).
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", x * 100.0)
+}

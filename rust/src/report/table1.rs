@@ -1,0 +1,123 @@
+//! Table I: Top-1 accuracy across the zoo for {baseline, structured
+//! sparsity, DLIQ q=4, MIP2Q L=7} × p ∈ {0.25, 0.5, 0.75}, block [1,16].
+//!
+//! Paper shape to reproduce: DLIQ/MIP2Q within ~1% of baseline at
+//! p ≤ 0.5; structured sparsity degrades at p=0.5 and collapses at
+//! p=0.75; DLIQ ≥ MIP2Q at small p, MIP2Q ≥ DLIQ at p=0.75.
+
+use super::{pct, EvalCtx};
+use crate::model::eval::EvalConfig;
+use crate::model::zoo;
+use crate::quant::Method;
+use crate::util::json::Json;
+use crate::Result;
+
+pub const PS: [f64; 3] = [0.25, 0.50, 0.75];
+
+/// One network's Table-I row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub net: String,
+    pub family: String,
+    pub baseline: f64,
+    pub sparsity: [f64; 3],
+    pub dliq: [f64; 3],
+    pub mip2q: [f64; 3],
+}
+
+pub fn run(ctx: &EvalCtx, nets: &[&str]) -> Result<(Vec<Row>, Json)> {
+    let mut rows = Vec::new();
+    for &net in nets {
+        let baseline = ctx
+            .point(net, EvalConfig::paper(Method::Baseline, 0.0))?
+            .top1;
+        let mut row = Row {
+            net: net.to_string(),
+            family: zoo::family_of(net).to_string(),
+            baseline,
+            sparsity: [0.0; 3],
+            dliq: [0.0; 3],
+            mip2q: [0.0; 3],
+        };
+        for (i, &p) in PS.iter().enumerate() {
+            row.sparsity[i] = ctx
+                .point(net, EvalConfig::paper(Method::StructuredSparsity, p))?
+                .top1;
+            row.dliq[i] = ctx
+                .point(net, EvalConfig::paper(Method::Dliq { q: 4 }, p))?
+                .top1;
+            row.mip2q[i] = ctx
+                .point(net, EvalConfig::paper(Method::Mip2q { l_max: 7 }, p))?
+                .top1;
+        }
+        print_row(&row);
+        rows.push(row);
+    }
+    let json = to_json(&rows);
+    Ok((rows, json))
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<14} {:<16} {:>6} | {:>6} {:>6} {:>6} | {:>6} {:>6} {:>6} | {:>6} {:>6} {:>6}",
+        "net", "(stands in for)", "base",
+        "sp.25", "sp.50", "sp.75",
+        "dl.25", "dl.50", "dl.75",
+        "mp.25", "mp.50", "mp.75"
+    )
+}
+
+fn print_row(r: &Row) {
+    println!(
+        "{:<14} {:<16} {:>6} | {:>6} {:>6} {:>6} | {:>6} {:>6} {:>6} | {:>6} {:>6} {:>6}",
+        r.net,
+        r.family,
+        pct(r.baseline),
+        pct(r.sparsity[0]), pct(r.sparsity[1]), pct(r.sparsity[2]),
+        pct(r.dliq[0]), pct(r.dliq[1]), pct(r.dliq[2]),
+        pct(r.mip2q[0]), pct(r.mip2q[1]), pct(r.mip2q[2]),
+    );
+}
+
+fn to_json(rows: &[Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("net", Json::str(r.net.clone())),
+                    ("family", Json::str(r.family.clone())),
+                    ("baseline", Json::Num(r.baseline)),
+                    ("sparsity", Json::arr_f64(&r.sparsity)),
+                    ("dliq", Json::arr_f64(&r.dliq)),
+                    ("mip2q", Json::arr_f64(&r.mip2q)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Paper-shape checks over the measured rows (used by the bench harness
+/// to flag divergences; returns human-readable findings).
+pub fn shape_check(rows: &[Row]) -> Vec<String> {
+    let mut notes = Vec::new();
+    let mean =
+        |f: &dyn Fn(&Row) -> f64| rows.iter().map(|r| f(r)).sum::<f64>() / rows.len().max(1) as f64;
+    let base = mean(&|r: &Row| r.baseline);
+    let d50 = mean(&|r: &Row| r.dliq[1]);
+    let m50 = mean(&|r: &Row| r.mip2q[1]);
+    let s50 = mean(&|r: &Row| r.sparsity[1]);
+    let s75 = mean(&|r: &Row| r.sparsity[2]);
+    if base - d50 > 0.02 {
+        notes.push(format!("DLIQ p=0.5 loses {:.1}% > 2% vs baseline", (base - d50) * 100.0));
+    }
+    if base - m50 > 0.02 {
+        notes.push(format!("MIP2Q p=0.5 loses {:.1}% > 2% vs baseline", (base - m50) * 100.0));
+    }
+    if s50 > d50 || s50 > m50 {
+        notes.push("sparsity p=0.5 does NOT trail DLIQ/MIP2Q (paper: it must)".into());
+    }
+    if s75 > base - 0.10 {
+        notes.push("sparsity p=0.75 did not collapse (paper: catastrophic)".into());
+    }
+    notes
+}

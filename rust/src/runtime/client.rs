@@ -1,0 +1,55 @@
+//! PJRT CPU client wrapper with a compile cache.
+
+use super::executable::Executable;
+use crate::Result;
+use anyhow::Context;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// A process-wide PJRT runtime: one CPU client + compiled-executable cache
+/// keyed by HLO path (compilation is the expensive step; execution is
+/// cheap and thread-safe).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Loads + compiles an HLO text file (cached).
+    pub fn load_hlo(&self, path: &Path) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO {}: {}", path.display(), e))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {}", path.display(), e))?;
+        let exe = Arc::new(Executable::new(exe, path.display().to_string()));
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,131 @@
+//! Typed execution helpers over `xla::PjRtLoadedExecutable`.
+
+use crate::Result;
+
+/// A host tensor handed to / received from an executable.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Tensor {
+        let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+        debug_assert_eq!(data.len() as i64, d.iter().product::<i64>().max(1));
+        Tensor::F32 { data, dims: d }
+    }
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Tensor {
+        let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+        Tensor::I32 { data, dims: d }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Tensor::F32 { data, dims } => xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow::anyhow!("reshape: {}", e))?,
+            Tensor::I32 { data, dims } => xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow::anyhow!("reshape: {}", e))?,
+        })
+    }
+}
+
+/// A compiled executable with convenience entry points. Thread-safe: PJRT
+/// executables support concurrent execution.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub source: String,
+}
+
+// SAFETY: the PJRT CPU client's loaded executables are internally
+// synchronized; the raw pointer wrapper in the xla crate just lacks the
+// marker. Execution from multiple threads is the documented PJRT model.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    pub fn new(exe: xla::PjRtLoadedExecutable, source: String) -> Executable {
+        Executable { exe, source }
+    }
+
+    /// Executes with the given inputs; returns the tuple elements as f32
+    /// vectors (the zoo forwards return a 1-tuple of logits).
+    pub fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute {}: {}", self.source, e))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {}", e))?;
+        let elems = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose: {}", e))?;
+        elems
+            .into_iter()
+            .map(|e| e.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {}", e)))
+            .collect()
+    }
+
+    /// Executes and returns int32 tuple elements.
+    pub fn run_i32(&self, inputs: &[Tensor]) -> Result<Vec<Vec<i32>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute {}: {}", self.source, e))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {}", e))?;
+        let elems = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose: {}", e))?;
+        elems
+            .into_iter()
+            .map(|e| e.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec: {}", e)))
+            .collect()
+    }
+}
+
+/// Row-wise argmax over a logits buffer `[batch, classes]`.
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<usize> {
+    logits
+        .chunks_exact(classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        let logits = vec![0.1, 0.9, 0.0, 2.0, -1.0, 1.0];
+        assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn tensor_dims() {
+        let t = Tensor::f32(vec![0.0; 6], &[2, 3]);
+        match t {
+            Tensor::F32 { dims, .. } => assert_eq!(dims, vec![2, 3]),
+            _ => unreachable!(),
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT-lowered HLO text, compile once, execute many.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py and
+//! /opt/xla-example/README.md). Python never runs on this path — the
+//! binary is self-contained once `artifacts/` exists.
+
+pub mod client;
+pub mod executable;
+
+pub use client::Runtime;
+pub use executable::{Executable, Tensor};

@@ -1,0 +1,113 @@
+//! Bit-exact lane arithmetic (§IV-D.2, Fig. 6).
+//!
+//! Each PE lane computes one weight×activation product per cycle:
+//!
+//! * **High lane** — INT8×INT8 multiplier: `w · a`, INT16 product.
+//! * **DLIQ low lane** — INT-q×INT8 multiplier consuming the `q`-bit code
+//!   `c` directly; the fixed re-alignment makes the product
+//!   `(c · a) << (8-q)` — identical to `effective_value · a`.
+//! * **MIP2Q low lane** — barrel shifter: `±(a << k)` — identical to
+//!   `(±2^k) · a`.
+//!
+//! All products accumulate into an INT32 accumulator (never overflows for
+//! dot lengths < 2^16: |product| ≤ 128·127 < 2^14).
+//!
+//! The `*_equals_effective` tests tie the hardware datapath to the
+//! dequantized-float accuracy evaluation: simulating the PE and scaling by
+//! `w_scale · a_scale` gives exactly the fake-quant float result.
+
+/// High-precision lane: INT8 weight × INT8 activation.
+#[inline]
+pub fn lane_int8(w: i8, a: i8) -> i32 {
+    (w as i32) * (a as i32)
+}
+
+/// DLIQ low lane: q-bit code × INT8 activation, re-aligned by `8-q`.
+#[inline]
+pub fn lane_dliq(code: i8, a: i8, q: u8) -> i32 {
+    debug_assert!((2..=8).contains(&q));
+    ((code as i32) * (a as i32)) << (8 - q as u32)
+}
+
+/// MIP2Q low lane: arithmetic shift of the activation by `k`, negated by
+/// the sign bit. `code` is the crate's sign-magnitude code `±(k+1)`.
+#[inline]
+pub fn lane_mip2q(code: i8, a: i8) -> i32 {
+    debug_assert!(code != 0);
+    let k = (code.unsigned_abs() - 1) as u32;
+    let shifted = (a as i32) << k;
+    if code < 0 {
+        -shifted
+    } else {
+        shifted
+    }
+}
+
+/// INT32 accumulate (wrapping behavior would indicate a sizing bug; use
+/// checked add in debug).
+#[inline]
+pub fn accumulate(acc: i32, product: i32) -> i32 {
+    debug_assert!(acc.checked_add(product).is_some(), "accumulator overflow");
+    acc.wrapping_add(product)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{dliq, mip2q};
+
+    #[test]
+    fn dliq_lane_equals_effective_times_act() {
+        for q in 2..=8u8 {
+            for w in -127..=127i16 {
+                let (eff, code) = dliq::requantize(w, q);
+                for a in [-128i8, -77, -1, 0, 1, 55, 127] {
+                    assert_eq!(
+                        lane_dliq(code, a, q),
+                        eff as i32 * a as i32,
+                        "q={} w={} a={}",
+                        q,
+                        w,
+                        a
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mip2q_lane_equals_effective_times_act() {
+        for l_max in [1u8, 3, 5, 7] {
+            for w in -127..=127i16 {
+                let (eff, code) = mip2q::requantize(w, l_max);
+                for a in [-128i8, -77, -1, 0, 1, 55, 127] {
+                    assert_eq!(
+                        lane_mip2q(code, a),
+                        eff as i32 * a as i32,
+                        "L={} w={} a={}",
+                        l_max,
+                        w,
+                        a
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_lane_range() {
+        assert_eq!(lane_int8(-128, -128), 16384);
+        assert_eq!(lane_int8(127, -128), -16256);
+    }
+
+    #[test]
+    fn accumulator_headroom() {
+        // Worst-case dot of length 65536 lanes still fits i32:
+        // 65536 · 2^14 = 2^30 < 2^31.
+        let mut acc = 0i32;
+        for _ in 0..65536 {
+            acc = accumulate(acc, 16384);
+        }
+        assert_eq!(acc, 1 << 30);
+    }
+}

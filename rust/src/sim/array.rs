@@ -1,0 +1,149 @@
+//! PE-array wave execution: per-OC block statistics and slowest-PE
+//! synchronization.
+
+use super::config::PeLanes;
+use crate::quant::{BlockLayout, Method, StrumLayer};
+
+/// Per-block lane counts for one output channel's weight stream —
+/// everything the timing model needs (values themselves only matter for
+/// the bit-exact datapath, proved at PE level in `sim::pe`).
+#[derive(Debug, Clone, Default)]
+pub struct OcBlockStats {
+    /// (high lanes, low lanes issued, nonzero weights, total lanes) per block.
+    pub blocks: Vec<(u32, u32, u32, u32)>,
+}
+
+impl OcBlockStats {
+    /// Gathers block stats for output channel `oc` of a StruM layer.
+    /// Padding lanes count as low/zero lanes.
+    pub fn for_oc(layer: &StrumLayer, oc: usize) -> OcBlockStats {
+        let layout = BlockLayout::new(layer.oc, layer.rows, layer.cols, layer.params.block);
+        let per_oc_blocks = layout.blocks_r * layout.blocks_c;
+        let mut blocks = Vec::with_capacity(per_oc_blocks);
+        let issue_low = match layer.params.method {
+            Method::StructuredSparsity => false,
+            Method::Dliq { q } => q > 1,
+            Method::Mip2q { .. } => true,
+            Method::Baseline => false,
+        };
+        for b in 0..per_oc_blocks {
+            let blk = oc * per_oc_blocks + b;
+            let (mut hi, mut lo, mut nnz, mut total) = (0u32, 0u32, 0u32, 0u32);
+            for idx in layout.block_indices(blk) {
+                total += 1;
+                match idx {
+                    Some(i) => {
+                        if layer.mask[i] {
+                            hi += 1;
+                        } else if issue_low {
+                            lo += 1;
+                        }
+                        if layer.values[i] != 0 {
+                            nnz += 1;
+                        }
+                    }
+                    None => {
+                        // Padding: zero weight, low-precision lane; dense
+                        // mode still clocks it, sparse/StruM skip it free.
+                    }
+                }
+            }
+            blocks.push((hi, lo, nnz, total));
+        }
+        OcBlockStats { blocks }
+    }
+
+    /// Dot-product cycles in StruM mode with `lanes` provisioning.
+    pub fn strum_cycles(&self, lanes: PeLanes) -> u64 {
+        self.blocks
+            .iter()
+            .map(|&(hi, lo, _, _)| {
+                let hc = (hi as u64).div_ceil(lanes.mult as u64);
+                let lc = if lanes.low > 0 {
+                    (lo as u64).div_ceil(lanes.low as u64)
+                } else {
+                    (hi as u64 + lo as u64).div_ceil(lanes.mult as u64)
+                        .saturating_sub(hc)
+                };
+                hc.max(lc).max(1)
+            })
+            .sum()
+    }
+
+    /// Dense INT8 cycles (every lane clocks).
+    pub fn dense_cycles(&self, lanes: PeLanes) -> u64 {
+        self.blocks
+            .iter()
+            .map(|&(_, _, _, total)| (total as u64).div_ceil(lanes.mult as u64).max(1))
+            .sum()
+    }
+
+    /// Issued lane-op counts (high, low) for activity accounting.
+    pub fn lane_ops(&self) -> (u64, u64) {
+        self.blocks.iter().fold((0, 0), |(h, l), &(hi, lo, _, _)| {
+            (h + hi as u64, l + lo as u64)
+        })
+    }
+
+    /// Nonzero weight count (for find-first timing).
+    pub fn nnz(&self) -> u64 {
+        self.blocks.iter().map(|&(_, _, n, _)| n as u64).sum()
+    }
+}
+
+/// Wave synchronization: the wave takes as long as its slowest PE (§III —
+/// the effect StruM's balanced placement neutralizes).
+pub fn wave_cycles(per_pe: &[u64]) -> u64 {
+    per_pe.iter().copied().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{apply_strum, tensor::qlayer, Method, StrumParams};
+    use crate::util::prng::Rng;
+
+    fn strum_layer(oc: usize, cols: usize, p: f64, seed: u64) -> StrumLayer {
+        let mut rng = Rng::new(seed);
+        let data: Vec<i8> = (0..oc * cols)
+            .map(|_| (rng.gaussian() * 45.0).clamp(-127.0, 127.0) as i8)
+            .collect();
+        let l = qlayer("t", oc, 1, cols, data, vec![1.0; oc]);
+        apply_strum(&l, &StrumParams::paper(Method::Mip2q { l_max: 7 }, p))
+    }
+
+    #[test]
+    fn structured_cycles_equal_across_ocs() {
+        // The balance property: every OC's dot takes identical cycles.
+        let s = strum_layer(8, 64, 0.5, 1);
+        let lanes = PeLanes { mult: 4, low: 4 };
+        let cycles: Vec<u64> = (0..8)
+            .map(|oc| OcBlockStats::for_oc(&s, oc).strum_cycles(lanes))
+            .collect();
+        assert!(cycles.windows(2).all(|w| w[0] == w[1]), "{:?}", cycles);
+        // 64 cols = 4 blocks × max(8/4, 8/4) = 8 cycles.
+        assert_eq!(cycles[0], 8);
+    }
+
+    #[test]
+    fn dense_cycles_count_padding() {
+        let s = strum_layer(1, 20, 0.5, 2); // 20 cols → 2 blocks of 16
+        let st = OcBlockStats::for_oc(&s, 0);
+        assert_eq!(st.dense_cycles(PeLanes { mult: 8, low: 0 }), 4);
+    }
+
+    #[test]
+    fn lane_ops_match_p() {
+        let s = strum_layer(4, 64, 0.5, 3);
+        let st = OcBlockStats::for_oc(&s, 0);
+        let (hi, lo) = st.lane_ops();
+        assert_eq!(hi, 32);
+        assert_eq!(lo, 32);
+    }
+
+    #[test]
+    fn wave_is_max() {
+        assert_eq!(wave_cycles(&[3, 9, 1]), 9);
+        assert_eq!(wave_cycles(&[]), 0);
+    }
+}

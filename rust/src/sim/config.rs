@@ -1,0 +1,114 @@
+//! Simulator configuration: PE lane provisioning and array geometry.
+
+use crate::quant::Method;
+
+/// How a PE's 8 MAC lanes are provisioned (§V-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeLanes {
+    /// High-precision INT8×INT8 multiplier lanes available per cycle.
+    pub mult: u32,
+    /// Low-precision lanes (barrel shifters / narrow multipliers).
+    pub low: u32,
+}
+
+/// Execution mode of the simulated DPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimMode {
+    /// Baseline FlexNN: 8 INT8 multipliers, dense issue.
+    Int8Dense,
+    /// Baseline FlexNN with two-sided find-first sparsity acceleration:
+    /// only nonzero weight×activation pairs are issued, 8/cycle.
+    SparseFindFirst,
+    /// Static StruM PE (4 mult + 4 shifters). StruM layers issue 4 high +
+    /// 4 low pairs per cycle; pure-INT8 layers fall back to the 2-cycle
+    /// mode on the 4 remaining multipliers (§V-B).
+    StrumStatic,
+    /// Dynamically configured StruM PE (8 mult + N gated shifters): INT8
+    /// layers run full-rate on 8 multipliers, StruM layers run 4+4 with
+    /// the multipliers clock-gated.
+    StrumDynamic,
+    /// Performance-oriented StruM provisioning (§III): 8 multipliers + 8
+    /// shifters, issuing a full [1,16] block (8 high + 8 low) per cycle —
+    /// the "2× acceleration for a target precision ratio" configuration.
+    StrumPerf,
+}
+
+impl SimMode {
+    /// Lane provisioning when running a StruM-encoded layer.
+    pub fn strum_lanes(&self) -> PeLanes {
+        match self {
+            SimMode::Int8Dense | SimMode::SparseFindFirst => PeLanes { mult: 8, low: 0 },
+            SimMode::StrumStatic | SimMode::StrumDynamic => PeLanes { mult: 4, low: 4 },
+            SimMode::StrumPerf => PeLanes { mult: 8, low: 8 },
+        }
+    }
+
+    /// Lane provisioning when running a pure-INT8 layer.
+    pub fn int8_lanes(&self) -> PeLanes {
+        match self {
+            // Static StruM permanently gave up 4 multipliers: 2-cycle mode.
+            SimMode::StrumStatic => PeLanes { mult: 4, low: 0 },
+            _ => PeLanes { mult: 8, low: 0 },
+        }
+    }
+
+    pub fn uses_find_first(&self) -> bool {
+        matches!(self, SimMode::SparseFindFirst)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimMode::Int8Dense => "int8-dense",
+            SimMode::SparseFindFirst => "sparse-find-first",
+            SimMode::StrumStatic => "strum-static",
+            SimMode::StrumDynamic => "strum-dynamic",
+            SimMode::StrumPerf => "strum-perf",
+        }
+    }
+}
+
+/// Array geometry + mode for one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub mode: SimMode,
+    /// Columns in the PE grid (each column owns one OC set, §VI).
+    pub cols: usize,
+    /// Rows in the PE grid (each row owns one output pixel set).
+    pub rows: usize,
+    /// StruM method of the weight encoding being executed (None = INT8).
+    pub method: Option<Method>,
+}
+
+impl SimConfig {
+    pub fn flexnn(mode: SimMode, method: Option<Method>) -> SimConfig {
+        SimConfig { mode, cols: 16, rows: 16, method }
+    }
+
+    pub fn num_pes(&self) -> usize {
+        self.cols * self.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_strum_int8_fallback_is_half_rate() {
+        let m = SimMode::StrumStatic;
+        assert_eq!(m.strum_lanes(), PeLanes { mult: 4, low: 4 });
+        assert_eq!(m.int8_lanes(), PeLanes { mult: 4, low: 0 });
+    }
+
+    #[test]
+    fn dynamic_strum_keeps_full_int8_rate() {
+        let m = SimMode::StrumDynamic;
+        assert_eq!(m.int8_lanes(), PeLanes { mult: 8, low: 0 });
+    }
+
+    #[test]
+    fn perf_mode_doubles_issue_width() {
+        let lanes = SimMode::StrumPerf.strum_lanes();
+        assert_eq!(lanes.mult + lanes.low, 16);
+    }
+}

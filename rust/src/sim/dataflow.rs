@@ -1,0 +1,124 @@
+//! Layer → DPU work schedule (§VI).
+//!
+//! FlexNN maps a conv layer onto the 16×16 grid as: each *column* owns one
+//! output channel (weights broadcast down the column), each *row* owns one
+//! output pixel (activations broadcast across the row). A layer therefore
+//! executes as a sequence of **waves**: (OC tile of 16) × (pixel tile of
+//! 16); within a wave all 256 PEs run independent dot products of length
+//! `kh·kw·ic` and the wave completes when the slowest PE finishes — the
+//! synchronization that makes unbalanced low-precision placement costly.
+
+/// Static shape of a conv / FC layer as the DPU sees it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerShape {
+    pub name: String,
+    /// Output channels.
+    pub oc: usize,
+    /// Input channels.
+    pub ic: usize,
+    /// Kernel height/width (1 for FC).
+    pub kh: usize,
+    pub kw: usize,
+    /// Output spatial extent (oh·ow output pixels; 1 for FC).
+    pub oh: usize,
+    pub ow: usize,
+}
+
+impl LayerShape {
+    pub fn conv(name: &str, oc: usize, ic: usize, k: usize, oh: usize, ow: usize) -> Self {
+        LayerShape { name: name.into(), oc, ic, kh: k, kw: k, oh, ow }
+    }
+
+    pub fn fc(name: &str, oc: usize, ic: usize) -> Self {
+        LayerShape { name: name.into(), oc, ic, kh: 1, kw: 1, oh: 1, ow: 1 }
+    }
+
+    /// Dot-product length per output element.
+    pub fn dot_len(&self) -> usize {
+        self.ic * self.kh * self.kw
+    }
+
+    /// Output pixels per output channel.
+    pub fn pixels(&self) -> usize {
+        self.oh * self.ow
+    }
+
+    /// Total MAC operations (dense).
+    pub fn macs(&self) -> u64 {
+        (self.oc * self.pixels() * self.dot_len()) as u64
+    }
+
+    /// Weight element count.
+    pub fn weights(&self) -> usize {
+        self.oc * self.dot_len()
+    }
+}
+
+/// Wave schedule over a grid.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub oc_tiles: usize,
+    pub pixel_tiles: usize,
+    pub cols: usize,
+    pub rows: usize,
+}
+
+impl Schedule {
+    pub fn new(shape: &LayerShape, cols: usize, rows: usize) -> Schedule {
+        Schedule {
+            oc_tiles: shape.oc.div_ceil(cols),
+            pixel_tiles: shape.pixels().div_ceil(rows),
+            cols,
+            rows,
+        }
+    }
+
+    pub fn waves(&self) -> usize {
+        self.oc_tiles * self.pixel_tiles
+    }
+
+    /// Output channels active in a given OC tile.
+    pub fn tile_ocs(&self, tile: usize, total_oc: usize) -> std::ops::Range<usize> {
+        let start = tile * self.cols;
+        start..(start + self.cols).min(total_oc)
+    }
+
+    /// Pixels active in a given pixel tile.
+    pub fn tile_pixels(&self, tile: usize, total_pixels: usize) -> std::ops::Range<usize> {
+        let start = tile * self.rows;
+        start..(start + self.rows).min(total_pixels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_accounting() {
+        let s = LayerShape::conv("c", 64, 32, 3, 16, 16);
+        assert_eq!(s.dot_len(), 288);
+        assert_eq!(s.pixels(), 256);
+        assert_eq!(s.macs(), 64 * 256 * 288);
+        assert_eq!(s.weights(), 64 * 288);
+    }
+
+    #[test]
+    fn schedule_tiles() {
+        let s = LayerShape::conv("c", 40, 32, 1, 8, 5); // 40 pixels
+        let sch = Schedule::new(&s, 16, 16);
+        assert_eq!(sch.oc_tiles, 3); // ceil(40/16)
+        assert_eq!(sch.pixel_tiles, 3);
+        assert_eq!(sch.waves(), 9);
+        assert_eq!(sch.tile_ocs(2, 40), 32..40);
+        assert_eq!(sch.tile_pixels(2, 40), 32..40);
+    }
+
+    #[test]
+    fn fc_is_single_pixel() {
+        let s = LayerShape::fc("fc", 10, 128);
+        assert_eq!(s.pixels(), 1);
+        let sch = Schedule::new(&s, 16, 16);
+        assert_eq!(sch.waves(), 1);
+    }
+}

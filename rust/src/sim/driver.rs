@@ -1,0 +1,349 @@
+//! Layer-level simulation driver: schedules a layer onto the array,
+//! applies wave synchronization, and accumulates activity for the power
+//! model (the SAIF-equivalent trace of §VI).
+//!
+//! Timing is deterministic for dense and StruM modes (cycles depend only
+//! on the weight masks); two-sided find-first sparsity depends on runtime
+//! activation zeros, which are modeled stochastically from an activation
+//! density parameter (Gaussian-approximated Binomial per block) — the
+//! fidelity the paper's performance argument needs (it is about *balance*,
+//! not exact sparse schedules).
+
+use super::array::{wave_cycles, OcBlockStats};
+use super::config::{SimConfig, SimMode};
+use super::dataflow::{LayerShape, Schedule};
+use crate::encode::compression::ratio_for;
+use crate::hw::power::Activity;
+use crate::quant::{Method, StrumLayer};
+use crate::util::prng::Rng;
+
+/// Result of simulating one layer.
+#[derive(Debug, Clone)]
+pub struct LayerSim {
+    pub name: String,
+    pub mode: SimMode,
+    /// Total cycles including wave synchronization.
+    pub cycles: u64,
+    /// Waves executed.
+    pub waves: u64,
+    /// Dense MAC count of the layer.
+    pub macs: u64,
+    /// Lower bound: all issue slots busy every cycle.
+    pub ideal_cycles: u64,
+    /// Issued high/low lane ops.
+    pub mult_ops: u64,
+    pub low_ops: u64,
+    /// Issue-slot utilization in [0, 1].
+    pub utilization: f64,
+    /// Activity trace for the power model.
+    pub activity: Activity,
+}
+
+impl LayerSim {
+    /// Speedup of this run versus a dense-INT8 run of the same layer.
+    pub fn speedup_vs(&self, dense: &LayerSim) -> f64 {
+        dense.cycles as f64 / self.cycles.max(1) as f64
+    }
+}
+
+/// Per-cycle issue capacity of a PE in this mode.
+fn lane_capacity(mode: SimMode, strum_weights: bool) -> u64 {
+    let lanes = if strum_weights {
+        mode.strum_lanes()
+    } else {
+        mode.int8_lanes()
+    };
+    (lanes.mult + lanes.low) as u64
+}
+
+/// Simulates one layer. `weights` must describe the same tensor as
+/// `shape` (oc × (kh·kw) × ic). `act_density` is the fraction of nonzero
+/// activations (find-first mode only).
+pub fn simulate_layer(
+    shape: &LayerShape,
+    weights: &StrumLayer,
+    cfg: &SimConfig,
+    act_density: f64,
+    seed: u64,
+) -> LayerSim {
+    assert_eq!(weights.oc, shape.oc, "oc mismatch");
+    assert_eq!(weights.rows * weights.cols, shape.dot_len(), "dot length mismatch");
+    let strum_weights = weights.params.method != Method::Baseline
+        && matches!(
+            cfg.mode,
+            SimMode::StrumStatic | SimMode::StrumDynamic | SimMode::StrumPerf
+        );
+    let lanes = if strum_weights {
+        cfg.mode.strum_lanes()
+    } else {
+        cfg.mode.int8_lanes()
+    };
+    let mut rng = Rng::new(seed);
+
+    // Per-OC deterministic stats (weights are reused by every pixel).
+    let stats: Vec<OcBlockStats> = (0..shape.oc)
+        .map(|oc| OcBlockStats::for_oc(weights, oc))
+        .collect();
+    let det_cycles: Vec<u64> = stats
+        .iter()
+        .map(|st| match cfg.mode {
+            SimMode::Int8Dense => st.dense_cycles(lanes),
+            SimMode::SparseFindFirst => 0, // sampled per pixel below
+            _ => {
+                if strum_weights {
+                    st.strum_cycles(lanes)
+                } else {
+                    st.dense_cycles(lanes)
+                }
+            }
+        })
+        .collect();
+
+    let sched = Schedule::new(shape, cfg.cols, cfg.rows);
+    let pixels = shape.pixels();
+    let mut total_cycles = 0u64;
+    let mut busy_pe_cycles = 0u64;
+    let mut mult_ops = 0u64;
+    let mut low_ops = 0u64;
+    let mut wave_count = 0u64;
+
+    let mut pe_cycles: Vec<u64> = Vec::with_capacity(cfg.num_pes());
+    for oct in 0..sched.oc_tiles {
+        let ocs = sched.tile_ocs(oct, shape.oc);
+        for pxt in 0..sched.pixel_tiles {
+            let pxs = sched.tile_pixels(pxt, pixels);
+            pe_cycles.clear();
+            for oc in ocs.clone() {
+                for _px in pxs.clone() {
+                    let c = if cfg.mode == SimMode::SparseFindFirst {
+                        sparse_pixel_cycles(&stats[oc], act_density, lanes.mult as u64, &mut rng)
+                    } else {
+                        det_cycles[oc]
+                    };
+                    pe_cycles.push(c);
+                    busy_pe_cycles += c;
+                    let (hi, lo) = stats[oc].lane_ops();
+                    match cfg.mode {
+                        SimMode::Int8Dense => mult_ops += shape.dot_len() as u64,
+                        SimMode::SparseFindFirst => {
+                            mult_ops += (stats[oc].nnz() as f64 * act_density) as u64
+                        }
+                        _ => {
+                            if strum_weights {
+                                mult_ops += hi;
+                                low_ops += lo;
+                            } else {
+                                mult_ops += shape.dot_len() as u64;
+                            }
+                        }
+                    }
+                }
+            }
+            total_cycles += wave_cycles(&pe_cycles);
+            wave_count += 1;
+        }
+    }
+
+    // Memory traffic: weights stream once per OC tile × pixel-tile wave
+    // (RF-resident within a wave), compressed by the encoding ratio;
+    // activations load once per pixel per wave and broadcast across
+    // columns (§VI).
+    let ratio = if strum_weights {
+        ratio_for(weights.params.method, weights.params.p)
+    } else {
+        1.0
+    };
+    let weight_bytes_total =
+        (shape.weights() as f64 * ratio) as u64 * sched.pixel_tiles as u64;
+    let act_bytes_total = (pixels * shape.dot_len()) as u64 * sched.oc_tiles as u64;
+
+    let macs = shape.macs();
+    let cap = lane_capacity(cfg.mode, strum_weights);
+    let ideal_cycles = macs.div_ceil(cap * cfg.num_pes() as u64);
+    let issued = mult_ops + low_ops;
+    let utilization = issued as f64 / (total_cycles.max(1) * cap * cfg.num_pes() as u64) as f64;
+
+    let activity = Activity {
+        cycles: total_cycles,
+        mult_ops,
+        low_ops,
+        tree_cycles: busy_pe_cycles,
+        accum_ops: busy_pe_cycles,
+        rf_bytes: busy_pe_cycles * 26, // 8B IF + 8B FL + 8B OF + 2B bitmap
+        sram_bytes: weight_bytes_total + act_bytes_total,
+        pe_active_cycles: busy_pe_cycles,
+    };
+
+    LayerSim {
+        name: shape.name.clone(),
+        mode: cfg.mode,
+        cycles: total_cycles,
+        waves: wave_count,
+        macs,
+        ideal_cycles,
+        mult_ops,
+        low_ops,
+        utilization,
+        activity,
+    }
+}
+
+/// Samples one pixel's find-first dot cycles: per block, the number of
+/// surviving (nonzero-weight AND nonzero-activation) pairs is
+/// Binomial(nnz_w, act_density), Gaussian-approximated.
+fn sparse_pixel_cycles(st: &OcBlockStats, density: f64, mult: u64, rng: &mut Rng) -> u64 {
+    let mut cycles = 0u64;
+    for &(_, _, nnz, _) in &st.blocks {
+        let n = nnz as f64;
+        let mean = n * density;
+        let var = (n * density * (1.0 - density)).max(0.0);
+        let sample = (mean + rng.gaussian() * var.sqrt()).round().clamp(0.0, n) as u64;
+        cycles += sample.div_ceil(mult).max(1);
+    }
+    cycles
+}
+
+/// Simulates a network (sequence of layers) and aggregates activity.
+pub fn simulate_network(
+    layers: &[(LayerShape, StrumLayer)],
+    cfg: &SimConfig,
+    act_density: f64,
+    seed: u64,
+) -> (Vec<LayerSim>, Activity) {
+    let mut agg = Activity::default();
+    let sims: Vec<LayerSim> = layers
+        .iter()
+        .enumerate()
+        .map(|(i, (shape, w))| simulate_layer(shape, w, cfg, act_density, seed + i as u64))
+        .collect();
+    for s in &sims {
+        agg.cycles += s.activity.cycles;
+        agg.mult_ops += s.activity.mult_ops;
+        agg.low_ops += s.activity.low_ops;
+        agg.tree_cycles += s.activity.tree_cycles;
+        agg.accum_ops += s.activity.accum_ops;
+        agg.rf_bytes += s.activity.rf_bytes;
+        agg.sram_bytes += s.activity.sram_bytes;
+        agg.pe_active_cycles += s.activity.pe_active_cycles;
+    }
+    (sims, agg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{apply_strum, apply_unstructured, tensor::qlayer, StrumParams};
+
+    fn make_layer(oc: usize, ic: usize, k: usize, seed: u64) -> (LayerShape, crate::quant::QLayer) {
+        let mut rng = Rng::new(seed);
+        let shape = LayerShape::conv("test", oc, ic, k, 8, 8);
+        let rows = k * k;
+        let data: Vec<i8> = (0..oc * rows * ic)
+            .map(|_| (rng.gaussian() * 45.0).clamp(-127.0, 127.0) as i8)
+            .collect();
+        (shape, qlayer("test", oc, rows, ic, data, vec![0.01; oc]))
+    }
+
+    #[test]
+    fn dense_cycles_match_analytic() {
+        let (shape, q) = make_layer(16, 32, 1, 1);
+        let s = apply_strum(&q, &StrumParams::paper(Method::Baseline, 0.0));
+        let cfg = SimConfig::flexnn(SimMode::Int8Dense, None);
+        let sim = simulate_layer(&shape, &s, &cfg, 1.0, 0);
+        // 64 pixels → 4 pixel tiles; 16 oc → 1 oc tile; dot = 32 = 2
+        // blocks of 16 → 4 cycles per dot; every wave max = 4.
+        assert_eq!(sim.waves, 4);
+        assert_eq!(sim.cycles, 16);
+        assert_eq!(sim.mult_ops, shape.macs());
+    }
+
+    #[test]
+    fn strum_perf_mode_2x_over_dense() {
+        let (shape, q) = make_layer(16, 64, 1, 2);
+        let strum = apply_strum(&q, &StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5));
+        let base = apply_strum(&q, &StrumParams::paper(Method::Baseline, 0.0));
+        let dense = simulate_layer(
+            &shape,
+            &base,
+            &SimConfig::flexnn(SimMode::Int8Dense, None),
+            1.0,
+            0,
+        );
+        let perf = simulate_layer(
+            &shape,
+            &strum,
+            &SimConfig::flexnn(SimMode::StrumPerf, Some(Method::Mip2q { l_max: 7 })),
+            1.0,
+            0,
+        );
+        // Guaranteed balance ⇒ exactly 2× (paper §V-B).
+        assert_eq!(perf.speedup_vs(&dense), 2.0);
+        assert!(perf.utilization > 0.99);
+    }
+
+    #[test]
+    fn unstructured_placement_loses_speedup() {
+        // The slowest-PE effect: same p, unbalanced placement ⇒ > ideal
+        // cycles in perf mode.
+        let (shape, q) = make_layer(32, 128, 1, 3);
+        let cfg = SimConfig::flexnn(SimMode::StrumPerf, Some(Method::Mip2q { l_max: 7 }));
+        let structured = apply_strum(&q, &StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5));
+        let unstructured = apply_unstructured(&q, Method::Mip2q { l_max: 7 }, 0.5);
+        let s_sim = simulate_layer(&shape, &structured, &cfg, 1.0, 0);
+        let u_sim = simulate_layer(&shape, &unstructured, &cfg, 1.0, 0);
+        assert!(
+            u_sim.cycles > s_sim.cycles,
+            "unstructured {} vs structured {}",
+            u_sim.cycles,
+            s_sim.cycles
+        );
+        // Balanced placement achieves the ideal cycle count exactly.
+        assert_eq!(s_sim.cycles, s_sim.ideal_cycles);
+    }
+
+    #[test]
+    fn static_strum_int8_fallback_halves_throughput() {
+        let (shape, q) = make_layer(16, 32, 1, 4);
+        let base = apply_strum(&q, &StrumParams::paper(Method::Baseline, 0.0));
+        let dense = simulate_layer(
+            &shape,
+            &base,
+            &SimConfig::flexnn(SimMode::Int8Dense, None),
+            1.0,
+            0,
+        );
+        let fallback = simulate_layer(
+            &shape,
+            &base,
+            &SimConfig::flexnn(SimMode::StrumStatic, None),
+            1.0,
+            0,
+        );
+        assert_eq!(fallback.cycles, dense.cycles * 2);
+    }
+
+    #[test]
+    fn sparse_mode_faster_with_sparser_acts() {
+        let (shape, q) = make_layer(16, 64, 1, 5);
+        let s = apply_strum(&q, &StrumParams::paper(Method::Baseline, 0.0));
+        let cfg = SimConfig::flexnn(SimMode::SparseFindFirst, None);
+        let dense_acts = simulate_layer(&shape, &s, &cfg, 1.0, 11);
+        let sparse_acts = simulate_layer(&shape, &s, &cfg, 0.3, 11);
+        assert!(sparse_acts.cycles < dense_acts.cycles);
+    }
+
+    #[test]
+    fn network_aggregation() {
+        let (shape, q) = make_layer(8, 32, 1, 6);
+        let s = apply_strum(&q, &StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5));
+        let cfg = SimConfig::flexnn(SimMode::StrumStatic, Some(Method::Mip2q { l_max: 7 }));
+        let (sims, agg) = simulate_network(
+            &[(shape.clone(), s.clone()), (shape, s)],
+            &cfg,
+            1.0,
+            0,
+        );
+        assert_eq!(sims.len(), 2);
+        assert_eq!(agg.cycles, sims[0].activity.cycles + sims[1].activity.cycles);
+    }
+}

@@ -1,0 +1,29 @@
+//! Cycle-level FlexNN DPU simulator (§V, Fig. 7/8).
+//!
+//! Models the paper's accelerator at the granularity its architectural
+//! claims live at: per-cycle lane issue inside each PE (find-first
+//! sparsity, StruM mask routing, the 2-cycle INT8 fallback), wave-
+//! synchronized execution across the 16×16 PE array (the *slowest-PE
+//! effect*), and RF/SRAM traffic for the power model.
+//!
+//! * [`arith`]  — bit-exact lane arithmetic: INT8×INT8 multiply,
+//!   DLIQ narrow multiply + realign, MIP2Q arithmetic shift; proves the
+//!   hardware datapath computes exactly the dot products the accuracy
+//!   evaluation assumes.
+//! * [`config`] — PE lane provisioning per PE-variant modes.
+//! * [`pe`]     — one PE's dot-product engine over mask-encoded weights.
+//! * [`array`]  — OC→column / pixel→row work distribution, wave sync.
+//! * [`dataflow`] — layer → work-unit schedule (§VI: 16-IC granularity,
+//!   weights broadcast within a column, activations across columns).
+//! * [`driver`] — runs whole layers/networks, accumulates
+//!   [`crate::hw::power::Activity`].
+
+pub mod arith;
+pub mod array;
+pub mod config;
+pub mod dataflow;
+pub mod driver;
+pub mod pe;
+
+pub use config::{PeLanes, SimMode};
+pub use driver::{simulate_layer, LayerSim};

@@ -1,0 +1,280 @@
+//! Cycle-level PE dot-product engine (Fig. 7/8).
+//!
+//! A PE job is one output feature's dot product: a stream of `[1, w]`
+//! weight blocks (effective values + payload codes + precision mask)
+//! against the matching activation lanes. Per cycle the PE issues up to
+//! `mult` high-precision and `low` low-precision pairs, selected by the
+//! find-first logic over the precision/sparsity bitmap; products reduce
+//! through the adder tree into the INT32 accumulator.
+//!
+//! Cycle accounting:
+//! * dense INT8: `⌈w / mult⌉` cycles per block — zeros still issue;
+//! * find-first sparsity: `⌈nnz / mult⌉` (two-sided: a pair is skipped if
+//!   either side is zero);
+//! * StruM: `max(⌈hi/mult⌉, ⌈lo/low⌉)` — with the structured guarantee of
+//!   exactly `(1-p)·w` high lanes per block this is constant across
+//!   blocks and PEs (the balance property, §III/§V-B); unstructured
+//!   placement makes it data-dependent (the slowest-PE ablation).
+
+use super::arith::{accumulate, lane_dliq, lane_int8, lane_mip2q};
+use super::config::PeLanes;
+use crate::quant::Method;
+
+/// One weight block as the PE consumes it.
+#[derive(Debug, Clone, Copy)]
+pub struct WBlockRef<'a> {
+    /// Effective integer values (INT8 grid; ±128 possible for MIP2Q).
+    pub values: &'a [i16],
+    /// Payload codes (what the real datapath consumes).
+    pub codes: &'a [i8],
+    /// Precision mask, `true` = high (INT8) lane.
+    pub mask: &'a [bool],
+}
+
+/// Result of one PE job.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DotResult {
+    pub acc: i32,
+    pub cycles: u64,
+    /// High-precision multiplier lane-ops actually issued.
+    pub mult_ops: u64,
+    /// Low-precision lane-ops actually issued.
+    pub low_ops: u64,
+}
+
+/// Executes a full dot product over `blocks` with per-block activation
+/// slices, in StruM mode with the given lane provisioning and method.
+///
+/// `method` selects the low-lane datapath (DLIQ realign vs MIP2Q shift);
+/// `Method::StructuredSparsity` low lanes are hardwired zero (no issue at
+/// all — the mask tells the PE to skip them, like sparsity).
+pub fn dot_strum(
+    blocks: &[WBlockRef<'_>],
+    acts: &[&[i8]],
+    lanes: PeLanes,
+    method: Method,
+) -> DotResult {
+    debug_assert_eq!(blocks.len(), acts.len());
+    debug_assert!(lanes.mult > 0);
+    let mut r = DotResult::default();
+    for (blk, a) in blocks.iter().zip(acts.iter()) {
+        debug_assert_eq!(blk.values.len(), a.len());
+        let mut hi = 0u64;
+        let mut lo = 0u64;
+        for i in 0..blk.values.len() {
+            if blk.mask[i] {
+                hi += 1;
+                r.acc = accumulate(r.acc, lane_int8(blk.values[i] as i8, a[i]));
+            } else {
+                match method {
+                    Method::StructuredSparsity => {} // zero lane: skipped
+                    Method::Dliq { q } => {
+                        if q > 1 {
+                            lo += 1;
+                            r.acc = accumulate(r.acc, lane_dliq(blk.codes[i], a[i], q));
+                        }
+                    }
+                    Method::Mip2q { .. } => {
+                        lo += 1;
+                        r.acc = accumulate(r.acc, lane_mip2q(blk.codes[i], a[i]));
+                    }
+                    Method::Baseline => {
+                        hi += 1;
+                        r.acc = accumulate(r.acc, lane_int8(blk.values[i] as i8, a[i]));
+                    }
+                }
+            }
+        }
+        let hi_cycles = hi.div_ceil(lanes.mult as u64);
+        let lo_cycles = if lanes.low > 0 {
+            lo.div_ceil(lanes.low as u64)
+        } else {
+            // No low lanes: low ops fall back onto the multipliers.
+            (hi + lo).div_ceil(lanes.mult as u64).saturating_sub(hi_cycles) + hi_cycles
+        };
+        r.cycles += hi_cycles.max(lo_cycles).max(1);
+        r.mult_ops += hi;
+        r.low_ops += lo;
+    }
+    r
+}
+
+/// Dense INT8 dot product: every lane issues, `⌈w/mult⌉` cycles/block.
+pub fn dot_int8_dense(blocks: &[WBlockRef<'_>], acts: &[&[i8]], lanes: PeLanes) -> DotResult {
+    let mut r = DotResult::default();
+    for (blk, a) in blocks.iter().zip(acts.iter()) {
+        for i in 0..blk.values.len() {
+            r.acc = accumulate(r.acc, lane_int8(blk.values[i] as i8, a[i]));
+        }
+        let n = blk.values.len() as u64;
+        r.cycles += n.div_ceil(lanes.mult as u64).max(1);
+        r.mult_ops += n;
+    }
+    r
+}
+
+/// Two-sided find-first sparse dot product: pairs where either the weight
+/// or the activation is zero are skipped entirely (Fig. 7).
+pub fn dot_sparse(blocks: &[WBlockRef<'_>], acts: &[&[i8]], lanes: PeLanes) -> DotResult {
+    let mut r = DotResult::default();
+    for (blk, a) in blocks.iter().zip(acts.iter()) {
+        let mut nnz = 0u64;
+        for i in 0..blk.values.len() {
+            if blk.values[i] != 0 && a[i] != 0 {
+                nnz += 1;
+                r.acc = accumulate(r.acc, lane_int8(blk.values[i] as i8, a[i]));
+            }
+        }
+        r.cycles += nnz.div_ceil(lanes.mult as u64).max(1);
+        r.mult_ops += nnz;
+    }
+    r
+}
+
+/// INT32 reference dot product from effective values (the oracle the PE
+/// datapath must match bit-for-bit).
+pub fn reference_dot(blocks: &[WBlockRef<'_>], acts: &[&[i8]]) -> i32 {
+    let mut acc = 0i64;
+    for (blk, a) in blocks.iter().zip(acts.iter()) {
+        for i in 0..blk.values.len() {
+            acc += blk.values[i] as i64 * a[i] as i64;
+        }
+    }
+    acc as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{apply_strum, tensor::qlayer, Method, StrumParams};
+    use crate::util::prng::Rng;
+
+    /// Builds blocks + acts from a StruM layer's first output channel.
+    fn blocks_of(
+        s: &crate::quant::StrumLayer,
+        w: usize,
+        acts: &[i8],
+    ) -> (Vec<(Vec<i16>, Vec<i8>, Vec<bool>)>, Vec<Vec<i8>>) {
+        let n = s.cols;
+        let mut blocks = Vec::new();
+        let mut act_chunks = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let end = (i + w).min(n);
+            blocks.push((
+                s.values[i..end].to_vec(),
+                s.codes[i..end].to_vec(),
+                s.mask[i..end].to_vec(),
+            ));
+            act_chunks.push(acts[i..end].to_vec());
+            i = end;
+        }
+        (blocks, act_chunks)
+    }
+
+    fn run_case(method: Method, p: f64, lanes: PeLanes) {
+        let mut rng = Rng::new(7);
+        let n = 64;
+        let data: Vec<i8> = (0..n)
+            .map(|_| (rng.gaussian() * 45.0).clamp(-127.0, 127.0) as i8)
+            .collect();
+        let acts: Vec<i8> = (0..n)
+            .map(|_| (rng.gaussian() * 30.0).clamp(-127.0, 127.0) as i8)
+            .collect();
+        let layer = qlayer("t", 1, 1, n, data, vec![1.0]);
+        let s = apply_strum(&layer, &StrumParams::new(method, 1, 16, p));
+        let (blocks, chunks) = blocks_of(&s, 16, &acts);
+        let brefs: Vec<WBlockRef> = blocks
+            .iter()
+            .map(|(v, c, m)| WBlockRef { values: v, codes: c, mask: m })
+            .collect();
+        let arefs: Vec<&[i8]> = chunks.iter().map(|c| c.as_slice()).collect();
+        let r = dot_strum(&brefs, &arefs, lanes, method);
+        assert_eq!(r.acc, reference_dot(&brefs, &arefs), "{:?}", method);
+    }
+
+    #[test]
+    fn datapath_matches_reference_all_methods() {
+        let lanes = PeLanes { mult: 4, low: 4 };
+        run_case(Method::Dliq { q: 4 }, 0.5, lanes);
+        run_case(Method::Dliq { q: 2 }, 0.25, lanes);
+        run_case(Method::Mip2q { l_max: 7 }, 0.5, lanes);
+        run_case(Method::Mip2q { l_max: 5 }, 0.75, lanes);
+        run_case(Method::StructuredSparsity, 0.5, lanes);
+    }
+
+    #[test]
+    fn structured_blocks_take_constant_cycles() {
+        // p=0.5, [1,16], 4+4 lanes: every block is exactly 8 hi + 8 lo →
+        // 2 cycles per block, no variance.
+        let mut rng = Rng::new(3);
+        let n = 160;
+        let data: Vec<i8> = (0..n)
+            .map(|_| (rng.gaussian() * 45.0).clamp(-127.0, 127.0) as i8)
+            .collect();
+        let acts: Vec<i8> = vec![1; n];
+        let layer = qlayer("t", 1, 1, n, data, vec![1.0]);
+        let s = apply_strum(&layer, &StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5));
+        let (blocks, chunks) = blocks_of(&s, 16, &acts);
+        let brefs: Vec<WBlockRef> = blocks
+            .iter()
+            .map(|(v, c, m)| WBlockRef { values: v, codes: c, mask: m })
+            .collect();
+        let arefs: Vec<&[i8]> = chunks.iter().map(|c| c.as_slice()).collect();
+        let r = dot_strum(&brefs, &arefs, PeLanes { mult: 4, low: 4 }, Method::Mip2q { l_max: 7 });
+        assert_eq!(r.cycles, 2 * brefs.len() as u64);
+        assert_eq!(r.mult_ops, (n / 2) as u64);
+        assert_eq!(r.low_ops, (n / 2) as u64);
+    }
+
+    #[test]
+    fn perf_lanes_issue_full_block_per_cycle() {
+        let mut rng = Rng::new(5);
+        let n = 64;
+        let data: Vec<i8> = (0..n)
+            .map(|_| (rng.gaussian() * 45.0).clamp(-127.0, 127.0) as i8)
+            .collect();
+        let acts: Vec<i8> = vec![2; n];
+        let layer = qlayer("t", 1, 1, n, data, vec![1.0]);
+        let s = apply_strum(&layer, &StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5));
+        let (blocks, chunks) = blocks_of(&s, 16, &acts);
+        let brefs: Vec<WBlockRef> = blocks
+            .iter()
+            .map(|(v, c, m)| WBlockRef { values: v, codes: c, mask: m })
+            .collect();
+        let arefs: Vec<&[i8]> = chunks.iter().map(|c| c.as_slice()).collect();
+        // 8+8 lanes: 1 cycle per [1,16] block — 2× over the 8-mult dense
+        // baseline's 2 cycles.
+        let r = dot_strum(&brefs, &arefs, PeLanes { mult: 8, low: 8 }, Method::Mip2q { l_max: 7 });
+        assert_eq!(r.cycles, brefs.len() as u64);
+        let dense = dot_int8_dense(&brefs, &arefs, PeLanes { mult: 8, low: 0 });
+        assert_eq!(dense.cycles, 2 * brefs.len() as u64);
+    }
+
+    #[test]
+    fn sparse_skips_zero_pairs() {
+        let values: Vec<i16> = vec![0, 5, 0, -3, 0, 0, 0, 2];
+        let codes: Vec<i8> = values.iter().map(|&v| v as i8).collect();
+        let mask = vec![true; 8];
+        let acts: Vec<i8> = vec![1, 1, 1, 0, 1, 1, 1, 1];
+        let blk = WBlockRef { values: &values, codes: &codes, mask: &mask };
+        let r = dot_sparse(&[blk], &[&acts], PeLanes { mult: 8, low: 0 });
+        // Nonzero pairs: (5,1), (2,1) — (-3,0) is skipped two-sided.
+        assert_eq!(r.mult_ops, 2);
+        assert_eq!(r.acc, 7);
+        assert_eq!(r.cycles, 1);
+    }
+
+    #[test]
+    fn int8_fallback_two_cycle_mode() {
+        // Static StruM PE on an INT8 layer: 4 multipliers for 16 lanes →
+        // 4 cycles per block (2× slower than baseline's 2).
+        let values: Vec<i16> = (1..=16).collect();
+        let codes: Vec<i8> = values.iter().map(|&v| v as i8).collect();
+        let mask = vec![true; 16];
+        let acts = vec![1i8; 16];
+        let blk = WBlockRef { values: &values, codes: &codes, mask: &mask };
+        let r = dot_int8_dense(&[blk], &[acts.as_slice()], PeLanes { mult: 4, low: 0 });
+        assert_eq!(r.cycles, 4);
+    }
+}

@@ -1,0 +1,126 @@
+//! Criterion-style micro-benchmark harness (criterion is not in the
+//! vendored closure). `cargo bench` targets use this: warmup, timed
+//! iterations, mean/σ/percentiles, and throughput reporting. Designed so a
+//! bench binary doubles as a *report generator* for the paper's tables and
+//! figures — each `cargo bench --bench figNN_*` prints the rows/series the
+//! paper reports.
+
+use super::stats::{fmt_duration, fmt_rate, Summary};
+use std::time::{Duration, Instant};
+
+/// One benchmark run's results.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time, seconds.
+    pub seconds: Summary,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        let mean = Duration::from_secs_f64(self.seconds.mean());
+        let p50 = Duration::from_secs_f64(self.seconds.median());
+        let p99 = Duration::from_secs_f64(self.seconds.percentile(99.0));
+        let mut line = format!(
+            "{:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  n={}",
+            self.name,
+            fmt_duration(mean),
+            fmt_duration(p50),
+            fmt_duration(p99),
+            self.seconds.len()
+        );
+        if let Some(elems) = self.elements {
+            line.push_str(&format!("  thrpt {}", fmt_rate(elems / self.seconds.mean())));
+        }
+        line
+    }
+}
+
+/// Benchmark harness: collects results, prints a report.
+pub struct Bench {
+    pub results: Vec<BenchResult>,
+    warmup: Duration,
+    measure: Duration,
+    max_iters: usize,
+    /// Quick mode (STRUM_BENCH_QUICK=1) shrinks budgets ~10x for CI.
+    quick: bool,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        let quick = std::env::var("STRUM_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+        Bench {
+            results: Vec::new(),
+            warmup: if quick {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(200)
+            },
+            measure: if quick {
+                Duration::from_millis(100)
+            } else {
+                Duration::from_secs(1)
+            },
+            max_iters: if quick { 50 } else { 5_000 },
+            quick,
+        }
+    }
+
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Times `f` repeatedly; `elements` is the per-iteration work size for
+    /// throughput reporting (0 = none). The closure's return value is
+    /// black-boxed to prevent dead-code elimination.
+    pub fn run<T>(&mut self, name: &str, elements: f64, mut f: impl FnMut() -> T) {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut seconds = Summary::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.measure && seconds.len() < self.max_iters {
+            let it0 = Instant::now();
+            std::hint::black_box(f());
+            seconds.push(it0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            seconds,
+            elements: if elements > 0.0 { Some(elements) } else { None },
+        };
+        println!("{}", res.report_line());
+        self.results.push(res);
+    }
+
+    /// Prints a section header.
+    pub fn section(&self, title: &str) {
+        println!("\n=== {} ===", title);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        std::env::set_var("STRUM_BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        b.run("noop", 10.0, || 1 + 1);
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].seconds.len() >= 1);
+        assert!(b.results[0].report_line().contains("noop"));
+    }
+}

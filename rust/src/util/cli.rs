@@ -1,0 +1,197 @@
+//! Tiny command-line flag parser (clap is not in the vendored closure).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Each subcommand in `main.rs` builds an [`Args`]
+//! from `std::env::args()` and pulls typed values out.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals + `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+    /// Keys that were actually consumed by the command (for unknown-flag
+    /// diagnostics).
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parses raw arguments (excluding argv[0] and the subcommand name).
+    pub fn parse(raw: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    let (k, v) = body.split_at(eq);
+                    a.options
+                        .entry(k.to_string())
+                        .or_default()
+                        .push(v[1..].to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap().clone();
+                    a.options.entry(body.to_string()).or_default().push(v);
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        a
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    /// String option with default.
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.options
+            .get(key)
+            .and_then(|v| v.last())
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.options.get(key).and_then(|v| v.last()).cloned()
+    }
+
+    /// Repeated string option (`--net a --net b`).
+    pub fn strs(&self, key: &str) -> Vec<String> {
+        self.mark(key);
+        self.options.get(key).cloned().unwrap_or_default()
+    }
+
+    /// usize option with default.
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.mark(key);
+        self.options
+            .get(key)
+            .and_then(|v| v.last())
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// f64 option with default.
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.mark(key);
+        self.options
+            .get(key)
+            .and_then(|v| v.last())
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated f64 list option (`--p 0.25,0.5,0.75`).
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        self.mark(key);
+        match self.options.get(key).and_then(|v| v.last()) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+        }
+    }
+
+    /// Comma-separated usize list option.
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        self.mark(key);
+        match self.options.get(key).and_then(|v| v.last()) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+        }
+    }
+
+    /// Boolean flag (`--verbose`), also accepts `--verbose true/false`.
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        matches!(
+            self.options.get(key).and_then(|v| v.last()).map(|s| s.as_str()),
+            Some("true" | "1" | "yes")
+        )
+    }
+
+    /// Returns provided-but-unconsumed option keys (call after all reads).
+    pub fn unknown(&self) -> Vec<String> {
+        let seen = self.seen.borrow();
+        self.options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_key_value_and_eq() {
+        let a = parse("--net resnet --p=0.5 input.bin");
+        assert_eq!(a.str("net", "x"), "resnet");
+        assert_eq!(a.f64("p", 0.0), 0.5);
+        assert_eq!(a.positional, vec!["input.bin"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("--verbose --dry-run=false");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("dry-run"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--p 0.25,0.5 --w 4,8,16");
+        assert_eq!(a.f64_list("p", &[]), vec![0.25, 0.5]);
+        assert_eq!(a.usize_list("w", &[]), vec![4, 8, 16]);
+        assert_eq!(a.f64_list("q", &[1.0]), vec![1.0]);
+    }
+
+    #[test]
+    fn repeated_options() {
+        let a = parse("--net a --net b");
+        assert_eq!(a.strs("net"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn unknown_reports_unconsumed() {
+        let a = parse("--used 1 --typo 2");
+        let _ = a.usize("used", 0);
+        assert_eq!(a.unknown(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    fn defaults_on_missing_or_malformed() {
+        let a = parse("--n notanumber");
+        assert_eq!(a.usize("n", 7), 7);
+        assert_eq!(a.f64("absent", 1.5), 1.5);
+    }
+}

@@ -1,0 +1,21 @@
+//! In-tree infrastructure substrates.
+//!
+//! This reproduction builds fully offline against the vendored dependency
+//! closure of the `xla` crate, so the infrastructure that would normally be
+//! pulled from crates.io is implemented here from scratch:
+//!
+//! * [`json`] — a small, complete JSON parser/serializer (manifests, reports)
+//! * [`prng`] — SplitMix64 / Xoshiro256** PRNG + Gaussian sampling
+//! * [`stats`] — summary statistics and timing helpers
+//! * [`cli`] — declarative-ish command-line flag parsing
+//! * [`pool`] — scoped data-parallel map over std threads
+//! * [`bench`] — a criterion-style micro-benchmark harness
+//! * [`proptest`] — a miniature property-testing driver with shrinking
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod proptest;
+pub mod stats;

@@ -1,0 +1,138 @@
+//! Scoped data-parallel helpers over `std::thread` (rayon is not in the
+//! vendored closure). Work is split into contiguous chunks, one per worker;
+//! this matches the crate's workloads (per-image eval, per-block quantize,
+//! per-layer simulation) which are uniform enough for static partitioning.
+
+/// Number of worker threads to use (respects `STRUM_THREADS`).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("STRUM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Parallel map over an index range: computes `f(i)` for `i in 0..n`,
+/// returning results in order. Runs serially for small `n`.
+pub fn par_map<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n < 2 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [Option<T>] = &mut out;
+        let mut start = 0usize;
+        let mut handles = Vec::new();
+        while start < n {
+            let take = chunk.min(n - start);
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let base = start;
+            let fref = &f;
+            handles.push(scope.spawn(move || {
+                for (off, slot) in head.iter_mut().enumerate() {
+                    *slot = Some(fref(base + off));
+                }
+            }));
+            start += take;
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Parallel in-place transform of chunks of a mutable slice. `f` receives
+/// (chunk_start_index, chunk).
+pub fn par_chunks_mut<T: Send>(
+    data: &mut [T],
+    chunk_len: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(chunk_len > 0);
+    let n = data.len();
+    let workers = num_threads();
+    if workers <= 1 || n <= chunk_len {
+        for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(ci * chunk_len, chunk);
+        }
+        return;
+    }
+    // Group whole chunks into `workers` contiguous spans.
+    let chunks_total = n.div_ceil(chunk_len);
+    let chunks_per_worker = chunks_total.div_ceil(workers);
+    let span = chunks_per_worker * chunk_len;
+    std::thread::scope(|scope| {
+        let mut rest: &mut [T] = data;
+        let mut start = 0usize;
+        let mut handles = Vec::new();
+        while start < n {
+            let take = span.min(n - start);
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let base = start;
+            let fref = &f;
+            handles.push(scope.spawn(move || {
+                for (ci, chunk) in head.chunks_mut(chunk_len).enumerate() {
+                    fref(base + ci * chunk_len, chunk);
+                }
+            }));
+            start += take;
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_ordered() {
+        let out = par_map(1000, |i| i * 2);
+        assert_eq!(out, (0..1000).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_empty_and_one() {
+        assert!(par_map(0, |i| i).is_empty());
+        assert_eq!(par_map(1, |i| i + 5), vec![5]);
+    }
+
+    #[test]
+    fn par_chunks_mut_touches_all() {
+        let mut data = vec![0u32; 1003];
+        par_chunks_mut(&mut data, 16, |start, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = (start + i) as u32;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32);
+        }
+    }
+
+    #[test]
+    fn par_chunks_respects_boundaries() {
+        // Each chunk writes its own id; verify no chunk bleeds over.
+        let mut data = vec![u32::MAX; 64];
+        par_chunks_mut(&mut data, 8, |start, chunk| {
+            assert_eq!(start % 8, 0);
+            assert!(chunk.len() <= 8);
+            for v in chunk.iter_mut() {
+                *v = (start / 8) as u32;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, (i / 8) as u32);
+        }
+    }
+}

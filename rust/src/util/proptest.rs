@@ -1,0 +1,173 @@
+//! Miniature property-testing driver (the `proptest` crate is not in the
+//! vendored closure). Provides seeded random case generation with
+//! counterexample shrinking for the invariant suites in `rust/tests/`.
+//!
+//! Usage (`no_run`: rustdoc test binaries lack the xla rpath):
+//! ```no_run
+//! use strum_dpu::util::proptest::{check, Gen};
+//! check("sum is commutative", 200, |g: &mut Gen| {
+//!     let a = g.i32_in(-100, 100);
+//!     let b = g.i32_in(-100, 100);
+//!     a + b == b + a
+//! });
+//! ```
+
+use super::prng::Rng;
+
+/// Per-case value generator. Records the choices it makes so a failing
+/// case can be replayed at a smaller "size".
+pub struct Gen {
+    rng: Rng,
+    /// Size knob in [0,1]; shrinking reruns with smaller sizes.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Gen { rng: Rng::new(seed), size }
+    }
+
+    /// Uniform usize in [lo, hi] inclusive, biased smaller as size shrinks.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + self.rng.below(span as u64 + 1) as usize
+    }
+
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.size).round() as i64;
+        lo + self.rng.below(span as u64 + 1) as i32
+    }
+
+    pub fn i8(&mut self) -> i8 {
+        self.i32_in(-128, 127) as i8
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.f32() * self.size as f32
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.f64() * self.size
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Picks one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len())]
+    }
+
+    /// Vector of generated values with length in [min_len, max_len].
+    pub fn vec<T>(&mut self, min_len: usize, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Vector of int8 values (typical quantized-weight input).
+    pub fn i8_vec(&mut self, min_len: usize, max_len: usize) -> Vec<i8> {
+        self.vec(min_len, max_len, |g| g.i8())
+    }
+
+    /// Gaussian f32 (weight-like distribution).
+    pub fn gaussian_f32(&mut self, sigma: f32) -> f32 {
+        self.rng.gaussian() as f32 * sigma
+    }
+}
+
+/// Runs `prop` on `cases` random cases. On failure, retries the failing
+/// seed at progressively smaller sizes to find a smaller counterexample,
+/// then panics with the seed/size so the case can be replayed.
+///
+/// Seed base comes from `STRUM_PROPTEST_SEED` (default 0xC0FFEE) so CI is
+/// deterministic but overridable.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> bool) {
+    let base: u64 = std::env::var("STRUM_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed, 1.0);
+        if !prop(&mut g) {
+            // Shrink: same seed, smaller sizes.
+            let mut best_size = 1.0;
+            for step in 1..=20 {
+                let size = 1.0 - step as f64 * 0.05;
+                if size <= 0.0 {
+                    break;
+                }
+                let mut g = Gen::new(seed, size);
+                if !prop(&mut g) {
+                    best_size = size;
+                }
+            }
+            panic!(
+                "property '{}' failed: case {}, seed 0x{:x}, minimal size {:.2} \
+                 (replay: Gen::new(0x{:x}, {:.2}))",
+                name, case, seed, best_size, seed, best_size
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result` with a message.
+pub fn check_res(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    let base: u64 = std::env::var("STRUM_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{}' failed: case {}, seed 0x{:x}: {}",
+                name, case, seed, msg
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 100, |g| {
+            let a = g.i32_in(-1000, 1000);
+            let b = g.i32_in(-1000, 1000);
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |_| false);
+    }
+
+    #[test]
+    fn generator_bounds() {
+        let mut g = Gen::new(1, 1.0);
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+            let w = g.i32_in(-5, 5);
+            assert!((-5..=5).contains(&w));
+        }
+    }
+
+    #[test]
+    fn vec_respects_len_bounds() {
+        let mut g = Gen::new(2, 1.0);
+        for _ in 0..100 {
+            let v = g.i8_vec(2, 17);
+            assert!((2..=17).contains(&v.len()));
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Cross-module integration tests that need no artifacts: quantizer →
+//! codec → simulator → hardware-model pipelines on synthetic layers, and
+//! the coordinator's batching logic under a mock-free load (policy level).
+
+use strum_dpu::encode::compression::ratio_for;
+use strum_dpu::encode::{decode_layer, encode_layer};
+use strum_dpu::hw::dpu::DpuConfig;
+use strum_dpu::hw::power::{power, Activity};
+use strum_dpu::hw::PeVariant;
+use strum_dpu::quant::tensor::qlayer;
+use strum_dpu::quant::{apply_strum, apply_unstructured, Method, StrumParams};
+use strum_dpu::sim::config::SimConfig;
+use strum_dpu::sim::dataflow::LayerShape;
+use strum_dpu::sim::driver::{simulate_layer, simulate_network};
+use strum_dpu::sim::SimMode;
+use strum_dpu::util::prng::Rng;
+
+fn conv_layer(
+    name: &str,
+    oc: usize,
+    ic: usize,
+    k: usize,
+    oh: usize,
+    seed: u64,
+) -> (LayerShape, strum_dpu::quant::QLayer) {
+    let mut rng = Rng::new(seed);
+    let data: Vec<i8> = (0..oc * k * k * ic)
+        .map(|_| (rng.gaussian() * 45.0).clamp(-127.0, 127.0) as i8)
+        .collect();
+    (
+        LayerShape::conv(name, oc, ic, k, oh, oh),
+        qlayer(name, oc, k * k, ic, data, vec![0.01; oc]),
+    )
+}
+
+/// quantize → encode → decode → simulate: the decoded layer must drive
+/// the simulator to the identical cycle count and datapath behaviour as
+/// the in-memory transform (what the real hardware does: it only ever
+/// sees the compressed stream).
+#[test]
+fn decoded_stream_drives_identical_simulation() {
+    let (shape, q) = conv_layer("c", 32, 64, 3, 8, 1);
+    for method in [
+        Method::StructuredSparsity,
+        Method::Dliq { q: 4 },
+        Method::Mip2q { l_max: 7 },
+    ] {
+        let s = apply_strum(&q, &StrumParams::paper(method, 0.5));
+        let dec = decode_layer(&encode_layer(&s)).unwrap();
+        let cfg = SimConfig::flexnn(SimMode::StrumStatic, Some(method));
+        let a = simulate_layer(&shape, &s, &cfg, 0.7, 3);
+        let b = simulate_layer(&shape, &dec, &cfg, 0.7, 3);
+        assert_eq!(a.cycles, b.cycles, "{:?}", method);
+        assert_eq!(a.mult_ops, b.mult_ops);
+        assert_eq!(a.low_ops, b.low_ops);
+    }
+}
+
+/// The full §V-B performance story on one synthetic network:
+/// dense < sparse(0.5-dense acts) ; strum-perf = 2× dense ; static StruM
+/// fallback = ½ dense on INT8 layers.
+#[test]
+fn performance_story_holds_end_to_end() {
+    let (shape, q) = conv_layer("c", 32, 128, 1, 16, 2);
+    let base = apply_strum(&q, &StrumParams::paper(Method::Baseline, 0.0));
+    let strum = apply_strum(&q, &StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5));
+
+    let dense = simulate_layer(&shape, &base, &SimConfig::flexnn(SimMode::Int8Dense, None), 1.0, 0);
+    let perf = simulate_layer(
+        &shape,
+        &strum,
+        &SimConfig::flexnn(SimMode::StrumPerf, Some(Method::Mip2q { l_max: 7 })),
+        1.0,
+        0,
+    );
+    assert_eq!(perf.speedup_vs(&dense), 2.0, "guaranteed 2x");
+
+    let fallback = simulate_layer(
+        &shape,
+        &base,
+        &SimConfig::flexnn(SimMode::StrumStatic, None),
+        1.0,
+        0,
+    );
+    assert_eq!(fallback.cycles, 2 * dense.cycles, "INT8 fallback = half rate");
+
+    let sparse = simulate_layer(
+        &shape,
+        &base,
+        &SimConfig::flexnn(SimMode::SparseFindFirst, None),
+        0.4,
+        7,
+    );
+    assert!(sparse.cycles < dense.cycles, "find-first exploits zero acts");
+}
+
+/// Slowest-PE ablation at network scale: unstructured placement must cost
+/// cycles vs structured at identical p, while having no-worse RMSE.
+#[test]
+fn unstructured_tradeoff_is_visible() {
+    let layers: Vec<_> = (0..3)
+        .map(|i| conv_layer(&format!("c{}", i), 32, 64 + 32 * i, 3, 8, 10 + i as u64))
+        .collect();
+    let method = Method::Mip2q { l_max: 7 };
+    let cfg = SimConfig::flexnn(SimMode::StrumPerf, Some(method));
+    let mut s_cycles = 0;
+    let mut u_cycles = 0;
+    for (shape, q) in &layers {
+        let s = apply_strum(q, &StrumParams::paper(method, 0.5));
+        let u = apply_unstructured(q, method, 0.5);
+        assert!(u.grid_rmse <= s.grid_rmse + 1e-9);
+        s_cycles += simulate_layer(shape, &s, &cfg, 1.0, 0).cycles;
+        u_cycles += simulate_layer(shape, &u, &cfg, 1.0, 0).cycles;
+    }
+    assert!(
+        u_cycles > s_cycles,
+        "unstructured {} should exceed structured {}",
+        u_cycles,
+        s_cycles
+    );
+}
+
+/// Sim-activity → power-model integration: a StruM run on the StruM PE
+/// must save PE-level power vs the dense run on the baseline PE, within
+/// the paper's band, and the compressed stream must shrink SRAM traffic.
+#[test]
+fn sim_activity_feeds_power_model() {
+    let (shape, q) = conv_layer("c", 64, 128, 3, 8, 5);
+    let base = apply_strum(&q, &StrumParams::paper(Method::Baseline, 0.0));
+    let strum = apply_strum(&q, &StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5));
+
+    let (_, dense_act) = simulate_network(
+        &[(shape.clone(), base)],
+        &SimConfig::flexnn(SimMode::Int8Dense, None),
+        0.7,
+        0,
+    );
+    let (_, strum_act) = simulate_network(
+        &[(shape, strum)],
+        &SimConfig::flexnn(SimMode::StrumStatic, Some(Method::Mip2q { l_max: 7 })),
+        0.7,
+        0,
+    );
+    let cfg = DpuConfig::flexnn_16x16();
+    let p_base = power(PeVariant::BaselineInt8, &dense_act, &cfg);
+    let p_strum = power(PeVariant::StaticMip2q { l_max: 7 }, &strum_act, &cfg);
+    let save = 1.0 - p_strum.pe_level() / p_base.pe_level();
+    assert!(
+        (0.15..0.50).contains(&save),
+        "PE power saving from sim activity: {}",
+        save
+    );
+    // Compressed weights shrink SRAM traffic (r = 7/8 at p=.5, q=4).
+    assert!(strum_act.sram_bytes < dense_act.sram_bytes);
+}
+
+/// Weight-memory accounting across the whole pipeline matches Eq. 1.
+#[test]
+fn memory_accounting_matches_eq1() {
+    let (_, q) = conv_layer("c", 16, 64, 1, 8, 9);
+    let s = apply_strum(&q, &StrumParams::paper(Method::Dliq { q: 4 }, 0.5));
+    let enc = encode_layer(&s);
+    assert!((enc.measured_ratio() - ratio_for(Method::Dliq { q: 4 }, 0.5)).abs() < 1e-12);
+    assert!((enc.measured_ratio() - 0.875).abs() < 1e-12);
+}
+
+/// Dense analytic activity and simulated dense activity agree on the
+/// ordering of DPU power across variants (model consistency).
+#[test]
+fn analytic_and_simulated_activity_agree_on_ordering() {
+    let cfg = DpuConfig::flexnn_16x16();
+    let (shape, q) = conv_layer("c", 32, 64, 3, 8, 12);
+    let strum = apply_strum(&q, &StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5));
+    let (_, sim_act) = simulate_network(
+        &[(shape, strum)],
+        &SimConfig::flexnn(SimMode::StrumStatic, Some(Method::Mip2q { l_max: 7 })),
+        0.7,
+        0,
+    );
+    let dense_act = Activity::dense(256, 10_000, 0.5);
+    for act in [&sim_act, &dense_act] {
+        let b = power(PeVariant::BaselineInt8, act, &cfg).dpu_level();
+        let s7 = power(PeVariant::StaticMip2q { l_max: 7 }, act, &cfg).dpu_level();
+        let s5 = power(PeVariant::StaticMip2q { l_max: 5 }, act, &cfg).dpu_level();
+        assert!(s5 <= s7 && s7 < b);
+    }
+}

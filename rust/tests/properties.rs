@@ -1,0 +1,232 @@
+//! Property-based invariant suite (in-tree mini-proptest driver —
+//! `strum_dpu::util::proptest`). Covers the quantizer, the MIP2Q
+//! optimality claim, the §IV-D codec, Eq. 1/2, the simulator datapath,
+//! the batching policy, and the rust↔python golden parity case.
+
+use strum_dpu::coordinator::batcher::BatchPolicy;
+use strum_dpu::encode::compression::{ratio_for, ratio_payload, ratio_sparsity};
+use strum_dpu::encode::{decode_layer, encode_layer};
+use strum_dpu::quant::tensor::qlayer;
+use strum_dpu::quant::{
+    apply_strum, apply_unstructured, mip2q, quantize_block, Method, StrumParams,
+};
+use strum_dpu::sim::config::PeLanes;
+use strum_dpu::sim::pe::{dot_int8_dense, dot_strum, reference_dot, WBlockRef};
+use strum_dpu::util::proptest::{check, Gen};
+use std::time::{Duration, Instant};
+
+fn gen_method(g: &mut Gen) -> Method {
+    match g.usize_in(0, 5) {
+        0 => Method::StructuredSparsity,
+        1 => Method::Dliq { q: 2 },
+        2 => Method::Dliq { q: 4 },
+        3 => Method::Mip2q { l_max: 3 },
+        4 => Method::Mip2q { l_max: 5 },
+        _ => Method::Mip2q { l_max: 7 },
+    }
+}
+
+fn gen_layer(g: &mut Gen) -> strum_dpu::quant::QLayer {
+    let oc = g.usize_in(1, 4);
+    let rows = g.usize_in(1, 3);
+    let cols = g.usize_in(1, 40);
+    let data: Vec<i8> = (0..oc * rows * cols).map(|_| g.i8()).collect();
+    qlayer("prop", oc, rows, cols, data, vec![0.01; oc])
+}
+
+#[test]
+fn structure_invariant_always_holds() {
+    check("every block has exactly round(p·l·w) low lanes", 150, |g| {
+        let layer = gen_layer(g);
+        let method = gen_method(g);
+        let p = *g.choose(&[0.25, 0.5, 0.75]);
+        let (l, w) = *g.choose(&[(1usize, 16usize), (1, 8), (2, 8), (4, 4), (1, 4)]);
+        let s = apply_strum(&layer, &StrumParams::new(method, l, w, p));
+        s.check_structure().is_ok()
+    });
+}
+
+#[test]
+fn codec_roundtrip_is_lossless() {
+    check("encode→decode == identity on (values, codes, mask)", 120, |g| {
+        let layer = gen_layer(g);
+        let method = gen_method(g);
+        let p = *g.choose(&[0.25, 0.5, 0.75]);
+        let s = apply_strum(&layer, &StrumParams::paper(method, p));
+        let enc = encode_layer(&s);
+        match decode_layer(&enc) {
+            Ok(d) => d.values == s.values && d.mask == s.mask && d.codes == s.codes,
+            Err(_) => false,
+        }
+    });
+}
+
+#[test]
+fn measured_ratio_matches_equations_when_aligned() {
+    check("measured r == Eq.1/Eq.2 on pad-free layers", 100, |g| {
+        let method = gen_method(g);
+        let p = *g.choose(&[0.25, 0.5, 0.75]);
+        let oc = g.usize_in(1, 3);
+        let blocks = g.usize_in(1, 6);
+        let cols = blocks * 16;
+        let data: Vec<i8> = (0..oc * cols).map(|_| g.i8()).collect();
+        let layer = qlayer("r", oc, 1, cols, data, vec![1.0; oc]);
+        let s = apply_strum(&layer, &StrumParams::paper(method, p));
+        let enc = encode_layer(&s);
+        // Aligned layers: exact match with the analytic ratio, except that
+        // round(p·16)/16 replaces p.
+        let p_eff = (p * 16.0).round() / 16.0;
+        (enc.measured_ratio() - ratio_for(method, p_eff)).abs() < 1e-9
+    });
+}
+
+#[test]
+fn mip2q_greedy_selection_is_l2_optimal() {
+    check("greedy mask == brute-force optimum (≤16-elem blocks)", 80, |g| {
+        let n = g.usize_in(2, 12);
+        let vals: Vec<i16> = (0..n).map(|_| g.i8() as i16).collect();
+        let idxs: Vec<usize> = (0..n).collect();
+        let low_n = g.usize_in(0, n);
+        let l_max = *g.choose(&[3u8, 5, 7]);
+        let (new_vals, _, _) =
+            quantize_block(&vals, &idxs, low_n, Method::Mip2q { l_max });
+        let err: u64 = new_vals
+            .iter()
+            .zip(vals.iter())
+            .map(|(&a, &b)| {
+                let d = (a - b) as i64;
+                (d * d) as u64
+            })
+            .sum();
+        let best = mip2q::brute_force_best_error(&vals, n - low_n, l_max);
+        err == best
+    });
+}
+
+#[test]
+fn unstructured_error_never_worse_than_structured() {
+    // Pad-free layers with p=0.5: both selections quantize exactly N/2
+    // elements, so the globally-optimal (unstructured) choice can only
+    // match or beat the block-constrained one — the accuracy-vs-hardware
+    // tradeoff the paper navigates.
+    check("layer-global selection has ≤ structured RMSE", 60, |g| {
+        let oc = g.usize_in(1, 4);
+        let blocks = g.usize_in(1, 8);
+        let cols = blocks * 16;
+        let data: Vec<i8> = (0..oc * cols).map(|_| g.i8()).collect();
+        let layer = qlayer("u", oc, 1, cols, data, vec![0.01; oc]);
+        let method = *g.choose(&[Method::StructuredSparsity, Method::Mip2q { l_max: 7 }]);
+        let p = 0.5;
+        let s = apply_strum(&layer, &StrumParams::paper(method, p));
+        let u = apply_unstructured(&layer, method, p);
+        u.grid_rmse <= s.grid_rmse + 1e-9
+    });
+}
+
+#[test]
+fn pe_datapath_matches_reference_dot() {
+    check("sim PE accumulator == effective-value dot product", 100, |g| {
+        let method = gen_method(g);
+        let blocks_n = g.usize_in(1, 6);
+        let cols = blocks_n * 16;
+        let data: Vec<i8> = (0..cols).map(|_| g.i8()).collect();
+        let acts: Vec<i8> = (0..cols).map(|_| g.i8()).collect();
+        let layer = qlayer("pe", 1, 1, cols, data, vec![1.0]);
+        let s = apply_strum(&layer, &StrumParams::paper(method, 0.5));
+        let mut blocks = Vec::new();
+        let mut chunks = Vec::new();
+        for bi in 0..blocks_n {
+            let r = bi * 16..(bi + 1) * 16;
+            blocks.push((
+                s.values[r.clone()].to_vec(),
+                s.codes[r.clone()].to_vec(),
+                s.mask[r.clone()].to_vec(),
+            ));
+            chunks.push(acts[r].to_vec());
+        }
+        let brefs: Vec<WBlockRef> = blocks
+            .iter()
+            .map(|(v, c, m)| WBlockRef { values: v, codes: c, mask: m })
+            .collect();
+        let arefs: Vec<&[i8]> = chunks.iter().map(|c| c.as_slice()).collect();
+        let lanes = PeLanes { mult: 4, low: 4 };
+        let got = dot_strum(&brefs, &arefs, lanes, method).acc;
+        got == reference_dot(&brefs, &arefs)
+    });
+}
+
+#[test]
+fn dense_pe_cycles_are_exact() {
+    check("dense dot cycles == Σ ceil(w/mult)", 60, |g| {
+        let blocks_n = g.usize_in(1, 8);
+        let w = *g.choose(&[8usize, 16]);
+        let mult = *g.choose(&[4u32, 8]);
+        let vals = vec![1i16; w];
+        let codes = vec![1i8; w];
+        let mask = vec![true; w];
+        let acts = vec![1i8; w];
+        let blk = WBlockRef { values: &vals, codes: &codes, mask: &mask };
+        let blocks: Vec<WBlockRef> = (0..blocks_n).map(|_| blk).collect();
+        let arefs: Vec<&[i8]> = (0..blocks_n).map(|_| acts.as_slice()).collect();
+        let r = dot_int8_dense(&blocks, &arefs, PeLanes { mult, low: 0 });
+        r.cycles == (blocks_n as u64) * (w as u64).div_ceil(mult as u64)
+    });
+}
+
+#[test]
+fn compression_equations_bounds() {
+    check("0 < r ≤ 9/8 and payload ≥ sparsity", 200, |g| {
+        let p = g.f64_in(0.0, 1.0);
+        let q = g.usize_in(2, 7) as u32;
+        let rp = ratio_payload(p, q);
+        let rs = ratio_sparsity(p);
+        rp > 0.0 && rp <= 1.125 + 1e-12 && rs <= rp && rs > 0.0
+    });
+}
+
+#[test]
+fn batch_policy_never_exceeds_max() {
+    check("batch policy take ≤ max_batch, 0 on empty", 150, |g| {
+        let max_batch = g.usize_in(1, 64);
+        let wait_us = g.usize_in(1, 10_000) as u64;
+        let policy = BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(wait_us),
+        };
+        let queued = g.usize_in(0, 200);
+        let now = Instant::now();
+        let age = Duration::from_micros(g.usize_in(0, 20_000) as u64);
+        let oldest = if queued > 0 { Some(now - age) } else { None };
+        let take = policy.decide(queued, oldest, now);
+        take <= max_batch
+            && take <= queued.max(take) // never more than queued
+            && (queued != 0 || take == 0)
+            && (take <= queued)
+    });
+}
+
+/// The rust half of the golden parity case pinned in
+/// python/tests/test_quantize.py — byte-identical expectations.
+#[test]
+fn python_parity_golden() {
+    let input: Vec<i8> = vec![17, -3, 64, 0, -128, 5, 99, -2, 33, -77, 1, 8, -16, 120, -9, 4];
+    let layer = qlayer("golden", 1, 1, 16, input, vec![1.0]);
+    let cases: Vec<(Method, Vec<i16>)> = vec![
+        (
+            Method::StructuredSparsity,
+            vec![17, 0, 64, 0, -128, 0, 99, 0, 33, -77, 0, 0, -16, 120, 0, 0],
+        ),
+        (
+            Method::Dliq { q: 4 },
+            vec![17, 0, 64, 0, -128, 0, 99, 0, 33, -77, 0, 16, -16, 120, -16, 0],
+        ),
+        (
+            Method::Mip2q { l_max: 7 },
+            vec![16, -3, 64, 0, -128, 5, 99, -2, 33, -77, 1, 8, -16, 120, -9, 4],
+        ),
+    ];
+    for (method, expect) in cases {
+        let s = apply_strum(&layer, &StrumParams::paper(method, 0.5));
+        assert_eq!(s.values, expect, "{:?}", method);
+    }
+}

@@ -1,0 +1,228 @@
+//! Runtime integration tests over the real artifacts (skipped with a
+//! notice when `make train artifacts` has not been run): HLO load +
+//! execute, rust-vs-HLO kernel bit-exactness, accuracy sanity, and the
+//! live coordinator serving path.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+use strum_dpu::coordinator::{Coordinator, CoordinatorOptions, Router};
+use strum_dpu::model::eval::{evaluate, EvalConfig};
+use strum_dpu::model::import::{DataSet, NetWeights};
+use strum_dpu::quant::{Method};
+use strum_dpu::runtime::{Runtime, Tensor};
+use strum_dpu::util::prng::Rng;
+
+fn artifacts() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("hlo").exists() && dir.join("weights").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP runtime test: artifacts missing (run `make train artifacts`)");
+        None
+    }
+}
+
+/// The integer StruM microkernel HLO must match a host reference
+/// bit-for-bit — tying the Pallas kernel (L1) to the rust datapath (L3).
+#[test]
+fn strum_int_kernel_bit_exact_vs_host() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(&dir.join("hlo/strum_matmul_int.hlo.txt")).unwrap();
+    let (m, k, n) = (64usize, 256usize, 64usize);
+    let mut rng = Rng::new(42);
+    let x: Vec<i32> = (0..m * k).map(|_| rng.range(0, 255) as i32 - 127).collect();
+    let hi: Vec<i32> = (0..k * n)
+        .map(|_| if rng.chance(0.5) { rng.range(0, 255) as i32 - 127 } else { 0 })
+        .collect();
+    let lo: Vec<i32> = hi
+        .iter()
+        .map(|&h| {
+            if h == 0 {
+                let s = if rng.chance(0.5) { -1 } else { 1 };
+                s * (1 << rng.range(0, 8))
+            } else {
+                0
+            }
+        })
+        .collect();
+    let out = exe
+        .run_i32(&[
+            Tensor::i32(x.clone(), &[m, k]),
+            Tensor::i32(hi.clone(), &[k, n]),
+            Tensor::i32(lo.clone(), &[k, n]),
+        ])
+        .unwrap();
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i64;
+            for kk in 0..k {
+                acc += x[i * k + kk] as i64 * (hi[kk * n + j] + lo[kk * n + j]) as i64;
+            }
+            assert_eq!(out[0][i * n + j] as i64, acc, "({}, {})", i, j);
+        }
+    }
+}
+
+/// The float StruM kernel: two complementary banks reconstruct the dense
+/// GEMM to float tolerance.
+#[test]
+fn strum_f32_kernel_reconstructs_dense() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(&dir.join("hlo/strum_matmul_f32.hlo.txt")).unwrap();
+    let (m, k, n) = (64usize, 256usize, 64usize);
+    let mut rng = Rng::new(7);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.gaussian() as f32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.gaussian() as f32 * 0.1).collect();
+    let mask: Vec<bool> = (0..k * n).map(|_| rng.chance(0.5)).collect();
+    let hi: Vec<f32> = w.iter().zip(&mask).map(|(&v, &m)| if m { v } else { 0.0 }).collect();
+    let lo: Vec<f32> = w.iter().zip(&mask).map(|(&v, &m)| if m { 0.0 } else { v }).collect();
+    let out = exe
+        .run_f32(&[
+            Tensor::f32(x.clone(), &[m, k]),
+            Tensor::f32(hi, &[k, n]),
+            Tensor::f32(lo, &[k, n]),
+        ])
+        .unwrap();
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for kk in 0..k {
+                acc += x[i * k + kk] as f64 * w[kk * n + j] as f64;
+            }
+            let got = out[0][i * n + j] as f64;
+            assert!(
+                (got - acc).abs() < 1e-3 * (1.0 + acc.abs()),
+                "({},{}): {} vs {}",
+                i,
+                j,
+                got,
+                acc
+            );
+        }
+    }
+}
+
+/// Float eval through PJRT reproduces the accuracy python recorded at
+/// train time (same data, same graph ⇒ tight tolerance).
+#[test]
+fn float_eval_matches_training_record() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let net = "mini_cnn_s";
+    let weights = NetWeights::load(dir, net).unwrap();
+    let data = DataSet::load(dir, "eval").unwrap();
+    let cfg = EvalConfig {
+        act_quant: false,
+        ..EvalConfig::paper(Method::Baseline, 0.0)
+    };
+    let r = evaluate(&rt, dir, net, &data, &cfg).unwrap();
+    let expect = weights.manifest.eval_top1_float;
+    assert!(
+        (r.top1 - expect).abs() < 0.005,
+        "PJRT float top1 {} vs python {}",
+        r.top1,
+        expect
+    );
+}
+
+/// INT8 baseline costs < 2% accuracy vs float (static calibration works).
+#[test]
+fn int8_baseline_close_to_float() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let net = "mini_resnet_c";
+    let data = DataSet::load(dir, "eval").unwrap();
+    let float_cfg = EvalConfig {
+        act_quant: false,
+        limit: Some(512),
+        ..EvalConfig::paper(Method::Baseline, 0.0)
+    };
+    let int8_cfg = EvalConfig {
+        limit: Some(512),
+        ..EvalConfig::paper(Method::Baseline, 0.0)
+    };
+    let f = evaluate(&rt, dir, net, &data, &float_cfg).unwrap();
+    let q = evaluate(&rt, dir, net, &data, &int8_cfg).unwrap();
+    assert!(
+        f.top1 - q.top1 < 0.02,
+        "float {} vs int8 {}",
+        f.top1,
+        q.top1
+    );
+}
+
+/// MIP2Q p=0.5 stays within 2% of the INT8 baseline on a 512-sample
+/// slice (the Table-I headline, loose-tolerance CI version).
+#[test]
+fn mip2q_headline_accuracy() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let net = "mini_resnet_c";
+    let data = DataSet::load(dir, "eval").unwrap();
+    let base = evaluate(
+        &rt,
+        dir,
+        net,
+        &data,
+        &EvalConfig { limit: Some(512), ..EvalConfig::paper(Method::Baseline, 0.0) },
+    )
+    .unwrap();
+    let mip = evaluate(
+        &rt,
+        dir,
+        net,
+        &data,
+        &EvalConfig { limit: Some(512), ..EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5) },
+    )
+    .unwrap();
+    assert!(
+        base.top1 - mip.top1 < 0.02,
+        "baseline {} vs mip2q {}",
+        base.top1,
+        mip.top1
+    );
+}
+
+/// Live coordinator: submit concurrent requests, all complete, batching
+/// happens, accuracy is sane, no request is dropped or reordered wrongly.
+#[test]
+fn coordinator_serves_correctly() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let mut router = Router::new(rt);
+    let net = "mini_cnn_s";
+    let v = router
+        .register("test", dir, net, &EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5))
+        .unwrap();
+    let coord = Coordinator::start(
+        v,
+        CoordinatorOptions {
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            max_batch: Some(16),
+        },
+    );
+    let data = DataSet::load(dir, "eval").unwrap();
+    let px = data.img * data.img * 3;
+    let n = 64;
+    let pend: Vec<_> = (0..n)
+        .map(|i| {
+            let idx = i % data.n;
+            (idx, coord.submit(data.images[idx * px..(idx + 1) * px].to_vec()))
+        })
+        .collect();
+    let mut correct = 0;
+    for (idx, rx) in pend {
+        let reply = rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
+        assert!(reply.batch.1 >= reply.batch.0, "padded >= occupancy");
+        if reply.class as i32 == data.labels[idx] {
+            correct += 1;
+        }
+    }
+    // mini_cnn_s is a >85% model; 64 samples at ≥60% is a safe floor.
+    assert!(correct * 10 >= n * 6, "accuracy too low: {}/{}", correct, n);
+    coord.shutdown();
+}
