@@ -68,9 +68,20 @@ fn main() -> anyhow::Result<()> {
         bits as f64 / (8.0 * elems as f64)
     );
 
-    // --- 3: accuracy through PJRT (Pallas-kernel head inside the HLO) -----
-    let rt = Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
+    // --- 3: accuracy through PJRT (Pallas-kernel head inside the HLO),
+    // falling back to the native integer engine when the build has no
+    // PJRT runtime (note: the native path quantizes activations with a
+    // dynamic scale even at act=false, so "float" becomes near-float).
+    let rt = match Runtime::cpu() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            Some(rt)
+        }
+        Err(e) => {
+            println!("PJRT unavailable ({}); evaluating on the native backend", e);
+            None
+        }
+    };
     let data = DataSet::load(dir, "eval")?;
     let point = |name: &str, method: Method, p: f64, act: bool| -> anyhow::Result<f64> {
         let cfg = EvalConfig {
@@ -78,7 +89,10 @@ fn main() -> anyhow::Result<()> {
             limit,
             ..EvalConfig::paper(method, p)
         };
-        let r = evaluate(&rt, dir, &net, &data, &cfg)?;
+        let r = match &rt {
+            Some(rt) => evaluate(rt, dir, &net, &data, &cfg)?,
+            None => strum_dpu::model::eval::evaluate_native(dir, &net, &data, &cfg)?,
+        };
         println!("  {:<26} top-1 {:>6.2}%  (n={})", name, r.top1 * 100.0, r.n);
         Ok(r.top1)
     };

@@ -7,6 +7,7 @@
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
+use strum_dpu::backend::BackendKind;
 use strum_dpu::coordinator::{Coordinator, CoordinatorOptions, Router};
 use strum_dpu::model::eval::EvalConfig;
 use strum_dpu::model::import::DataSet;
@@ -51,9 +52,19 @@ fn main() -> anyhow::Result<()> {
     let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(300.0);
     let dir = Path::new("artifacts");
 
-    let rt = Arc::new(Runtime::cpu()?);
-    println!("PJRT platform: {}", rt.platform());
-    let mut router = Router::new(rt);
+    // PJRT when the runtime + HLO artifacts are available, else the
+    // native integer engine — same coordinator, same request path.
+    let (mut router, kind) = match Runtime::cpu() {
+        Ok(rt) => {
+            let rt = Arc::new(rt);
+            println!("PJRT platform: {}", rt.platform());
+            (Router::new(rt), BackendKind::Pjrt)
+        }
+        Err(e) => {
+            println!("PJRT unavailable ({}); serving on the native backend", e);
+            (Router::native(), BackendKind::Native)
+        }
+    };
     let data = DataSet::load(dir, "eval")?;
 
     for (label, method) in [
@@ -61,12 +72,13 @@ fn main() -> anyhow::Result<()> {
         ("mip2q-L7-p0.5", Method::Mip2q { l_max: 7 }),
     ] {
         let p = if method == Method::Baseline { 0.0 } else { 0.5 };
-        let v = router.register(label, dir, &net, &EvalConfig::paper(method, p))?;
+        let v = router.register_kind(label, dir, &net, &EvalConfig::paper(method, p), kind)?;
         println!(
-            "\n--- serving {} ({} batch sizes {:?}) at {} req/s ---",
+            "\n--- serving {} ({} [{}] batch sizes {:?}) at {} req/s ---",
             label,
             net,
-            v.executables.iter().map(|(b, _)| *b).collect::<Vec<_>>(),
+            kind.name(),
+            v.batches(),
             rate
         );
         let coord = Coordinator::start(

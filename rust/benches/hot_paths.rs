@@ -1,10 +1,14 @@
 //! Micro-benchmarks of the L3 hot paths (the §Perf deliverable):
 //! quantization, MIP2Q search, codec encode/decode, simulator throughput,
-//! PE datapath, and end-to-end PJRT execute when artifacts exist.
+//! native int8 vs StruM dual-bank GEMM (with a `BENCH_native_gemm.json`
+//! summary), PE datapath, and end-to-end PJRT execute when artifacts
+//! exist.
 //!
 //! STRUM_BENCH_QUICK=1 shrinks budgets ~10x.
 
 use std::path::Path;
+use strum_dpu::backend::gemm::gemm_i8;
+use strum_dpu::backend::strum_gemm::StrumGemm;
 use strum_dpu::encode::{decode_layer, encode_layer};
 use strum_dpu::model::import::{DataSet, NetWeights};
 use strum_dpu::quant::tensor::qlayer;
@@ -14,6 +18,7 @@ use strum_dpu::sim::config::SimConfig;
 use strum_dpu::sim::dataflow::LayerShape;
 use strum_dpu::sim::{simulate_layer, SimMode};
 use strum_dpu::util::bench::Bench;
+use strum_dpu::util::json::Json;
 use strum_dpu::util::prng::Rng;
 
 fn big_layer(oc: usize, cols: usize, seed: u64) -> strum_dpu::quant::QLayer {
@@ -47,6 +52,68 @@ fn main() -> anyhow::Result<()> {
     let enc = encode_layer(&s);
     b.run("decode_layer/mip2q", n, || decode_layer(&enc).unwrap());
 
+    b.section("native GEMM (GFLOP-equiv/s: 2·m·k·n per call)");
+    // One conv-shaped GEMM: m = 64 im2col rows, k = 3·3·128 lanes,
+    // n = 128 output channels.
+    let (m, n_oc, rows, cols) = (64usize, 128usize, 9usize, 128usize);
+    let k = rows * cols;
+    let wq = {
+        let raw = big_layer(n_oc, rows * cols, 7);
+        qlayer("gemm", n_oc, rows, cols, raw.data, raw.scales)
+    };
+    let mut rng_a = Rng::new(8);
+    let acts: Vec<i8> = (0..m * k)
+        .map(|_| (rng_a.gaussian() * 40.0).clamp(-127.0, 127.0) as i8)
+        .collect();
+    let flops = (2 * m * k * n_oc) as f64;
+    let mut out = vec![0i32; m * n_oc];
+    let mut gemm_results: Vec<(String, f64, f64)> = Vec::new();
+    b.run("gemm_i8/dense-int8", flops, || {
+        gemm_i8(&acts, &wq.data, m, k, n_oc, &mut out);
+        out[0]
+    });
+    if let Some(r) = b.results.last() {
+        gemm_results.push(("dense-int8".into(), r.seconds.mean(), flops / r.seconds.mean() / 1e9));
+    }
+    for method in [
+        Method::StructuredSparsity,
+        Method::Dliq { q: 4 },
+        Method::Mip2q { l_max: 7 },
+    ] {
+        let s = apply_strum(&wq, &StrumParams::paper(method, 0.5));
+        let g = StrumGemm::from_encoded(&encode_layer(&s))?;
+        b.run(&format!("strum_gemm/{}", method.name()), flops, || {
+            g.matmul(&acts, m, &mut out);
+            out[0]
+        });
+        if let Some(r) = b.results.last() {
+            gemm_results.push((method.name(), r.seconds.mean(), flops / r.seconds.mean() / 1e9));
+        }
+    }
+    let json = Json::obj(vec![
+        ("m", Json::Num(m as f64)),
+        ("k", Json::Num(k as f64)),
+        ("n", Json::Num(n_oc as f64)),
+        ("flops_per_call", Json::Num(flops)),
+        (
+            "kernels",
+            Json::Arr(
+                gemm_results
+                    .iter()
+                    .map(|(name, mean_s, gflops)| {
+                        Json::obj(vec![
+                            ("name", Json::str(name.as_str())),
+                            ("mean_s", Json::Num(*mean_s)),
+                            ("gflop_equiv_per_s", Json::Num(*gflops)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_native_gemm.json", json.to_string_pretty())?;
+    println!("wrote BENCH_native_gemm.json");
+
     b.section("cycle simulator (MAC-slots/s)");
     let shape = LayerShape::conv("bench", 64, 256, 3, 16, 16);
     let wl = big_layer(64, 9 * 256, 2);
@@ -61,9 +128,9 @@ fn main() -> anyhow::Result<()> {
     }
 
     let dir = Path::new("artifacts");
-    if dir.join("hlo").exists() {
+    let rt = if dir.join("hlo").exists() { Runtime::cpu().ok() } else { None };
+    if let Some(rt) = rt {
         b.section("PJRT end-to-end (images/s)");
-        let rt = Runtime::cpu()?;
         let net = "mini_resnet_a";
         let weights = NetWeights::load(dir, net)?;
         let cfg = strum_dpu::model::eval::EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5);
@@ -84,7 +151,7 @@ fn main() -> anyhow::Result<()> {
             });
         }
     } else {
-        println!("(artifacts missing; skipping PJRT benches)");
+        println!("(artifacts or PJRT runtime missing; skipping PJRT benches)");
     }
     Ok(())
 }

@@ -1,0 +1,163 @@
+//! Convolution lowering for the native backend: SAME-padded stride-1
+//! im2col over NHWC int8 activations, plus the pooling / activation
+//! helpers the zoo forward pass needs.
+//!
+//! The im2col row layout matches the canonical weight order exactly
+//! (`[tap = dy·kw+dx][ic]`, ic innermost — see `quant/tensor.rs`), so a
+//! convolution is one [`super::strum_gemm::StrumGemm::matmul`] with
+//! `m = oh·ow` rows and `k = kh·kw·ic` lanes.
+
+/// SAME-padding im2col, stride 1: `x` is one image plane `[h][w][c]`
+/// (int8, NHWC per image); `dst` receives `[h·w][kh·kw·c]` patch rows.
+/// Out-of-bounds taps are zero (the padding lanes of §IV-B).
+pub fn im2col(x: &[i8], h: usize, w: usize, c: usize, kh: usize, kw: usize, dst: &mut [i8]) {
+    assert_eq!(x.len(), h * w * c, "input shape");
+    let k = kh * kw * c;
+    assert_eq!(dst.len(), h * w * k, "patch buffer shape");
+    // jax SAME with stride 1 pads (k-1)/2 low / k/2 high; for the zoo's
+    // odd kernels both are (k-1)/2.
+    let ph = (kh - 1) / 2;
+    let pw = (kw - 1) / 2;
+    dst.fill(0);
+    for y in 0..h {
+        for xx in 0..w {
+            let row = &mut dst[(y * w + xx) * k..(y * w + xx + 1) * k];
+            for dy in 0..kh {
+                let sy = y + dy;
+                if sy < ph || sy - ph >= h {
+                    continue;
+                }
+                let sy = sy - ph;
+                for dx in 0..kw {
+                    let sx = xx + dx;
+                    if sx < pw || sx - pw >= w {
+                        continue;
+                    }
+                    let sx = sx - pw;
+                    let src = &x[(sy * w + sx) * c..(sy * w + sx + 1) * c];
+                    let tap = dy * kw + dx;
+                    row[tap * c..(tap + 1) * c].copy_from_slice(src);
+                }
+            }
+        }
+    }
+}
+
+/// 2×2 average pool, stride 2, VALID (the zoo's `_pool`): `[h][w][c]` →
+/// `[h/2][w/2][c]`. `h` and `w` must be even (32 → 16 → 8 in the zoo).
+pub fn avgpool2x2(x: &[f32], h: usize, w: usize, c: usize) -> Vec<f32> {
+    assert_eq!(x.len(), h * w * c, "input shape");
+    assert!(h % 2 == 0 && w % 2 == 0, "odd spatial dims: {}x{}", h, w);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0f32; oh * ow * c];
+    for y in 0..oh {
+        for xx in 0..ow {
+            let o = &mut out[(y * ow + xx) * c..(y * ow + xx + 1) * c];
+            for (dy, dx) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                let base = ((2 * y + dy) * w + 2 * xx + dx) * c;
+                let s = &x[base..base + c];
+                for (ov, &sv) in o.iter_mut().zip(s.iter()) {
+                    *ov += sv;
+                }
+            }
+            for ov in o.iter_mut() {
+                *ov *= 0.25;
+            }
+        }
+    }
+    out
+}
+
+/// In-place ReLU.
+pub fn relu(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+}
+
+/// Global average pool `[h·w][c]` → `[c]`.
+pub fn global_avg_pool(x: &[f32], pixels: usize, c: usize) -> Vec<f32> {
+    assert_eq!(x.len(), pixels * c, "input shape");
+    let mut out = vec![0f32; c];
+    for p in 0..pixels {
+        for (o, &v) in out.iter_mut().zip(x[p * c..(p + 1) * c].iter()) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / pixels.max(1) as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn im2col_1x1_is_identity() {
+        let x: Vec<i8> = (0..2 * 3 * 4).map(|i| i as i8).collect();
+        let mut dst = vec![0i8; x.len()];
+        im2col(&x, 2, 3, 4, 1, 1, &mut dst);
+        assert_eq!(dst, x);
+    }
+
+    #[test]
+    fn im2col_3x3_center_and_corner() {
+        // 3x3 single-channel image, 3x3 kernel.
+        let x: Vec<i8> = (1..=9).collect();
+        let mut dst = vec![0i8; 9 * 9];
+        im2col(&x, 3, 3, 1, 3, 3, &mut dst);
+        // Center pixel (1,1): full 3x3 neighborhood in tap order.
+        assert_eq!(&dst[4 * 9..5 * 9], &[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        // Corner pixel (0,0): top and left taps are zero padding.
+        assert_eq!(&dst[0..9], &[0, 0, 0, 0, 1, 2, 0, 4, 5]);
+    }
+
+    #[test]
+    fn im2col_matches_direct_conv() {
+        // Direct SAME conv vs im2col + dot on a random-ish input.
+        let (h, w, c, k) = (4usize, 5usize, 3usize, 3usize);
+        let x: Vec<i8> = (0..h * w * c).map(|i| ((i * 7 + 3) % 21) as i8 - 10).collect();
+        let wt: Vec<i8> = (0..k * k * c).map(|i| ((i * 5 + 1) % 15) as i8 - 7).collect();
+        let mut patches = vec![0i8; h * w * k * k * c];
+        im2col(&x, h, w, c, k, k, &mut patches);
+        let kk = k * k * c;
+        for y in 0..h {
+            for xx in 0..w {
+                let mut direct = 0i32;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let (sy, sx) = (y + dy, xx + dx);
+                        if sy < 1 || sy - 1 >= h || sx < 1 || sx - 1 >= w {
+                            continue;
+                        }
+                        for ci in 0..c {
+                            direct += x[((sy - 1) * w + sx - 1) * c + ci] as i32
+                                * wt[(dy * k + dx) * c + ci] as i32;
+                        }
+                    }
+                }
+                let row = &patches[(y * w + xx) * kk..(y * w + xx + 1) * kk];
+                let via: i32 = row.iter().zip(wt.iter()).map(|(&a, &b)| a as i32 * b as i32).sum();
+                assert_eq!(via, direct, "({}, {})", y, xx);
+            }
+        }
+    }
+
+    #[test]
+    fn avgpool_means_quads() {
+        // 2x2 single channel: mean of the 4 values.
+        let x = vec![1.0f32, 2.0, 3.0, 6.0];
+        assert_eq!(avgpool2x2(&x, 2, 2, 1), vec![3.0]);
+    }
+
+    #[test]
+    fn global_pool_means_pixels() {
+        let x = vec![1.0f32, 10.0, 3.0, 30.0]; // 2 pixels, 2 channels
+        assert_eq!(global_avg_pool(&x, 2, 2), vec![2.0, 20.0]);
+    }
+}

@@ -1,0 +1,139 @@
+//! Int8 baseline GEMM with int32 accumulation + per-channel requantize.
+//!
+//! Layouts follow the crate's canonical weight order: the weight matrix is
+//! `[n = oc][k = rows·cols]` row-major (each output channel's flattened
+//! `rows × cols` block, cols innermost), and activations arrive as im2col
+//! rows `[m][k]` in the *same* k-order — so every output element is a
+//! contiguous-slice dot product, the cache-friendly shape the FlexNN RF
+//! lanes consume (§IV-B). Accumulation is int32, exactly the simulated
+//! hardware's accumulator width (§IV-D.2).
+
+use crate::quant::round_half_away;
+
+/// `out[m][n] = x[m][k] · wT[n][k]` with int32 accumulation.
+/// `w` is row-major over output channels (i.e. already transposed relative
+/// to the textbook GEMM): `w[j*k..(j+1)*k]` is channel `j`'s weights.
+pub fn gemm_i8(x: &[i8], w: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    assert_eq!(x.len(), m * k, "activation shape");
+    assert_eq!(w.len(), n * k, "weight shape");
+    assert_eq!(out.len(), m * n, "output shape");
+    for i in 0..m {
+        let xi = &x[i * k..(i + 1) * k];
+        let oi = &mut out[i * n..(i + 1) * n];
+        for (j, o) in oi.iter_mut().enumerate() {
+            *o = dot_i8(xi, &w[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// Contiguous int8 dot product, int32 accumulation.
+#[inline]
+pub fn dot_i8(x: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    // Four independent accumulators so LLVM can vectorize without a
+    // reduction dependency chain.
+    let mut acc = [0i32; 4];
+    let chunks = x.len() / 4;
+    for c in 0..chunks {
+        for lane in 0..4 {
+            let i = c * 4 + lane;
+            acc[lane] += x[i] as i32 * w[i] as i32;
+        }
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..x.len() {
+        s += x[i] as i32 * w[i] as i32;
+    }
+    s
+}
+
+/// Quantizes a float activation slice to symmetric INT8 with `scale`
+/// (clamped ±127, round-half-away — the calibration rounding rule).
+/// Divides rather than multiplying by a reciprocal so the rounding
+/// decisions match the float fake-quant reference bit-for-bit.
+pub fn quantize_i8(src: &[f32], scale: f32, dst: &mut [i8]) {
+    assert_eq!(src.len(), dst.len());
+    debug_assert!(scale > 0.0);
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d = round_half_away(s / scale).clamp(-127, 127) as i8;
+    }
+}
+
+/// Per-tensor dynamic scale: `max|x| / 127` (1.0 for an all-zero tensor).
+/// Used when a layer has no calibrated static scale.
+pub fn dynamic_scale(xs: &[f32]) -> f32 {
+    let amax = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    if amax > 0.0 {
+        amax / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Requantizes one row of int32 accumulators to f32:
+/// `out[j] = acc[j] · act_scale · w_scales[j] + bias[j]`.
+pub fn requantize_row(
+    acc: &[i32],
+    act_scale: f32,
+    w_scales: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(acc.len(), w_scales.len());
+    debug_assert_eq!(acc.len(), bias.len());
+    debug_assert_eq!(acc.len(), out.len());
+    for j in 0..acc.len() {
+        out[j] = acc[j] as f32 * (act_scale * w_scales[j]) + bias[j];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn gemm_matches_reference() {
+        let (m, k, n) = (5, 37, 4);
+        let mut rng = Rng::new(3);
+        let x: Vec<i8> = (0..m * k).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+        let w: Vec<i8> = (0..n * k).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+        let mut out = vec![0i32; m * n];
+        gemm_i8(&x, &w, m, k, n, &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                for kk in 0..k {
+                    acc += x[i * k + kk] as i32 * w[j * k + kk] as i32;
+                }
+                assert_eq!(out[i * n + j], acc, "({}, {})", i, j);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_round_trip_within_half_step() {
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.031).collect();
+        let scale = dynamic_scale(&xs);
+        let mut q = vec![0i8; xs.len()];
+        quantize_i8(&xs, scale, &mut q);
+        for (x, &c) in xs.iter().zip(q.iter()) {
+            assert!((x - c as f32 * scale).abs() <= scale / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn dynamic_scale_handles_zeros() {
+        assert_eq!(dynamic_scale(&[0.0; 8]), 1.0);
+        assert!((dynamic_scale(&[-2.54, 1.0]) - 2.54 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn requantize_applies_scale_and_bias() {
+        let acc = vec![100, -200];
+        let mut out = vec![0f32; 2];
+        requantize_row(&acc, 0.5, &[0.1, 0.2], &[1.0, -1.0], &mut out);
+        assert!((out[0] - (100.0 * 0.05 + 1.0)).abs() < 1e-6);
+        assert!((out[1] - (-200.0 * 0.1 - 1.0)).abs() < 1e-6);
+    }
+}

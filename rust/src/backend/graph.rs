@@ -1,0 +1,647 @@
+//! Network graph execution for the native backend.
+//!
+//! The zoo architecture specs mirror `python/compile/nets.py` `NETS`
+//! exactly (the roster contract `model/zoo.rs` already states); a
+//! [`NetworkPlan`] binds a spec to a StruM-transformed weight set in
+//! §IV-D encoded form and executes the forward pass with the dual-bank
+//! integer engine — fake-quantized activations, int8/shift-add GEMMs via
+//! im2col, f32 requantize + bias + ReLU between layers. No Python, HLO,
+//! or XLA anywhere.
+//!
+//! [`forward_f32_reference`] is the float mirror of the same graph
+//! (dequantized weights, f32 conv) used to validate the integer engine;
+//! artifact-free tests build synthetic [`NetWeights`] from
+//! [`synth_layer_metas`].
+
+use super::conv::{avgpool2x2, global_avg_pool, im2col, relu};
+use super::gemm::{dynamic_scale, quantize_i8, requantize_row};
+use super::strum_gemm::StrumGemm;
+use crate::encode::encode_layer;
+use crate::model::eval::{transform_network, EvalConfig};
+use crate::model::import::{LayerMeta, NetWeights};
+use crate::quant::{round_half_away, StrumLayer};
+use crate::Result;
+use anyhow::{anyhow, ensure};
+
+/// One node of a network spec (mirror of `nets.py` spec types).
+#[derive(Debug, Clone, Copy)]
+pub enum Spec {
+    /// k×k SAME conv + ReLU, optional 2×2 avg pool.
+    Conv {
+        name: &'static str,
+        k: usize,
+        oc: usize,
+        pool: bool,
+    },
+    /// Two 3×3 convs + identity/1×1-projection shortcut.
+    Residual { name: &'static str, oc: usize },
+    /// Three parallel branches (1×1, 3×3, 5×5) concatenated channel-wise.
+    Inception { name: &'static str, oc: usize },
+}
+
+macro_rules! conv {
+    ($name:literal, $k:literal, $oc:literal) => {
+        Spec::Conv { name: $name, k: $k, oc: $oc, pool: false }
+    };
+    ($name:literal, $k:literal, $oc:literal, pool) => {
+        Spec::Conv { name: $name, k: $k, oc: $oc, pool: true }
+    };
+}
+
+/// Architecture spec per zoo net — MUST match `python/compile/nets.py`.
+pub fn net_spec(net: &str) -> Option<&'static [Spec]> {
+    Some(match net {
+        "mini_vgg_a" => &[
+            conv!("c0", 3, 16),
+            conv!("c1", 3, 32, pool),
+            conv!("c2", 3, 32),
+            conv!("c3", 3, 64, pool),
+        ],
+        "mini_vgg_b" => &[
+            conv!("c0", 3, 16),
+            conv!("c1", 3, 16),
+            conv!("c2", 3, 32, pool),
+            conv!("c3", 3, 32),
+            conv!("c4", 3, 64, pool),
+            conv!("c5", 3, 64),
+        ],
+        "mini_vgg_c" => &[
+            conv!("c0", 3, 24),
+            conv!("c1", 3, 48, pool),
+            conv!("c2", 3, 48),
+            conv!("c3", 3, 96, pool),
+            conv!("c4", 3, 96),
+        ],
+        "mini_resnet_a" => &[
+            conv!("stem", 3, 16),
+            Spec::Residual { name: "r0", oc: 16 },
+            conv!("d0", 3, 32, pool),
+            Spec::Residual { name: "r1", oc: 32 },
+        ],
+        "mini_resnet_b" => &[
+            conv!("stem", 3, 16),
+            Spec::Residual { name: "r0", oc: 16 },
+            conv!("d0", 3, 32, pool),
+            Spec::Residual { name: "r1", oc: 32 },
+            conv!("d1", 3, 64, pool),
+            Spec::Residual { name: "r2", oc: 64 },
+        ],
+        "mini_resnet_c" => &[
+            conv!("stem", 3, 24),
+            Spec::Residual { name: "r0", oc: 24 },
+            conv!("d0", 3, 48, pool),
+            Spec::Residual { name: "r1", oc: 48 },
+            Spec::Residual { name: "r2", oc: 48 },
+        ],
+        "mini_incept_a" => &[
+            conv!("stem", 3, 16, pool),
+            Spec::Inception { name: "i0", oc: 32 },
+            conv!("d0", 3, 48, pool),
+        ],
+        "mini_incept_b" => &[
+            conv!("stem", 3, 16, pool),
+            Spec::Inception { name: "i0", oc: 32 },
+            Spec::Inception { name: "i1", oc: 48 },
+            conv!("d0", 3, 64, pool),
+        ],
+        "mini_darknet" => &[
+            conv!("c0", 3, 24, pool),
+            conv!("c1", 1, 16),
+            conv!("c2", 3, 32, pool),
+            conv!("c3", 1, 16),
+            conv!("c4", 3, 48),
+        ],
+        "mini_cnn_s" => &[
+            conv!("c0", 3, 16, pool),
+            conv!("c1", 3, 32, pool),
+            conv!("c2", 3, 32),
+        ],
+        _ => return None,
+    })
+}
+
+/// Inception branch split (1/4, 1/2, remainder — mirror of
+/// `nets._inception_branches`): (suffix, k, branch oc).
+fn inception_branches(oc: usize) -> [(&'static str, usize, usize); 3] {
+    let o1 = oc / 4;
+    let o3 = oc / 2;
+    let o5 = oc - o1 - o3;
+    [("b1", 1, o1), ("b3", 3, o3), ("b5", 5, o5)]
+}
+
+/// Quantizable-layer manifest for a spec walk — the rust mirror of
+/// `nets.layer_meta`, parameterized by input size so artifact-free tests
+/// can build small synthetic networks. `classes` sets the fc width.
+pub fn synth_layer_metas(net: &str, img: usize, classes: usize) -> Result<Vec<LayerMeta>> {
+    let spec = net_spec(net).ok_or_else(|| anyhow!("unknown net {}", net))?;
+    let mut metas = Vec::new();
+    let mut ic = 3usize;
+    let mut hw = img;
+    let conv_meta = |name: &str, k: usize, ic: usize, oc: usize, hw: usize| LayerMeta {
+        name: name.to_string(),
+        kind: "conv".to_string(),
+        kh: k,
+        kw: k,
+        ic,
+        oc,
+        oh: hw,
+        ow: hw,
+    };
+    for s in spec {
+        match *s {
+            Spec::Conv { name, k, oc, pool } => {
+                metas.push(conv_meta(name, k, ic, oc, hw));
+                ic = oc;
+                if pool {
+                    hw /= 2;
+                }
+            }
+            Spec::Residual { name, oc } => {
+                metas.push(conv_meta(&format!("{}a", name), 3, ic, oc, hw));
+                metas.push(conv_meta(&format!("{}b", name), 3, oc, oc, hw));
+                if ic != oc {
+                    metas.push(conv_meta(&format!("{}p", name), 1, ic, oc, hw));
+                }
+                ic = oc;
+            }
+            Spec::Inception { name, oc } => {
+                for (suffix, k, boc) in inception_branches(oc) {
+                    metas.push(conv_meta(&format!("{}{}", name, suffix), k, ic, boc, hw));
+                }
+                ic = oc;
+            }
+        }
+    }
+    metas.push(LayerMeta {
+        name: "fc".to_string(),
+        kind: "fc".to_string(),
+        kh: 1,
+        kw: 1,
+        ic,
+        oc: classes,
+        oh: 1,
+        ow: 1,
+    });
+    Ok(metas)
+}
+
+/// One executable layer: encoded weights in dual-bank form + the
+/// requantization constants around them.
+struct LayerExec {
+    name: String,
+    kh: usize,
+    kw: usize,
+    ic: usize,
+    oc: usize,
+    gemm: StrumGemm,
+    bias: Vec<f32>,
+    /// Static activation scale (0 → per-tensor dynamic).
+    act_scale: f32,
+}
+
+/// A network bound to a StruM weight set, executable natively.
+pub struct NetworkPlan {
+    pub net: String,
+    pub classes: usize,
+    pub img: usize,
+    /// Mean per-layer int-grid RMSE of the transform (diagnostics).
+    pub mean_rmse: f64,
+    spec: &'static [Spec],
+    layers: Vec<LayerExec>,
+}
+
+impl NetworkPlan {
+    /// Transforms `weights` per `cfg`, encodes every layer to the §IV-D
+    /// format, and builds the execution plan from the *decoded* streams —
+    /// the same bits the hardware would fetch.
+    pub fn build(weights: &NetWeights, cfg: &EvalConfig) -> Result<NetworkPlan> {
+        let transformed = transform_network(weights, cfg)?;
+        Self::from_transformed(weights, &transformed, cfg.act_quant)
+    }
+
+    /// Builds a plan from an existing transform (shared with the f32
+    /// reference so both paths see identical weights).
+    pub fn from_transformed(
+        weights: &NetWeights,
+        transformed: &[StrumLayer],
+        act_quant: bool,
+    ) -> Result<NetworkPlan> {
+        let m = &weights.manifest;
+        let spec = net_spec(&m.net).ok_or_else(|| anyhow!("no native spec for net {}", m.net))?;
+        ensure!(
+            transformed.len() == m.layers.len(),
+            "{}: {} transformed layers for {} manifest layers",
+            m.net,
+            transformed.len(),
+            m.layers.len()
+        );
+        ensure!(!m.layers.is_empty(), "{}: empty layer manifest", m.net);
+        ensure!(
+            m.act_scales.len() == m.layers.len(),
+            "{}: {} act scales for {} layers",
+            m.net,
+            m.act_scales.len(),
+            m.layers.len()
+        );
+        let mut layers = Vec::with_capacity(m.layers.len());
+        for (li, (meta, s)) in m.layers.iter().zip(transformed.iter()).enumerate() {
+            ensure!(
+                meta.name == s.name,
+                "layer order mismatch: manifest {} vs transform {}",
+                meta.name,
+                s.name
+            );
+            // Execute from the encoded representation, not the in-memory
+            // transform: encode → decode → dual banks.
+            let gemm = StrumGemm::from_encoded(&encode_layer(s))?;
+            let k = meta.kh * meta.kw * meta.ic;
+            ensure!(
+                gemm.k == k && gemm.oc == meta.oc,
+                "layer {}: gemm {}x{} vs manifest {}x{}",
+                meta.name,
+                gemm.oc,
+                gemm.k,
+                meta.oc,
+                k
+            );
+            let (_, bias) = weights.param(&format!("{}_b", meta.name))?;
+            ensure!(bias.len() == meta.oc, "layer {}: bias len", meta.name);
+            layers.push(LayerExec {
+                name: meta.name.clone(),
+                kh: meta.kh,
+                kw: meta.kw,
+                ic: meta.ic,
+                oc: meta.oc,
+                gemm,
+                bias: bias.to_vec(),
+                act_scale: if act_quant { m.act_scales[li] } else { 0.0 },
+            });
+        }
+        // The walk below must consume every layer in manifest order; do a
+        // dry pass now so registration fails fast on a roster mismatch.
+        let expected = synth_layer_metas(&m.net, m.layers[0].oh, m.num_classes)?;
+        ensure!(
+            expected.len() == m.layers.len(),
+            "{}: spec walk yields {} layers, manifest has {}",
+            m.net,
+            expected.len(),
+            m.layers.len()
+        );
+        for (e, l) in expected.iter().zip(m.layers.iter()) {
+            ensure!(
+                e.name == l.name && e.kh == l.kh && e.ic == l.ic && e.oc == l.oc,
+                "{}: spec layer {:?} vs manifest {:?}",
+                m.net,
+                (&e.name, e.kh, e.ic, e.oc),
+                (&l.name, l.kh, l.ic, l.oc)
+            );
+        }
+        let mean_rmse = if transformed.is_empty() {
+            0.0
+        } else {
+            transformed.iter().map(|s| s.grid_rmse).sum::<f64>() / transformed.len() as f64
+        };
+        Ok(NetworkPlan {
+            net: m.net.clone(),
+            classes: m.num_classes,
+            img: m.layers[0].oh,
+            mean_rmse,
+            spec,
+            layers,
+        })
+    }
+
+    /// Forward pass of one `[img, img, 3]` NHWC image → `[classes]` logits.
+    pub fn forward_one(&self, image: &[f32]) -> Result<Vec<f32>> {
+        let px = self.img * self.img * 3;
+        ensure!(image.len() == px, "image len {} != {}", image.len(), px);
+        let mut li = 0usize;
+        type ConvOut = Result<(Vec<f32>, usize)>;
+        let conv = |li: usize, x: &[f32], h: usize, w: usize, c: usize| -> ConvOut {
+            let l = &self.layers[li];
+            ensure!(c == l.ic, "layer {}: {} input channels, want {}", l.name, c, l.ic);
+            let scale = if l.act_scale > 0.0 { l.act_scale } else { dynamic_scale(x) };
+            let mut xq = vec![0i8; x.len()];
+            quantize_i8(x, scale, &mut xq);
+            let k = l.kh * l.kw * c;
+            let m = h * w;
+            let patches = if l.kh == 1 && l.kw == 1 {
+                xq
+            } else {
+                let mut p = vec![0i8; m * k];
+                im2col(&xq, h, w, c, l.kh, l.kw, &mut p);
+                p
+            };
+            let mut acc = vec![0i32; m * l.oc];
+            l.gemm.matmul(&patches, m, &mut acc);
+            let mut out = vec![0f32; m * l.oc];
+            for p in 0..m {
+                requantize_row(
+                    &acc[p * l.oc..(p + 1) * l.oc],
+                    scale,
+                    &l.gemm.scales,
+                    &l.bias,
+                    &mut out[p * l.oc..(p + 1) * l.oc],
+                );
+            }
+            Ok((out, l.oc))
+        };
+        let (feat, c) = walk_spec(self.spec, image, self.img, &mut li, conv)?;
+        // Classifier head: fake-quant the pooled features, dual-bank GEMM.
+        let l = self
+            .layers
+            .last()
+            .ok_or_else(|| anyhow!("plan has no fc layer"))?;
+        let n_conv = self.layers.len() - 1;
+        ensure!(li == n_conv, "walk consumed {} of {} conv layers", li, n_conv);
+        ensure!(l.name == "fc" && l.ic == c, "unexpected head layer {}", l.name);
+        let scale = if l.act_scale > 0.0 { l.act_scale } else { dynamic_scale(&feat) };
+        let mut fq = vec![0i8; feat.len()];
+        quantize_i8(&feat, scale, &mut fq);
+        let mut acc = vec![0i32; l.oc];
+        l.gemm.matmul(&fq, 1, &mut acc);
+        let mut logits = vec![0f32; l.oc];
+        requantize_row(&acc, scale, &l.gemm.scales, &l.bias, &mut logits);
+        Ok(logits)
+    }
+}
+
+/// Shared spec traversal: calls `conv(li, x, h, w, c)` for each
+/// quantizable conv in manifest order (incrementing `li`), applies
+/// ReLU / pooling / residual / concat structure, and returns the
+/// globally-pooled feature vector and its channel count. The caller
+/// handles the fc head (`li` points at it on return).
+fn walk_spec<C>(
+    spec: &[Spec],
+    image: &[f32],
+    img: usize,
+    li: &mut usize,
+    mut conv: C,
+) -> Result<(Vec<f32>, usize)>
+where
+    C: FnMut(usize, &[f32], usize, usize, usize) -> Result<(Vec<f32>, usize)>,
+{
+    let mut x = image.to_vec();
+    let (mut h, mut w, mut c) = (img, img, 3usize);
+    let mut i = *li;
+    for s in spec {
+        match *s {
+            Spec::Conv { pool, .. } => {
+                let (mut y, oc) = conv(i, &x, h, w, c)?;
+                i += 1;
+                relu(&mut y);
+                x = y;
+                c = oc;
+                if pool {
+                    x = avgpool2x2(&x, h, w, c);
+                    h /= 2;
+                    w /= 2;
+                }
+            }
+            Spec::Residual { oc, .. } => {
+                let ic = c;
+                let (mut y, _) = conv(i, &x, h, w, c)?;
+                i += 1;
+                relu(&mut y);
+                let (mut y2, _) = conv(i, &y, h, w, oc)?;
+                i += 1;
+                let sc = if ic != oc {
+                    let (p, _) = conv(i, &x, h, w, c)?;
+                    i += 1;
+                    p
+                } else {
+                    std::mem::take(&mut x)
+                };
+                ensure!(y2.len() == sc.len(), "residual shape mismatch");
+                for (a, b) in y2.iter_mut().zip(sc.iter()) {
+                    *a += b;
+                }
+                relu(&mut y2);
+                x = y2;
+                c = oc;
+            }
+            Spec::Inception { oc, .. } => {
+                let mut branches = Vec::with_capacity(3);
+                let mut ocs = Vec::with_capacity(3);
+                for _ in 0..3 {
+                    let (mut y, boc) = conv(i, &x, h, w, c)?;
+                    i += 1;
+                    relu(&mut y);
+                    branches.push(y);
+                    ocs.push(boc);
+                }
+                let total: usize = ocs.iter().sum();
+                ensure!(total == oc, "inception channels {} != {}", total, oc);
+                let mut cat = vec![0f32; h * w * total];
+                for p in 0..h * w {
+                    let mut off = 0usize;
+                    for (b, &boc) in branches.iter().zip(ocs.iter()) {
+                        cat[p * total + off..p * total + off + boc]
+                            .copy_from_slice(&b[p * boc..(p + 1) * boc]);
+                        off += boc;
+                    }
+                }
+                x = cat;
+                c = oc;
+            }
+        }
+    }
+    *li = i;
+    Ok((global_avg_pool(&x, h * w, c), c))
+}
+
+/// Symmetric fake-quant of a float slice (the reference-path mirror of
+/// quantize→dequantize; scale 0 → passthrough, like `nets._fq`).
+fn fake_quant_vec(xs: &[f32], scale: f32) -> Vec<f32> {
+    if scale <= 0.0 {
+        return xs.to_vec();
+    }
+    xs.iter()
+        .map(|&x| round_half_away(x / scale).clamp(-127, 127) as f32 * scale)
+        .collect()
+}
+
+/// One f32 SAME-padded stride-1 convolution over canonical-layout weights
+/// (`wts` = `[oc][kh·kw][ic]` flat), with optional input fake-quant.
+/// Shared by the float reference forward and activation calibration.
+#[allow(clippy::too_many_arguments)]
+fn conv_f32(
+    m: &crate::model::import::NetManifest,
+    weights: &NetWeights,
+    wts: &[f32],
+    li: usize,
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    scale: f32,
+) -> Result<(Vec<f32>, usize)> {
+    let meta = &m.layers[li];
+    ensure!(c == meta.ic, "layer {}: input channels", meta.name);
+    let xfq = fake_quant_vec(x, scale);
+    let (_, bias) = weights.param(&format!("{}_b", meta.name))?;
+    let (kh, kw, ic, oc) = (meta.kh, meta.kw, meta.ic, meta.oc);
+    let (ph, pw) = ((kh - 1) / 2, (kw - 1) / 2);
+    let mut out = vec![0f32; h * w * oc];
+    for y in 0..h {
+        for xx in 0..w {
+            for o in 0..oc {
+                let mut acc = 0f64;
+                for dy in 0..kh {
+                    let sy = y + dy;
+                    if sy < ph || sy - ph >= h {
+                        continue;
+                    }
+                    let sy = sy - ph;
+                    for dx in 0..kw {
+                        let sx = xx + dx;
+                        if sx < pw || sx - pw >= w {
+                            continue;
+                        }
+                        let sx = sx - pw;
+                        let tap = dy * kw + dx;
+                        let wrow = &wts[(o * kh * kw + tap) * ic..(o * kh * kw + tap + 1) * ic];
+                        let xrow = &xfq[(sy * w + sx) * c..(sy * w + sx + 1) * c];
+                        for ci in 0..ic {
+                            acc += xrow[ci] as f64 * wrow[ci] as f64;
+                        }
+                    }
+                }
+                out[(y * w + xx) * oc + o] = acc as f32 + bias[o];
+            }
+        }
+    }
+    Ok((out, oc))
+}
+
+/// Float reference forward: the same graph walk with dequantized StruM
+/// weights and f32 convolution — the semantics the PJRT path computes.
+/// Used to validate the integer engine (they must agree on top-1).
+pub fn forward_f32_reference(
+    weights: &NetWeights,
+    transformed: &[StrumLayer],
+    image: &[f32],
+    act_quant: bool,
+) -> Result<Vec<f32>> {
+    let m = &weights.manifest;
+    let spec = net_spec(&m.net).ok_or_else(|| anyhow!("no native spec for net {}", m.net))?;
+    ensure!(transformed.len() == m.layers.len(), "transform/manifest mismatch");
+    ensure!(m.act_scales.len() == m.layers.len() || !act_quant, "missing act scales");
+    let img = m.layers.first().map(|l| l.oh).unwrap_or(32);
+    let deq: Vec<Vec<f32>> = transformed.iter().map(|s| s.dequantize()).collect();
+    let mut li = 0usize;
+    let conv = |li: usize, x: &[f32], h: usize, w: usize, c: usize| -> Result<(Vec<f32>, usize)> {
+        let scale = if act_quant { m.act_scales[li] } else { 0.0 };
+        conv_f32(m, weights, &deq[li], li, x, h, w, c, scale)
+    };
+    let (feat, c) = walk_spec(spec, image, img, &mut li, conv)?;
+    let meta = m
+        .layers
+        .last()
+        .ok_or_else(|| anyhow!("empty manifest"))?;
+    ensure!(meta.name == "fc" && meta.ic == c, "unexpected head layer {}", meta.name);
+    let scale = if act_quant { m.act_scales[li] } else { 0.0 };
+    let xfq = fake_quant_vec(&feat, scale);
+    let (_, bias) = weights.param("fc_b")?;
+    let wts = &deq[li];
+    let mut logits = vec![0f32; meta.oc];
+    for (o, l) in logits.iter_mut().enumerate() {
+        let wrow = &wts[o * meta.ic..(o + 1) * meta.ic];
+        let acc: f64 = xfq
+            .iter()
+            .zip(wrow.iter())
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        *l = acc as f32 + bias[o];
+    }
+    Ok(logits)
+}
+
+/// Static activation calibration over a batch of images: runs the float
+/// forward on the ORIGINAL weights recording each quantizable layer's
+/// input `max|x| / 127` — the rust mirror of `model.collect_act_scales`
+/// (max in place of the 99.9th percentile, equivalent at calibration-batch
+/// scale). Lets artifact-free workloads build a fully calibrated manifest.
+pub fn calibrate_act_scales(
+    weights: &NetWeights,
+    images: &[f32],
+    batch: usize,
+) -> Result<Vec<f32>> {
+    let m = &weights.manifest;
+    let spec = net_spec(&m.net).ok_or_else(|| anyhow!("no native spec for net {}", m.net))?;
+    let img = m.layers.first().map(|l| l.oh).unwrap_or(32);
+    let px = img * img * 3;
+    ensure!(images.len() == batch * px, "calibration batch shape");
+    ensure!(batch > 0, "empty calibration batch");
+    let floats: Vec<Vec<f32>> = m
+        .layers
+        .iter()
+        .map(|l| weights.canonical_f32(l))
+        .collect::<Result<_>>()?;
+    let mut amax = vec![0f32; m.layers.len()];
+    let max_abs = |xs: &[f32]| xs.iter().fold(0f32, |a, &x| a.max(x.abs()));
+    for b in 0..batch {
+        let image = &images[b * px..(b + 1) * px];
+        let mut li = 0usize;
+        let conv = |li: usize, x: &[f32], h: usize, w: usize, c: usize| {
+            amax[li] = amax[li].max(max_abs(x));
+            conv_f32(m, weights, &floats[li], li, x, h, w, c, 0.0)
+        };
+        let (feat, _c) = walk_spec(spec, image, img, &mut li, conv)?;
+        amax[li] = amax[li].max(max_abs(&feat));
+    }
+    Ok(amax
+        .iter()
+        .map(|&a| if a > 0.0 { a / 127.0 } else { 1.0 })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn every_zoo_net_has_a_spec() {
+        for net in zoo::net_names() {
+            assert!(net_spec(net).is_some(), "missing spec for {}", net);
+        }
+        assert!(net_spec("not_a_net").is_none());
+    }
+
+    #[test]
+    fn synth_metas_match_python_layer_meta() {
+        // mini_resnet_a at img=32: stem, r0a, r0b, d0, r1a, r1b, fc —
+        // r0 has no projection (16→16), r1 has none either (32→32 after d0).
+        let metas = synth_layer_metas("mini_resnet_a", 32, 12).unwrap();
+        let names: Vec<&str> = metas.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, vec!["stem", "r0a", "r0b", "d0", "r1a", "r1b", "fc"]);
+        // d0 pools: layers after it sit at 16x16.
+        assert_eq!(metas[3].oh, 32);
+        assert_eq!(metas[4].oh, 16);
+        // fc consumes the final channel width.
+        assert_eq!(metas.last().unwrap().ic, 32);
+        assert_eq!(metas.last().unwrap().oc, 12);
+    }
+
+    #[test]
+    fn inception_split_covers_all_channels() {
+        let metas = synth_layer_metas("mini_incept_a", 32, 12).unwrap();
+        let names: Vec<&str> = metas.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, vec!["stem", "i0b1", "i0b3", "i0b5", "d0", "fc"]);
+        let total: usize = metas[1..4].iter().map(|m| m.oc).sum();
+        assert_eq!(total, 32);
+        // All three branches read the stem's 16 channels.
+        assert!(metas[1..4].iter().all(|m| m.ic == 16));
+    }
+
+    #[test]
+    fn residual_projection_appears_when_widths_differ() {
+        // mini_resnet spec never widens inside a Residual, so craft the
+        // check through the darknet 1x1 layers instead: all convs there.
+        let metas = synth_layer_metas("mini_darknet", 32, 12).unwrap();
+        assert_eq!(metas[1].kh, 1); // c1 is a 1x1
+        assert_eq!(metas[1].ic, 24);
+        assert_eq!(metas[1].oc, 16);
+    }
+}

@@ -1,0 +1,268 @@
+//! Execution backends: how a registered model variant turns image
+//! batches into logits.
+//!
+//! The [`Backend`] trait is the contract the coordinator serves through:
+//!
+//! * `infer_batch(images, batch)` — `[batch, img, img, 3]` floats in,
+//!   `[batch, classes]` logits out; must be thread-safe (worker threads
+//!   call it concurrently).
+//! * `batch_sizes()` / `pick_batch(n)` — the batch shapes the backend
+//!   prefers; the dynamic batcher pads to `pick_batch(n)`.
+//!
+//! Two implementations:
+//!
+//! * [`NativeBackend`] — the pure-Rust integer engine (this module's
+//!   submodules): dual-bank StruM GEMM (`strum_gemm`), int8 baseline GEMM
+//!   (`gemm`), im2col conv lowering (`conv`), graph walk (`graph`), and
+//!   batch parallelism (`parallel`). Serves straight from the §IV-D
+//!   encoded weights; needs no Python, HLO artifacts, or XLA.
+//! * [`PjrtBackend`] — the original XLA/PJRT path (AOT-lowered HLO
+//!   executables with weights as arguments). Requires the `pjrt` cargo
+//!   feature and exported `artifacts/hlo/` files.
+
+pub mod conv;
+pub mod gemm;
+pub mod graph;
+pub mod parallel;
+pub mod strum_gemm;
+
+use crate::model::eval::{prepare_args, transform_network, EvalConfig};
+use crate::model::import::NetWeights;
+use crate::runtime::{Executable, Runtime, Tensor};
+use crate::Result;
+use anyhow::anyhow;
+use std::path::Path;
+use std::sync::Arc;
+
+pub use graph::NetworkPlan;
+
+/// Which execution engine a variant binds to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// XLA/PJRT executables (`pjrt` feature + HLO artifacts).
+    Pjrt,
+    /// Native integer engine (no XLA on the request path).
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "pjrt" | "xla" => Some(BackendKind::Pjrt),
+            "native" | "int" | "cpu" => Some(BackendKind::Native),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
+        }
+    }
+}
+
+/// An inference engine for one (net, transform) variant.
+pub trait Backend: Send + Sync {
+    fn kind(&self) -> BackendKind;
+    fn net(&self) -> &str;
+    fn classes(&self) -> usize;
+    /// Input image side length (images are `[img, img, 3]`).
+    fn img(&self) -> usize;
+    /// Ascending batch sizes the backend executes natively.
+    fn batch_sizes(&self) -> &[usize];
+    /// Batch size to pad `n` queued requests to: smallest supported
+    /// size ≥ n, else the largest supported.
+    fn pick_batch(&self, n: usize) -> usize {
+        let sizes = self.batch_sizes();
+        for &b in sizes {
+            if b >= n {
+                return b;
+            }
+        }
+        sizes.last().copied().unwrap_or(1)
+    }
+    /// Runs one padded batch; `images` is `[batch, img, img, 3]`
+    /// row-major (owned — PJRT hands the buffer to the device without a
+    /// copy), the result `[batch, classes]` row-major.
+    fn infer_batch(&self, images: Vec<f32>, batch: usize) -> Result<Vec<f32>>;
+}
+
+/// Native integer engine wrapping a [`NetworkPlan`].
+pub struct NativeBackend {
+    plan: NetworkPlan,
+    sizes: Vec<usize>,
+    /// Concurrent `infer_batch` calls right now — each call takes
+    /// `num_threads / active` workers so parallel coordinator workers
+    /// split the machine instead of oversubscribing it.
+    active: std::sync::atomic::AtomicUsize,
+}
+
+impl NativeBackend {
+    /// Transforms + encodes `weights` per `cfg` and builds the plan.
+    pub fn new(weights: &NetWeights, cfg: &EvalConfig) -> Result<NativeBackend> {
+        let plan = NetworkPlan::build(weights, cfg)?;
+        Ok(NativeBackend {
+            plan,
+            // The engine handles any m; advertise power-of-two sizes up
+            // to 256 so the batcher's cap logic has shapes to pick from.
+            sizes: vec![1, 2, 4, 8, 16, 32, 64, 128, 256],
+            active: std::sync::atomic::AtomicUsize::new(0),
+        })
+    }
+
+    /// Loads `artifacts/weights/<net>.{json,bin}` and builds the plan.
+    pub fn load(artifacts: &Path, net: &str, cfg: &EvalConfig) -> Result<NativeBackend> {
+        let weights = NetWeights::load(artifacts, net)?;
+        Self::new(&weights, cfg)
+    }
+
+    pub fn plan(&self) -> &NetworkPlan {
+        &self.plan
+    }
+}
+
+impl Backend for NativeBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+    fn net(&self) -> &str {
+        &self.plan.net
+    }
+    fn classes(&self) -> usize {
+        self.plan.classes
+    }
+    fn img(&self) -> usize {
+        self.plan.img
+    }
+    fn batch_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+    /// The native engine executes any batch exactly — no padding.
+    fn pick_batch(&self, n: usize) -> usize {
+        n.max(1)
+    }
+    fn infer_batch(&self, images: Vec<f32>, batch: usize) -> Result<Vec<f32>> {
+        use std::sync::atomic::Ordering;
+        let active = self.active.fetch_add(1, Ordering::Relaxed) + 1;
+        let width = (crate::util::pool::num_threads() / active).max(1);
+        let r = parallel::infer_batch_width(&self.plan, &images, batch, width);
+        self.active.fetch_sub(1, Ordering::Relaxed);
+        r
+    }
+}
+
+/// PJRT/XLA engine: the exported batch-size executables plus the staged
+/// weight arguments (dequantized once at registration).
+pub struct PjrtBackend {
+    net: String,
+    classes: usize,
+    img: usize,
+    sizes: Vec<usize>,
+    executables: Vec<(usize, Arc<Executable>)>,
+    static_args: Vec<Tensor>,
+}
+
+impl PjrtBackend {
+    /// Discovers `artifacts/hlo/<net>_b*.hlo.txt`, compiles each, and
+    /// stages the transformed weight arguments.
+    pub fn load(
+        rt: &Runtime,
+        artifacts: &Path,
+        net: &str,
+        cfg: &EvalConfig,
+    ) -> Result<PjrtBackend> {
+        let weights = NetWeights::load(artifacts, net)?;
+        let transformed = transform_network(&weights, cfg)?;
+        let static_args = prepare_args(&weights, &transformed, cfg.act_quant)?;
+        let hlo_dir = artifacts.join("hlo");
+        let prefix = format!("{}_b", net);
+        let mut batches: Vec<usize> = std::fs::read_dir(&hlo_dir)?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().to_string_lossy().to_string();
+                name.strip_prefix(&prefix)
+                    .and_then(|rest| rest.strip_suffix(".hlo.txt"))
+                    .and_then(|b| b.parse::<usize>().ok())
+            })
+            .collect();
+        batches.sort_unstable();
+        if batches.is_empty() {
+            return Err(anyhow!("no exported HLO for {} in {}", net, hlo_dir.display()));
+        }
+        let mut executables = Vec::new();
+        for &b in &batches {
+            let exe = rt.load_hlo(&hlo_dir.join(format!("{}_b{}.hlo.txt", net, b)))?;
+            executables.push((b, exe));
+        }
+        Ok(PjrtBackend {
+            net: net.to_string(),
+            classes: weights.manifest.num_classes,
+            img: weights.manifest.layers.first().map(|l| l.oh).unwrap_or(32),
+            sizes: batches,
+            executables,
+            static_args,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+    fn net(&self) -> &str {
+        &self.net
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn img(&self) -> usize {
+        self.img
+    }
+    fn batch_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+    fn infer_batch(&self, images: Vec<f32>, batch: usize) -> Result<Vec<f32>> {
+        if images.len() != batch * self.img * self.img * 3 {
+            return Err(anyhow!("{}: bad batch buffer size", self.net));
+        }
+        let exe = self
+            .executables
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .map(|(_, e)| e)
+            .ok_or_else(|| anyhow!("{}: no executable for batch {}", self.net, batch))?;
+        let mut args = Vec::with_capacity(self.static_args.len() + 1);
+        args.push(Tensor::f32(images, &[batch, self.img, self.img, 3]));
+        args.extend(self.static_args.iter().cloned());
+        let out = exe.run_f32(&args)?;
+        let logits = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: empty result tuple", self.net))?;
+        if logits.len() != batch * self.classes {
+            return Err(anyhow!(
+                "{}: logits len {} != {}x{}",
+                self.net,
+                logits.len(),
+                batch,
+                self.classes
+            ));
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parse_roundtrip() {
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("PJRT"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("xla"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("cuda"), None);
+        assert_eq!(BackendKind::Native.name(), "native");
+    }
+}

@@ -1,0 +1,52 @@
+//! Data-parallel batch execution for the native backend.
+//!
+//! Images in a batch are independent, so the driver fans them out over
+//! `util/pool`'s scoped threads (one contiguous chunk per worker — the
+//! same static partitioning the rest of the crate uses). Per-image
+//! scratch (im2col buffers, accumulators) lives inside
+//! [`NetworkPlan::forward_one`], so workers share nothing but the plan.
+//!
+//! When several coordinator workers call into the same backend
+//! concurrently, each call gets a *share* of the machine rather than
+//! the full width (`width` in [`infer_batch_width`]) — otherwise W
+//! workers × N cores of scoped threads contend on N cores.
+
+use super::graph::NetworkPlan;
+use crate::util::pool::{num_threads, par_map_width};
+use crate::Result;
+use anyhow::anyhow;
+
+/// Runs `batch` images (`[batch, img, img, 3]` row-major) through the
+/// plan in parallel across the whole machine; returns logits
+/// `[batch, classes]` row-major.
+pub fn infer_batch(plan: &NetworkPlan, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+    infer_batch_width(plan, images, batch, num_threads())
+}
+
+/// [`infer_batch`] capped at `width` worker threads (the caller's share
+/// of the machine when it is itself one of several parallel callers).
+pub fn infer_batch_width(
+    plan: &NetworkPlan,
+    images: &[f32],
+    batch: usize,
+    width: usize,
+) -> Result<Vec<f32>> {
+    let px = plan.img * plan.img * 3;
+    if images.len() != batch * px {
+        return Err(anyhow!(
+            "batch buffer {} floats, want {} ({} images of {})",
+            images.len(),
+            batch * px,
+            batch,
+            px
+        ));
+    }
+    let rows = par_map_width(batch, width.max(1), |i| {
+        plan.forward_one(&images[i * px..(i + 1) * px])
+    });
+    let mut out = Vec::with_capacity(batch * plan.classes);
+    for r in rows {
+        out.extend(r?);
+    }
+    Ok(out)
+}

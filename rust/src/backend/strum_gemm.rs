@@ -1,0 +1,292 @@
+//! Dual-bank StruM GEMM: executes a layer straight from its §IV-D
+//! mask-header representation, never materializing f32 weights.
+//!
+//! The decomposition mirrors the FlexNN PE datapath (§V-B, `hw/shifter.rs`):
+//!
+//! * **High bank** — the mask-selected INT8 weights, a dense int8 dot
+//!   product (low slots hold 0, exactly like the RF lanes the mask header
+//!   gates off).
+//! * **Low bank** — method-dependent:
+//!   - DLIQ: the raw `q`-bit payload codes multiply directly (a 4-bit
+//!     multiplier lane for q=4) and one fixed `(8-q)`-bit realign shift is
+//!     applied to the bank's partial sum — the accumulator-side alignment
+//!     of §IV-C.1;
+//!   - MIP2Q: each `±2^k` weight becomes one barrel-shift + signed add of
+//!     the activation (no multiplier at all);
+//!   - structured sparsity: the bank is empty.
+//!
+//! Both banks accumulate int32 and sum before per-channel requantization,
+//! which is the int32 accumulator model the paper's hardware uses.
+
+use super::gemm::dot_i8;
+use crate::encode::format::{decode_layer, EncodedLayer};
+use crate::quant::{Method, StrumLayer};
+use crate::Result;
+use anyhow::{anyhow, ensure};
+
+/// Low-precision bank in execution form.
+#[derive(Debug, Clone)]
+pub enum LowBank {
+    /// No low-bank work: structured sparsity, DLIQ q≤1, or baseline.
+    Empty,
+    /// DLIQ: dense `q`-bit codes per channel (zeros on high slots) plus
+    /// the bank-level realign shift `8-q`.
+    Dliq { shift: u32, codes: Vec<i8> },
+    /// MIP2Q: per-channel CSR of (column, shift, negate) shift-add taps.
+    Pow2 {
+        row_ptr: Vec<u32>,
+        col: Vec<u32>,
+        shift: Vec<u8>,
+        neg: Vec<bool>,
+    },
+}
+
+/// A StruM-encoded weight matrix ready for native execution:
+/// `oc` output channels × `k = rows·cols` reduction lanes.
+#[derive(Debug, Clone)]
+pub struct StrumGemm {
+    pub name: String,
+    pub method: Method,
+    pub oc: usize,
+    pub k: usize,
+    /// Dense high bank `[oc][k]`: mask-selected INT8 values, 0 elsewhere.
+    pub hi: Vec<i8>,
+    pub low: LowBank,
+    /// Per-output-channel dequantization scales.
+    pub scales: Vec<f32>,
+}
+
+impl StrumGemm {
+    /// Builds the execution form from a decoded layer (codes + mask, the
+    /// §IV-D payload semantics — not the precomputed `values`).
+    pub fn from_layer(layer: &StrumLayer) -> Result<StrumGemm> {
+        let oc = layer.oc;
+        let k = layer.rows * layer.cols;
+        ensure!(layer.codes.len() == oc * k, "layer {}: bad code count", layer.name);
+        ensure!(layer.scales.len() == oc, "layer {}: bad scale count", layer.name);
+        let mut hi = vec![0i8; oc * k];
+        let low = match layer.params.method {
+            Method::Baseline => {
+                // Baseline keeps every element in the INT8 bank.
+                hi.copy_from_slice(&layer.codes);
+                LowBank::Empty
+            }
+            Method::StructuredSparsity => {
+                fill_hi(&mut hi, layer);
+                LowBank::Empty
+            }
+            Method::Dliq { q } => {
+                fill_hi(&mut hi, layer);
+                if q <= 1 {
+                    LowBank::Empty
+                } else {
+                    let mut codes = vec![0i8; oc * k];
+                    for i in 0..oc * k {
+                        if !layer.mask[i] {
+                            codes[i] = layer.codes[i];
+                        }
+                    }
+                    LowBank::Dliq {
+                        shift: (8 - q) as u32,
+                        codes,
+                    }
+                }
+            }
+            Method::Mip2q { .. } => {
+                fill_hi(&mut hi, layer);
+                let mut row_ptr = Vec::with_capacity(oc + 1);
+                let mut col = Vec::new();
+                let mut shift = Vec::new();
+                let mut neg = Vec::new();
+                row_ptr.push(0u32);
+                for c in 0..oc {
+                    for j in 0..k {
+                        let i = c * k + j;
+                        if layer.mask[i] {
+                            continue;
+                        }
+                        let code = layer.codes[i];
+                        if code == 0 {
+                            return Err(anyhow!(
+                                "layer {}: zero MIP2Q code at ({}, {})",
+                                layer.name,
+                                c,
+                                j
+                            ));
+                        }
+                        col.push(j as u32);
+                        shift.push(code.unsigned_abs() - 1);
+                        neg.push(code < 0);
+                    }
+                    row_ptr.push(col.len() as u32);
+                }
+                LowBank::Pow2 {
+                    row_ptr,
+                    col,
+                    shift,
+                    neg,
+                }
+            }
+        };
+        Ok(StrumGemm {
+            name: layer.name.clone(),
+            method: layer.params.method,
+            oc,
+            k,
+            hi,
+            low,
+            scales: layer.scales.clone(),
+        })
+    }
+
+    /// Decodes a compressed layer and builds the execution form — the
+    /// "serve straight from the bitstream" load path.
+    pub fn from_encoded(enc: &EncodedLayer) -> Result<StrumGemm> {
+        Self::from_layer(&decode_layer(enc)?)
+    }
+
+    /// Dual-bank dot product of activation row `x` (`k` lanes) with output
+    /// channel `c`. Int32 accumulation, banks summed at the end.
+    #[inline]
+    pub fn dot(&self, x: &[i8], c: usize) -> i32 {
+        debug_assert_eq!(x.len(), self.k);
+        let hi = dot_i8(x, &self.hi[c * self.k..(c + 1) * self.k]);
+        hi + self.low_dot(x, c)
+    }
+
+    /// Low-bank contribution only (shift-add / 4-bit multiply lanes).
+    #[inline]
+    fn low_dot(&self, x: &[i8], c: usize) -> i32 {
+        match &self.low {
+            LowBank::Empty => 0,
+            LowBank::Dliq { shift, codes } => {
+                let part = dot_i8(x, &codes[c * self.k..(c + 1) * self.k]);
+                part << shift
+            }
+            LowBank::Pow2 {
+                row_ptr,
+                col,
+                shift,
+                neg,
+            } => {
+                let lo = row_ptr[c] as usize;
+                let hi = row_ptr[c + 1] as usize;
+                let mut acc = 0i32;
+                for t in lo..hi {
+                    let term = (x[col[t] as usize] as i32) << shift[t];
+                    acc += if neg[t] { -term } else { term };
+                }
+                acc
+            }
+        }
+    }
+
+    /// `out[m][oc] = x[m][k] · W^T` over the dual banks.
+    pub fn matmul(&self, x: &[i8], m: usize, out: &mut [i32]) {
+        assert_eq!(x.len(), m * self.k, "activation shape");
+        assert_eq!(out.len(), m * self.oc, "output shape");
+        for i in 0..m {
+            let xi = &x[i * self.k..(i + 1) * self.k];
+            let oi = &mut out[i * self.oc..(i + 1) * self.oc];
+            for (c, o) in oi.iter_mut().enumerate() {
+                *o = self.dot(xi, c);
+            }
+        }
+    }
+
+    /// Number of low-bank taps (diagnostic / bench reporting).
+    pub fn low_taps(&self) -> usize {
+        match &self.low {
+            LowBank::Empty => 0,
+            LowBank::Dliq { codes, .. } => codes.iter().filter(|&&c| c != 0).count(),
+            LowBank::Pow2 { col, .. } => col.len(),
+        }
+    }
+}
+
+fn fill_hi(hi: &mut [i8], layer: &StrumLayer) {
+    for i in 0..hi.len() {
+        if layer.mask[i] {
+            hi[i] = layer.codes[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encode::encode_layer;
+    use crate::quant::tensor::qlayer;
+    use crate::quant::{apply_strum, StrumParams};
+    use crate::util::prng::Rng;
+
+    fn random_layer(oc: usize, rows: usize, cols: usize, seed: u64) -> crate::quant::QLayer {
+        let mut rng = Rng::new(seed);
+        let data: Vec<i8> = (0..oc * rows * cols)
+            .map(|_| (rng.gaussian() * 40.0).clamp(-127.0, 127.0) as i8)
+            .collect();
+        qlayer("t", oc, rows, cols, data, vec![0.02; oc])
+    }
+
+    /// The dual-bank integer result must equal Σ x·values exactly — the
+    /// banks are a lossless decomposition of the effective values.
+    #[test]
+    fn banks_reconstruct_effective_values_exactly() {
+        let mut rng = Rng::new(9);
+        for method in [
+            Method::Baseline,
+            Method::StructuredSparsity,
+            Method::Dliq { q: 4 },
+            Method::Dliq { q: 2 },
+            Method::Mip2q { l_max: 7 },
+            Method::Mip2q { l_max: 3 },
+        ] {
+            let layer = random_layer(4, 3, 21, 11);
+            let s = apply_strum(&layer, &StrumParams::new(method, 1, 8, 0.5));
+            let g = StrumGemm::from_encoded(&encode_layer(&s)).unwrap();
+            let k = g.k;
+            let x: Vec<i8> = (0..k).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+            for c in 0..g.oc {
+                let expect: i64 = (0..k)
+                    .map(|j| x[j] as i64 * s.values[c * k + j] as i64)
+                    .sum();
+                assert_eq!(g.dot(&x, c) as i64, expect, "{:?} oc {}", method, c);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_matches_per_row_dot() {
+        let layer = random_layer(3, 1, 16, 4);
+        let s = apply_strum(&layer, &StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5));
+        let g = StrumGemm::from_layer(&s).unwrap();
+        let mut rng = Rng::new(2);
+        let m = 5;
+        let x: Vec<i8> = (0..m * g.k).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+        let mut out = vec![0i32; m * g.oc];
+        g.matmul(&x, m, &mut out);
+        for i in 0..m {
+            for c in 0..g.oc {
+                assert_eq!(out[i * g.oc + c], g.dot(&x[i * g.k..(i + 1) * g.k], c));
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_low_bank_is_empty() {
+        let layer = random_layer(2, 1, 32, 8);
+        let s = apply_strum(&layer, &StrumParams::paper(Method::StructuredSparsity, 0.5));
+        let g = StrumGemm::from_layer(&s).unwrap();
+        assert!(matches!(g.low, LowBank::Empty));
+        assert_eq!(g.low_taps(), 0);
+    }
+
+    #[test]
+    fn mip2q_low_bank_matches_p() {
+        let layer = random_layer(2, 1, 32, 8);
+        let s = apply_strum(&layer, &StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5));
+        let g = StrumGemm::from_layer(&s).unwrap();
+        // p=0.5 on aligned [1,16] blocks: exactly half the lanes are taps.
+        assert_eq!(g.low_taps(), 32);
+    }
+}

@@ -2,11 +2,12 @@
 //!
 //! The paper's contribution lives in the quantizer + hardware, so the
 //! coordinator is the thin-but-real serving layer the system prompt's
-//! architecture requires: a deadline-driven dynamic batcher in front of
-//! the PJRT executables, with model-variant routing (baseline / DLIQ /
-//! MIP2Q artifacts side by side) and latency/throughput metrics. Python
-//! is never on this path; threads + channels (tokio is not in the
-//! vendored closure — see Cargo.toml).
+//! architecture requires: a deadline-driven dynamic batcher in front of a
+//! pluggable execution [`crate::backend::Backend`] (the native integer
+//! engine or PJRT executables), with model-variant routing (baseline /
+//! DLIQ / MIP2Q side by side) and latency/throughput metrics. Python is
+//! never on this path; threads + channels (tokio is not in the vendored
+//! closure — see Cargo.toml).
 
 pub mod batcher;
 pub mod metrics;

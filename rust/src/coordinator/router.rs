@@ -1,11 +1,13 @@
-//! Model-variant routing: each variant = one (net, StruM transform) with
-//! its prepared weight arguments and the set of batch-size executables
-//! exported by `make artifacts`. Weights are dequantized and staged ONCE
-//! at registration — the request path only binds the image tensor.
+//! Model-variant routing: each variant = one (net, StruM transform) bound
+//! to an execution [`Backend`] — PJRT executables or the native integer
+//! engine. All weight staging (dequantize for PJRT, encode→dual-bank for
+//! native) happens ONCE at registration; the request path only binds the
+//! image tensor.
 
-use crate::model::eval::{prepare_args, transform_network, EvalConfig};
+use crate::backend::{Backend, BackendKind, NativeBackend, PjrtBackend};
+use crate::model::eval::EvalConfig;
 use crate::model::import::NetWeights;
-use crate::runtime::{Executable, Runtime, Tensor};
+use crate::runtime::Runtime;
 use crate::Result;
 use anyhow::anyhow;
 use std::collections::HashMap;
@@ -18,45 +20,67 @@ pub struct Variant {
     pub net: String,
     pub classes: usize,
     pub img: usize,
-    /// Ascending (batch size, executable).
-    pub executables: Vec<(usize, Arc<Executable>)>,
-    /// Static args (act_scales + weights), shared across requests.
-    pub static_args: Vec<Tensor>,
+    pub backend: Arc<dyn Backend>,
 }
 
 impl Variant {
-    /// Smallest exported batch ≥ n (or the largest available).
-    pub fn pick_batch(&self, n: usize) -> (usize, &Arc<Executable>) {
-        for (b, exe) in &self.executables {
-            if *b >= n {
-                return (*b, exe);
-            }
+    fn from_backend(key: &str, backend: Arc<dyn Backend>) -> Variant {
+        Variant {
+            key: key.to_string(),
+            net: backend.net().to_string(),
+            classes: backend.classes(),
+            img: backend.img(),
+            backend,
         }
-        let (b, exe) = self.executables.last().expect("no executables");
-        (*b, exe)
+    }
+
+    /// Batch size the backend wants `n` queued requests padded to.
+    pub fn pick_batch(&self, n: usize) -> usize {
+        self.backend.pick_batch(n)
     }
 
     pub fn max_batch(&self) -> usize {
-        self.executables.last().map(|(b, _)| *b).unwrap_or(1)
+        self.backend.batch_sizes().last().copied().unwrap_or(1)
+    }
+
+    /// Ascending batch sizes the backend executes natively.
+    pub fn batches(&self) -> Vec<usize> {
+        self.backend.batch_sizes().to_vec()
+    }
+
+    /// Expected image length in floats (`img · img · 3`).
+    pub fn image_len(&self) -> usize {
+        self.img * self.img * 3
     }
 }
 
 /// Routing table: variant key → prepared variant.
 pub struct Router {
-    pub rt: Arc<Runtime>,
+    /// PJRT runtime, present only when the router can register PJRT
+    /// variants (a native-only router carries no runtime at all).
+    pub rt: Option<Arc<Runtime>>,
     variants: HashMap<String, Arc<Variant>>,
 }
 
 impl Router {
+    /// A router that can serve both PJRT and native variants.
     pub fn new(rt: Arc<Runtime>) -> Router {
         Router {
-            rt,
+            rt: Some(rt),
             variants: HashMap::new(),
         }
     }
 
-    /// Registers `net` under `key` with the given transform, discovering
-    /// exported batch sizes from `artifacts/hlo/`.
+    /// A native-only router: no PJRT client, no XLA anywhere.
+    pub fn native() -> Router {
+        Router {
+            rt: None,
+            variants: HashMap::new(),
+        }
+    }
+
+    /// Registers `net` under `key` on the PJRT backend (compatibility
+    /// entry point — see [`Router::register_kind`]).
     pub fn register(
         &mut self,
         key: &str,
@@ -64,39 +88,49 @@ impl Router {
         net: &str,
         cfg: &EvalConfig,
     ) -> Result<Arc<Variant>> {
-        let weights = NetWeights::load(artifacts, net)?;
-        let transformed = transform_network(&weights, cfg)?;
-        let static_args = prepare_args(&weights, &transformed, cfg.act_quant)?;
-        let mut executables = Vec::new();
-        let hlo_dir = artifacts.join("hlo");
-        let prefix = format!("{}_b", net);
-        let mut batches: Vec<usize> = std::fs::read_dir(&hlo_dir)?
-            .filter_map(|e| e.ok())
-            .filter_map(|e| {
-                let name = e.file_name().to_string_lossy().to_string();
-                name.strip_prefix(&prefix)
-                    .and_then(|rest| rest.strip_suffix(".hlo.txt"))
-                    .and_then(|b| b.parse::<usize>().ok())
-            })
-            .collect();
-        batches.sort_unstable();
-        if batches.is_empty() {
-            return Err(anyhow!("no exported HLO for {} in {}", net, hlo_dir.display()));
-        }
-        for b in batches {
-            let exe = self
-                .rt
-                .load_hlo(&hlo_dir.join(format!("{}_b{}.hlo.txt", net, b)))?;
-            executables.push((b, exe));
-        }
-        let v = Arc::new(Variant {
-            key: key.to_string(),
-            net: net.to_string(),
-            classes: weights.manifest.num_classes,
-            img: 32,
-            executables,
-            static_args,
-        });
+        self.register_kind(key, artifacts, net, cfg, BackendKind::Pjrt)
+    }
+
+    /// Registers `net` under `key` with the given transform on the chosen
+    /// backend, loading whatever artifacts that backend needs (HLO +
+    /// weights for PJRT, weights alone for native).
+    pub fn register_kind(
+        &mut self,
+        key: &str,
+        artifacts: &Path,
+        net: &str,
+        cfg: &EvalConfig,
+        kind: BackendKind,
+    ) -> Result<Arc<Variant>> {
+        let backend: Arc<dyn Backend> = match kind {
+            BackendKind::Pjrt => {
+                let rt = self
+                    .rt
+                    .as_ref()
+                    .ok_or_else(|| {
+                        anyhow!("router has no PJRT runtime (built with Router::native)")
+                    })?;
+                Arc::new(PjrtBackend::load(rt, artifacts, net, cfg)?)
+            }
+            BackendKind::Native => Arc::new(NativeBackend::load(artifacts, net, cfg)?),
+        };
+        self.insert(key, backend)
+    }
+
+    /// Registers a native variant from in-memory weights (tests, synthetic
+    /// workloads — no artifact files involved).
+    pub fn register_native_weights(
+        &mut self,
+        key: &str,
+        weights: &NetWeights,
+        cfg: &EvalConfig,
+    ) -> Result<Arc<Variant>> {
+        let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new(weights, cfg)?);
+        self.insert(key, backend)
+    }
+
+    fn insert(&mut self, key: &str, backend: Arc<dyn Backend>) -> Result<Arc<Variant>> {
+        let v = Arc::new(Variant::from_backend(key, backend));
         self.variants.insert(key.to_string(), v.clone());
         Ok(v)
     }

@@ -1,15 +1,17 @@
-//! The serving loop: request intake → dynamic batcher → PJRT workers.
+//! The serving loop: request intake → dynamic batcher → backend workers.
 //!
 //! One batcher thread owns the queue and applies [`BatchPolicy`]; worker
-//! threads execute flushed batches on the variant's executables and send
-//! per-request replies. `Coordinator::submit` is the client API (used by
-//! `strum serve`, `examples/serve_infer.rs`, and the integration tests).
+//! threads execute flushed batches on the variant's [`crate::backend::Backend`]
+//! (PJRT executables or the native integer engine) and send per-request
+//! replies. `Coordinator::submit` is the client API (used by `strum
+//! serve`, `examples/serve_infer.rs`, and the integration tests); it
+//! validates the image size up front so a malformed request gets an error
+//! reply instead of silently truncated/zero-padded pixels.
 
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
 use super::router::Variant;
 use crate::runtime::executable::argmax_rows;
-use crate::runtime::Tensor;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -74,7 +76,12 @@ impl Coordinator {
             metrics: Metrics::default(),
         });
         let policy = BatchPolicy {
-            max_batch: opts.max_batch.unwrap_or_else(|| variant.max_batch()),
+            // Never flush more than the backend's largest batch shape —
+            // a user-set cap above it would overflow the padded buffer.
+            max_batch: opts
+                .max_batch
+                .unwrap_or(usize::MAX)
+                .min(variant.max_batch()),
             max_wait: opts.max_wait,
         };
         // Worker pool consumes flushed batches.
@@ -136,9 +143,23 @@ impl Coordinator {
         }
     }
 
-    /// Submits one image; returns the reply channel.
+    /// Submits one image; returns the reply channel. Requests whose image
+    /// is not exactly `img·img·3` floats are rejected with an error reply
+    /// instead of being silently truncated or zero-padded downstream.
     pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<crate::Result<InferReply>> {
         let (tx, rx) = mpsc::channel();
+        let px = self.variant.image_len();
+        if image.len() != px {
+            let _ = tx.send(Err(anyhow::anyhow!(
+                "image has {} floats, expected {} ({}x{}x3) for variant {}",
+                image.len(),
+                px,
+                self.variant.img,
+                self.variant.img,
+                self.variant.key
+            )));
+            return rx;
+        }
         self.shared.metrics.record_request();
         self.shared.queue.lock().unwrap().push_back(Request {
             image,
@@ -169,21 +190,18 @@ impl Coordinator {
 
 fn execute_batch(v: &Variant, sh: &Shared, batch: Vec<Request>) {
     let n = batch.len();
-    let (bsz, exe) = v.pick_batch(n);
+    let bsz = v.pick_batch(n);
     sh.metrics.record_batch(n, bsz);
-    let px = v.img * v.img * 3;
+    let px = v.image_len();
     let mut images = vec![0f32; bsz * px];
     for (i, r) in batch.iter().enumerate() {
-        let take = r.image.len().min(px);
-        images[i * px..i * px + take].copy_from_slice(&r.image[..take]);
+        // Sizes are validated at submit; a mismatch here is a bug.
+        debug_assert_eq!(r.image.len(), px);
+        images[i * px..(i + 1) * px].copy_from_slice(&r.image);
     }
-    let mut args = Vec::with_capacity(v.static_args.len() + 1);
-    args.push(Tensor::f32(images, &[bsz, v.img, v.img, 3]));
-    args.extend(v.static_args.iter().cloned());
-    match exe.run_f32(&args) {
-        Ok(out) => {
-            let logits = &out[0];
-            let preds = argmax_rows(logits, v.classes);
+    match v.backend.infer_batch(images, bsz) {
+        Ok(logits) => {
+            let preds = argmax_rows(&logits, v.classes);
             for (i, r) in batch.into_iter().enumerate() {
                 let latency = r.enqueued.elapsed();
                 sh.metrics.record_done(latency);

@@ -11,8 +11,11 @@
 //! * **Layer 2** — JAX models (`python/compile/model.py`): mini-CNN zoo
 //!   forward passes with weights-as-arguments, lowered AOT to HLO text.
 //! * **Layer 3** — this crate: quantizer, weight codec, FlexNN cycle
-//!   simulator, gate-level hardware cost model, PJRT runtime, and a
-//!   batching inference coordinator. Python is never on the request path.
+//!   simulator, gate-level hardware cost model, a batching inference
+//!   coordinator, and two execution backends: the **native integer
+//!   engine** (default — dual-bank StruM GEMM executed straight from the
+//!   §IV-D encoded weights, no XLA anywhere) and the optional PJRT
+//!   runtime (`pjrt` cargo feature). Python is never on the request path.
 //!
 //! ## Module map
 //!
@@ -23,11 +26,23 @@
 //! | [`hw`] | §V, §VII-B | gate-level area/power cost model (multipliers, barrel shifters, PEs, DPU) |
 //! | [`sim`] | §V | cycle-level FlexNN DPU simulator with StruM routing + sparsity find-first |
 //! | [`model`] | §VI | network graph, mini zoo metadata, artifact import, top-1 evaluation |
-//! | [`runtime`] | — | PJRT CPU client wrapper: load HLO text, compile, execute |
-//! | [`coordinator`] | — | batching inference service over the runtime |
+//! | [`backend`] | §IV-D.2, §V-B | native execution engine: int8 + dual-bank StruM GEMM, im2col conv, graph walk, batch parallelism; `Backend` trait + PJRT adapter |
+//! | [`runtime`] | — | PJRT CPU client wrapper (feature `pjrt`): load HLO text, compile, execute |
+//! | [`coordinator`] | — | batching inference service over any `Backend` |
 //! | [`report`] | §VII | regenerators for Table I and Figs. 10–13 + ablations |
 //! | [`util`] | — | in-tree substrates: JSON, PRNG, stats, CLI, threadpool, bench harness |
+//!
+//! ## The `Backend` contract
+//!
+//! A model variant registers with the [`coordinator::Router`] bound to a
+//! [`backend::Backend`]: `infer_batch(images, batch)` maps a row-major
+//! `[batch, img, img, 3]` buffer to `[batch, classes]` logits, is safe to
+//! call from concurrent worker threads, and advertises its preferred
+//! batch shapes via `batch_sizes()`/`pick_batch(n)`. `strum serve
+//! --backend native` serves the zoo with no Python, HLO artifact, or XLA
+//! dependency in the loop.
 
+pub mod backend;
 pub mod coordinator;
 pub mod encode;
 pub mod hw;

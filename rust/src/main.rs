@@ -16,6 +16,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
+use strum_dpu::backend::BackendKind;
 use strum_dpu::coordinator::{Coordinator, CoordinatorOptions, Router};
 use strum_dpu::encode::{decode_layer, encode_layer};
 use strum_dpu::encode::compression::ratio_for;
@@ -57,6 +58,21 @@ fn parse_method(args: &Args) -> Result<Method> {
     Method::parse(&name).ok_or_else(|| anyhow::anyhow!("unknown method '{}'", name))
 }
 
+/// Default execution backend: PJRT when compiled in, else native.
+fn default_backend() -> &'static str {
+    if cfg!(feature = "pjrt") {
+        "pjrt"
+    } else {
+        "native"
+    }
+}
+
+fn parse_backend(args: &Args) -> Result<BackendKind> {
+    let name = args.str("backend", default_backend());
+    BackendKind::parse(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown backend '{}' (pjrt|native)", name))
+}
+
 fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "quantize" => cmd_quantize(args),
@@ -78,8 +94,9 @@ fn print_help() {
         "strum — StruM structured mixed precision DPU coordinator\n\
          usage: strum <quantize|eval|sim|hw|report|serve|selfcheck> [flags]\n\
          common: --artifacts DIR --net NAME --method {{baseline|sparsity|dliq-qN|mip2q-LN}} --p F\n\
+         eval:   strum eval --net N [--backend {{pjrt|native}}] [--limit N]\n\
          report: strum report <table1|fig10|fig11|fig12|fig13|ablation|all> [--limit N] [--out FILE]\n\
-         serve:  strum serve --net N --requests 2000 --rate 500 [--max-wait-ms 4]"
+         serve:  strum serve --net N --requests 2000 --rate 500 [--backend {{pjrt|native}}] [--max-wait-ms 4]"
     );
 }
 
@@ -132,7 +149,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let net = args.str("net", zoo::SWEEP_NET);
     let method = parse_method(args)?;
     let p = args.f64("p", 0.5);
-    let rt = Runtime::cpu()?;
+    let backend = parse_backend(args)?;
     let data = DataSet::load(&dir, "eval")?;
     let cfg = EvalConfig {
         block: (args.usize("l", 1), args.usize("w", 16)),
@@ -142,14 +159,21 @@ fn cmd_eval(args: &Args) -> Result<()> {
         unstructured: args.flag("unstructured"),
         ..EvalConfig::paper(method, p)
     };
-    let r = strum_dpu::model::eval::evaluate(&rt, &dir, &net, &data, &cfg)?;
+    let r = match backend {
+        BackendKind::Pjrt => {
+            let rt = Runtime::cpu()?;
+            strum_dpu::model::eval::evaluate(&rt, &dir, &net, &data, &cfg)?
+        }
+        BackendKind::Native => strum_dpu::model::eval::evaluate_native(&dir, &net, &data, &cfg)?,
+    };
     println!(
-        "net={} method={} p={} block=[{},{}] n={}  top1={:.2}%  mean_rmse={:.3}",
+        "net={} method={} p={} block=[{},{}] backend={} n={}  top1={:.2}%  mean_rmse={:.3}",
         r.net,
         method.name(),
         r.p,
         cfg.block.0,
         cfg.block.1,
+        backend.name(),
         r.n,
         r.top1 * 100.0,
         r.mean_rmse
@@ -307,17 +331,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let p = args.f64("p", 0.5);
     let n_requests = args.usize("requests", 1000);
     let rate = args.f64("rate", 400.0);
-    let rt = Arc::new(Runtime::cpu()?);
-    println!("platform: {}", rt.platform());
-    let mut router = Router::new(rt);
-    let key = format!("{}:{}:p{}", net, method.name(), p);
+    let backend = parse_backend(args)?;
+    let mut router = match backend {
+        BackendKind::Pjrt => {
+            let rt = Arc::new(Runtime::cpu()?);
+            println!("platform: {}", rt.platform());
+            Router::new(rt)
+        }
+        BackendKind::Native => {
+            println!("platform: native integer engine (no PJRT/XLA)");
+            Router::native()
+        }
+    };
+    let key = format!("{}:{}:p{}:{}", net, method.name(), p, backend.name());
     let cfg = EvalConfig::paper(method, p);
-    let variant = router.register(&key, &dir, &net, &cfg)?;
-    println!(
-        "registered {} (batches: {:?})",
-        key,
-        variant.executables.iter().map(|(b, _)| *b).collect::<Vec<_>>()
-    );
+    let variant = router.register_kind(&key, &dir, &net, &cfg, backend)?;
+    println!("registered {} (batches: {:?})", key, variant.batches());
     let coord = Coordinator::start(
         variant,
         CoordinatorOptions {

@@ -1,13 +1,17 @@
-//! Top-1 accuracy evaluation of StruM-transformed networks through the
-//! PJRT runtime (the §VI/§VII-A software evaluation, ImageNet → the
-//! synthetic eval split per DESIGN.md §1).
+//! Top-1 accuracy evaluation of StruM-transformed networks (the §VI/
+//! §VII-A software evaluation, ImageNet → the synthetic eval split per
+//! DESIGN.md §1), through either execution engine:
 //!
-//! The AOT-lowered forward takes weights as arguments, so evaluation is:
-//! calibrate INT8 → StruM transform → dequantize → hand the float weights
-//! to the executable. The classifier head receives the StruM two-bank
-//! decomposition (hi = mask·w, lo = (1−mask)·w) and multiplies through
-//! the Pallas kernel — the same decomposition the hardware's mask header
-//! drives (§IV-D.2).
+//! * [`evaluate`] — the PJRT path. The AOT-lowered forward takes weights
+//!   as arguments, so evaluation is: calibrate INT8 → StruM transform →
+//!   dequantize → hand the float weights to the executable. The
+//!   classifier head receives the StruM two-bank decomposition
+//!   (hi = mask·w, lo = (1−mask)·w) and multiplies through the Pallas
+//!   kernel — the same decomposition the hardware's mask header drives
+//!   (§IV-D.2).
+//! * [`evaluate_native`] — the native integer path: encode each layer to
+//!   the §IV-D format and execute the dual-bank engine
+//!   (`crate::backend`); no XLA, HLO, or Python anywhere.
 
 use super::import::{from_canonical, DataSet, NetWeights};
 use crate::quant::{apply_strum, apply_unstructured, Method, StrumLayer, StrumParams};
@@ -180,6 +184,63 @@ pub fn evaluate(
         top1: correct as f64 / seen.max(1) as f64,
         n: seen,
         mean_rmse,
+    })
+}
+
+/// Runs top-1 evaluation through the native integer backend — same
+/// contract as [`evaluate`], but with no PJRT/XLA or HLO artifact on the
+/// path (only `weights/<net>.{json,bin}` is read).
+pub fn evaluate_native(
+    artifacts: &Path,
+    net: &str,
+    data: &DataSet,
+    cfg: &EvalConfig,
+) -> Result<EvalResult> {
+    let weights = NetWeights::load(artifacts, net)?;
+    evaluate_native_weights(&weights, data, cfg)
+}
+
+/// [`evaluate_native`] over already-loaded weights (synthetic-workload
+/// and test entry point).
+pub fn evaluate_native_weights(
+    weights: &NetWeights,
+    data: &DataSet,
+    cfg: &EvalConfig,
+) -> Result<EvalResult> {
+    let plan = crate::backend::NetworkPlan::build(weights, cfg)?;
+    if plan.img != data.img {
+        return Err(anyhow!("plan expects {}px images, dataset has {}px", plan.img, data.img));
+    }
+    let px = data.img * data.img * 3;
+    let total = cfg.limit.unwrap_or(data.n).min(data.n);
+    let chunk = cfg.batch.max(1);
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let mut start = 0usize;
+    while start < total {
+        // The native engine runs any batch size exactly — no padding.
+        let real = chunk.min(total - start);
+        let logits = crate::backend::parallel::infer_batch(
+            &plan,
+            &data.images[start * px..(start + real) * px],
+            real,
+        )?;
+        let preds = argmax_rows(&logits, plan.classes);
+        for i in 0..real {
+            if preds[i] as i32 == data.labels[start + i] {
+                correct += 1;
+            }
+        }
+        seen += real;
+        start += real;
+    }
+    Ok(EvalResult {
+        net: plan.net.clone(),
+        method: cfg.method,
+        p: cfg.p,
+        top1: correct as f64 / seen.max(1) as f64,
+        n: seen,
+        mean_rmse: plan.mean_rmse,
     })
 }
 

@@ -1,55 +1,108 @@
 //! PJRT CPU client wrapper with a compile cache.
+//!
+//! Compiled only with the `pjrt` cargo feature; the default build replaces
+//! [`Runtime`] with a same-shape stub whose constructor returns an error,
+//! so every caller keeps compiling and the native backend
+//! (`crate::backend`) carries the request path instead.
 
 use super::executable::Executable;
 use crate::Result;
-use anyhow::Context;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::path::Path;
 
-/// A process-wide PJRT runtime: one CPU client + compiled-executable cache
-/// keyed by HLO path (compilation is the expensive step; execution is
-/// cheap and thread-safe).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
-}
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::*;
+    use anyhow::Context;
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+    use std::sync::{Arc, Mutex};
 
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            cache: Mutex::new(HashMap::new()),
-        })
+    /// A process-wide PJRT runtime: one CPU client + compiled-executable
+    /// cache keyed by HLO path (compilation is the expensive step;
+    /// execution is cheap and thread-safe).
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Loads + compiles an HLO text file (cached).
-    pub fn load_hlo(&self, path: &Path) -> Result<Arc<Executable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(path) {
-            return Ok(exe.clone());
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("{}", e))
+                .context("creating PJRT CPU client")?;
+            Ok(Runtime {
+                client,
+                cache: Mutex::new(HashMap::new()),
+            })
         }
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow::anyhow!("parsing HLO {}: {}", path.display(), e))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {}: {}", path.display(), e))?;
-        let exe = Arc::new(Executable::new(exe, path.display().to_string()));
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(path.to_path_buf(), exe.clone());
-        Ok(exe)
-    }
 
-    /// Number of compiled executables currently cached.
-    pub fn cached(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Loads + compiles an HLO text file (cached).
+        pub fn load_hlo(&self, path: &Path) -> Result<Arc<Executable>> {
+            if let Some(exe) = self.cache.lock().unwrap().get(path) {
+                return Ok(exe.clone());
+            }
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow::anyhow!("parsing HLO {}: {}", path.display(), e))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {}", path.display(), e))?;
+            let exe = Arc::new(Executable::new(exe, path.display().to_string()));
+            self.cache
+                .lock()
+                .unwrap()
+                .insert(path.to_path_buf(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Number of compiled executables currently cached.
+        pub fn cached(&self) -> usize {
+            self.cache.lock().unwrap().len()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::*;
+    use std::sync::Arc;
+
+    /// Stub runtime for builds without the `pjrt` feature. Construction
+    /// fails with an actionable message; use `--backend native` (or the
+    /// `pjrt` feature + xla-rs bindings) instead.
+    pub struct Runtime {
+        _priv: (),
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            Err(anyhow::anyhow!(
+                "this build has no PJRT runtime (compiled without the `pjrt` \
+                 feature); use the native backend (`--backend native`) or \
+                 rebuild with `--features pjrt` against the xla-rs bindings"
+            ))
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load_hlo(&self, path: &Path) -> Result<Arc<Executable>> {
+            Err(anyhow::anyhow!(
+                "cannot load {}: built without the `pjrt` feature",
+                path.display()
+            ))
+        }
+
+        pub fn cached(&self) -> usize {
+            0
+        }
+    }
+}
+
+pub use imp::Runtime;

@@ -1,4 +1,8 @@
 //! Typed execution helpers over `xla::PjRtLoadedExecutable`.
+//!
+//! [`Tensor`] and [`argmax_rows`] are backend-neutral (the native backend
+//! and the coordinator use them too); [`Executable`] is PJRT-backed under
+//! the `pjrt` feature and a same-shape erroring stub otherwise.
 
 use crate::Result;
 
@@ -20,6 +24,7 @@ impl Tensor {
         Tensor::I32 { data, dims: d }
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         Ok(match self {
             Tensor::F32 { data, dims } => xla::Literal::vec1(data)
@@ -32,69 +37,106 @@ impl Tensor {
     }
 }
 
-/// A compiled executable with convenience entry points. Thread-safe: PJRT
-/// executables support concurrent execution.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub source: String,
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::Tensor;
+    use crate::Result;
+
+    /// A compiled executable with convenience entry points. Thread-safe:
+    /// PJRT executables support concurrent execution.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub source: String,
+    }
+
+    // SAFETY: the PJRT CPU client's loaded executables are internally
+    // synchronized; the raw pointer wrapper in the xla crate just lacks the
+    // marker. Execution from multiple threads is the documented PJRT model.
+    unsafe impl Send for Executable {}
+    unsafe impl Sync for Executable {}
+
+    impl Executable {
+        pub fn new(exe: xla::PjRtLoadedExecutable, source: String) -> Executable {
+            Executable { exe, source }
+        }
+
+        /// Executes with the given inputs; returns the tuple elements as
+        /// f32 vectors (the zoo forwards return a 1-tuple of logits).
+        pub fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+            let lits: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<_>>()?;
+            let out = self
+                .exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| anyhow::anyhow!("execute {}: {}", self.source, e))?;
+            let lit = out[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch result: {}", e))?;
+            let elems = lit
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("decompose: {}", e))?;
+            elems
+                .into_iter()
+                .map(|e| e.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {}", e)))
+                .collect()
+        }
+
+        /// Executes and returns int32 tuple elements.
+        pub fn run_i32(&self, inputs: &[Tensor]) -> Result<Vec<Vec<i32>>> {
+            let lits: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<_>>()?;
+            let out = self
+                .exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| anyhow::anyhow!("execute {}: {}", self.source, e))?;
+            let lit = out[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch result: {}", e))?;
+            let elems = lit
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("decompose: {}", e))?;
+            elems
+                .into_iter()
+                .map(|e| e.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec: {}", e)))
+                .collect()
+        }
+    }
 }
 
-// SAFETY: the PJRT CPU client's loaded executables are internally
-// synchronized; the raw pointer wrapper in the xla crate just lacks the
-// marker. Execution from multiple threads is the documented PJRT model.
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::Tensor;
+    use crate::Result;
 
-impl Executable {
-    pub fn new(exe: xla::PjRtLoadedExecutable, source: String) -> Executable {
-        Executable { exe, source }
+    /// Stub executable for builds without the `pjrt` feature. Never
+    /// constructed (the stub [`super::super::Runtime`] refuses to load
+    /// HLO); methods error defensively.
+    pub struct Executable {
+        pub source: String,
     }
 
-    /// Executes with the given inputs; returns the tuple elements as f32
-    /// vectors (the zoo forwards return a 1-tuple of logits).
-    pub fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let out = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow::anyhow!("execute {}: {}", self.source, e))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result: {}", e))?;
-        let elems = lit
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("decompose: {}", e))?;
-        elems
-            .into_iter()
-            .map(|e| e.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {}", e)))
-            .collect()
-    }
+    impl Executable {
+        pub fn run_f32(&self, _inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+            Err(anyhow::anyhow!(
+                "execute {}: built without the `pjrt` feature",
+                self.source
+            ))
+        }
 
-    /// Executes and returns int32 tuple elements.
-    pub fn run_i32(&self, inputs: &[Tensor]) -> Result<Vec<Vec<i32>>> {
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let out = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow::anyhow!("execute {}: {}", self.source, e))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result: {}", e))?;
-        let elems = lit
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("decompose: {}", e))?;
-        elems
-            .into_iter()
-            .map(|e| e.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec: {}", e)))
-            .collect()
+        pub fn run_i32(&self, _inputs: &[Tensor]) -> Result<Vec<Vec<i32>>> {
+            Err(anyhow::anyhow!(
+                "execute {}: built without the `pjrt` feature",
+                self.source
+            ))
+        }
     }
 }
+
+pub use imp::Executable;
 
 /// Row-wise argmax over a logits buffer `[batch, classes]`.
 pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<usize> {

@@ -18,7 +18,14 @@ pub fn num_threads() -> usize {
 /// Parallel map over an index range: computes `f(i)` for `i in 0..n`,
 /// returning results in order. Runs serially for small `n`.
 pub fn par_map<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
-    let workers = num_threads().min(n.max(1));
+    par_map_width(n, num_threads(), f)
+}
+
+/// [`par_map`] with an explicit worker cap — callers that already run
+/// inside a parallel region pass their share of the machine to avoid
+/// oversubscription.
+pub fn par_map_width<T: Send>(n: usize, width: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let workers = width.min(num_threads()).min(n.max(1));
     if workers <= 1 || n < 2 {
         return (0..n).map(f).collect();
     }
@@ -105,6 +112,15 @@ mod tests {
     fn par_map_empty_and_one() {
         assert!(par_map(0, |i| i).is_empty());
         assert_eq!(par_map(1, |i| i + 5), vec![5]);
+    }
+
+    #[test]
+    fn par_map_width_caps_workers() {
+        // width 1 degenerates to the serial path; results stay ordered.
+        let out = par_map_width(100, 1, |i| i * 3);
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+        let out = par_map_width(100, 3, |i| i + 1);
+        assert_eq!(out, (1..=100).collect::<Vec<_>>());
     }
 
     #[test]

