@@ -8,7 +8,10 @@
 
 use std::path::Path;
 use strum_dpu::backend::gemm::gemm_i8;
+use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
+use strum_dpu::backend::kernels::{self, Isa};
 use strum_dpu::backend::strum_gemm::StrumGemm;
+use strum_dpu::backend::{parallel, NetworkPlan};
 use strum_dpu::encode::{decode_layer, encode_layer};
 use strum_dpu::model::import::{DataSet, NetWeights};
 use strum_dpu::quant::tensor::qlayer;
@@ -68,10 +71,23 @@ fn main() -> anyhow::Result<()> {
     let flops = (2 * m * k * n_oc) as f64;
     let mut out = vec![0i32; m * n_oc];
     let mut gemm_results: Vec<(String, f64, f64)> = Vec::new();
-    b.run("gemm_i8/dense-int8", flops, || {
-        gemm_i8(&acts, &wq.data, m, k, n_oc, &mut out);
+    // Scalar reference vs the dispatched SIMD path (the ≥2× acceptance
+    // comparison lives in these two rows).
+    b.run("gemm_i8/scalar-forced", flops, || {
+        kernels::gemm_i8_blocked_isa(Isa::Scalar, &acts, &wq.data, m, k, n_oc, &mut out, None);
         out[0]
     });
+    if let Some(r) = b.results.last() {
+        gemm_results.push(("scalar-forced".into(), r.seconds.mean(), flops / r.seconds.mean() / 1e9));
+    }
+    b.run(
+        &format!("gemm_i8/dense-int8-{}", kernels::active_isa().name()),
+        flops,
+        || {
+            gemm_i8(&acts, &wq.data, m, k, n_oc, &mut out);
+            out[0]
+        },
+    );
     if let Some(r) = b.results.last() {
         gemm_results.push(("dense-int8".into(), r.seconds.mean(), flops / r.seconds.mean() / 1e9));
     }
@@ -94,6 +110,7 @@ fn main() -> anyhow::Result<()> {
         ("m", Json::Num(m as f64)),
         ("k", Json::Num(k as f64)),
         ("n", Json::Num(n_oc as f64)),
+        ("isa", Json::str(kernels::active_isa().name())),
         ("flops_per_call", Json::Num(flops)),
         (
             "kernels",
@@ -125,6 +142,65 @@ fn main() -> anyhow::Result<()> {
         b.run(&format!("simulate_layer/{}", mode.name()), macs, || {
             simulate_layer(&shape, &strum, &cfg, 0.7, 0)
         });
+    }
+
+    b.section("native backend end-to-end (images/s, artifact-free)");
+    {
+        let img = 32usize;
+        let classes = 10usize;
+        let net = "mini_cnn_s";
+        let mut weights = synth_net_weights(net, img, classes, 41)?;
+        let px = img * img * 3;
+        let mut rng = Rng::new(42);
+        let calib: Vec<f32> = (0..4 * px).map(|_| rng.f32()).collect();
+        weights.manifest.act_scales = calibrate_act_scales(&weights, &calib, 4)?;
+        let cfg = strum_dpu::model::eval::EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5);
+        let transformed = strum_dpu::model::eval::transform_network(&weights, &cfg)?;
+        let plan = NetworkPlan::from_transformed(&weights, &transformed, true)?;
+        let image: Vec<f32> = (0..px).map(|_| rng.f32()).collect();
+        let mut e2e_results: Vec<(String, f64, f64)> = Vec::new();
+        b.run("forward_one/unfused", 1.0, || plan.forward_one_unfused(&image).unwrap());
+        if let Some(r) = b.results.last() {
+            e2e_results.push(("unfused".into(), r.seconds.mean(), 1.0 / r.seconds.mean()));
+        }
+        b.run("forward_one/fused", 1.0, || plan.forward_one(&image).unwrap());
+        if let Some(r) = b.results.last() {
+            e2e_results.push(("fused".into(), r.seconds.mean(), 1.0 / r.seconds.mean()));
+        }
+        let batch = if b.is_quick() { 4usize } else { 16usize };
+        let images: Vec<f32> = (0..batch * px).map(|_| rng.f32()).collect();
+        b.run(&format!("infer_batch/b{}", batch), batch as f64, || {
+            parallel::infer_batch(&plan, &images, batch).unwrap()
+        });
+        if let Some(r) = b.results.last() {
+            e2e_results.push((
+                format!("infer_batch_b{}", batch),
+                r.seconds.mean(),
+                batch as f64 / r.seconds.mean(),
+            ));
+        }
+        let json = Json::obj(vec![
+            ("net", Json::str(net)),
+            ("img", Json::Num(img as f64)),
+            ("isa", Json::str(kernels::active_isa().name())),
+            (
+                "paths",
+                Json::Arr(
+                    e2e_results
+                        .iter()
+                        .map(|(name, mean_s, ips)| {
+                            Json::obj(vec![
+                                ("name", Json::str(name.as_str())),
+                                ("mean_s", Json::Num(*mean_s)),
+                                ("images_per_s", Json::Num(*ips)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write("BENCH_backend_e2e.json", json.to_string_pretty())?;
+        println!("wrote BENCH_backend_e2e.json");
     }
 
     let dir = Path::new("artifacts");

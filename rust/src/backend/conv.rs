@@ -6,6 +6,15 @@
 //! (`[tap = dy·kw+dx][ic]`, ic innermost — see `quant/tensor.rs`), so a
 //! convolution is one [`super::strum_gemm::StrumGemm::matmul`] with
 //! `m = oh·ow` rows and `k = kh·kw·ic` lanes.
+//!
+//! Patch rows are exactly what the [`super::kernels`] layer consumes:
+//! contiguous `k`-lane slices for the SIMD dot micro-kernels, and rows
+//! that come out all-zero (padding corners, post-ReLU dead pixels) are
+//! detected there ([`super::kernels::mark_nonzero_rows`]) and skipped by
+//! the blocked GEMM driver. The f32 helpers below serve the unfused
+//! reference walk and the float mirror; the fused production path folds
+//! ReLU/pool/quantize into the GEMM epilogue instead
+//! ([`super::kernels::epilogue`]).
 
 /// SAME-padding im2col, stride 1: `x` is one image plane `[h][w][c]`
 /// (int8, NHWC per image); `dst` receives `[h·w][kh·kw·c]` patch rows.

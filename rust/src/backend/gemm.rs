@@ -7,44 +7,26 @@
 //! contiguous-slice dot product, the cache-friendly shape the FlexNN RF
 //! lanes consume (§IV-B). Accumulation is int32, exactly the simulated
 //! hardware's accumulator width (§IV-D.2).
+//!
+//! The inner loops live in [`super::kernels`]: explicit-SIMD micro-kernels
+//! behind runtime ISA dispatch, with a bit-exact scalar fallback. The
+//! entry points here keep the original signatures.
 
+use super::kernels;
 use crate::quant::round_half_away;
 
 /// `out[m][n] = x[m][k] · wT[n][k]` with int32 accumulation.
 /// `w` is row-major over output channels (i.e. already transposed relative
 /// to the textbook GEMM): `w[j*k..(j+1)*k]` is channel `j`'s weights.
+/// Cache-blocked + vectorized via [`kernels::gemm_i8_blocked`].
 pub fn gemm_i8(x: &[i8], w: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
-    assert_eq!(x.len(), m * k, "activation shape");
-    assert_eq!(w.len(), n * k, "weight shape");
-    assert_eq!(out.len(), m * n, "output shape");
-    for i in 0..m {
-        let xi = &x[i * k..(i + 1) * k];
-        let oi = &mut out[i * n..(i + 1) * n];
-        for (j, o) in oi.iter_mut().enumerate() {
-            *o = dot_i8(xi, &w[j * k..(j + 1) * k]);
-        }
-    }
+    kernels::gemm_i8_blocked(x, w, m, k, n, out, None);
 }
 
-/// Contiguous int8 dot product, int32 accumulation.
+/// Contiguous int8 dot product, int32 accumulation, on the active ISA.
 #[inline]
 pub fn dot_i8(x: &[i8], w: &[i8]) -> i32 {
-    debug_assert_eq!(x.len(), w.len());
-    // Four independent accumulators so LLVM can vectorize without a
-    // reduction dependency chain.
-    let mut acc = [0i32; 4];
-    let chunks = x.len() / 4;
-    for c in 0..chunks {
-        for lane in 0..4 {
-            let i = c * 4 + lane;
-            acc[lane] += x[i] as i32 * w[i] as i32;
-        }
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..x.len() {
-        s += x[i] as i32 * w[i] as i32;
-    }
-    s
+    kernels::dot_i8(x, w)
 }
 
 /// Quantizes a float activation slice to symmetric INT8 with `scale`

@@ -5,8 +5,15 @@
 //! [`NetworkPlan`] binds a spec to a StruM-transformed weight set in
 //! §IV-D encoded form and executes the forward pass with the dual-bank
 //! integer engine — fake-quantized activations, int8/shift-add GEMMs via
-//! im2col, f32 requantize + bias + ReLU between layers. No Python, HLO,
-//! or XLA anywhere.
+//! im2col. No Python, HLO, or XLA anywhere.
+//!
+//! The production path ([`NetworkPlan::forward_one`]) runs on the
+//! [`super::kernels`] layer: SIMD cache-blocked GEMMs with all-zero
+//! im2col rows skipped, fused requantize→bias→ReLU→pool→quantize
+//! epilogues, int8 plane handoff between consecutive static-scale convs,
+//! and a per-thread scratch arena in place of per-layer allocations.
+//! [`NetworkPlan::forward_one_unfused`] keeps the separate-pass pipeline
+//! as the bit-exactness oracle.
 //!
 //! [`forward_f32_reference`] is the float mirror of the same graph
 //! (dequantized weights, f32 conv) used to validate the integer engine;
@@ -15,7 +22,9 @@
 
 use super::conv::{avgpool2x2, global_avg_pool, im2col, relu};
 use super::gemm::{dynamic_scale, quantize_i8, requantize_row};
+use super::kernels::{self, Scratch};
 use super::strum_gemm::StrumGemm;
+use crate::util::pool::par_map_width;
 use crate::encode::encode_layer;
 use crate::model::eval::{transform_network, EvalConfig};
 use crate::model::import::{LayerMeta, NetWeights};
@@ -185,6 +194,58 @@ pub fn synth_layer_metas(net: &str, img: usize, classes: usize) -> Result<Vec<La
     Ok(metas)
 }
 
+/// He-initialized synthetic weights for a zoo architecture at an
+/// arbitrary input size (the python `init_params` mirror). The single
+/// source for artifact-free workloads: integration tests and the e2e
+/// bench all build their in-memory networks here. Activation scales
+/// start at 0 (dynamic); run [`calibrate_act_scales`] to fill them.
+pub fn synth_net_weights(
+    net: &str,
+    img: usize,
+    classes: usize,
+    seed: u64,
+) -> Result<crate::model::import::NetWeights> {
+    use crate::model::import::{NetManifest, ParamMeta};
+    let metas = synth_layer_metas(net, img, classes)?;
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let mut params = Vec::new();
+    let mut blob: Vec<f32> = Vec::new();
+    for meta in &metas {
+        let shape: Vec<usize> = if meta.kind == "fc" {
+            vec![meta.ic, meta.oc]
+        } else {
+            vec![meta.kh, meta.kw, meta.ic, meta.oc]
+        };
+        let len: usize = shape.iter().product();
+        let fan_in: usize = shape[..shape.len() - 1].iter().product();
+        let std = (2.0 / fan_in as f64).sqrt();
+        let offset = blob.len();
+        for _ in 0..len {
+            blob.push((rng.gaussian() * std) as f32);
+        }
+        params.push(ParamMeta { name: format!("{}_w", meta.name), shape, offset, len });
+        let offset = blob.len();
+        for _ in 0..meta.oc {
+            blob.push((rng.gaussian() * 0.05) as f32);
+        }
+        params.push(ParamMeta {
+            name: format!("{}_b", meta.name),
+            shape: vec![meta.oc],
+            offset,
+            len: meta.oc,
+        });
+    }
+    let manifest = NetManifest {
+        net: net.to_string(),
+        num_classes: classes,
+        eval_top1_float: f64::NAN,
+        act_scales: vec![0.0; metas.len()],
+        layers: metas,
+        params,
+    };
+    Ok(NetWeights { manifest, blob })
+}
+
 /// One executable layer: encoded weights in dual-bank form + the
 /// requantization constants around them.
 struct LayerExec {
@@ -197,6 +258,10 @@ struct LayerExec {
     bias: Vec<f32>,
     /// Static activation scale (0 → per-tensor dynamic).
     act_scale: f32,
+    /// Combined `act_scale · w_scales[j]` requantization vector,
+    /// precomputed at plan build for static-scale layers (dynamic-scale
+    /// layers recompute per call into the scratch arena).
+    requant: Option<kernels::Requant>,
 }
 
 /// A network bound to a StruM weight set, executable natively.
@@ -266,6 +331,12 @@ impl NetworkPlan {
             );
             let (_, bias) = weights.param(&format!("{}_b", meta.name))?;
             ensure!(bias.len() == meta.oc, "layer {}: bias len", meta.name);
+            let act_scale = if act_quant { m.act_scales[li] } else { 0.0 };
+            let requant = if act_scale > 0.0 {
+                Some(kernels::Requant::new(act_scale, &gemm.scales))
+            } else {
+                None
+            };
             layers.push(LayerExec {
                 name: meta.name.clone(),
                 kh: meta.kh,
@@ -274,7 +345,8 @@ impl NetworkPlan {
                 oc: meta.oc,
                 gemm,
                 bias: bias.to_vec(),
-                act_scale: if act_quant { m.act_scales[li] } else { 0.0 },
+                act_scale,
+                requant,
             });
         }
         // The walk below must consume every layer in manifest order; do a
@@ -311,8 +383,297 @@ impl NetworkPlan {
         })
     }
 
-    /// Forward pass of one `[img, img, 3]` NHWC image → `[classes]` logits.
+    /// Forward pass of one `[img, img, 3]` NHWC image → `[classes]`
+    /// logits, on the fused kernel path: conv accumulators go through a
+    /// single requantize→bias→ReLU(→2×2-pool)(→int8-quantize) epilogue
+    /// pass, all-zero im2col rows are skipped, and consecutive conv
+    /// layers hand activations over as int8 planes without an f32
+    /// round-trip. Bit-identical to [`Self::forward_one_unfused`].
     pub fn forward_one(&self, image: &[f32]) -> Result<Vec<f32>> {
+        kernels::with_scratch(|scr| self.forward_fused(image, 1, scr))
+    }
+
+    /// [`Self::forward_one`] with conv GEMMs additionally split per
+    /// output-channel chunk over `width` pool workers — the intra-image
+    /// parallelism the batch driver uses when there are fewer images
+    /// than cores.
+    pub fn forward_one_width(&self, image: &[f32], width: usize) -> Result<Vec<f32>> {
+        kernels::with_scratch(|scr| self.forward_fused(image, width, scr))
+    }
+
+    /// Runs layer `li`'s dual-bank GEMM over the quantized plane `xq`
+    /// (`[h·w][ic]` on the layer's int8 grid), leaving the int32
+    /// accumulators in `scr.acc[..h·w·oc]`. All-zero im2col rows are
+    /// skipped (find-first style); `width > 1` fans output-channel
+    /// chunks out over the thread pool.
+    fn conv_accumulate(
+        &self,
+        li: usize,
+        xq: &[i8],
+        h: usize,
+        w: usize,
+        width: usize,
+        scr: &mut Scratch,
+    ) -> Result<()> {
+        let l = &self.layers[li];
+        ensure!(
+            xq.len() == h * w * l.ic,
+            "layer {}: plane {} != {}x{}x{}",
+            l.name,
+            xq.len(),
+            h,
+            w,
+            l.ic
+        );
+        let k = l.kh * l.kw * l.ic;
+        let m = h * w;
+        if !(l.kh == 1 && l.kw == 1) {
+            let p = kernels::resized(&mut scr.patches, m * k);
+            im2col(xq, h, w, l.ic, l.kh, l.kw, p);
+        }
+        let patches: &[i8] = if l.kh == 1 && l.kw == 1 {
+            xq
+        } else {
+            &scr.patches[..m * k]
+        };
+        let live = kernels::mark_nonzero_rows(patches, m, k, &mut scr.nonzero);
+        let nonzero: Option<&[bool]> = if live < m { Some(&scr.nonzero[..m]) } else { None };
+        let acc = kernels::resized(&mut scr.acc, m * l.oc);
+        let chunk = oc_chunk(l.oc, width);
+        if chunk >= l.oc {
+            l.gemm.matmul_block(patches, m, 0, l.oc, acc, nonzero, &mut scr.lo);
+        } else {
+            // Per-OC fan-out: each worker computes one channel block,
+            // scattered back into the row-major accumulator tile.
+            let ranges: Vec<(usize, usize)> = (0..l.oc)
+                .step_by(chunk)
+                .map(|c0| (c0, (c0 + chunk).min(l.oc)))
+                .collect();
+            let blocks = par_map_width(ranges.len(), width, |bi| {
+                let (c0, c1) = ranges[bi];
+                let mut block = vec![0i32; m * (c1 - c0)];
+                let mut lo = Vec::new();
+                l.gemm.matmul_block(patches, m, c0, c1, &mut block, nonzero, &mut lo);
+                block
+            });
+            for (bi, block) in blocks.iter().enumerate() {
+                let (c0, c1) = ranges[bi];
+                let nch = c1 - c0;
+                for i in 0..m {
+                    acc[i * l.oc + c0..i * l.oc + c1]
+                        .copy_from_slice(&block[i * nch..(i + 1) * nch]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The fused walk behind [`Self::forward_one`]. `scr` is this
+    /// worker thread's scratch arena.
+    fn forward_fused(&self, image: &[f32], width: usize, scr: &mut Scratch) -> Result<Vec<f32>> {
+        let px = self.img * self.img * 3;
+        ensure!(image.len() == px, "image len {} != {}", image.len(), px);
+        let (mut h, mut w) = (self.img, self.img);
+        let mut c = 3usize;
+        let mut plane = Plane::F(image.to_vec());
+        let mut li = 0usize;
+        for (si, s) in self.spec.iter().enumerate() {
+            match *s {
+                Spec::Conv { pool, .. } => {
+                    let l = &self.layers[li];
+                    let (xq, in_scale) = match std::mem::replace(&mut plane, Plane::F(Vec::new()))
+                    {
+                        Plane::Q(q, qs) => {
+                            // Producer quantized straight onto this
+                            // layer's static grid.
+                            debug_assert_eq!(qs.to_bits(), l.act_scale.to_bits());
+                            (q, qs)
+                        }
+                        Plane::F(x) => {
+                            let sc = if l.act_scale > 0.0 { l.act_scale } else { dynamic_scale(&x) };
+                            (quantize_plane(&x, sc), sc)
+                        }
+                    };
+                    self.conv_accumulate(li, &xq, h, w, width, scr)?;
+                    let m = h * w;
+                    let combined = combined_for(l, in_scale, &mut scr.combined);
+                    let acc = &scr.acc[..m * l.oc];
+                    let last = si + 1 == self.spec.len();
+                    let next_is_conv = matches!(self.spec.get(si + 1), Some(Spec::Conv { .. }));
+                    let next_scale = if last || !next_is_conv {
+                        0.0
+                    } else {
+                        self.layers[li + 1].act_scale
+                    };
+                    if next_scale > 0.0 {
+                        // Quantized handoff: the f32 conv output never
+                        // materializes.
+                        if pool {
+                            let mut q = vec![0i8; (h / 2) * (w / 2) * l.oc];
+                            kernels::requant_pool2_quant(
+                                acc, h, w, l.oc, combined, &l.bias, next_scale, &mut scr.strip,
+                                &mut q,
+                            );
+                            h /= 2;
+                            w /= 2;
+                            plane = Plane::Q(q, next_scale);
+                        } else {
+                            let mut q = vec![0i8; m * l.oc];
+                            kernels::requant_bias_relu_quant(
+                                acc, l.oc, combined, &l.bias, next_scale, &mut q,
+                            );
+                            plane = Plane::Q(q, next_scale);
+                        }
+                    } else {
+                        let mut f = vec![0f32; m * l.oc];
+                        kernels::requant_bias_relu(acc, l.oc, combined, &l.bias, &mut f);
+                        if pool {
+                            f = avgpool2x2(&f, h, w, l.oc);
+                            h /= 2;
+                            w /= 2;
+                        }
+                        plane = Plane::F(f);
+                    }
+                    c = l.oc;
+                    li += 1;
+                }
+                Spec::Residual { oc, .. } => {
+                    let x = match std::mem::replace(&mut plane, Plane::F(Vec::new())) {
+                        Plane::F(x) => x,
+                        Plane::Q(..) => {
+                            return Err(anyhow!("residual node received a quantized plane"))
+                        }
+                    };
+                    let m = h * w;
+                    let la = &self.layers[li];
+                    let ic = la.ic;
+                    // Conv a: ReLU fused; output goes straight onto
+                    // conv b's grid when that scale is static.
+                    let sa = if la.act_scale > 0.0 { la.act_scale } else { dynamic_scale(&x) };
+                    let xa = quantize_plane(&x, sa);
+                    self.conv_accumulate(li, &xa, h, w, width, scr)?;
+                    let combined = combined_for(la, sa, &mut scr.combined);
+                    let acc = &scr.acc[..m * la.oc];
+                    let sb_static = self.layers[li + 1].act_scale;
+                    let (yq, sb) = if sb_static > 0.0 {
+                        let mut q = vec![0i8; m * la.oc];
+                        kernels::requant_bias_relu_quant(
+                            acc, la.oc, combined, &la.bias, sb_static, &mut q,
+                        );
+                        (q, sb_static)
+                    } else {
+                        let mut f = vec![0f32; m * la.oc];
+                        kernels::requant_bias_relu(acc, la.oc, combined, &la.bias, &mut f);
+                        let sb = dynamic_scale(&f);
+                        (quantize_plane(&f, sb), sb)
+                    };
+                    // Conv b: no ReLU before the shortcut add.
+                    let lb = &self.layers[li + 1];
+                    self.conv_accumulate(li + 1, &yq, h, w, width, scr)?;
+                    let combined = combined_for(lb, sb, &mut scr.combined);
+                    let mut y2 = vec![0f32; m * lb.oc];
+                    kernels::requant_bias(&scr.acc[..m * lb.oc], lb.oc, combined, &lb.bias, &mut y2);
+                    // Shortcut: identity, or 1×1 projection (no ReLU).
+                    let (sc_plane, consumed) = if ic != oc {
+                        let lp = &self.layers[li + 2];
+                        let sp = if lp.act_scale > 0.0 { lp.act_scale } else { dynamic_scale(&x) };
+                        let xp = quantize_plane(&x, sp);
+                        self.conv_accumulate(li + 2, &xp, h, w, width, scr)?;
+                        let combined = combined_for(lp, sp, &mut scr.combined);
+                        let mut p = vec![0f32; m * lp.oc];
+                        kernels::requant_bias(
+                            &scr.acc[..m * lp.oc],
+                            lp.oc,
+                            combined,
+                            &lp.bias,
+                            &mut p,
+                        );
+                        (p, 3usize)
+                    } else {
+                        (x, 2usize)
+                    };
+                    ensure!(y2.len() == sc_plane.len(), "residual shape mismatch");
+                    for (a, b) in y2.iter_mut().zip(sc_plane.iter()) {
+                        let v = *a + b;
+                        *a = if v < 0.0 { 0.0 } else { v };
+                    }
+                    plane = Plane::F(y2);
+                    c = oc;
+                    li += consumed;
+                }
+                Spec::Inception { oc, .. } => {
+                    let x = match std::mem::replace(&mut plane, Plane::F(Vec::new())) {
+                        Plane::F(x) => x,
+                        Plane::Q(..) => {
+                            return Err(anyhow!("inception node received a quantized plane"))
+                        }
+                    };
+                    let m = h * w;
+                    let mut branches: Vec<Vec<f32>> = Vec::with_capacity(3);
+                    let mut ocs: Vec<usize> = Vec::with_capacity(3);
+                    for _ in 0..3 {
+                        let l = &self.layers[li];
+                        let sc = if l.act_scale > 0.0 { l.act_scale } else { dynamic_scale(&x) };
+                        let xq = quantize_plane(&x, sc);
+                        self.conv_accumulate(li, &xq, h, w, width, scr)?;
+                        let combined = combined_for(l, sc, &mut scr.combined);
+                        let mut y = vec![0f32; m * l.oc];
+                        kernels::requant_bias_relu(
+                            &scr.acc[..m * l.oc],
+                            l.oc,
+                            combined,
+                            &l.bias,
+                            &mut y,
+                        );
+                        branches.push(y);
+                        ocs.push(l.oc);
+                        li += 1;
+                    }
+                    let total: usize = ocs.iter().sum();
+                    ensure!(total == oc, "inception channels {} != {}", total, oc);
+                    let mut cat = vec![0f32; m * total];
+                    for p in 0..m {
+                        let mut off = 0usize;
+                        for (b, &boc) in branches.iter().zip(ocs.iter()) {
+                            cat[p * total + off..p * total + off + boc]
+                                .copy_from_slice(&b[p * boc..(p + 1) * boc]);
+                            off += boc;
+                        }
+                    }
+                    plane = Plane::F(cat);
+                    c = oc;
+                }
+            }
+        }
+        let feat_plane = match plane {
+            Plane::F(x) => x,
+            Plane::Q(..) => return Err(anyhow!("head received a quantized plane")),
+        };
+        let feat = global_avg_pool(&feat_plane, h * w, c);
+        // Classifier head: fake-quant the pooled features, dual-bank GEMM.
+        let l = self
+            .layers
+            .last()
+            .ok_or_else(|| anyhow!("plan has no fc layer"))?;
+        let n_conv = self.layers.len() - 1;
+        ensure!(li == n_conv, "walk consumed {} of {} conv layers", li, n_conv);
+        ensure!(l.name == "fc" && l.ic == c, "unexpected head layer {}", l.name);
+        let scale = if l.act_scale > 0.0 { l.act_scale } else { dynamic_scale(&feat) };
+        let fq = quantize_plane(&feat, scale);
+        let mut acc = vec![0i32; l.oc];
+        l.gemm.matmul_block(&fq, 1, 0, l.oc, &mut acc, None, &mut scr.lo);
+        let combined = combined_for(l, scale, &mut scr.combined);
+        let mut logits = vec![0f32; l.oc];
+        kernels::requant_bias(&acc, l.oc, combined, &l.bias, &mut logits);
+        Ok(logits)
+    }
+
+    /// Unfused reference walk: quantize → im2col → GEMM → full-plane
+    /// requantize → ReLU → pool as separate passes, exactly the
+    /// pre-kernel-layer pipeline (still running on the vectorized
+    /// GEMMs). Kept as the equivalence oracle for the fused path — the
+    /// two must produce bit-identical logits.
+    pub fn forward_one_unfused(&self, image: &[f32]) -> Result<Vec<f32>> {
         let px = self.img * self.img * 3;
         ensure!(image.len() == px, "image len {} != {}", image.len(), px);
         let mut li = 0usize;
@@ -363,6 +724,49 @@ impl NetworkPlan {
         let mut logits = vec![0f32; l.oc];
         requantize_row(&acc, scale, &l.gemm.scales, &l.bias, &mut logits);
         Ok(logits)
+    }
+}
+
+/// Activation plane flowing between fused layers: f32, or already
+/// quantized onto the consumer's int8 grid (the fused-epilogue handoff
+/// that skips the f32 round-trip entirely).
+enum Plane {
+    F(Vec<f32>),
+    Q(Vec<i8>, f32),
+}
+
+/// Symmetric int8 quantization into a fresh plane.
+fn quantize_plane(x: &[f32], scale: f32) -> Vec<i8> {
+    let mut q = vec![0i8; x.len()];
+    quantize_i8(x, scale, &mut q);
+    q
+}
+
+/// Combined `in_scale · w_scales[j]` requantization vector for one
+/// layer: the static precompute when the layer has one, else refreshed
+/// into `buf` (the scratch arena's `combined` field). Single source for
+/// every fused epilogue — the product must stay bit-identical to
+/// `requantize_row`'s inline `act_scale * w_scales[j]`.
+fn combined_for<'a>(l: &'a LayerExec, in_scale: f32, buf: &'a mut Vec<f32>) -> &'a [f32] {
+    match &l.requant {
+        Some(r) => &r.combined,
+        None => {
+            let b = kernels::resized(buf, l.oc);
+            for (dst, &ws) in b.iter_mut().zip(l.gemm.scales.iter()) {
+                *dst = in_scale * ws;
+            }
+            b
+        }
+    }
+}
+
+/// Channels per parallel block when a conv fans its output channels out
+/// over the pool (small blocks aren't worth a thread hop).
+fn oc_chunk(oc: usize, width: usize) -> usize {
+    if width <= 1 {
+        oc
+    } else {
+        oc.div_ceil(width).max(8)
     }
 }
 

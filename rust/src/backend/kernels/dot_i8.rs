@@ -1,0 +1,316 @@
+//! Int8 dot-product micro-kernels: one scalar reference and explicit-SIMD
+//! SSE2/AVX2 variants, all computing the *same* int32 accumulation.
+//!
+//! Bit-exactness contract: every kernel returns the mathematical
+//! `Σ x[i]·w[i]` in `i32`. Since `|x·w| ≤ 127² = 16129`, the sum cannot
+//! overflow `i32` for any `k < 2³¹/16129 ≈ 133 000` — far above any layer
+//! in the zoo — so *every* association order yields identical bits and
+//! the SIMD lanes are free to reduce in tree order.
+//!
+//! The SIMD widening scheme is exact: int8 pairs are sign-extended to
+//! int16 and combined with `madd` (i16×i16 → i32 pairwise add), which
+//! cannot overflow because `2·127² < 2¹⁵·2¹⁵`. This mirrors how
+//! mixed-precision accelerators pack sub-byte operands into wider
+//! datapath lanes (PULP-NN-style sub-word parallelism in software).
+
+/// Scalar reference kernel — the semantics every SIMD path must match
+/// bit-for-bit. Four independent accumulators so LLVM can auto-vectorize
+/// without a reduction dependency chain (this is the pre-kernel-layer
+/// `backend::gemm::dot_i8` body, kept as the portable fallback).
+#[inline]
+pub fn dot_i8_scalar(x: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    let mut acc = [0i32; 4];
+    let chunks = x.len() / 4;
+    for c in 0..chunks {
+        for lane in 0..4 {
+            let i = c * 4 + lane;
+            acc[lane] += x[i] as i32 * w[i] as i32;
+        }
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..x.len() {
+        s += x[i] as i32 * w[i] as i32;
+    }
+    s
+}
+
+/// Scalar 1×4 register-blocked kernel: one activation row against four
+/// weight rows (the shape the blocked GEMM driver feeds).
+#[inline]
+pub fn dot_i8_x4_scalar(x: &[i8], w0: &[i8], w1: &[i8], w2: &[i8], w3: &[i8]) -> [i32; 4] {
+    [
+        dot_i8_scalar(x, w0),
+        dot_i8_scalar(x, w1),
+        dot_i8_scalar(x, w2),
+        dot_i8_scalar(x, w3),
+    ]
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use x86::*;
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of the four i32 lanes of an SSE register via a
+    /// stack spill — called once per dot, so simplicity beats shuffles.
+    #[inline]
+    unsafe fn hsum_epi32_sse(v: __m128i) -> i32 {
+        let mut tmp = [0i32; 4];
+        _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, v);
+        tmp[0] + tmp[1] + tmp[2] + tmp[3]
+    }
+
+    /// Widens 16 int8 lanes to two i16×8 registers (sign-extended) and
+    /// returns their `madd` against the matching widened `w` lanes,
+    /// accumulated into `acc`. SSE2 only (no `cvtepi8` — sign extension
+    /// via arithmetic-compare + unpack).
+    #[inline]
+    unsafe fn madd_16_sse2(acc: __m128i, xv: __m128i, wv: __m128i) -> __m128i {
+        let zero = _mm_setzero_si128();
+        let xneg = _mm_cmpgt_epi8(zero, xv);
+        let wneg = _mm_cmpgt_epi8(zero, wv);
+        let xlo = _mm_unpacklo_epi8(xv, xneg);
+        let xhi = _mm_unpackhi_epi8(xv, xneg);
+        let wlo = _mm_unpacklo_epi8(wv, wneg);
+        let whi = _mm_unpackhi_epi8(wv, wneg);
+        let acc = _mm_add_epi32(acc, _mm_madd_epi16(xlo, wlo));
+        _mm_add_epi32(acc, _mm_madd_epi16(xhi, whi))
+    }
+
+    /// SSE2 dot kernel. Safety: caller must ensure SSE2 is available
+    /// (always true on x86_64) and `x.len() == w.len()`.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn dot_i8_sse2(x: &[i8], w: &[i8]) -> i32 {
+        debug_assert_eq!(x.len(), w.len());
+        let n = x.len();
+        let mut acc = _mm_setzero_si128();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let xv = _mm_loadu_si128(x.as_ptr().add(i) as *const __m128i);
+            let wv = _mm_loadu_si128(w.as_ptr().add(i) as *const __m128i);
+            acc = madd_16_sse2(acc, xv, wv);
+            i += 16;
+        }
+        let mut s = hsum_epi32_sse(acc);
+        while i < n {
+            s += *x.get_unchecked(i) as i32 * *w.get_unchecked(i) as i32;
+            i += 1;
+        }
+        s
+    }
+
+    /// SSE2 1×4 kernel: the activation load + sign-extend is shared
+    /// across four weight rows.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn dot_i8_x4_sse2(
+        x: &[i8],
+        w0: &[i8],
+        w1: &[i8],
+        w2: &[i8],
+        w3: &[i8],
+    ) -> [i32; 4] {
+        let n = x.len();
+        debug_assert!(w0.len() == n && w1.len() == n && w2.len() == n && w3.len() == n);
+        let zero = _mm_setzero_si128();
+        let mut a0 = _mm_setzero_si128();
+        let mut a1 = _mm_setzero_si128();
+        let mut a2 = _mm_setzero_si128();
+        let mut a3 = _mm_setzero_si128();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let xv = _mm_loadu_si128(x.as_ptr().add(i) as *const __m128i);
+            let xneg = _mm_cmpgt_epi8(zero, xv);
+            let xlo = _mm_unpacklo_epi8(xv, xneg);
+            let xhi = _mm_unpackhi_epi8(xv, xneg);
+            // One weight row at a time: load, widen, madd into its lane.
+            let wv = _mm_loadu_si128(w0.as_ptr().add(i) as *const __m128i);
+            let wneg = _mm_cmpgt_epi8(zero, wv);
+            a0 = _mm_add_epi32(a0, _mm_madd_epi16(xlo, _mm_unpacklo_epi8(wv, wneg)));
+            a0 = _mm_add_epi32(a0, _mm_madd_epi16(xhi, _mm_unpackhi_epi8(wv, wneg)));
+            let wv = _mm_loadu_si128(w1.as_ptr().add(i) as *const __m128i);
+            let wneg = _mm_cmpgt_epi8(zero, wv);
+            a1 = _mm_add_epi32(a1, _mm_madd_epi16(xlo, _mm_unpacklo_epi8(wv, wneg)));
+            a1 = _mm_add_epi32(a1, _mm_madd_epi16(xhi, _mm_unpackhi_epi8(wv, wneg)));
+            let wv = _mm_loadu_si128(w2.as_ptr().add(i) as *const __m128i);
+            let wneg = _mm_cmpgt_epi8(zero, wv);
+            a2 = _mm_add_epi32(a2, _mm_madd_epi16(xlo, _mm_unpacklo_epi8(wv, wneg)));
+            a2 = _mm_add_epi32(a2, _mm_madd_epi16(xhi, _mm_unpackhi_epi8(wv, wneg)));
+            let wv = _mm_loadu_si128(w3.as_ptr().add(i) as *const __m128i);
+            let wneg = _mm_cmpgt_epi8(zero, wv);
+            a3 = _mm_add_epi32(a3, _mm_madd_epi16(xlo, _mm_unpacklo_epi8(wv, wneg)));
+            a3 = _mm_add_epi32(a3, _mm_madd_epi16(xhi, _mm_unpackhi_epi8(wv, wneg)));
+            i += 16;
+        }
+        let mut out = [
+            hsum_epi32_sse(a0),
+            hsum_epi32_sse(a1),
+            hsum_epi32_sse(a2),
+            hsum_epi32_sse(a3),
+        ];
+        while i < n {
+            let xi = *x.get_unchecked(i) as i32;
+            out[0] += xi * *w0.get_unchecked(i) as i32;
+            out[1] += xi * *w1.get_unchecked(i) as i32;
+            out[2] += xi * *w2.get_unchecked(i) as i32;
+            out[3] += xi * *w3.get_unchecked(i) as i32;
+            i += 1;
+        }
+        out
+    }
+
+    /// Horizontal sum of the eight i32 lanes of an AVX register.
+    #[inline]
+    unsafe fn hsum_epi32_avx(v: __m256i) -> i32 {
+        let mut tmp = [0i32; 8];
+        _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, v);
+        tmp.iter().sum()
+    }
+
+    /// AVX2 dot kernel: 32 int8 lanes per iteration, widened through
+    /// `cvtepi8_epi16` + `madd_epi16` (exact — see module docs).
+    /// Safety: caller must verify AVX2 via `is_x86_feature_detected!`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8_avx2(x: &[i8], w: &[i8]) -> i32 {
+        debug_assert_eq!(x.len(), w.len());
+        let n = x.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let xv = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+            let wv = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
+            let xlo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(xv));
+            let xhi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(xv));
+            let wlo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(wv));
+            let whi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(wv));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(xlo, wlo));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(xhi, whi));
+            i += 32;
+        }
+        if i + 16 <= n {
+            // One SSE-width step before the scalar tail.
+            let xv = _mm_loadu_si128(x.as_ptr().add(i) as *const __m128i);
+            let wv = _mm_loadu_si128(w.as_ptr().add(i) as *const __m128i);
+            let prod = _mm256_madd_epi16(_mm256_cvtepi8_epi16(xv), _mm256_cvtepi8_epi16(wv));
+            acc = _mm256_add_epi32(acc, prod);
+            i += 16;
+        }
+        let mut s = hsum_epi32_avx(acc);
+        while i < n {
+            s += *x.get_unchecked(i) as i32 * *w.get_unchecked(i) as i32;
+            i += 1;
+        }
+        s
+    }
+
+    /// AVX2 1×4 kernel: the widened activation registers are reused for
+    /// all four weight rows, quartering activation load traffic.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8_x4_avx2(
+        x: &[i8],
+        w0: &[i8],
+        w1: &[i8],
+        w2: &[i8],
+        w3: &[i8],
+    ) -> [i32; 4] {
+        let n = x.len();
+        debug_assert!(w0.len() == n && w1.len() == n && w2.len() == n && w3.len() == n);
+        let mut a0 = _mm256_setzero_si256();
+        let mut a1 = _mm256_setzero_si256();
+        let mut a2 = _mm256_setzero_si256();
+        let mut a3 = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let xv = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+            let xlo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(xv));
+            let xhi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(xv));
+            let wv = _mm256_loadu_si256(w0.as_ptr().add(i) as *const __m256i);
+            a0 = _mm256_add_epi32(
+                a0,
+                _mm256_madd_epi16(xlo, _mm256_cvtepi8_epi16(_mm256_castsi256_si128(wv))),
+            );
+            a0 = _mm256_add_epi32(
+                a0,
+                _mm256_madd_epi16(xhi, _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(wv))),
+            );
+            let wv = _mm256_loadu_si256(w1.as_ptr().add(i) as *const __m256i);
+            a1 = _mm256_add_epi32(
+                a1,
+                _mm256_madd_epi16(xlo, _mm256_cvtepi8_epi16(_mm256_castsi256_si128(wv))),
+            );
+            a1 = _mm256_add_epi32(
+                a1,
+                _mm256_madd_epi16(xhi, _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(wv))),
+            );
+            let wv = _mm256_loadu_si256(w2.as_ptr().add(i) as *const __m256i);
+            a2 = _mm256_add_epi32(
+                a2,
+                _mm256_madd_epi16(xlo, _mm256_cvtepi8_epi16(_mm256_castsi256_si128(wv))),
+            );
+            a2 = _mm256_add_epi32(
+                a2,
+                _mm256_madd_epi16(xhi, _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(wv))),
+            );
+            let wv = _mm256_loadu_si256(w3.as_ptr().add(i) as *const __m256i);
+            a3 = _mm256_add_epi32(
+                a3,
+                _mm256_madd_epi16(xlo, _mm256_cvtepi8_epi16(_mm256_castsi256_si128(wv))),
+            );
+            a3 = _mm256_add_epi32(
+                a3,
+                _mm256_madd_epi16(xhi, _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(wv))),
+            );
+            i += 32;
+        }
+        let mut out = [
+            hsum_epi32_avx(a0),
+            hsum_epi32_avx(a1),
+            hsum_epi32_avx(a2),
+            hsum_epi32_avx(a3),
+        ];
+        while i < n {
+            let xi = *x.get_unchecked(i) as i32;
+            out[0] += xi * *w0.get_unchecked(i) as i32;
+            out[1] += xi * *w1.get_unchecked(i) as i32;
+            out[2] += xi * *w2.get_unchecked(i) as i32;
+            out[3] += xi * *w3.get_unchecked(i) as i32;
+            i += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_x4_matches_single() {
+        let x: Vec<i8> = (0..37).map(|i| (i as i8).wrapping_mul(7)).collect();
+        let ws: Vec<Vec<i8>> = (0..4)
+            .map(|j| (0..37).map(|i| ((i * 3 + j * 5) as i8).wrapping_sub(40)).collect())
+            .collect();
+        let got = dot_i8_x4_scalar(&x, &ws[0], &ws[1], &ws[2], &ws[3]);
+        for j in 0..4 {
+            assert_eq!(got[j], dot_i8_scalar(&x, &ws[j]));
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn simd_kernels_match_scalar_smoke() {
+        // Deeper coverage lives in tests/kernels.rs; this is a fast
+        // in-crate sanity check including the saturated corners.
+        for n in [0usize, 1, 15, 16, 17, 31, 32, 33, 63, 64, 100] {
+            let x: Vec<i8> = (0..n).map(|i| if i % 3 == 0 { 127 } else { -127 }).collect();
+            let w: Vec<i8> = (0..n).map(|i| if i % 2 == 0 { -127 } else { 127 }).collect();
+            let want = dot_i8_scalar(&x, &w);
+            assert_eq!(unsafe { dot_i8_sse2(&x, &w) }, want, "sse2 n={}", n);
+            if is_x86_feature_detected!("avx2") {
+                assert_eq!(unsafe { dot_i8_avx2(&x, &w) }, want, "avx2 n={}", n);
+            }
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Fused GEMM epilogues: everything between a layer's int32 accumulators
+//! and the next layer's input happens in one pass over the accumulator
+//! tile — requantize (combined per-channel scale) + bias, then optionally
+//! ReLU, 2×2 average pooling, and re-quantization to the next layer's
+//! int8 grid. The pre-kernel engine round-tripped a full f32 plane
+//! through memory between each of those steps.
+//!
+//! Numerics contract: each fused op applies *exactly* the f32 operations
+//! of its unfused counterpart, in the same order —
+//! `acc as f32 * combined[j] + bias[j]`, ReLU as `v < 0.0 → 0.0`
+//! (preserving `-0.0` like `conv::relu`), pooling as
+//! `((((0 + a) + b) + c) + d) · 0.25` in the unfused `(dy, dx)` scan
+//! order, and quantization as `round_half_away(v / scale)` (division,
+//! not reciprocal — the calibration rounding rule). The fused and
+//! unfused graph walks therefore produce bit-identical logits.
+
+use crate::quant::round_half_away;
+
+/// Per-layer requantization constants with the `act_scale · w_scales[j]`
+/// product hoisted out of the row loop (it used to be recomputed for
+/// every output row).
+#[derive(Debug, Clone, Default)]
+pub struct Requant {
+    pub combined: Vec<f32>,
+}
+
+impl Requant {
+    pub fn new(act_scale: f32, w_scales: &[f32]) -> Requant {
+        let mut r = Requant::default();
+        r.fill(act_scale, w_scales);
+        r
+    }
+
+    /// Recomputes the combined scales in place (dynamic-scale layers
+    /// refresh per call without reallocating).
+    pub fn fill(&mut self, act_scale: f32, w_scales: &[f32]) {
+        self.combined.clear();
+        self.combined.extend(w_scales.iter().map(|&ws| act_scale * ws));
+    }
+}
+
+/// `out[p][j] = acc[p][j] · combined[j] + bias[j]` over an `[rows][oc]`
+/// tile — the epilogue for outputs that stay f32 (fc head, residual
+/// summands, projection shortcuts).
+pub fn requant_bias(acc: &[i32], oc: usize, combined: &[f32], bias: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(combined.len(), oc);
+    debug_assert_eq!(bias.len(), oc);
+    debug_assert_eq!(acc.len(), out.len());
+    for (arow, orow) in acc.chunks_exact(oc).zip(out.chunks_exact_mut(oc)) {
+        for j in 0..oc {
+            orow[j] = arow[j] as f32 * combined[j] + bias[j];
+        }
+    }
+}
+
+/// [`requant_bias`] + ReLU in the same pass (conv outputs that feed
+/// f32 structure: pooling into the head, inception concat, residual).
+pub fn requant_bias_relu(acc: &[i32], oc: usize, combined: &[f32], bias: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(combined.len(), oc);
+    debug_assert_eq!(bias.len(), oc);
+    debug_assert_eq!(acc.len(), out.len());
+    for (arow, orow) in acc.chunks_exact(oc).zip(out.chunks_exact_mut(oc)) {
+        for j in 0..oc {
+            let v = arow[j] as f32 * combined[j] + bias[j];
+            orow[j] = if v < 0.0 { 0.0 } else { v };
+        }
+    }
+}
+
+/// Fully fused conv epilogue: requantize + bias + ReLU + quantize to the
+/// next layer's int8 grid, `[rows][oc]` accumulators in, int8 out. The
+/// intermediate f32 value exists only in a register.
+pub fn requant_bias_relu_quant(
+    acc: &[i32],
+    oc: usize,
+    combined: &[f32],
+    bias: &[f32],
+    next_scale: f32,
+    out: &mut [i8],
+) {
+    debug_assert_eq!(combined.len(), oc);
+    debug_assert_eq!(bias.len(), oc);
+    debug_assert_eq!(acc.len(), out.len());
+    debug_assert!(next_scale > 0.0);
+    for (arow, orow) in acc.chunks_exact(oc).zip(out.chunks_exact_mut(oc)) {
+        for j in 0..oc {
+            let v = arow[j] as f32 * combined[j] + bias[j];
+            let v = if v < 0.0 { 0.0 } else { v };
+            orow[j] = round_half_away(v / next_scale).clamp(-127, 127) as i8;
+        }
+    }
+}
+
+/// Fused conv + ReLU + 2×2 average pool (stride 2, VALID) + quantize:
+/// `acc` holds the conv's `[h·w][oc]` accumulators; `out` receives the
+/// pooled `[h/2 · w/2][oc]` plane already on the next layer's int8 grid.
+/// Only a two-row f32 strip (`strip`, resized to `2·w·oc`) ever
+/// materializes. `h` and `w` must be even (the zoo guarantee).
+#[allow(clippy::too_many_arguments)]
+pub fn requant_pool2_quant(
+    acc: &[i32],
+    h: usize,
+    w: usize,
+    oc: usize,
+    combined: &[f32],
+    bias: &[f32],
+    next_scale: f32,
+    strip: &mut Vec<f32>,
+    out: &mut [i8],
+) {
+    assert!(h % 2 == 0 && w % 2 == 0, "odd spatial dims: {}x{}", h, w);
+    assert_eq!(acc.len(), h * w * oc, "accumulator shape");
+    assert_eq!(out.len(), (h / 2) * (w / 2) * oc, "pooled shape");
+    debug_assert!(next_scale > 0.0);
+    let row = w * oc;
+    let strip = super::pack::resized(strip, 2 * row);
+    let ow = w / 2;
+    for py in 0..h / 2 {
+        for r in 0..2 {
+            let src = &acc[(2 * py + r) * row..(2 * py + r + 1) * row];
+            requant_bias_relu(src, oc, combined, bias, &mut strip[r * row..(r + 1) * row]);
+        }
+        for px in 0..ow {
+            let o = &mut out[(py * ow + px) * oc..(py * ow + px + 1) * oc];
+            for (j, oj) in o.iter_mut().enumerate() {
+                // Same accumulation order as `conv::avgpool2x2`:
+                // (0,0), (0,1), (1,0), (1,1) summed onto 0.0.
+                let a = strip[(2 * px) * oc + j];
+                let b = strip[(2 * px + 1) * oc + j];
+                let c = strip[row + (2 * px) * oc + j];
+                let d = strip[row + (2 * px + 1) * oc + j];
+                let v = (0.0f32 + a + b + c + d) * 0.25;
+                *oj = round_half_away(v / next_scale).clamp(-127, 127) as i8;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::conv::{avgpool2x2, relu};
+    use crate::backend::gemm::{quantize_i8, requantize_row};
+
+    #[test]
+    fn combined_scales_match_per_row_product() {
+        let r = Requant::new(0.5, &[0.1, 0.2, 0.4]);
+        assert_eq!(r.combined.len(), 3);
+        let acc = [10i32, -20, 30];
+        let bias = [1.0f32, -1.0, 0.5];
+        let mut fused = [0f32; 3];
+        requant_bias(&acc, 3, &r.combined, &bias, &mut fused);
+        let mut reference = [0f32; 3];
+        requantize_row(&acc, 0.5, &[0.1, 0.2, 0.4], &bias, &mut reference);
+        assert_eq!(fused, reference);
+    }
+
+    #[test]
+    fn fused_relu_quant_matches_unfused_ops() {
+        let oc = 5usize;
+        let rows = 7usize;
+        let acc: Vec<i32> = (0..rows * oc).map(|i| (i as i32 - 17) * 13).collect();
+        let combined: Vec<f32> = (0..oc).map(|j| 0.01 + j as f32 * 0.003).collect();
+        let bias: Vec<f32> = (0..oc).map(|j| j as f32 * 0.1 - 0.2).collect();
+        let next = 0.037f32;
+        // Unfused: requant plane → relu → quantize.
+        let mut plane = vec![0f32; rows * oc];
+        requant_bias(&acc, oc, &combined, &bias, &mut plane);
+        relu(&mut plane);
+        let mut want = vec![0i8; rows * oc];
+        quantize_i8(&plane, next, &mut want);
+        // Fused single pass.
+        let mut got = vec![0i8; rows * oc];
+        requant_bias_relu_quant(&acc, oc, &combined, &bias, next, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fused_pool_matches_unfused_pipeline() {
+        let (h, w, oc) = (4usize, 6usize, 3usize);
+        let acc: Vec<i32> = (0..h * w * oc).map(|i| ((i * 37) as i32 % 400) - 150).collect();
+        let combined: Vec<f32> = (0..oc).map(|j| 0.02 + j as f32 * 0.005).collect();
+        let bias: Vec<f32> = (0..oc).map(|j| 0.05 * j as f32 - 0.04).collect();
+        let next = 0.021f32;
+        // Unfused: requant+relu plane → avgpool → quantize.
+        let mut plane = vec![0f32; h * w * oc];
+        requant_bias_relu(&acc, oc, &combined, &bias, &mut plane);
+        let pooled = avgpool2x2(&plane, h, w, oc);
+        let mut want = vec![0i8; pooled.len()];
+        quantize_i8(&pooled, next, &mut want);
+        // Fused.
+        let mut strip = Vec::new();
+        let mut got = vec![0i8; (h / 2) * (w / 2) * oc];
+        requant_pool2_quant(&acc, h, w, oc, &combined, &bias, next, &mut strip, &mut got);
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,214 @@
+//! Vectorized, cache-blocked kernel layer for the native backend.
+//!
+//! Everything the hot loop of `strum serve|eval --backend native` executes
+//! funnels through here:
+//!
+//! * [`dot_i8`] / [`dot_i8_x4`] — explicit-SIMD int8 dot micro-kernels
+//!   (`dot_i8.rs`): AVX2 and SSE2 via `std::arch`, with a bit-exact
+//!   scalar fallback. Int32 accumulation semantics are preserved exactly
+//!   — every ISA path returns identical bits (asserted by the property
+//!   suite in `tests/kernels.rs`, not eyeballed).
+//! * [`gemm_i8_blocked`] — cache-blocked GEMM driver (`pack.rs`): tiles
+//!   output channels in L2-resident strips, register-blocks 4 channels
+//!   per activation pass, and optionally skips all-zero activation rows
+//!   (the software analogue of `sim/`'s SparseFindFirst).
+//! * [`Scratch`] — reusable per-thread buffer arena (`pack.rs`) replacing
+//!   the per-layer `vec!` allocations of the pre-kernel engine.
+//! * [`Requant`] + the fused epilogues (`epilogue.rs`) —
+//!   requantize→bias→ReLU(→quantize | →2×2-pool→quantize) applied
+//!   straight off the int32 accumulator tile, so intermediate f32 planes
+//!   never round-trip through memory between layers.
+//!
+//! # ISA dispatch
+//!
+//! The instruction set is resolved once per process by [`active_isa`]:
+//!
+//! 1. `STRUM_KERNEL=scalar|sse2|avx2` forces a path. A forced SIMD path
+//!    is honored only if the CPU actually supports it (falling back to
+//!    detection otherwise — never UB); `scalar` always wins, which is the
+//!    supported way to benchmark or debug against the reference kernel.
+//! 2. Otherwise, on x86_64: AVX2 when `is_x86_feature_detected!` says
+//!    so, else SSE2 (baseline on x86_64).
+//! 3. On every other architecture: the scalar reference.
+//!
+//! All paths share one contract: identical int32 accumulators for
+//! identical inputs, so dispatch is invisible to numerics.
+
+pub mod dot_i8;
+pub mod epilogue;
+pub mod pack;
+
+pub use epilogue::{
+    requant_bias, requant_bias_relu, requant_bias_relu_quant, requant_pool2_quant, Requant,
+};
+pub use pack::{
+    gemm_i8_blocked, gemm_i8_blocked_isa, mark_nonzero_rows, resized, with_scratch, Scratch,
+};
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Instruction-set path the kernels execute on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable reference kernels (also the forced-debug path).
+    Scalar,
+    /// 128-bit `madd_epi16` kernels (x86_64 baseline).
+    Sse2,
+    /// 256-bit `madd_epi16` kernels (runtime-detected).
+    Avx2,
+}
+
+impl Isa {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+        }
+    }
+}
+
+/// ISA paths that can run on this machine, scalar first. Test suites
+/// iterate this to pit every runnable SIMD path against the reference.
+pub fn available_isas() -> Vec<Isa> {
+    let mut isas = vec![Isa::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        isas.push(Isa::Sse2);
+        if is_x86_feature_detected!("avx2") {
+            isas.push(Isa::Avx2);
+        }
+    }
+    isas
+}
+
+/// Resolves the preferred ISA: env override first, then detection.
+fn resolve_isa() -> Isa {
+    let forced = std::env::var("STRUM_KERNEL").ok().map(|v| v.to_ascii_lowercase());
+    if let Some(f) = forced.as_deref() {
+        match f {
+            "scalar" => return Isa::Scalar,
+            #[cfg(target_arch = "x86_64")]
+            "sse2" => return Isa::Sse2,
+            #[cfg(target_arch = "x86_64")]
+            "avx2" => {
+                if is_x86_feature_detected!("avx2") {
+                    return Isa::Avx2;
+                }
+                // Unsupported force request: fall through to detection.
+            }
+            _ => {}
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            Isa::Avx2
+        } else {
+            Isa::Sse2
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        Isa::Scalar
+    }
+}
+
+/// Cached process-wide ISA choice: 0 = unresolved, else `Isa as u8 + 1`.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+/// The ISA every dispatching kernel call uses (resolved once, cached).
+pub fn active_isa() -> Isa {
+    match ACTIVE.load(Ordering::Relaxed) {
+        1 => Isa::Scalar,
+        2 => Isa::Sse2,
+        3 => Isa::Avx2,
+        _ => {
+            let isa = resolve_isa();
+            let code = match isa {
+                Isa::Scalar => 1,
+                Isa::Sse2 => 2,
+                Isa::Avx2 => 3,
+            };
+            ACTIVE.store(code, Ordering::Relaxed);
+            isa
+        }
+    }
+}
+
+/// Contiguous int8 dot product on the active ISA (int32 accumulation).
+#[inline]
+pub fn dot_i8(x: &[i8], w: &[i8]) -> i32 {
+    dot_i8_isa(active_isa(), x, w)
+}
+
+/// [`dot_i8`] pinned to a specific ISA (bench + property-test entry).
+/// A SIMD `isa` must come from [`available_isas`] / [`active_isa`].
+#[inline]
+pub fn dot_i8_isa(isa: Isa, x: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    match isa {
+        Isa::Scalar => dot_i8::dot_i8_scalar(x, w),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: Sse2 is baseline on x86_64; Avx2 only enters the
+        // dispatch set after runtime detection.
+        Isa::Sse2 => unsafe { dot_i8::dot_i8_sse2(x, w) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { dot_i8::dot_i8_avx2(x, w) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => dot_i8::dot_i8_scalar(x, w),
+    }
+}
+
+/// 1×4 register-blocked dot on the active ISA: one activation row
+/// against four weight rows, activation loads shared.
+#[inline]
+pub fn dot_i8_x4(x: &[i8], w0: &[i8], w1: &[i8], w2: &[i8], w3: &[i8]) -> [i32; 4] {
+    dot_i8_x4_isa(active_isa(), x, w0, w1, w2, w3)
+}
+
+/// [`dot_i8_x4`] pinned to a specific ISA.
+#[inline]
+pub fn dot_i8_x4_isa(
+    isa: Isa,
+    x: &[i8],
+    w0: &[i8],
+    w1: &[i8],
+    w2: &[i8],
+    w3: &[i8],
+) -> [i32; 4] {
+    match isa {
+        Isa::Scalar => dot_i8::dot_i8_x4_scalar(x, w0, w1, w2, w3),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: see `dot_i8_isa`.
+        Isa::Sse2 => unsafe { dot_i8::dot_i8_x4_sse2(x, w0, w1, w2, w3) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { dot_i8::dot_i8_x4_avx2(x, w0, w1, w2, w3) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => dot_i8::dot_i8_x4_scalar(x, w0, w1, w2, w3),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn active_isa_is_available() {
+        let isa = active_isa();
+        assert!(available_isas().contains(&isa), "{:?}", isa);
+        assert!(!isa.name().is_empty());
+    }
+
+    #[test]
+    fn every_available_isa_agrees_on_a_dot() {
+        let x: Vec<i8> = (0..133).map(|i| ((i * 17 + 3) % 255) as i8).collect();
+        let w: Vec<i8> = (0..133).map(|i| ((i * 29 + 7) % 255) as i8).collect();
+        let want = dot_i8_isa(Isa::Scalar, &x, &w);
+        for isa in available_isas() {
+            assert_eq!(dot_i8_isa(isa, &x, &w), want, "{:?}", isa);
+            let got = dot_i8_x4_isa(isa, &x, &w, &w, &x, &w);
+            assert_eq!(got, dot_i8_x4_isa(Isa::Scalar, &x, &w, &w, &x, &w), "{:?}", isa);
+        }
+    }
+}

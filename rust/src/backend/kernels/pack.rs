@@ -1,0 +1,241 @@
+//! Cache-blocked int8 GEMM driver and the per-thread scratch arena.
+//!
+//! The crate's canonical layouts make every output element a
+//! contiguous-slice dot product (`x` rows and `w` rows share the same
+//! k-order), so the driver's job is purely locality + register reuse:
+//!
+//! * **Channel strips** — output channels are tiled in strips whose
+//!   weight rows fit comfortably in L2, so one strip stays resident
+//!   while all `m` activation rows stream past it.
+//! * **1×4 register blocking** — within a strip, four weight rows are
+//!   driven per activation pass ([`super::dot_i8_x4`]), sharing the
+//!   activation loads (and their SIMD sign-extensions) across channels.
+//! * **Activation-sparsity skip** — an optional per-row nonzero bitmap
+//!   ([`mark_nonzero_rows`]) lets the driver skip all-zero im2col rows
+//!   entirely (their accumulators are exactly 0), the software analogue
+//!   of the simulator's SparseFindFirst mode. Post-ReLU activation
+//!   planes make such rows common on real inputs.
+//!
+//! Accumulation is int32 and the per-element sums are mathematically
+//! exact (no i32 overflow is reachable at `|x|,|w| ≤ 127` and zoo-scale
+//! `k`), so blocking order is invisible to numerics: the driver is
+//! bit-identical to the naive triple loop on every ISA path.
+
+use super::{dot_i8_isa, dot_i8_x4_isa, Isa};
+
+/// Weight-strip budget in bytes: strips of `nc` channels are sized so
+/// `nc · k` int8 weights stay L2-resident across all `m` activation rows.
+const STRIP_BYTES: usize = 96 * 1024;
+
+/// Channels per strip for reduction depth `k` (multiple of 4 when ≥ 4).
+fn strip_channels(k: usize, n: usize) -> usize {
+    let nc = (STRIP_BYTES / k.max(1)).max(4).min(n.max(1));
+    if nc >= 4 {
+        nc - nc % 4
+    } else {
+        nc
+    }
+}
+
+/// `out[m][n] = x[m][k] · wT[n][k]` on a pinned ISA, cache-blocked.
+///
+/// `nonzero`, when given, must hold `m` flags; rows flagged `false` are
+/// taken to be all-zero and their output row is written as zeros without
+/// touching the weights.
+pub fn gemm_i8_blocked_isa(
+    isa: Isa,
+    x: &[i8],
+    w: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+    nonzero: Option<&[bool]>,
+) {
+    assert_eq!(x.len(), m * k, "activation shape");
+    assert_eq!(w.len(), n * k, "weight shape");
+    assert_eq!(out.len(), m * n, "output shape");
+    if let Some(nz) = nonzero {
+        assert_eq!(nz.len(), m, "nonzero flag shape");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    let nc = strip_channels(k, n);
+    let mut jc = 0usize;
+    while jc < n {
+        let jn = nc.min(n - jc);
+        for i in 0..m {
+            let orow = &mut out[i * n + jc..i * n + jc + jn];
+            if let Some(nz) = nonzero {
+                if !nz[i] {
+                    orow.fill(0);
+                    continue;
+                }
+            }
+            let xi = &x[i * k..(i + 1) * k];
+            let mut j = 0usize;
+            while j + 4 <= jn {
+                let base = (jc + j) * k;
+                let r = dot_i8_x4_isa(
+                    isa,
+                    xi,
+                    &w[base..base + k],
+                    &w[base + k..base + 2 * k],
+                    &w[base + 2 * k..base + 3 * k],
+                    &w[base + 3 * k..base + 4 * k],
+                );
+                orow[j..j + 4].copy_from_slice(&r);
+                j += 4;
+            }
+            while j < jn {
+                let base = (jc + j) * k;
+                orow[j] = dot_i8_isa(isa, xi, &w[base..base + k]);
+                j += 1;
+            }
+        }
+        jc += jn;
+    }
+}
+
+/// [`gemm_i8_blocked_isa`] on the process-wide active ISA.
+#[inline]
+pub fn gemm_i8_blocked(
+    x: &[i8],
+    w: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+    nonzero: Option<&[bool]>,
+) {
+    gemm_i8_blocked_isa(super::active_isa(), x, w, m, k, n, out, nonzero)
+}
+
+/// Fills `flags[i] = row i of `x[m][k]` has any nonzero lane` and
+/// returns the nonzero-row count. The O(m·k) scan is vanishing next to
+/// the O(m·k·n) GEMM it lets the driver skip parts of.
+pub fn mark_nonzero_rows(x: &[i8], m: usize, k: usize, flags: &mut Vec<bool>) -> usize {
+    assert_eq!(x.len(), m * k, "activation shape");
+    flags.clear();
+    flags.resize(m, false);
+    let mut live = 0usize;
+    for i in 0..m {
+        let any = x[i * k..(i + 1) * k].iter().any(|&v| v != 0);
+        flags[i] = any;
+        live += any as usize;
+    }
+    live
+}
+
+/// Reusable buffer arena for the conv → GEMM → epilogue pipeline. One
+/// lives per worker thread (see [`with_scratch`]); every buffer grows
+/// monotonically to the high-water mark of the layers that pass through,
+/// replacing the pre-kernel engine's per-layer `vec!` allocations.
+#[derive(Default)]
+pub struct Scratch {
+    /// im2col patch panel.
+    pub patches: Vec<i8>,
+    /// Dual-bank int32 accumulator tile.
+    pub acc: Vec<i32>,
+    /// Low-bank int32 accumulators (DLIQ second GEMM pass).
+    pub lo: Vec<i32>,
+    /// Two-row f32 strip for the fused 2×2-pool epilogue.
+    pub strip: Vec<f32>,
+    /// Per-row activation nonzero flags (sparsity skip).
+    pub nonzero: Vec<bool>,
+    /// Per-layer combined requantization scales (dynamic-scale layers).
+    pub combined: Vec<f32>,
+}
+
+/// Resizes `v` up to at least `len` and hands back the `len` prefix.
+/// Contents are unspecified (callers overwrite) but never uninitialized.
+pub fn resized<T: Copy + Default>(v: &mut Vec<T>, len: usize) -> &mut [T] {
+    if v.len() < len {
+        v.resize(len, T::default());
+    }
+    &mut v[..len]
+}
+
+thread_local! {
+    static TLS_SCRATCH: std::cell::RefCell<Scratch> =
+        std::cell::RefCell::new(Scratch::default());
+}
+
+/// Runs `f` with this thread's scratch arena. Not re-entrant (the graph
+/// walk borrows it exactly once per forward pass).
+pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    TLS_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn naive(x: &[i8], w: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+        let mut out = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                for kk in 0..k {
+                    acc += x[i * k + kk] as i32 * w[j * k + kk] as i32;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matches_naive_all_isas() {
+        let mut rng = Rng::new(5);
+        for (m, k, n) in [(3usize, 7usize, 5usize), (8, 33, 13), (1, 128, 4), (5, 64, 1)] {
+            let x: Vec<i8> = (0..m * k).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+            let w: Vec<i8> = (0..n * k).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+            let want = naive(&x, &w, m, k, n);
+            for isa in super::super::available_isas() {
+                let mut out = vec![-1i32; m * n];
+                gemm_i8_blocked_isa(isa, &x, &w, m, k, n, &mut out, None);
+                assert_eq!(out, want, "{:?} {}x{}x{}", isa, m, k, n);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_are_skipped_exactly() {
+        let mut rng = Rng::new(6);
+        let (m, k, n) = (6usize, 20usize, 9usize);
+        let mut x: Vec<i8> = (0..m * k).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+        // Zero out rows 1 and 4.
+        for i in [1usize, 4] {
+            x[i * k..(i + 1) * k].fill(0);
+        }
+        let w: Vec<i8> = (0..n * k).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+        let mut flags = Vec::new();
+        let live = mark_nonzero_rows(&x, m, k, &mut flags);
+        assert_eq!(live, 4);
+        assert!(!flags[1] && !flags[4] && flags[0]);
+        let want = naive(&x, &w, m, k, n);
+        let mut out = vec![-1i32; m * n];
+        gemm_i8_blocked(&x, &w, m, k, n, &mut out, Some(&flags));
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn strip_width_is_sane() {
+        assert!(strip_channels(1152, 128) % 4 == 0);
+        assert!(strip_channels(1, 2) >= 1);
+        assert_eq!(strip_channels(1_000_000, 64), 4);
+    }
+
+    #[test]
+    fn resized_grows_and_reuses() {
+        let mut v: Vec<i32> = Vec::new();
+        resized(&mut v, 10)[9] = 7;
+        assert_eq!(v.len(), 10);
+        let s = resized(&mut v, 4);
+        assert_eq!(s.len(), 4);
+        assert_eq!(v.len(), 10, "shrink never deallocates");
+    }
+}

@@ -19,10 +19,23 @@
 //! * [`PjrtBackend`] — the original XLA/PJRT path (AOT-lowered HLO
 //!   executables with weights as arguments). Requires the `pjrt` cargo
 //!   feature and exported `artifacts/hlo/` files.
+//!
+//! # Kernel dispatch
+//!
+//! All native hot loops run on the [`kernels`] layer: explicit-SIMD
+//! int8 micro-kernels (AVX2 / SSE2 via `std::arch`, runtime-detected
+//! once per process) behind a bit-exact scalar fallback, a cache-blocked
+//! GEMM driver with all-zero-row skipping, per-thread scratch arenas,
+//! and fused requantize→ReLU→pool→quantize epilogues. Set
+//! `STRUM_KERNEL=scalar` to force the reference path (or `sse2`/`avx2`
+//! to pin a SIMD tier — honored only when the CPU supports it); see
+//! [`kernels::active_isa`]. Every path produces identical int32
+//! accumulators, so the choice never changes results, only speed.
 
 pub mod conv;
 pub mod gemm;
 pub mod graph;
+pub mod kernels;
 pub mod parallel;
 pub mod strum_gemm;
 
@@ -145,7 +158,7 @@ impl Backend for NativeBackend {
     fn infer_batch(&self, images: Vec<f32>, batch: usize) -> Result<Vec<f32>> {
         use std::sync::atomic::Ordering;
         let active = self.active.fetch_add(1, Ordering::Relaxed) + 1;
-        let width = (crate::util::pool::num_threads() / active).max(1);
+        let width = crate::util::pool::width_share(active);
         let r = parallel::infer_batch_width(&self.plan, &images, batch, width);
         self.active.fetch_sub(1, Ordering::Relaxed);
         r

@@ -1,10 +1,19 @@
 //! Data-parallel batch execution for the native backend.
 //!
-//! Images in a batch are independent, so the driver fans them out over
-//! `util/pool`'s scoped threads (one contiguous chunk per worker — the
-//! same static partitioning the rest of the crate uses). Per-image
-//! scratch (im2col buffers, accumulators) lives inside
-//! [`NetworkPlan::forward_one`], so workers share nothing but the plan.
+//! Two fan-out shapes, picked per call:
+//!
+//! * **Per-image** — images in a batch are independent, so when the
+//!   batch is at least as wide as the worker share, the driver hands
+//!   each worker a contiguous chunk of images (the same static
+//!   partitioning the rest of the crate uses). Per-image scratch lives
+//!   in each worker's thread-local arena (`backend::kernels`), so
+//!   workers share nothing but the plan.
+//! * **Per-output-channel** — when the batch is *narrower* than the
+//!   worker share (few images, many cores — the shape that used to
+//!   starve cores on small nets), each image additionally splits its
+//!   conv GEMMs into output-channel chunks over `util/pool`
+//!   ([`NetworkPlan::forward_one_width`]), so the whole width stays
+//!   busy on a batch of one.
 //!
 //! When several coordinator workers call into the same backend
 //! concurrently, each call gets a *share* of the machine rather than
@@ -41,8 +50,13 @@ pub fn infer_batch_width(
             px
         ));
     }
-    let rows = par_map_width(batch, width.max(1), |i| {
-        plan.forward_one(&images[i * px..(i + 1) * px])
+    let width = width.max(1);
+    // Fewer images than workers: give each image a slice of the spare
+    // width for intra-conv output-channel parallelism.
+    let outer = width.min(batch.max(1));
+    let inner = if batch == 0 { 1 } else { (width / outer).max(1) };
+    let rows = par_map_width(batch, outer, |i| {
+        plan.forward_one_width(&images[i * px..(i + 1) * px], inner)
     });
     let mut out = Vec::with_capacity(batch * plan.classes);
     for r in rows {

@@ -17,8 +17,19 @@
 //!
 //! Both banks accumulate int32 and sum before per-channel requantization,
 //! which is the int32 accumulator model the paper's hardware uses.
+//!
+//! Execution rides the [`super::kernels`] layer: the high bank and the
+//! dense DLIQ code bank are plain int8 GEMMs (the DLIQ bank gets one
+//! bank-level `<< (8-q)` realign after its GEMM — the accumulator-side
+//! alignment of §IV-C.1), so both go through the same SIMD micro-kernel.
+//! MIP2Q taps are stored grouped by `(shift, sign)` within each channel,
+//! so the inner loop batches plain adds and applies one barrel shift per
+//! group instead of one per tap. All reorderings are exact in int32 (no
+//! reachable overflow), so results stay bit-identical to the per-tap
+//! scalar walk.
 
 use super::gemm::dot_i8;
+use super::kernels;
 use crate::encode::format::{decode_layer, EncodedLayer};
 use crate::quant::{Method, StrumLayer};
 use crate::Result;
@@ -32,7 +43,9 @@ pub enum LowBank {
     /// DLIQ: dense `q`-bit codes per channel (zeros on high slots) plus
     /// the bank-level realign shift `8-q`.
     Dliq { shift: u32, codes: Vec<i8> },
-    /// MIP2Q: per-channel CSR of (column, shift, negate) shift-add taps.
+    /// MIP2Q: per-channel CSR of (column, shift, negate) shift-add taps,
+    /// sorted by `(shift, negate)` within each channel so the kernel can
+    /// batch the adds of a group under a single barrel shift.
     Pow2 {
         row_ptr: Vec<u32>,
         col: Vec<u32>,
@@ -99,7 +112,9 @@ impl StrumGemm {
                 let mut shift = Vec::new();
                 let mut neg = Vec::new();
                 row_ptr.push(0u32);
+                let mut taps: Vec<(u8, bool, u32)> = Vec::with_capacity(k);
                 for c in 0..oc {
+                    taps.clear();
                     for j in 0..k {
                         let i = c * k + j;
                         if layer.mask[i] {
@@ -114,9 +129,15 @@ impl StrumGemm {
                                 j
                             ));
                         }
-                        col.push(j as u32);
-                        shift.push(code.unsigned_abs() - 1);
-                        neg.push(code < 0);
+                        taps.push((code.unsigned_abs() - 1, code < 0, j as u32));
+                    }
+                    // Group by (shift, sign): one barrel shift per group
+                    // at execution time instead of one per tap.
+                    taps.sort_unstable();
+                    for &(s, n, j) in &taps {
+                        col.push(j);
+                        shift.push(s);
+                        neg.push(n);
                     }
                     row_ptr.push(col.len() as u32);
                 }
@@ -168,28 +189,89 @@ impl StrumGemm {
                 col,
                 shift,
                 neg,
-            } => {
-                let lo = row_ptr[c] as usize;
-                let hi = row_ptr[c + 1] as usize;
-                let mut acc = 0i32;
-                for t in lo..hi {
-                    let term = (x[col[t] as usize] as i32) << shift[t];
-                    acc += if neg[t] { -term } else { term };
-                }
-                acc
-            }
+            } => pow2_dot_grouped(row_ptr, col, shift, neg, x, c),
         }
     }
 
     /// `out[m][oc] = x[m][k] · W^T` over the dual banks.
     pub fn matmul(&self, x: &[i8], m: usize, out: &mut [i32]) {
+        let mut lo_scratch = Vec::new();
+        self.matmul_block(x, m, 0, self.oc, out, None, &mut lo_scratch);
+    }
+
+    /// Blocked dual-bank matmul over output channels `[c0, c1)`:
+    /// `out` is the `[m][c1-c0]` block. `nonzero`, when given, flags
+    /// which activation rows have any nonzero lane — flagged-zero rows
+    /// are skipped (their accumulators are exactly 0, so this is the
+    /// activation-sparsity fast path, not an approximation).
+    /// `lo_scratch` is the caller's reusable low-bank accumulator buffer
+    /// (used by the dense DLIQ second pass).
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_block(
+        &self,
+        x: &[i8],
+        m: usize,
+        c0: usize,
+        c1: usize,
+        out: &mut [i32],
+        nonzero: Option<&[bool]>,
+        lo_scratch: &mut Vec<i32>,
+    ) {
+        assert!(c0 <= c1 && c1 <= self.oc, "channel range {}..{}", c0, c1);
+        let nch = c1 - c0;
         assert_eq!(x.len(), m * self.k, "activation shape");
-        assert_eq!(out.len(), m * self.oc, "output shape");
-        for i in 0..m {
-            let xi = &x[i * self.k..(i + 1) * self.k];
-            let oi = &mut out[i * self.oc..(i + 1) * self.oc];
-            for (c, o) in oi.iter_mut().enumerate() {
-                *o = self.dot(xi, c);
+        assert_eq!(out.len(), m * nch, "output block shape");
+        let isa = kernels::active_isa();
+        // High bank: dense int8 GEMM over the channel sub-range.
+        kernels::gemm_i8_blocked_isa(
+            isa,
+            x,
+            &self.hi[c0 * self.k..c1 * self.k],
+            m,
+            self.k,
+            nch,
+            out,
+            nonzero,
+        );
+        match &self.low {
+            LowBank::Empty => {}
+            LowBank::Dliq { shift, codes } => {
+                // The 4-bit code bank is just another int8 GEMM; one
+                // bank-level realign shift folds it into the int32
+                // accumulators (§IV-C.1).
+                let lo = kernels::resized(lo_scratch, m * nch);
+                kernels::gemm_i8_blocked_isa(
+                    isa,
+                    x,
+                    &codes[c0 * self.k..c1 * self.k],
+                    m,
+                    self.k,
+                    nch,
+                    lo,
+                    nonzero,
+                );
+                for (o, &l) in out.iter_mut().zip(lo.iter()) {
+                    *o += l << shift;
+                }
+            }
+            LowBank::Pow2 {
+                row_ptr,
+                col,
+                shift,
+                neg,
+            } => {
+                for i in 0..m {
+                    if let Some(nz) = nonzero {
+                        if !nz[i] {
+                            continue;
+                        }
+                    }
+                    let xi = &x[i * self.k..(i + 1) * self.k];
+                    let orow = &mut out[i * nch..(i + 1) * nch];
+                    for (dc, o) in orow.iter_mut().enumerate() {
+                        *o += pow2_dot_grouped(row_ptr, col, shift, neg, xi, c0 + dc);
+                    }
+                }
             }
         }
     }
@@ -210,6 +292,38 @@ fn fill_hi(hi: &mut [i8], layer: &StrumLayer) {
             hi[i] = layer.codes[i];
         }
     }
+}
+
+/// Batched MIP2Q shift-add for one channel: taps are pre-sorted by
+/// `(shift, sign)`, so each run sums its activations with plain adds and
+/// pays one barrel shift + one signed add per group. Exact: `Σ(x<<s)`
+/// equals `(Σx)<<s` in int32, and no zoo-scale layer can overflow the
+/// accumulator (`127·k·2⁶ ≪ 2³¹`).
+#[inline]
+fn pow2_dot_grouped(
+    row_ptr: &[u32],
+    col: &[u32],
+    shift: &[u8],
+    neg: &[bool],
+    x: &[i8],
+    c: usize,
+) -> i32 {
+    let lo = row_ptr[c] as usize;
+    let hi = row_ptr[c + 1] as usize;
+    let mut acc = 0i32;
+    let mut t = lo;
+    while t < hi {
+        let sh = shift[t];
+        let ng = neg[t];
+        let mut s = 0i32;
+        while t < hi && shift[t] == sh && neg[t] == ng {
+            s += x[col[t] as usize] as i32;
+            t += 1;
+        }
+        let term = s << sh;
+        acc += if ng { -term } else { term };
+    }
+    acc
 }
 
 #[cfg(test)]
@@ -269,6 +383,75 @@ mod tests {
             for c in 0..g.oc {
                 assert_eq!(out[i * g.oc + c], g.dot(&x[i * g.k..(i + 1) * g.k], c));
             }
+        }
+    }
+
+    /// Channel-range blocks + zero-row skip must reproduce the full
+    /// matmul exactly for every method (the per-OC parallel path and the
+    /// activation-sparsity fast path both rely on this).
+    #[test]
+    fn matmul_block_and_skip_match_full() {
+        let mut rng = Rng::new(17);
+        for method in [
+            Method::Baseline,
+            Method::StructuredSparsity,
+            Method::Dliq { q: 4 },
+            Method::Mip2q { l_max: 7 },
+        ] {
+            let layer = random_layer(7, 3, 11, 23);
+            let s = apply_strum(&layer, &StrumParams::new(method, 1, 8, 0.5));
+            let g = StrumGemm::from_layer(&s).unwrap();
+            let m = 6usize;
+            let mut x: Vec<i8> =
+                (0..m * g.k).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+            // Rows 2 and 5 all-zero: the skip path must still be exact.
+            for i in [2usize, 5] {
+                x[i * g.k..(i + 1) * g.k].fill(0);
+            }
+            let nonzero: Vec<bool> = (0..m).map(|i| i != 2 && i != 5).collect();
+            let mut want = vec![0i32; m * g.oc];
+            g.matmul(&x, m, &mut want);
+            // Two channel blocks with skip flags, stitched back together.
+            let mut lo_scratch = Vec::new();
+            for (c0, c1) in [(0usize, 3usize), (3, 7)] {
+                let nch = c1 - c0;
+                let mut block = vec![-1i32; m * nch];
+                g.matmul_block(&x, m, c0, c1, &mut block, Some(&nonzero), &mut lo_scratch);
+                for i in 0..m {
+                    for dc in 0..nch {
+                        assert_eq!(
+                            block[i * nch + dc],
+                            want[i * g.oc + c0 + dc],
+                            "{:?} row {} ch {}",
+                            method,
+                            i,
+                            c0 + dc
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// MIP2Q taps come out of the builder grouped by (shift, sign)
+    /// within each channel — the batching invariant the kernel exploits.
+    #[test]
+    fn mip2q_taps_are_grouped_by_shift() {
+        let layer = random_layer(3, 1, 32, 5);
+        let s = apply_strum(&layer, &StrumParams::paper(Method::Mip2q { l_max: 7 }, 0.5));
+        let g = StrumGemm::from_layer(&s).unwrap();
+        if let LowBank::Pow2 { row_ptr, shift, neg, .. } = &g.low {
+            for c in 0..g.oc {
+                let lo = row_ptr[c] as usize;
+                let hi = row_ptr[c + 1] as usize;
+                for t in lo + 1..hi {
+                    let prev = (shift[t - 1], neg[t - 1]);
+                    let cur = (shift[t], neg[t]);
+                    assert!(prev <= cur, "channel {} taps not grouped", c);
+                }
+            }
+        } else {
+            panic!("expected Pow2 low bank");
         }
     }
 

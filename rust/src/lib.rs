@@ -27,6 +27,7 @@
 //! | [`sim`] | §V | cycle-level FlexNN DPU simulator with StruM routing + sparsity find-first |
 //! | [`model`] | §VI | network graph, mini zoo metadata, artifact import, top-1 evaluation |
 //! | [`backend`] | §IV-D.2, §V-B | native execution engine: int8 + dual-bank StruM GEMM, im2col conv, graph walk, batch parallelism; `Backend` trait + PJRT adapter |
+//! | [`backend::kernels`] | §IV-C.1, §V-B | SIMD kernel layer: AVX2/SSE2 int8 micro-kernels with bit-exact scalar fallback (`STRUM_KERNEL` pins a path), cache-blocked GEMM driver, activation-sparsity row skip, scratch arenas, fused requantize/ReLU/pool/quantize epilogues |
 //! | [`runtime`] | — | PJRT CPU client wrapper (feature `pjrt`): load HLO text, compile, execute |
 //! | [`coordinator`] | — | batching inference service over any `Backend` |
 //! | [`report`] | §VII | regenerators for Table I and Figs. 10–13 + ablations |

@@ -3,6 +3,14 @@
 //! this matches the crate's workloads (per-image eval, per-block quantize,
 //! per-layer simulation) which are uniform enough for static partitioning.
 
+/// Worker share for one of `active` concurrent callers: an even split
+/// of the machine, never below one thread. Backends divide their width
+/// by the number of in-flight `infer_batch` calls so parallel
+/// coordinator workers don't oversubscribe the cores.
+pub fn width_share(active: usize) -> usize {
+    (num_threads() / active.max(1)).max(1)
+}
+
 /// Number of worker threads to use (respects `STRUM_THREADS`).
 pub fn num_threads() -> usize {
     if let Ok(v) = std::env::var("STRUM_THREADS") {
@@ -101,6 +109,13 @@ pub fn par_chunks_mut<T: Send>(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn width_share_splits_evenly() {
+        assert_eq!(width_share(1), num_threads());
+        assert_eq!(width_share(0), num_threads());
+        assert_eq!(width_share(usize::MAX), 1);
+    }
 
     #[test]
     fn par_map_ordered() {

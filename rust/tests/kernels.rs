@@ -1,0 +1,237 @@
+//! Kernel-layer invariant suite: every SIMD path must be *bit-identical*
+//! to the scalar reference (int32 accumulators compared with `==`, never
+//! a tolerance), across odd sizes, unaligned slice offsets, and
+//! all-saturated ±127 inputs; the fused graph walk must reproduce the
+//! unfused walk's logits bit-for-bit on every zoo net.
+//!
+//! Run with `STRUM_KERNEL=scalar` to pin the dispatcher to the reference
+//! path (the CI forced-scalar job does exactly that).
+
+use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
+use strum_dpu::backend::kernels::{
+    available_isas, dot_i8_isa, dot_i8_x4_isa, gemm_i8_blocked_isa, mark_nonzero_rows, Isa,
+};
+use strum_dpu::backend::{parallel, NetworkPlan};
+use strum_dpu::model::eval::{transform_network, EvalConfig};
+use strum_dpu::model::import::NetWeights;
+use strum_dpu::model::zoo;
+use strum_dpu::quant::Method;
+use strum_dpu::util::prng::Rng;
+use strum_dpu::util::proptest::{check, Gen};
+
+/// Naive triple-loop GEMM — the semantics every driver must match.
+fn naive_gemm(x: &[i8], w: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc += x[i * k + kk] as i32 * w[j * k + kk] as i32;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+#[test]
+fn dot_kernels_bit_exact_random() {
+    check("dot_i8 SIMD == scalar", 300, |g: &mut Gen| {
+        // Odd sizes on purpose: tails of every SIMD width get hit.
+        let n = g.usize_in(0, 333);
+        let x: Vec<i8> = (0..n).map(|_| g.i8()).collect();
+        let w: Vec<i8> = (0..n).map(|_| g.i8()).collect();
+        let want = dot_i8_isa(Isa::Scalar, &x, &w);
+        available_isas()
+            .into_iter()
+            .all(|isa| dot_i8_isa(isa, &x, &w) == want)
+    });
+}
+
+#[test]
+fn dot_kernels_bit_exact_unaligned_offsets() {
+    let mut rng = Rng::new(77);
+    let buf_x: Vec<i8> = (0..4103).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+    let buf_w: Vec<i8> = (0..4103).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+    for off_x in 0..5usize {
+        for off_w in 0..5usize {
+            for len in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 257, 4000] {
+                let x = &buf_x[off_x..off_x + len];
+                let w = &buf_w[off_w..off_w + len];
+                let want = dot_i8_isa(Isa::Scalar, x, w);
+                for isa in available_isas() {
+                    assert_eq!(
+                        dot_i8_isa(isa, x, w),
+                        want,
+                        "{:?} off=({}, {}) len={}",
+                        isa,
+                        off_x,
+                        off_w,
+                        len
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dot_kernels_bit_exact_saturated() {
+    // Worst-case magnitude: every product is ±127² and every int16
+    // madd pair sits at its extreme. 4096 lanes keeps the exact sum
+    // far from i32 overflow, as the kernel contract requires.
+    for (a, b) in [(127i8, 127i8), (127, -127), (-127, -127), (-127, 127)] {
+        for n in [64usize, 333, 4096] {
+            let x = vec![a; n];
+            let w = vec![b; n];
+            let want = dot_i8_isa(Isa::Scalar, &x, &w);
+            assert_eq!(want, n as i32 * (a as i32 * b as i32));
+            for isa in available_isas() {
+                assert_eq!(dot_i8_isa(isa, &x, &w), want, "{:?} {}x({},{})", isa, n, a, b);
+            }
+        }
+    }
+}
+
+#[test]
+fn dot_x4_bit_exact_random() {
+    check("dot_i8_x4 SIMD == scalar singles", 200, |g: &mut Gen| {
+        let n = g.usize_in(0, 200);
+        let x: Vec<i8> = (0..n).map(|_| g.i8()).collect();
+        let ws: Vec<Vec<i8>> = (0..4).map(|_| (0..n).map(|_| g.i8()).collect()).collect();
+        let want = [
+            dot_i8_isa(Isa::Scalar, &x, &ws[0]),
+            dot_i8_isa(Isa::Scalar, &x, &ws[1]),
+            dot_i8_isa(Isa::Scalar, &x, &ws[2]),
+            dot_i8_isa(Isa::Scalar, &x, &ws[3]),
+        ];
+        available_isas()
+            .into_iter()
+            .all(|isa| dot_i8_x4_isa(isa, &x, &ws[0], &ws[1], &ws[2], &ws[3]) == want)
+    });
+}
+
+#[test]
+fn blocked_gemm_bit_exact_with_and_without_skip() {
+    check("blocked GEMM == naive", 60, |g: &mut Gen| {
+        let m = g.usize_in(1, 9);
+        let k = g.usize_in(1, 150);
+        let n = g.usize_in(1, 20);
+        let mut x: Vec<i8> = (0..m * k).map(|_| g.i8()).collect();
+        let w: Vec<i8> = (0..n * k).map(|_| g.i8()).collect();
+        // Randomly blank some rows so the skip path gets real coverage.
+        for i in 0..m {
+            if g.bool() && g.bool() {
+                x[i * k..(i + 1) * k].fill(0);
+            }
+        }
+        let want = naive_gemm(&x, &w, m, k, n);
+        let mut flags = Vec::new();
+        mark_nonzero_rows(&x, m, k, &mut flags);
+        available_isas().into_iter().all(|isa| {
+            let mut plain = vec![-1i32; m * n];
+            gemm_i8_blocked_isa(isa, &x, &w, m, k, n, &mut plain, None);
+            let mut skipped = vec![-1i32; m * n];
+            gemm_i8_blocked_isa(isa, &x, &w, m, k, n, &mut skipped, Some(&flags));
+            plain == want && skipped == want
+        })
+    });
+}
+
+fn random_images(n: usize, img: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * img * img * 3).map(|_| rng.f32()).collect()
+}
+
+fn calibrated_weights(net: &str, img: usize, classes: usize, seed: u64) -> NetWeights {
+    let mut w = synth_net_weights(net, img, classes, seed).unwrap();
+    let calib = random_images(4, img, seed ^ 0xA5A5);
+    w.manifest.act_scales = calibrate_act_scales(&w, &calib, 4).unwrap();
+    w
+}
+
+fn assert_logits_identical(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{}: logit count", ctx);
+    for (j, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{} logit {}: {} vs {}", ctx, j, x, y);
+    }
+}
+
+/// The fused epilogue walk (quantized plane handoff, fused pool, zero-row
+/// skip) must reproduce the unfused separate-pass walk bit-for-bit on
+/// every zoo net — with static activation scales and with dynamic ones.
+#[test]
+fn fused_forward_matches_unfused_on_every_zoo_net() {
+    let img = 16usize;
+    let classes = 5usize;
+    for net in zoo::net_names() {
+        let weights = calibrated_weights(net, img, classes, 7);
+        for (method, p) in [
+            (Method::Baseline, 0.0),
+            (Method::Dliq { q: 4 }, 0.5),
+            (Method::Mip2q { l_max: 7 }, 0.5),
+        ] {
+            let cfg = EvalConfig::paper(method, p);
+            let transformed = transform_network(&weights, &cfg).unwrap();
+            for act_quant in [true, false] {
+                let plan =
+                    NetworkPlan::from_transformed(&weights, &transformed, act_quant).unwrap();
+                let images = random_images(2, img, 31);
+                let px = img * img * 3;
+                for i in 0..2 {
+                    let image = &images[i * px..(i + 1) * px];
+                    let fused = plan.forward_one(image).unwrap();
+                    let unfused = plan.forward_one_unfused(image).unwrap();
+                    assert_logits_identical(
+                        &fused,
+                        &unfused,
+                        &format!("{} {:?} act_quant={} image {}", net, method, act_quant, i),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The per-output-channel parallel split must not change a single bit.
+#[test]
+fn oc_parallel_width_matches_serial() {
+    let img = 16usize;
+    let weights = calibrated_weights("mini_vgg_a", img, 6, 13);
+    let cfg = EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5);
+    let transformed = transform_network(&weights, &cfg).unwrap();
+    let plan = NetworkPlan::from_transformed(&weights, &transformed, true).unwrap();
+    let image = random_images(1, img, 3);
+    let serial = plan.forward_one(&image).unwrap();
+    for width in [2usize, 3, 8] {
+        let par = plan.forward_one_width(&image, width).unwrap();
+        assert_logits_identical(&serial, &par, &format!("width {}", width));
+    }
+}
+
+/// Narrow batches (fewer images than workers) go down the per-OC split
+/// path inside `infer_batch_width`; wide batches fan out per image.
+/// Both must equal the serial single-image results.
+#[test]
+fn infer_batch_width_shapes_agree() {
+    let img = 16usize;
+    let classes = 4usize;
+    let weights = calibrated_weights("mini_cnn_s", img, classes, 19);
+    let cfg = EvalConfig::paper(Method::Dliq { q: 4 }, 0.5);
+    let transformed = transform_network(&weights, &cfg).unwrap();
+    let plan = NetworkPlan::from_transformed(&weights, &transformed, true).unwrap();
+    let px = img * img * 3;
+    for (batch, width) in [(1usize, 4usize), (2, 8), (6, 2), (5, 5)] {
+        let images = random_images(batch, img, batch as u64 * 91);
+        let got = parallel::infer_batch_width(&plan, &images, batch, width).unwrap();
+        assert_eq!(got.len(), batch * classes);
+        for i in 0..batch {
+            let one = plan.forward_one(&images[i * px..(i + 1) * px]).unwrap();
+            assert_logits_identical(
+                &one,
+                &got[i * classes..(i + 1) * classes],
+                &format!("batch {} width {} image {}", batch, width, i),
+            );
+        }
+    }
+}

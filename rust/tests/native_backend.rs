@@ -6,62 +6,14 @@
 //! engine must agree with it.
 
 use std::time::Duration;
-use strum_dpu::backend::graph::{calibrate_act_scales, forward_f32_reference, synth_layer_metas};
+use strum_dpu::backend::graph::{calibrate_act_scales, forward_f32_reference, synth_net_weights};
 use strum_dpu::backend::{Backend, BackendKind, NativeBackend, NetworkPlan};
 use strum_dpu::coordinator::{Coordinator, CoordinatorOptions, Router};
 use strum_dpu::model::eval::{evaluate_native_weights, transform_network, EvalConfig};
-use strum_dpu::model::import::{DataSet, NetManifest, NetWeights, ParamMeta};
+use strum_dpu::model::import::{DataSet, NetWeights};
 use strum_dpu::model::zoo;
 use strum_dpu::quant::Method;
 use strum_dpu::util::prng::Rng;
-
-/// He-initialized synthetic weights for a zoo architecture at an
-/// arbitrary input size (the python `init_params` mirror).
-fn synth_weights(net: &str, img: usize, classes: usize, seed: u64) -> NetWeights {
-    let metas = synth_layer_metas(net, img, classes).unwrap();
-    let mut rng = Rng::new(seed);
-    let mut params = Vec::new();
-    let mut blob: Vec<f32> = Vec::new();
-    for meta in &metas {
-        let shape: Vec<usize> = if meta.kind == "fc" {
-            vec![meta.ic, meta.oc]
-        } else {
-            vec![meta.kh, meta.kw, meta.ic, meta.oc]
-        };
-        let len: usize = shape.iter().product();
-        let fan_in: usize = shape[..shape.len() - 1].iter().product();
-        let std = (2.0 / fan_in as f64).sqrt();
-        let offset = blob.len();
-        for _ in 0..len {
-            blob.push((rng.gaussian() * std) as f32);
-        }
-        params.push(ParamMeta {
-            name: format!("{}_w", meta.name),
-            shape,
-            offset,
-            len,
-        });
-        let offset = blob.len();
-        for _ in 0..meta.oc {
-            blob.push((rng.gaussian() * 0.05) as f32);
-        }
-        params.push(ParamMeta {
-            name: format!("{}_b", meta.name),
-            shape: vec![meta.oc],
-            offset,
-            len: meta.oc,
-        });
-    }
-    let manifest = NetManifest {
-        net: net.to_string(),
-        num_classes: classes,
-        eval_top1_float: f64::NAN,
-        act_scales: vec![0.0; metas.len()],
-        layers: metas,
-        params,
-    };
-    NetWeights { manifest, blob }
-}
 
 fn random_images(n: usize, img: usize, seed: u64) -> Vec<f32> {
     let mut rng = Rng::new(seed);
@@ -71,7 +23,7 @@ fn random_images(n: usize, img: usize, seed: u64) -> Vec<f32> {
 /// Synthetic weights with act scales calibrated on a float pre-pass —
 /// the same static-calibration story the real artifacts carry.
 fn calibrated_weights(net: &str, img: usize, classes: usize, seed: u64) -> NetWeights {
-    let mut w = synth_weights(net, img, classes, seed);
+    let mut w = synth_net_weights(net, img, classes, seed).unwrap();
     let calib = random_images(4, img, seed ^ 0xA5A5);
     w.manifest.act_scales = calibrate_act_scales(&w, &calib, 4).unwrap();
     w
