@@ -1,6 +1,9 @@
-//! Serving example: the batching coordinator under open-loop load, with
-//! two model variants (INT8 baseline vs MIP2Q) served side by side —
-//! the "vendor serves the customer's model quantized" scenario from §I.
+//! Serving example: the multi-variant engine under open-loop load, with
+//! two model variants (INT8 baseline vs MIP2Q) served CONCURRENTLY on
+//! one shared worker pool — the "vendor serves the customer's model
+//! quantized" scenario from §I, multi-tenant edition: both precision
+//! points live behind the same pool and the deficit-round-robin
+//! scheduler keeps either from starving the other.
 //!
 //! Run: `cargo run --release --example serve_infer -- [net] [requests] [rate]`
 
@@ -8,41 +11,49 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 use strum_dpu::backend::BackendKind;
-use strum_dpu::coordinator::{Coordinator, CoordinatorOptions, Router};
+use strum_dpu::coordinator::{Engine, EngineOptions, Router, SubmitError, Ticket, VariantHandle};
 use strum_dpu::model::eval::EvalConfig;
 use strum_dpu::model::import::DataSet;
 use strum_dpu::quant::Method;
 use strum_dpu::runtime::Runtime;
 use strum_dpu::util::prng::Rng;
 
+/// Open-loop Poisson load round-robined across the variant handles.
+/// Returns per-variant (served, correct) counts.
 fn drive(
-    coord: &Coordinator,
+    handles: &[VariantHandle],
     data: &DataSet,
     n: usize,
     rate: f64,
     seed: u64,
-) -> anyhow::Result<(usize, f64)> {
+) -> anyhow::Result<Vec<(usize, usize)>> {
     let px = data.img * data.img * 3;
     let mut rng = Rng::new(seed);
     let t0 = std::time::Instant::now();
     let mut at = 0.0;
-    let mut pend = Vec::new();
+    let mut pend: Vec<(usize, usize, Ticket)> = Vec::new();
     for i in 0..n {
         at += rng.exponential(rate);
         if let Some(d) = Duration::from_secs_f64(at).checked_sub(t0.elapsed()) {
             std::thread::sleep(d);
         }
         let idx = i % data.n;
-        pend.push((idx, coord.submit(data.images[idx * px..(idx + 1) * px].to_vec())));
-    }
-    let mut correct = 0;
-    for (idx, rx) in pend {
-        let r = rx.recv_timeout(Duration::from_secs(30))??;
-        if r.class as i32 == data.labels[idx] {
-            correct += 1;
+        let vi = i % handles.len();
+        match handles[vi].submit(data.images[idx * px..(idx + 1) * px].to_vec()) {
+            Ok(t) => pend.push((vi, idx, t)),
+            Err(SubmitError::QueueFull { .. }) => {} // shed under backpressure
+            Err(e) => return Err(e.into()),
         }
     }
-    Ok((correct, t0.elapsed().as_secs_f64()))
+    let mut counts = vec![(0usize, 0usize); handles.len()];
+    for (vi, idx, ticket) in pend {
+        let r = ticket.wait_deadline(Duration::from_secs(30))?;
+        counts[vi].0 += 1;
+        if r.class as i32 == data.labels[idx] {
+            counts[vi].1 += 1;
+        }
+    }
+    Ok(counts)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -53,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     let dir = Path::new("artifacts");
 
     // PJRT when the runtime + HLO artifacts are available, else the
-    // native integer engine — same coordinator, same request path.
+    // native integer engine — same serving path either way.
     let (mut router, kind) = match Runtime::cpu() {
         Ok(rt) => {
             let rt = Arc::new(rt);
@@ -67,6 +78,17 @@ fn main() -> anyhow::Result<()> {
     };
     let data = DataSet::load(dir, "eval")?;
 
+    // ONE engine, one shared pool; both variants registered on it. The
+    // old layout burned (workers+1) threads per variant — this serves
+    // the whole fleet with `workers` threads.
+    let engine = Engine::start(EngineOptions {
+        // 25 ms batching deadline: at a few hundred req/s this fills the
+        // 16-wide executables instead of burning them on 2-image batches.
+        max_wait: Duration::from_millis(25),
+        workers: 2,
+        ..EngineOptions::default()
+    });
+    let mut handles = Vec::new();
     for (label, method) in [
         ("int8-baseline", Method::Baseline),
         ("mip2q-L7-p0.5", Method::Mip2q { l_max: 7 }),
@@ -74,33 +96,50 @@ fn main() -> anyhow::Result<()> {
         let p = if method == Method::Baseline { 0.0 } else { 0.5 };
         let v = router.register_kind(label, dir, &net, &EvalConfig::paper(method, p), kind)?;
         println!(
-            "\n--- serving {} ({} [{}] batch sizes {:?}) at {} req/s ---",
+            "registered {} ({} [{}] batch sizes {:?})",
             label,
             net,
             kind.name(),
-            v.batches(),
-            rate
+            v.batches()
         );
-        let coord = Coordinator::start(
-            v,
-            CoordinatorOptions {
-                // 25 ms batching deadline: at a few hundred req/s this fills the
-                // 16-wide executables instead of burning them on 2-image batches.
-                max_wait: Duration::from_millis(25),
-                workers: 2,
-                max_batch: None,
-            },
-        );
-        let (correct, wall) = drive(&coord, &data, n, rate, 11)?;
-        println!("{}", coord.metrics_report());
-        println!(
-            "served {} requests in {:.2}s — accuracy {:.2}%",
-            n,
-            wall,
-            correct as f64 / n as f64 * 100.0
-        );
-        coord.shutdown();
+        handles.push(engine.register(v)?);
     }
+    println!(
+        "\n--- serving {} variants on {} shared workers at {} req/s ---",
+        handles.len(),
+        engine.worker_count(),
+        rate
+    );
+    let t0 = std::time::Instant::now();
+    let counts = drive(&handles, &data, n, rate, 11)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Typed metrics: per-variant rows + the fleet rollup.
+    let snapshot = engine.metrics();
+    println!("{}", snapshot.render());
+    for (h, (served, correct)) in handles.iter().zip(&counts) {
+        if *served > 0 {
+            println!(
+                "{}: {} served, accuracy {:.2}%",
+                h.key(),
+                served,
+                *correct as f64 / *served as f64 * 100.0
+            );
+        }
+    }
+    let served_total: usize = counts.iter().map(|(s, _)| s).sum();
+    println!(
+        "served {} of {} submitted requests in {:.2}s{}",
+        served_total,
+        n,
+        wall,
+        if served_total < n {
+            " (rest shed by QueueFull backpressure)"
+        } else {
+            ""
+        }
+    );
+    engine.shutdown();
     println!("\nNOTE: identical serving path, only the weight arguments differ —");
     println!("StruM needs no model surgery, no retraining, no special executables.");
     Ok(())

@@ -1,8 +1,10 @@
 //! Micro-benchmarks of the L3 hot paths (the §Perf deliverable):
 //! quantization, MIP2Q search, codec encode/decode, simulator throughput,
 //! native int8 vs StruM dual-bank GEMM (with a `BENCH_native_gemm.json`
-//! summary), PE datapath, and end-to-end PJRT execute when artifacts
-//! exist.
+//! summary), PE datapath, the multi-variant serving engine (baseline /
+//! DLIQ / MIP2Q on one shared worker pool, per-variant throughput + p95
+//! from the typed `MetricsSnapshot` → `BENCH_serve_multivariant.json`),
+//! and end-to-end PJRT execute when artifacts exist.
 //!
 //! STRUM_BENCH_QUICK=1 shrinks budgets ~10x.
 
@@ -12,6 +14,7 @@ use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
 use strum_dpu::backend::kernels::{self, Isa};
 use strum_dpu::backend::strum_gemm::StrumGemm;
 use strum_dpu::backend::{parallel, NetworkPlan};
+use strum_dpu::coordinator::{Engine, EngineOptions, Router, SubmitError, Ticket};
 use strum_dpu::encode::{decode_layer, encode_layer};
 use strum_dpu::model::import::{DataSet, NetWeights};
 use strum_dpu::quant::tensor::qlayer;
@@ -201,6 +204,104 @@ fn main() -> anyhow::Result<()> {
         ]);
         std::fs::write("BENCH_backend_e2e.json", json.to_string_pretty())?;
         println!("wrote BENCH_backend_e2e.json");
+    }
+
+    b.section("multi-variant serving engine (req/s, artifact-free)");
+    {
+        // Three precision points of one net on ONE shared worker pool —
+        // the fleet the paper's DPU serves side by side. Closed-loop
+        // waves keep the bounded queues below their QueueFull depth.
+        let img = 16usize;
+        let classes = 8usize;
+        let net = "mini_cnn_s";
+        let mut weights = synth_net_weights(net, img, classes, 51)?;
+        let px = img * img * 3;
+        let mut rng = Rng::new(52);
+        let calib: Vec<f32> = (0..4 * px).map(|_| rng.f32()).collect();
+        weights.manifest.act_scales = calibrate_act_scales(&weights, &calib, 4)?;
+        let mut router = Router::native();
+        let engine = Engine::start(EngineOptions {
+            workers: 2,
+            max_wait: std::time::Duration::from_millis(2),
+            max_batch: Some(16),
+            ..EngineOptions::default()
+        });
+        let specs = [
+            ("base", Method::Baseline, 0.0),
+            ("dliq-q4", Method::Dliq { q: 4 }, 0.5),
+            ("mip2q-L7", Method::Mip2q { l_max: 7 }, 0.5),
+        ];
+        let mut handles = Vec::new();
+        for (label, method, p) in specs {
+            let cfg = strum_dpu::model::eval::EvalConfig::paper(method, p);
+            let v = router.register_native_weights(label, &weights, &cfg)?;
+            handles.push(engine.register(v)?);
+        }
+        let n_req = if b.is_quick() { 90usize } else { 600usize };
+        let wave = 30usize;
+        let image: Vec<f32> = (0..px).map(|_| rng.f32()).collect();
+        let t0 = std::time::Instant::now();
+        let mut done = 0usize;
+        while done < n_req {
+            let take = wave.min(n_req - done);
+            let mut tickets: Vec<Ticket> = Vec::with_capacity(take);
+            for i in 0..take {
+                let h = &handles[(done + i) % handles.len()];
+                loop {
+                    match h.submit(image.clone()) {
+                        Ok(t) => break tickets.push(t),
+                        Err(SubmitError::QueueFull { .. }) => {
+                            std::thread::sleep(std::time::Duration::from_micros(200))
+                        }
+                        Err(e) => return Err(e.into()),
+                    }
+                }
+            }
+            for t in tickets {
+                t.wait()?;
+            }
+            done += take;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let snapshot = engine.metrics();
+        println!("{}", snapshot.render());
+        println!(
+            "served {} requests across {} variants in {:.2}s ({:.1} req/s fleet)",
+            n_req,
+            handles.len(),
+            wall,
+            n_req as f64 / wall
+        );
+        let json = Json::obj(vec![
+            ("net", Json::str(net)),
+            ("img", Json::Num(img as f64)),
+            ("workers", Json::Num(snapshot.workers as f64)),
+            ("requests", Json::Num(n_req as f64)),
+            ("wall_s", Json::Num(wall)),
+            (
+                "variants",
+                Json::Arr(
+                    snapshot
+                        .variants
+                        .iter()
+                        .map(|v| {
+                            Json::obj(vec![
+                                ("key", Json::str(v.key.as_str())),
+                                ("completed", Json::Num(v.completed as f64)),
+                                ("throughput_rps", Json::Num(v.throughput_rps)),
+                                ("p50_us", Json::Num(v.latency.p50_us)),
+                                ("p95_us", Json::Num(v.latency.p95_us)),
+                                ("mean_batch", Json::Num(v.mean_batch)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("fleet", snapshot.fleet.to_json()),
+        ]);
+        std::fs::write("BENCH_serve_multivariant.json", json.to_string_pretty())?;
+        println!("wrote BENCH_serve_multivariant.json");
+        engine.shutdown();
     }
 
     let dir = Path::new("artifacts");

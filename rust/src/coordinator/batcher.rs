@@ -1,21 +1,26 @@
-//! Deadline-driven dynamic batcher.
+//! Deadline-driven dynamic batching policy.
 //!
-//! Requests accumulate in a queue; a batch flushes when either (a) enough
-//! requests are waiting to fill the variant's largest executable, or (b)
-//! the oldest queued request has waited `max_wait`. The flushed batch is
-//! padded up to the smallest exported batch size ≥ its occupancy, keeping
-//! tail latency bounded while letting throughput-heavy load ride the big
-//! executables.
+//! Requests accumulate in a per-variant queue; a batch flushes when
+//! either (a) enough requests are waiting to fill the variant's largest
+//! executable, or (b) the oldest queued request has waited `max_wait`.
+//! The flushed batch is padded up to the smallest exported batch size ≥
+//! its occupancy, keeping tail latency bounded while letting
+//! throughput-heavy load ride the big executables.
+//!
+//! The policy is pure logic (tested without threads); the engine's
+//! workers drive it. [`BatchPolicy::nap`] returns `None` on an empty
+//! queue — the caller sleeps on its condvar indefinitely instead of
+//! polling (the old fixed 200µs floor woke the batcher ~5000×/s idle) —
+//! and a bounded, never-zero nap only while a deadline is pending.
 
 use std::time::{Duration, Instant};
 
-/// One queued inference request (image + reply slot handled by server).
-pub struct Pending<T> {
-    pub payload: T,
-    pub enqueued: Instant,
-}
+/// Floor for deadline naps: waking earlier than this buys nothing and a
+/// zero-duration nap would degenerate into a busy loop.
+pub const MIN_NAP: Duration = Duration::from_micros(50);
 
 /// Batching policy state machine (pure logic — tested without threads).
+#[derive(Debug, Clone)]
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
@@ -24,6 +29,8 @@ pub struct BatchPolicy {
 impl BatchPolicy {
     /// Decides whether to flush now given queue occupancy and the oldest
     /// enqueue time. Returns the number of requests to take (0 = wait).
+    /// A queue deeper than `max_batch` drains in `max_batch` chunks;
+    /// `max_wait == 0` flushes every request immediately.
     pub fn decide(&self, queued: usize, oldest: Option<Instant>, now: Instant) -> usize {
         if queued == 0 {
             return 0;
@@ -37,15 +44,20 @@ impl BatchPolicy {
         }
     }
 
-    /// How long the batcher may sleep before the oldest request's deadline.
-    pub fn nap(&self, oldest: Option<Instant>, now: Instant) -> Duration {
-        match oldest {
-            None => self.max_wait,
-            Some(t) => self
-                .max_wait
-                .checked_sub(now.duration_since(t))
-                .unwrap_or(Duration::ZERO),
-        }
+    /// How long the caller may sleep before re-checking [`decide`]:
+    /// `None` when the queue is empty (no deadline pending — sleep until
+    /// a submit wakes you), else the time to the oldest request's
+    /// deadline, floored at [`MIN_NAP`] so it is never a zero-duration
+    /// busy loop.
+    ///
+    /// [`decide`]: BatchPolicy::decide
+    pub fn nap(&self, oldest: Option<Instant>, now: Instant) -> Option<Duration> {
+        let t = oldest?;
+        let left = self
+            .max_wait
+            .checked_sub(now.duration_since(t))
+            .unwrap_or(Duration::ZERO);
+        Some(left.max(MIN_NAP))
     }
 }
 
@@ -62,12 +74,42 @@ mod tests {
     }
 
     #[test]
+    fn overfull_queue_drains_in_max_batch_chunks() {
+        let p = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let now = Instant::now();
+        // 21 queued: the policy hands out 8, 8, then (after the deadline)
+        // the 5-request remainder — never more than max_batch at once.
+        let mut queued = 21usize;
+        let mut chunks = Vec::new();
+        loop {
+            let take = p.decide(queued, Some(now), now + Duration::from_millis(6));
+            if take == 0 {
+                break;
+            }
+            assert!(take <= p.max_batch);
+            chunks.push(take);
+            queued -= take;
+        }
+        assert_eq!(chunks, vec![8, 8, 5]);
+        assert_eq!(queued, 0);
+    }
+
+    #[test]
     fn waits_below_batch_until_deadline() {
         let p = BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(5) };
         let t0 = Instant::now();
         assert_eq!(p.decide(3, Some(t0), t0), 0);
         let later = t0 + Duration::from_millis(6);
         assert_eq!(p.decide(3, Some(t0), later), 3);
+    }
+
+    #[test]
+    fn zero_max_wait_flushes_immediately() {
+        let p = BatchPolicy { max_batch: 16, max_wait: Duration::ZERO };
+        let now = Instant::now();
+        // A single queued request flushes at once — no batching delay.
+        assert_eq!(p.decide(1, Some(now), now), 1);
+        assert_eq!(p.decide(5, Some(now), now), 5);
     }
 
     #[test]
@@ -78,12 +120,27 @@ mod tests {
     }
 
     #[test]
-    fn nap_shrinks_as_deadline_approaches() {
+    fn nap_is_unbounded_on_empty_queue() {
+        // No queued request → no deadline → the worker should sleep on
+        // its condvar until a submit arrives, not poll.
+        let p = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) };
+        assert_eq!(p.nap(None, Instant::now()), None);
+    }
+
+    #[test]
+    fn nap_shrinks_as_deadline_approaches_but_never_zero() {
         let p = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) };
         let t0 = Instant::now();
-        let nap0 = p.nap(Some(t0), t0);
-        let nap1 = p.nap(Some(t0), t0 + Duration::from_millis(7));
+        let nap0 = p.nap(Some(t0), t0).unwrap();
+        let nap1 = p.nap(Some(t0), t0 + Duration::from_millis(7)).unwrap();
         assert!(nap1 < nap0);
-        assert_eq!(p.nap(Some(t0), t0 + Duration::from_millis(20)), Duration::ZERO);
+        // Past the deadline the nap clamps to the floor, not zero: a
+        // zero-duration wait_timeout would spin.
+        let late = p.nap(Some(t0), t0 + Duration::from_millis(20)).unwrap();
+        assert!(late > Duration::ZERO);
+        assert_eq!(late, MIN_NAP);
+        // Even with a zero max_wait the nap is nonzero.
+        let pz = BatchPolicy { max_batch: 8, max_wait: Duration::ZERO };
+        assert!(pz.nap(Some(t0), t0).unwrap() > Duration::ZERO);
     }
 }

@@ -1,0 +1,627 @@
+//! Fleet-level serving engine: ONE shared worker pool serving many
+//! model variants side by side.
+//!
+//! This is the multi-tenant redesign of the old one-`Coordinator`-per-
+//! variant layout. [`Engine::start`] spawns a single pool of worker
+//! threads sized to the machine; [`Engine::register`] hot-adds a variant
+//! (its own bounded queue + [`BatchPolicy`]) and returns a
+//! [`VariantHandle`] for submission; [`Engine::retire`] drains and
+//! removes a variant while the rest keep serving. Freed workers pick the
+//! next flushable batch with a deficit-round-robin scheduler over the
+//! per-variant queues, so a hot variant (say DLIQ under a traffic spike)
+//! can saturate idle capacity but can never starve the baseline: every
+//! variant with a flushable batch is granted `quantum` request-credits
+//! per scheduler round and batches are cut to the credit it has banked.
+//!
+//! Submission is handle-based: `submit` returns a [`Ticket`] (`wait`,
+//! `wait_deadline`, `try_take`) or a typed [`SubmitError`] — bounded
+//! queues reject with `QueueFull` instead of buffering unboundedly,
+//! malformed images bounce with `BadImage` at the door, and a
+//! post-shutdown submit gets `ShuttingDown` instead of enqueueing into
+//! a pool that will never drain (the old API deadlocked here).
+//!
+//! Workers sleep on a condvar indefinitely while every queue is empty;
+//! a bounded nap is used only when some queued request has a batching
+//! deadline pending. There is no dedicated batcher thread — the workers
+//! themselves run the flush policy — so serving N variants costs
+//! `workers` threads total, not `N × (workers + 1)`.
+
+use super::batcher::BatchPolicy;
+use super::metrics::{FleetSnapshot, Metrics, MetricsSnapshot, VariantSnapshot};
+use super::router::Variant;
+use crate::runtime::executable::argmax_rows;
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Reply to one inference request.
+#[derive(Debug, Clone)]
+pub struct InferReply {
+    pub class: usize,
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    /// Batch the request rode in (occupancy, padded size).
+    pub batch: (usize, usize),
+}
+
+/// Why a submit was refused. Every arm is a client-visible contract:
+/// `QueueFull` is backpressure (retry later or shed load), `BadImage`
+/// is a malformed request, `UnknownVariant` a routing miss, and
+/// `ShuttingDown`/`Retired` mean the target no longer accepts work.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The variant's bounded queue is at its configured depth.
+    QueueFull { key: String, depth: usize },
+    /// Image length is not `img · img · 3` floats for the variant.
+    BadImage {
+        key: String,
+        expected: usize,
+        got: usize,
+    },
+    /// No live variant is registered under this key.
+    UnknownVariant { key: String },
+    /// The variant is draining and no longer accepts new requests.
+    Retired { key: String },
+    /// The engine has been shut down.
+    ShuttingDown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull { key, depth } => {
+                write!(f, "variant {}: queue full (depth {})", key, depth)
+            }
+            SubmitError::BadImage { key, expected, got } => write!(
+                f,
+                "variant {}: image has {} floats, expected {}",
+                key, got, expected
+            ),
+            SubmitError::UnknownVariant { key } => write!(f, "unknown variant {}", key),
+            SubmitError::Retired { key } => write!(f, "variant {} is retired", key),
+            SubmitError::ShuttingDown => write!(f, "engine is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Handle to one in-flight request.
+pub struct Ticket {
+    rx: mpsc::Receiver<crate::Result<InferReply>>,
+}
+
+impl Ticket {
+    /// Blocks until the reply arrives.
+    pub fn wait(self) -> crate::Result<InferReply> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!("serving engine dropped the request")),
+        }
+    }
+
+    /// Blocks at most `d`; a timeout is an error (the request may still
+    /// complete — the reply is simply abandoned).
+    pub fn wait_deadline(self, d: Duration) -> crate::Result<InferReply> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(anyhow::anyhow!("no reply within {:?}", d))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(anyhow::anyhow!("serving engine dropped the request"))
+            }
+        }
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight.
+    pub fn try_take(&self) -> Option<crate::Result<InferReply>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(anyhow::anyhow!("serving engine dropped the request")))
+            }
+        }
+    }
+}
+
+/// Engine tunables. `workers == 0` sizes the pool to the machine.
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// Shared worker pool size (0 = available cores).
+    pub workers: usize,
+    /// Per-variant bounded queue depth; submits beyond it get
+    /// [`SubmitError::QueueFull`].
+    pub queue_depth: usize,
+    /// Default batching deadline for registered variants.
+    pub max_wait: Duration,
+    /// Default batch cap (None = variant's largest executable).
+    pub max_batch: Option<usize>,
+    /// Deficit-round-robin quantum in requests per scheduler round
+    /// (0 = the variant's max batch, i.e. plain batch-granted RR).
+    pub quantum: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            workers: 2,
+            queue_depth: 1024,
+            max_wait: Duration::from_millis(4),
+            max_batch: None,
+            quantum: 0,
+        }
+    }
+}
+
+struct Request {
+    image: Vec<f32>,
+    tx: mpsc::Sender<crate::Result<InferReply>>,
+    enqueued: Instant,
+}
+
+/// One registered variant: queue + policy + metrics + DRR credit.
+struct Slot {
+    variant: Arc<Variant>,
+    policy: BatchPolicy,
+    depth: usize,
+    quantum: usize,
+    deficit: usize,
+    queue: VecDeque<Request>,
+    metrics: Arc<Metrics>,
+    /// Batches of this variant currently executing on workers.
+    inflight: Arc<AtomicUsize>,
+    retiring: bool,
+    registered: Instant,
+}
+
+struct EngineState {
+    slots: Vec<Slot>,
+    /// DRR position: index of the slot whose turn comes next.
+    cursor: usize,
+    stopping: bool,
+}
+
+struct EngineShared {
+    state: Mutex<EngineState>,
+    cv: Condvar,
+    started: Instant,
+    workers: usize,
+}
+
+/// A batch a worker pulled off a variant queue.
+struct Job {
+    variant: Arc<Variant>,
+    metrics: Arc<Metrics>,
+    inflight: Arc<AtomicUsize>,
+    batch: Vec<Request>,
+}
+
+/// Submission handle for one registered variant. Cheap to clone; remains
+/// valid (returning typed errors) after the variant is retired or the
+/// engine shut down.
+#[derive(Clone)]
+pub struct VariantHandle {
+    key: String,
+    shared: Arc<EngineShared>,
+}
+
+impl VariantHandle {
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Submits one image to this variant.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Ticket, SubmitError> {
+        submit_shared(&self.shared, &self.key, image)
+    }
+}
+
+/// The multi-variant serving engine: one shared worker pool, per-variant
+/// bounded queues, deficit-round-robin batch scheduling.
+pub struct Engine {
+    shared: Arc<EngineShared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    defaults: EngineOptions,
+}
+
+impl Engine {
+    /// Starts the shared worker pool (no variants yet).
+    pub fn start(opts: EngineOptions) -> Engine {
+        let workers = if opts.workers == 0 {
+            crate::util::pool::num_threads()
+        } else {
+            opts.workers
+        };
+        let shared = Arc::new(EngineShared {
+            state: Mutex::new(EngineState {
+                slots: Vec::new(),
+                cursor: 0,
+                stopping: false,
+            }),
+            cv: Condvar::new(),
+            started: Instant::now(),
+            workers,
+        });
+        let defaults = EngineOptions { workers, ..opts };
+        let mut threads = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let sh = shared.clone();
+            threads.push(std::thread::spawn(move || worker_loop(&sh)));
+        }
+        Engine {
+            shared,
+            threads,
+            defaults,
+        }
+    }
+
+    /// Registers `variant` with the engine-default policy.
+    pub fn register(&self, variant: Arc<Variant>) -> crate::Result<VariantHandle> {
+        let d = self.defaults();
+        let policy = BatchPolicy {
+            max_batch: d.max_batch.unwrap_or(usize::MAX),
+            max_wait: d.max_wait,
+        };
+        self.register_with(variant, policy, d.queue_depth)
+    }
+
+    /// Registers `variant` with an explicit policy and queue depth —
+    /// hot-add: the shared pool starts serving it immediately. The
+    /// policy's `max_batch` is clamped to the backend's largest batch
+    /// shape (a cap above it would overflow the padded batch buffer)
+    /// and floored at 1 (a zero cap could never flush).
+    pub fn register_with(
+        &self,
+        variant: Arc<Variant>,
+        policy: BatchPolicy,
+        queue_depth: usize,
+    ) -> crate::Result<VariantHandle> {
+        let d = self.defaults();
+        let policy = BatchPolicy {
+            max_batch: policy.max_batch.min(variant.max_batch()).max(1),
+            max_wait: policy.max_wait,
+        };
+        let quantum = if d.quantum == 0 {
+            policy.max_batch
+        } else {
+            d.quantum
+        };
+        let key = variant.key.clone();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.stopping {
+                anyhow::bail!("engine is shutting down");
+            }
+            if st.slots.iter().any(|s| s.variant.key == key) {
+                anyhow::bail!("variant {} is already registered", key);
+            }
+            st.slots.push(Slot {
+                variant,
+                policy,
+                depth: queue_depth.max(1),
+                quantum,
+                deficit: 0,
+                queue: VecDeque::new(),
+                metrics: Arc::new(Metrics::default()),
+                inflight: Arc::new(AtomicUsize::new(0)),
+                retiring: false,
+                registered: Instant::now(),
+            });
+        }
+        Ok(VariantHandle {
+            key,
+            shared: self.shared.clone(),
+        })
+    }
+
+    /// Drains and removes a variant: already-queued requests are still
+    /// served (deadline waived so the drain is prompt), new submits get
+    /// [`SubmitError::Retired`], and once the queue is empty and no batch
+    /// is in flight the slot is dropped. Blocks until the drain finishes.
+    pub fn retire(&self, key: &str) -> crate::Result<()> {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            let slot = st
+                .slots
+                .iter_mut()
+                .find(|s| s.variant.key == key)
+                .ok_or_else(|| anyhow::anyhow!("unknown variant {}", key))?;
+            slot.retiring = true;
+        }
+        self.shared.cv.notify_all();
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            let Some(i) = st.slots.iter().position(|s| s.variant.key == key) else {
+                return Ok(());
+            };
+            if st.slots[i].queue.is_empty() && st.slots[i].inflight.load(Ordering::Acquire) == 0 {
+                st.slots.remove(i);
+                if st.cursor > i {
+                    st.cursor -= 1;
+                }
+                if st.cursor >= st.slots.len() {
+                    st.cursor = 0;
+                }
+                return Ok(());
+            }
+            let (guard, _) = self
+                .shared
+                .cv
+                .wait_timeout(st, Duration::from_millis(2))
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    /// Submits one image to the variant registered under `key`.
+    pub fn submit(&self, key: &str, image: Vec<f32>) -> Result<Ticket, SubmitError> {
+        submit_shared(&self.shared, key, image)
+    }
+
+    /// Live variant keys, sorted.
+    pub fn keys(&self) -> Vec<String> {
+        let st = self.shared.state.lock().unwrap();
+        let mut k: Vec<String> = st
+            .slots
+            .iter()
+            .filter(|s| !s.retiring)
+            .map(|s| s.variant.key.clone())
+            .collect();
+        k.sort();
+        k
+    }
+
+    /// Size of the shared worker pool (the engine's total serving thread
+    /// count — there is no separate batcher thread).
+    pub fn worker_count(&self) -> usize {
+        self.shared.workers
+    }
+
+    /// Typed metrics: one row per variant plus the fleet rollup.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let st = self.shared.state.lock().unwrap();
+        let variants: Vec<VariantSnapshot> = st
+            .slots
+            .iter()
+            .map(|s| {
+                s.metrics.snapshot(
+                    &s.variant.key,
+                    &s.variant.net,
+                    s.variant.backend.kind().name(),
+                    s.registered.elapsed(),
+                    s.queue.len(),
+                )
+            })
+            .collect();
+        // Weight each retained sample by the traffic it stands for
+        // (seen/retained per reservoir) so a low-traffic variant's
+        // saturated reservoir doesn't skew the fleet percentiles.
+        let mut merged_lat: Vec<(f64, f64)> = Vec::new();
+        for s in &st.slots {
+            let samples = s.metrics.latency_samples();
+            if samples.is_empty() {
+                continue;
+            }
+            let w = s.metrics.latency_seen() as f64 / samples.len() as f64;
+            merged_lat.extend(samples.into_iter().map(|v| (v, w)));
+        }
+        let fleet = FleetSnapshot::rollup(&variants, self.shared.started.elapsed(), &merged_lat);
+        MetricsSnapshot {
+            wall_s: self.shared.started.elapsed().as_secs_f64(),
+            workers: self.shared.workers,
+            variants,
+            fleet,
+        }
+    }
+
+    /// Latency summary for one variant (empty if the key is unknown).
+    pub fn latency_summary(&self, key: &str) -> crate::util::stats::Summary {
+        let st = self.shared.state.lock().unwrap();
+        st.slots
+            .iter()
+            .find(|s| s.variant.key == key)
+            .map(|s| s.metrics.latency_summary())
+            .unwrap_or_default()
+    }
+
+    /// Stops the pool after draining every queue (pending deadlines are
+    /// waived so shutdown is prompt). Subsequent submits through live
+    /// handles get [`SubmitError::ShuttingDown`].
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.stopping = true;
+        }
+        self.shared.cv.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    fn defaults(&self) -> &EngineOptions {
+        &self.defaults
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn submit_shared(
+    shared: &EngineShared,
+    key: &str,
+    image: Vec<f32>,
+) -> Result<Ticket, SubmitError> {
+    let mut st = shared.state.lock().unwrap();
+    if st.stopping {
+        return Err(SubmitError::ShuttingDown);
+    }
+    let Some(slot) = st.slots.iter_mut().find(|s| s.variant.key == key) else {
+        return Err(SubmitError::UnknownVariant { key: key.into() });
+    };
+    if slot.retiring {
+        return Err(SubmitError::Retired { key: key.into() });
+    }
+    let px = slot.variant.image_len();
+    if image.len() != px {
+        return Err(SubmitError::BadImage {
+            key: key.into(),
+            expected: px,
+            got: image.len(),
+        });
+    }
+    if slot.queue.len() >= slot.depth {
+        slot.metrics.record_rejected();
+        return Err(SubmitError::QueueFull {
+            key: key.into(),
+            depth: slot.depth,
+        });
+    }
+    slot.metrics.record_request();
+    let (tx, rx) = mpsc::channel();
+    slot.queue.push_back(Request {
+        image,
+        tx,
+        enqueued: Instant::now(),
+    });
+    drop(st);
+    shared.cv.notify_all();
+    Ok(Ticket { rx })
+}
+
+/// Deficit-round-robin pick over the variant queues (state lock held).
+/// Starting from the cursor, the first variant whose policy says "flush"
+/// gets `quantum` request-credits and a batch cut to the credit it has
+/// banked — so a variant flushing giant batches spends several turns'
+/// credit on each one while lightly-loaded variants are served every
+/// time their turn comes. Retiring slots and a stopping engine waive the
+/// deadline so drains are prompt.
+fn pick(st: &mut EngineState, now: Instant) -> Option<Job> {
+    let n = st.slots.len();
+    for i in 0..n {
+        let idx = (st.cursor + i) % n;
+        let slot = &mut st.slots[idx];
+        let want = if st.stopping || slot.retiring {
+            slot.queue.len().min(slot.policy.max_batch)
+        } else {
+            slot.policy.decide(
+                slot.queue.len(),
+                slot.queue.front().map(|r| r.enqueued),
+                now,
+            )
+        };
+        if want == 0 {
+            continue;
+        }
+        // Top up this slot's credit; cap the bank so an idle variant
+        // cannot hoard unbounded credit. The cap exceeds max_batch, so
+        // any flushable batch is reachable within a bounded number of
+        // turns (guaranteed progress, no starvation either way).
+        slot.deficit = (slot.deficit + slot.quantum).min(slot.policy.max_batch + slot.quantum);
+        // quantum >= 1, so deficit >= 1 here: progress is always made.
+        let take = want.min(slot.deficit);
+        slot.deficit -= take;
+        let batch: Vec<Request> = slot.queue.drain(..take).collect();
+        slot.inflight.fetch_add(1, Ordering::AcqRel);
+        let job = Job {
+            variant: slot.variant.clone(),
+            metrics: slot.metrics.clone(),
+            inflight: slot.inflight.clone(),
+            batch,
+        };
+        st.cursor = (idx + 1) % n;
+        return Some(job);
+    }
+    None
+}
+
+/// Soonest batching deadline across all queues: `None` when every queue
+/// is empty (sleep indefinitely — satellite fix for the old 5000-wakeup/s
+/// idle spin), else a bounded, never-zero nap.
+fn nap_all(st: &EngineState, now: Instant) -> Option<Duration> {
+    let mut best: Option<Duration> = None;
+    for slot in &st.slots {
+        if let Some(d) = slot
+            .policy
+            .nap(slot.queue.front().map(|r| r.enqueued), now)
+        {
+            best = Some(match best {
+                Some(b) => b.min(d),
+                None => d,
+            });
+        }
+    }
+    best
+}
+
+fn worker_loop(shared: &EngineShared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                let now = Instant::now();
+                if let Some(job) = pick(&mut st, now) {
+                    break Some(job);
+                }
+                if st.stopping {
+                    break None;
+                }
+                st = match nap_all(&st, now) {
+                    None => shared.cv.wait(st).unwrap(),
+                    Some(d) => shared.cv.wait_timeout(st, d).unwrap().0,
+                };
+            }
+        };
+        let Some(job) = job else { return };
+        execute_batch(&job);
+        job.inflight.fetch_sub(1, Ordering::AcqRel);
+        // Wake napping peers (queued work may be flushable now that this
+        // worker is free) and any retire()/shutdown waiter.
+        shared.cv.notify_all();
+    }
+}
+
+fn execute_batch(job: &Job) {
+    let v = &job.variant;
+    let n = job.batch.len();
+    let bsz = v.pick_batch(n);
+    job.metrics.record_batch(n, bsz);
+    let px = v.image_len();
+    let mut images = vec![0f32; bsz * px];
+    for (i, r) in job.batch.iter().enumerate() {
+        // Sizes are validated at submit; a mismatch here is a bug.
+        debug_assert_eq!(r.image.len(), px);
+        images[i * px..(i + 1) * px].copy_from_slice(&r.image);
+    }
+    match v.backend.infer_batch(images, bsz) {
+        Ok(logits) => {
+            let preds = argmax_rows(&logits, v.classes);
+            for (i, r) in job.batch.iter().enumerate() {
+                let latency = r.enqueued.elapsed();
+                job.metrics.record_done(latency);
+                let _ = r.tx.send(Ok(InferReply {
+                    class: preds[i],
+                    logits: logits[i * v.classes..(i + 1) * v.classes].to_vec(),
+                    latency,
+                    batch: (n, bsz),
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{}", e);
+            for r in &job.batch {
+                let _ = r.tx.send(Err(anyhow::anyhow!("batch failed: {}", msg)));
+            }
+        }
+    }
+}

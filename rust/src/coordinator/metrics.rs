@@ -1,24 +1,110 @@
-//! Serving metrics: counters + latency summaries.
+//! Serving metrics: counters, bounded latency reservoirs, and the typed
+//! [`MetricsSnapshot`] the engine reports (per-variant rows + a fleet
+//! rollup), serializable via [`crate::util::json`].
+//!
+//! Latency and batch-size samples go through a fixed-capacity reservoir
+//! sampler (Vitter's Algorithm R, seeded from [`crate::util::prng`]) so
+//! memory stays bounded under sustained load — the old `Vec` sinks grew
+//! without limit, ~16 bytes/request forever.
 
+use crate::util::json::Json;
+use crate::util::prng::Rng;
 use crate::util::stats::Summary;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-/// Thread-safe metrics sink shared by batcher and workers.
-#[derive(Debug, Default)]
+/// Default reservoir capacity: enough for stable p99 estimates, ~32 KiB
+/// per variant regardless of how long the engine runs.
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Fixed-capacity uniform sample of an unbounded stream (Algorithm R).
+/// After `seen` pushes, each of them is retained with probability
+/// `cap / seen` — percentiles over the reservoir estimate the stream's.
+#[derive(Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: Rng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        Reservoir {
+            cap: cap.max(1),
+            seen: 0,
+            samples: Vec::new(),
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            // Keep x with probability cap/seen, evicting a uniform victim.
+            let j = self.rng.below(self.seen);
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = x;
+            }
+        }
+    }
+
+    /// Total values pushed (≥ the retained sample count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+/// Thread-safe metrics sink, one per registered variant.
+#[derive(Debug)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
+    /// Submits refused with `QueueFull` backpressure.
+    pub rejected: AtomicU64,
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
-    latencies_us: Mutex<Vec<f64>>,
-    batch_sizes: Mutex<Vec<f64>>,
+    latencies_us: Mutex<Reservoir>,
+    batch_sizes: Mutex<Reservoir>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            padded_slots: AtomicU64::new(0),
+            // Fixed seeds: sampling stays reproducible run to run.
+            latencies_us: Mutex::new(Reservoir::new(RESERVOIR_CAP, 0x5EED_1A7E)),
+            batch_sizes: Mutex::new(Reservoir::new(RESERVOIR_CAP, 0x5EED_BA7C)),
+        }
+    }
 }
 
 impl Metrics {
     pub fn record_request(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, real: usize, padded_to: usize) {
@@ -37,30 +123,273 @@ impl Metrics {
     }
 
     pub fn latency_summary(&self) -> Summary {
-        Summary::from_slice(&self.latencies_us.lock().unwrap())
+        Summary::from_slice(self.latencies_us.lock().unwrap().samples())
+    }
+
+    /// Retained latency samples (µs) — callers merge these for rollups.
+    pub fn latency_samples(&self) -> Vec<f64> {
+        self.latencies_us.lock().unwrap().samples().to_vec()
+    }
+
+    /// Total latencies recorded (≥ the retained sample count); the ratio
+    /// seen/retained is the traffic weight of each retained sample.
+    pub fn latency_seen(&self) -> u64 {
+        self.latencies_us.lock().unwrap().seen()
     }
 
     pub fn mean_batch_size(&self) -> f64 {
-        Summary::from_slice(&self.batch_sizes.lock().unwrap()).mean()
+        Summary::from_slice(self.batch_sizes.lock().unwrap().samples()).mean()
     }
 
-    pub fn report(&self, wall: Duration) -> String {
-        let lat = self.latency_summary();
-        let done = self.completed.load(Ordering::Relaxed);
-        format!(
-            "requests={} completed={} batches={} mean_batch={:.1} padded={} \
-             thrpt={:.1} req/s  latency_us p50={:.0} p95={:.0} p99={:.0} max={:.0}",
-            self.requests.load(Ordering::Relaxed),
-            done,
-            self.batches.load(Ordering::Relaxed),
-            self.mean_batch_size(),
-            self.padded_slots.load(Ordering::Relaxed),
-            done as f64 / wall.as_secs_f64().max(1e-9),
-            lat.percentile(50.0),
-            lat.percentile(95.0),
-            lat.percentile(99.0),
-            lat.max(),
-        )
+    /// Snapshot of this sink as one typed per-variant row.
+    pub fn snapshot(
+        &self,
+        key: &str,
+        net: &str,
+        backend: &str,
+        wall: Duration,
+        queued: usize,
+    ) -> VariantSnapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        VariantSnapshot {
+            key: key.to_string(),
+            net: net.to_string(),
+            backend: backend.to_string(),
+            requests: self.requests.load(Ordering::Relaxed),
+            completed,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            mean_batch: self.mean_batch_size(),
+            queued,
+            throughput_rps: completed as f64 / wall.as_secs_f64().max(1e-9),
+            latency: LatencyStats::from_summary(&self.latency_summary()),
+        }
+    }
+}
+
+/// Percentile summary of a latency reservoir, in microseconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyStats {
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    /// Retained reservoir samples the percentiles were computed from.
+    pub samples: usize,
+}
+
+impl LatencyStats {
+    pub fn from_summary(s: &Summary) -> LatencyStats {
+        if s.is_empty() {
+            return LatencyStats {
+                p50_us: 0.0,
+                p95_us: 0.0,
+                p99_us: 0.0,
+                max_us: 0.0,
+                samples: 0,
+            };
+        }
+        LatencyStats {
+            p50_us: s.percentile(50.0),
+            p95_us: s.percentile(95.0),
+            p99_us: s.percentile(99.0),
+            max_us: s.max(),
+            samples: s.len(),
+        }
+    }
+
+    /// Percentiles over `(value_us, weight)` pairs, where each retained
+    /// reservoir sample stands for `weight` real requests. Reservoirs
+    /// with different sampling rates (a saturated hot variant next to a
+    /// barely-sampled cold one) merge without biasing the estimate.
+    pub fn from_weighted(pairs: &[(f64, f64)]) -> LatencyStats {
+        if pairs.is_empty() {
+            return LatencyStats::from_summary(&Summary::new());
+        }
+        let mut sorted = pairs.to_vec();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let total: f64 = sorted.iter().map(|&(_, w)| w).sum();
+        let pct = |q: f64| -> f64 {
+            let target = total * q / 100.0;
+            let mut cum = 0.0;
+            for &(v, w) in &sorted {
+                cum += w;
+                if cum >= target {
+                    return v;
+                }
+            }
+            sorted.last().unwrap().0
+        };
+        LatencyStats {
+            p50_us: pct(50.0),
+            p95_us: pct(95.0),
+            p99_us: pct(99.0),
+            max_us: sorted.last().unwrap().0,
+            samples: pairs.len(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p95_us", Json::Num(self.p95_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+            ("max_us", Json::Num(self.max_us)),
+            ("samples", Json::Num(self.samples as f64)),
+        ])
+    }
+}
+
+/// One variant's serving counters + latency percentiles.
+#[derive(Debug, Clone)]
+pub struct VariantSnapshot {
+    pub key: String,
+    pub net: String,
+    pub backend: String,
+    pub requests: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub mean_batch: f64,
+    /// Queue occupancy at snapshot time.
+    pub queued: usize,
+    pub throughput_rps: f64,
+    pub latency: LatencyStats,
+}
+
+impl VariantSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("key", Json::str(self.key.as_str())),
+            ("net", Json::str(self.net.as_str())),
+            ("backend", Json::str(self.backend.as_str())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("padded_slots", Json::Num(self.padded_slots as f64)),
+            (
+                "mean_batch",
+                Json::Num(if self.mean_batch.is_finite() {
+                    self.mean_batch
+                } else {
+                    0.0
+                }),
+            ),
+            ("queued", Json::Num(self.queued as f64)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("latency", self.latency.to_json()),
+        ])
+    }
+}
+
+/// Cross-variant rollup: summed counters, fleet throughput, and
+/// percentiles over the merged latency reservoirs.
+#[derive(Debug, Clone)]
+pub struct FleetSnapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub throughput_rps: f64,
+    pub latency: LatencyStats,
+}
+
+impl FleetSnapshot {
+    /// Builds the rollup from per-variant rows plus the merged,
+    /// traffic-weighted latency samples `(value_us, weight)` —
+    /// percentiles do not compose, so the raw reservoirs are merged
+    /// (weighted by how much traffic each retained sample represents)
+    /// rather than averaging per-variant percentiles.
+    pub fn rollup(
+        variants: &[VariantSnapshot],
+        wall: Duration,
+        merged_lat_us: &[(f64, f64)],
+    ) -> Self {
+        let completed: u64 = variants.iter().map(|v| v.completed).sum();
+        FleetSnapshot {
+            requests: variants.iter().map(|v| v.requests).sum(),
+            completed,
+            rejected: variants.iter().map(|v| v.rejected).sum(),
+            batches: variants.iter().map(|v| v.batches).sum(),
+            throughput_rps: completed as f64 / wall.as_secs_f64().max(1e-9),
+            latency: LatencyStats::from_weighted(merged_lat_us),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("latency", self.latency.to_json()),
+        ])
+    }
+}
+
+/// Typed engine metrics: the whole fleet at one instant.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// Engine uptime in seconds.
+    pub wall_s: f64,
+    /// Shared worker pool size.
+    pub workers: usize,
+    pub variants: Vec<VariantSnapshot>,
+    pub fleet: FleetSnapshot,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("wall_s", Json::Num(self.wall_s)),
+            ("workers", Json::Num(self.workers as f64)),
+            (
+                "variants",
+                Json::Arr(self.variants.iter().map(|v| v.to_json()).collect()),
+            ),
+            ("fleet", self.fleet.to_json()),
+        ])
+    }
+
+    /// Human-readable multi-line report (what `strum serve` prints).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for v in &self.variants {
+            out.push_str(&format!(
+                "{:<28} requests={} completed={} rejected={} batches={} mean_batch={:.1} \
+                 queued={} thrpt={:.1} req/s latency_us p50={:.0} p95={:.0} p99={:.0} max={:.0}\n",
+                v.key,
+                v.requests,
+                v.completed,
+                v.rejected,
+                v.batches,
+                if v.mean_batch.is_finite() { v.mean_batch } else { 0.0 },
+                v.queued,
+                v.throughput_rps,
+                v.latency.p50_us,
+                v.latency.p95_us,
+                v.latency.p99_us,
+                v.latency.max_us,
+            ));
+        }
+        out.push_str(&format!(
+            "fleet: workers={} wall={:.2}s requests={} completed={} rejected={} \
+             thrpt={:.1} req/s latency_us p50={:.0} p95={:.0} p99={:.0}",
+            self.workers,
+            self.wall_s,
+            self.fleet.requests,
+            self.fleet.completed,
+            self.fleet.rejected,
+            self.fleet.throughput_rps,
+            self.fleet.latency.p50_us,
+            self.fleet.latency.p95_us,
+            self.fleet.latency.p99_us,
+        ));
+        out
     }
 }
 
@@ -73,12 +402,140 @@ mod tests {
         let m = Metrics::default();
         m.record_request();
         m.record_request();
+        m.record_rejected();
         m.record_batch(2, 4);
         m.record_done(Duration::from_micros(100));
         m.record_done(Duration::from_micros(300));
         assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 1);
         assert_eq!(m.padded_slots.load(Ordering::Relaxed), 2);
         assert_eq!(m.latency_summary().median(), 200.0);
-        assert!(m.report(Duration::from_secs(1)).contains("completed=2"));
+        let snap = m.snapshot("k", "net", "native", Duration::from_secs(1), 3);
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.queued, 3);
+        assert!((snap.throughput_rps - 2.0).abs() < 0.2);
+        assert_eq!(snap.latency.samples, 2);
+    }
+
+    #[test]
+    fn reservoir_caps_memory_at_n_samples() {
+        let cap = 64usize;
+        let mut r = Reservoir::new(cap, 42);
+        for i in 0..100_000u64 {
+            r.push(i as f64);
+        }
+        // The whole point of the satellite fix: memory stays at cap no
+        // matter how many values stream through.
+        assert_eq!(r.len(), cap);
+        assert_eq!(r.seen(), 100_000);
+    }
+
+    #[test]
+    fn reservoir_below_cap_keeps_everything() {
+        let mut r = Reservoir::new(100, 7);
+        for i in 0..50 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.samples(), (0..50).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reservoir_sample_is_representative() {
+        // Stream 0..100k uniformly; the retained sample's median should
+        // land near the stream median (uniform retention probability).
+        let mut r = Reservoir::new(1024, 3);
+        let n = 100_000;
+        for i in 0..n {
+            r.push(i as f64);
+        }
+        let med = Summary::from_slice(r.samples()).median();
+        assert!(
+            (med - n as f64 / 2.0).abs() < n as f64 * 0.1,
+            "median {} far from {}",
+            med,
+            n / 2
+        );
+    }
+
+    #[test]
+    fn snapshot_serializes_and_renders() {
+        let m = Metrics::default();
+        m.record_request();
+        m.record_batch(1, 1);
+        m.record_done(Duration::from_micros(500));
+        let v = m.snapshot("net:base", "net", "native", Duration::from_secs(2), 0);
+        let weighted: Vec<(f64, f64)> =
+            m.latency_samples().into_iter().map(|x| (x, 1.0)).collect();
+        let fleet = FleetSnapshot::rollup(std::slice::from_ref(&v), Duration::from_secs(2), &weighted);
+        let snap = MetricsSnapshot {
+            wall_s: 2.0,
+            workers: 4,
+            variants: vec![v],
+            fleet,
+        };
+        let j = snap.to_json();
+        assert_eq!(j.get("workers").unwrap().as_usize().unwrap(), 4);
+        let vars = j.get("variants").unwrap().as_arr().unwrap();
+        assert_eq!(vars.len(), 1);
+        assert_eq!(vars[0].get("completed").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            j.get("fleet").unwrap().get("completed").unwrap().as_usize(),
+            Some(1)
+        );
+        // Round-trips through the in-tree parser.
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed, j);
+        let text = snap.render();
+        assert!(text.contains("net:base"));
+        assert!(text.contains("fleet: workers=4"));
+    }
+
+    #[test]
+    fn fleet_rollup_sums_counters() {
+        let mk = |completed: u64, rejected: u64| VariantSnapshot {
+            key: "k".into(),
+            net: "n".into(),
+            backend: "native".into(),
+            requests: completed + rejected,
+            completed,
+            rejected,
+            batches: 1,
+            padded_slots: 0,
+            mean_batch: 1.0,
+            queued: 0,
+            throughput_rps: 0.0,
+            latency: LatencyStats::from_summary(&Summary::new()),
+        };
+        let f = FleetSnapshot::rollup(
+            &[mk(10, 2), mk(5, 1)],
+            Duration::from_secs(1),
+            &[(100.0, 1.0), (200.0, 1.0), (300.0, 1.0)],
+        );
+        assert_eq!(f.completed, 15);
+        assert_eq!(f.rejected, 3);
+        assert_eq!(f.requests, 18);
+        assert_eq!(f.latency.p50_us, 200.0);
+        assert_eq!(f.latency.max_us, 300.0);
+    }
+
+    #[test]
+    fn weighted_percentiles_respect_traffic_share() {
+        // A hot variant's saturated reservoir: 4 retained samples at
+        // 100µs each standing for 250 requests, next to a cold variant's
+        // 4 samples at 10ms standing for 1 request each. True fleet p50
+        // is 100µs; an unweighted merge would report the 10ms side.
+        let pairs: Vec<(f64, f64)> = std::iter::repeat((100.0, 250.0))
+            .take(4)
+            .chain(std::iter::repeat((10_000.0, 1.0)).take(4))
+            .collect();
+        let l = LatencyStats::from_weighted(&pairs);
+        assert_eq!(l.p50_us, 100.0);
+        assert_eq!(l.p95_us, 100.0);
+        assert_eq!(l.max_us, 10_000.0);
+        assert_eq!(l.samples, 8);
+        // Degenerate inputs stay sane.
+        assert_eq!(LatencyStats::from_weighted(&[]).samples, 0);
+        assert_eq!(LatencyStats::from_weighted(&[(5.0, 1.0)]).p99_us, 5.0);
     }
 }

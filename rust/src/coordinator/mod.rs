@@ -1,18 +1,29 @@
 //! Inference coordinator (Layer 3 request path).
 //!
-//! The paper's contribution lives in the quantizer + hardware, so the
-//! coordinator is the thin-but-real serving layer the system prompt's
-//! architecture requires: a deadline-driven dynamic batcher in front of a
-//! pluggable execution [`crate::backend::Backend`] (the native integer
-//! engine or PJRT executables), with model-variant routing (baseline /
-//! DLIQ / MIP2Q side by side) and latency/throughput metrics. Python is
-//! never on this path; threads + channels (tokio is not in the vendored
-//! closure — see Cargo.toml).
+//! The paper's contribution lives in the quantizer + hardware; this is
+//! the serving layer that mirrors the DPU's ability to host many (net,
+//! method, p) precision points side by side. The center of the API is
+//! the fleet-level [`Engine`]: ONE shared worker pool serves every
+//! registered [`Variant`] (baseline / DLIQ / MIP2Q concurrently), each
+//! variant owning a bounded queue and a deadline-driven [`BatchPolicy`],
+//! with a deficit-round-robin scheduler handing freed workers the next
+//! flushable batch so no variant can starve the others. Submission is
+//! handle-based ([`VariantHandle::submit`] → [`Ticket`] or typed
+//! [`SubmitError`]) and metrics are typed ([`MetricsSnapshot`], JSON-
+//! serializable via `util/json`). Python is never on this path; threads
+//! + channels (tokio is not in the vendored closure — see Cargo.toml).
+//!
+//! [`Coordinator`] remains as a thin single-variant shim over the
+//! engine for one release.
 
 pub mod batcher;
+pub mod engine;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
+pub use batcher::BatchPolicy;
+pub use engine::{Engine, EngineOptions, InferReply, SubmitError, Ticket, VariantHandle};
+pub use metrics::{FleetSnapshot, LatencyStats, MetricsSnapshot, VariantSnapshot};
 pub use router::{Router, Variant};
-pub use server::{Coordinator, CoordinatorOptions, InferReply};
+pub use server::{Coordinator, CoordinatorOptions};

@@ -1,45 +1,34 @@
-//! The serving loop: request intake → dynamic batcher → backend workers.
+//! Single-variant compatibility shim over the multi-variant [`Engine`].
 //!
-//! One batcher thread owns the queue and applies [`BatchPolicy`]; worker
-//! threads execute flushed batches on the variant's [`crate::backend::Backend`]
-//! (PJRT executables or the native integer engine) and send per-request
-//! replies. `Coordinator::submit` is the client API (used by `strum
-//! serve`, `examples/serve_infer.rs`, and the integration tests); it
-//! validates the image size up front so a malformed request gets an error
-//! reply instead of silently truncated/zero-padded pixels.
+//! `Coordinator` predates the fleet-level engine: it served exactly one
+//! variant with a dedicated batcher + worker pool. It is kept for one
+//! release as a thin wrapper — `start` boots a private [`Engine`] with
+//! one registered variant, `submit` forwards to the engine's handle-based
+//! API (returning the typed [`Ticket`]/[`SubmitError`] pair instead of
+//! the old raw `mpsc::Receiver`), and metrics come back as the typed
+//! [`MetricsSnapshot`]. New code should use [`Engine`] directly and
+//! register all variants on one shared pool.
+//!
+//! [`Ticket`]: super::engine::Ticket
+//! [`SubmitError`]: super::engine::SubmitError
+//! [`MetricsSnapshot`]: super::metrics::MetricsSnapshot
 
-use super::batcher::BatchPolicy;
-use super::metrics::Metrics;
+use super::engine::{Engine, EngineOptions, SubmitError, Ticket, VariantHandle};
+use super::metrics::MetricsSnapshot;
 use super::router::Variant;
-use crate::runtime::executable::argmax_rows;
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
-/// Reply to one inference request.
-#[derive(Debug, Clone)]
-pub struct InferReply {
-    pub class: usize,
-    pub logits: Vec<f32>,
-    pub latency: Duration,
-    /// Batch the request rode in (occupancy, padded size).
-    pub batch: (usize, usize),
-}
-
-struct Request {
-    image: Vec<f32>,
-    tx: mpsc::Sender<crate::Result<InferReply>>,
-    enqueued: Instant,
-}
-
-/// Coordinator tunables.
+/// Coordinator tunables (single-variant subset of [`EngineOptions`]).
 #[derive(Debug, Clone)]
 pub struct CoordinatorOptions {
     pub max_wait: Duration,
     pub workers: usize,
     /// Cap the dynamic batch (None = variant's largest executable).
     pub max_batch: Option<usize>,
+    /// Bounded queue depth; submits beyond it get
+    /// [`SubmitError::QueueFull`].
+    pub queue_depth: usize,
 }
 
 impl Default for CoordinatorOptions {
@@ -48,176 +37,55 @@ impl Default for CoordinatorOptions {
             max_wait: Duration::from_millis(4),
             workers: 2,
             max_batch: None,
+            queue_depth: 1024,
         }
     }
 }
 
-struct Shared {
-    queue: Mutex<VecDeque<Request>>,
-    cv: Condvar,
-    stop: AtomicBool,
-    metrics: Metrics,
-}
-
-/// A running inference service for one variant.
+/// A running single-variant inference service (shim over [`Engine`]).
 pub struct Coordinator {
-    shared: Arc<Shared>,
-    threads: Vec<std::thread::JoinHandle<()>>,
+    engine: Engine,
+    handle: VariantHandle,
     pub variant: Arc<Variant>,
-    started: Instant,
 }
 
 impl Coordinator {
     pub fn start(variant: Arc<Variant>, opts: CoordinatorOptions) -> Coordinator {
-        let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
-            cv: Condvar::new(),
-            stop: AtomicBool::new(false),
-            metrics: Metrics::default(),
-        });
-        let policy = BatchPolicy {
-            // Never flush more than the backend's largest batch shape —
-            // a user-set cap above it would overflow the padded buffer.
-            max_batch: opts
-                .max_batch
-                .unwrap_or(usize::MAX)
-                .min(variant.max_batch()),
+        let engine = Engine::start(EngineOptions {
+            workers: opts.workers,
+            queue_depth: opts.queue_depth,
             max_wait: opts.max_wait,
-        };
-        // Worker pool consumes flushed batches.
-        let (batch_tx, batch_rx) = mpsc::channel::<Vec<Request>>();
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
-        let mut threads = Vec::new();
-        for _ in 0..opts.workers.max(1) {
-            let rx = batch_rx.clone();
-            let v = variant.clone();
-            let sh = shared.clone();
-            threads.push(std::thread::spawn(move || loop {
-                let batch = {
-                    let guard = rx.lock().unwrap();
-                    match guard.recv_timeout(Duration::from_millis(50)) {
-                        Ok(b) => b,
-                        Err(mpsc::RecvTimeoutError::Timeout) => {
-                            if sh.stop.load(Ordering::Relaxed) {
-                                return;
-                            }
-                            continue;
-                        }
-                        Err(mpsc::RecvTimeoutError::Disconnected) => return,
-                    }
-                };
-                execute_batch(&v, &sh, batch);
-            }));
-        }
-        // Batcher thread owns the queue.
-        {
-            let sh = shared.clone();
-            let v = variant.clone();
-            threads.push(std::thread::spawn(move || loop {
-                let mut q = sh.queue.lock().unwrap();
-                loop {
-                    if sh.stop.load(Ordering::Relaxed) && q.is_empty() {
-                        return;
-                    }
-                    let now = Instant::now();
-                    let oldest = q.front().map(|r| r.enqueued);
-                    let take = policy.decide(q.len(), oldest, now);
-                    if take > 0 {
-                        let batch: Vec<Request> = q.drain(..take).collect();
-                        drop(q);
-                        let _ = batch_tx.send(batch);
-                        let _ = v; // variant kept alive for the policy's lifetime
-                        break;
-                    }
-                    let nap = policy.nap(oldest, now);
-                    let (guard, _) = sh.cv.wait_timeout(q, nap.max(Duration::from_micros(200))).unwrap();
-                    q = guard;
-                }
-            }));
-        }
-        Coordinator {
-            shared,
-            threads,
-            variant,
-            started: Instant::now(),
-        }
-    }
-
-    /// Submits one image; returns the reply channel. Requests whose image
-    /// is not exactly `img·img·3` floats are rejected with an error reply
-    /// instead of being silently truncated or zero-padded downstream.
-    pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<crate::Result<InferReply>> {
-        let (tx, rx) = mpsc::channel();
-        let px = self.variant.image_len();
-        if image.len() != px {
-            let _ = tx.send(Err(anyhow::anyhow!(
-                "image has {} floats, expected {} ({}x{}x3) for variant {}",
-                image.len(),
-                px,
-                self.variant.img,
-                self.variant.img,
-                self.variant.key
-            )));
-            return rx;
-        }
-        self.shared.metrics.record_request();
-        self.shared.queue.lock().unwrap().push_back(Request {
-            image,
-            tx,
-            enqueued: Instant::now(),
+            max_batch: opts.max_batch,
+            quantum: 0,
         });
-        self.shared.cv.notify_all();
-        rx
+        let handle = engine
+            .register(variant.clone())
+            .expect("fresh engine accepts the first variant");
+        Coordinator {
+            engine,
+            handle,
+            variant,
+        }
     }
 
-    pub fn metrics_report(&self) -> String {
-        self.shared.metrics.report(self.started.elapsed())
+    /// Submits one image; returns a [`Ticket`] or a typed refusal
+    /// (`BadImage` for wrong-sized images, `QueueFull` backpressure,
+    /// `ShuttingDown` after shutdown — the old API enqueued forever).
+    pub fn submit(&self, image: Vec<f32>) -> Result<Ticket, SubmitError> {
+        self.handle.submit(image)
+    }
+
+    /// Typed metrics snapshot (single-variant fleet).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.engine.metrics()
     }
 
     pub fn latency_summary(&self) -> crate::util::stats::Summary {
-        self.shared.metrics.latency_summary()
+        self.engine.latency_summary(self.handle.key())
     }
 
     /// Stops the service after draining the queue.
-    pub fn shutdown(mut self) {
-        self.shared.stop.store(true, Ordering::Relaxed);
-        self.shared.cv.notify_all();
-        for t in self.threads.drain(..) {
-            let _ = t.join();
-        }
-    }
-}
-
-fn execute_batch(v: &Variant, sh: &Shared, batch: Vec<Request>) {
-    let n = batch.len();
-    let bsz = v.pick_batch(n);
-    sh.metrics.record_batch(n, bsz);
-    let px = v.image_len();
-    let mut images = vec![0f32; bsz * px];
-    for (i, r) in batch.iter().enumerate() {
-        // Sizes are validated at submit; a mismatch here is a bug.
-        debug_assert_eq!(r.image.len(), px);
-        images[i * px..(i + 1) * px].copy_from_slice(&r.image);
-    }
-    match v.backend.infer_batch(images, bsz) {
-        Ok(logits) => {
-            let preds = argmax_rows(&logits, v.classes);
-            for (i, r) in batch.into_iter().enumerate() {
-                let latency = r.enqueued.elapsed();
-                sh.metrics.record_done(latency);
-                let _ = r.tx.send(Ok(InferReply {
-                    class: preds[i],
-                    logits: logits[i * v.classes..(i + 1) * v.classes].to_vec(),
-                    latency,
-                    batch: (n, bsz),
-                }));
-            }
-        }
-        Err(e) => {
-            let msg = format!("{}", e);
-            for r in batch {
-                let _ = r.tx.send(Err(anyhow::anyhow!("batch failed: {}", msg)));
-            }
-        }
+    pub fn shutdown(self) {
+        self.engine.shutdown()
     }
 }

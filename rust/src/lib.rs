@@ -11,8 +11,8 @@
 //! * **Layer 2** — JAX models (`python/compile/model.py`): mini-CNN zoo
 //!   forward passes with weights-as-arguments, lowered AOT to HLO text.
 //! * **Layer 3** — this crate: quantizer, weight codec, FlexNN cycle
-//!   simulator, gate-level hardware cost model, a batching inference
-//!   coordinator, and two execution backends: the **native integer
+//!   simulator, gate-level hardware cost model, a multi-variant serving
+//!   engine, and two execution backends: the **native integer
 //!   engine** (default — dual-bank StruM GEMM executed straight from the
 //!   §IV-D encoded weights, no XLA anywhere) and the optional PJRT
 //!   runtime (`pjrt` cargo feature). Python is never on the request path.
@@ -29,7 +29,7 @@
 //! | [`backend`] | §IV-D.2, §V-B | native execution engine: int8 + dual-bank StruM GEMM, im2col conv, graph walk, batch parallelism; `Backend` trait + PJRT adapter |
 //! | [`backend::kernels`] | §IV-C.1, §V-B | SIMD kernel layer: AVX2/SSE2 int8 micro-kernels with bit-exact scalar fallback (`STRUM_KERNEL` pins a path), cache-blocked GEMM driver, activation-sparsity row skip, scratch arenas, fused requantize/ReLU/pool/quantize epilogues |
 //! | [`runtime`] | — | PJRT CPU client wrapper (feature `pjrt`): load HLO text, compile, execute |
-//! | [`coordinator`] | — | batching inference service over any `Backend` |
+//! | [`coordinator`] | — | multi-variant serving engine: one shared worker pool, per-variant bounded queues + deficit-round-robin batch scheduling, handle-based submit (`Ticket`/`SubmitError`), typed `MetricsSnapshot` |
 //! | [`report`] | §VII | regenerators for Table I and Figs. 10–13 + ablations |
 //! | [`util`] | — | in-tree substrates: JSON, PRNG, stats, CLI, threadpool, bench harness |
 //!
@@ -39,9 +39,13 @@
 //! [`backend::Backend`]: `infer_batch(images, batch)` maps a row-major
 //! `[batch, img, img, 3]` buffer to `[batch, classes]` logits, is safe to
 //! call from concurrent worker threads, and advertises its preferred
-//! batch shapes via `batch_sizes()`/`pick_batch(n)`. `strum serve
-//! --backend native` serves the zoo with no Python, HLO artifact, or XLA
-//! dependency in the loop.
+//! batch shapes via `batch_sizes()`/`pick_batch(n)`. Registered variants
+//! are served by the fleet-level [`coordinator::Engine`]: one shared
+//! worker pool hosts baseline/DLIQ/MIP2Q side by side (mirroring the
+//! DPU's per-layer precision switching), `register`/`retire` hot-add and
+//! drain variants, and `strum serve --backend native --variants
+//! base,dliq,mip2q` serves the whole fleet with no Python, HLO artifact,
+//! or XLA dependency in the loop.
 
 pub mod backend;
 pub mod coordinator;

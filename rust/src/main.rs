@@ -6,7 +6,7 @@
 //!   sim        Cycle-simulate a network on the FlexNN DPU model
 //!   hw         Hardware cost model summary (PE variants)
 //!   report     Regenerate paper artifacts: table1 | fig10 | fig11 | fig12 | fig13 | ablation | all
-//!   serve      Run the batching inference coordinator under synthetic load
+//!   serve      Run the multi-variant serving engine under synthetic load
 //!   selfcheck  Runtime round-trip (HLO load/execute) sanity check
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), plus per-command
@@ -16,8 +16,9 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
+use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
 use strum_dpu::backend::BackendKind;
-use strum_dpu::coordinator::{Coordinator, CoordinatorOptions, Router};
+use strum_dpu::coordinator::{Engine, EngineOptions, Router, SubmitError};
 use strum_dpu::encode::{decode_layer, encode_layer};
 use strum_dpu::encode::compression::ratio_for;
 use strum_dpu::hw::power::Activity;
@@ -96,7 +97,13 @@ fn print_help() {
          common: --artifacts DIR --net NAME --method {{baseline|sparsity|dliq-qN|mip2q-LN}} --p F\n\
          eval:   strum eval --net N [--backend {{pjrt|native}}] [--limit N]\n\
          report: strum report <table1|fig10|fig11|fig12|fig13|ablation|all> [--limit N] [--out FILE]\n\
-         serve:  strum serve --net N --requests 2000 --rate 500 [--backend {{pjrt|native}}] [--max-wait-ms 4]"
+         serve:  strum serve --net N --variants base,dliq,mip2q --requests 2000 --rate 500\n\
+                 [--backend {{pjrt|native}}] [--workers N] [--queue-depth N] [--max-wait-ms 4]\n\
+                 [--max-batch N] [--metrics-out FILE]\n\
+                 one shared worker pool serves every variant; variant specs are\n\
+                 base|dliq|mip2q aliases or method names, with optional @p (e.g. mip2q-L5@0.25);\n\
+                 without --variants the single --method/--p point is served.\n\
+                 With --backend native and no artifacts, a synthetic net + dataset is served."
     );
 }
 
@@ -324,14 +331,59 @@ fn cmd_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parses one `--variants` token: a `base|dliq|mip2q` alias or a full
+/// method name (`mip2q-L5`), with an optional `@p` suffix overriding the
+/// low-set fraction (e.g. `mip2q-L5@0.25`).
+fn parse_variant_spec(token: &str) -> Result<(Method, f64)> {
+    let (name, p_str) = match token.split_once('@') {
+        Some((a, b)) => (a, Some(b)),
+        None => (token, None),
+    };
+    let (method, default_p) = match name {
+        "base" | "baseline" => (Method::Baseline, 0.0),
+        "dliq" => (Method::Dliq { q: 4 }, 0.5),
+        "mip2q" => (Method::Mip2q { l_max: 7 }, 0.5),
+        other => (
+            Method::parse(other).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown variant '{}' (base|dliq|mip2q or a method name like mip2q-L5)",
+                    other
+                )
+            })?,
+            0.5,
+        ),
+    };
+    let p = match p_str {
+        Some(s) => s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad p '{}' in variant '{}'", s, token))?,
+        None => default_p,
+    };
+    Ok((method, p))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let net = args.str("net", zoo::SWEEP_NET);
-    let method = parse_method(args)?;
-    let p = args.f64("p", 0.5);
     let n_requests = args.usize("requests", 1000);
     let rate = args.f64("rate", 400.0);
     let backend = parse_backend(args)?;
+    // The variant fleet: --variants base,dliq,mip2q, else the single
+    // --method/--p point (old single-variant CLI still works).
+    let specs: Vec<(Method, f64)> = match args.opt_str("variants") {
+        Some(list) => list
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(parse_variant_spec)
+            .collect::<Result<_>>()?,
+        None => {
+            let method = parse_method(args)?;
+            vec![(method, args.f64("p", 0.5))]
+        }
+    };
+    anyhow::ensure!(!specs.is_empty(), "--variants is empty");
+
     let mut router = match backend {
         BackendKind::Pjrt => {
             let rt = Arc::new(Runtime::cpu()?);
@@ -343,23 +395,70 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Router::native()
         }
     };
-    let key = format!("{}:{}:p{}:{}", net, method.name(), p, backend.name());
-    let cfg = EvalConfig::paper(method, p);
-    let variant = router.register_kind(&key, &dir, &net, &cfg, backend)?;
-    println!("registered {} (batches: {:?})", key, variant.batches());
-    let coord = Coordinator::start(
-        variant,
-        CoordinatorOptions {
-            max_wait: Duration::from_millis(args.usize("max-wait-ms", 4) as u64),
-            workers: args.usize("workers", 2),
-            max_batch: args.opt_str("max-batch").and_then(|s| s.parse().ok()),
-        },
+
+    // Weights are loaded once and shared across the native variants
+    // (PJRT's register_kind stages its own artifacts per variant); the
+    // native backend falls back to a synthetic calibrated net and
+    // random dataset when artifacts are absent (the CI smoke path — no
+    // files needed at all).
+    let (weights, data): (Option<NetWeights>, DataSet) = match backend {
+        BackendKind::Pjrt => (None, DataSet::load(&dir, "eval")?),
+        BackendKind::Native => {
+            let loaded = NetWeights::load(&dir, &net)
+                .and_then(|w| DataSet::load(&dir, "eval").map(|d| (w, d)));
+            match loaded {
+                Ok((w, d)) => (Some(w), d),
+                Err(e) => {
+                    let (img, classes, n) = (16usize, 10usize, 64usize);
+                    println!(
+                        "artifacts unavailable ({:#}); serving a synthetic {} ({}x{}x3, {} classes)",
+                        e, net, img, img, classes
+                    );
+                    let mut w = synth_net_weights(&net, img, classes, 11)?;
+                    let mut rng = Rng::new(0xCA11B);
+                    let px = img * img * 3;
+                    let calib: Vec<f32> = (0..4 * px).map(|_| rng.f32()).collect();
+                    w.manifest.act_scales = calibrate_act_scales(&w, &calib, 4)?;
+                    let images: Vec<f32> = (0..n * px).map(|_| rng.f32()).collect();
+                    let labels: Vec<i32> =
+                        (0..n).map(|_| rng.range(0, classes) as i32).collect();
+                    (Some(w), DataSet { images, labels, n, img })
+                }
+            }
+        }
+    };
+
+    // ONE engine, one shared worker pool, every variant registered on it.
+    let engine = Engine::start(EngineOptions {
+        workers: args.usize("workers", 2),
+        queue_depth: args.usize("queue-depth", 1024),
+        max_wait: Duration::from_millis(args.usize("max-wait-ms", 4) as u64),
+        max_batch: args.opt_str("max-batch").and_then(|s| s.parse().ok()),
+        quantum: args.usize("quantum", 0),
+    });
+    let mut handles = Vec::new();
+    for &(method, p) in &specs {
+        let key = format!("{}:{}:p{}:{}", net, method.name(), p, backend.name());
+        let cfg = EvalConfig::paper(method, p);
+        let v = match &weights {
+            Some(w) => router.register_native_weights(&key, w, &cfg)?,
+            None => router.register_kind(&key, &dir, &net, &cfg, backend)?,
+        };
+        println!("registered {} (batches: {:?})", key, v.batches());
+        handles.push(engine.register(v)?);
+    }
+    println!(
+        "serving {} variant(s) on {} shared workers",
+        handles.len(),
+        engine.worker_count()
     );
-    // Synthetic open-loop load: Poisson arrivals at `rate` req/s.
-    let data = DataSet::load(&dir, "eval")?;
-    let mut rng = Rng::new(7);
+
+    // Synthetic open-loop load: Poisson arrivals at `rate` req/s,
+    // round-robin across the variant fleet.
     let px = data.img * data.img * 3;
+    let mut rng = Rng::new(7);
     let mut pending = Vec::new();
+    let mut shed = 0usize;
     let t0 = std::time::Instant::now();
     let mut next = 0.0f64;
     for i in 0..n_requests {
@@ -369,23 +468,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
             std::thread::sleep(d);
         }
         let idx = i % data.n;
-        pending.push((idx, coord.submit(data.images[idx * px..(idx + 1) * px].to_vec())));
-    }
-    let mut correct = 0usize;
-    for (idx, rx) in pending {
-        let reply = rx
-            .recv_timeout(Duration::from_secs(30))
-            .map_err(|_| anyhow::anyhow!("reply timeout"))??;
-        if reply.class as i32 == data.labels[idx] {
-            correct += 1;
+        let vi = i % handles.len();
+        match handles[vi].submit(data.images[idx * px..(idx + 1) * px].to_vec()) {
+            Ok(ticket) => pending.push((vi, idx, ticket)),
+            // Bounded queues shed load instead of buffering unboundedly.
+            Err(SubmitError::QueueFull { .. }) => shed += 1,
+            Err(e) => return Err(anyhow::anyhow!(e)),
         }
     }
-    println!("{}", coord.metrics_report());
-    println!(
-        "accuracy over served requests: {:.2}%",
-        correct as f64 / n_requests as f64 * 100.0
-    );
-    coord.shutdown();
+    let mut served = vec![0usize; handles.len()];
+    let mut correct = vec![0usize; handles.len()];
+    for (vi, idx, ticket) in pending {
+        let reply = ticket.wait_deadline(Duration::from_secs(30))?;
+        served[vi] += 1;
+        if reply.class as i32 == data.labels[idx] {
+            correct[vi] += 1;
+        }
+    }
+    let snapshot = engine.metrics();
+    println!("{}", snapshot.render());
+    for (vi, h) in handles.iter().enumerate() {
+        if served[vi] > 0 {
+            println!(
+                "{}: accuracy over {} served requests: {:.2}%",
+                h.key(),
+                served[vi],
+                correct[vi] as f64 / served[vi] as f64 * 100.0
+            );
+        }
+    }
+    if shed > 0 {
+        println!("{} requests shed by QueueFull backpressure", shed);
+    }
+    if let Some(path) = args.opt_str("metrics-out") {
+        std::fs::write(&path, snapshot.to_json().to_string_pretty())?;
+        println!("wrote {}", path);
+    }
+    // Clean-shutdown contract the CI smoke step relies on.
+    anyhow::ensure!(snapshot.fleet.completed > 0, "no requests completed");
+    engine.shutdown();
     Ok(())
 }
 

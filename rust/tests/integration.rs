@@ -1,6 +1,8 @@
 //! Cross-module integration tests that need no artifacts: quantizer →
 //! codec → simulator → hardware-model pipelines on synthetic layers, and
-//! the coordinator's batching logic under a mock-free load (policy level).
+//! the serving engine's scheduling/backpressure/shutdown contracts
+//! exercised against a gated mock backend (deterministic, no model in
+//! the loop).
 
 use strum_dpu::encode::compression::ratio_for;
 use strum_dpu::encode::{decode_layer, encode_layer};
@@ -162,6 +164,295 @@ fn memory_accounting_matches_eq1() {
     let enc = encode_layer(&s);
     assert!((enc.measured_ratio() - ratio_for(Method::Dliq { q: 4 }, 0.5)).abs() < 1e-12);
     assert!((enc.measured_ratio() - 0.875).abs() < 1e-12);
+}
+
+// ---------------------------------------------------------------------------
+// Serving engine contracts, driven through a gated mock backend: the gate
+// holds `infer_batch` so queue states can be staged deterministically, and
+// the execution log exposes the deficit-round-robin order.
+// ---------------------------------------------------------------------------
+
+mod engine_contracts {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::time::Duration;
+    use strum_dpu::backend::{Backend, BackendKind};
+    use strum_dpu::coordinator::{
+        BatchPolicy, Engine, EngineOptions, SubmitError, Variant,
+    };
+
+    /// Backend whose `infer_batch` blocks until `gate` opens, logging the
+    /// variant key of each executed batch. The reply class is the first
+    /// pixel of each image, so correctness is checkable end to end.
+    struct MockBackend {
+        key: String,
+        img: usize,
+        classes: usize,
+        sizes: Vec<usize>,
+        gate: Arc<AtomicBool>,
+        log: Arc<Mutex<Vec<String>>>,
+    }
+
+    impl Backend for MockBackend {
+        fn kind(&self) -> BackendKind {
+            BackendKind::Native
+        }
+        fn net(&self) -> &str {
+            "mock"
+        }
+        fn classes(&self) -> usize {
+            self.classes
+        }
+        fn img(&self) -> usize {
+            self.img
+        }
+        fn batch_sizes(&self) -> &[usize] {
+            &self.sizes
+        }
+        fn pick_batch(&self, n: usize) -> usize {
+            n.max(1)
+        }
+        fn infer_batch(&self, images: Vec<f32>, batch: usize) -> anyhow::Result<Vec<f32>> {
+            while !self.gate.load(Ordering::Acquire) {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            self.log.lock().unwrap().push(self.key.clone());
+            let px = self.img * self.img * 3;
+            let mut out = vec![0f32; batch * self.classes];
+            for b in 0..batch {
+                let class = (images[b * px] as usize).min(self.classes - 1);
+                out[b * self.classes + class] = 1.0;
+            }
+            Ok(out)
+        }
+    }
+
+    const IMG: usize = 2;
+    const CLASSES: usize = 4;
+
+    fn mock_variant(
+        key: &str,
+        gate: Arc<AtomicBool>,
+        log: Arc<Mutex<Vec<String>>>,
+    ) -> Arc<Variant> {
+        Arc::new(Variant {
+            key: key.to_string(),
+            net: "mock".to_string(),
+            classes: CLASSES,
+            img: IMG,
+            backend: Arc::new(MockBackend {
+                key: key.to_string(),
+                img: IMG,
+                classes: CLASSES,
+                sizes: vec![1, 2, 4, 8, 16],
+                gate,
+                log,
+            }),
+        })
+    }
+
+    /// Image whose first pixel encodes the expected reply class.
+    fn image_for(class: usize) -> Vec<f32> {
+        let mut v = vec![0f32; IMG * IMG * 3];
+        v[0] = class as f32;
+        v
+    }
+
+    /// Waits until the engine has dispatched `n` batches for `key`
+    /// (i.e. a worker is inside the gated `infer_batch`).
+    fn wait_batches(engine: &Engine, key: &str, n: u64) {
+        for _ in 0..5000 {
+            let snap = engine.metrics();
+            if snap
+                .variants
+                .iter()
+                .find(|v| v.key == key)
+                .map(|v| v.batches >= n)
+                .unwrap_or(false)
+            {
+                return;
+            }
+            std::thread::sleep(Duration::from_micros(500));
+        }
+        panic!("variant {} never reached {} dispatched batches", key, n);
+    }
+
+    /// Per-request flush policy: every submit is its own batch, so the
+    /// execution log shows exactly how the scheduler interleaves.
+    fn one_by_one() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+        }
+    }
+
+    /// A hot variant with a deep backlog cannot starve a cold one: after
+    /// the round-robin pass the cold variant's requests execute among
+    /// the first few batches, not after the hot queue drains.
+    #[test]
+    fn drr_scheduler_prevents_starvation() {
+        let gate = Arc::new(AtomicBool::new(false));
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let engine = Engine::start(EngineOptions {
+            workers: 1,
+            ..EngineOptions::default()
+        });
+        let hot = engine
+            .register_with(mock_variant("hot", gate.clone(), log.clone()), one_by_one(), 64)
+            .unwrap();
+        let cold = engine
+            .register_with(mock_variant("cold", gate.clone(), log.clone()), one_by_one(), 64)
+            .unwrap();
+
+        // First hot request is picked and blocks on the gate; 18 more
+        // hot requests plus 2 cold ones pile up behind it.
+        let mut tickets = vec![hot.submit(image_for(1)).unwrap()];
+        wait_batches(&engine, "hot", 1);
+        for _ in 0..18 {
+            tickets.push(hot.submit(image_for(1)).unwrap());
+        }
+        let cold_tickets: Vec<_> = (0..2).map(|_| cold.submit(image_for(2)).unwrap()).collect();
+        gate.store(true, Ordering::Release);
+
+        for t in tickets {
+            let r = t.wait_deadline(Duration::from_secs(10)).unwrap();
+            assert_eq!(r.class, 1);
+        }
+        for t in cold_tickets {
+            let r = t.wait_deadline(Duration::from_secs(10)).unwrap();
+            assert_eq!(r.class, 2);
+        }
+        let order = log.lock().unwrap().clone();
+        assert_eq!(order.len(), 21);
+        let last_cold = order.iter().rposition(|k| k == "cold").unwrap();
+        assert!(
+            last_cold <= 6,
+            "cold starved: served at positions {:?}",
+            order
+                .iter()
+                .enumerate()
+                .filter(|(_, k)| *k == "cold")
+                .map(|(i, _)| i)
+                .collect::<Vec<_>>()
+        );
+        engine.shutdown();
+    }
+
+    /// Bounded queues refuse with `QueueFull` at the configured depth
+    /// instead of buffering unboundedly; queued work still completes.
+    #[test]
+    fn queue_full_backpressure() {
+        let gate = Arc::new(AtomicBool::new(false));
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let engine = Engine::start(EngineOptions {
+            workers: 1,
+            ..EngineOptions::default()
+        });
+        let h = engine
+            .register_with(mock_variant("v", gate.clone(), log), one_by_one(), 2)
+            .unwrap();
+        // Worker takes the first request and blocks; two fit the queue.
+        let t0 = h.submit(image_for(0)).unwrap();
+        wait_batches(&engine, "v", 1);
+        let t1 = h.submit(image_for(1)).unwrap();
+        let t2 = h.submit(image_for(2)).unwrap();
+        // Depth 2 reached: the next submit is refused, typed.
+        let err = h.submit(image_for(3)).unwrap_err();
+        assert!(
+            matches!(err, SubmitError::QueueFull { depth: 2, .. }),
+            "unexpected error {:?}",
+            err
+        );
+        let snap = engine.metrics();
+        assert_eq!(snap.variants[0].rejected, 1);
+        assert_eq!(snap.variants[0].queued, 2);
+        // Backpressure sheds load; accepted work is never dropped.
+        gate.store(true, Ordering::Release);
+        for (t, want) in [(t0, 0), (t1, 1), (t2, 2)] {
+            let r = t.wait_deadline(Duration::from_secs(10)).unwrap();
+            assert_eq!(r.class, want);
+        }
+        engine.shutdown();
+    }
+
+    /// Submitting after shutdown returns `ShuttingDown` — the old API
+    /// enqueued into a dead pool and the caller hung forever.
+    #[test]
+    fn submit_after_shutdown_returns_shutting_down() {
+        let gate = Arc::new(AtomicBool::new(true));
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let engine = Engine::start(EngineOptions {
+            workers: 1,
+            ..EngineOptions::default()
+        });
+        let h = engine
+            .register_with(mock_variant("v", gate, log), one_by_one(), 8)
+            .unwrap();
+        let t = h.submit(image_for(3)).unwrap();
+        assert_eq!(t.wait_deadline(Duration::from_secs(10)).unwrap().class, 3);
+        engine.shutdown();
+        // The handle outlives the engine; it must fail fast, not hang.
+        let err = h.submit(image_for(0)).unwrap_err();
+        assert_eq!(err, SubmitError::ShuttingDown);
+    }
+
+    /// Routing misses and malformed images are typed errors too.
+    #[test]
+    fn submit_errors_are_typed() {
+        let gate = Arc::new(AtomicBool::new(true));
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let engine = Engine::start(EngineOptions {
+            workers: 1,
+            ..EngineOptions::default()
+        });
+        engine
+            .register_with(mock_variant("v", gate, log), one_by_one(), 8)
+            .unwrap();
+        assert!(matches!(
+            engine.submit("nope", image_for(0)).unwrap_err(),
+            SubmitError::UnknownVariant { .. }
+        ));
+        assert!(matches!(
+            engine.submit("v", vec![0.0; 5]).unwrap_err(),
+            SubmitError::BadImage { expected, got: 5, .. } if expected == IMG * IMG * 3
+        ));
+        // Duplicate registration is refused at the engine API.
+        let gate2 = Arc::new(AtomicBool::new(true));
+        let log2 = Arc::new(Mutex::new(Vec::new()));
+        assert!(engine
+            .register_with(mock_variant("v", gate2, log2), one_by_one(), 8)
+            .is_err());
+        engine.shutdown();
+    }
+
+    /// Shutdown drains queued requests (deadlines waived) before the
+    /// workers exit — nothing accepted is ever dropped.
+    #[test]
+    fn shutdown_drains_pending_queue() {
+        let gate = Arc::new(AtomicBool::new(false));
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let engine = Engine::start(EngineOptions {
+            workers: 1,
+            ..EngineOptions::default()
+        });
+        // A long deadline + big batch cap: nothing flushes on its own.
+        let lazy = BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_secs(60),
+        };
+        let h = engine
+            .register_with(mock_variant("v", gate.clone(), log), lazy, 16)
+            .unwrap();
+        let tickets: Vec<_> = (0..5).map(|i| h.submit(image_for(i % 4)).unwrap()).collect();
+        gate.store(true, Ordering::Release);
+        // Shutdown must flush the still-waiting batch promptly rather
+        // than waiting out the 60 s deadline.
+        engine.shutdown();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let r = t.wait_deadline(Duration::from_secs(10)).unwrap();
+            assert_eq!(r.class, i % 4);
+        }
+    }
 }
 
 /// Dense analytic activity and simulated dense activity agree on the

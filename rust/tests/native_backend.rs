@@ -8,7 +8,9 @@
 use std::time::Duration;
 use strum_dpu::backend::graph::{calibrate_act_scales, forward_f32_reference, synth_net_weights};
 use strum_dpu::backend::{Backend, BackendKind, NativeBackend, NetworkPlan};
-use strum_dpu::coordinator::{Coordinator, CoordinatorOptions, Router};
+use strum_dpu::coordinator::{
+    Coordinator, CoordinatorOptions, Engine, EngineOptions, Router, SubmitError,
+};
 use strum_dpu::model::eval::{evaluate_native_weights, transform_network, EvalConfig};
 use strum_dpu::model::import::{DataSet, NetWeights};
 use strum_dpu::model::zoo;
@@ -157,26 +159,29 @@ fn native_coordinator_serves_end_to_end() {
             max_wait: Duration::from_millis(2),
             workers: 2,
             max_batch: Some(8),
+            ..CoordinatorOptions::default()
         },
     );
     let px = img * img * 3;
     let n = 24usize;
     let images = random_images(n, img, 5);
     let pend: Vec<_> = (0..n)
-        .map(|i| coord.submit(images[i * px..(i + 1) * px].to_vec()))
+        .map(|i| coord.submit(images[i * px..(i + 1) * px].to_vec()).unwrap())
         .collect();
-    for (i, rx) in pend.into_iter().enumerate() {
-        let reply = rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
+    for (i, ticket) in pend.into_iter().enumerate() {
+        let reply = ticket.wait_deadline(Duration::from_secs(60)).unwrap();
         assert!(reply.batch.1 >= reply.batch.0, "padded >= occupancy");
         let direct = plan.forward_one(&images[i * px..(i + 1) * px]).unwrap();
         assert_eq!(reply.class, argmax(&direct), "request {}", i);
         assert_eq!(reply.logits.len(), classes);
     }
+    let snap = coord.metrics();
+    assert_eq!(snap.fleet.completed, n as u64);
     coord.shutdown();
 }
 
-/// Malformed requests get an error reply at submit time instead of the
-/// old silent truncate/zero-pad behaviour.
+/// Malformed requests get a typed `BadImage` error at submit time
+/// instead of the old silent truncate/zero-pad behaviour.
 #[test]
 fn submit_rejects_wrong_image_size() {
     let img = 16usize;
@@ -188,18 +193,155 @@ fn submit_rejects_wrong_image_size() {
     let mut router = Router::native();
     let v = router.register_native_weights("v", &weights, &cfg).unwrap();
     let coord = Coordinator::start(v, CoordinatorOptions::default());
-    // Too short and too long both bounce with an error reply.
+    // Too short and too long both bounce with a typed error.
     for bad in [7usize, img * img * 3 + 1] {
-        let rx = coord.submit(vec![0.5; bad]);
-        let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert!(reply.is_err(), "len {} should be rejected", bad);
-        let msg = format!("{}", reply.unwrap_err());
+        let err = coord.submit(vec![0.5; bad]).unwrap_err();
+        assert!(
+            matches!(err, SubmitError::BadImage { got, .. } if got == bad),
+            "len {}: unexpected error {:?}",
+            bad,
+            err
+        );
+        let msg = format!("{}", err);
         assert!(msg.contains("expected"), "unhelpful error: {}", msg);
     }
     // A well-formed request still succeeds.
-    let rx = coord.submit(vec![0.5; img * img * 3]);
-    assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().is_ok());
+    let ticket = coord.submit(vec![0.5; img * img * 3]).unwrap();
+    assert!(ticket.wait_deadline(Duration::from_secs(30)).is_ok());
     coord.shutdown();
+}
+
+/// The multi-variant acceptance test: ONE engine, one shared worker
+/// pool, three precision points (baseline / DLIQ / MIP2Q) of the same
+/// net served concurrently — every reply must equal the direct plan
+/// execution of ITS variant, and the whole fleet runs on `workers`
+/// threads (the old per-variant layout needed 3×(workers+1)).
+#[test]
+fn engine_serves_three_variants_on_one_pool() {
+    let img = 16usize;
+    let classes = 7usize;
+    let weights = calibrated_weights("mini_cnn_s", img, classes, 17);
+    let specs = [
+        ("base", Method::Baseline, 0.0),
+        ("dliq", Method::Dliq { q: 4 }, 0.5),
+        ("mip2q", Method::Mip2q { l_max: 7 }, 0.5),
+    ];
+    let mut router = Router::native();
+    let engine = Engine::start(EngineOptions {
+        workers: 2,
+        max_wait: Duration::from_millis(2),
+        max_batch: Some(8),
+        ..EngineOptions::default()
+    });
+    // One serving thread per worker, no per-variant batcher threads.
+    assert_eq!(engine.worker_count(), 2);
+    let mut handles = Vec::new();
+    let mut plans = Vec::new();
+    for (key, method, p) in specs {
+        let cfg = EvalConfig {
+            batch: 8,
+            ..EvalConfig::paper(method, p)
+        };
+        let transformed = transform_network(&weights, &cfg).unwrap();
+        plans.push(NetworkPlan::from_transformed(&weights, &transformed, true).unwrap());
+        let v = router.register_native_weights(key, &weights, &cfg).unwrap();
+        handles.push(engine.register(v).unwrap());
+    }
+    assert_eq!(engine.keys(), vec!["base", "dliq", "mip2q"]);
+
+    let px = img * img * 3;
+    let n = 30usize; // 10 per variant, interleaved
+    let images = random_images(n, img, 23);
+    let pend: Vec<_> = (0..n)
+        .map(|i| {
+            let vi = i % handles.len();
+            let t = handles[vi]
+                .submit(images[i * px..(i + 1) * px].to_vec())
+                .unwrap();
+            (vi, i, t)
+        })
+        .collect();
+    for (vi, i, ticket) in pend {
+        let reply = ticket.wait_deadline(Duration::from_secs(60)).unwrap();
+        let direct = plans[vi].forward_one(&images[i * px..(i + 1) * px]).unwrap();
+        assert_eq!(
+            reply.class,
+            argmax(&direct),
+            "request {} on variant {}",
+            i,
+            vi
+        );
+        assert_eq!(reply.logits.len(), classes);
+    }
+    // Typed metrics: per-variant rows sum into the fleet rollup.
+    let snap = engine.metrics();
+    assert_eq!(snap.workers, 2);
+    assert_eq!(snap.variants.len(), 3);
+    for v in &snap.variants {
+        assert_eq!(v.completed, 10, "variant {}", v.key);
+        assert_eq!(v.rejected, 0);
+        assert_eq!(v.queued, 0);
+    }
+    assert_eq!(snap.fleet.completed, 30);
+    // The snapshot serializes through the in-tree JSON layer.
+    let j = snap.to_json();
+    assert_eq!(
+        j.get("variants").unwrap().as_arr().unwrap().len(),
+        3
+    );
+    engine.shutdown();
+}
+
+/// Hot-retire: a drained variant's queued work still completes, the
+/// slot disappears, and the remaining variants keep serving.
+#[test]
+fn engine_retires_variant_while_serving() {
+    let img = 16usize;
+    let classes = 5usize;
+    let weights = calibrated_weights("mini_cnn_s", img, classes, 29);
+    let mut router = Router::native();
+    let engine = Engine::start(EngineOptions {
+        workers: 2,
+        max_wait: Duration::from_millis(1),
+        ..EngineOptions::default()
+    });
+    let cfg_a = EvalConfig::paper(Method::Baseline, 0.0);
+    let cfg_b = EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5);
+    let a = router.register_native_weights("a", &weights, &cfg_a).unwrap();
+    let b = router.register_native_weights("b", &weights, &cfg_b).unwrap();
+    let ha = engine.register(a).unwrap();
+    let hb = engine.register(b).unwrap();
+
+    let px = img * img * 3;
+    let images = random_images(8, img, 31);
+    let ta: Vec<_> = (0..4)
+        .map(|i| ha.submit(images[i * px..(i + 1) * px].to_vec()).unwrap())
+        .collect();
+    let tb: Vec<_> = (4..8)
+        .map(|i| hb.submit(images[i * px..(i + 1) * px].to_vec()).unwrap())
+        .collect();
+    // retire() blocks until a's queue is drained — its tickets all
+    // resolve successfully afterwards.
+    engine.retire("a").unwrap();
+    for t in ta {
+        assert!(t.wait_deadline(Duration::from_secs(30)).is_ok());
+    }
+    // The retired key is gone; the handle reports it.
+    assert_eq!(engine.keys(), vec!["b"]);
+    let err = ha.submit(images[..px].to_vec()).unwrap_err();
+    assert!(
+        matches!(err, SubmitError::UnknownVariant { .. }),
+        "unexpected error {:?}",
+        err
+    );
+    assert!(engine.retire("a").is_err());
+    // b keeps serving after the retire.
+    for t in tb {
+        assert!(t.wait_deadline(Duration::from_secs(30)).is_ok());
+    }
+    let t = hb.submit(images[..px].to_vec()).unwrap();
+    assert!(t.wait_deadline(Duration::from_secs(30)).is_ok());
+    engine.shutdown();
 }
 
 /// `evaluate_native` agrees with a hand-rolled reference evaluation on a

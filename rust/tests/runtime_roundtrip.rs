@@ -215,6 +215,7 @@ fn coordinator_serves_correctly() {
             max_wait: Duration::from_millis(2),
             workers: 2,
             max_batch: Some(16),
+            ..CoordinatorOptions::default()
         },
     );
     let data = DataSet::load(dir, "eval").unwrap();
@@ -223,12 +224,17 @@ fn coordinator_serves_correctly() {
     let pend: Vec<_> = (0..n)
         .map(|i| {
             let idx = i % data.n;
-            (idx, coord.submit(data.images[idx * px..(idx + 1) * px].to_vec()))
+            (
+                idx,
+                coord
+                    .submit(data.images[idx * px..(idx + 1) * px].to_vec())
+                    .unwrap(),
+            )
         })
         .collect();
     let mut correct = 0;
-    for (idx, rx) in pend {
-        let reply = rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
+    for (idx, ticket) in pend {
+        let reply = ticket.wait_deadline(Duration::from_secs(60)).unwrap();
         assert!(reply.batch.1 >= reply.batch.0, "padded >= occupancy");
         if reply.class as i32 == data.labels[idx] {
             correct += 1;
