@@ -4,11 +4,14 @@
 //! summary), PE datapath, the multi-variant serving engine (baseline /
 //! DLIQ / MIP2Q on one shared worker pool, per-variant throughput + p95
 //! from the typed `MetricsSnapshot` → `BENCH_serve_multivariant.json`),
-//! and end-to-end PJRT execute when artifacts exist.
+//! cold-start variant registration (requantize path vs cached `.strumc`
+//! artifact → `BENCH_coldstart.json`), and end-to-end PJRT execute when
+//! artifacts exist.
 //!
 //! STRUM_BENCH_QUICK=1 shrinks budgets ~10x.
 
 use std::path::Path;
+use strum_dpu::artifact::{ArtifactCache, CompiledNet};
 use strum_dpu::backend::gemm::gemm_i8;
 use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
 use strum_dpu::backend::kernels::{self, Isa};
@@ -204,6 +207,67 @@ fn main() -> anyhow::Result<()> {
         ]);
         std::fs::write("BENCH_backend_e2e.json", json.to_string_pretty())?;
         println!("wrote BENCH_backend_e2e.json");
+    }
+
+    b.section("cold start: variant registration (requantize vs cached artifact)");
+    {
+        // The compile/serve split's payoff: registering a variant from a
+        // cached .strumc artifact (read + decode + bind) vs re-running
+        // float-load → transform → encode at every process start.
+        let img = 32usize;
+        let classes = 10usize;
+        let net = "mini_cnn_s";
+        let mut weights = synth_net_weights(net, img, classes, 61)?;
+        let px = img * img * 3;
+        let mut rng = Rng::new(62);
+        let calib: Vec<f32> = (0..4 * px).map(|_| rng.f32()).collect();
+        weights.manifest.act_scales = calibrate_act_scales(&weights, &calib, 4)?;
+        let cache_dir =
+            std::env::temp_dir().join(format!("strum-coldstart-bench-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&cache_dir);
+        let cache = ArtifactCache::new(&cache_dir);
+        let mut rows: Vec<Json> = Vec::new();
+        for (label, method, p) in [
+            ("dliq-q4", Method::Dliq { q: 4 }, 0.5),
+            ("mip2q-L7", Method::Mip2q { l_max: 7 }, 0.5),
+        ] {
+            let cfg = strum_dpu::model::eval::EvalConfig::paper(method, p);
+            b.run(&format!("register/{}/requantize-path", label), 1.0, || {
+                NetworkPlan::build(&weights, &cfg).unwrap().classes
+            });
+            let requantize_s = b.results.last().map(|r| r.seconds.mean()).unwrap_or(0.0);
+            // Populate the cache once, then time the pure cached path:
+            // file read → from_bytes → from_artifact.
+            let (compiled, _) = cache.load_or_compile(&weights, &cfg)?;
+            let path = cache.path_for(&compiled.identity);
+            b.run(&format!("register/{}/cached-artifact", label), 1.0, || {
+                let bytes = std::fs::read(&path).unwrap();
+                let c = CompiledNet::from_bytes(&bytes).unwrap();
+                NetworkPlan::from_artifact(&c).unwrap().classes
+            });
+            let cached_s = b.results.last().map(|r| r.seconds.mean()).unwrap_or(0.0);
+            rows.push(Json::obj(vec![
+                ("variant", Json::str(label)),
+                ("requantize_mean_s", Json::Num(requantize_s)),
+                ("cached_mean_s", Json::Num(cached_s)),
+                (
+                    "speedup",
+                    Json::Num(if cached_s > 0.0 { requantize_s / cached_s } else { 0.0 }),
+                ),
+                (
+                    "artifact_bytes",
+                    Json::Num(std::fs::metadata(&path).map(|m| m.len() as f64).unwrap_or(0.0)),
+                ),
+            ]));
+        }
+        let json = Json::obj(vec![
+            ("net", Json::str(net)),
+            ("img", Json::Num(img as f64)),
+            ("variants", Json::Arr(rows)),
+        ]);
+        std::fs::write("BENCH_coldstart.json", json.to_string_pretty())?;
+        println!("wrote BENCH_coldstart.json");
+        let _ = std::fs::remove_dir_all(&cache_dir);
     }
 
     b.section("multi-variant serving engine (req/s, artifact-free)");

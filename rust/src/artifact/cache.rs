@@ -1,0 +1,241 @@
+//! Content-addressed on-disk cache of compiled `.strumc` artifacts.
+//!
+//! The serving layer registers variants through
+//! [`ArtifactCache::load_or_compile`]: the identity header
+//! ([`ArtifactIdentity`]) hashes
+//! to a cache path; a valid artifact there is loaded (read + decode, no
+//! quantizer), anything else — missing file, format/encoder version
+//! skew, checksum damage, identity collision — triggers a transparent
+//! recompile that overwrites the slot. Persisting the rebuilt artifact
+//! is best-effort: a read-only cache directory degrades to the old
+//! always-recompile behaviour instead of failing registration.
+
+use super::{compile_net, ArtifactError, ArtifactIdentity, CompiledNet};
+use crate::model::eval::EvalConfig;
+use crate::model::import::NetWeights;
+use crate::Result;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Why a cache lookup did not hit.
+#[derive(Debug)]
+pub enum MissReason {
+    /// No artifact at the identity's path yet.
+    NotFound,
+    /// An artifact was there but failed to load (typed cause inside —
+    /// version mismatch, checksum, truncation, ...).
+    Load(ArtifactError),
+    /// The artifact loaded but its identity header is not ours (content
+    /// hash collision or a hand-swapped file).
+    IdentityMismatch,
+}
+
+/// Outcome of [`ArtifactCache::load_or_compile`] (logged by the CLI and
+/// asserted by the CI smoke + tests).
+#[derive(Debug)]
+pub enum CacheOutcome {
+    /// Served from disk: zero quantize/encode work.
+    Hit,
+    /// Recompiled (and re-persisted) for the given reason.
+    Miss(MissReason),
+}
+
+impl CacheOutcome {
+    pub fn is_hit(&self) -> bool {
+        matches!(self, CacheOutcome::Hit)
+    }
+}
+
+impl fmt::Display for CacheOutcome {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CacheOutcome::Hit => write!(f, "hit"),
+            CacheOutcome::Miss(MissReason::NotFound) => write!(f, "miss (not compiled yet)"),
+            CacheOutcome::Miss(MissReason::Load(e)) => write!(f, "miss ({})", e),
+            CacheOutcome::Miss(MissReason::IdentityMismatch) => {
+                write!(f, "miss (identity mismatch)")
+            }
+        }
+    }
+}
+
+/// A directory of compiled artifacts keyed by identity hash.
+#[derive(Debug, Clone)]
+pub struct ArtifactCache {
+    dir: PathBuf,
+    /// Encoder version artifacts must carry to hit (normally
+    /// [`super::encoder_version`]; tests pin it to exercise rebuilds).
+    encoder_version: u32,
+}
+
+impl ArtifactCache {
+    pub fn new(dir: impl Into<PathBuf>) -> ArtifactCache {
+        ArtifactCache {
+            dir: dir.into(),
+            encoder_version: super::encoder_version(),
+        }
+    }
+
+    /// The conventional cache location under an artifacts tree.
+    pub fn under(artifacts: &Path) -> ArtifactCache {
+        Self::new(artifacts.join("cache"))
+    }
+
+    /// A cache pinned to an explicit encoder version (tests).
+    pub fn with_version(dir: impl Into<PathBuf>, encoder_version: u32) -> ArtifactCache {
+        ArtifactCache {
+            dir: dir.into(),
+            encoder_version,
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Cache path of an identity: human-greppable prefix + content hash.
+    /// Versions are deliberately NOT part of the name — a version bump
+    /// lands on the same slot, fails the load with a typed mismatch, and
+    /// the rebuild overwrites the stale file instead of leaking it.
+    pub fn path_for(&self, id: &ArtifactIdentity) -> PathBuf {
+        self.dir
+            .join(format!("{}-{}-{:016x}.strumc", id.net, id.method.name(), id.cache_key()))
+    }
+
+    /// Tries a pure load of the artifact for `id`.
+    fn try_load(&self, id: &ArtifactIdentity) -> std::result::Result<CompiledNet, MissReason> {
+        let path = self.path_for(id);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(MissReason::NotFound)
+            }
+            Err(e) => return Err(MissReason::Load(e.into())),
+        };
+        let compiled = CompiledNet::from_bytes(&bytes).map_err(MissReason::Load)?;
+        if compiled.encoder_version != self.encoder_version {
+            return Err(MissReason::Load(ArtifactError::VersionMismatch {
+                kind: "encoder",
+                found: compiled.encoder_version,
+                want: self.encoder_version,
+            }));
+        }
+        if compiled.identity != *id {
+            return Err(MissReason::IdentityMismatch);
+        }
+        Ok(compiled)
+    }
+
+    /// Serve-time entry point: load the compiled artifact for
+    /// (`weights`, `cfg`), or compile + persist it transparently. On a
+    /// hit, no `transform_network`/`encode_layer` call happens — the
+    /// debug counters in those modules assert it in tests.
+    pub fn load_or_compile(
+        &self,
+        weights: &NetWeights,
+        cfg: &EvalConfig,
+    ) -> Result<(CompiledNet, CacheOutcome)> {
+        let id = ArtifactIdentity::of(weights, cfg);
+        let reason = match self.try_load(&id) {
+            Ok(compiled) => return Ok((compiled, CacheOutcome::Hit)),
+            Err(r) => r,
+        };
+        let mut compiled = compile_net(weights, cfg)?;
+        compiled.encoder_version = self.encoder_version;
+        if let Err(e) = compiled.save(&self.path_for(&id)) {
+            // Degrade to always-recompile rather than failing serve on a
+            // read-only cache directory.
+            eprintln!(
+                "warning: could not persist artifact for {} ({}); serving uncached",
+                id.net, e
+            );
+        }
+        Ok((compiled, CacheOutcome::Miss(reason)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::graph::{calibrate_act_scales, synth_net_weights};
+    use crate::quant::Method;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "strum-cache-unit-{}-{}",
+            std::process::id(),
+            tag
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn weights() -> NetWeights {
+        let mut w = synth_net_weights("mini_cnn_s", 8, 4, 7).unwrap();
+        let calib: Vec<f32> = {
+            let mut rng = crate::util::prng::Rng::new(9);
+            (0..2 * 8 * 8 * 3).map(|_| rng.f32()).collect()
+        };
+        w.manifest.act_scales = calibrate_act_scales(&w, &calib, 2).unwrap();
+        w
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let dir = temp_dir("miss-hit");
+        let cache = ArtifactCache::with_version(&dir, 1);
+        let w = weights();
+        let cfg = EvalConfig::paper(Method::Dliq { q: 4 }, 0.5);
+        let (first, o1) = cache.load_or_compile(&w, &cfg).unwrap();
+        assert!(matches!(o1, CacheOutcome::Miss(MissReason::NotFound)), "{}", o1);
+        assert!(cache.path_for(&first.identity).exists());
+        let (second, o2) = cache.load_or_compile(&w, &cfg).unwrap();
+        assert!(o2.is_hit(), "{}", o2);
+        assert_eq!(second.to_bytes(), first.to_bytes());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn encoder_bump_rebuilds_in_place() {
+        let dir = temp_dir("bump");
+        let w = weights();
+        let cfg = EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5);
+        let v1 = ArtifactCache::with_version(&dir, 1);
+        let (c1, _) = v1.load_or_compile(&w, &cfg).unwrap();
+        // Same slot, newer runtime: typed version mismatch → rebuild.
+        let v2 = ArtifactCache::with_version(&dir, 2);
+        assert_eq!(v1.path_for(&c1.identity), v2.path_for(&c1.identity));
+        let (c2, o) = v2.load_or_compile(&w, &cfg).unwrap();
+        match &o {
+            CacheOutcome::Miss(MissReason::Load(ArtifactError::VersionMismatch {
+                kind,
+                found,
+                want,
+            })) => {
+                assert_eq!(*kind, "encoder");
+                assert_eq!((*found, *want), (1, 2));
+            }
+            other => panic!("expected encoder version miss, got {}", other),
+        }
+        assert_eq!(c2.encoder_version, 2);
+        // The slot was overwritten: v2 now hits, v1 now misses.
+        assert!(v2.load_or_compile(&w, &cfg).unwrap().1.is_hit());
+        assert!(!v1.load_or_compile(&w, &cfg).unwrap().1.is_hit());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn weight_change_moves_the_slot() {
+        let dir = temp_dir("weights");
+        let cache = ArtifactCache::with_version(&dir, 1);
+        let w = weights();
+        let cfg = EvalConfig::paper(Method::Dliq { q: 4 }, 0.5);
+        let (c1, _) = cache.load_or_compile(&w, &cfg).unwrap();
+        let mut w2 = w.clone();
+        w2.blob[3] += 0.125;
+        let (c2, o) = cache.load_or_compile(&w2, &cfg).unwrap();
+        assert!(matches!(o, CacheOutcome::Miss(MissReason::NotFound)));
+        assert_ne!(cache.path_for(&c1.identity), cache.path_for(&c2.identity));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

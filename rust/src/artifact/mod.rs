@@ -1,0 +1,774 @@
+//! Compiled model artifacts (`.strumc`): the offline half of the
+//! compile/serve split.
+//!
+//! StruM is post-training quantization — nothing about a (net, method, p)
+//! point changes between process starts, so re-deriving it at every
+//! registration (float load → [`transform_network`] → [`encode_layer`] →
+//! plan build) is pure cold-start waste. [`compile_net`] runs that
+//! pipeline ONCE and captures everything the serve path needs in a
+//! [`CompiledNet`]: per-layer §IV-D encoded banks (via
+//! [`crate::encode::bitstream`]), calibrated activation scales, biases,
+//! and layer geometry. Serialized to disk it becomes a versioned
+//! `.strumc` artifact; at serve time
+//! [`NetworkPlan::from_artifact`](crate::backend::NetworkPlan::from_artifact)
+//! is a pure read + decode + bind — no quantizer anywhere on the path
+//! (asserted by the [`transform_network_calls`]/[`encode_layer_calls`]
+//! debug counters).
+//!
+//! # On-disk format (all little-endian)
+//!
+//! ```text
+//! magic            8  b"STRUMC\0\x1a"
+//! format_version   u32   layout of THIS container
+//! encoder_version  u32   semantics of the §IV-D bank encoder
+//! total_len        u64   whole file, incl. the trailing checksum
+//! identity header: net, method, p, block [l,w], act_quant,
+//!                  unstructured, weights fingerprint (FNV-1a 64)
+//! classes, img, mean_rmse, n_layers
+//! per layer: name, kind, kh kw ic oc oh ow, act_scale, bias[],
+//!            bank params, bank dims, scales[], bit length, payload bytes
+//! checksum         u64   FNV-1a 64 of every preceding byte
+//! ```
+//!
+//! Loading is defensive end to end: truncation, a foreign magic, a
+//! format/encoder version skew, and any byte corruption each surface as a
+//! distinct typed [`ArtifactError`] — never a panic, never a silently
+//! wrong artifact (the checksum is verified before the body is parsed,
+//! and every length field is bounds-checked against the remaining input).
+//!
+//! [`cache`] adds the content-addressed on-disk cache the serving layer
+//! registers through; `strum compile` is the CLI front-end.
+//!
+//! [`transform_network`]: crate::model::eval::transform_network
+//! [`encode_layer`]: crate::encode::encode_layer
+//! [`transform_network_calls`]: crate::model::eval::transform_network_calls
+//! [`encode_layer_calls`]: crate::encode::encode_layer_calls
+
+pub mod cache;
+
+pub use cache::{ArtifactCache, CacheOutcome, MissReason};
+
+use crate::encode::{encode_layer, EncodedLayer};
+use crate::model::eval::{transform_network, EvalConfig};
+use crate::model::import::{LayerMeta, NetWeights};
+use crate::quant::{BlockShape, Method, StrumParams};
+use crate::util::hash::{fnv1a64, Fnv1a};
+use crate::Result;
+use anyhow::ensure;
+use std::fmt;
+use std::path::Path;
+
+/// Magic prefix of a `.strumc` file.
+pub const MAGIC: [u8; 8] = *b"STRUMC\x00\x1a";
+/// Container-layout version (bump when the byte layout changes).
+pub const FORMAT_VERSION: u32 = 1;
+/// §IV-D bank-encoder version (bump when encode semantics change — the
+/// cache rebuilds every artifact transparently on mismatch).
+pub const ENCODER_VERSION: u32 = 1;
+
+/// The effective encoder version: [`ENCODER_VERSION`] unless the
+/// `STRUM_ENCODER_VERSION` env var overrides it (the CI cache-invalidation
+/// smoke uses the override to simulate an encoder bump without shipping a
+/// different binary).
+pub fn encoder_version() -> u32 {
+    match std::env::var("STRUM_ENCODER_VERSION") {
+        Ok(s) => s.trim().parse().unwrap_or(ENCODER_VERSION),
+        Err(_) => ENCODER_VERSION,
+    }
+}
+
+/// Typed artifact-load failures. Each corruption class is distinct so
+/// callers (and the cache) can tell a stale version from a damaged file.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// File I/O failed (open/read/write).
+    Io(std::io::Error),
+    /// The byte stream ends before the declared content does.
+    Truncated { expected: usize, got: usize },
+    /// The file does not start with [`MAGIC`] — not a `.strumc` at all.
+    BadMagic,
+    /// Format or encoder version skew (`kind` says which).
+    VersionMismatch {
+        kind: &'static str,
+        found: u32,
+        want: u32,
+    },
+    /// The FNV-1a trailer does not match the content.
+    ChecksumMismatch { stored: u64, computed: u64 },
+    /// Structurally invalid content (bad lengths, params out of range).
+    Corrupt(String),
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::Io(e) => write!(f, "artifact io error: {}", e),
+            ArtifactError::Truncated { expected, got } => {
+                write!(f, "truncated artifact: need {} bytes, have {}", expected, got)
+            }
+            ArtifactError::BadMagic => write!(f, "not a .strumc artifact (bad magic)"),
+            ArtifactError::VersionMismatch { kind, found, want } => {
+                write!(f, "{} version mismatch: artifact {}, runtime {}", kind, found, want)
+            }
+            ArtifactError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "artifact checksum mismatch: stored {:016x}, computed {:016x}",
+                stored, computed
+            ),
+            ArtifactError::Corrupt(why) => write!(f, "corrupt artifact: {}", why),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+impl From<std::io::Error> for ArtifactError {
+    fn from(e: std::io::Error) -> Self {
+        ArtifactError::Io(e)
+    }
+}
+
+/// Everything that determines a compiled artifact's content (besides the
+/// versions): the cache key fields. Two registrations with equal
+/// identities may share one artifact byte-for-byte.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactIdentity {
+    pub net: String,
+    pub method: Method,
+    pub p: f64,
+    /// Block shape `(l, w)`.
+    pub block: (usize, usize),
+    pub act_quant: bool,
+    pub unstructured: bool,
+    /// FNV-1a 64 fingerprint of the source float weights + manifest.
+    pub weights_fp: u64,
+}
+
+impl ArtifactIdentity {
+    /// The identity of compiling `weights` under `cfg`.
+    pub fn of(weights: &NetWeights, cfg: &EvalConfig) -> ArtifactIdentity {
+        ArtifactIdentity {
+            net: weights.manifest.net.clone(),
+            method: cfg.method,
+            p: cfg.p,
+            block: cfg.block,
+            act_quant: cfg.act_quant,
+            unstructured: cfg.unstructured,
+            weights_fp: weights_fingerprint(weights),
+        }
+    }
+
+    /// Content-address hash over every identity field (NOT the versions:
+    /// a version bump must land on the same cache path so the stale file
+    /// is detected, rebuilt, and overwritten in place).
+    pub fn cache_key(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        h.update(self.net.as_bytes());
+        let (tag, param) = method_to_wire(self.method);
+        h.update(&[tag, param, self.act_quant as u8, self.unstructured as u8]);
+        h.update_u64(self.p.to_bits());
+        h.update_u64(self.block.0 as u64);
+        h.update_u64(self.block.1 as u64);
+        h.update_u64(self.weights_fp);
+        h.finish()
+    }
+}
+
+/// Fingerprints a weight set: manifest geometry + activation scales +
+/// every float bit of the blob. Guards the cache against silently serving
+/// an artifact compiled from different weights.
+pub fn weights_fingerprint(weights: &NetWeights) -> u64 {
+    let m = &weights.manifest;
+    let mut h = Fnv1a::new();
+    h.update(m.net.as_bytes());
+    h.update_u64(m.num_classes as u64);
+    h.update_u64(m.layers.len() as u64);
+    for l in &m.layers {
+        h.update(l.name.as_bytes());
+        h.update(l.kind.as_bytes());
+        for d in [l.kh, l.kw, l.ic, l.oc, l.oh, l.ow] {
+            h.update_u64(d as u64);
+        }
+    }
+    h.update_u64(m.act_scales.len() as u64);
+    for &s in &m.act_scales {
+        h.update(&s.to_bits().to_le_bytes());
+    }
+    h.update_u64(weights.blob.len() as u64);
+    for &v in &weights.blob {
+        h.update(&v.to_bits().to_le_bytes());
+    }
+    h.finish()
+}
+
+/// One compiled layer: geometry + serve-time constants + the §IV-D bank.
+#[derive(Debug, Clone)]
+pub struct CompiledLayer {
+    pub meta: LayerMeta,
+    /// Static activation scale (0 = dynamic / act_quant off).
+    pub act_scale: f32,
+    pub bias: Vec<f32>,
+    /// The encoded dual-bank weight stream.
+    pub enc: EncodedLayer,
+}
+
+/// A fully compiled network: the deployable artifact.
+#[derive(Debug, Clone)]
+pub struct CompiledNet {
+    pub encoder_version: u32,
+    pub identity: ArtifactIdentity,
+    pub classes: usize,
+    pub img: usize,
+    /// Mean per-layer int-grid RMSE of the transform (diagnostics).
+    pub mean_rmse: f64,
+    pub layers: Vec<CompiledLayer>,
+}
+
+/// Compile time: float weights → StruM transform → §IV-D encode, once.
+/// The output binds into a serveable plan via
+/// [`NetworkPlan::from_artifact`](crate::backend::NetworkPlan::from_artifact)
+/// with no quantizer on the path, bit-identical to
+/// [`NetworkPlan::build`](crate::backend::NetworkPlan::build).
+pub fn compile_net(weights: &NetWeights, cfg: &EvalConfig) -> Result<CompiledNet> {
+    let m = &weights.manifest;
+    ensure!(!m.layers.is_empty(), "{}: empty layer manifest", m.net);
+    ensure!(
+        m.act_scales.len() == m.layers.len(),
+        "{}: {} act scales for {} layers",
+        m.net,
+        m.act_scales.len(),
+        m.layers.len()
+    );
+    let transformed = transform_network(weights, cfg)?;
+    ensure!(
+        transformed.len() == m.layers.len(),
+        "{}: {} transformed layers for {} manifest layers",
+        m.net,
+        transformed.len(),
+        m.layers.len()
+    );
+    let mut layers = Vec::with_capacity(m.layers.len());
+    for (li, (meta, s)) in m.layers.iter().zip(transformed.iter()).enumerate() {
+        ensure!(
+            meta.name == s.name,
+            "layer order mismatch: manifest {} vs transform {}",
+            meta.name,
+            s.name
+        );
+        let (_, bias) = weights.param(&format!("{}_b", meta.name))?;
+        ensure!(bias.len() == meta.oc, "layer {}: bias len", meta.name);
+        let act_scale = if cfg.act_quant { m.act_scales[li] } else { 0.0 };
+        layers.push(CompiledLayer {
+            meta: meta.clone(),
+            act_scale,
+            bias: bias.to_vec(),
+            enc: encode_layer(s),
+        });
+    }
+    let mean_rmse =
+        transformed.iter().map(|s| s.grid_rmse).sum::<f64>() / transformed.len() as f64;
+    Ok(CompiledNet {
+        encoder_version: encoder_version(),
+        identity: ArtifactIdentity::of(weights, cfg),
+        classes: m.num_classes,
+        img: m.layers[0].oh,
+        mean_rmse,
+        layers,
+    })
+}
+
+impl CompiledNet {
+    /// Total encoded-bank payload size in bytes (reporting).
+    pub fn encoded_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.enc.bytes.len()).sum()
+    }
+
+    /// Serializes to the versioned `.strumc` byte layout.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.buf.extend_from_slice(&MAGIC);
+        w.u32(FORMAT_VERSION);
+        w.u32(self.encoder_version);
+        w.u64(0); // total_len placeholder, patched below
+        let id = &self.identity;
+        w.string(&id.net);
+        let (tag, param) = method_to_wire(id.method);
+        w.buf.push(tag);
+        w.buf.push(param);
+        w.u64(id.p.to_bits());
+        w.u32(id.block.0 as u32);
+        w.u32(id.block.1 as u32);
+        w.buf.push(id.act_quant as u8);
+        w.buf.push(id.unstructured as u8);
+        w.u64(id.weights_fp);
+        w.u32(self.classes as u32);
+        w.u32(self.img as u32);
+        w.u64(self.mean_rmse.to_bits());
+        w.u32(self.layers.len() as u32);
+        for l in &self.layers {
+            w.string(&l.meta.name);
+            w.string(&l.meta.kind);
+            for d in [l.meta.kh, l.meta.kw, l.meta.ic, l.meta.oc, l.meta.oh, l.meta.ow] {
+                w.u32(d as u32);
+            }
+            w.u32(l.act_scale.to_bits());
+            w.f32s(&l.bias);
+            let (tag, param) = method_to_wire(l.enc.params.method);
+            w.buf.push(tag);
+            w.buf.push(param);
+            w.u64(l.enc.params.p.to_bits());
+            w.u32(l.enc.params.block.l as u32);
+            w.u32(l.enc.params.block.w as u32);
+            w.u32(l.enc.oc as u32);
+            w.u32(l.enc.rows as u32);
+            w.u32(l.enc.cols as u32);
+            w.f32s(&l.enc.scales);
+            w.u64(l.enc.bits as u64);
+            w.u64(l.enc.bytes.len() as u64);
+            w.buf.extend_from_slice(&l.enc.bytes);
+        }
+        let mut bytes = w.buf;
+        seal(&mut bytes);
+        bytes
+    }
+
+    /// Parses a `.strumc` byte stream, validating magic, format version,
+    /// declared length, and checksum before touching the body. Every
+    /// corruption class maps to a typed [`ArtifactError`].
+    pub fn from_bytes(bytes: &[u8]) -> std::result::Result<CompiledNet, ArtifactError> {
+        // Header gate: magic → version → declared length → checksum.
+        const HEAD: usize = 8 + 4 + 4 + 8;
+        if bytes.len() < 8 {
+            return Err(ArtifactError::Truncated { expected: 8, got: bytes.len() });
+        }
+        if bytes[..8] != MAGIC {
+            return Err(ArtifactError::BadMagic);
+        }
+        if bytes.len() < HEAD + 8 {
+            return Err(ArtifactError::Truncated { expected: HEAD + 8, got: bytes.len() });
+        }
+        let format_version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if format_version != FORMAT_VERSION {
+            return Err(ArtifactError::VersionMismatch {
+                kind: "format",
+                found: format_version,
+                want: FORMAT_VERSION,
+            });
+        }
+        let total_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+        if total_len != bytes.len() as u64 {
+            return Err(ArtifactError::Truncated {
+                expected: total_len as usize,
+                got: bytes.len(),
+            });
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        let computed = fnv1a64(body);
+        if stored != computed {
+            return Err(ArtifactError::ChecksumMismatch { stored, computed });
+        }
+
+        // Body parse. The checksum already vouches for integrity; the
+        // bounds checks below keep even adversarial (validly-sealed)
+        // streams from panicking or over-allocating.
+        let mut c = Cursor { buf: body, pos: 8 };
+        let _format = c.u32()?;
+        let encoder_version = c.u32()?;
+        let _total = c.u64()?;
+        let net = c.string("net")?;
+        let method = method_from_wire(c.u8()?, c.u8()?)?;
+        let p = f64::from_bits(c.u64()?);
+        if !(0.0..=1.0).contains(&p) {
+            return Err(ArtifactError::Corrupt(format!("identity p {} out of range", p)));
+        }
+        let bl = c.u32()? as usize;
+        let bw = c.u32()? as usize;
+        if bl == 0 || bw == 0 || bl > 65536 || bw > 65536 {
+            return Err(ArtifactError::Corrupt(format!("block shape [{}, {}]", bl, bw)));
+        }
+        let act_quant = c.u8()? != 0;
+        let unstructured = c.u8()? != 0;
+        let weights_fp = c.u64()?;
+        let classes = c.u32()? as usize;
+        let img = c.u32()? as usize;
+        let mean_rmse = f64::from_bits(c.u64()?);
+        let n_layers = c.u32()? as usize;
+        if n_layers == 0 || n_layers > c.remaining() {
+            return Err(ArtifactError::Corrupt(format!("{} layers", n_layers)));
+        }
+        let mut layers = Vec::with_capacity(n_layers.min(1024));
+        for li in 0..n_layers {
+            let name = c.string("layer name")?;
+            let kind = c.string("layer kind")?;
+            let mut dims = [0usize; 6];
+            for d in dims.iter_mut() {
+                *d = c.u32()? as usize;
+            }
+            let [kh, kw, ic, oc, oh, ow] = dims;
+            let act_scale = f32::from_bits(c.u32()?);
+            let bias = c.f32_vec("bias")?;
+            if bias.len() != oc {
+                return Err(ArtifactError::Corrupt(format!(
+                    "layer {}: {} biases for {} channels",
+                    li,
+                    bias.len(),
+                    oc
+                )));
+            }
+            let method = method_from_wire(c.u8()?, c.u8()?)?;
+            let lp = f64::from_bits(c.u64()?);
+            if !(0.0..=1.0).contains(&lp) {
+                return Err(ArtifactError::Corrupt(format!("layer {} p {}", li, lp)));
+            }
+            let l = c.u32()? as usize;
+            let w = c.u32()? as usize;
+            if l == 0 || w == 0 || l > 65536 || w > 65536 {
+                return Err(ArtifactError::Corrupt(format!("layer {} block [{}, {}]", li, l, w)));
+            }
+            let b_oc = c.u32()? as usize;
+            let b_rows = c.u32()? as usize;
+            let b_cols = c.u32()? as usize;
+            // Decoded size must stay sane relative to the payload (a
+            // compressed layer is never smaller than ~1/9 of its grid).
+            let elems = (b_oc as u128) * (b_rows as u128) * (b_cols as u128);
+            if elems > (1u128 << 32) {
+                return Err(ArtifactError::Corrupt(format!(
+                    "layer {}: bank {}x{}x{} too large",
+                    li, b_oc, b_rows, b_cols
+                )));
+            }
+            let scales = c.f32_vec("scales")?;
+            if scales.len() != b_oc {
+                return Err(ArtifactError::Corrupt(format!(
+                    "layer {}: {} scales for {} channels",
+                    li,
+                    scales.len(),
+                    b_oc
+                )));
+            }
+            let bits = c.u64()? as usize;
+            let nbytes = c.u64()? as usize;
+            if nbytes > c.remaining() {
+                return Err(ArtifactError::Corrupt(format!(
+                    "layer {}: payload {} bytes, {} left",
+                    li,
+                    nbytes,
+                    c.remaining()
+                )));
+            }
+            if bits > nbytes * 8 {
+                return Err(ArtifactError::Corrupt(format!(
+                    "layer {}: {} bits in {} bytes",
+                    li, bits, nbytes
+                )));
+            }
+            let payload = c.bytes(nbytes)?.to_vec();
+            layers.push(CompiledLayer {
+                meta: LayerMeta { name: name.clone(), kind, kh, kw, ic, oc, oh, ow },
+                act_scale,
+                bias,
+                enc: EncodedLayer {
+                    name,
+                    params: StrumParams {
+                        method,
+                        block: BlockShape { l, w },
+                        p: lp,
+                    },
+                    oc: b_oc,
+                    rows: b_rows,
+                    cols: b_cols,
+                    scales,
+                    bytes: payload,
+                    bits,
+                },
+            });
+        }
+        if c.remaining() != 0 {
+            return Err(ArtifactError::Corrupt(format!(
+                "{} trailing bytes after last layer",
+                c.remaining()
+            )));
+        }
+        Ok(CompiledNet {
+            encoder_version,
+            identity: ArtifactIdentity {
+                net,
+                method,
+                p,
+                block: (bl, bw),
+                act_quant,
+                unstructured,
+                weights_fp,
+            },
+            classes,
+            img,
+            mean_rmse,
+            layers,
+        })
+    }
+
+    /// Writes the artifact atomically (temp file + rename) so concurrent
+    /// readers never observe a half-written `.strumc`.
+    pub fn save(&self, path: &Path) -> std::result::Result<(), ArtifactError> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        // Unique per process AND per call: two threads recompiling the
+        // same cold slot must not interleave writes into one temp file.
+        static SAVE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = path.with_extension(format!("tmp.{}.{}", std::process::id(), seq));
+        std::fs::write(&tmp, self.to_bytes())?;
+        match std::fs::rename(&tmp, path) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                Err(e.into())
+            }
+        }
+    }
+
+    /// Loads a standalone `.strumc` file, enforcing the runtime's
+    /// effective encoder version. [`Self::from_bytes`] checks the
+    /// container format only (the cache pins its own expected encoder
+    /// version); this entry point is for artifacts passed around as
+    /// files (`strum compile --out`), where a stale encoding must
+    /// surface as a typed [`ArtifactError::VersionMismatch`] instead of
+    /// silently decoding old banks with new semantics.
+    pub fn load(path: &Path) -> std::result::Result<CompiledNet, ArtifactError> {
+        let compiled = Self::from_bytes(&std::fs::read(path)?)?;
+        let want = encoder_version();
+        if compiled.encoder_version != want {
+            return Err(ArtifactError::VersionMismatch {
+                kind: "encoder",
+                found: compiled.encoder_version,
+                want,
+            });
+        }
+        Ok(compiled)
+    }
+}
+
+/// Recomputes the declared length + trailing checksum of a raw artifact
+/// buffer in place (test/tooling helper for patching header fields).
+pub fn reseal(bytes: &mut Vec<u8>) {
+    assert!(bytes.len() >= 32, "not an artifact buffer");
+    bytes.truncate(bytes.len() - 8);
+    let total = (bytes.len() + 8) as u64;
+    bytes[16..24].copy_from_slice(&total.to_le_bytes());
+    let sum = fnv1a64(bytes);
+    bytes.extend_from_slice(&sum.to_le_bytes());
+}
+
+/// First-time seal: patch total_len and append the checksum.
+fn seal(bytes: &mut Vec<u8>) {
+    let total = (bytes.len() + 8) as u64;
+    bytes[16..24].copy_from_slice(&total.to_le_bytes());
+    let sum = fnv1a64(bytes);
+    bytes.extend_from_slice(&sum.to_le_bytes());
+}
+
+fn method_to_wire(m: Method) -> (u8, u8) {
+    match m {
+        Method::Baseline => (0, 0),
+        Method::StructuredSparsity => (1, 0),
+        Method::Dliq { q } => (2, q),
+        Method::Mip2q { l_max } => (3, l_max),
+    }
+}
+
+fn method_from_wire(tag: u8, param: u8) -> std::result::Result<Method, ArtifactError> {
+    match tag {
+        0 => Ok(Method::Baseline),
+        1 => Ok(Method::StructuredSparsity),
+        // Bounds mirror the decoder's own asserts: a hostile param must
+        // become a typed error here, not a panic downstream.
+        2 if (1..=8).contains(&param) => Ok(Method::Dliq { q: param }),
+        3 if param <= 7 => Ok(Method::Mip2q { l_max: param }),
+        _ => Err(ArtifactError::Corrupt(format!("method tag {} param {}", tag, param))),
+    }
+}
+
+/// Append-only little-endian byte writer for the artifact layout.
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn string(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.u32(x.to_bits());
+        }
+    }
+}
+
+/// Bounds-checked little-endian reader over the (already checksummed)
+/// artifact body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize) -> std::result::Result<&'a [u8], ArtifactError> {
+        if n > self.remaining() {
+            return Err(ArtifactError::Corrupt(format!(
+                "read of {} bytes at offset {} overruns {}-byte body",
+                n,
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> std::result::Result<u8, ArtifactError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> std::result::Result<u32, ArtifactError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> std::result::Result<u64, ArtifactError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self, what: &str) -> std::result::Result<String, ArtifactError> {
+        let n = self.u32()? as usize;
+        if n > self.remaining() {
+            return Err(ArtifactError::Corrupt(format!("{} length {}", what, n)));
+        }
+        String::from_utf8(self.bytes(n)?.to_vec())
+            .map_err(|_| ArtifactError::Corrupt(format!("{} is not utf-8", what)))
+    }
+
+    fn f32_vec(&mut self, what: &str) -> std::result::Result<Vec<f32>, ArtifactError> {
+        let n = self.u32()? as usize;
+        if n.checked_mul(4).map(|b| b > self.remaining()).unwrap_or(true) {
+            return Err(ArtifactError::Corrupt(format!("{} length {}", what, n)));
+        }
+        let raw = self.bytes(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::graph::{calibrate_act_scales, synth_net_weights};
+
+    fn small_weights() -> NetWeights {
+        let mut w = synth_net_weights("mini_cnn_s", 8, 4, 3).unwrap();
+        let calib: Vec<f32> = {
+            let mut rng = crate::util::prng::Rng::new(5);
+            (0..2 * 8 * 8 * 3).map(|_| rng.f32()).collect()
+        };
+        w.manifest.act_scales = calibrate_act_scales(&w, &calib, 2).unwrap();
+        w
+    }
+
+    #[test]
+    fn method_wire_roundtrip() {
+        for m in [
+            Method::Baseline,
+            Method::StructuredSparsity,
+            Method::Dliq { q: 4 },
+            Method::Mip2q { l_max: 7 },
+        ] {
+            let (t, p) = method_to_wire(m);
+            assert_eq!(method_from_wire(t, p).unwrap(), m);
+        }
+        assert!(method_from_wire(9, 0).is_err());
+        assert!(method_from_wire(2, 0).is_err()); // dliq q=0
+        assert!(method_from_wire(2, 9).is_err()); // dliq q=9
+        assert!(method_from_wire(3, 8).is_err()); // mip2q l_max=8
+    }
+
+    #[test]
+    fn bytes_roundtrip_preserves_everything() {
+        let w = small_weights();
+        let cfg = EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5);
+        let c = compile_net(&w, &cfg).unwrap();
+        let bytes = c.to_bytes();
+        let back = CompiledNet::from_bytes(&bytes).unwrap();
+        assert_eq!(back.identity, c.identity);
+        assert_eq!(back.classes, c.classes);
+        assert_eq!(back.img, c.img);
+        assert_eq!(back.mean_rmse.to_bits(), c.mean_rmse.to_bits());
+        assert_eq!(back.layers.len(), c.layers.len());
+        for (a, b) in back.layers.iter().zip(c.layers.iter()) {
+            assert_eq!(a.meta.name, b.meta.name);
+            assert_eq!(a.enc.bytes, b.enc.bytes);
+            assert_eq!(a.enc.bits, b.enc.bits);
+            assert_eq!(a.bias, b.bias);
+            assert_eq!(a.act_scale.to_bits(), b.act_scale.to_bits());
+        }
+        // Re-serialization is byte-stable.
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn standalone_load_enforces_encoder_version() {
+        let w = small_weights();
+        let cfg = EvalConfig::paper(Method::Dliq { q: 4 }, 0.5);
+        let mut c = compile_net(&w, &cfg).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("strum-standalone-{}.strumc", std::process::id()));
+        // An artifact from a different encoder generation must not load
+        // standalone (the cache applies its own pinned check).
+        c.encoder_version = ENCODER_VERSION + 1;
+        c.save(&path).unwrap();
+        let err = CompiledNet::load(&path).unwrap_err();
+        assert!(
+            matches!(err, ArtifactError::VersionMismatch { kind: "encoder", .. }),
+            "{}",
+            err
+        );
+        c.encoder_version = ENCODER_VERSION;
+        c.save(&path).unwrap();
+        assert!(CompiledNet::load(&path).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn identity_key_ignores_versions_but_sees_weights() {
+        let w = small_weights();
+        let cfg = EvalConfig::paper(Method::Dliq { q: 4 }, 0.5);
+        let id = ArtifactIdentity::of(&w, &cfg);
+        let mut w2 = w.clone();
+        w2.blob[0] += 1.0;
+        let id2 = ArtifactIdentity::of(&w2, &cfg);
+        assert_ne!(id.cache_key(), id2.cache_key());
+        let cfg2 = EvalConfig::paper(Method::Dliq { q: 4 }, 0.25);
+        assert_ne!(id.cache_key(), ArtifactIdentity::of(&w, &cfg2).cache_key());
+        // Same inputs → same key (deterministic content address).
+        assert_eq!(id.cache_key(), ArtifactIdentity::of(&w, &cfg).cache_key());
+    }
+}

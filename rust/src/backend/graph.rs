@@ -7,6 +7,12 @@
 //! integer engine — fake-quantized activations, int8/shift-add GEMMs via
 //! im2col. No Python, HLO, or XLA anywhere.
 //!
+//! Plans bind from two sources through one shared core:
+//! [`NetworkPlan::build`] quantizes + encodes at call time (compile
+//! path), while [`NetworkPlan::from_artifact`] decodes a cached
+//! [`crate::artifact::CompiledNet`] with zero quantizer work (serve
+//! path). The two are bit-identical by construction and by test.
+//!
 //! The production path ([`NetworkPlan::forward_one`]) runs on the
 //! [`super::kernels`] layer: SIMD cache-blocked GEMMs with all-zero
 //! im2col rows skipped, fused requantize→bias→ReLU→pool→quantize
@@ -275,10 +281,23 @@ pub struct NetworkPlan {
     layers: Vec<LayerExec>,
 }
 
+/// One layer's decoded inputs to the plan-binding core shared by the
+/// quantize-and-encode build path and the artifact load path: geometry,
+/// the execution-form dual banks, and the serve-time constants.
+struct LayerSource<'a> {
+    meta: &'a LayerMeta,
+    gemm: StrumGemm,
+    bias: Vec<f32>,
+    act_scale: f32,
+}
+
 impl NetworkPlan {
-    /// Transforms `weights` per `cfg`, encodes every layer to the §IV-D
-    /// format, and builds the execution plan from the *decoded* streams —
-    /// the same bits the hardware would fetch.
+    /// Compile-and-bind in one step: transforms `weights` per `cfg`,
+    /// encodes every layer to the §IV-D format, and builds the execution
+    /// plan from the *decoded* streams — the same bits the hardware would
+    /// fetch. Serving paths should prefer [`Self::from_artifact`] over a
+    /// cached [`crate::artifact::CompiledNet`]; the two are asserted
+    /// bit-identical.
     pub fn build(weights: &NetWeights, cfg: &EvalConfig) -> Result<NetworkPlan> {
         let transformed = transform_network(weights, cfg)?;
         Self::from_transformed(weights, &transformed, cfg.act_quant)
@@ -292,7 +311,6 @@ impl NetworkPlan {
         act_quant: bool,
     ) -> Result<NetworkPlan> {
         let m = &weights.manifest;
-        let spec = net_spec(&m.net).ok_or_else(|| anyhow!("no native spec for net {}", m.net))?;
         ensure!(
             transformed.len() == m.layers.len(),
             "{}: {} transformed layers for {} manifest layers",
@@ -308,7 +326,7 @@ impl NetworkPlan {
             m.act_scales.len(),
             m.layers.len()
         );
-        let mut layers = Vec::with_capacity(m.layers.len());
+        let mut inputs = Vec::with_capacity(m.layers.len());
         for (li, (meta, s)) in m.layers.iter().zip(transformed.iter()).enumerate() {
             ensure!(
                 meta.name == s.name,
@@ -319,21 +337,105 @@ impl NetworkPlan {
             // Execute from the encoded representation, not the in-memory
             // transform: encode → decode → dual banks.
             let gemm = StrumGemm::from_encoded(&encode_layer(s))?;
+            let (_, bias) = weights.param(&format!("{}_b", meta.name))?;
+            let act_scale = if act_quant { m.act_scales[li] } else { 0.0 };
+            inputs.push(LayerSource {
+                meta,
+                gemm,
+                bias: bias.to_vec(),
+                act_scale,
+            });
+        }
+        let mean_rmse =
+            transformed.iter().map(|s| s.grid_rmse).sum::<f64>() / transformed.len() as f64;
+        Self::bind(&m.net, m.num_classes, mean_rmse, inputs)
+    }
+
+    /// Serve time: binds a plan straight from a compiled artifact —
+    /// decode + bind only, no `transform_network`/`encode_layer` call
+    /// anywhere on the path. Bit-identical to [`Self::build`] on the
+    /// same weights + config (asserted across the zoo in
+    /// `tests/artifact.rs`).
+    pub fn from_artifact(compiled: &crate::artifact::CompiledNet) -> Result<NetworkPlan> {
+        ensure!(!compiled.layers.is_empty(), "artifact has no layers");
+        let mut inputs = Vec::with_capacity(compiled.layers.len());
+        for l in &compiled.layers {
+            inputs.push(LayerSource {
+                meta: &l.meta,
+                gemm: StrumGemm::from_encoded(&l.enc)?,
+                bias: l.bias.clone(),
+                act_scale: l.act_scale,
+            });
+        }
+        let plan = Self::bind(
+            &compiled.identity.net,
+            compiled.classes,
+            compiled.mean_rmse,
+            inputs,
+        )?;
+        ensure!(
+            plan.img == compiled.img,
+            "artifact img {} vs layer geometry {}",
+            compiled.img,
+            plan.img
+        );
+        Ok(plan)
+    }
+
+    /// The plan-binding core: validates every layer against the spec
+    /// walk and precomputes the requantization constants. Both build
+    /// paths funnel through here so their semantics cannot drift.
+    fn bind(
+        net: &str,
+        classes: usize,
+        mean_rmse: f64,
+        inputs: Vec<LayerSource<'_>>,
+    ) -> Result<NetworkPlan> {
+        let spec = net_spec(net).ok_or_else(|| anyhow!("no native spec for net {}", net))?;
+        ensure!(!inputs.is_empty(), "{}: empty layer set", net);
+        let img = inputs[0].meta.oh;
+        // The walk must consume every layer in manifest order; do a dry
+        // pass now so registration fails fast on a roster mismatch.
+        let expected = synth_layer_metas(net, img, classes)?;
+        ensure!(
+            expected.len() == inputs.len(),
+            "{}: spec walk yields {} layers, plan has {}",
+            net,
+            expected.len(),
+            inputs.len()
+        );
+        for (e, src) in expected.iter().zip(inputs.iter()) {
+            let l = src.meta;
+            ensure!(
+                e.name == l.name && e.kh == l.kh && e.ic == l.ic && e.oc == l.oc,
+                "{}: spec layer {:?} vs manifest {:?}",
+                net,
+                (&e.name, e.kh, e.ic, e.oc),
+                (&l.name, l.kh, l.ic, l.oc)
+            );
+        }
+        let mut layers = Vec::with_capacity(inputs.len());
+        for src in inputs {
+            let meta = src.meta;
+            ensure!(
+                src.gemm.name == meta.name,
+                "layer {}: bank stream named {}",
+                meta.name,
+                src.gemm.name
+            );
             let k = meta.kh * meta.kw * meta.ic;
             ensure!(
-                gemm.k == k && gemm.oc == meta.oc,
+                src.gemm.k == k && src.gemm.oc == meta.oc,
                 "layer {}: gemm {}x{} vs manifest {}x{}",
                 meta.name,
-                gemm.oc,
-                gemm.k,
+                src.gemm.oc,
+                src.gemm.k,
                 meta.oc,
                 k
             );
-            let (_, bias) = weights.param(&format!("{}_b", meta.name))?;
-            ensure!(bias.len() == meta.oc, "layer {}: bias len", meta.name);
-            let act_scale = if act_quant { m.act_scales[li] } else { 0.0 };
-            let requant = if act_scale > 0.0 {
-                Some(kernels::Requant::new(act_scale, &gemm.scales))
+            ensure!(src.bias.len() == meta.oc, "layer {}: bias len", meta.name);
+            let requant = if src.act_scale > 0.0 {
+                Some(kernels::Requant::new(src.act_scale, &src.gemm.scales))
             } else {
                 None
             };
@@ -343,40 +445,16 @@ impl NetworkPlan {
                 kw: meta.kw,
                 ic: meta.ic,
                 oc: meta.oc,
-                gemm,
-                bias: bias.to_vec(),
-                act_scale,
+                gemm: src.gemm,
+                bias: src.bias,
+                act_scale: src.act_scale,
                 requant,
             });
         }
-        // The walk below must consume every layer in manifest order; do a
-        // dry pass now so registration fails fast on a roster mismatch.
-        let expected = synth_layer_metas(&m.net, m.layers[0].oh, m.num_classes)?;
-        ensure!(
-            expected.len() == m.layers.len(),
-            "{}: spec walk yields {} layers, manifest has {}",
-            m.net,
-            expected.len(),
-            m.layers.len()
-        );
-        for (e, l) in expected.iter().zip(m.layers.iter()) {
-            ensure!(
-                e.name == l.name && e.kh == l.kh && e.ic == l.ic && e.oc == l.oc,
-                "{}: spec layer {:?} vs manifest {:?}",
-                m.net,
-                (&e.name, e.kh, e.ic, e.oc),
-                (&l.name, l.kh, l.ic, l.oc)
-            );
-        }
-        let mean_rmse = if transformed.is_empty() {
-            0.0
-        } else {
-            transformed.iter().map(|s| s.grid_rmse).sum::<f64>() / transformed.len() as f64
-        };
         Ok(NetworkPlan {
-            net: m.net.clone(),
-            classes: m.num_classes,
-            img: m.layers[0].oh,
+            net: net.to_string(),
+            classes,
+            img,
             mean_rmse,
             spec,
             layers,

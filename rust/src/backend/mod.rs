@@ -16,6 +16,9 @@
 //!   (`gemm`), im2col conv lowering (`conv`), graph walk (`graph`), and
 //!   batch parallelism (`parallel`). Serves straight from the §IV-D
 //!   encoded weights; needs no Python, HLO artifacts, or XLA.
+//!   [`NativeBackend::load`] registers through the compiled-artifact
+//!   cache (`crate::artifact`): warm cold-starts decode a `.strumc`
+//!   file instead of re-running the quantizer.
 //! * [`PjrtBackend`] — the original XLA/PJRT path (AOT-lowered HLO
 //!   executables with weights as arguments). Requires the `pjrt` cargo
 //!   feature and exported `artifacts/hlo/` files.
@@ -112,22 +115,38 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
-    /// Transforms + encodes `weights` per `cfg` and builds the plan.
-    pub fn new(weights: &NetWeights, cfg: &EvalConfig) -> Result<NativeBackend> {
-        let plan = NetworkPlan::build(weights, cfg)?;
-        Ok(NativeBackend {
+    fn from_plan(plan: NetworkPlan) -> NativeBackend {
+        NativeBackend {
             plan,
             // The engine handles any m; advertise power-of-two sizes up
             // to 256 so the batcher's cap logic has shapes to pick from.
             sizes: vec![1, 2, 4, 8, 16, 32, 64, 128, 256],
             active: std::sync::atomic::AtomicUsize::new(0),
-        })
+        }
     }
 
-    /// Loads `artifacts/weights/<net>.{json,bin}` and builds the plan.
+    /// Transforms + encodes `weights` per `cfg` and builds the plan
+    /// (the compile-at-registration path — in-memory workloads/tests).
+    pub fn new(weights: &NetWeights, cfg: &EvalConfig) -> Result<NativeBackend> {
+        Ok(Self::from_plan(NetworkPlan::build(weights, cfg)?))
+    }
+
+    /// Binds a backend from a compiled `.strumc` artifact: decode + bind
+    /// only, zero quantizer work.
+    pub fn from_compiled(compiled: &crate::artifact::CompiledNet) -> Result<NativeBackend> {
+        Ok(Self::from_plan(NetworkPlan::from_artifact(compiled)?))
+    }
+
+    /// Loads `artifacts/weights/<net>.{json,bin}` and binds the plan
+    /// through the `.strumc` cache under `<artifacts>/cache/` — cold
+    /// start on a warm cache is read + decode, not re-quantization
+    /// (missing/stale artifacts are compiled and persisted
+    /// transparently).
     pub fn load(artifacts: &Path, net: &str, cfg: &EvalConfig) -> Result<NativeBackend> {
         let weights = NetWeights::load(artifacts, net)?;
-        Self::new(&weights, cfg)
+        let cache = crate::artifact::ArtifactCache::under(artifacts);
+        let (compiled, _outcome) = cache.load_or_compile(&weights, cfg)?;
+        Self::from_compiled(&compiled)
     }
 
     pub fn plan(&self) -> &NetworkPlan {

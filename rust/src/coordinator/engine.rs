@@ -1,8 +1,10 @@
 //! Fleet-level serving engine: ONE shared worker pool serving many
 //! model variants side by side.
 //!
-//! This is the multi-tenant redesign of the old one-`Coordinator`-per-
-//! variant layout. [`Engine::start`] spawns a single pool of worker
+//! This is the multi-tenant redesign of the old one-coordinator-per-
+//! variant layout (the single-variant `Coordinator` shim is gone —
+//! register one variant on an `Engine` instead).
+//! [`Engine::start`] spawns a single pool of worker
 //! threads sized to the machine; [`Engine::register`] hot-adds a variant
 //! (its own bounded queue + [`BatchPolicy`]) and returns a
 //! [`VariantHandle`] for submission; [`Engine::retire`] drains and

@@ -13,17 +13,18 @@
 //! serializable via `util/json`). Python is never on this path; threads
 //! + channels (tokio is not in the vendored closure — see Cargo.toml).
 //!
-//! [`Coordinator`] remains as a thin single-variant shim over the
-//! engine for one release.
+//! The old single-variant `Coordinator` shim has been deleted: register
+//! exactly one variant on an [`Engine`] for the same behaviour on the
+//! same thread budget. Native registrations flow through the
+//! compiled-artifact cache ([`Router::register_native_cached`]) so a
+//! warm cold-start decodes `.strumc` banks instead of re-quantizing.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod router;
-pub mod server;
 
 pub use batcher::BatchPolicy;
 pub use engine::{Engine, EngineOptions, InferReply, SubmitError, Ticket, VariantHandle};
 pub use metrics::{FleetSnapshot, LatencyStats, MetricsSnapshot, VariantSnapshot};
 pub use router::{Router, Variant};
-pub use server::{Coordinator, CoordinatorOptions};

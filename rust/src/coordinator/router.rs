@@ -2,8 +2,11 @@
 //! to an execution [`Backend`] — PJRT executables or the native integer
 //! engine. All weight staging (dequantize for PJRT, encode→dual-bank for
 //! native) happens ONCE at registration; the request path only binds the
-//! image tensor.
+//! image tensor. Native registration can additionally go through the
+//! compiled-artifact cache ([`Router::register_native_cached`]) so even
+//! the one-time staging skips the quantizer on warm cold-starts.
 
+use crate::artifact::{ArtifactCache, CacheOutcome};
 use crate::backend::{Backend, BackendKind, NativeBackend, PjrtBackend};
 use crate::model::eval::EvalConfig;
 use crate::model::import::NetWeights;
@@ -127,6 +130,23 @@ impl Router {
     ) -> Result<Arc<Variant>> {
         let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new(weights, cfg)?);
         self.insert(key, backend)
+    }
+
+    /// Registers a native variant through the compiled-artifact cache:
+    /// on a hit the backend binds from the `.strumc` bytes with zero
+    /// quantize/encode work; on a miss it compiles once and persists.
+    /// Returns the cache outcome alongside the variant so callers can
+    /// surface it (CLI/CI assert cold starts really are cached).
+    pub fn register_native_cached(
+        &mut self,
+        key: &str,
+        weights: &NetWeights,
+        cfg: &EvalConfig,
+        cache: &ArtifactCache,
+    ) -> Result<(Arc<Variant>, CacheOutcome)> {
+        let (compiled, outcome) = cache.load_or_compile(weights, cfg)?;
+        let backend: Arc<dyn Backend> = Arc::new(NativeBackend::from_compiled(&compiled)?);
+        Ok((self.insert(key, backend)?, outcome))
     }
 
     fn insert(&mut self, key: &str, backend: Arc<dyn Backend>) -> Result<Arc<Variant>> {

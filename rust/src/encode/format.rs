@@ -49,8 +49,21 @@ impl EncodedLayer {
     }
 }
 
+thread_local! {
+    /// Per-thread count of [`encode_layer`] invocations — with
+    /// `transform_network_calls` this asserts the cached serve path does
+    /// zero quantize/encode work (thread-local: no test cross-talk).
+    static ENCODE_CALLS: std::cell::Cell<u64> = std::cell::Cell::new(0);
+}
+
+/// How many times THIS thread has run [`encode_layer`].
+pub fn encode_layer_calls() -> u64 {
+    ENCODE_CALLS.with(|c| c.get())
+}
+
 /// Encodes a StruM-transformed layer into the compressed format.
 pub fn encode_layer(layer: &StrumLayer) -> EncodedLayer {
+    ENCODE_CALLS.with(|c| c.set(c.get() + 1));
     let params = layer.params;
     let layout = BlockLayout::new(layer.oc, layer.rows, layer.cols, params.block);
     let q = params.method.payload_bits();

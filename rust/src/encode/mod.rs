@@ -7,6 +7,12 @@
 //!   block order.
 //! * [`compression`] — the paper's analytic compression ratios (Eq. 1 and
 //!   Eq. 2) plus measured-size accounting to validate them.
+//!
+//! Encoded layers are also the payload of compiled `.strumc` artifacts
+//! (`crate::artifact`): `strum compile` serializes them to disk once and
+//! the serve path decodes straight from the cached bank bytes —
+//! [`format::encode_layer_calls`] counts invocations so tests can assert
+//! the cached path never re-encodes.
 
 pub mod bitstream;
 pub mod compression;
@@ -14,4 +20,4 @@ pub mod format;
 
 pub use bitstream::{BitReader, BitWriter};
 pub use compression::{ratio_payload, ratio_sparsity};
-pub use format::{decode_layer, encode_layer, EncodedLayer};
+pub use format::{decode_layer, encode_layer, encode_layer_calls, EncodedLayer};

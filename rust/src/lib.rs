@@ -23,6 +23,7 @@
 //! |---|---|---|
 //! | [`quant`] | §IV-A..C | block division, DLIQ, MIP2Q, structured sparsity, INT8 calibration |
 //! | [`encode`] | §IV-D.1 | mask-header + payload weight codec, Eq. 1/2 compression ratios |
+//! | [`artifact`] | §IV-D | compiled `.strumc` model artifacts: `compile_net` (quantize+encode once, offline) + versioned serialization + content-addressed cache; serve-time loads are read+decode+bind with zero quantizer work |
 //! | [`hw`] | §V, §VII-B | gate-level area/power cost model (multipliers, barrel shifters, PEs, DPU) |
 //! | [`sim`] | §V | cycle-level FlexNN DPU simulator with StruM routing + sparsity find-first |
 //! | [`model`] | §VI | network graph, mini zoo metadata, artifact import, top-1 evaluation |
@@ -46,7 +47,21 @@
 //! drain variants, and `strum serve --backend native --variants
 //! base,dliq,mip2q` serves the whole fleet with no Python, HLO artifact,
 //! or XLA dependency in the loop.
+//!
+//! ## Compile/serve split
+//!
+//! The model lifecycle has two phases. **Compile time** (`strum
+//! compile`, [`artifact::compile_net`]) runs float-load →
+//! `transform_network` → `encode_layer` → calibration once and writes a
+//! versioned `.strumc` artifact: identity header, per-layer §IV-D banks,
+//! activation scales, checksum. **Serve time** binds plans from those
+//! bytes ([`backend::NetworkPlan::from_artifact`], bit-identical to the
+//! compile-at-registration [`backend::NetworkPlan::build`]) through a
+//! content-addressed cache ([`artifact::ArtifactCache`]) that rebuilds
+//! transparently on version or weight mismatch — cold-starting a variant
+//! is a read + decode, not a re-quantization.
 
+pub mod artifact;
 pub mod backend;
 pub mod coordinator;
 pub mod encode;

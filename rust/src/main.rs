@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   quantize   Apply a StruM transform to a network; print stats + codec checks
+//!   compile    Quantize + encode once → versioned .strumc artifact(s) in the cache
 //!   eval       Top-1 accuracy of a (net, method, p) point through PJRT
 //!   sim        Cycle-simulate a network on the FlexNN DPU model
 //!   hw         Hardware cost model summary (PE variants)
@@ -16,6 +17,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
+use strum_dpu::artifact::ArtifactCache;
 use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
 use strum_dpu::backend::BackendKind;
 use strum_dpu::coordinator::{Engine, EngineOptions, Router, SubmitError};
@@ -77,6 +79,7 @@ fn parse_backend(args: &Args) -> Result<BackendKind> {
 fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "quantize" => cmd_quantize(args),
+        "compile" => cmd_compile(args),
         "eval" => cmd_eval(args),
         "sim" => cmd_sim(args),
         "hw" => cmd_hw(args),
@@ -93,8 +96,13 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "strum — StruM structured mixed precision DPU coordinator\n\
-         usage: strum <quantize|eval|sim|hw|report|serve|selfcheck> [flags]\n\
+         usage: strum <quantize|compile|eval|sim|hw|report|serve|selfcheck> [flags]\n\
          common: --artifacts DIR --net NAME --method {{baseline|sparsity|dliq-qN|mip2q-LN}} --p F\n\
+         compile: strum compile --net N [--variants base,dliq,mip2q] [--out FILE]\n\
+                 quantize + encode once and write versioned .strumc artifact(s) into\n\
+                 the content-addressed cache under <artifacts>/cache/; a later serve\n\
+                 or eval run binds them with zero re-quantization. Falls back to the\n\
+                 same synthetic net serve uses when artifacts are missing.\n\
          eval:   strum eval --net N [--backend {{pjrt|native}}] [--limit N]\n\
          report: strum report <table1|fig10|fig11|fig12|fig13|ablation|all> [--limit N] [--out FILE]\n\
          serve:  strum serve --net N --variants base,dliq,mip2q --requests 2000 --rate 500\n\
@@ -103,7 +111,9 @@ fn print_help() {
                  one shared worker pool serves every variant; variant specs are\n\
                  base|dliq|mip2q aliases or method names, with optional @p (e.g. mip2q-L5@0.25);\n\
                  without --variants the single --method/--p point is served.\n\
-                 With --backend native and no artifacts, a synthetic net + dataset is served."
+                 With --backend native and no artifacts, a synthetic net + dataset is served.\n\
+                 Native variants register through the .strumc artifact cache — run\n\
+                 `strum compile` first and cold start is a read+decode, not a re-quantization."
     );
 }
 
@@ -362,14 +372,9 @@ fn parse_variant_spec(token: &str) -> Result<(Method, f64)> {
     Ok((method, p))
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let dir = artifacts_dir(args);
-    let net = args.str("net", zoo::SWEEP_NET);
-    let n_requests = args.usize("requests", 1000);
-    let rate = args.f64("rate", 400.0);
-    let backend = parse_backend(args)?;
-    // The variant fleet: --variants base,dliq,mip2q, else the single
-    // --method/--p point (old single-variant CLI still works).
+/// The variant fleet for compile/serve: `--variants base,dliq,mip2q`,
+/// else the single `--method`/`--p` point.
+fn parse_variant_specs(args: &Args) -> Result<Vec<(Method, f64)>> {
     let specs: Vec<(Method, f64)> = match args.opt_str("variants") {
         Some(list) => list
             .split(',')
@@ -383,6 +388,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     };
     anyhow::ensure!(!specs.is_empty(), "--variants is empty");
+    Ok(specs)
+}
+
+/// The deterministic synthetic fallback net used when artifacts are
+/// missing. `strum compile` and a later `strum serve` must build
+/// byte-identical weights here, so the cache fingerprints line up and
+/// the serve run hits the compiled artifact.
+fn synthetic_weights(net: &str) -> Result<NetWeights> {
+    let (img, classes) = (16usize, 10usize);
+    let mut w = synth_net_weights(net, img, classes, 11)?;
+    let mut rng = Rng::new(0xCA11B);
+    let px = img * img * 3;
+    let calib: Vec<f32> = (0..4 * px).map(|_| rng.f32()).collect();
+    w.manifest.act_scales = calibrate_act_scales(&w, &calib, 4)?;
+    Ok(w)
+}
+
+/// Compile time of the artifact pipeline: float-load → transform →
+/// encode → serialize, once per (net, method, p) point, into the
+/// content-addressed `.strumc` cache. Serving then binds from these
+/// bytes with no `transform_network`/`encode_layer` on the path.
+fn cmd_compile(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let net = args.str("net", zoo::SWEEP_NET);
+    let specs = parse_variant_specs(args)?;
+    let weights = match NetWeights::load(&dir, &net) {
+        Ok(w) => w,
+        Err(e) => {
+            println!("artifacts unavailable ({:#}); compiling the synthetic {}", e, net);
+            synthetic_weights(&net)?
+        }
+    };
+    let out = args.opt_str("out");
+    anyhow::ensure!(
+        out.is_none() || specs.len() == 1,
+        "--out takes exactly one variant (got {})",
+        specs.len()
+    );
+    let cache = ArtifactCache::under(&dir);
+    for &(method, p) in &specs {
+        let cfg = EvalConfig::paper(method, p);
+        let t0 = std::time::Instant::now();
+        let (compiled, outcome) = cache.load_or_compile(&weights, &cfg)?;
+        let path = cache.path_for(&compiled.identity);
+        println!(
+            "{} {} p={}: {} layers, {:.1} KiB encoded, cache {} ({:.1} ms) → {}",
+            net,
+            method.name(),
+            p,
+            compiled.layers.len(),
+            compiled.encoded_bytes() as f64 / 1024.0,
+            outcome,
+            t0.elapsed().as_secs_f64() * 1e3,
+            path.display()
+        );
+        if let Some(out) = &out {
+            compiled.save(std::path::Path::new(out)).map_err(anyhow::Error::from)?;
+            println!("wrote {}", out);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let net = args.str("net", zoo::SWEEP_NET);
+    let n_requests = args.usize("requests", 1000);
+    let rate = args.f64("rate", 400.0);
+    let backend = parse_backend(args)?;
+    // The variant fleet: --variants base,dliq,mip2q, else the single
+    // --method/--p point (old single-variant CLI still works).
+    let specs = parse_variant_specs(args)?;
 
     let mut router = match backend {
         BackendKind::Pjrt => {
@@ -409,16 +486,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             match loaded {
                 Ok((w, d)) => (Some(w), d),
                 Err(e) => {
-                    let (img, classes, n) = (16usize, 10usize, 64usize);
+                    let w = synthetic_weights(&net)?;
+                    let (img, classes) =
+                        (w.manifest.layers[0].oh, w.manifest.num_classes);
+                    let n = 64usize;
                     println!(
                         "artifacts unavailable ({:#}); serving a synthetic {} ({}x{}x3, {} classes)",
                         e, net, img, img, classes
                     );
-                    let mut w = synth_net_weights(&net, img, classes, 11)?;
-                    let mut rng = Rng::new(0xCA11B);
+                    let mut rng = Rng::new(0xDA7A5E7);
                     let px = img * img * 3;
-                    let calib: Vec<f32> = (0..4 * px).map(|_| rng.f32()).collect();
-                    w.manifest.act_scales = calibrate_act_scales(&w, &calib, 4)?;
                     let images: Vec<f32> = (0..n * px).map(|_| rng.f32()).collect();
                     let labels: Vec<i32> =
                         (0..n).map(|_| rng.range(0, classes) as i32).collect();
@@ -436,15 +513,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.opt_str("max-batch").and_then(|s| s.parse().ok()),
         quantum: args.usize("quantum", 0),
     });
+    let cache = ArtifactCache::under(&dir);
     let mut handles = Vec::new();
     for &(method, p) in &specs {
         let key = format!("{}:{}:p{}:{}", net, method.name(), p, backend.name());
         let cfg = EvalConfig::paper(method, p);
+        // Native variants register through the compiled-artifact cache:
+        // with a prior `strum compile` (or serve) run, this is a pure
+        // read + decode — no transform/encode work at cold start.
         let v = match &weights {
-            Some(w) => router.register_native_weights(&key, w, &cfg)?,
-            None => router.register_kind(&key, &dir, &net, &cfg, backend)?,
+            Some(w) => {
+                let (v, outcome) = router.register_native_cached(&key, w, &cfg, &cache)?;
+                println!(
+                    "registered {} (batches: {:?}; artifact cache: {})",
+                    key,
+                    v.batches(),
+                    outcome
+                );
+                v
+            }
+            None => {
+                let v = router.register_kind(&key, &dir, &net, &cfg, backend)?;
+                println!("registered {} (batches: {:?})", key, v.batches());
+                v
+            }
         };
-        println!("registered {} (batches: {:?})", key, v.batches());
         handles.push(engine.register(v)?);
     }
     println!(

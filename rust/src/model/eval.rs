@@ -65,8 +65,21 @@ pub struct EvalResult {
     pub mean_rmse: f64,
 }
 
+thread_local! {
+    /// Per-thread count of [`transform_network`] invocations — the debug
+    /// counter behind the "no re-quantization on the cached serve path"
+    /// contract (thread-local so concurrent tests can't cross-talk).
+    static TRANSFORM_CALLS: std::cell::Cell<u64> = std::cell::Cell::new(0);
+}
+
+/// How many times THIS thread has run [`transform_network`].
+pub fn transform_network_calls() -> u64 {
+    TRANSFORM_CALLS.with(|c| c.get())
+}
+
 /// Applies the configured transform to every quantizable layer.
 pub fn transform_network(weights: &NetWeights, cfg: &EvalConfig) -> Result<Vec<StrumLayer>> {
+    TRANSFORM_CALLS.with(|c| c.set(c.get() + 1));
     let layers = weights.quant_layers()?;
     Ok(layers
         .iter()
@@ -189,7 +202,9 @@ pub fn evaluate(
 
 /// Runs top-1 evaluation through the native integer backend — same
 /// contract as [`evaluate`], but with no PJRT/XLA or HLO artifact on the
-/// path (only `weights/<net>.{json,bin}` is read).
+/// path (only `weights/<net>.{json,bin}` is read). Goes through the
+/// `.strumc` artifact cache under `<artifacts>/cache/`: a second run
+/// binds the plan from disk with no quantize/encode work.
 pub fn evaluate_native(
     artifacts: &Path,
     net: &str,
@@ -197,17 +212,29 @@ pub fn evaluate_native(
     cfg: &EvalConfig,
 ) -> Result<EvalResult> {
     let weights = NetWeights::load(artifacts, net)?;
-    evaluate_native_weights(&weights, data, cfg)
+    let cache = crate::artifact::ArtifactCache::under(artifacts);
+    let (compiled, _outcome) = cache.load_or_compile(&weights, cfg)?;
+    let plan = crate::backend::NetworkPlan::from_artifact(&compiled)?;
+    eval_plan(&plan, data, cfg)
 }
 
 /// [`evaluate_native`] over already-loaded weights (synthetic-workload
-/// and test entry point).
+/// and test entry point — builds the plan directly, no disk cache).
 pub fn evaluate_native_weights(
     weights: &NetWeights,
     data: &DataSet,
     cfg: &EvalConfig,
 ) -> Result<EvalResult> {
     let plan = crate::backend::NetworkPlan::build(weights, cfg)?;
+    eval_plan(&plan, data, cfg)
+}
+
+/// The shared native evaluation loop over an already-bound plan.
+fn eval_plan(
+    plan: &crate::backend::NetworkPlan,
+    data: &DataSet,
+    cfg: &EvalConfig,
+) -> Result<EvalResult> {
     if plan.img != data.img {
         return Err(anyhow!("plan expects {}px images, dataset has {}px", plan.img, data.img));
     }
@@ -221,7 +248,7 @@ pub fn evaluate_native_weights(
         // The native engine runs any batch size exactly — no padding.
         let real = chunk.min(total - start);
         let logits = crate::backend::parallel::infer_batch(
-            &plan,
+            plan,
             &data.images[start * px..(start + real) * px],
             real,
         )?;

@@ -5,6 +5,7 @@
 //! pulled from crates.io is implemented here from scratch:
 //!
 //! * [`json`] — a small, complete JSON parser/serializer (manifests, reports)
+//! * [`hash`] — FNV-1a 64 (artifact checksums + cache content addressing)
 //! * [`prng`] — SplitMix64 / Xoshiro256** PRNG + Gaussian sampling
 //! * [`stats`] — summary statistics and timing helpers
 //! * [`cli`] — declarative-ish command-line flag parsing
@@ -14,6 +15,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod pool;
 pub mod prng;

@@ -1,0 +1,239 @@
+//! Compile→serve artifact pipeline integration tests — artifact-free in
+//! the repo sense (synthetic nets), artifact-FULL in the `.strumc`
+//! sense: compile-time quantize/encode must round-trip through the
+//! versioned byte format into a serve-time plan that is bit-identical
+//! to the quantize-at-registration path, the cache must make warm
+//! registrations quantizer-free (asserted via the thread-local debug
+//! counters), and every corruption of a `.strumc` byte stream must
+//! surface as a typed error — never a panic, never a silent success.
+
+use std::path::PathBuf;
+use strum_dpu::artifact::{
+    compile_net, reseal, ArtifactCache, ArtifactError, CacheOutcome, CompiledNet, MissReason,
+};
+use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
+use strum_dpu::backend::NetworkPlan;
+use strum_dpu::coordinator::Router;
+use strum_dpu::encode::encode_layer_calls;
+use strum_dpu::model::eval::{transform_network_calls, EvalConfig};
+use strum_dpu::model::import::NetWeights;
+use strum_dpu::model::zoo;
+use strum_dpu::quant::Method;
+use strum_dpu::util::prng::Rng;
+
+fn random_images(n: usize, img: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * img * img * 3).map(|_| rng.f32()).collect()
+}
+
+/// Synthetic weights with statically calibrated activation scales — the
+/// same shape of input a real `weights/<net>.{json,bin}` pair carries.
+fn calibrated_weights(net: &str, img: usize, classes: usize, seed: u64) -> NetWeights {
+    let mut w = synth_net_weights(net, img, classes, seed).unwrap();
+    let calib = random_images(2, img, seed ^ 0x5EED);
+    w.manifest.act_scales = calibrate_act_scales(&w, &calib, 2).unwrap();
+    w
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "strum-artifact-test-{}-{}",
+        std::process::id(),
+        tag
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// The acceptance check: for every zoo net and both paper methods, a
+/// plan decoded from serialized `.strumc` bytes produces logits
+/// bit-identical to the quantize+encode-at-registration build path.
+#[test]
+fn from_artifact_bit_identical_to_build_on_all_zoo_nets() {
+    let img = 12usize;
+    let classes = 4usize;
+    let px = img * img * 3;
+    let images = random_images(2, img, 77);
+    for net in zoo::net_names() {
+        let weights = calibrated_weights(net, img, classes, 13);
+        for (method, p) in [(Method::Dliq { q: 4 }, 0.5), (Method::Mip2q { l_max: 7 }, 0.5)] {
+            let cfg = EvalConfig::paper(method, p);
+            let built = NetworkPlan::build(&weights, &cfg).unwrap();
+            let compiled = compile_net(&weights, &cfg).unwrap();
+            // Through the full byte layout, not just the in-memory struct.
+            let loaded = CompiledNet::from_bytes(&compiled.to_bytes()).unwrap();
+            let plan = NetworkPlan::from_artifact(&loaded).unwrap();
+            assert_eq!(plan.net, built.net);
+            assert_eq!(plan.classes, built.classes);
+            assert_eq!(plan.img, built.img);
+            assert_eq!(plan.mean_rmse.to_bits(), built.mean_rmse.to_bits());
+            for i in 0..2 {
+                let image = &images[i * px..(i + 1) * px];
+                let a = built.forward_one(image).unwrap();
+                let b = plan.forward_one(image).unwrap();
+                let a_bits: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let b_bits: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    a_bits, b_bits,
+                    "{} {:?} image {}: artifact path diverged from build path",
+                    net, method, i
+                );
+            }
+        }
+    }
+}
+
+/// Artifact stability: compile → serialize → load → re-serialize is
+/// byte-identical, and re-compiling from the same weights reproduces
+/// the exact same bytes (the pipeline is deterministic end to end).
+#[test]
+fn artifact_roundtrip_is_stable() {
+    let weights = calibrated_weights("mini_resnet_a", 12, 5, 29);
+    for (method, p) in [(Method::Dliq { q: 4 }, 0.5), (Method::Mip2q { l_max: 7 }, 0.25)] {
+        let cfg = EvalConfig::paper(method, p);
+        let bytes = compile_net(&weights, &cfg).unwrap().to_bytes();
+        let reloaded = CompiledNet::from_bytes(&bytes).unwrap();
+        assert_eq!(reloaded.to_bytes(), bytes, "{:?}: load→save drifted", method);
+        let recompiled = compile_net(&weights, &cfg).unwrap();
+        assert_eq!(recompiled.to_bytes(), bytes, "{:?}: re-compile drifted", method);
+    }
+}
+
+/// Each corruption class maps to its own typed error: truncation, a
+/// foreign magic, a format version skew, and checksum damage are all
+/// distinguishable by the caller (the cache logs them differently).
+#[test]
+fn typed_load_errors_are_distinct() {
+    let weights = calibrated_weights("mini_cnn_s", 8, 4, 31);
+    let cfg = EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5);
+    let bytes = compile_net(&weights, &cfg).unwrap().to_bytes();
+
+    // Hard truncation: shorter than any plausible header.
+    let err = CompiledNet::from_bytes(&bytes[..4]).unwrap_err();
+    assert!(matches!(err, ArtifactError::Truncated { .. }), "{}", err);
+
+    // A file cut mid-body still reports truncation (declared length).
+    let err = CompiledNet::from_bytes(&bytes[..bytes.len() - 5]).unwrap_err();
+    assert!(matches!(err, ArtifactError::Truncated { .. }), "{}", err);
+
+    // Foreign magic.
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xFF;
+    let err = CompiledNet::from_bytes(&bad).unwrap_err();
+    assert!(matches!(err, ArtifactError::BadMagic), "{}", err);
+
+    // Format version skew (resealed so only the version differs).
+    let mut bad = bytes.clone();
+    let v = u32::from_le_bytes(bad[8..12].try_into().unwrap()) + 1;
+    bad[8..12].copy_from_slice(&v.to_le_bytes());
+    reseal(&mut bad);
+    let err = CompiledNet::from_bytes(&bad).unwrap_err();
+    assert!(
+        matches!(err, ArtifactError::VersionMismatch { kind: "format", .. }),
+        "{}",
+        err
+    );
+
+    // Body damage: the checksum trailer catches it before parsing.
+    let mut bad = bytes.clone();
+    let mid = bytes.len() / 2;
+    bad[mid] ^= 0x40;
+    let err = CompiledNet::from_bytes(&bad).unwrap_err();
+    assert!(matches!(err, ArtifactError::ChecksumMismatch { .. }), "{}", err);
+
+    // The pristine bytes still load.
+    assert!(CompiledNet::from_bytes(&bytes).is_ok());
+}
+
+/// Property: corrupting random bytes (or truncating at random lengths)
+/// of a valid artifact never panics and never loads silently — every
+/// altered stream is rejected with a typed error.
+#[test]
+fn random_corruption_never_panics_or_silently_succeeds() {
+    let weights = calibrated_weights("mini_cnn_s", 8, 4, 37);
+    let cfg = EvalConfig::paper(Method::Dliq { q: 4 }, 0.5);
+    let bytes = compile_net(&weights, &cfg).unwrap().to_bytes();
+    let mut rng = Rng::new(0xC0881);
+    for trial in 0..200 {
+        let mut bad = bytes.clone();
+        // 1–3 byte corruptions, each guaranteed to change the byte.
+        let flips = 1 + rng.range(0, 3);
+        for _ in 0..flips {
+            let pos = rng.range(0, bad.len());
+            let delta = 1 + rng.range(0, 255) as u8;
+            bad[pos] ^= delta;
+        }
+        if bad == bytes {
+            // Two flips landed on the same byte and cancelled out.
+            continue;
+        }
+        assert!(
+            CompiledNet::from_bytes(&bad).is_err(),
+            "trial {}: corrupted artifact loaded silently",
+            trial
+        );
+    }
+    for trial in 0..60 {
+        let cut = rng.range(0, bytes.len());
+        assert!(
+            CompiledNet::from_bytes(&bytes[..cut]).is_err(),
+            "trial {}: truncation to {} bytes loaded silently",
+            trial,
+            cut
+        );
+    }
+}
+
+/// The cold-start contract: once an artifact is cached, registration
+/// (router → cache → decode → bind) performs ZERO quantize or encode
+/// work — asserted with the thread-local `transform_network` /
+/// `encode_layer` invocation counters — and still serves logits
+/// bit-identical to a freshly built plan.
+#[test]
+fn cached_registration_does_no_quantize_or_encode_work() {
+    let dir = temp_dir("no-requantize");
+    let cache = ArtifactCache::with_version(&dir, 1);
+    let img = 12usize;
+    let weights = calibrated_weights("mini_vgg_a", img, 5, 41);
+    let cfg = EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5);
+
+    // Cold cache: the first registration compiles (and persists).
+    let (_, outcome) = cache.load_or_compile(&weights, &cfg).unwrap();
+    assert!(
+        matches!(outcome, CacheOutcome::Miss(MissReason::NotFound)),
+        "{}",
+        outcome
+    );
+
+    // Warm cache: register through the router and count quantizer work.
+    let built = NetworkPlan::build(&weights, &cfg).unwrap();
+    let t0 = transform_network_calls();
+    let e0 = encode_layer_calls();
+    let mut router = Router::native();
+    let (variant, outcome) = router
+        .register_native_cached("mip2q", &weights, &cfg, &cache)
+        .unwrap();
+    assert!(outcome.is_hit(), "{}", outcome);
+    assert_eq!(
+        transform_network_calls(),
+        t0,
+        "cached registration re-ran transform_network"
+    );
+    assert_eq!(encode_layer_calls(), e0, "cached registration re-ran encode_layer");
+
+    // And the served results are the build path's, bit for bit.
+    let px = img * img * 3;
+    let images = random_images(3, img, 43);
+    use strum_dpu::backend::Backend;
+    let got = variant.backend.infer_batch(images.clone(), 3).unwrap();
+    for i in 0..3 {
+        let want = built.forward_one(&images[i * px..(i + 1) * px]).unwrap();
+        let got_bits: Vec<u32> = got[i * 5..(i + 1) * 5].iter().map(|v| v.to_bits()).collect();
+        let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, want_bits, "image {}", i);
+    }
+    // Counting the comparison plan's own build keeps the accounting
+    // honest: the build path DOES transform+encode.
+    assert!(transform_network_calls() > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -8,9 +8,7 @@
 use std::time::Duration;
 use strum_dpu::backend::graph::{calibrate_act_scales, forward_f32_reference, synth_net_weights};
 use strum_dpu::backend::{Backend, BackendKind, NativeBackend, NetworkPlan};
-use strum_dpu::coordinator::{
-    Coordinator, CoordinatorOptions, Engine, EngineOptions, Router, SubmitError,
-};
+use strum_dpu::coordinator::{Engine, EngineOptions, Router, SubmitError};
 use strum_dpu::model::eval::{evaluate_native_weights, transform_network, EvalConfig};
 use strum_dpu::model::import::{DataSet, NetWeights};
 use strum_dpu::model::zoo;
@@ -132,10 +130,12 @@ fn every_zoo_net_executes_natively() {
     }
 }
 
-/// Full native serving path: router → coordinator → batcher → workers,
-/// replies must equal direct plan execution. No artifacts involved.
+/// Full native serving path for a single variant: router → engine →
+/// workers, replies must equal direct plan execution. No artifacts
+/// involved. (This is the old single-variant `Coordinator` contract,
+/// now expressed as one registration on the shared-pool engine.)
 #[test]
-fn native_coordinator_serves_end_to_end() {
+fn native_engine_serves_single_variant_end_to_end() {
     let img = 16usize;
     let classes = 7usize;
     let weights = calibrated_weights("mini_resnet_a", img, classes, 21);
@@ -153,20 +153,18 @@ fn native_coordinator_serves_end_to_end() {
         .unwrap();
     assert_eq!(v.classes, classes);
     assert_eq!(v.img, img);
-    let coord = Coordinator::start(
-        v,
-        CoordinatorOptions {
-            max_wait: Duration::from_millis(2),
-            workers: 2,
-            max_batch: Some(8),
-            ..CoordinatorOptions::default()
-        },
-    );
+    let engine = Engine::start(EngineOptions {
+        max_wait: Duration::from_millis(2),
+        workers: 2,
+        max_batch: Some(8),
+        ..EngineOptions::default()
+    });
+    let handle = engine.register(v).unwrap();
     let px = img * img * 3;
     let n = 24usize;
     let images = random_images(n, img, 5);
     let pend: Vec<_> = (0..n)
-        .map(|i| coord.submit(images[i * px..(i + 1) * px].to_vec()).unwrap())
+        .map(|i| handle.submit(images[i * px..(i + 1) * px].to_vec()).unwrap())
         .collect();
     for (i, ticket) in pend.into_iter().enumerate() {
         let reply = ticket.wait_deadline(Duration::from_secs(60)).unwrap();
@@ -175,9 +173,9 @@ fn native_coordinator_serves_end_to_end() {
         assert_eq!(reply.class, argmax(&direct), "request {}", i);
         assert_eq!(reply.logits.len(), classes);
     }
-    let snap = coord.metrics();
+    let snap = engine.metrics();
     assert_eq!(snap.fleet.completed, n as u64);
-    coord.shutdown();
+    engine.shutdown();
 }
 
 /// Malformed requests get a typed `BadImage` error at submit time
@@ -192,10 +190,11 @@ fn submit_rejects_wrong_image_size() {
     };
     let mut router = Router::native();
     let v = router.register_native_weights("v", &weights, &cfg).unwrap();
-    let coord = Coordinator::start(v, CoordinatorOptions::default());
+    let engine = Engine::start(EngineOptions::default());
+    let handle = engine.register(v).unwrap();
     // Too short and too long both bounce with a typed error.
     for bad in [7usize, img * img * 3 + 1] {
-        let err = coord.submit(vec![0.5; bad]).unwrap_err();
+        let err = handle.submit(vec![0.5; bad]).unwrap_err();
         assert!(
             matches!(err, SubmitError::BadImage { got, .. } if got == bad),
             "len {}: unexpected error {:?}",
@@ -206,9 +205,9 @@ fn submit_rejects_wrong_image_size() {
         assert!(msg.contains("expected"), "unhelpful error: {}", msg);
     }
     // A well-formed request still succeeds.
-    let ticket = coord.submit(vec![0.5; img * img * 3]).unwrap();
+    let ticket = handle.submit(vec![0.5; img * img * 3]).unwrap();
     assert!(ticket.wait_deadline(Duration::from_secs(30)).is_ok());
-    coord.shutdown();
+    engine.shutdown();
 }
 
 /// The multi-variant acceptance test: ONE engine, one shared worker

@@ -1,12 +1,12 @@
 //! Runtime integration tests over the real artifacts (skipped with a
 //! notice when `make train artifacts` has not been run): HLO load +
 //! execute, rust-vs-HLO kernel bit-exactness, accuracy sanity, and the
-//! live coordinator serving path.
+//! live serving-engine path.
 
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
-use strum_dpu::coordinator::{Coordinator, CoordinatorOptions, Router};
+use strum_dpu::coordinator::{Engine, EngineOptions, Router};
 use strum_dpu::model::eval::{evaluate, EvalConfig};
 use strum_dpu::model::import::{DataSet, NetWeights};
 use strum_dpu::quant::{Method};
@@ -197,10 +197,11 @@ fn mip2q_headline_accuracy() {
     );
 }
 
-/// Live coordinator: submit concurrent requests, all complete, batching
-/// happens, accuracy is sane, no request is dropped or reordered wrongly.
+/// Live serving engine: submit concurrent requests, all complete,
+/// batching happens, accuracy is sane, no request is dropped or
+/// reordered wrongly.
 #[test]
-fn coordinator_serves_correctly() {
+fn engine_serves_pjrt_variant_correctly() {
     let Some(dir) = artifacts() else { return };
     let Some(rt) = runtime() else { return };
     let rt = Arc::new(rt);
@@ -209,15 +210,13 @@ fn coordinator_serves_correctly() {
     let v = router
         .register("test", dir, net, &EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5))
         .unwrap();
-    let coord = Coordinator::start(
-        v,
-        CoordinatorOptions {
-            max_wait: Duration::from_millis(2),
-            workers: 2,
-            max_batch: Some(16),
-            ..CoordinatorOptions::default()
-        },
-    );
+    let engine = Engine::start(EngineOptions {
+        max_wait: Duration::from_millis(2),
+        workers: 2,
+        max_batch: Some(16),
+        ..EngineOptions::default()
+    });
+    let handle = engine.register(v).unwrap();
     let data = DataSet::load(dir, "eval").unwrap();
     let px = data.img * data.img * 3;
     let n = 64;
@@ -226,7 +225,7 @@ fn coordinator_serves_correctly() {
             let idx = i % data.n;
             (
                 idx,
-                coord
+                handle
                     .submit(data.images[idx * px..(idx + 1) * px].to_vec())
                     .unwrap(),
             )
@@ -242,5 +241,5 @@ fn coordinator_serves_correctly() {
     }
     // mini_cnn_s is a >85% model; 64 samples at ≥60% is a safe floor.
     assert!(correct * 10 >= n * 6, "accuracy too low: {}/{}", correct, n);
-    coord.shutdown();
+    engine.shutdown();
 }
