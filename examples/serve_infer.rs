@@ -6,6 +6,12 @@
 //! scheduler keeps either from starving the other.
 //!
 //! Run: `cargo run --release --example serve_infer -- [net] [requests] [rate]`
+//!
+//! Pass `--wire` to drive the same fleet over TCP instead of in-process
+//! handles: the example binds a loopback `WireServer` in front of the
+//! engine and submits every request through `WireClient` with a 250 ms
+//! deadline budget — identical engine, identical variants, one extra
+//! network hop (and typed deadline sheds when the budget is missed).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -16,6 +22,7 @@ use strum_dpu::model::eval::EvalConfig;
 use strum_dpu::model::import::DataSet;
 use strum_dpu::quant::Method;
 use strum_dpu::runtime::Runtime;
+use strum_dpu::server::{ErrorCode, WireClient, WireResponse, WireServer, WireServerOptions};
 use strum_dpu::util::prng::Rng;
 
 /// Open-loop Poisson load round-robined across the variant handles.
@@ -56,11 +63,71 @@ fn drive(
     Ok(counts)
 }
 
+/// Wire mode: the same open-loop load, but every request crosses TCP —
+/// loopback server in front of the engine, `WireClient` on the other
+/// side, a 250 ms deadline budget on each request.
+fn drive_wire(
+    engine: &Arc<Engine>,
+    keys: &[String],
+    data: &DataSet,
+    n: usize,
+    rate: f64,
+) -> anyhow::Result<(Vec<(usize, usize)>, usize)> {
+    let server = WireServer::bind("127.0.0.1:0", engine.clone(), WireServerOptions::default())?;
+    println!("wire mode: listening on {}", server.local_addr());
+    let mut client = WireClient::connect(server.local_addr().to_string())?;
+    let px = data.img * data.img * 3;
+    let mut rng = Rng::new(11);
+    let t0 = std::time::Instant::now();
+    let mut at = 0.0;
+    let mut counts = vec![(0usize, 0usize); keys.len()];
+    let mut shed = 0usize;
+    for i in 0..n {
+        at += rng.exponential(rate);
+        if let Some(d) = Duration::from_secs_f64(at).checked_sub(t0.elapsed()) {
+            std::thread::sleep(d);
+        }
+        let idx = i % data.n;
+        let vi = i % keys.len();
+        let image = &data.images[idx * px..(idx + 1) * px];
+        match client.infer_deadline(&keys[vi], image, Duration::from_millis(250))? {
+            WireResponse::Infer(r) => {
+                counts[vi].0 += 1;
+                if r.class as i32 == data.labels[idx] {
+                    counts[vi].1 += 1;
+                }
+            }
+            // Deadline sheds AND QueueFull backpressure are expected
+            // under overload — same tolerance as the in-process drive().
+            WireResponse::Error { code, .. }
+                if code.is_shed() || code == ErrorCode::QueueFull =>
+            {
+                shed += 1
+            }
+            WireResponse::Error { code, detail } => {
+                anyhow::bail!("wire error {}: {}", code, detail)
+            }
+        }
+    }
+    let stats = server.stats();
+    println!(
+        "server: connections={} requests={} presubmit_sheds={} protocol_errors={}",
+        stats.connections, stats.requests, stats.shed_presubmit, stats.protocol_errors
+    );
+    server.shutdown();
+    Ok((counts, shed))
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let net = args.first().cloned().unwrap_or_else(|| "mini_resnet_a".into());
-    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(600);
-    let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(300.0);
+    let wire = args.iter().any(|a| a == "--wire");
+    let pos: Vec<&String> = args.iter().filter(|a| !a.starts_with("--")).collect();
+    let net = pos
+        .first()
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| "mini_resnet_a".into());
+    let n: usize = pos.get(1).and_then(|s| s.parse().ok()).unwrap_or(600);
+    let rate: f64 = pos.get(2).and_then(|s| s.parse().ok()).unwrap_or(300.0);
     let dir = Path::new("artifacts");
 
     // PJRT when the runtime + HLO artifacts are available, else the
@@ -81,13 +148,13 @@ fn main() -> anyhow::Result<()> {
     // ONE engine, one shared pool; both variants registered on it. The
     // old layout burned (workers+1) threads per variant — this serves
     // the whole fleet with `workers` threads.
-    let engine = Engine::start(EngineOptions {
+    let engine = Arc::new(Engine::start(EngineOptions {
         // 25 ms batching deadline: at a few hundred req/s this fills the
         // 16-wide executables instead of burning them on 2-image batches.
         max_wait: Duration::from_millis(25),
         workers: 2,
         ..EngineOptions::default()
-    });
+    }));
     let mut handles = Vec::new();
     for (label, method) in [
         ("int8-baseline", Method::Baseline),
@@ -111,7 +178,12 @@ fn main() -> anyhow::Result<()> {
         rate
     );
     let t0 = std::time::Instant::now();
-    let counts = drive(&handles, &data, n, rate, 11)?;
+    let (counts, wire_shed) = if wire {
+        let keys: Vec<String> = handles.iter().map(|h| h.key().to_string()).collect();
+        drive_wire(&engine, &keys, &data, n, rate)?
+    } else {
+        (drive(&handles, &data, n, rate, 11)?, 0)
+    };
     let wall = t0.elapsed().as_secs_f64();
 
     // Typed metrics: per-variant rows + the fleet rollup.
@@ -134,12 +206,21 @@ fn main() -> anyhow::Result<()> {
         n,
         wall,
         if served_total < n {
-            " (rest shed by QueueFull backpressure)"
+            if wire {
+                " (rest shed by deadline budgets or backpressure)"
+            } else {
+                " (rest shed by QueueFull backpressure)"
+            }
         } else {
             ""
         }
     );
-    engine.shutdown();
+    if wire_shed > 0 {
+        println!("{} wire requests shed with typed deadline codes", wire_shed);
+    }
+    // The engine drains and joins its pool when the Arc drops.
+    drop(handles);
+    drop(engine);
     println!("\nNOTE: identical serving path, only the weight arguments differ —");
     println!("StruM needs no model surgery, no retraining, no special executables.");
     Ok(())

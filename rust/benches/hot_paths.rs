@@ -5,8 +5,11 @@
 //! DLIQ / MIP2Q on one shared worker pool, per-variant throughput + p95
 //! from the typed `MetricsSnapshot` → `BENCH_serve_multivariant.json`),
 //! cold-start variant registration (requantize path vs cached `.strumc`
-//! artifact → `BENCH_coldstart.json`), and end-to-end PJRT execute when
-//! artifacts exist.
+//! artifact → `BENCH_coldstart.json`), wire serving over loopback TCP
+//! (3-variant fleet round-trips + a tiny-deadline shed pass →
+//! `BENCH_wire_bench.json`; `strum loadgen` owns the `BENCH_wire_serve.json`
+//! schema), and end-to-end PJRT execute when artifacts
+//! exist.
 //!
 //! STRUM_BENCH_QUICK=1 shrinks budgets ~10x.
 
@@ -19,6 +22,7 @@ use strum_dpu::backend::strum_gemm::StrumGemm;
 use strum_dpu::backend::{parallel, NetworkPlan};
 use strum_dpu::coordinator::{Engine, EngineOptions, Router, SubmitError, Ticket};
 use strum_dpu::encode::{decode_layer, encode_layer};
+use strum_dpu::server::{WireClient, WireResponse, WireServer, WireServerOptions};
 use strum_dpu::model::import::{DataSet, NetWeights};
 use strum_dpu::quant::tensor::qlayer;
 use strum_dpu::quant::{apply_strum, Method, StrumParams};
@@ -366,6 +370,127 @@ fn main() -> anyhow::Result<()> {
         std::fs::write("BENCH_serve_multivariant.json", json.to_string_pretty())?;
         println!("wrote BENCH_serve_multivariant.json");
         engine.shutdown();
+    }
+
+    b.section("wire serving: loopback TCP round-trips (3-variant fleet)");
+    {
+        use strum_dpu::util::stats::Summary;
+        let img = 16usize;
+        let classes = 10usize;
+        let net = "mini_cnn_s";
+        let mut weights = synth_net_weights(net, img, classes, 71)?;
+        let px = img * img * 3;
+        let mut rng = Rng::new(72);
+        let calib: Vec<f32> = (0..4 * px).map(|_| rng.f32()).collect();
+        weights.manifest.act_scales = calibrate_act_scales(&weights, &calib, 4)?;
+        let mut router = Router::native();
+        let engine = std::sync::Arc::new(Engine::start(EngineOptions {
+            workers: 2,
+            max_wait: std::time::Duration::from_millis(1),
+            ..EngineOptions::default()
+        }));
+        let specs = [
+            ("base", Method::Baseline, 0.0),
+            ("dliq-q4", Method::Dliq { q: 4 }, 0.5),
+            ("mip2q-L7", Method::Mip2q { l_max: 7 }, 0.5),
+        ];
+        for &(label, method, p) in specs.iter() {
+            let cfg = strum_dpu::model::eval::EvalConfig::paper(method, p);
+            let v = router.register_native_weights(label, &weights, &cfg)?;
+            engine.register(v)?;
+        }
+        let server =
+            WireServer::bind("127.0.0.1:0", engine.clone(), WireServerOptions::default())?;
+        let addr = server.local_addr().to_string();
+        let mut client = WireClient::connect(&addr)?;
+        let image: Vec<f32> = (0..px).map(|_| rng.f32()).collect();
+        for &(label, _, _) in specs.iter() {
+            b.run(&format!("wire_infer/{}", label), 1.0, || {
+                client.infer(label, &image).unwrap()
+            });
+        }
+        // Measured burst round-robined across the fleet for the JSON
+        // report's percentiles.
+        let keys: Vec<&str> = specs.iter().map(|&(l, _, _)| l).collect();
+        let n_req = if b.is_quick() { 60usize } else { 300usize };
+        let mut lat = Summary::new();
+        let (mut completed, mut errors) = (0usize, 0usize);
+        let t0 = std::time::Instant::now();
+        for i in 0..n_req {
+            let sent = std::time::Instant::now();
+            match client.infer(keys[i % keys.len()], &image)? {
+                WireResponse::Infer(_) => {
+                    completed += 1;
+                    lat.push(sent.elapsed().as_secs_f64() * 1e6);
+                }
+                WireResponse::Error { .. } => errors += 1,
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        // Tiny-deadline pass: 1 ms budgets against 1 ms batching waits —
+        // requests that miss come back as typed sheds, never hangs.
+        // Counted separately from the main burst so the JSON's top-level
+        // counters describe exactly one measurement.
+        let n_tiny = n_req / 3;
+        let (mut tiny_shed, mut tiny_done, mut tiny_errors) = (0usize, 0usize, 0usize);
+        for i in 0..n_tiny {
+            match client.infer_budget_ms(keys[i % keys.len()], &image, 1)? {
+                WireResponse::Infer(_) => tiny_done += 1,
+                WireResponse::Error { code, .. } if code.is_shed() => tiny_shed += 1,
+                WireResponse::Error { .. } => tiny_errors += 1,
+            }
+        }
+        println!(
+            "wire burst: {} ok, {} errors, {:.1} req/s; tiny-deadline: {} shed / {} completed / {} errors",
+            completed,
+            errors,
+            completed as f64 / wall.max(1e-9),
+            tiny_shed,
+            tiny_done,
+            tiny_errors
+        );
+        let pct = |s: &Summary, q: f64| if s.is_empty() { 0.0 } else { s.percentile(q) };
+        let json = Json::obj(vec![
+            ("net", Json::str(net)),
+            ("img", Json::Num(img as f64)),
+            ("addr", Json::str(addr.as_str())),
+            ("requests", Json::Num(n_req as f64)),
+            ("completed", Json::Num(completed as f64)),
+            ("errors", Json::Num(errors as f64)),
+            ("wall_s", Json::Num(wall)),
+            ("throughput_rps", Json::Num(completed as f64 / wall.max(1e-9))),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("p50", Json::Num(pct(&lat, 50.0))),
+                    ("p95", Json::Num(pct(&lat, 95.0))),
+                    ("p99", Json::Num(pct(&lat, 99.0))),
+                    (
+                        "max",
+                        Json::Num(if lat.is_empty() { 0.0 } else { lat.max() }),
+                    ),
+                    ("samples", Json::Num(lat.len() as f64)),
+                ]),
+            ),
+            (
+                "tiny_deadline",
+                Json::obj(vec![
+                    ("requests", Json::Num(n_tiny as f64)),
+                    ("shed", Json::Num(tiny_shed as f64)),
+                    ("completed", Json::Num(tiny_done as f64)),
+                    ("errors", Json::Num(tiny_errors as f64)),
+                ]),
+            ),
+            (
+                "variants",
+                Json::Arr(keys.iter().map(|k| Json::str(*k)).collect()),
+            ),
+        ]);
+        std::fs::write("BENCH_wire_bench.json", json.to_string_pretty())?;
+        println!("wrote BENCH_wire_bench.json");
+        drop(client);
+        server.shutdown();
+        drop(engine);
     }
 
     let dir = Path::new("artifacts");

@@ -14,8 +14,10 @@ use super::{compile_net, ArtifactError, ArtifactIdentity, CompiledNet};
 use crate::model::eval::EvalConfig;
 use crate::model::import::NetWeights;
 use crate::Result;
+use std::collections::HashSet;
 use std::fmt;
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 /// Why a cache lookup did not hit.
 #[derive(Debug)]
@@ -152,6 +154,154 @@ impl ArtifactCache {
         }
         Ok((compiled, CacheOutcome::Miss(reason)))
     }
+
+    /// Garbage-collects the cache directory: removes every `.strumc`
+    /// slot whose identity header names a net in `live` under a weights
+    /// fingerprint that is NOT that net's current one — orphans left
+    /// behind by weight changes land on *new* slots, so the stale ones
+    /// never get overwritten in place. Liveness is judged on the
+    /// fingerprint alone, NOT the full (method, p) identity: an artifact
+    /// compiled at any quantization point of a current net is valid and
+    /// kept, so a sweep can never delete a `mip2q-L5@0.25` slot just
+    /// because nobody enumerated that point. Slots of nets `live` does
+    /// not mention at all are PROTECTED, not orphaned — the sweeper
+    /// cannot judge weights it was not given (a custom net outside the
+    /// zoo, or weights that failed to load, must never cost the cache).
+    /// Unparseable (corrupt) slots are removed — they can never serve.
+    /// Stale `*.tmp.*` files from interrupted writes are swept once
+    /// older than `min_tmp_age` (the age guard keeps a concurrent
+    /// writer's tmp+rename from being raced), and a concurrently-deleted
+    /// file (two sweepers racing) is tolerated, not an abort.
+    /// Unrecognized files are left alone.
+    ///
+    /// `scope` limits the sweep to slots of one net (filename prefix
+    /// `"{net}-"`): files of other nets are skipped entirely.
+    pub fn gc(&self, live: &[(String, u64)], scope: Option<&str>) -> Result<GcReport> {
+        self.gc_with_tmp_age(live, scope, Duration::from_secs(600))
+    }
+
+    /// [`ArtifactCache::gc`] with an explicit tmp-file age threshold
+    /// (tests pass zero to sweep a just-written temp file).
+    pub fn gc_with_tmp_age(
+        &self,
+        live: &[(String, u64)],
+        scope: Option<&str>,
+        min_tmp_age: Duration,
+    ) -> Result<GcReport> {
+        let mut report = GcReport::default();
+        let keep: HashSet<(&str, u64)> =
+            live.iter().map(|(net, fp)| (net.as_str(), *fp)).collect();
+        let known_nets: HashSet<&str> = live.iter().map(|(net, _)| net.as_str()).collect();
+        let prefix = scope.map(|net| format!("{}-", net));
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            // No cache directory yet: nothing to sweep.
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(report),
+            Err(e) => return Err(e.into()),
+        };
+        for entry in entries {
+            let entry = entry?;
+            let path = entry.path();
+            if !path.is_file() {
+                continue;
+            }
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if let Some(prefix) = &prefix {
+                if !name.starts_with(prefix.as_str()) {
+                    continue;
+                }
+            }
+            if !name.ends_with(".strumc") {
+                // `CompiledNet::save` writes through `<slot>.tmp.<pid>.<seq>`;
+                // an OLD one on disk means a crashed writer. A young one
+                // may belong to a live writer mid-rename — leave it.
+                if name.contains(".tmp.") {
+                    let old_enough = entry
+                        .metadata()
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|t| t.elapsed().ok())
+                        .map(|age| age >= min_tmp_age)
+                        .unwrap_or(false);
+                    if old_enough {
+                        let bytes = entry.metadata().map(|m| m.len()).unwrap_or(0);
+                        if remove_tolerant(&path)? {
+                            report.removed_bytes += bytes;
+                            report.removed_tmp += 1;
+                        }
+                    }
+                }
+                continue;
+            }
+            report.scanned += 1;
+            // Liveness comes from the identity header inside the file,
+            // not the filename: parse it (checksum-verified) and match
+            // on (net, weights fingerprint). A slot of a net the live
+            // set does not mention is protected (kept) — only corrupt
+            // slots and stale fingerprints of KNOWN nets are orphans.
+            let alive = match std::fs::read(&path)
+                .ok()
+                .and_then(|bytes| CompiledNet::from_bytes(&bytes).ok())
+            {
+                Some(c) => {
+                    !known_nets.contains(c.identity.net.as_str())
+                        || keep.contains(&(c.identity.net.as_str(), c.identity.weights_fp))
+                }
+                // Unreadable or corrupt: can never serve anyone.
+                None => false,
+            };
+            if alive {
+                report.kept += 1;
+            } else {
+                let bytes = entry.metadata().map(|m| m.len()).unwrap_or(0);
+                if remove_tolerant(&path)? {
+                    report.removed_bytes += bytes;
+                    report.removed += 1;
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+/// Removes a file, tolerating a concurrent sweeper having won the race
+/// (`NotFound` → `Ok(false)`); any other failure still surfaces.
+fn remove_tolerant(path: &Path) -> Result<bool> {
+    match std::fs::remove_file(path) {
+        Ok(()) => Ok(true),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+        Err(e) => Err(e.into()),
+    }
+}
+
+/// What [`ArtifactCache::gc`] swept.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct GcReport {
+    /// `.strumc` slots inspected.
+    pub scanned: usize,
+    /// Slots matching a live identity, left in place.
+    pub kept: usize,
+    /// Orphaned slots removed.
+    pub removed: usize,
+    /// Stale temp files from interrupted writes removed.
+    pub removed_tmp: usize,
+    /// Bytes reclaimed (slots + temp files).
+    pub removed_bytes: u64,
+}
+
+impl fmt::Display for GcReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "scanned {} artifact(s): kept {}, removed {} orphan(s) + {} stale temp file(s), \
+             reclaimed {:.1} KiB",
+            self.scanned,
+            self.kept,
+            self.removed,
+            self.removed_tmp,
+            self.removed_bytes as f64 / 1024.0
+        )
+    }
 }
 
 #[cfg(test)]
@@ -222,6 +372,77 @@ mod tests {
         assert!(v2.load_or_compile(&w, &cfg).unwrap().1.is_hit());
         assert!(!v1.load_or_compile(&w, &cfg).unwrap().1.is_hit());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_sweeps_stale_slots_and_keeps_live_ones() {
+        let dir = temp_dir("gc");
+        let cache = ArtifactCache::with_version(&dir, 1);
+        let w = weights();
+        let cfg = EvalConfig::paper(Method::Dliq { q: 4 }, 0.5);
+        let (live, _) = cache.load_or_compile(&w, &cfg).unwrap();
+        // A second quantization point of the SAME weights: its (method,
+        // p) is not enumerated anywhere, but its fingerprint is current,
+        // so gc must keep it.
+        let cfg_other = EvalConfig::paper(Method::Mip2q { l_max: 5 }, 0.25);
+        let (other_point, _) = cache.load_or_compile(&w, &cfg_other).unwrap();
+        let other_path = cache.path_for(&other_point.identity);
+        // A weight edit moves the identity to a new slot; the old one is
+        // now an orphan no registration will ever touch again.
+        let mut w2 = w.clone();
+        w2.blob[1] -= 0.5;
+        let (stale, _) = cache.load_or_compile(&w2, &cfg).unwrap();
+        let stale_path = cache.path_for(&stale.identity);
+        assert!(stale_path.exists());
+        // Plus a crashed writer's leftover temp file.
+        let tmp = dir.join("mini_cnn_s-dliq-q4-deadbeef.tmp.999.0");
+        std::fs::write(&tmp, b"partial").unwrap();
+
+        let fp = live.identity.weights_fp;
+        let live_set = vec![("mini_cnn_s".to_string(), fp)];
+        // A live set that does not mention this net at all PROTECTS its
+        // slots (the sweeper cannot judge weights it was not given) —
+        // even the stale one survives.
+        let foreign = cache.gc(&[("unrelated_net".to_string(), 7)], None).unwrap();
+        assert_eq!((foreign.scanned, foreign.kept, foreign.removed), (3, 3, 0));
+        assert!(stale_path.exists());
+        // A scoped sweep of a DIFFERENT net must not touch these slots
+        // even though its live set does not name them.
+        let scoped = cache
+            .gc_with_tmp_age(&[], Some("some_other_net"), Duration::ZERO)
+            .unwrap();
+        assert_eq!(scoped, GcReport::default());
+        assert!(stale_path.exists());
+        // The default tmp-age guard protects a just-written temp file (a
+        // live writer may be mid-rename).
+        let guarded = cache.gc(&live_set, None).unwrap();
+        assert_eq!(guarded.removed_tmp, 0);
+        assert!(tmp.exists());
+        assert_eq!((guarded.scanned, guarded.kept, guarded.removed), (3, 2, 1));
+        assert!(!stale_path.exists());
+        assert!(other_path.exists(), "non-enumerated (method, p) slot must survive");
+
+        // With the age guard waived, the stale temp file goes too.
+        let report = cache.gc_with_tmp_age(&live_set, None, Duration::ZERO).unwrap();
+        assert_eq!(report.removed_tmp, 1);
+        assert!(report.removed_bytes > 0);
+        assert!(!tmp.exists());
+        // Both live slots still hit after the sweeps.
+        assert!(cache.load_or_compile(&w, &cfg).unwrap().1.is_hit());
+        assert!(cache.load_or_compile(&w, &cfg_other).unwrap().1.is_hit());
+        // Sweeping again finds nothing to remove; the display renders.
+        let again = cache.gc(&live_set, None).unwrap();
+        assert_eq!((again.scanned, again.kept, again.removed, again.removed_tmp), (2, 2, 0, 0));
+        assert!(format!("{}", again).contains("kept 2"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_on_missing_dir_is_empty_report() {
+        let dir = temp_dir("gc-missing");
+        let cache = ArtifactCache::with_version(&dir, 1);
+        let report = cache.gc(&[], None).unwrap();
+        assert_eq!(report, GcReport::default());
     }
 
     #[test]

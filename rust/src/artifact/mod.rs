@@ -46,7 +46,7 @@
 
 pub mod cache;
 
-pub use cache::{ArtifactCache, CacheOutcome, MissReason};
+pub use cache::{ArtifactCache, CacheOutcome, GcReport, MissReason};
 
 use crate::encode::{encode_layer, EncodedLayer};
 use crate::model::eval::{transform_network, EvalConfig};

@@ -22,6 +22,16 @@
 //! post-shutdown submit gets `ShuttingDown` instead of enqueueing into
 //! a pool that will never drain (the old API deadlocked here).
 //!
+//! Requests can carry a per-request deadline
+//! ([`VariantHandle::submit_deadline`]): one that has already expired is refused at the
+//! door ([`SubmitError::Expired`]), and one whose deadline passes while
+//! it waits in the queue is shed by the worker *before* execution — the
+//! ticket resolves to a typed [`ReplyError::Shed`] instead of burning
+//! backend cycles on an answer nobody is waiting for. Reply-path
+//! failures are all typed ([`ReplyError`]) so callers (the wire server
+//! in [`crate::server`] above all) can map them to protocol codes by
+//! downcast instead of string-matching.
+//!
 //! Workers sleep on a condvar indefinitely while every queue is empty;
 //! a bounded nap is used only when some queued request has a batching
 //! deadline pending. There is no dedicated batcher thread — the workers
@@ -68,6 +78,9 @@ pub enum SubmitError {
     Retired { key: String },
     /// The engine has been shut down.
     ShuttingDown,
+    /// The request's deadline had already passed at submit time; it was
+    /// shed at the door without touching the queue.
+    Expired { key: String },
 }
 
 impl fmt::Display for SubmitError {
@@ -84,11 +97,49 @@ impl fmt::Display for SubmitError {
             SubmitError::UnknownVariant { key } => write!(f, "unknown variant {}", key),
             SubmitError::Retired { key } => write!(f, "variant {} is retired", key),
             SubmitError::ShuttingDown => write!(f, "engine is shutting down"),
+            SubmitError::Expired { key } => {
+                write!(f, "variant {}: deadline already expired at submit (shed)", key)
+            }
         }
     }
 }
 
 impl std::error::Error for SubmitError {}
+
+/// Typed reply-path failures delivered through a [`Ticket`]. Every arm
+/// is a contract the wire server maps to a protocol error code:
+/// `Shed` means the engine dropped the request before execution because
+/// its deadline had passed, `DeadlineExpired` means the *wait* gave up
+/// (the request may still complete — [`Ticket::try_take`] can collect a
+/// late result), `Dropped` means the engine went away mid-request, and
+/// `Batch` carries a backend execution failure. Obtained from an
+/// `anyhow` error via `err.downcast_ref::<ReplyError>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReplyError {
+    /// Shed before execution: the deadline passed while queued.
+    Shed,
+    /// `wait_deadline` timed out; the request itself may still finish.
+    DeadlineExpired,
+    /// The serving engine dropped the request (shutdown race).
+    Dropped,
+    /// The backend failed the whole batch.
+    Batch(String),
+}
+
+impl fmt::Display for ReplyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReplyError::Shed => write!(f, "request shed: deadline passed before execution"),
+            ReplyError::DeadlineExpired => {
+                write!(f, "no reply within the wait deadline")
+            }
+            ReplyError::Dropped => write!(f, "serving engine dropped the request"),
+            ReplyError::Batch(msg) => write!(f, "batch failed: {}", msg),
+        }
+    }
+}
+
+impl std::error::Error for ReplyError {}
 
 /// Handle to one in-flight request.
 pub struct Ticket {
@@ -100,21 +151,19 @@ impl Ticket {
     pub fn wait(self) -> crate::Result<InferReply> {
         match self.rx.recv() {
             Ok(r) => r,
-            Err(_) => Err(anyhow::anyhow!("serving engine dropped the request")),
+            Err(_) => Err(ReplyError::Dropped.into()),
         }
     }
 
-    /// Blocks at most `d`; a timeout is an error (the request may still
-    /// complete — the reply is simply abandoned).
-    pub fn wait_deadline(self, d: Duration) -> crate::Result<InferReply> {
+    /// Blocks at most `d`; a timeout is a typed
+    /// [`ReplyError::DeadlineExpired`]. The request may still complete —
+    /// the ticket is only borrowed, so a later [`Ticket::try_take`] can
+    /// still collect the late reply.
+    pub fn wait_deadline(&self, d: Duration) -> crate::Result<InferReply> {
         match self.rx.recv_timeout(d) {
             Ok(r) => r,
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                Err(anyhow::anyhow!("no reply within {:?}", d))
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                Err(anyhow::anyhow!("serving engine dropped the request"))
-            }
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ReplyError::DeadlineExpired.into()),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ReplyError::Dropped.into()),
         }
     }
 
@@ -123,9 +172,7 @@ impl Ticket {
         match self.rx.try_recv() {
             Ok(r) => Some(r),
             Err(mpsc::TryRecvError::Empty) => None,
-            Err(mpsc::TryRecvError::Disconnected) => {
-                Some(Err(anyhow::anyhow!("serving engine dropped the request")))
-            }
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(ReplyError::Dropped.into())),
         }
     }
 }
@@ -163,6 +210,9 @@ struct Request {
     image: Vec<f32>,
     tx: mpsc::Sender<crate::Result<InferReply>>,
     enqueued: Instant,
+    /// Shed (typed `ReplyError::Shed`) instead of executed if still
+    /// queued past this instant.
+    deadline: Option<Instant>,
 }
 
 /// One registered variant: queue + policy + metrics + DRR credit.
@@ -218,7 +268,19 @@ impl VariantHandle {
 
     /// Submits one image to this variant.
     pub fn submit(&self, image: Vec<f32>) -> Result<Ticket, SubmitError> {
-        submit_shared(&self.shared, &self.key, image)
+        submit_shared(&self.shared, &self.key, image, None)
+    }
+
+    /// Submits one image with a per-request deadline. An already-expired
+    /// deadline is refused at the door ([`SubmitError::Expired`]); one
+    /// that expires while the request is queued sheds the request before
+    /// execution (the ticket resolves to [`ReplyError::Shed`]).
+    pub fn submit_deadline(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<Ticket, SubmitError> {
+        submit_shared(&self.shared, &self.key, image, deadline)
     }
 }
 
@@ -263,12 +325,7 @@ impl Engine {
 
     /// Registers `variant` with the engine-default policy.
     pub fn register(&self, variant: Arc<Variant>) -> crate::Result<VariantHandle> {
-        let d = self.defaults();
-        let policy = BatchPolicy {
-            max_batch: d.max_batch.unwrap_or(usize::MAX),
-            max_wait: d.max_wait,
-        };
-        self.register_with(variant, policy, d.queue_depth)
+        self.register_weight(variant, 0)
     }
 
     /// Registers `variant` with an explicit policy and queue depth —
@@ -282,12 +339,46 @@ impl Engine {
         policy: BatchPolicy,
         queue_depth: usize,
     ) -> crate::Result<VariantHandle> {
+        self.register_weighted(variant, policy, queue_depth, 0)
+    }
+
+    /// Registers `variant` with the engine-default policy and an explicit
+    /// DRR priority weight (see [`Engine::register_weighted`]).
+    pub fn register_weight(
+        &self,
+        variant: Arc<Variant>,
+        weight: usize,
+    ) -> crate::Result<VariantHandle> {
+        let d = self.defaults();
+        let policy = BatchPolicy {
+            max_batch: d.max_batch.unwrap_or(usize::MAX),
+            max_wait: d.max_wait,
+        };
+        self.register_weighted(variant, policy, d.queue_depth, weight)
+    }
+
+    /// Full-control registration: explicit policy, queue depth, and DRR
+    /// priority `weight` — the variant's per-round scheduler credit in
+    /// requests. `weight == 0` falls back to [`EngineOptions::quantum`]
+    /// (and from there to the variant's max batch), so unweighted
+    /// variants keep the plain round-robin behaviour. A variant with
+    /// weight 4 next to one with weight 1 drains roughly 4 requests for
+    /// every 1 under contention, without ever starving the lighter one.
+    pub fn register_weighted(
+        &self,
+        variant: Arc<Variant>,
+        policy: BatchPolicy,
+        queue_depth: usize,
+        weight: usize,
+    ) -> crate::Result<VariantHandle> {
         let d = self.defaults();
         let policy = BatchPolicy {
             max_batch: policy.max_batch.min(variant.max_batch()).max(1),
             max_wait: policy.max_wait,
         };
-        let quantum = if d.quantum == 0 {
+        let quantum = if weight > 0 {
+            weight
+        } else if d.quantum == 0 {
             policy.max_batch
         } else {
             d.quantum
@@ -361,7 +452,18 @@ impl Engine {
 
     /// Submits one image to the variant registered under `key`.
     pub fn submit(&self, key: &str, image: Vec<f32>) -> Result<Ticket, SubmitError> {
-        submit_shared(&self.shared, key, image)
+        submit_shared(&self.shared, key, image, None)
+    }
+
+    /// Submits one image under `key` with a per-request deadline (see
+    /// [`VariantHandle::submit_deadline`]).
+    pub fn submit_deadline(
+        &self,
+        key: &str,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<Ticket, SubmitError> {
+        submit_shared(&self.shared, key, image, deadline)
     }
 
     /// Live variant keys, sorted.
@@ -394,6 +496,8 @@ impl Engine {
                     &s.variant.key,
                     &s.variant.net,
                     s.variant.backend.kind().name(),
+                    s.variant.img,
+                    s.variant.classes,
                     s.registered.elapsed(),
                     s.queue.len(),
                 )
@@ -463,6 +567,7 @@ fn submit_shared(
     shared: &EngineShared,
     key: &str,
     image: Vec<f32>,
+    deadline: Option<Instant>,
 ) -> Result<Ticket, SubmitError> {
     let mut st = shared.state.lock().unwrap();
     if st.stopping {
@@ -482,6 +587,14 @@ fn submit_shared(
             got: image.len(),
         });
     }
+    // Already-late work never enters the queue: shedding at the door is
+    // the cheapest shed there is.
+    if let Some(d) = deadline {
+        if Instant::now() >= d {
+            slot.metrics.record_shed();
+            return Err(SubmitError::Expired { key: key.into() });
+        }
+    }
     if slot.queue.len() >= slot.depth {
         slot.metrics.record_rejected();
         return Err(SubmitError::QueueFull {
@@ -495,6 +608,7 @@ fn submit_shared(
         image,
         tx,
         enqueued: Instant::now(),
+        deadline,
     });
     drop(st);
     shared.cv.notify_all();
@@ -595,12 +709,27 @@ fn worker_loop(shared: &EngineShared) {
 
 fn execute_batch(job: &Job) {
     let v = &job.variant;
-    let n = job.batch.len();
+    // Shed already-late requests before spending backend cycles: their
+    // deadline passed while they sat in the queue, so nobody is waiting
+    // for the answer. The survivors run as a (smaller) batch.
+    let now = Instant::now();
+    let (live, late): (Vec<&Request>, Vec<&Request>) = job
+        .batch
+        .iter()
+        .partition(|r| r.deadline.map_or(true, |d| now < d));
+    for r in late {
+        job.metrics.record_shed();
+        let _ = r.tx.send(Err(ReplyError::Shed.into()));
+    }
+    if live.is_empty() {
+        return;
+    }
+    let n = live.len();
     let bsz = v.pick_batch(n);
     job.metrics.record_batch(n, bsz);
     let px = v.image_len();
     let mut images = vec![0f32; bsz * px];
-    for (i, r) in job.batch.iter().enumerate() {
+    for (i, r) in live.iter().enumerate() {
         // Sizes are validated at submit; a mismatch here is a bug.
         debug_assert_eq!(r.image.len(), px);
         images[i * px..(i + 1) * px].copy_from_slice(&r.image);
@@ -608,7 +737,7 @@ fn execute_batch(job: &Job) {
     match v.backend.infer_batch(images, bsz) {
         Ok(logits) => {
             let preds = argmax_rows(&logits, v.classes);
-            for (i, r) in job.batch.iter().enumerate() {
+            for (i, r) in live.iter().enumerate() {
                 let latency = r.enqueued.elapsed();
                 job.metrics.record_done(latency);
                 let _ = r.tx.send(Ok(InferReply {
@@ -621,8 +750,8 @@ fn execute_batch(job: &Job) {
         }
         Err(e) => {
             let msg = format!("{}", e);
-            for r in &job.batch {
-                let _ = r.tx.send(Err(anyhow::anyhow!("batch failed: {}", msg)));
+            for r in &live {
+                let _ = r.tx.send(Err(ReplyError::Batch(msg.clone()).into()));
             }
         }
     }

@@ -77,6 +77,8 @@ pub struct Metrics {
     pub completed: AtomicU64,
     /// Submits refused with `QueueFull` backpressure.
     pub rejected: AtomicU64,
+    /// Requests shed for a passed deadline (at the door or in queue).
+    pub shed: AtomicU64,
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
     latencies_us: Mutex<Reservoir>,
@@ -89,6 +91,7 @@ impl Default for Metrics {
             requests: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             padded_slots: AtomicU64::new(0),
             // Fixed seeds: sampling stays reproducible run to run.
@@ -105,6 +108,10 @@ impl Metrics {
 
     pub fn record_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, real: usize, padded_to: usize) {
@@ -141,12 +148,18 @@ impl Metrics {
         Summary::from_slice(self.batch_sizes.lock().unwrap().samples()).mean()
     }
 
-    /// Snapshot of this sink as one typed per-variant row.
+    /// Snapshot of this sink as one typed per-variant row. `img` and
+    /// `classes` describe the variant's tensor geometry — wire clients
+    /// (the load generator above all) discover request shapes from the
+    /// metrics op instead of hard-coding them.
+    #[allow(clippy::too_many_arguments)]
     pub fn snapshot(
         &self,
         key: &str,
         net: &str,
         backend: &str,
+        img: usize,
+        classes: usize,
         wall: Duration,
         queued: usize,
     ) -> VariantSnapshot {
@@ -155,9 +168,12 @@ impl Metrics {
             key: key.to_string(),
             net: net.to_string(),
             backend: backend.to_string(),
+            img,
+            classes,
             requests: self.requests.load(Ordering::Relaxed),
             completed,
             rejected: self.rejected.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
             mean_batch: self.mean_batch_size(),
@@ -247,9 +263,15 @@ pub struct VariantSnapshot {
     pub key: String,
     pub net: String,
     pub backend: String,
+    /// Input image side length (requests are `img·img·3` floats).
+    pub img: usize,
+    /// Logit row width.
+    pub classes: usize,
     pub requests: u64,
     pub completed: u64,
     pub rejected: u64,
+    /// Requests shed for a passed deadline (door + in-queue).
+    pub shed: u64,
     pub batches: u64,
     pub padded_slots: u64,
     pub mean_batch: f64,
@@ -265,9 +287,12 @@ impl VariantSnapshot {
             ("key", Json::str(self.key.as_str())),
             ("net", Json::str(self.net.as_str())),
             ("backend", Json::str(self.backend.as_str())),
+            ("img", Json::Num(self.img as f64)),
+            ("classes", Json::Num(self.classes as f64)),
             ("requests", Json::Num(self.requests as f64)),
             ("completed", Json::Num(self.completed as f64)),
             ("rejected", Json::Num(self.rejected as f64)),
+            ("shed", Json::Num(self.shed as f64)),
             ("batches", Json::Num(self.batches as f64)),
             ("padded_slots", Json::Num(self.padded_slots as f64)),
             (
@@ -292,6 +317,8 @@ pub struct FleetSnapshot {
     pub requests: u64,
     pub completed: u64,
     pub rejected: u64,
+    /// Deadline sheds summed across variants.
+    pub shed: u64,
     pub batches: u64,
     pub throughput_rps: f64,
     pub latency: LatencyStats,
@@ -313,6 +340,7 @@ impl FleetSnapshot {
             requests: variants.iter().map(|v| v.requests).sum(),
             completed,
             rejected: variants.iter().map(|v| v.rejected).sum(),
+            shed: variants.iter().map(|v| v.shed).sum(),
             batches: variants.iter().map(|v| v.batches).sum(),
             throughput_rps: completed as f64 / wall.as_secs_f64().max(1e-9),
             latency: LatencyStats::from_weighted(merged_lat_us),
@@ -324,6 +352,7 @@ impl FleetSnapshot {
             ("requests", Json::Num(self.requests as f64)),
             ("completed", Json::Num(self.completed as f64)),
             ("rejected", Json::Num(self.rejected as f64)),
+            ("shed", Json::Num(self.shed as f64)),
             ("batches", Json::Num(self.batches as f64)),
             ("throughput_rps", Json::Num(self.throughput_rps)),
             ("latency", self.latency.to_json()),
@@ -360,12 +389,13 @@ impl MetricsSnapshot {
         let mut out = String::new();
         for v in &self.variants {
             out.push_str(&format!(
-                "{:<28} requests={} completed={} rejected={} batches={} mean_batch={:.1} \
+                "{:<28} requests={} completed={} rejected={} shed={} batches={} mean_batch={:.1} \
                  queued={} thrpt={:.1} req/s latency_us p50={:.0} p95={:.0} p99={:.0} max={:.0}\n",
                 v.key,
                 v.requests,
                 v.completed,
                 v.rejected,
+                v.shed,
                 v.batches,
                 if v.mean_batch.is_finite() { v.mean_batch } else { 0.0 },
                 v.queued,
@@ -377,13 +407,14 @@ impl MetricsSnapshot {
             ));
         }
         out.push_str(&format!(
-            "fleet: workers={} wall={:.2}s requests={} completed={} rejected={} \
+            "fleet: workers={} wall={:.2}s requests={} completed={} rejected={} shed={} \
              thrpt={:.1} req/s latency_us p50={:.0} p95={:.0} p99={:.0}",
             self.workers,
             self.wall_s,
             self.fleet.requests,
             self.fleet.completed,
             self.fleet.rejected,
+            self.fleet.shed,
             self.fleet.throughput_rps,
             self.fleet.latency.p50_us,
             self.fleet.latency.p95_us,
@@ -403,16 +434,20 @@ mod tests {
         m.record_request();
         m.record_request();
         m.record_rejected();
+        m.record_shed();
         m.record_batch(2, 4);
         m.record_done(Duration::from_micros(100));
         m.record_done(Duration::from_micros(300));
         assert_eq!(m.requests.load(Ordering::Relaxed), 2);
         assert_eq!(m.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shed.load(Ordering::Relaxed), 1);
         assert_eq!(m.padded_slots.load(Ordering::Relaxed), 2);
         assert_eq!(m.latency_summary().median(), 200.0);
-        let snap = m.snapshot("k", "net", "native", Duration::from_secs(1), 3);
+        let snap = m.snapshot("k", "net", "native", 2, 4, Duration::from_secs(1), 3);
         assert_eq!(snap.completed, 2);
         assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.shed, 1);
+        assert_eq!((snap.img, snap.classes), (2, 4));
         assert_eq!(snap.queued, 3);
         assert!((snap.throughput_rps - 2.0).abs() < 0.2);
         assert_eq!(snap.latency.samples, 2);
@@ -464,7 +499,7 @@ mod tests {
         m.record_request();
         m.record_batch(1, 1);
         m.record_done(Duration::from_micros(500));
-        let v = m.snapshot("net:base", "net", "native", Duration::from_secs(2), 0);
+        let v = m.snapshot("net:base", "net", "native", 8, 10, Duration::from_secs(2), 0);
         let weighted: Vec<(f64, f64)> =
             m.latency_samples().into_iter().map(|x| (x, 1.0)).collect();
         let fleet = FleetSnapshot::rollup(std::slice::from_ref(&v), Duration::from_secs(2), &weighted);
@@ -497,9 +532,12 @@ mod tests {
             key: "k".into(),
             net: "n".into(),
             backend: "native".into(),
+            img: 8,
+            classes: 4,
             requests: completed + rejected,
             completed,
             rejected,
+            shed: 2,
             batches: 1,
             padded_slots: 0,
             mean_batch: 1.0,
@@ -514,6 +552,7 @@ mod tests {
         );
         assert_eq!(f.completed, 15);
         assert_eq!(f.rejected, 3);
+        assert_eq!(f.shed, 4);
         assert_eq!(f.requests, 18);
         assert_eq!(f.latency.p50_us, 200.0);
         assert_eq!(f.latency.max_us, 300.0);

@@ -18,6 +18,19 @@
 //! same thread budget. Native registrations flow through the
 //! compiled-artifact cache ([`Router::register_native_cached`]) so a
 //! warm cold-start decodes `.strumc` banks instead of re-quantizing.
+//!
+//! Deadline semantics: a submit may carry an absolute deadline
+//! ([`VariantHandle::submit_deadline`]). Already-late work is refused at
+//! the door (`SubmitError::Expired`), work whose deadline lapses while
+//! queued is shed by the worker before execution (`ReplyError::Shed`
+//! through the ticket — no backend cycles burned), and
+//! [`Ticket::wait_deadline`] bounds the wait itself
+//! (`ReplyError::DeadlineExpired`, with the late result still takeable
+//! via [`Ticket::try_take`]). Scheduler fairness is tunable per variant:
+//! [`Engine::register_weighted`] maps a priority weight to the DRR
+//! quantum, so `base:4,dliq:1` style specs drain 4:1 under contention
+//! without starving anyone. The TCP wire front-end over this API lives
+//! in [`crate::server`].
 
 pub mod batcher;
 pub mod engine;
@@ -25,6 +38,8 @@ pub mod metrics;
 pub mod router;
 
 pub use batcher::BatchPolicy;
-pub use engine::{Engine, EngineOptions, InferReply, SubmitError, Ticket, VariantHandle};
+pub use engine::{
+    Engine, EngineOptions, InferReply, ReplyError, SubmitError, Ticket, VariantHandle,
+};
 pub use metrics::{FleetSnapshot, LatencyStats, MetricsSnapshot, VariantSnapshot};
 pub use router::{Router, Variant};

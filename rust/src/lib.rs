@@ -30,7 +30,8 @@
 //! | [`backend`] | §IV-D.2, §V-B | native execution engine: int8 + dual-bank StruM GEMM, im2col conv, graph walk, batch parallelism; `Backend` trait + PJRT adapter |
 //! | [`backend::kernels`] | §IV-C.1, §V-B | SIMD kernel layer: AVX2/SSE2 int8 micro-kernels with bit-exact scalar fallback (`STRUM_KERNEL` pins a path), cache-blocked GEMM driver, activation-sparsity row skip, scratch arenas, fused requantize/ReLU/pool/quantize epilogues |
 //! | [`runtime`] | — | PJRT CPU client wrapper (feature `pjrt`): load HLO text, compile, execute |
-//! | [`coordinator`] | — | multi-variant serving engine: one shared worker pool, per-variant bounded queues + deficit-round-robin batch scheduling, handle-based submit (`Ticket`/`SubmitError`), typed `MetricsSnapshot` |
+//! | [`coordinator`] | — | multi-variant serving engine: one shared worker pool, per-variant bounded queues + deficit-round-robin batch scheduling (per-variant priority weights), handle-based submit (`Ticket`/`SubmitError`), per-request deadlines with typed sheds (`ReplyError`), typed `MetricsSnapshot` |
+//! | [`server`] | — | wire serving front-end: versioned length-prefixed TCP protocol (`server::proto`), blocking accept/worker server with graceful drain, deadline-budget propagation and three-stage shedding, `WireClient` + `strum loadgen` open-loop load generator |
 //! | [`report`] | §VII | regenerators for Table I and Figs. 10–13 + ablations |
 //! | [`util`] | — | in-tree substrates: JSON, PRNG, stats, CLI, threadpool, bench harness |
 //!
@@ -70,6 +71,7 @@ pub mod model;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod util;
 

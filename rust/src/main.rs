@@ -3,11 +3,14 @@
 //! Subcommands:
 //!   quantize   Apply a StruM transform to a network; print stats + codec checks
 //!   compile    Quantize + encode once → versioned .strumc artifact(s) in the cache
+//!   cache-gc   Sweep orphaned .strumc slots out of the artifact cache
 //!   eval       Top-1 accuracy of a (net, method, p) point through PJRT
 //!   sim        Cycle-simulate a network on the FlexNN DPU model
 //!   hw         Hardware cost model summary (PE variants)
 //!   report     Regenerate paper artifacts: table1 | fig10 | fig11 | fig12 | fig13 | ablation | all
-//!   serve      Run the multi-variant serving engine under synthetic load
+//!   serve      Run the multi-variant serving engine: synthetic load, or a TCP
+//!              wire front-end with --listen ADDR
+//!   loadgen    Open-loop wire load generator against a running `strum serve --listen`
 //!   selfcheck  Runtime round-trip (HLO load/execute) sanity check
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), plus per-command
@@ -15,12 +18,13 @@
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use strum_dpu::artifact::ArtifactCache;
+use strum_dpu::artifact::{weights_fingerprint, ArtifactCache};
 use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
 use strum_dpu::backend::BackendKind;
-use strum_dpu::coordinator::{Engine, EngineOptions, Router, SubmitError};
+use strum_dpu::coordinator::{Engine, EngineOptions, Router, SubmitError, VariantHandle};
+use strum_dpu::server::{WireClient, WireResponse, WireServer, WireServerOptions};
 use strum_dpu::encode::{decode_layer, encode_layer};
 use strum_dpu::encode::compression::ratio_for;
 use strum_dpu::hw::power::Activity;
@@ -36,6 +40,7 @@ use strum_dpu::sim::SimMode;
 use strum_dpu::util::cli::Args;
 use strum_dpu::util::json::Json;
 use strum_dpu::util::prng::Rng;
+use strum_dpu::util::stats::Summary;
 use strum_dpu::Result;
 
 fn main() {
@@ -80,11 +85,13 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "quantize" => cmd_quantize(args),
         "compile" => cmd_compile(args),
+        "cache-gc" => cmd_cache_gc(args),
         "eval" => cmd_eval(args),
         "sim" => cmd_sim(args),
         "hw" => cmd_hw(args),
         "report" => cmd_report(args),
         "serve" => cmd_serve(args),
+        "loadgen" => cmd_loadgen(args),
         "selfcheck" => cmd_selfcheck(args),
         _ => {
             print_help();
@@ -96,24 +103,45 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "strum — StruM structured mixed precision DPU coordinator\n\
-         usage: strum <quantize|compile|eval|sim|hw|report|serve|selfcheck> [flags]\n\
+         usage: strum <quantize|compile|cache-gc|eval|sim|hw|report|serve|loadgen|selfcheck> [flags]\n\
          common: --artifacts DIR --net NAME --method {{baseline|sparsity|dliq-qN|mip2q-LN}} --p F\n\
-         compile: strum compile --net N [--variants base,dliq,mip2q] [--out FILE]\n\
+         compile: strum compile --net N [--all-nets] [--variants base,dliq,mip2q] [--out FILE]\n\
                  quantize + encode once and write versioned .strumc artifact(s) into\n\
                  the content-addressed cache under <artifacts>/cache/; a later serve\n\
-                 or eval run binds them with zero re-quantization. Falls back to the\n\
-                 same synthetic net serve uses when artifacts are missing.\n\
+                 or eval run binds them with zero re-quantization. --all-nets sweeps\n\
+                 every zoo net, printing per-artifact cache hit/miss. Falls back to\n\
+                 the same synthetic net serve uses when artifacts are missing.\n\
+         cache-gc: strum cache-gc [--net N | --all-nets] [--assume-synthetic]\n\
+                 remove orphaned .strumc slots — those whose weights fingerprint no\n\
+                 longer matches their net's current weights — plus stale temp files\n\
+                 from crashed writers. Slots at ANY quantization point of current\n\
+                 weights are kept, as are slots of nets whose weights cannot be\n\
+                 loaded (pass --assume-synthetic to judge those against the\n\
+                 synthetic fallback); --net scopes the sweep to that net only.\n\
          eval:   strum eval --net N [--backend {{pjrt|native}}] [--limit N]\n\
          report: strum report <table1|fig10|fig11|fig12|fig13|ablation|all> [--limit N] [--out FILE]\n\
          serve:  strum serve --net N --variants base,dliq,mip2q --requests 2000 --rate 500\n\
                  [--backend {{pjrt|native}}] [--workers N] [--queue-depth N] [--max-wait-ms 4]\n\
                  [--max-batch N] [--metrics-out FILE]\n\
+                 [--listen ADDR [--duration-s N] [--conn-workers N]]\n\
                  one shared worker pool serves every variant; variant specs are\n\
-                 base|dliq|mip2q aliases or method names, with optional @p (e.g. mip2q-L5@0.25);\n\
+                 base|dliq|mip2q aliases or method names, with optional @p (e.g.\n\
+                 mip2q-L5@0.25) and an optional :W DRR priority weight (e.g.\n\
+                 base:4,dliq:1 gives base 4x the scheduler credit);\n\
                  without --variants the single --method/--p point is served.\n\
                  With --backend native and no artifacts, a synthetic net + dataset is served.\n\
                  Native variants register through the .strumc artifact cache — run\n\
-                 `strum compile` first and cold start is a read+decode, not a re-quantization."
+                 `strum compile` first and cold start is a read+decode, not a re-quantization.\n\
+                 --listen binds the TCP wire front-end (127.0.0.1:0 picks a free\n\
+                 port, printed as 'listening on ADDR') instead of the synthetic\n\
+                 self-load; stop with --duration-s or a signal.\n\
+         loadgen: strum loadgen --addr HOST:PORT [--requests 500 | --duration-s N]\n\
+                 [--rate 500] [--concurrency 4] [--deadline-ms N] [--variants k1,k2]\n\
+                 [--out BENCH_wire_serve.json] [--seed N] [--img N]\n\
+                 open-loop Poisson arrivals against a running wire server; variant\n\
+                 keys and image geometry are discovered from the server's metrics\n\
+                 op unless --variants overrides them. Reports p50/p95/p99 latency\n\
+                 plus shed/error counts and writes them as JSON to --out."
     );
 }
 
@@ -343,11 +371,25 @@ fn cmd_report(args: &Args) -> Result<()> {
 
 /// Parses one `--variants` token: a `base|dliq|mip2q` alias or a full
 /// method name (`mip2q-L5`), with an optional `@p` suffix overriding the
-/// low-set fraction (e.g. `mip2q-L5@0.25`).
-fn parse_variant_spec(token: &str) -> Result<(Method, f64)> {
-    let (name, p_str) = match token.split_once('@') {
+/// low-set fraction (e.g. `mip2q-L5@0.25`) and an optional `:W` suffix
+/// assigning a DRR priority weight — the variant's scheduler credit per
+/// round, so `base:4,dliq:1` drains ~4 base requests per dliq request
+/// under contention. Weight 0 (the default) keeps engine defaults.
+fn parse_variant_spec(token: &str) -> Result<(Method, f64, usize)> {
+    let (body, weight) = match token.rsplit_once(':') {
+        Some((head, w)) if !head.is_empty() => match w.parse::<usize>() {
+            Ok(w) if w > 0 => (head, w),
+            _ => anyhow::bail!(
+                "bad priority weight '{}' in variant '{}' (want a positive integer)",
+                w,
+                token
+            ),
+        },
+        _ => (token, 0),
+    };
+    let (name, p_str) = match body.split_once('@') {
         Some((a, b)) => (a, Some(b)),
-        None => (token, None),
+        None => (body, None),
     };
     let (method, default_p) = match name {
         "base" | "baseline" => (Method::Baseline, 0.0),
@@ -369,13 +411,14 @@ fn parse_variant_spec(token: &str) -> Result<(Method, f64)> {
             .map_err(|_| anyhow::anyhow!("bad p '{}' in variant '{}'", s, token))?,
         None => default_p,
     };
-    Ok((method, p))
+    Ok((method, p, weight))
 }
 
-/// The variant fleet for compile/serve: `--variants base,dliq,mip2q`,
-/// else the single `--method`/`--p` point.
-fn parse_variant_specs(args: &Args) -> Result<Vec<(Method, f64)>> {
-    let specs: Vec<(Method, f64)> = match args.opt_str("variants") {
+/// The variant fleet for compile/serve: `--variants base,dliq,mip2q`
+/// (each optionally `@p` and `:weight`), else the single `--method`/
+/// `--p` point at default weight.
+fn parse_variant_specs(args: &Args) -> Result<Vec<(Method, f64, usize)>> {
+    let specs: Vec<(Method, f64, usize)> = match args.opt_str("variants") {
         Some(list) => list
             .split(',')
             .map(str::trim)
@@ -384,7 +427,7 @@ fn parse_variant_specs(args: &Args) -> Result<Vec<(Method, f64)>> {
             .collect::<Result<_>>()?,
         None => {
             let method = parse_method(args)?;
-            vec![(method, args.f64("p", 0.5))]
+            vec![(method, args.f64("p", 0.5), 0)]
         }
     };
     anyhow::ensure!(!specs.is_empty(), "--variants is empty");
@@ -411,51 +454,145 @@ fn synthetic_weights(net: &str) -> Result<NetWeights> {
 /// bytes with no `transform_network`/`encode_layer` on the path.
 fn cmd_compile(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
-    let net = args.str("net", zoo::SWEEP_NET);
     let specs = parse_variant_specs(args)?;
-    let weights = match NetWeights::load(&dir, &net) {
-        Ok(w) => w,
-        Err(e) => {
-            println!("artifacts unavailable ({:#}); compiling the synthetic {}", e, net);
-            synthetic_weights(&net)?
-        }
+    // --all-nets sweeps the whole zoo in one invocation (the ROADMAP
+    // artifact follow-up): precompile every net × variant so serve-time
+    // cold starts are pure cache hits fleet-wide.
+    let nets: Vec<String> = if args.flag("all-nets") {
+        zoo::net_names().iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![args.str("net", zoo::SWEEP_NET)]
     };
     let out = args.opt_str("out");
     anyhow::ensure!(
-        out.is_none() || specs.len() == 1,
-        "--out takes exactly one variant (got {})",
+        out.is_none() || (specs.len() == 1 && nets.len() == 1),
+        "--out takes exactly one net and one variant (got {} × {})",
+        nets.len(),
         specs.len()
     );
     let cache = ArtifactCache::under(&dir);
-    for &(method, p) in &specs {
-        let cfg = EvalConfig::paper(method, p);
-        let t0 = std::time::Instant::now();
-        let (compiled, outcome) = cache.load_or_compile(&weights, &cfg)?;
-        let path = cache.path_for(&compiled.identity);
-        println!(
-            "{} {} p={}: {} layers, {:.1} KiB encoded, cache {} ({:.1} ms) → {}",
-            net,
-            method.name(),
-            p,
-            compiled.layers.len(),
-            compiled.encoded_bytes() as f64 / 1024.0,
-            outcome,
-            t0.elapsed().as_secs_f64() * 1e3,
-            path.display()
-        );
-        if let Some(out) = &out {
-            compiled.save(std::path::Path::new(out)).map_err(anyhow::Error::from)?;
-            println!("wrote {}", out);
+    let (mut hits, mut misses) = (0usize, 0usize);
+    for net in &nets {
+        let weights = match NetWeights::load(&dir, net) {
+            Ok(w) => w,
+            Err(e) => {
+                println!("artifacts unavailable ({:#}); compiling the synthetic {}", e, net);
+                synthetic_weights(net)?
+            }
+        };
+        for &(method, p, _) in &specs {
+            let cfg = EvalConfig::paper(method, p);
+            let t0 = std::time::Instant::now();
+            let (compiled, outcome) = cache.load_or_compile(&weights, &cfg)?;
+            if outcome.is_hit() {
+                hits += 1;
+            } else {
+                misses += 1;
+            }
+            let path = cache.path_for(&compiled.identity);
+            println!(
+                "{} {} p={}: {} layers, {:.1} KiB encoded, cache {} ({:.1} ms) → {}",
+                net,
+                method.name(),
+                p,
+                compiled.layers.len(),
+                compiled.encoded_bytes() as f64 / 1024.0,
+                outcome,
+                t0.elapsed().as_secs_f64() * 1e3,
+                path.display()
+            );
+            if let Some(out) = &out {
+                compiled.save(std::path::Path::new(out)).map_err(anyhow::Error::from)?;
+                println!("wrote {}", out);
+            }
         }
+    }
+    if hits + misses > 1 {
+        println!(
+            "compiled {} artifact slot(s): {} cache hit(s), {} miss(es)",
+            hits + misses,
+            hits,
+            misses
+        );
     }
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+/// Sweeps orphaned artifact slots. Liveness is judged per slot on the
+/// (net, weights fingerprint) pair in its identity header: a slot whose
+/// fingerprint no longer matches the net's current weights (a weight
+/// edit or a renamed net moved registrations to a new slot) is an
+/// orphan no registration can reach; a slot at ANY quantization point
+/// of current weights is kept — `cache-gc` never deletes a valid
+/// `mip2q-L5@0.25` artifact just because nobody enumerated that point.
+fn cmd_cache_gc(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    // A single --net SCOPES the sweep to that net's slots (other nets'
+    // artifacts are skipped, never treated as orphans just because they
+    // were not enumerated here); the default / --all-nets sweep covers
+    // the whole directory against the full zoo live set.
+    let (nets, scope): (Vec<String>, Option<String>) = match args.opt_str("net") {
+        Some(net) if !args.flag("all-nets") => (vec![net.clone()], Some(net)),
+        _ => (
+            zoo::net_names().iter().map(|s| s.to_string()).collect(),
+            None,
+        ),
+    };
+    // Nets whose real weights cannot be loaded are OMITTED from the live
+    // set — gc protects slots of nets it was not given fingerprints for,
+    // so a temporarily-unreadable artifacts dir can never cost the
+    // cache. `--assume-synthetic` opts into judging such nets against
+    // the deterministic synthetic fallback fingerprints instead (the
+    // no-artifacts CI flow, where the cache really was built that way).
+    let assume_synthetic = args.flag("assume-synthetic");
+    let mut live = Vec::new();
+    for net in &nets {
+        match NetWeights::load(&dir, net) {
+            Ok(w) => live.push((net.clone(), weights_fingerprint(&w))),
+            Err(e) if assume_synthetic => {
+                println!(
+                    "{}: weights unavailable ({:#}); judging against the synthetic fingerprint",
+                    net, e
+                );
+                live.push((net.clone(), weights_fingerprint(&synthetic_weights(net)?)));
+            }
+            Err(e) => {
+                println!(
+                    "warning: weights for {} unavailable ({:#}); its slots are protected \
+                     (pass --assume-synthetic to judge them against the synthetic fallback)",
+                    net, e
+                );
+            }
+        }
+    }
+    let cache = ArtifactCache::under(&dir);
+    let report = cache.gc(&live, scope.as_deref())?;
+    println!(
+        "cache-gc under {}{} ({} live net fingerprint{}): {}",
+        cache.dir().display(),
+        scope.map(|s| format!(" [scope {}]", s)).unwrap_or_default(),
+        live.len(),
+        if live.len() == 1 { "" } else { "s" },
+        report
+    );
+    Ok(())
+}
+
+/// A registered serving fleet: the engine (shared with the wire server
+/// when `--listen` is given), the per-variant handles, and the dataset
+/// driving the synthetic load path.
+struct Fleet {
+    engine: Arc<Engine>,
+    handles: Vec<VariantHandle>,
+    data: DataSet,
+}
+
+/// Builds the engine + variant fleet `strum serve` fronts: loads (or
+/// synthesizes) weights, registers every `--variants` point through the
+/// artifact cache, and honors `:W` priority weights as DRR quanta.
+fn build_fleet(args: &Args) -> Result<Fleet> {
     let dir = artifacts_dir(args);
     let net = args.str("net", zoo::SWEEP_NET);
-    let n_requests = args.usize("requests", 1000);
-    let rate = args.f64("rate", 400.0);
     let backend = parse_backend(args)?;
     // The variant fleet: --variants base,dliq,mip2q, else the single
     // --method/--p point (old single-variant CLI still works).
@@ -506,16 +643,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
 
     // ONE engine, one shared worker pool, every variant registered on it.
-    let engine = Engine::start(EngineOptions {
+    let engine = Arc::new(Engine::start(EngineOptions {
         workers: args.usize("workers", 2),
         queue_depth: args.usize("queue-depth", 1024),
         max_wait: Duration::from_millis(args.usize("max-wait-ms", 4) as u64),
         max_batch: args.opt_str("max-batch").and_then(|s| s.parse().ok()),
         quantum: args.usize("quantum", 0),
-    });
+    }));
     let cache = ArtifactCache::under(&dir);
     let mut handles = Vec::new();
-    for &(method, p) in &specs {
+    for &(method, p, weight) in &specs {
         let key = format!("{}:{}:p{}:{}", net, method.name(), p, backend.name());
         let cfg = EvalConfig::paper(method, p);
         // Native variants register through the compiled-artifact cache:
@@ -525,10 +662,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Some(w) => {
                 let (v, outcome) = router.register_native_cached(&key, w, &cfg, &cache)?;
                 println!(
-                    "registered {} (batches: {:?}; artifact cache: {})",
+                    "registered {} (batches: {:?}; artifact cache: {}{})",
                     key,
                     v.batches(),
-                    outcome
+                    outcome,
+                    if weight > 0 {
+                        format!("; weight {}", weight)
+                    } else {
+                        String::new()
+                    }
                 );
                 v
             }
@@ -538,16 +680,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 v
             }
         };
-        handles.push(engine.register(v)?);
+        handles.push(if weight > 0 {
+            engine.register_weight(v, weight)?
+        } else {
+            engine.register(v)?
+        });
     }
     println!(
         "serving {} variant(s) on {} shared workers",
         handles.len(),
         engine.worker_count()
     );
+    Ok(Fleet {
+        engine,
+        handles,
+        data,
+    })
+}
 
-    // Synthetic open-loop load: Poisson arrivals at `rate` req/s,
-    // round-robin across the variant fleet.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let fleet = build_fleet(args)?;
+    match args.opt_str("listen") {
+        Some(listen) => serve_wire(args, fleet, &listen),
+        None => serve_synthetic(args, fleet),
+    }
+}
+
+/// The original self-load mode: open-loop Poisson arrivals at `--rate`
+/// req/s, round-robin across the variant fleet, in-process submits.
+fn serve_synthetic(args: &Args, fleet: Fleet) -> Result<()> {
+    let n_requests = args.usize("requests", 1000);
+    let rate = args.f64("rate", 400.0);
+    let Fleet {
+        engine,
+        handles,
+        data,
+    } = fleet;
     let px = data.img * data.img * 3;
     let mut rng = Rng::new(7);
     let mut pending = Vec::new();
@@ -597,9 +765,296 @@ fn cmd_serve(args: &Args) -> Result<()> {
         std::fs::write(&path, snapshot.to_json().to_string_pretty())?;
         println!("wrote {}", path);
     }
-    // Clean-shutdown contract the CI smoke step relies on.
+    // Clean-shutdown contract the CI smoke step relies on. The engine
+    // drains and joins its pool when the last Arc drops.
     anyhow::ensure!(snapshot.fleet.completed > 0, "no requests completed");
-    engine.shutdown();
+    drop(handles);
+    drop(engine);
+    Ok(())
+}
+
+/// `--listen` mode: bind the TCP wire front-end over the fleet's engine
+/// and serve remote clients (`strum loadgen`, `WireClient`) instead of
+/// the synthetic self-load. `127.0.0.1:0` binds an ephemeral port; the
+/// resolved address is printed as `listening on ADDR` for scripts to
+/// scrape. Runs for `--duration-s` seconds, or until killed when 0.
+fn serve_wire(args: &Args, fleet: Fleet, listen: &str) -> Result<()> {
+    let server = WireServer::bind(
+        listen,
+        fleet.engine.clone(),
+        WireServerOptions {
+            conn_workers: args.usize("conn-workers", 4),
+        },
+    )?;
+    println!("listening on {}", server.local_addr());
+    let duration = args.f64("duration-s", 0.0);
+    if duration <= 0.0 {
+        println!("serving until killed (pass --duration-s N for a bounded run)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs_f64(duration));
+    let stats = server.stats();
+    server.shutdown();
+    let snapshot = fleet.engine.metrics();
+    println!("{}", snapshot.render());
+    println!(
+        "wire: connections={} requests={} shed_presubmit={} protocol_errors={}",
+        stats.connections, stats.requests, stats.shed_presubmit, stats.protocol_errors
+    );
+    if let Some(path) = args.opt_str("metrics-out") {
+        std::fs::write(&path, snapshot.to_json().to_string_pretty())?;
+        println!("wrote {}", path);
+    }
+    Ok(())
+}
+
+/// Open-loop wire load generator: Poisson arrivals at `--rate` req/s
+/// split across `--concurrency` connections, each request carrying the
+/// `--deadline-ms` budget. Latency percentiles plus shed/error counts
+/// are printed and written as JSON to `--out` (the `BENCH_wire_serve`
+/// artifact).
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let addr = args.str("addr", "127.0.0.1:7411");
+    let rate = args.f64("rate", 500.0);
+    anyhow::ensure!(rate > 0.0, "--rate must be positive");
+    let concurrency = args.usize("concurrency", 4).max(1);
+    let deadline_ms = args.usize("deadline-ms", 0) as u32;
+    let out = args.str("out", "BENCH_wire_serve.json");
+    let seed = args.usize("seed", 7) as u64;
+
+    // Discover the fleet from the server's metrics op: variant keys and
+    // the image geometry each expects.
+    let mut probe = WireClient::connect(&addr)?;
+    let metrics = Json::parse(&probe.metrics()?)
+        .map_err(|e| anyhow::anyhow!("server sent unparseable metrics JSON: {:?}", e))?;
+    let discovered: Vec<(String, usize)> = metrics
+        .get("variants")
+        .and_then(|v| v.as_arr())
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|v| {
+                    let key = v.get("key")?.as_str()?.to_string();
+                    let img = v.get("img")?.as_usize()?;
+                    Some((key, img))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    let targets: Vec<(String, usize)> = match args.opt_str("variants") {
+        Some(list) => {
+            let fallback_img = args.usize("img", 16);
+            list.split(',')
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+                .map(|k| {
+                    let img = discovered
+                        .iter()
+                        .find(|(dk, _)| dk == k)
+                        .map(|(_, i)| *i)
+                        .unwrap_or(fallback_img);
+                    (k.to_string(), img)
+                })
+                .collect()
+        }
+        None => discovered,
+    };
+    anyhow::ensure!(
+        !targets.is_empty(),
+        "no variants to target (server reported none; pass --variants)"
+    );
+    drop(probe);
+
+    // The open-loop arrival schedule: requests fire at their scheduled
+    // instants regardless of how fast earlier ones complete (within each
+    // connection's request/response ordering).
+    let mut rng = Rng::new(seed);
+    let mut at = 0.0f64;
+    let arrivals: Vec<f64> = match args.opt_str("duration-s").and_then(|s| s.parse::<f64>().ok())
+    {
+        Some(d) if d > 0.0 => {
+            let mut v = Vec::new();
+            loop {
+                at += rng.exponential(rate);
+                if at >= d {
+                    break;
+                }
+                if v.len() >= 1_000_000 {
+                    println!(
+                        "note: arrival schedule capped at 1,000,000 requests \
+                         ({:.1}s of the requested {:.1}s)",
+                        at, d
+                    );
+                    break;
+                }
+                v.push(at);
+            }
+            v
+        }
+        _ => {
+            let n = args.usize("requests", 500);
+            (0..n)
+                .map(|_| {
+                    at += rng.exponential(rate);
+                    at
+                })
+                .collect()
+        }
+    };
+    let n = arrivals.len();
+    anyhow::ensure!(n > 0, "no requests scheduled");
+    println!(
+        "wire loadgen: {} request(s) to {} across {} variant(s), {:.0} req/s target, \
+         concurrency {}, deadline {} ms",
+        n,
+        addr,
+        targets.len(),
+        rate,
+        concurrency,
+        deadline_ms
+    );
+
+    #[derive(Default)]
+    struct Outcome {
+        lat_us: Vec<f64>,
+        completed: usize,
+        shed: usize,
+        errors: usize,
+        transport: usize,
+        per_code: std::collections::BTreeMap<&'static str, usize>,
+    }
+
+    let t0 = Instant::now();
+    let outcomes: Vec<Outcome> = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for ti in 0..concurrency {
+            let arrivals = &arrivals;
+            let targets = &targets;
+            let addr = addr.clone();
+            let mut rng = Rng::new(seed ^ (0x9E3779B9 + ti as u64));
+            joins.push(scope.spawn(move || {
+                let mut client = WireClient::new(addr);
+                let mut out = Outcome::default();
+                let mut idx = ti;
+                while idx < arrivals.len() {
+                    let (key, img) = &targets[idx % targets.len()];
+                    let px = img * img * 3;
+                    let image: Vec<f32> = (0..px).map(|_| rng.f32()).collect();
+                    let target_t = t0 + Duration::from_secs_f64(arrivals[idx]);
+                    if let Some(wait) = target_t.checked_duration_since(Instant::now()) {
+                        std::thread::sleep(wait);
+                    }
+                    let sent = Instant::now();
+                    match client.infer_budget_ms(key, &image, deadline_ms) {
+                        Ok(WireResponse::Infer(_)) => {
+                            out.completed += 1;
+                            out.lat_us.push(sent.elapsed().as_secs_f64() * 1e6);
+                        }
+                        Ok(WireResponse::Error { code, .. }) => {
+                            *out.per_code.entry(code.name()).or_insert(0) += 1;
+                            if code.is_shed() {
+                                out.shed += 1;
+                            } else {
+                                out.errors += 1;
+                            }
+                        }
+                        Err(_) => {
+                            out.transport += 1;
+                            out.errors += 1;
+                        }
+                    }
+                    idx += concurrency;
+                }
+                out
+            }));
+        }
+        joins
+            .into_iter()
+            .map(|j| j.join().expect("loadgen worker panicked"))
+            .collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut lat = Summary::new();
+    let (mut completed, mut shed, mut errors, mut transport) = (0usize, 0usize, 0usize, 0usize);
+    let mut per_code: std::collections::BTreeMap<&'static str, usize> =
+        std::collections::BTreeMap::new();
+    for o in &outcomes {
+        completed += o.completed;
+        shed += o.shed;
+        errors += o.errors;
+        transport += o.transport;
+        for v in &o.lat_us {
+            lat.push(*v);
+        }
+        for (k, c) in &o.per_code {
+            *per_code.entry(k).or_insert(0) += c;
+        }
+    }
+    for (code, count) in &per_code {
+        println!("  {}: {}", code, count);
+    }
+    if transport > 0 {
+        println!("  transport_errors: {}", transport);
+    }
+    // An all-shed run has no latency samples; report zeros, not NaN
+    // (NaN is also invalid JSON).
+    let pct = |q: f64| if lat.is_empty() { 0.0 } else { lat.percentile(q) };
+    let lat_max = if lat.is_empty() { 0.0 } else { lat.max() };
+    let lat_mean = if lat.is_empty() { 0.0 } else { lat.mean() };
+    println!(
+        "completed={} shed={} errors={} wall_s={:.2} thrpt={:.1} req/s \
+         p50_us={:.0} p95_us={:.0} p99_us={:.0} max_us={:.0}",
+        completed,
+        shed,
+        errors,
+        wall,
+        completed as f64 / wall.max(1e-9),
+        pct(50.0),
+        pct(95.0),
+        pct(99.0),
+        lat_max,
+    );
+    let json = Json::obj(vec![
+        ("addr", Json::str(addr.as_str())),
+        ("requests", Json::Num(n as f64)),
+        ("rate_target", Json::Num(rate)),
+        ("concurrency", Json::Num(concurrency as f64)),
+        ("deadline_ms", Json::Num(deadline_ms as f64)),
+        ("wall_s", Json::Num(wall)),
+        ("completed", Json::Num(completed as f64)),
+        ("shed", Json::Num(shed as f64)),
+        ("errors", Json::Num(errors as f64)),
+        ("transport_errors", Json::Num(transport as f64)),
+        ("throughput_rps", Json::Num(completed as f64 / wall.max(1e-9))),
+        (
+            "latency_us",
+            Json::obj(vec![
+                ("p50", Json::Num(pct(50.0))),
+                ("p95", Json::Num(pct(95.0))),
+                ("p99", Json::Num(pct(99.0))),
+                ("max", Json::Num(lat_max)),
+                ("mean", Json::Num(lat_mean)),
+                ("samples", Json::Num(lat.len() as f64)),
+            ]),
+        ),
+        (
+            "codes",
+            Json::Obj(
+                per_code
+                    .into_iter()
+                    .map(|(k, v)| (k.to_string(), Json::Num(v as f64)))
+                    .collect(),
+            ),
+        ),
+        (
+            "variants",
+            Json::Arr(targets.iter().map(|(k, _)| Json::str(k.as_str())).collect()),
+        ),
+    ]);
+    std::fs::write(&out, json.to_string_pretty())?;
+    println!("wrote {}", out);
     Ok(())
 }
 
@@ -646,4 +1101,35 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
     }
     println!("strum_matmul_int HLO matches host reference bit-for-bit ({}x{}x{})", m, k, n);
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_spec_parses_weights() {
+        let (m, p, w) = parse_variant_spec("base:4").unwrap();
+        assert_eq!(m, Method::Baseline);
+        assert_eq!(p, 0.0);
+        assert_eq!(w, 4);
+        let (m, p, w) = parse_variant_spec("mip2q-L5@0.25:2").unwrap();
+        assert_eq!(m, Method::Mip2q { l_max: 5 });
+        assert_eq!(p, 0.25);
+        assert_eq!(w, 2);
+        // No weight suffix keeps the engine default (0).
+        let (m, p, w) = parse_variant_spec("dliq").unwrap();
+        assert_eq!(m, Method::Dliq { q: 4 });
+        assert_eq!((p, w), (0.5, 0));
+        let (_, p, w) = parse_variant_spec("mip2q@0.75").unwrap();
+        assert_eq!((p, w), (0.75, 0));
+    }
+
+    #[test]
+    fn variant_spec_rejects_bad_weights() {
+        assert!(parse_variant_spec("base:0").is_err());
+        assert!(parse_variant_spec("base:x").is_err());
+        assert!(parse_variant_spec("base:-1").is_err());
+        assert!(parse_variant_spec("nonsense").is_err());
+    }
 }

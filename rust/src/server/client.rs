@@ -1,0 +1,221 @@
+//! Wire client: typed request/response calls over one cached TCP
+//! connection, with lazy connect and one transparent reconnect retry.
+//!
+//! Server-side refusals (queue full, deadline shed, unknown variant, …)
+//! are *data*, not errors: they come back as
+//! [`WireResponse::Error`] with a typed [`ErrorCode`], so a load
+//! generator can count sheds without string-matching. Transport and
+//! protocol failures are `anyhow` errors.
+//!
+//! Retry semantics: a call that fails on a *reused* connection is
+//! retried once on a fresh one (the cached socket may have idled out);
+//! a call that fails on a fresh connection is reported. Inference is
+//! idempotent, so the rare double-execute a retry can cause is safe.
+
+use super::proto::{self, ErrorCode, ProtoError, Request, Response};
+use std::io;
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Default per-call read timeout. Every call is bounded — a server whose
+/// connection workers are all occupied (excess connections queue behind
+/// the pool) produces a typed transport error here, never an indefinite
+/// hang, honoring the "shed or fail, never hang" contract end to end.
+pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One successful wire inference.
+#[derive(Debug, Clone)]
+pub struct WireInfer {
+    pub class: usize,
+    /// Queue→reply latency measured by the engine, microseconds.
+    pub latency_us: u64,
+    /// Batch the request rode in (occupancy, padded size).
+    pub batch: (usize, usize),
+    pub logits: Vec<f32>,
+}
+
+/// Outcome of one wire call: the server answered with logits or with a
+/// typed refusal.
+#[derive(Debug, Clone)]
+pub enum WireResponse {
+    Infer(WireInfer),
+    Error { code: ErrorCode, detail: String },
+}
+
+impl WireResponse {
+    /// Unwraps the inference, turning a typed refusal into an error.
+    pub fn into_infer(self) -> crate::Result<WireInfer> {
+        match self {
+            WireResponse::Infer(r) => Ok(r),
+            WireResponse::Error { code, detail } => {
+                Err(anyhow::anyhow!("server refused: {} ({})", code, detail))
+            }
+        }
+    }
+
+    pub fn error_code(&self) -> Option<ErrorCode> {
+        match self {
+            WireResponse::Infer(_) => None,
+            WireResponse::Error { code, .. } => Some(*code),
+        }
+    }
+}
+
+/// Client for the `strum` wire protocol.
+pub struct WireClient {
+    addr: String,
+    stream: Option<TcpStream>,
+    read_timeout: Duration,
+}
+
+impl WireClient {
+    /// Lazy client: connects on first call.
+    pub fn new(addr: impl Into<String>) -> WireClient {
+        WireClient {
+            addr: addr.into(),
+            stream: None,
+            read_timeout: DEFAULT_READ_TIMEOUT,
+        }
+    }
+
+    /// Overrides the per-call read timeout (floored at 1 ms — a zero
+    /// timeout would mean "no timeout" to the OS and reintroduce the
+    /// unbounded hang this exists to prevent).
+    pub fn with_read_timeout(mut self, timeout: Duration) -> WireClient {
+        self.read_timeout = timeout.max(Duration::from_millis(1));
+        self
+    }
+
+    /// Eager client: fails fast if the server is unreachable.
+    pub fn connect(addr: impl Into<String>) -> crate::Result<WireClient> {
+        let mut c = WireClient::new(addr);
+        c.ensure()
+            .map_err(|e| anyhow::anyhow!("connect to {} failed: {}", c.addr, e))?;
+        Ok(c)
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Drops the cached connection; the next call reconnects.
+    pub fn disconnect(&mut self) {
+        self.stream = None;
+    }
+
+    fn ensure(&mut self) -> io::Result<()> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect(&self.addr)?;
+            let _ = s.set_nodelay(true);
+            let _ = s.set_read_timeout(Some(self.read_timeout));
+            let _ = s.set_write_timeout(Some(self.read_timeout));
+            self.stream = Some(s);
+        }
+        Ok(())
+    }
+
+    fn call(&mut self, payload: &[u8]) -> crate::Result<Response> {
+        for attempt in 0..2u8 {
+            let reused = self.stream.is_some();
+            let mut timed_out = false;
+            let result = (|| -> Result<Response, ProtoError> {
+                self.ensure()?;
+                let s = self.stream.as_mut().expect("ensure just connected");
+                proto::write_frame(s, payload)?;
+                let frame = proto::read_frame_poll(s, || {
+                    timed_out = true;
+                    true
+                })?;
+                match frame {
+                    Some(p) => proto::decode_response(&p),
+                    None => Err(ProtoError::Truncated { what: "response" }),
+                }
+            })();
+            match result {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    self.disconnect();
+                    // A timeout is terminal, never retried: the server
+                    // may still be executing the request, and silently
+                    // re-submitting would double the offered load
+                    // exactly when the server is saturated.
+                    if timed_out {
+                        return Err(anyhow::anyhow!(
+                            "wire call to {} timed out after {:?} (server saturated, \
+                             stalled, or unreachable mid-call)",
+                            self.addr,
+                            self.read_timeout
+                        ));
+                    }
+                    // Retry once only for a stale cached connection
+                    // (idled out / server-side drop between calls).
+                    let retryable =
+                        matches!(e, ProtoError::Io(_) | ProtoError::Truncated { .. });
+                    if attempt == 0 && reused && retryable {
+                        continue;
+                    }
+                    return Err(anyhow::anyhow!("wire call to {} failed: {}", self.addr, e));
+                }
+            }
+        }
+        unreachable!("retry loop returns on the second attempt");
+    }
+
+    /// Submits one image with no deadline.
+    pub fn infer(&mut self, key: &str, image: &[f32]) -> crate::Result<WireResponse> {
+        self.infer_budget_ms(key, image, 0)
+    }
+
+    /// Submits one image with a relative deadline budget. Sub-millisecond
+    /// budgets round up to 1 ms (0 on the wire means "no deadline").
+    pub fn infer_deadline(
+        &mut self,
+        key: &str,
+        image: &[f32],
+        budget: Duration,
+    ) -> crate::Result<WireResponse> {
+        let ms = budget.as_millis().clamp(1, u32::MAX as u128) as u32;
+        self.infer_budget_ms(key, image, ms)
+    }
+
+    /// Submits one image with an explicit millisecond budget (0 = none).
+    pub fn infer_budget_ms(
+        &mut self,
+        key: &str,
+        image: &[f32],
+        budget_ms: u32,
+    ) -> crate::Result<WireResponse> {
+        let payload = proto::encode_infer(key, budget_ms, image);
+        match self.call(&payload)? {
+            Response::Logits {
+                class,
+                latency_us,
+                occupancy,
+                padded,
+                logits,
+            } => Ok(WireResponse::Infer(WireInfer {
+                class: class as usize,
+                latency_us,
+                batch: (occupancy as usize, padded as usize),
+                logits,
+            })),
+            Response::Error { code, detail } => Ok(WireResponse::Error { code, detail }),
+            Response::MetricsJson(_) => {
+                Err(anyhow::anyhow!("metrics response to an infer request"))
+            }
+        }
+    }
+
+    /// Fetches the engine's `MetricsSnapshot` as a JSON string.
+    pub fn metrics(&mut self) -> crate::Result<String> {
+        match self.call(&proto::encode_request(&Request::Metrics))? {
+            Response::MetricsJson(json) => Ok(json),
+            Response::Error { code, detail } => {
+                Err(anyhow::anyhow!("metrics refused: {} ({})", code, detail))
+            }
+            Response::Logits { .. } => {
+                Err(anyhow::anyhow!("logits response to a metrics request"))
+            }
+        }
+    }
+}

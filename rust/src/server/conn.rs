@@ -1,0 +1,178 @@
+//! Per-connection request loop: framed read → deadline stamp → engine
+//! submit → framed reply, one request at a time per connection
+//! (pipelining safety comes from the strict request/response ordering).
+//!
+//! Deadline propagation: the absolute deadline is derived from the
+//! frame's *arrival instant* plus the client's relative budget. From
+//! there the request can be shed at three points, each with its own
+//! typed wire code: before submit (`Expired` — the handler got to the
+//! frame too late), in the engine queue (`Shed` — the worker dropped it
+//! before execution), or at the wait (`DeadlineExpired` — the reply
+//! missed the budget; the engine may still finish it, but nobody is
+//! listening). None of the three can hang the connection.
+
+use super::proto::{self, ErrorCode, ProtoError, Request, Response};
+use super::ServerStats;
+use crate::coordinator::{Engine, ReplyError};
+use std::io;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Read poll interval: how often a blocked read wakes to check the
+/// server's stop flag (bounds shutdown latency without busy-waiting).
+const READ_POLL: Duration = Duration::from_millis(100);
+
+/// A connection that produces no complete frame within this window is
+/// dropped — a silent or stalled peer cannot pin a conn worker (and
+/// with it a slice of the fixed pool) indefinitely. Healthy idle
+/// clients reconnect transparently: `WireClient` lazily redials on the
+/// next call.
+const CONN_READ_DEADLINE: Duration = Duration::from_secs(60);
+
+/// Serves one connection to completion. Returns when the peer closes,
+/// the stream breaks, a protocol error is answered, or the server stops.
+pub(crate) fn serve_conn(
+    mut stream: TcpStream,
+    engine: &Engine,
+    stats: &ServerStats,
+    stopping: &AtomicBool,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    loop {
+        // Timeout wake-ups between frames poll the stop flag and the
+        // per-frame read deadline; once a frame has started it is read
+        // to completion unless the server is stopping or the peer has
+        // stalled past the deadline (those bytes could not be answered
+        // in time anyway).
+        let wait_started = Instant::now();
+        let read = proto::read_frame_poll(&mut stream, || {
+            stopping.load(Ordering::Acquire) || wait_started.elapsed() >= CONN_READ_DEADLINE
+        });
+        let payload = match read {
+            Ok(Some(p)) => p,
+            // Clean EOF or a drained stop — nothing to answer.
+            Ok(None) => return,
+            Err(ProtoError::FrameTooLarge { len }) => {
+                stats.record_protocol_error();
+                let _ = respond(
+                    &mut stream,
+                    &Response::Error {
+                        code: ErrorCode::BadFrame,
+                        detail: format!("frame of {} bytes exceeds the cap", len),
+                    },
+                );
+                return;
+            }
+            // Mid-frame truncation / I/O failure: the stream is not
+            // frame-aligned any more, so there is nothing safe to say.
+            Err(_) => {
+                stats.record_protocol_error();
+                return;
+            }
+        };
+        let arrived = Instant::now();
+        let req = match proto::decode_request(&payload) {
+            Ok(r) => r,
+            Err(e) => {
+                stats.record_protocol_error();
+                let _ = respond(
+                    &mut stream,
+                    &Response::Error {
+                        code: ErrorCode::BadFrame,
+                        detail: e.to_string(),
+                    },
+                );
+                return;
+            }
+        };
+        let resp = match req {
+            Request::Metrics => {
+                Response::MetricsJson(engine.metrics().to_json().to_string_pretty())
+            }
+            Request::Infer {
+                key,
+                deadline_budget_ms,
+                image,
+            } => {
+                stats.record_request();
+                handle_infer(engine, stats, &key, image, deadline_budget_ms, arrived)
+            }
+        };
+        if respond(&mut stream, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+/// One inference: door-shed check → submit with deadline → bounded wait.
+fn handle_infer(
+    engine: &Engine,
+    stats: &ServerStats,
+    key: &str,
+    image: Vec<f32>,
+    deadline_budget_ms: u32,
+    arrived: Instant,
+) -> Response {
+    let deadline =
+        (deadline_budget_ms > 0).then(|| arrived + Duration::from_millis(deadline_budget_ms as u64));
+    // Shed before submit: the budget burned down while the frame waited
+    // its turn on this connection.
+    if let Some(d) = deadline {
+        if Instant::now() >= d {
+            stats.record_shed_presubmit();
+            return Response::Error {
+                code: ErrorCode::Expired,
+                detail: format!(
+                    "budget of {} ms elapsed before submit",
+                    deadline_budget_ms
+                ),
+            };
+        }
+    }
+    // (An `Expired` from the engine's own door check is NOT counted as
+    // a server-level presubmit shed — the engine already records it in
+    // the variant's shed metric, and counting both layers would tally
+    // the same request twice.)
+    let ticket = match engine.submit_deadline(key, image, deadline) {
+        Ok(t) => t,
+        Err(e) => {
+            return Response::Error {
+                code: ErrorCode::from_submit(&e),
+                detail: e.to_string(),
+            };
+        }
+    };
+    let result = match deadline {
+        // `wait_deadline` bounds tail latency: a reply that misses the
+        // budget is abandoned (typed), never waited on indefinitely.
+        Some(d) => ticket.wait_deadline(d.saturating_duration_since(Instant::now())),
+        None => ticket.wait(),
+    };
+    match result {
+        Ok(r) => Response::Logits {
+            class: r.class as u32,
+            latency_us: r.latency.as_micros() as u64,
+            occupancy: r.batch.0.min(u16::MAX as usize) as u16,
+            padded: r.batch.1.min(u16::MAX as usize) as u16,
+            logits: r.logits,
+        },
+        Err(e) => {
+            let code = match e.downcast_ref::<ReplyError>() {
+                Some(ReplyError::Shed) => ErrorCode::Shed,
+                Some(ReplyError::DeadlineExpired) => ErrorCode::DeadlineExpired,
+                Some(ReplyError::Dropped) => ErrorCode::ShuttingDown,
+                Some(ReplyError::Batch(_)) | None => ErrorCode::Batch,
+            };
+            Response::Error {
+                code,
+                detail: e.to_string(),
+            }
+        }
+    }
+}
+
+fn respond(stream: &mut TcpStream, resp: &Response) -> io::Result<()> {
+    proto::write_frame(stream, &proto::encode_response(resp))
+}

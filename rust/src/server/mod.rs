@@ -1,0 +1,245 @@
+//! Wire serving front-end: a TCP server, protocol, and client library
+//! in front of the multi-variant [`Engine`].
+//!
+//! This converts the crate from a library-with-a-CLI into a network
+//! service: remote clients submit row-major image batches to any
+//! registered (net, method, p) variant over a versioned, length-prefixed
+//! binary protocol ([`proto`] documents the frame layout), with
+//! per-request deadline budgets that are enforced server-side at three
+//! stages (door / queue / wait — see [`proto::ErrorCode`]).
+//!
+//! Architecture: one acceptor thread plus a small fixed pool of
+//! connection workers (blocking `std::net` I/O — tokio is not in the
+//! vendored closure, and a handful of OS threads comfortably covers the
+//! fleet sizes this crate serves). Accepted sockets queue behind the
+//! worker pool; each worker owns one connection at a time and runs the
+//! strict request→response loop in [`conn`]. Shutdown is graceful:
+//! in-flight requests get their replies, idle reads notice the stop flag
+//! within one poll interval, and the acceptor is unblocked by a
+//! loopback connect.
+//!
+//! [`WireClient`] is the matching client (lazy connect, one transparent
+//! reconnect retry), and `strum loadgen` drives it as an open-loop load
+//! generator; `strum serve --listen ADDR` binds the server in front of
+//! the engine the CLI builds.
+
+pub mod client;
+mod conn;
+pub mod proto;
+
+pub use client::{WireClient, WireInfer, WireResponse};
+pub use proto::{ErrorCode, ProtoError};
+
+use crate::coordinator::Engine;
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Server tunables.
+#[derive(Debug, Clone)]
+pub struct WireServerOptions {
+    /// Connection-worker threads (concurrent connections served; more
+    /// connections queue behind them).
+    pub conn_workers: usize,
+}
+
+impl Default for WireServerOptions {
+    fn default() -> Self {
+        WireServerOptions { conn_workers: 4 }
+    }
+}
+
+/// Server-level counters (engine-level serving metrics live in
+/// [`Engine::metrics`]; these cover what happens before a request
+/// reaches the engine).
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    connections: AtomicU64,
+    requests: AtomicU64,
+    shed_presubmit: AtomicU64,
+    protocol_errors: AtomicU64,
+}
+
+impl ServerStats {
+    pub(crate) fn record_connection(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+    pub(crate) fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+    pub(crate) fn record_shed_presubmit(&self) {
+        self.shed_presubmit.fetch_add(1, Ordering::Relaxed);
+    }
+    pub(crate) fn record_protocol_error(&self) {
+        self.protocol_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ServerStatsSnapshot {
+        ServerStatsSnapshot {
+            connections: self.connections.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            shed_presubmit: self.shed_presubmit.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`ServerStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerStatsSnapshot {
+    pub connections: u64,
+    pub requests: u64,
+    /// Requests shed by the connection handler before submit (budget
+    /// already elapsed at dequeue).
+    pub shed_presubmit: u64,
+    pub protocol_errors: u64,
+}
+
+struct ServerShared {
+    engine: Arc<Engine>,
+    queue: Mutex<VecDeque<TcpStream>>,
+    cv: Condvar,
+    stopping: AtomicBool,
+    stats: ServerStats,
+}
+
+/// Blocking TCP front-end over a shared [`Engine`].
+pub struct WireServer {
+    addr: SocketAddr,
+    shared: Arc<ServerShared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WireServer {
+    /// Binds `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and starts
+    /// the acceptor + connection workers. The engine keeps serving any
+    /// in-process handles concurrently — the wire front-end is just
+    /// another submitter.
+    pub fn bind(
+        addr: &str,
+        engine: Arc<Engine>,
+        opts: WireServerOptions,
+    ) -> crate::Result<WireServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shared = Arc::new(ServerShared {
+            engine,
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            stopping: AtomicBool::new(false),
+            stats: ServerStats::default(),
+        });
+        let workers = opts.conn_workers.max(1);
+        let mut threads = Vec::with_capacity(workers + 1);
+        {
+            let sh = shared.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("wire-accept".into())
+                    .spawn(move || accept_loop(&listener, &sh))?,
+            );
+        }
+        for i in 0..workers {
+            let sh = shared.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("wire-conn-{}", i))
+                    .spawn(move || conn_worker(&sh))?,
+            );
+        }
+        Ok(WireServer {
+            addr: local,
+            shared,
+            threads,
+        })
+    }
+
+    /// The bound address (resolves the ephemeral port of `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> ServerStatsSnapshot {
+        self.shared.stats.snapshot()
+    }
+
+    /// Stops accepting, lets in-flight requests finish, joins every
+    /// thread. Idle connections close within one read-poll interval.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        if self.threads.is_empty() {
+            return;
+        }
+        self.shared.stopping.store(true, Ordering::Release);
+        // Unblock the acceptor with a throwaway loopback connection (the
+        // accept call has no timeout of its own). A wildcard bind
+        // address (0.0.0.0 / ::) is not connectable everywhere, so dial
+        // localhost on the bound port instead, with a bounded timeout.
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+        self.shared.cv.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, sh: &ServerShared) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if sh.stopping.load(Ordering::Acquire) {
+                    // The shutdown wake-up (or a straggler) — drop it.
+                    return;
+                }
+                sh.stats.record_connection();
+                sh.queue.lock().unwrap().push_back(stream);
+                sh.cv.notify_one();
+            }
+            Err(_) => {
+                if sh.stopping.load(Ordering::Acquire) {
+                    return;
+                }
+                // Transient accept failure (EMFILE, aborted handshake):
+                // back off briefly and keep serving.
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+fn conn_worker(sh: &ServerShared) {
+    loop {
+        let stream = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(s) = q.pop_front() {
+                    break Some(s);
+                }
+                if sh.stopping.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = sh.cv.wait_timeout(q, Duration::from_millis(100)).unwrap().0;
+            }
+        };
+        let Some(stream) = stream else { return };
+        conn::serve_conn(stream, &sh.engine, &sh.stats, &sh.stopping);
+    }
+}

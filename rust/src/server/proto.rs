@@ -1,0 +1,674 @@
+//! The `strum` wire protocol: a versioned, length-prefixed binary
+//! framing for inference over TCP.
+//!
+//! # Frame layout (all little-endian)
+//!
+//! ```text
+//! frame   := u32 len · payload            len = payload bytes (≤ MAX_FRAME)
+//! payload := u8 version · u8 op · body
+//!
+//! requests
+//!   OP_INFER   u32 key_len · key bytes (UTF-8 variant key)
+//!              u32 deadline_budget_ms   (0 = no deadline)
+//!              u32 n · n × u32          (f32 bit patterns, row-major image)
+//!   OP_METRICS (empty body)
+//!
+//! responses
+//!   OP_LOGITS        u32 class · u64 latency_us
+//!                    u16 batch_occupancy · u16 batch_padded
+//!                    u32 n · n × u32    (f32 bit patterns, logit row)
+//!   OP_ERROR         u8 code · u32 detail_len · detail bytes (UTF-8)
+//!   OP_METRICS_JSON  u32 len · bytes    (MetricsSnapshot JSON)
+//! ```
+//!
+//! The deadline travels as a *budget* (relative milliseconds), not an
+//! absolute timestamp — the server stamps the frame's arrival and
+//! derives the absolute deadline locally, so client and server clocks
+//! never need to agree. A request whose budget has already elapsed when
+//! the server gets to it is shed before submit ([`ErrorCode::Expired`]);
+//! one shed from the engine queue reports [`ErrorCode::Shed`]; one whose
+//! reply misses the budget reports [`ErrorCode::DeadlineExpired`]. The
+//! remaining codes mirror [`SubmitError`] arm for arm.
+//!
+//! Decoding is defensive: a hostile peer can produce a typed
+//! [`ProtoError`], never a panic or an unbounded allocation (frames are
+//! capped at [`MAX_FRAME`]; every length field is bounds-checked against
+//! the remaining payload).
+
+use crate::coordinator::SubmitError;
+use std::fmt;
+use std::io::{self, Read, Write};
+
+/// Wire protocol version carried in every payload.
+pub const PROTO_VERSION: u8 = 1;
+
+/// Hard cap on one frame's payload (16 MiB — a 1024×1024×3 image batch
+/// of one still fits with room to spare).
+pub const MAX_FRAME: usize = 1 << 24;
+
+/// Request ops.
+pub const OP_INFER: u8 = 0x01;
+pub const OP_METRICS: u8 = 0x02;
+/// Response ops (high bit set).
+pub const OP_LOGITS: u8 = 0x81;
+pub const OP_ERROR: u8 = 0x82;
+pub const OP_METRICS_JSON: u8 = 0x83;
+
+/// Typed wire error codes. `1..=5` mirror [`SubmitError`]; `6..=8` are
+/// the three deadline-shed stages (door / queue / wait); `9` is a
+/// backend execution failure; `10` a malformed frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    QueueFull = 1,
+    BadImage = 2,
+    UnknownVariant = 3,
+    Retired = 4,
+    ShuttingDown = 5,
+    /// Budget elapsed before submit — shed at the door.
+    Expired = 6,
+    /// Deadline passed while queued — shed before execution.
+    Shed = 7,
+    /// The reply did not arrive within the budget.
+    DeadlineExpired = 8,
+    /// The backend failed the batch.
+    Batch = 9,
+    /// The request frame could not be decoded.
+    BadFrame = 10,
+}
+
+impl ErrorCode {
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_u8(code: u8) -> Option<ErrorCode> {
+        Some(match code {
+            1 => ErrorCode::QueueFull,
+            2 => ErrorCode::BadImage,
+            3 => ErrorCode::UnknownVariant,
+            4 => ErrorCode::Retired,
+            5 => ErrorCode::ShuttingDown,
+            6 => ErrorCode::Expired,
+            7 => ErrorCode::Shed,
+            8 => ErrorCode::DeadlineExpired,
+            9 => ErrorCode::Batch,
+            10 => ErrorCode::BadFrame,
+            _ => return None,
+        })
+    }
+
+    /// Deadline-shed family: the request was dropped (or its reply
+    /// abandoned) because its budget ran out — expected behaviour under
+    /// overload, not a fault.
+    pub fn is_shed(self) -> bool {
+        matches!(
+            self,
+            ErrorCode::Expired | ErrorCode::Shed | ErrorCode::DeadlineExpired
+        )
+    }
+
+    pub fn from_submit(e: &SubmitError) -> ErrorCode {
+        match e {
+            SubmitError::QueueFull { .. } => ErrorCode::QueueFull,
+            SubmitError::BadImage { .. } => ErrorCode::BadImage,
+            SubmitError::UnknownVariant { .. } => ErrorCode::UnknownVariant,
+            SubmitError::Retired { .. } => ErrorCode::Retired,
+            SubmitError::ShuttingDown => ErrorCode::ShuttingDown,
+            SubmitError::Expired { .. } => ErrorCode::Expired,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::QueueFull => "queue_full",
+            ErrorCode::BadImage => "bad_image",
+            ErrorCode::UnknownVariant => "unknown_variant",
+            ErrorCode::Retired => "retired",
+            ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::Expired => "expired",
+            ErrorCode::Shed => "shed",
+            ErrorCode::DeadlineExpired => "deadline_expired",
+            ErrorCode::Batch => "batch_failed",
+            ErrorCode::BadFrame => "bad_frame",
+        }
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Typed protocol failures (I/O and decode).
+#[derive(Debug)]
+pub enum ProtoError {
+    Io(io::Error),
+    /// Declared frame length exceeds [`MAX_FRAME`].
+    FrameTooLarge { len: usize },
+    /// The stream ended (or the payload ran out) mid-structure.
+    Truncated { what: &'static str },
+    /// Payload carries a protocol version this build does not speak.
+    BadVersion { found: u8 },
+    /// Unknown op byte for this direction.
+    BadOp { op: u8 },
+    /// Structurally invalid payload content.
+    Corrupt(String),
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtoError::Io(e) => write!(f, "wire io error: {}", e),
+            ProtoError::FrameTooLarge { len } => {
+                write!(f, "frame of {} bytes exceeds the {} byte cap", len, MAX_FRAME)
+            }
+            ProtoError::Truncated { what } => write!(f, "truncated {}", what),
+            ProtoError::BadVersion { found } => write!(
+                f,
+                "protocol version {} not supported (this build speaks {})",
+                found, PROTO_VERSION
+            ),
+            ProtoError::BadOp { op } => write!(f, "unknown op 0x{:02x}", op),
+            ProtoError::Corrupt(why) => write!(f, "corrupt payload: {}", why),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+impl From<io::Error> for ProtoError {
+    fn from(e: io::Error) -> Self {
+        ProtoError::Io(e)
+    }
+}
+
+/// One client→server message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Infer {
+        /// Variant key the engine routes on.
+        key: String,
+        /// Relative deadline budget in milliseconds (0 = none).
+        deadline_budget_ms: u32,
+        /// Row-major `img·img·3` floats.
+        image: Vec<f32>,
+    },
+    /// Ask for the engine's `MetricsSnapshot` as JSON.
+    Metrics,
+}
+
+/// One server→client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Logits {
+        class: u32,
+        latency_us: u64,
+        /// Batch the request rode in (occupancy, padded size).
+        occupancy: u16,
+        padded: u16,
+        logits: Vec<f32>,
+    },
+    Error {
+        code: ErrorCode,
+        detail: String,
+    },
+    MetricsJson(String),
+}
+
+// ---------------------------------------------------------------- framing
+
+/// Writes one length-prefixed frame and flushes.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME);
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Core frame reader shared by the blocking client path and the
+/// server's timeout-polling path — ONE implementation of the header
+/// loop, clean-EOF rule, [`MAX_FRAME`] cap, and truncation semantics.
+/// `on_block` runs on every `WouldBlock`/`TimedOut` read (streams with
+/// a read timeout configured): return `false` to keep waiting, `true`
+/// to abort — a clean `Ok(None)` before any header byte, a typed
+/// truncation once a frame has started.
+pub fn read_frame_poll(
+    r: &mut impl Read,
+    mut on_block: impl FnMut() -> bool,
+) -> Result<Option<Vec<u8>>, ProtoError> {
+    let mut len4 = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len4[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err(ProtoError::Truncated { what: "frame header" }),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+            {
+                if on_block() {
+                    return if got == 0 {
+                        Ok(None)
+                    } else {
+                        Err(ProtoError::Truncated { what: "frame header" })
+                    };
+                }
+            }
+            Err(e) => return Err(ProtoError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME {
+        return Err(ProtoError::FrameTooLarge { len });
+    }
+    let mut buf = vec![0u8; len];
+    let mut filled = 0usize;
+    while filled < len {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => return Err(ProtoError::Truncated { what: "frame body" }),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+            {
+                if on_block() {
+                    return Err(ProtoError::Truncated { what: "frame body" });
+                }
+            }
+            Err(e) => return Err(ProtoError::Io(e)),
+        }
+    }
+    Ok(Some(buf))
+}
+
+/// Reads one frame from a blocking stream. `Ok(None)` on a clean EOF
+/// (peer closed between frames); EOF mid-frame is a typed
+/// [`ProtoError::Truncated`]. A read-timeout wakeup (only possible when
+/// the caller configured one on the stream) aborts immediately instead
+/// of spinning.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, ProtoError> {
+    read_frame_poll(r, || true)
+}
+
+// --------------------------------------------------------------- encoding
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bytes(buf: &mut Vec<u8>, bytes: &[u8]) {
+    put_u32(buf, bytes.len() as u32);
+    buf.extend_from_slice(bytes);
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(buf, xs.len() as u32);
+    for &x in xs {
+        put_u32(buf, x.to_bits());
+    }
+}
+
+fn header(op: u8) -> Vec<u8> {
+    vec![PROTO_VERSION, op]
+}
+
+/// Serializes an infer request payload straight from borrowed parts —
+/// the client's hot path (no intermediate owned [`Request`], no image
+/// copy).
+pub fn encode_infer(key: &str, deadline_budget_ms: u32, image: &[f32]) -> Vec<u8> {
+    let mut buf = header(OP_INFER);
+    put_bytes(&mut buf, key.as_bytes());
+    put_u32(&mut buf, deadline_budget_ms);
+    put_f32s(&mut buf, image);
+    buf
+}
+
+/// Serializes a request payload (frame it with [`write_frame`]).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    match req {
+        Request::Infer {
+            key,
+            deadline_budget_ms,
+            image,
+        } => encode_infer(key, *deadline_budget_ms, image),
+        Request::Metrics => header(OP_METRICS),
+    }
+}
+
+/// Serializes a response payload (frame it with [`write_frame`]).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    match resp {
+        Response::Logits {
+            class,
+            latency_us,
+            occupancy,
+            padded,
+            logits,
+        } => {
+            let mut buf = header(OP_LOGITS);
+            put_u32(&mut buf, *class);
+            put_u64(&mut buf, *latency_us);
+            buf.extend_from_slice(&occupancy.to_le_bytes());
+            buf.extend_from_slice(&padded.to_le_bytes());
+            put_f32s(&mut buf, logits);
+            buf
+        }
+        Response::Error { code, detail } => {
+            let mut buf = header(OP_ERROR);
+            buf.push(code.as_u8());
+            put_bytes(&mut buf, detail.as_bytes());
+            buf
+        }
+        Response::MetricsJson(json) => {
+            let mut buf = header(OP_METRICS_JSON);
+            put_bytes(&mut buf, json.as_bytes());
+            buf
+        }
+    }
+}
+
+// --------------------------------------------------------------- decoding
+
+/// Bounds-checked little-endian reader over a payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], ProtoError> {
+        if n > self.remaining() {
+            return Err(ProtoError::Truncated { what });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8, ProtoError> {
+        Ok(self.bytes(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &'static str) -> Result<u16, ProtoError> {
+        Ok(u16::from_le_bytes(self.bytes(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.bytes(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.bytes(8, what)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self, what: &'static str) -> Result<String, ProtoError> {
+        let n = self.u32(what)? as usize;
+        if n > self.remaining() {
+            return Err(ProtoError::Truncated { what });
+        }
+        String::from_utf8(self.bytes(n, what)?.to_vec())
+            .map_err(|_| ProtoError::Corrupt(format!("{} is not utf-8", what)))
+    }
+
+    fn f32_vec(&mut self, what: &'static str) -> Result<Vec<f32>, ProtoError> {
+        let n = self.u32(what)? as usize;
+        if n.checked_mul(4).map(|b| b > self.remaining()).unwrap_or(true) {
+            return Err(ProtoError::Truncated { what });
+        }
+        let raw = self.bytes(n * 4, what)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    fn finish(self, what: &'static str) -> Result<(), ProtoError> {
+        if self.remaining() != 0 {
+            return Err(ProtoError::Corrupt(format!(
+                "{} trailing bytes after {}",
+                self.remaining(),
+                what
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn check_version(c: &mut Cursor<'_>) -> Result<u8, ProtoError> {
+    let version = c.u8("version byte")?;
+    if version != PROTO_VERSION {
+        return Err(ProtoError::BadVersion { found: version });
+    }
+    c.u8("op byte")
+}
+
+/// Parses a request payload.
+pub fn decode_request(payload: &[u8]) -> Result<Request, ProtoError> {
+    let mut c = Cursor::new(payload);
+    let op = check_version(&mut c)?;
+    match op {
+        OP_INFER => {
+            let key = c.string("variant key")?;
+            let deadline_budget_ms = c.u32("deadline budget")?;
+            let image = c.f32_vec("image")?;
+            c.finish("infer request")?;
+            Ok(Request::Infer {
+                key,
+                deadline_budget_ms,
+                image,
+            })
+        }
+        OP_METRICS => {
+            c.finish("metrics request")?;
+            Ok(Request::Metrics)
+        }
+        op => Err(ProtoError::BadOp { op }),
+    }
+}
+
+/// Parses a response payload.
+pub fn decode_response(payload: &[u8]) -> Result<Response, ProtoError> {
+    let mut c = Cursor::new(payload);
+    let op = check_version(&mut c)?;
+    match op {
+        OP_LOGITS => {
+            let class = c.u32("class")?;
+            let latency_us = c.u64("latency")?;
+            let occupancy = c.u16("batch occupancy")?;
+            let padded = c.u16("batch padded size")?;
+            let logits = c.f32_vec("logits")?;
+            c.finish("logits response")?;
+            Ok(Response::Logits {
+                class,
+                latency_us,
+                occupancy,
+                padded,
+                logits,
+            })
+        }
+        OP_ERROR => {
+            let raw = c.u8("error code")?;
+            let code = ErrorCode::from_u8(raw)
+                .ok_or_else(|| ProtoError::Corrupt(format!("error code {}", raw)))?;
+            let detail = c.string("error detail")?;
+            c.finish("error response")?;
+            Ok(Response::Error { code, detail })
+        }
+        OP_METRICS_JSON => {
+            let json = c.string("metrics json")?;
+            c.finish("metrics response")?;
+            Ok(Response::MetricsJson(json))
+        }
+        op => Err(ProtoError::BadOp { op }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        for req in [
+            Request::Infer {
+                key: "net:base:p0:native".into(),
+                deadline_budget_ms: 25,
+                image: vec![0.0, 1.5, -2.25, f32::MIN_POSITIVE],
+            },
+            Request::Infer {
+                key: String::new(),
+                deadline_budget_ms: 0,
+                image: Vec::new(),
+            },
+            Request::Metrics,
+        ] {
+            let payload = encode_request(&req);
+            assert_eq!(decode_request(&payload).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        for resp in [
+            Response::Logits {
+                class: 3,
+                latency_us: 12_345,
+                occupancy: 2,
+                padded: 4,
+                logits: vec![0.125, -7.5, 3.25],
+            },
+            Response::Error {
+                code: ErrorCode::DeadlineExpired,
+                detail: "no reply within the wait deadline".into(),
+            },
+            Response::MetricsJson("{\"fleet\": {}}".into()),
+        ] {
+            let payload = encode_response(&resp);
+            assert_eq!(decode_response(&payload).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_and_clean_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncation_is_typed_never_panics() {
+        // Every prefix of a valid payload decodes to a typed error.
+        let payload = encode_request(&Request::Infer {
+            key: "k".into(),
+            deadline_budget_ms: 9,
+            image: vec![1.0, 2.0],
+        });
+        for cut in 0..payload.len() {
+            assert!(decode_request(&payload[..cut]).is_err(), "cut {}", cut);
+        }
+        // Truncated frame body.
+        let mut framed = Vec::new();
+        write_frame(&mut framed, &payload).unwrap();
+        framed.truncate(framed.len() - 3);
+        let mut r = std::io::Cursor::new(framed);
+        assert!(matches!(
+            read_frame(&mut r),
+            Err(ProtoError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn hostile_lengths_are_bounded() {
+        // Declared frame length beyond the cap is refused before any
+        // allocation of that size.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&((MAX_FRAME as u32) + 1).to_le_bytes());
+        let mut r = std::io::Cursor::new(buf);
+        assert!(matches!(
+            read_frame(&mut r),
+            Err(ProtoError::FrameTooLarge { .. })
+        ));
+        // A declared image length far beyond the payload is a typed
+        // truncation, not an allocation.
+        let mut payload = vec![PROTO_VERSION, OP_INFER];
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.push(b'k');
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_request(&payload),
+            Err(ProtoError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn version_and_op_are_gated() {
+        let mut payload = encode_request(&Request::Metrics);
+        payload[0] = PROTO_VERSION + 1;
+        assert!(matches!(
+            decode_request(&payload),
+            Err(ProtoError::BadVersion { .. })
+        ));
+        let payload = vec![PROTO_VERSION, 0x7f];
+        assert!(matches!(
+            decode_request(&payload),
+            Err(ProtoError::BadOp { op: 0x7f })
+        ));
+        // A response op is not a request.
+        let payload = encode_response(&Response::MetricsJson("{}".into()));
+        assert!(matches!(
+            decode_request(&payload),
+            Err(ProtoError::BadOp { .. })
+        ));
+    }
+
+    #[test]
+    fn error_codes_roundtrip_and_classify() {
+        for code in [
+            ErrorCode::QueueFull,
+            ErrorCode::BadImage,
+            ErrorCode::UnknownVariant,
+            ErrorCode::Retired,
+            ErrorCode::ShuttingDown,
+            ErrorCode::Expired,
+            ErrorCode::Shed,
+            ErrorCode::DeadlineExpired,
+            ErrorCode::Batch,
+            ErrorCode::BadFrame,
+        ] {
+            assert_eq!(ErrorCode::from_u8(code.as_u8()), Some(code));
+        }
+        assert_eq!(ErrorCode::from_u8(0), None);
+        assert_eq!(ErrorCode::from_u8(11), None);
+        assert!(ErrorCode::Expired.is_shed());
+        assert!(ErrorCode::Shed.is_shed());
+        assert!(ErrorCode::DeadlineExpired.is_shed());
+        assert!(!ErrorCode::QueueFull.is_shed());
+        assert_eq!(
+            ErrorCode::from_submit(&SubmitError::ShuttingDown),
+            ErrorCode::ShuttingDown
+        );
+        assert_eq!(
+            ErrorCode::from_submit(&SubmitError::Expired { key: "k".into() }),
+            ErrorCode::Expired
+        );
+    }
+}

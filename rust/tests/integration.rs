@@ -175,10 +175,10 @@ fn memory_accounting_matches_eq1() {
 mod engine_contracts {
     use std::sync::atomic::{AtomicBool, Ordering};
     use std::sync::{Arc, Mutex};
-    use std::time::Duration;
+    use std::time::{Duration, Instant};
     use strum_dpu::backend::{Backend, BackendKind};
     use strum_dpu::coordinator::{
-        BatchPolicy, Engine, EngineOptions, SubmitError, Variant,
+        BatchPolicy, Engine, EngineOptions, ReplyError, SubmitError, Variant,
     };
 
     /// Backend whose `infer_batch` blocks until `gate` opens, logging the
@@ -452,6 +452,153 @@ mod engine_contracts {
             let r = t.wait_deadline(Duration::from_secs(10)).unwrap();
             assert_eq!(r.class, i % 4);
         }
+    }
+
+    /// `wait_deadline` expiry semantics: the timeout is a typed
+    /// [`ReplyError::DeadlineExpired`] (never a hang), the ticket stays
+    /// usable, and a result that arrives after the deadline is still
+    /// takeable via `try_take`.
+    #[test]
+    fn wait_deadline_expiry_is_typed_and_late_reply_is_takeable() {
+        let gate = Arc::new(AtomicBool::new(false));
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let engine = Engine::start(EngineOptions {
+            workers: 1,
+            ..EngineOptions::default()
+        });
+        let h = engine
+            .register_with(mock_variant("v", gate.clone(), log), one_by_one(), 8)
+            .unwrap();
+        let t = h.submit(image_for(3)).unwrap();
+        // Gate closed: the bounded wait must come back typed, promptly.
+        let err = t.wait_deadline(Duration::from_millis(20)).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ReplyError>(),
+            Some(&ReplyError::DeadlineExpired)
+        );
+        // Still in flight — nothing to take yet.
+        assert!(t.try_take().is_none());
+        // The request itself was not cancelled: once the backend runs,
+        // the late reply is collectable from the same ticket.
+        gate.store(true, Ordering::Release);
+        let mut reply = None;
+        for _ in 0..5000 {
+            if let Some(r) = t.try_take() {
+                reply = Some(r);
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(500));
+        }
+        let r = reply.expect("late reply never arrived").unwrap();
+        assert_eq!(r.class, 3);
+        engine.shutdown();
+    }
+
+    /// Per-request deadlines shed at both stages: an already-expired
+    /// deadline is refused at the door (typed `SubmitError::Expired`,
+    /// nothing enqueued), and one that lapses while queued is shed by
+    /// the worker before execution (typed `ReplyError::Shed` through the
+    /// ticket). Both are counted in the variant's shed metric.
+    #[test]
+    fn deadlines_shed_at_door_and_in_queue() {
+        let gate = Arc::new(AtomicBool::new(false));
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let engine = Engine::start(EngineOptions {
+            workers: 1,
+            ..EngineOptions::default()
+        });
+        let h = engine
+            .register_with(mock_variant("v", gate.clone(), log.clone()), one_by_one(), 8)
+            .unwrap();
+        // Door shed: the deadline has passed by the time the check runs.
+        let err = h
+            .submit_deadline(image_for(0), Some(Instant::now()))
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::Expired { .. }), "{:?}", err);
+        // Queue shed: pin the worker on a no-deadline request, enqueue a
+        // short-deadline one behind it, and let the budget lapse.
+        let t_pin = h.submit(image_for(1)).unwrap();
+        wait_batches(&engine, "v", 1);
+        let t_short = h
+            .submit_deadline(
+                image_for(2),
+                Some(Instant::now() + Duration::from_millis(5)),
+            )
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        gate.store(true, Ordering::Release);
+        assert_eq!(t_pin.wait_deadline(Duration::from_secs(10)).unwrap().class, 1);
+        let err = t_short.wait_deadline(Duration::from_secs(10)).unwrap_err();
+        assert_eq!(err.downcast_ref::<ReplyError>(), Some(&ReplyError::Shed));
+        let snap = engine.metrics();
+        assert_eq!(snap.variants[0].shed, 2);
+        assert_eq!(snap.variants[0].completed, 1);
+        // The shed request never reached the backend: only the pin ran.
+        assert_eq!(log.lock().unwrap().len(), 1);
+        engine.shutdown();
+    }
+
+    /// Per-variant priority weights: quantum 4 vs 1 drains the heavy
+    /// variant in ~4-request batches while the light one goes one at a
+    /// time — weighted credit, not starvation (both fleets complete).
+    #[test]
+    fn weighted_drr_drains_by_priority() {
+        let gate = Arc::new(AtomicBool::new(false));
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let engine = Engine::start(EngineOptions {
+            workers: 1,
+            ..EngineOptions::default()
+        });
+        let eager = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::ZERO,
+        };
+        let heavy = engine
+            .register_weighted(
+                mock_variant("heavy", gate.clone(), log.clone()),
+                eager.clone(),
+                64,
+                4,
+            )
+            .unwrap();
+        let light = engine
+            .register_weighted(mock_variant("light", gate.clone(), log.clone()), eager, 64, 1)
+            .unwrap();
+        // Pin the worker on the first heavy request, then build both
+        // backlogs while it blocks.
+        let mut tickets = vec![heavy.submit(image_for(1)).unwrap()];
+        wait_batches(&engine, "heavy", 1);
+        for _ in 0..12 {
+            tickets.push(heavy.submit(image_for(1)).unwrap());
+        }
+        let light_tickets: Vec<_> =
+            (0..12).map(|_| light.submit(image_for(2)).unwrap()).collect();
+        gate.store(true, Ordering::Release);
+        for t in tickets {
+            assert_eq!(t.wait_deadline(Duration::from_secs(10)).unwrap().class, 1);
+        }
+        for t in light_tickets {
+            assert_eq!(t.wait_deadline(Duration::from_secs(10)).unwrap().class, 2);
+        }
+        let snap = engine.metrics();
+        let heavy_snap = snap.variants.iter().find(|v| v.key == "heavy").unwrap();
+        let light_snap = snap.variants.iter().find(|v| v.key == "light").unwrap();
+        assert_eq!(heavy_snap.completed, 13);
+        assert_eq!(light_snap.completed, 12);
+        // Credit 4 cuts heavy's backlog into ~4-request batches (1 pin +
+        // 3×4); credit 1 caps light at singles despite the same backlog.
+        assert!(
+            heavy_snap.batches <= 6,
+            "heavy drained in {} batches (want few, large)",
+            heavy_snap.batches
+        );
+        assert!(
+            light_snap.batches >= 10,
+            "light drained in {} batches (want ~12 singles)",
+            light_snap.batches
+        );
+        assert!(heavy_snap.mean_batch > light_snap.mean_batch);
+        engine.shutdown();
     }
 }
 

@@ -1,0 +1,320 @@
+//! Wire front-end integration tests — loopback TCP, no artifacts:
+//! a synthetic 3-variant native fleet served by `WireServer`, driven by
+//! `WireClient`. The acceptance contract: logits over the wire are
+//! bit-identical to in-process `VariantHandle::submit` for the same
+//! images, deadline-shed requests come back as typed protocol codes
+//! (never a hang), and the metrics op round-trips the fleet snapshot.
+
+use std::sync::Arc;
+use std::time::Duration;
+use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
+use strum_dpu::backend::{Backend, BackendKind};
+use strum_dpu::coordinator::{
+    BatchPolicy, Engine, EngineOptions, Router, Variant, VariantHandle,
+};
+use strum_dpu::model::import::NetWeights;
+use strum_dpu::model::eval::EvalConfig;
+use strum_dpu::quant::Method;
+use strum_dpu::server::{
+    proto, ErrorCode, WireClient, WireResponse, WireServer, WireServerOptions,
+};
+use strum_dpu::util::json::Json;
+use strum_dpu::util::prng::Rng;
+
+const IMG: usize = 16;
+const CLASSES: usize = 7;
+
+fn calibrated_weights(seed: u64) -> NetWeights {
+    let mut w = synth_net_weights("mini_cnn_s", IMG, CLASSES, seed).unwrap();
+    let calib: Vec<f32> = {
+        let mut rng = Rng::new(seed ^ 0xA5A5);
+        (0..4 * IMG * IMG * 3).map(|_| rng.f32()).collect()
+    };
+    w.manifest.act_scales = calibrate_act_scales(&w, &calib, 4).unwrap();
+    w
+}
+
+/// A native 3-variant fleet (base / DLIQ / MIP2Q) on one engine.
+fn native_fleet() -> (Arc<Engine>, Vec<VariantHandle>, Vec<&'static str>) {
+    let weights = calibrated_weights(21);
+    let mut router = Router::native();
+    let engine = Arc::new(Engine::start(EngineOptions {
+        workers: 2,
+        max_wait: Duration::from_millis(1),
+        ..EngineOptions::default()
+    }));
+    let keys = vec!["base", "dliq-q4", "mip2q-L7"];
+    let specs = [
+        (Method::Baseline, 0.0),
+        (Method::Dliq { q: 4 }, 0.5),
+        (Method::Mip2q { l_max: 7 }, 0.5),
+    ];
+    let mut handles = Vec::new();
+    for (key, &(method, p)) in keys.iter().zip(&specs) {
+        let cfg = EvalConfig::paper(method, p);
+        let v = router.register_native_weights(key, &weights, &cfg).unwrap();
+        handles.push(engine.register(v).unwrap());
+    }
+    (engine, handles, keys)
+}
+
+fn random_image(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..IMG * IMG * 3).map(|_| rng.f32()).collect()
+}
+
+/// The acceptance criterion: a round-trip through TCP framing, the
+/// server, the engine, and back produces logits bit-identical to an
+/// in-process submit of the same image to the same variant.
+#[test]
+fn wire_logits_match_in_process_bit_for_bit() {
+    let (engine, handles, keys) = native_fleet();
+    let server =
+        WireServer::bind("127.0.0.1:0", engine.clone(), WireServerOptions::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = WireClient::connect(&addr).unwrap();
+    for (vi, key) in keys.iter().enumerate() {
+        for s in 0..3u64 {
+            let image = random_image(1000 + s);
+            let local = handles[vi].submit(image.clone()).unwrap().wait().unwrap();
+            let wire = client
+                .infer(key, &image)
+                .unwrap()
+                .into_infer()
+                .unwrap_or_else(|e| panic!("{}: {}", key, e));
+            assert_eq!(wire.logits.len(), CLASSES);
+            // Bit-identical: the wire moves f32 bit patterns, and the
+            // native backend is deterministic integer math.
+            let a: Vec<u32> = local.logits.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = wire.logits.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "{} image {}", key, s);
+            assert_eq!(wire.class, local.class);
+        }
+    }
+    let stats = server.stats();
+    assert_eq!(stats.protocol_errors, 0);
+    assert_eq!(stats.requests, 9);
+    server.shutdown();
+}
+
+/// Metrics op: the snapshot crosses the wire as JSON that parses, names
+/// every variant with its geometry, and counts the completed requests.
+#[test]
+fn metrics_op_round_trips_the_fleet() {
+    let (engine, _handles, keys) = native_fleet();
+    let server =
+        WireServer::bind("127.0.0.1:0", engine.clone(), WireServerOptions::default()).unwrap();
+    let mut client = WireClient::connect(server.local_addr().to_string()).unwrap();
+    for key in &keys {
+        client
+            .infer(key, &random_image(7))
+            .unwrap()
+            .into_infer()
+            .unwrap();
+    }
+    let snapshot = Json::parse(&client.metrics().unwrap()).unwrap();
+    let variants = snapshot.get("variants").unwrap().as_arr().unwrap();
+    assert_eq!(variants.len(), keys.len());
+    for v in variants {
+        let key = v.get("key").unwrap().as_str().unwrap();
+        assert!(keys.iter().any(|k| *k == key), "unexpected variant {}", key);
+        assert_eq!(v.get("img").unwrap().as_usize().unwrap(), IMG);
+        assert_eq!(v.get("classes").unwrap().as_usize().unwrap(), CLASSES);
+        assert_eq!(v.get("completed").unwrap().as_usize().unwrap(), 1);
+    }
+    assert_eq!(
+        snapshot
+            .get("fleet")
+            .unwrap()
+            .get("completed")
+            .unwrap()
+            .as_usize()
+            .unwrap(),
+        keys.len()
+    );
+    server.shutdown();
+}
+
+/// Typed wire errors for routing and validation failures.
+#[test]
+fn wire_refusals_are_typed() {
+    let (engine, _handles, keys) = native_fleet();
+    let server =
+        WireServer::bind("127.0.0.1:0", engine.clone(), WireServerOptions::default()).unwrap();
+    let mut client = WireClient::connect(server.local_addr().to_string()).unwrap();
+    let resp = client.infer("no-such-variant", &random_image(1)).unwrap();
+    assert_eq!(resp.error_code(), Some(ErrorCode::UnknownVariant));
+    let resp = client.infer(keys[0], &[0.0f32; 5]).unwrap();
+    assert_eq!(resp.error_code(), Some(ErrorCode::BadImage));
+    server.shutdown();
+}
+
+/// A malformed frame gets a typed BadFrame response (not a dropped
+/// connection with no explanation, and never a panic).
+#[test]
+fn bad_frame_gets_typed_error_response() {
+    use std::io::Write;
+    let (engine, _handles, _keys) = native_fleet();
+    let server =
+        WireServer::bind("127.0.0.1:0", engine.clone(), WireServerOptions::default()).unwrap();
+    let mut stream = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    // A framed payload with an op this protocol does not know.
+    proto::write_frame(&mut stream, &[proto::PROTO_VERSION, 0x5f]).unwrap();
+    stream.flush().unwrap();
+    let payload = proto::read_frame(&mut stream).unwrap().unwrap();
+    match proto::decode_response(&payload).unwrap() {
+        proto::Response::Error { code, .. } => assert_eq!(code, ErrorCode::BadFrame),
+        other => panic!("expected BadFrame error, got {:?}", other),
+    }
+    assert_eq!(server.stats().protocol_errors, 1);
+    server.shutdown();
+}
+
+/// Client reconnect: dropping the cached connection is transparent —
+/// the next call dials again (and the retry path covers a stale socket).
+#[test]
+fn client_reconnects_after_disconnect() {
+    let (engine, _handles, keys) = native_fleet();
+    let server =
+        WireServer::bind("127.0.0.1:0", engine.clone(), WireServerOptions::default()).unwrap();
+    let mut client = WireClient::connect(server.local_addr().to_string()).unwrap();
+    client
+        .infer(keys[0], &random_image(3))
+        .unwrap()
+        .into_infer()
+        .unwrap();
+    client.disconnect();
+    client
+        .infer(keys[1], &random_image(4))
+        .unwrap()
+        .into_infer()
+        .unwrap();
+    assert!(server.stats().connections >= 2);
+    server.shutdown();
+}
+
+// ------------------------------------------------------- deadline shedding
+
+/// Backend that takes a configurable wall-time per batch — slow enough
+/// to make tiny deadline budgets expire deterministically.
+struct SlowBackend {
+    delay: Duration,
+    sizes: Vec<usize>,
+}
+
+impl Backend for SlowBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+    fn net(&self) -> &str {
+        "slow"
+    }
+    fn classes(&self) -> usize {
+        CLASSES
+    }
+    fn img(&self) -> usize {
+        IMG
+    }
+    fn batch_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+    fn pick_batch(&self, n: usize) -> usize {
+        n.max(1)
+    }
+    fn infer_batch(&self, _images: Vec<f32>, batch: usize) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        Ok(vec![0.0; batch * CLASSES])
+    }
+}
+
+fn slow_fleet(delay: Duration) -> (Arc<Engine>, VariantHandle) {
+    let engine = Arc::new(Engine::start(EngineOptions {
+        workers: 1,
+        max_wait: Duration::ZERO,
+        ..EngineOptions::default()
+    }));
+    let variant = Arc::new(Variant {
+        key: "slow".to_string(),
+        net: "slow".to_string(),
+        classes: CLASSES,
+        img: IMG,
+        backend: Arc::new(SlowBackend {
+            delay,
+            sizes: vec![1, 2, 4, 8, 16],
+        }),
+    });
+    let handle = engine
+        .register_with(
+            variant,
+            BatchPolicy {
+                max_batch: 16,
+                max_wait: Duration::ZERO,
+            },
+            64,
+        )
+        .unwrap();
+    (engine, handle)
+}
+
+/// A budget far below the service time must come back as a typed
+/// deadline shed — and must never hang the connection.
+#[test]
+fn expired_deadline_is_shed_with_a_typed_code() {
+    let (engine, _handle) = slow_fleet(Duration::from_millis(80));
+    let server =
+        WireServer::bind("127.0.0.1:0", engine.clone(), WireServerOptions::default()).unwrap();
+    let mut client = WireClient::connect(server.local_addr().to_string()).unwrap();
+    let image = random_image(9);
+    let mut sheds = 0usize;
+    for _ in 0..3 {
+        let resp = client
+            .infer_deadline("slow", &image, Duration::from_millis(2))
+            .unwrap();
+        match resp {
+            WireResponse::Error { code, .. } if code.is_shed() => sheds += 1,
+            other => panic!("expected a shed code, got {:?}", other),
+        }
+    }
+    assert_eq!(sheds, 3);
+    // The engine's own metrics saw the sheds (wait-stage sheds are
+    // client-side abandons; door/queue sheds are engine-side) — either
+    // way the wire reported typed codes, and nothing hung.
+    server.shutdown();
+}
+
+/// Zero budget on the wire means "no deadline": the request completes
+/// even on a slow backend.
+#[test]
+fn zero_budget_means_no_deadline() {
+    let (engine, _handle) = slow_fleet(Duration::from_millis(30));
+    let server =
+        WireServer::bind("127.0.0.1:0", engine.clone(), WireServerOptions::default()).unwrap();
+    let mut client = WireClient::connect(server.local_addr().to_string()).unwrap();
+    let r = client
+        .infer_budget_ms("slow", &random_image(2), 0)
+        .unwrap()
+        .into_infer()
+        .unwrap();
+    assert_eq!(r.logits.len(), CLASSES);
+    server.shutdown();
+}
+
+/// Wire requests and in-process handles share one engine: the server is
+/// just another submitter, and both see the same fleet metrics.
+#[test]
+fn wire_and_in_process_share_the_engine() {
+    let (engine, handles, keys) = native_fleet();
+    let server =
+        WireServer::bind("127.0.0.1:0", engine.clone(), WireServerOptions::default()).unwrap();
+    let mut client = WireClient::connect(server.local_addr().to_string()).unwrap();
+    client
+        .infer(keys[0], &random_image(5))
+        .unwrap()
+        .into_infer()
+        .unwrap();
+    handles[0].submit(random_image(6)).unwrap().wait().unwrap();
+    let snap = engine.metrics();
+    let base = snap.variants.iter().find(|v| v.key == keys[0]).unwrap();
+    assert_eq!(base.completed, 2);
+    server.shutdown();
+}
