@@ -11,7 +11,9 @@
 //! schema), and end-to-end PJRT execute when artifacts
 //! exist.
 //!
-//! STRUM_BENCH_QUICK=1 shrinks budgets ~10x.
+//! STRUM_BENCH_QUICK=1 shrinks budgets ~10x. All JSON artifacts land in
+//! `STRUM_BENCH_DIR` (default `.`) together with a checksummed
+//! `MANIFEST_hot_paths.json` run manifest for `strum bench-diff`.
 
 use std::path::Path;
 use strum_dpu::artifact::{ArtifactCache, CompiledNet};
@@ -30,6 +32,7 @@ use strum_dpu::runtime::{Runtime, Tensor};
 use strum_dpu::sim::config::SimConfig;
 use strum_dpu::sim::dataflow::LayerShape;
 use strum_dpu::sim::{simulate_layer, SimMode};
+use strum_dpu::telemetry::{bench_dir, fresh_run_id, RunManifest};
 use strum_dpu::util::bench::Bench;
 use strum_dpu::util::json::Json;
 use strum_dpu::util::prng::Rng;
@@ -44,6 +47,10 @@ fn big_layer(oc: usize, cols: usize, seed: u64) -> strum_dpu::quant::QLayer {
 
 fn main() -> anyhow::Result<()> {
     let mut b = Bench::new();
+    // Every JSON artifact goes to STRUM_BENCH_DIR (default `.`), and
+    // each one is recorded in the run manifest saved at the end.
+    let bench_out = bench_dir();
+    let mut manifest = RunManifest::capture(&fresh_run_id());
     let layer = big_layer(256, 4096, 1); // 1M weights
     let n = layer.len() as f64;
 
@@ -138,8 +145,10 @@ fn main() -> anyhow::Result<()> {
             ),
         ),
     ]);
-    std::fs::write("BENCH_native_gemm.json", json.to_string_pretty())?;
-    println!("wrote BENCH_native_gemm.json");
+    let path = bench_out.join("BENCH_native_gemm.json");
+    std::fs::write(&path, json.to_string_pretty())?;
+    manifest.add_payload("native_gemm", &path)?;
+    println!("wrote {}", path.display());
 
     b.section("cycle simulator (MAC-slots/s)");
     let shape = LayerShape::conv("bench", 64, 256, 3, 16, 16);
@@ -209,8 +218,10 @@ fn main() -> anyhow::Result<()> {
                 ),
             ),
         ]);
-        std::fs::write("BENCH_backend_e2e.json", json.to_string_pretty())?;
-        println!("wrote BENCH_backend_e2e.json");
+        let path = bench_out.join("BENCH_backend_e2e.json");
+        std::fs::write(&path, json.to_string_pretty())?;
+        manifest.add_payload("backend_e2e", &path)?;
+        println!("wrote {}", path.display());
     }
 
     b.section("cold start: variant registration (requantize vs cached artifact)");
@@ -269,8 +280,10 @@ fn main() -> anyhow::Result<()> {
             ("img", Json::Num(img as f64)),
             ("variants", Json::Arr(rows)),
         ]);
-        std::fs::write("BENCH_coldstart.json", json.to_string_pretty())?;
-        println!("wrote BENCH_coldstart.json");
+        let path = bench_out.join("BENCH_coldstart.json");
+        std::fs::write(&path, json.to_string_pretty())?;
+        manifest.add_payload("coldstart", &path)?;
+        println!("wrote {}", path.display());
         let _ = std::fs::remove_dir_all(&cache_dir);
     }
 
@@ -367,8 +380,10 @@ fn main() -> anyhow::Result<()> {
             ),
             ("fleet", snapshot.fleet.to_json()),
         ]);
-        std::fs::write("BENCH_serve_multivariant.json", json.to_string_pretty())?;
-        println!("wrote BENCH_serve_multivariant.json");
+        let path = bench_out.join("BENCH_serve_multivariant.json");
+        std::fs::write(&path, json.to_string_pretty())?;
+        manifest.add_payload("serve_multivariant", &path)?;
+        println!("wrote {}", path.display());
         engine.shutdown();
     }
 
@@ -486,8 +501,10 @@ fn main() -> anyhow::Result<()> {
                 Json::Arr(keys.iter().map(|k| Json::str(*k)).collect()),
             ),
         ]);
-        std::fs::write("BENCH_wire_bench.json", json.to_string_pretty())?;
-        println!("wrote BENCH_wire_bench.json");
+        let path = bench_out.join("BENCH_wire_bench.json");
+        std::fs::write(&path, json.to_string_pretty())?;
+        manifest.add_payload("wire_bench", &path)?;
+        println!("wrote {}", path.display());
         drop(client);
         server.shutdown();
         drop(engine);
@@ -519,5 +536,12 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("(artifacts or PJRT runtime missing; skipping PJRT benches)");
     }
+
+    // The manifest's whole-file FNV-1a checksum covers environment +
+    // per-payload checksums, so `strum bench-diff` can both pair runs
+    // and detect tampering/corruption.
+    let manifest_path = bench_out.join("MANIFEST_hot_paths.json");
+    manifest.save(&manifest_path)?;
+    println!("wrote {}", manifest_path.display());
     Ok(())
 }

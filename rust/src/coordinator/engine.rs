@@ -37,11 +37,27 @@
 //! deadline pending. There is no dedicated batcher thread — the workers
 //! themselves run the flush policy — so serving N variants costs
 //! `workers` threads total, not `N × (workers + 1)`.
+//!
+//! ## Observability
+//!
+//! The engine is instrumented with [`crate::telemetry`]: every
+//! `record_done`/`record_shed`/`record_rejected` metrics update also
+//! emits exactly one structured [`Event`] (so JSONL event counts
+//! reconcile 1:1 with the [`MetricsSnapshot`] counters), plus batch
+//! formation and variant register/retire lifecycle events, and — when
+//! [`EngineOptions::telemetry_interval`] is set — periodic
+//! `engine_gauges` snapshots from a dedicated ticker thread. Emission
+//! is a `try_send` into the sink's bounded channel: the hot path never
+//! serializes or blocks, and overflow shows up as `telemetry_dropped`
+//! in the snapshot. A disabled sink (the default) costs one branch.
 
 use super::batcher::BatchPolicy;
-use super::metrics::{FleetSnapshot, Metrics, MetricsSnapshot, VariantSnapshot};
+use super::metrics::{
+    FleetSnapshot, Metrics, MetricsSnapshot, VariantSnapshot, METRICS_SCHEMA_VERSION,
+};
 use super::router::Variant;
 use crate::runtime::executable::argmax_rows;
+use crate::telemetry::{Event, ShedStage, TelemetrySink};
 use std::collections::VecDeque;
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -192,6 +208,11 @@ pub struct EngineOptions {
     /// Deficit-round-robin quantum in requests per scheduler round
     /// (0 = the variant's max batch, i.e. plain batch-granted RR).
     pub quantum: usize,
+    /// Structured-event sink ([`TelemetrySink::disabled`] = no-op).
+    pub telemetry: TelemetrySink,
+    /// Period of the `engine_gauges` ticker; `None` disables it even
+    /// when the sink is live.
+    pub telemetry_interval: Option<Duration>,
 }
 
 impl Default for EngineOptions {
@@ -202,6 +223,8 @@ impl Default for EngineOptions {
             max_wait: Duration::from_millis(4),
             max_batch: None,
             quantum: 0,
+            telemetry: TelemetrySink::disabled(),
+            telemetry_interval: None,
         }
     }
 }
@@ -218,6 +241,9 @@ struct Request {
 /// One registered variant: queue + policy + metrics + DRR credit.
 struct Slot {
     variant: Arc<Variant>,
+    /// The variant key as a shared `Arc<str>` so per-request telemetry
+    /// events clone a pointer, not a heap string.
+    key_arc: Arc<str>,
     policy: BatchPolicy,
     depth: usize,
     quantum: usize,
@@ -242,11 +268,13 @@ struct EngineShared {
     cv: Condvar,
     started: Instant,
     workers: usize,
+    telemetry: TelemetrySink,
 }
 
 /// A batch a worker pulled off a variant queue.
 struct Job {
     variant: Arc<Variant>,
+    key_arc: Arc<str>,
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicUsize>,
     batch: Vec<Request>,
@@ -309,12 +337,21 @@ impl Engine {
             cv: Condvar::new(),
             started: Instant::now(),
             workers,
+            telemetry: opts.telemetry.clone(),
         });
         let defaults = EngineOptions { workers, ..opts };
         let mut threads = Vec::with_capacity(workers);
         for _ in 0..workers {
             let sh = shared.clone();
             threads.push(std::thread::spawn(move || worker_loop(&sh)));
+        }
+        // Gauge ticker: periodic engine_gauges snapshots through the
+        // same sink. Terminates with the pool via `stopping` + condvar.
+        if shared.telemetry.is_enabled() {
+            if let Some(period) = defaults.telemetry_interval {
+                let sh = shared.clone();
+                threads.push(std::thread::spawn(move || gauge_ticker(&sh, period)));
+            }
         }
         Engine {
             shared,
@@ -384,6 +421,7 @@ impl Engine {
             d.quantum
         };
         let key = variant.key.clone();
+        let key_arc: Arc<str> = Arc::from(key.as_str());
         {
             let mut st = self.shared.state.lock().unwrap();
             if st.stopping {
@@ -392,8 +430,14 @@ impl Engine {
             if st.slots.iter().any(|s| s.variant.key == key) {
                 anyhow::bail!("variant {} is already registered", key);
             }
+            self.shared.telemetry.emit(Event::VariantRegistered {
+                key: key_arc.clone(),
+                net: variant.net.clone(),
+                backend: variant.backend.kind().name().to_string(),
+            });
             st.slots.push(Slot {
                 variant,
+                key_arc,
                 policy,
                 depth: queue_depth.max(1),
                 quantum,
@@ -432,6 +476,9 @@ impl Engine {
                 return Ok(());
             };
             if st.slots[i].queue.is_empty() && st.slots[i].inflight.load(Ordering::Acquire) == 0 {
+                self.shared.telemetry.emit(Event::VariantRetired {
+                    key: st.slots[i].key_arc.clone(),
+                });
                 st.slots.remove(i);
                 if st.cursor > i {
                     st.cursor -= 1;
@@ -487,41 +534,12 @@ impl Engine {
 
     /// Typed metrics: one row per variant plus the fleet rollup.
     pub fn metrics(&self) -> MetricsSnapshot {
-        let st = self.shared.state.lock().unwrap();
-        let variants: Vec<VariantSnapshot> = st
-            .slots
-            .iter()
-            .map(|s| {
-                s.metrics.snapshot(
-                    &s.variant.key,
-                    &s.variant.net,
-                    s.variant.backend.kind().name(),
-                    s.variant.img,
-                    s.variant.classes,
-                    s.registered.elapsed(),
-                    s.queue.len(),
-                )
-            })
-            .collect();
-        // Weight each retained sample by the traffic it stands for
-        // (seen/retained per reservoir) so a low-traffic variant's
-        // saturated reservoir doesn't skew the fleet percentiles.
-        let mut merged_lat: Vec<(f64, f64)> = Vec::new();
-        for s in &st.slots {
-            let samples = s.metrics.latency_samples();
-            if samples.is_empty() {
-                continue;
-            }
-            let w = s.metrics.latency_seen() as f64 / samples.len() as f64;
-            merged_lat.extend(samples.into_iter().map(|v| (v, w)));
-        }
-        let fleet = FleetSnapshot::rollup(&variants, self.shared.started.elapsed(), &merged_lat);
-        MetricsSnapshot {
-            wall_s: self.shared.started.elapsed().as_secs_f64(),
-            workers: self.shared.workers,
-            variants,
-            fleet,
-        }
+        snapshot_of(&self.shared)
+    }
+
+    /// The engine's telemetry sink handle (disabled unless configured).
+    pub fn telemetry(&self) -> &TelemetrySink {
+        &self.shared.telemetry
     }
 
     /// Latency summary for one variant (empty if the key is unknown).
@@ -563,6 +581,75 @@ impl Drop for Engine {
     }
 }
 
+/// Builds the typed snapshot from the shared state — used by both
+/// [`Engine::metrics`] and the gauge ticker thread.
+fn snapshot_of(shared: &EngineShared) -> MetricsSnapshot {
+    let st = shared.state.lock().unwrap();
+    let variants: Vec<VariantSnapshot> = st
+        .slots
+        .iter()
+        .map(|s| {
+            s.metrics.snapshot(
+                &s.variant.key,
+                &s.variant.net,
+                s.variant.backend.kind().name(),
+                s.variant.img,
+                s.variant.classes,
+                s.registered.elapsed(),
+                s.queue.len(),
+            )
+        })
+        .collect();
+    // Weight each retained sample by the traffic it stands for
+    // (seen/retained per reservoir) so a low-traffic variant's
+    // saturated reservoir doesn't skew the fleet percentiles.
+    let mut merged_lat: Vec<(f64, f64)> = Vec::new();
+    for s in &st.slots {
+        let samples = s.metrics.latency_samples();
+        if samples.is_empty() {
+            continue;
+        }
+        let w = s.metrics.latency_seen() as f64 / samples.len() as f64;
+        merged_lat.extend(samples.into_iter().map(|v| (v, w)));
+    }
+    let fleet = FleetSnapshot::rollup(&variants, shared.started.elapsed(), &merged_lat);
+    let uptime_s = shared.started.elapsed().as_secs_f64();
+    MetricsSnapshot {
+        schema_version: METRICS_SCHEMA_VERSION,
+        wall_s: uptime_s,
+        uptime_s,
+        workers: shared.workers,
+        telemetry_dropped: shared.telemetry.dropped(),
+        variants,
+        fleet,
+    }
+}
+
+/// Periodic `engine_gauges` emitter; exits when the engine stops.
+/// Sleeps on the engine condvar so shutdown interrupts the wait, but
+/// holds its own deadline: the condvar is notified on every submit, so
+/// wakeups alone must not pace emission.
+fn gauge_ticker(shared: &EngineShared, period: Duration) {
+    let mut next = Instant::now() + period;
+    loop {
+        {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.stopping {
+                    return;
+                }
+                let now = Instant::now();
+                if now >= next {
+                    break;
+                }
+                st = shared.cv.wait_timeout(st, next - now).unwrap().0;
+            }
+        }
+        next += period;
+        shared.telemetry.emit(Event::gauges(&snapshot_of(shared)));
+    }
+}
+
 fn submit_shared(
     shared: &EngineShared,
     key: &str,
@@ -592,11 +679,19 @@ fn submit_shared(
     if let Some(d) = deadline {
         if Instant::now() >= d {
             slot.metrics.record_shed();
+            shared.telemetry.emit(Event::RequestShed {
+                key: slot.key_arc.clone(),
+                stage: ShedStage::Door,
+            });
             return Err(SubmitError::Expired { key: key.into() });
         }
     }
     if slot.queue.len() >= slot.depth {
         slot.metrics.record_rejected();
+        shared.telemetry.emit(Event::RequestRejected {
+            key: slot.key_arc.clone(),
+            depth: slot.depth,
+        });
         return Err(SubmitError::QueueFull {
             key: key.into(),
             depth: slot.depth,
@@ -651,6 +746,7 @@ fn pick(st: &mut EngineState, now: Instant) -> Option<Job> {
         slot.inflight.fetch_add(1, Ordering::AcqRel);
         let job = Job {
             variant: slot.variant.clone(),
+            key_arc: slot.key_arc.clone(),
             metrics: slot.metrics.clone(),
             inflight: slot.inflight.clone(),
             batch,
@@ -699,7 +795,7 @@ fn worker_loop(shared: &EngineShared) {
             }
         };
         let Some(job) = job else { return };
-        execute_batch(&job);
+        execute_batch(&job, &shared.telemetry);
         job.inflight.fetch_sub(1, Ordering::AcqRel);
         // Wake napping peers (queued work may be flushable now that this
         // worker is free) and any retire()/shutdown waiter.
@@ -707,7 +803,7 @@ fn worker_loop(shared: &EngineShared) {
     }
 }
 
-fn execute_batch(job: &Job) {
+fn execute_batch(job: &Job, telemetry: &TelemetrySink) {
     let v = &job.variant;
     // Shed already-late requests before spending backend cycles: their
     // deadline passed while they sat in the queue, so nobody is waiting
@@ -719,6 +815,10 @@ fn execute_batch(job: &Job) {
         .partition(|r| r.deadline.map_or(true, |d| now < d));
     for r in late {
         job.metrics.record_shed();
+        telemetry.emit(Event::RequestShed {
+            key: job.key_arc.clone(),
+            stage: ShedStage::Queue,
+        });
         let _ = r.tx.send(Err(ReplyError::Shed.into()));
     }
     if live.is_empty() {
@@ -727,6 +827,11 @@ fn execute_batch(job: &Job) {
     let n = live.len();
     let bsz = v.pick_batch(n);
     job.metrics.record_batch(n, bsz);
+    telemetry.emit(Event::BatchFormed {
+        key: job.key_arc.clone(),
+        occupancy: n as u32,
+        padded: bsz as u32,
+    });
     let px = v.image_len();
     let mut images = vec![0f32; bsz * px];
     for (i, r) in live.iter().enumerate() {
@@ -740,6 +845,15 @@ fn execute_batch(job: &Job) {
             for (i, r) in live.iter().enumerate() {
                 let latency = r.enqueued.elapsed();
                 job.metrics.record_done(latency);
+                telemetry.emit(Event::RequestDone {
+                    key: job.key_arc.clone(),
+                    latency_us: latency.as_micros() as u64,
+                    deadline_budget_ms: r
+                        .deadline
+                        .map(|d| d.saturating_duration_since(r.enqueued).as_millis() as u64),
+                    batch_occupancy: n as u32,
+                    batch_padded: bsz as u32,
+                });
                 let _ = r.tx.send(Ok(InferReply {
                     class: preds[i],
                     logits: logits[i * v.classes..(i + 1) * v.classes].to_vec(),

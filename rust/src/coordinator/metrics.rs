@@ -18,6 +18,11 @@ use std::time::Duration;
 /// per variant regardless of how long the engine runs.
 pub const RESERVOIR_CAP: usize = 4096;
 
+/// Version of the metrics-snapshot JSON layout. v2 added top-level
+/// `schema_version`, `uptime_s`, and `telemetry_dropped`; consumers
+/// must treat a missing field as v1 (additive change, parse tolerantly).
+pub const METRICS_SCHEMA_VERSION: u32 = 2;
+
 /// Fixed-capacity uniform sample of an unbounded stream (Algorithm R).
 /// After `seen` pushes, each of them is retained with probability
 /// `cap / seen` — percentiles over the reservoir estimate the stream's.
@@ -363,10 +368,18 @@ impl FleetSnapshot {
 /// Typed engine metrics: the whole fleet at one instant.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
-    /// Engine uptime in seconds.
+    /// JSON layout version ([`METRICS_SCHEMA_VERSION`]).
+    pub schema_version: u32,
+    /// Engine uptime in seconds (kept as `wall_s` in JSON alongside
+    /// `uptime_s` for one deprecation cycle).
     pub wall_s: f64,
+    /// Engine uptime in seconds — the canonical name.
+    pub uptime_s: f64,
     /// Shared worker pool size.
     pub workers: usize,
+    /// Telemetry events dropped because the sink's channel was full
+    /// (0 when telemetry is disabled).
+    pub telemetry_dropped: u64,
     pub variants: Vec<VariantSnapshot>,
     pub fleet: FleetSnapshot,
 }
@@ -374,8 +387,11 @@ pub struct MetricsSnapshot {
 impl MetricsSnapshot {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("schema_version", Json::Num(self.schema_version as f64)),
             ("wall_s", Json::Num(self.wall_s)),
+            ("uptime_s", Json::Num(self.uptime_s)),
             ("workers", Json::Num(self.workers as f64)),
+            ("telemetry_dropped", Json::Num(self.telemetry_dropped as f64)),
             (
                 "variants",
                 Json::Arr(self.variants.iter().map(|v| v.to_json()).collect()),
@@ -504,13 +520,22 @@ mod tests {
             m.latency_samples().into_iter().map(|x| (x, 1.0)).collect();
         let fleet = FleetSnapshot::rollup(std::slice::from_ref(&v), Duration::from_secs(2), &weighted);
         let snap = MetricsSnapshot {
+            schema_version: METRICS_SCHEMA_VERSION,
             wall_s: 2.0,
+            uptime_s: 2.0,
             workers: 4,
+            telemetry_dropped: 0,
             variants: vec![v],
             fleet,
         };
         let j = snap.to_json();
         assert_eq!(j.get("workers").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(
+            j.get("schema_version").unwrap().as_usize().unwrap(),
+            METRICS_SCHEMA_VERSION as usize
+        );
+        assert_eq!(j.get("uptime_s").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("telemetry_dropped").unwrap().as_usize(), Some(0));
         let vars = j.get("variants").unwrap().as_arr().unwrap();
         assert_eq!(vars.len(), 1);
         assert_eq!(vars[0].get("completed").unwrap().as_usize().unwrap(), 1);
@@ -576,5 +601,69 @@ mod tests {
         // Degenerate inputs stay sane.
         assert_eq!(LatencyStats::from_weighted(&[]).samples, 0);
         assert_eq!(LatencyStats::from_weighted(&[(5.0, 1.0)]).p99_us, 5.0);
+    }
+
+    #[test]
+    fn from_weighted_empty_input_is_all_zero() {
+        let l = LatencyStats::from_weighted(&[]);
+        assert_eq!(
+            (l.p50_us, l.p95_us, l.p99_us, l.max_us, l.samples),
+            (0.0, 0.0, 0.0, 0.0, 0)
+        );
+    }
+
+    #[test]
+    fn from_weighted_single_sample_is_every_percentile() {
+        let l = LatencyStats::from_weighted(&[(42.0, 17.0)]);
+        assert_eq!(l.p50_us, 42.0);
+        assert_eq!(l.p95_us, 42.0);
+        assert_eq!(l.p99_us, 42.0);
+        assert_eq!(l.max_us, 42.0);
+        assert_eq!(l.samples, 1);
+    }
+
+    #[test]
+    fn equal_weights_agree_with_unweighted_step_percentile() {
+        // With all-equal weights, from_weighted degenerates to the plain
+        // step-function percentile over the sorted values. (Summary
+        // interpolates between ranks, so agreement is to within one
+        // adjacent-sample gap, not exact.)
+        let values: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let pairs: Vec<(f64, f64)> = values.iter().map(|&v| (v, 1.0)).collect();
+        let w = LatencyStats::from_weighted(&pairs);
+        let s = Summary::from_slice(&values);
+        assert_eq!(w.p50_us, 50.0);
+        assert_eq!(w.p95_us, 95.0);
+        assert_eq!(w.p99_us, 99.0);
+        for (got, interp) in [
+            (w.p50_us, s.percentile(50.0)),
+            (w.p95_us, s.percentile(95.0)),
+            (w.p99_us, s.percentile(99.0)),
+        ] {
+            assert!((got - interp).abs() <= 1.0, "{} vs {}", got, interp);
+        }
+    }
+
+    #[test]
+    fn skewed_weights_shift_percentiles_toward_heavy_samples() {
+        // Same values, but 99% of the traffic weight sits on the lowest
+        // value: every percentile up to p99 collapses onto it.
+        let mut pairs: Vec<(f64, f64)> = (2..=100).map(|i| (i as f64, 1.0)).collect();
+        pairs.push((1.0, 9_900.0));
+        let l = LatencyStats::from_weighted(&pairs);
+        assert_eq!(l.p50_us, 1.0);
+        assert_eq!(l.p95_us, 1.0);
+        assert_eq!(l.p99_us, 1.0);
+        assert_eq!(l.max_us, 100.0);
+    }
+
+    #[test]
+    fn reservoir_cap_one_still_works() {
+        let mut r = Reservoir::new(1, 9);
+        for i in 0..1000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.seen(), 1000);
     }
 }

@@ -31,6 +31,22 @@
 //! quantum, so `base:4,dliq:1` style specs drain 4:1 under contention
 //! without starving anyone. The TCP wire front-end over this API lives
 //! in [`crate::server`].
+//!
+//! ## Observability
+//!
+//! Two complementary signals come out of the engine. The pull side is
+//! [`Engine::metrics`]: a typed, schema-versioned [`MetricsSnapshot`]
+//! (per-variant counters + reservoir-sampled latency percentiles +
+//! fleet rollup, `metrics::METRICS_SCHEMA_VERSION` in its JSON). The
+//! push side is [`crate::telemetry`]: pass a live `TelemetrySink` in
+//! [`EngineOptions::telemetry`] and every counter update also emits one
+//! structured JSONL event (request done/shed/rejected, batch formed,
+//! variant registered/retired, periodic `engine_gauges` when
+//! [`EngineOptions::telemetry_interval`] is set), so log-derived counts
+//! reconcile exactly with the snapshot. Events ride a bounded channel
+//! to a flusher thread — the request path never blocks on disk; events
+//! dropped under overload surface as `telemetry_dropped` in the
+//! snapshot.
 
 pub mod batcher;
 pub mod engine;
@@ -41,5 +57,7 @@ pub use batcher::BatchPolicy;
 pub use engine::{
     Engine, EngineOptions, InferReply, ReplyError, SubmitError, Ticket, VariantHandle,
 };
-pub use metrics::{FleetSnapshot, LatencyStats, MetricsSnapshot, VariantSnapshot};
+pub use metrics::{
+    FleetSnapshot, LatencyStats, MetricsSnapshot, VariantSnapshot, METRICS_SCHEMA_VERSION,
+};
 pub use router::{Router, Variant};

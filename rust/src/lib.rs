@@ -33,6 +33,7 @@
 //! | [`coordinator`] | — | multi-variant serving engine: one shared worker pool, per-variant bounded queues + deficit-round-robin batch scheduling (per-variant priority weights), handle-based submit (`Ticket`/`SubmitError`), per-request deadlines with typed sheds (`ReplyError`), typed `MetricsSnapshot` |
 //! | [`server`] | — | wire serving front-end: versioned length-prefixed TCP protocol (`server::proto`), blocking accept/worker server with graceful drain, deadline-budget propagation and three-stage shedding, `WireClient` + `strum loadgen` open-loop load generator |
 //! | [`report`] | §VII | regenerators for Table I and Figs. 10–13 + ablations |
+//! | [`telemetry`] | — | observability: schema-versioned JSONL event sink (non-blocking, rotating), versioned bench run-manifests with FNV-1a checksums, `strum bench-diff` regression gate |
 //! | [`util`] | — | in-tree substrates: JSON, PRNG, stats, CLI, threadpool, bench harness |
 //!
 //! ## The `Backend` contract
@@ -73,6 +74,7 @@ pub mod report;
 pub mod runtime;
 pub mod server;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 
 /// Crate-wide result type.

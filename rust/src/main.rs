@@ -9,8 +9,10 @@
 //!   hw         Hardware cost model summary (PE variants)
 //!   report     Regenerate paper artifacts: table1 | fig10 | fig11 | fig12 | fig13 | ablation | all
 //!   serve      Run the multi-variant serving engine: synthetic load, or a TCP
-//!              wire front-end with --listen ADDR
+//!              wire front-end with --listen ADDR; --telemetry-out DIR streams
+//!              structured JSONL events (see `telemetry::schema`)
 //!   loadgen    Open-loop wire load generator against a running `strum serve --listen`
+//!   bench-diff Compare two run manifests (MANIFEST_*.json) and gate on regressions
 //!   selfcheck  Runtime round-trip (HLO load/execute) sanity check
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), plus per-command
@@ -37,6 +39,9 @@ use strum_dpu::runtime::Runtime;
 use strum_dpu::sim::config::SimConfig;
 use strum_dpu::sim::driver::simulate_network;
 use strum_dpu::sim::SimMode;
+use strum_dpu::telemetry::{
+    bench_dir, diff_manifests, render_table, RunManifest, TelemetryConfig, TelemetrySink,
+};
 use strum_dpu::util::cli::Args;
 use strum_dpu::util::json::Json;
 use strum_dpu::util::prng::Rng;
@@ -92,6 +97,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "report" => cmd_report(args),
         "serve" => cmd_serve(args),
         "loadgen" => cmd_loadgen(args),
+        "bench-diff" => cmd_bench_diff(args),
         "selfcheck" => cmd_selfcheck(args),
         _ => {
             print_help();
@@ -103,7 +109,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "strum — StruM structured mixed precision DPU coordinator\n\
-         usage: strum <quantize|compile|cache-gc|eval|sim|hw|report|serve|loadgen|selfcheck> [flags]\n\
+         usage: strum <quantize|compile|cache-gc|eval|sim|hw|report|serve|loadgen|bench-diff|selfcheck> [flags]\n\
          common: --artifacts DIR --net NAME --method {{baseline|sparsity|dliq-qN|mip2q-LN}} --p F\n\
          compile: strum compile --net N [--all-nets] [--variants base,dliq,mip2q] [--out FILE]\n\
                  quantize + encode once and write versioned .strumc artifact(s) into\n\
@@ -123,6 +129,7 @@ fn print_help() {
          serve:  strum serve --net N --variants base,dliq,mip2q --requests 2000 --rate 500\n\
                  [--backend {{pjrt|native}}] [--workers N] [--queue-depth N] [--max-wait-ms 4]\n\
                  [--max-batch N] [--metrics-out FILE]\n\
+                 [--telemetry-out DIR [--telemetry-interval-s N]]\n\
                  [--listen ADDR [--duration-s N] [--conn-workers N]]\n\
                  one shared worker pool serves every variant; variant specs are\n\
                  base|dliq|mip2q aliases or method names, with optional @p (e.g.\n\
@@ -135,13 +142,27 @@ fn print_help() {
                  --listen binds the TCP wire front-end (127.0.0.1:0 picks a free\n\
                  port, printed as 'listening on ADDR') instead of the synthetic\n\
                  self-load; stop with --duration-s or a signal.\n\
+                 --telemetry-out DIR streams schema-versioned JSONL events (request\n\
+                 done/shed/rejected, batches, conn lifecycle, periodic gauges) to\n\
+                 rotating telemetry-<run_id>.NNNN.jsonl segments under DIR; the\n\
+                 per-event cost on the request path is one bounded-channel push.\n\
+                 --telemetry-interval-s N (default 5) paces the gauge snapshots.\n\
          loadgen: strum loadgen --addr HOST:PORT [--requests 500 | --duration-s N]\n\
                  [--rate 500] [--concurrency 4] [--deadline-ms N] [--variants k1,k2]\n\
-                 [--out BENCH_wire_serve.json] [--seed N] [--img N]\n\
+                 [--out BENCH_wire_serve.json] [--bench-dir DIR] [--seed N] [--img N]\n\
                  open-loop Poisson arrivals against a running wire server; variant\n\
                  keys and image geometry are discovered from the server's metrics\n\
                  op unless --variants overrides them. Reports p50/p95/p99 latency\n\
-                 plus shed/error counts and writes them as JSON to --out."
+                 plus shed/error counts and writes them as JSON to --out inside\n\
+                 --bench-dir (default $STRUM_BENCH_DIR or .), plus a checksummed\n\
+                 MANIFEST_<out-stem>.json run manifest for `strum bench-diff`.\n\
+         bench-diff: strum bench-diff BASE_MANIFEST NEW_MANIFEST [--threshold-pct 10]\n\
+                 verify both manifests' FNV-1a checksums (whole-file + per payload),\n\
+                 pair payloads by name, and compare every shared numeric metric\n\
+                 (throughput up = good, latency percentiles down = good, shed counts\n\
+                 gate only against a nonzero base). Prints a per-metric table and\n\
+                 exits nonzero on any regression past the threshold or any\n\
+                 checksum/integrity failure — the CI regression gate."
     );
 }
 
@@ -585,6 +606,9 @@ struct Fleet {
     engine: Arc<Engine>,
     handles: Vec<VariantHandle>,
     data: DataSet,
+    /// Shared structured-event sink (disabled unless --telemetry-out):
+    /// the engine and the wire server both log under its one run_id.
+    telemetry: TelemetrySink,
 }
 
 /// Builds the engine + variant fleet `strum serve` fronts: loads (or
@@ -642,6 +666,19 @@ fn build_fleet(args: &Args) -> Result<Fleet> {
         }
     };
 
+    // Telemetry is opt-in: --telemetry-out DIR opens the JSONL sink the
+    // engine (and, in --listen mode, the wire server) emit into; without
+    // it the sink is a no-op handle and emission is one branch.
+    let telemetry = match args.opt_str("telemetry-out") {
+        Some(dir) => {
+            let sink = TelemetrySink::open(TelemetryConfig::under(&dir))?;
+            println!("telemetry: JSONL events under {} (run_id {})", dir, sink.run_id());
+            sink
+        }
+        None => TelemetrySink::disabled(),
+    };
+    let gauge_every = args.f64("telemetry-interval-s", 5.0);
+
     // ONE engine, one shared worker pool, every variant registered on it.
     let engine = Arc::new(Engine::start(EngineOptions {
         workers: args.usize("workers", 2),
@@ -649,6 +686,9 @@ fn build_fleet(args: &Args) -> Result<Fleet> {
         max_wait: Duration::from_millis(args.usize("max-wait-ms", 4) as u64),
         max_batch: args.opt_str("max-batch").and_then(|s| s.parse().ok()),
         quantum: args.usize("quantum", 0),
+        telemetry: telemetry.clone(),
+        telemetry_interval: (gauge_every > 0.0)
+            .then(|| Duration::from_secs_f64(gauge_every)),
     }));
     let cache = ArtifactCache::under(&dir);
     let mut handles = Vec::new();
@@ -695,6 +735,7 @@ fn build_fleet(args: &Args) -> Result<Fleet> {
         engine,
         handles,
         data,
+        telemetry,
     })
 }
 
@@ -715,6 +756,7 @@ fn serve_synthetic(args: &Args, fleet: Fleet) -> Result<()> {
         engine,
         handles,
         data,
+        telemetry,
     } = fleet;
     let px = data.img * data.img * 3;
     let mut rng = Rng::new(7);
@@ -770,6 +812,9 @@ fn serve_synthetic(args: &Args, fleet: Fleet) -> Result<()> {
     anyhow::ensure!(snapshot.fleet.completed > 0, "no requests completed");
     drop(handles);
     drop(engine);
+    // Dropping the sink last drains the event channel to disk.
+    telemetry.flush();
+    drop(telemetry);
     Ok(())
 }
 
@@ -784,6 +829,7 @@ fn serve_wire(args: &Args, fleet: Fleet, listen: &str) -> Result<()> {
         fleet.engine.clone(),
         WireServerOptions {
             conn_workers: args.usize("conn-workers", 4),
+            telemetry: fleet.telemetry.clone(),
         },
     )?;
     println!("listening on {}", server.local_addr());
@@ -807,6 +853,8 @@ fn serve_wire(args: &Args, fleet: Fleet, listen: &str) -> Result<()> {
         std::fs::write(&path, snapshot.to_json().to_string_pretty())?;
         println!("wrote {}", path);
     }
+    // Drain any buffered telemetry events before exit.
+    fleet.telemetry.flush();
     Ok(())
 }
 
@@ -821,7 +869,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     anyhow::ensure!(rate > 0.0, "--rate must be positive");
     let concurrency = args.usize("concurrency", 4).max(1);
     let deadline_ms = args.usize("deadline-ms", 0) as u32;
-    let out = args.str("out", "BENCH_wire_serve.json");
+    // Artifacts land in --bench-dir (default $STRUM_BENCH_DIR, else .),
+    // never unconditionally in the CWD.
+    let dir = match args.opt_str("bench-dir") {
+        Some(d) => {
+            std::fs::create_dir_all(&d)?;
+            PathBuf::from(d)
+        }
+        None => bench_dir(),
+    };
+    let out = dir.join(args.str("out", "BENCH_wire_serve.json"));
     let seed = args.usize("seed", 7) as u64;
 
     // Discover the fleet from the server's metrics op: variant keys and
@@ -1054,7 +1111,50 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         ),
     ]);
     std::fs::write(&out, json.to_string_pretty())?;
-    println!("wrote {}", out);
+    println!("wrote {}", out.display());
+
+    // Emit the run manifest beside the payload so `strum bench-diff` can
+    // pair and checksum-verify this run against another.
+    let stem = out
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("wire_serve")
+        .to_string();
+    let mut manifest = RunManifest::capture(&strum_dpu::telemetry::fresh_run_id());
+    manifest.add_payload(&stem, &out)?;
+    let manifest_path = dir.join(format!("MANIFEST_{}.json", stem));
+    manifest.save(&manifest_path)?;
+    println!("wrote {}", manifest_path.display());
+    Ok(())
+}
+
+/// Pairs two run manifests, verifies their FNV-1a checksums, and diffs
+/// every shared numeric metric with direction-aware thresholds. Exits
+/// nonzero (via the returned error) on regression or integrity failure,
+/// which is what the CI bench gate keys off.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let base = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: strum bench-diff BASE NEW [--threshold-pct N]"))?;
+    let new = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: strum bench-diff BASE NEW [--threshold-pct N]"))?;
+    let threshold = args.f64("threshold-pct", 10.0);
+    let report = diff_manifests(
+        std::path::Path::new(base),
+        std::path::Path::new(new),
+        threshold,
+    )?;
+    println!("{}", render_table(&report, threshold));
+    anyhow::ensure!(
+        !report.failed(),
+        "bench-diff: {} regression(s) past {:.1}% and {} integrity failure(s)",
+        report.regressions().count(),
+        threshold,
+        report.checksum_failures.len()
+    );
     Ok(())
 }
 

@@ -30,16 +30,19 @@ const READ_POLL: Duration = Duration::from_millis(100);
 /// next call.
 const CONN_READ_DEADLINE: Duration = Duration::from_secs(60);
 
-/// Serves one connection to completion. Returns when the peer closes,
-/// the stream breaks, a protocol error is answered, or the server stops.
+/// Serves one connection to completion. Returns the number of framed
+/// requests answered (for the `conn_closed` telemetry event) when the
+/// peer closes, the stream breaks, a protocol error is answered, or the
+/// server stops.
 pub(crate) fn serve_conn(
     mut stream: TcpStream,
     engine: &Engine,
     stats: &ServerStats,
     stopping: &AtomicBool,
-) {
+) -> u64 {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(READ_POLL));
+    let mut served = 0u64;
     loop {
         // Timeout wake-ups between frames poll the stop flag and the
         // per-frame read deadline; once a frame has started it is read
@@ -53,7 +56,7 @@ pub(crate) fn serve_conn(
         let payload = match read {
             Ok(Some(p)) => p,
             // Clean EOF or a drained stop — nothing to answer.
-            Ok(None) => return,
+            Ok(None) => return served,
             Err(ProtoError::FrameTooLarge { len }) => {
                 stats.record_protocol_error();
                 let _ = respond(
@@ -63,13 +66,13 @@ pub(crate) fn serve_conn(
                         detail: format!("frame of {} bytes exceeds the cap", len),
                     },
                 );
-                return;
+                return served;
             }
             // Mid-frame truncation / I/O failure: the stream is not
             // frame-aligned any more, so there is nothing safe to say.
             Err(_) => {
                 stats.record_protocol_error();
-                return;
+                return served;
             }
         };
         let arrived = Instant::now();
@@ -84,7 +87,7 @@ pub(crate) fn serve_conn(
                         detail: e.to_string(),
                     },
                 );
-                return;
+                return served;
             }
         };
         let resp = match req {
@@ -101,8 +104,9 @@ pub(crate) fn serve_conn(
             }
         };
         if respond(&mut stream, &resp).is_err() {
-            return;
+            return served;
         }
+        served += 1;
     }
 }
 

@@ -22,6 +22,19 @@
 //! reconnect retry), and `strum loadgen` drives it as an open-loop load
 //! generator; `strum serve --listen ADDR` binds the server in front of
 //! the engine the CLI builds.
+//!
+//! ## Observability
+//!
+//! When a [`crate::telemetry::TelemetrySink`] is supplied via
+//! [`WireServerOptions::telemetry`] (the CLI threads the engine's sink
+//! through `strum serve --telemetry-out DIR`), the server emits
+//! connection-lifecycle events into the same JSONL stream as the
+//! engine: `conn_opened`/`conn_closed` (with the per-connection served
+//! request count) around each connection, and one `server_drain` event
+//! carrying the final connection/request totals when the graceful
+//! shutdown begins. Engine-level request events (done/shed/rejected,
+//! batches, gauges) come from the engine's own instrumentation — the
+//! two layers share one `run_id` because they share one sink.
 
 pub mod client;
 mod conn;
@@ -31,6 +44,7 @@ pub use client::{WireClient, WireInfer, WireResponse};
 pub use proto::{ErrorCode, ProtoError};
 
 use crate::coordinator::Engine;
+use crate::telemetry::{Event, TelemetrySink};
 use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -43,11 +57,17 @@ pub struct WireServerOptions {
     /// Connection-worker threads (concurrent connections served; more
     /// connections queue behind them).
     pub conn_workers: usize,
+    /// Structured-event sink for connection lifecycle events; share the
+    /// engine's sink so both layers log under one `run_id`.
+    pub telemetry: TelemetrySink,
 }
 
 impl Default for WireServerOptions {
     fn default() -> Self {
-        WireServerOptions { conn_workers: 4 }
+        WireServerOptions {
+            conn_workers: 4,
+            telemetry: TelemetrySink::disabled(),
+        }
     }
 }
 
@@ -103,6 +123,7 @@ struct ServerShared {
     cv: Condvar,
     stopping: AtomicBool,
     stats: ServerStats,
+    telemetry: TelemetrySink,
 }
 
 /// Blocking TCP front-end over a shared [`Engine`].
@@ -130,6 +151,7 @@ impl WireServer {
             cv: Condvar::new(),
             stopping: AtomicBool::new(false),
             stats: ServerStats::default(),
+            telemetry: opts.telemetry.clone(),
         });
         let workers = opts.conn_workers.max(1);
         let mut threads = Vec::with_capacity(workers + 1);
@@ -175,6 +197,11 @@ impl WireServer {
         if self.threads.is_empty() {
             return;
         }
+        let s = self.shared.stats.snapshot();
+        self.shared.telemetry.emit(Event::ServerDrain {
+            connections: s.connections,
+            requests: s.requests,
+        });
         self.shared.stopping.store(true, Ordering::Release);
         // Unblock the acceptor with a throwaway loopback connection (the
         // accept call has no timeout of its own). A wildcard bind
@@ -240,6 +267,15 @@ fn conn_worker(sh: &ServerShared) {
             }
         };
         let Some(stream) = stream else { return };
-        conn::serve_conn(stream, &sh.engine, &sh.stats, &sh.stopping);
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "unknown".to_string());
+        sh.telemetry.emit(Event::ConnOpened { peer: peer.clone() });
+        let served = conn::serve_conn(stream, &sh.engine, &sh.stats, &sh.stopping);
+        sh.telemetry.emit(Event::ConnClosed {
+            peer,
+            requests: served,
+        });
     }
 }

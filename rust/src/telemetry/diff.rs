@@ -1,0 +1,438 @@
+//! `strum bench-diff`: compare two manifest-wrapped bench runs and gate
+//! on regressions.
+//!
+//! Both sides are [`super::RunManifest`]s loaded with checksum
+//! verification (whole-manifest and per-payload). Payloads are paired
+//! by bench name; inside each pair, every numeric metric whose
+//! direction is known (see [`metric_direction`]) is compared as a
+//! relative delta, and a delta worse than the threshold becomes a
+//! regression. Shed/drop counts are compared too, but only gate when
+//! the base run actually shed — a 0→3 shed flip on a quick CI run is
+//! noise, 100→300 is not.
+//!
+//! Metrics are extracted by a recursive walk over the payload JSON, so
+//! the differ needs no per-bench schema: a metric's identity is its
+//! path (`serve_multivariant/variants[mip2q]/p99_us`). Array elements
+//! are labeled by their `name`/`key`/`variant` field when present,
+//! else by index.
+
+use super::manifest::RunManifest;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Which way "better" points for a metric leaf name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    HigherIsBetter,
+    LowerIsBetter,
+    /// Informational only (configs, counts, sizes): never gates.
+    Ignore,
+}
+
+/// Classifies a metric by its leaf field name.
+pub fn metric_direction(leaf: &str) -> Direction {
+    const HIGHER: &[&str] = &[
+        "images_per_s",
+        "gflop_equiv_per_s",
+        "gib_per_s",
+        "throughput_rps",
+        "achieved_rps",
+        "done_per_s",
+    ];
+    const LOWER: &[&str] = &[
+        "p50_us",
+        "p95_us",
+        "p99_us",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "mean_us",
+        "mean_ms",
+        "latency_us",
+        "cold_start_ms",
+    ];
+    if HIGHER.contains(&leaf) {
+        Direction::HigherIsBetter
+    } else if LOWER.contains(&leaf) {
+        Direction::LowerIsBetter
+    } else if leaf == "shed" || leaf == "rejected" || leaf.ends_with("_shed") {
+        // Special-cased in compare(): gates only when base > 0.
+        Direction::LowerIsBetter
+    } else {
+        Direction::Ignore
+    }
+}
+
+fn is_shed_metric(leaf: &str) -> bool {
+    leaf == "shed" || leaf == "rejected" || leaf.ends_with("_shed")
+}
+
+/// One compared metric.
+#[derive(Debug, Clone)]
+pub struct MetricDelta {
+    /// `bench/path/to/metric` — stable across runs.
+    pub path: String,
+    pub base: f64,
+    pub new: f64,
+    /// Signed percent change, positive = worse (direction-adjusted).
+    pub worse_pct: f64,
+    pub regressed: bool,
+}
+
+/// Full diff outcome.
+#[derive(Debug, Clone, Default)]
+pub struct DiffReport {
+    pub deltas: Vec<MetricDelta>,
+    /// Bench names present on only one side.
+    pub unpaired: Vec<String>,
+    /// Payloads whose checksum re-verification failed, per side.
+    pub checksum_failures: Vec<String>,
+}
+
+impl DiffReport {
+    pub fn regressions(&self) -> impl Iterator<Item = &MetricDelta> {
+        self.deltas.iter().filter(|d| d.regressed)
+    }
+
+    pub fn failed(&self) -> bool {
+        !self.checksum_failures.is_empty() || self.deltas.iter().any(|d| d.regressed)
+    }
+}
+
+/// Extracts every numeric leaf from a payload JSON into `path → value`.
+fn collect_metrics(prefix: &str, v: &Json, out: &mut BTreeMap<String, f64>) {
+    match v {
+        Json::Num(n) => {
+            out.insert(prefix.to_string(), *n);
+        }
+        Json::Obj(o) => {
+            for (k, child) in o {
+                let p = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{}/{}", prefix, k)
+                };
+                collect_metrics(&p, child, out);
+            }
+        }
+        Json::Arr(a) => {
+            for (i, child) in a.iter().enumerate() {
+                // Prefer a semantic label so reordering doesn't
+                // misalign metric paths between runs.
+                let label = child
+                    .get("name")
+                    .or_else(|| child.get("key"))
+                    .or_else(|| child.get("variant"))
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .unwrap_or_else(|| i.to_string());
+                collect_metrics(&format!("{}[{}]", prefix, label), child, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Loads, checksum-verifies, and diffs two manifests. `threshold_pct`
+/// is the allowed direction-adjusted worsening before a metric gates.
+pub fn diff_manifests(
+    base_path: &Path,
+    new_path: &Path,
+    threshold_pct: f64,
+) -> crate::Result<DiffReport> {
+    let base = RunManifest::load_verified(base_path)?;
+    let new = RunManifest::load_verified(new_path)?;
+    let base_dir = base_path.parent().unwrap_or(Path::new("."));
+    let new_dir = new_path.parent().unwrap_or(Path::new("."));
+
+    let mut report = DiffReport::default();
+    for name in base.verify_payloads(base_dir) {
+        report.checksum_failures.push(format!("base:{}", name));
+    }
+    for name in new.verify_payloads(new_dir) {
+        report.checksum_failures.push(format!("new:{}", name));
+    }
+    if !report.checksum_failures.is_empty() {
+        // Numbers from tampered/missing payloads are meaningless;
+        // report the integrity failure alone.
+        return Ok(report);
+    }
+
+    for (name, bp) in &base.payloads {
+        let Some(np) = new.payloads.get(name) else {
+            report.unpaired.push(format!("base-only:{}", name));
+            continue;
+        };
+        let bjson = read_payload(base_dir, &bp.path)?;
+        let njson = read_payload(new_dir, &np.path)?;
+        let mut bm = BTreeMap::new();
+        let mut nm = BTreeMap::new();
+        collect_metrics(name, &bjson, &mut bm);
+        collect_metrics(name, &njson, &mut nm);
+        for (path, bv) in &bm {
+            let Some(nv) = nm.get(path) else { continue };
+            let leaf = path.rsplit('/').next().unwrap_or(path);
+            let dir = metric_direction(leaf);
+            if dir == Direction::Ignore {
+                continue;
+            }
+            report.deltas.push(compare(path, *bv, *nv, dir, leaf, threshold_pct));
+        }
+    }
+    for name in new.payloads.keys() {
+        if !base.payloads.contains_key(name) {
+            report.unpaired.push(format!("new-only:{}", name));
+        }
+    }
+    Ok(report)
+}
+
+fn compare(
+    path: &str,
+    base: f64,
+    new: f64,
+    dir: Direction,
+    leaf: &str,
+    threshold_pct: f64,
+) -> MetricDelta {
+    // Direction-adjusted "how much worse", in percent of base.
+    let worse_pct = if base.abs() < 1e-12 {
+        0.0
+    } else {
+        match dir {
+            Direction::HigherIsBetter => (base - new) / base * 100.0,
+            Direction::LowerIsBetter | Direction::Ignore => (new - base) / base * 100.0,
+        }
+    };
+    // Shed/rejected counts only gate when the base run itself shed:
+    // quick runs flipping 0→small are noise, sustained-shed growth is
+    // a real serving regression.
+    let gates = if is_shed_metric(leaf) { base > 0.0 } else { true };
+    MetricDelta {
+        path: path.to_string(),
+        base,
+        new,
+        worse_pct,
+        regressed: gates && worse_pct > threshold_pct,
+    }
+}
+
+fn read_payload(dir: &Path, file: &str) -> crate::Result<Json> {
+    let path = dir.join(file);
+    let text = std::fs::read_to_string(&path)?;
+    Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {}", path.display(), e))
+}
+
+/// Renders the per-metric table (regressions first, then the rest),
+/// matching the repo's plain-text report style.
+pub fn render_table(report: &DiffReport, threshold_pct: f64) -> String {
+    let mut out = String::new();
+    if !report.checksum_failures.is_empty() {
+        out.push_str("CHECKSUM FAILURES:\n");
+        for f in &report.checksum_failures {
+            out.push_str(&format!("  {}\n", f));
+        }
+        return out;
+    }
+    let width = report
+        .deltas
+        .iter()
+        .map(|d| d.path.len())
+        .max()
+        .unwrap_or(6)
+        .max(6);
+    out.push_str(&format!(
+        "{:<w$}  {:>14}  {:>14}  {:>9}  status\n",
+        "metric",
+        "base",
+        "new",
+        "worse%",
+        w = width
+    ));
+    let mut sorted: Vec<&MetricDelta> = report.deltas.iter().collect();
+    sorted.sort_by(|a, b| {
+        b.regressed
+            .cmp(&a.regressed)
+            .then(b.worse_pct.partial_cmp(&a.worse_pct).unwrap_or(std::cmp::Ordering::Equal))
+    });
+    for d in sorted {
+        out.push_str(&format!(
+            "{:<w$}  {:>14.3}  {:>14.3}  {:>+8.2}%  {}\n",
+            d.path,
+            d.base,
+            d.new,
+            d.worse_pct,
+            if d.regressed { "REGRESSED" } else { "ok" },
+            w = width
+        ));
+    }
+    for u in &report.unpaired {
+        out.push_str(&format!("unpaired: {}\n", u));
+    }
+    let n_reg = report.regressions().count();
+    out.push_str(&format!(
+        "{} metrics compared, {} regression(s) past {:.1}% threshold\n",
+        report.deltas.len(),
+        n_reg,
+        threshold_pct
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("strum-diff-{}-{}", tag, std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_run(dir: &Path, name: &str, p99: f64, rps: f64, shed: f64) -> PathBuf {
+        let payload = dir.join(format!("BENCH_{}.json", name));
+        let body = Json::obj(vec![
+            ("p99_us", Json::Num(p99)),
+            ("throughput_rps", Json::Num(rps)),
+            ("shed", Json::Num(shed)),
+            ("config_batch", Json::Num(8.0)),
+        ]);
+        fs::write(&payload, body.to_string()).unwrap();
+        let mut m = RunManifest::capture(&format!("run-{}", name));
+        m.add_payload(name, &payload).unwrap();
+        let mpath = dir.join(format!("MANIFEST_{}.json", name));
+        m.save(&mpath).unwrap();
+        mpath
+    }
+
+    #[test]
+    fn identical_runs_pass() {
+        let d1 = tmp_dir("same-a");
+        let d2 = tmp_dir("same-b");
+        let a = write_run(&d1, "serve", 900.0, 120.0, 0.0);
+        let b = write_run(&d2, "serve", 900.0, 120.0, 0.0);
+        let r = diff_manifests(&a, &b, 5.0).unwrap();
+        assert!(!r.failed(), "{:?}", r);
+        assert!(!r.deltas.is_empty());
+        let _ = fs::remove_dir_all(&d1);
+        let _ = fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn p99_regression_gates_and_renders() {
+        let d1 = tmp_dir("reg-a");
+        let d2 = tmp_dir("reg-b");
+        let a = write_run(&d1, "serve", 900.0, 120.0, 0.0);
+        let b = write_run(&d2, "serve", 1400.0, 119.0, 0.0); // +55% p99
+        let r = diff_manifests(&a, &b, 25.0).unwrap();
+        assert!(r.failed());
+        let regressed: Vec<_> = r.regressions().map(|d| d.path.as_str()).collect();
+        assert_eq!(regressed, vec!["serve/p99_us"]);
+        let table = render_table(&r, 25.0);
+        assert!(table.contains("REGRESSED"));
+        assert!(table.contains("serve/p99_us"));
+        let _ = fs::remove_dir_all(&d1);
+        let _ = fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn throughput_drop_gates_but_config_never_does() {
+        let d1 = tmp_dir("tp-a");
+        let d2 = tmp_dir("tp-b");
+        let a = write_run(&d1, "serve", 900.0, 120.0, 0.0);
+        let b = write_run(&d2, "serve", 900.0, 60.0, 0.0); // -50% rps
+        let r = diff_manifests(&a, &b, 10.0).unwrap();
+        let regressed: Vec<_> = r.regressions().map(|d| d.path.as_str()).collect();
+        assert_eq!(regressed, vec!["serve/throughput_rps"]);
+        // config_batch is Ignore: never even compared.
+        assert!(r.deltas.iter().all(|d| !d.path.contains("config_batch")));
+        let _ = fs::remove_dir_all(&d1);
+        let _ = fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn shed_gates_only_with_nonzero_base() {
+        let d1 = tmp_dir("shed-a");
+        let d2 = tmp_dir("shed-b");
+        // base shed 0 → new shed 5: noise, must not gate.
+        let a = write_run(&d1, "serve", 900.0, 120.0, 0.0);
+        let b = write_run(&d2, "serve", 900.0, 120.0, 5.0);
+        assert!(!diff_manifests(&a, &b, 5.0).unwrap().failed());
+        let _ = fs::remove_dir_all(&d1);
+        let _ = fs::remove_dir_all(&d2);
+
+        let d3 = tmp_dir("shed-c");
+        let d4 = tmp_dir("shed-d");
+        // base shed 100 → new shed 300: gates.
+        let c = write_run(&d3, "serve", 900.0, 120.0, 100.0);
+        let e = write_run(&d4, "serve", 900.0, 120.0, 300.0);
+        assert!(diff_manifests(&c, &e, 5.0).unwrap().failed());
+        let _ = fs::remove_dir_all(&d3);
+        let _ = fs::remove_dir_all(&d4);
+    }
+
+    #[test]
+    fn corrupted_payload_fails_integrity() {
+        let d1 = tmp_dir("cor-a");
+        let d2 = tmp_dir("cor-b");
+        let a = write_run(&d1, "serve", 900.0, 120.0, 0.0);
+        let b = write_run(&d2, "serve", 900.0, 120.0, 0.0);
+        // Flip a byte in the new side's payload after manifesting.
+        let payload = d2.join("BENCH_serve.json");
+        let mut text = fs::read_to_string(&payload).unwrap();
+        text = text.replace("900", "901");
+        fs::write(&payload, text).unwrap();
+        let r = diff_manifests(&a, &b, 5.0).unwrap();
+        assert!(r.failed());
+        assert_eq!(r.checksum_failures, vec!["new:serve".to_string()]);
+        assert!(render_table(&r, 5.0).contains("CHECKSUM FAILURES"));
+        let _ = fs::remove_dir_all(&d1);
+        let _ = fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn corrupted_manifest_is_an_error() {
+        let d1 = tmp_dir("man-a");
+        let d2 = tmp_dir("man-b");
+        let a = write_run(&d1, "serve", 900.0, 120.0, 0.0);
+        let b = write_run(&d2, "serve", 900.0, 120.0, 0.0);
+        let text = fs::read_to_string(&b).unwrap();
+        fs::write(&b, text.replace("\"kernel_isa\"", "\"kernel_lsa\"")).unwrap();
+        assert!(diff_manifests(&a, &b, 5.0).is_err());
+        let _ = fs::remove_dir_all(&d1);
+        let _ = fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn array_rows_pair_by_key_label() {
+        let d1 = tmp_dir("arr-a");
+        let d2 = tmp_dir("arr-b");
+        let mk = |dir: &Path, p99_b: f64, p99_m: f64| -> PathBuf {
+            let payload = dir.join("BENCH_multi.json");
+            let body = Json::obj(vec![(
+                "variants",
+                Json::Arr(vec![
+                    Json::obj(vec![("key", Json::str("base")), ("p99_us", Json::Num(p99_b))]),
+                    Json::obj(vec![("key", Json::str("mip2q")), ("p99_us", Json::Num(p99_m))]),
+                ]),
+            )]);
+            fs::write(&payload, body.to_string()).unwrap();
+            let mut m = RunManifest::capture("run-arr");
+            m.add_payload("multi", &payload).unwrap();
+            let mpath = dir.join("MANIFEST_multi.json");
+            m.save(&mpath).unwrap();
+            mpath
+        };
+        let a = mk(&d1, 500.0, 800.0);
+        let b = mk(&d2, 500.0, 1600.0); // only mip2q regressed
+        let r = diff_manifests(&a, &b, 20.0).unwrap();
+        let regressed: Vec<_> = r.regressions().map(|d| d.path.as_str()).collect();
+        assert_eq!(regressed, vec!["multi/variants[mip2q]/p99_us"]);
+        let _ = fs::remove_dir_all(&d1);
+        let _ = fs::remove_dir_all(&d2);
+    }
+}

@@ -1,0 +1,422 @@
+//! Versioned run manifests for benchmark artifacts.
+//!
+//! Every `BENCH_*.json` the harness or `strum loadgen` writes is now
+//! wrapped by a manifest recording *where the numbers came from*: run
+//! id, UTC timestamp, git commit + dirty flag, host identity (hostname,
+//! CPU model, core count), the kernel-dispatch tier the process
+//! resolved, and whether `STRUM_BENCH_QUICK` was set. Each wrapped
+//! payload carries its byte size and FNV-1a 64 checksum, and the
+//! manifest as a whole carries a checksum computed over its canonical
+//! compact JSON with the `manifest_fnv1a64` field removed — so
+//! `strum bench-diff` can refuse to compare tampered or truncated
+//! artifacts.
+//!
+//! The `run_id` is the correlation key: a loadgen manifest and the
+//! telemetry JSONL emitted by the server it drove share it when the
+//! caller threads one id through both.
+
+use crate::backend::kernels;
+use crate::util::hash::fnv1a64;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Bump when the manifest layout changes incompatibly.
+pub const MANIFEST_FORMAT_VERSION: u32 = 1;
+
+/// One wrapped benchmark artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PayloadEntry {
+    /// File name relative to the manifest's directory.
+    pub path: String,
+    pub bytes: u64,
+    /// FNV-1a 64 of the file contents, lowercase hex.
+    pub fnv1a64: String,
+}
+
+/// Provenance wrapper for a set of bench JSON files.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunManifest {
+    pub format_version: u32,
+    pub run_id: String,
+    pub timestamp_utc: String,
+    pub git_commit: String,
+    pub git_dirty: bool,
+    pub hostname: String,
+    pub cpu: String,
+    pub cores: usize,
+    /// Kernel-dispatch tier resolved by this process (scalar/sse2/avx2).
+    pub kernel_isa: String,
+    pub bench_quick: bool,
+    /// Bench name → wrapped artifact, sorted for canonical output.
+    pub payloads: BTreeMap<String, PayloadEntry>,
+}
+
+impl RunManifest {
+    /// Captures the current environment. Git state is best-effort
+    /// (`"unknown"` outside a repo or without the git binary).
+    pub fn capture(run_id: &str) -> RunManifest {
+        let (git_commit, git_dirty) = git_state();
+        RunManifest {
+            format_version: MANIFEST_FORMAT_VERSION,
+            run_id: run_id.to_string(),
+            timestamp_utc: utc_now_rfc3339(),
+            git_commit,
+            git_dirty,
+            hostname: hostname(),
+            cpu: cpu_model(),
+            cores: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            kernel_isa: kernels::active_isa().name().to_string(),
+            bench_quick: std::env::var("STRUM_BENCH_QUICK").map(|v| v == "1").unwrap_or(false),
+            payloads: BTreeMap::new(),
+        }
+    }
+
+    /// Checksums `path` and records it under `name`. The stored path is
+    /// the file name only — payloads are expected to sit next to the
+    /// manifest.
+    pub fn add_payload(&mut self, name: &str, path: &Path) -> crate::Result<()> {
+        let data = fs::read(path)?;
+        let file_name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .ok_or_else(|| anyhow::anyhow!("payload has no file name: {:?}", path))?;
+        self.payloads.insert(
+            name.to_string(),
+            PayloadEntry {
+                path: file_name.to_string(),
+                bytes: data.len() as u64,
+                fnv1a64: format!("{:016x}", fnv1a64(&data)),
+            },
+        );
+        Ok(())
+    }
+
+    /// Manifest body as JSON *without* the whole-manifest checksum.
+    fn to_json_unchecksummed(&self) -> Json {
+        let payloads = Json::Obj(
+            self.payloads
+                .iter()
+                .map(|(name, p)| {
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("path", Json::str(&p.path)),
+                            ("bytes", Json::Num(p.bytes as f64)),
+                            ("fnv1a64", Json::str(&p.fnv1a64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("format_version", Json::Num(self.format_version as f64)),
+            ("run_id", Json::str(&self.run_id)),
+            ("timestamp_utc", Json::str(&self.timestamp_utc)),
+            ("git_commit", Json::str(&self.git_commit)),
+            ("git_dirty", Json::Bool(self.git_dirty)),
+            ("hostname", Json::str(&self.hostname)),
+            ("cpu", Json::str(&self.cpu)),
+            ("cores", Json::Num(self.cores as f64)),
+            ("kernel_isa", Json::str(&self.kernel_isa)),
+            ("bench_quick", Json::Bool(self.bench_quick)),
+            ("payloads", payloads),
+        ])
+    }
+
+    /// Whole-manifest checksum: FNV-1a 64 over the canonical compact
+    /// serialization with the `manifest_fnv1a64` field absent. The
+    /// BTreeMap-backed `Json` makes the serialization deterministic.
+    pub fn manifest_checksum(&self) -> u64 {
+        fnv1a64(self.to_json_unchecksummed().to_string().as_bytes())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = self.to_json_unchecksummed();
+        if let Json::Obj(o) = &mut j {
+            o.insert(
+                "manifest_fnv1a64".to_string(),
+                Json::str(format!("{:016x}", self.manifest_checksum())),
+            );
+        }
+        j
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent)?;
+            }
+        }
+        fs::write(path, self.to_json().to_string_pretty() + "\n")?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> crate::Result<RunManifest> {
+        let text = fs::read_to_string(path)?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {}", path.display(), e))?;
+        Self::from_json(&j).map_err(|e| anyhow::anyhow!("{}: {}", path.display(), e))
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunManifest, String> {
+        let str_field = |k: &str| -> Result<String, String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing string field '{}'", k))
+        };
+        let version = j
+            .get("format_version")
+            .and_then(Json::as_f64)
+            .ok_or("missing format_version")? as u32;
+        if version != MANIFEST_FORMAT_VERSION {
+            return Err(format!(
+                "unsupported manifest format_version {} (expected {})",
+                version, MANIFEST_FORMAT_VERSION
+            ));
+        }
+        let mut payloads = BTreeMap::new();
+        let obj = j
+            .get("payloads")
+            .and_then(Json::as_obj)
+            .ok_or("missing payloads object")?;
+        for (name, p) in obj {
+            payloads.insert(
+                name.clone(),
+                PayloadEntry {
+                    path: p
+                        .get("path")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| format!("payload '{}' missing path", name))?
+                        .to_string(),
+                    bytes: p
+                        .get("bytes")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| format!("payload '{}' missing bytes", name))?
+                        as u64,
+                    fnv1a64: p
+                        .get("fnv1a64")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| format!("payload '{}' missing fnv1a64", name))?
+                        .to_string(),
+                },
+            );
+        }
+        Ok(RunManifest {
+            format_version: version,
+            run_id: str_field("run_id")?,
+            timestamp_utc: str_field("timestamp_utc")?,
+            git_commit: str_field("git_commit")?,
+            git_dirty: j.get("git_dirty").and_then(Json::as_bool).unwrap_or(false),
+            hostname: str_field("hostname")?,
+            cpu: str_field("cpu")?,
+            cores: j.get("cores").and_then(Json::as_usize).unwrap_or(0),
+            kernel_isa: str_field("kernel_isa")?,
+            bench_quick: j.get("bench_quick").and_then(Json::as_bool).unwrap_or(false),
+            payloads,
+        })
+    }
+
+    /// Verifies the file at `path` against its embedded whole-manifest
+    /// checksum. Returns the parsed manifest on success.
+    pub fn load_verified(path: &Path) -> crate::Result<RunManifest> {
+        let text = fs::read_to_string(path)?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {}", path.display(), e))?;
+        let stored = j
+            .get("manifest_fnv1a64")
+            .and_then(Json::as_str)
+            .ok_or_else(|| {
+                anyhow::anyhow!("{}: missing manifest_fnv1a64", path.display())
+            })?
+            .to_string();
+        let m = Self::from_json(&j)
+            .map_err(|e| anyhow::anyhow!("{}: {}", path.display(), e))?;
+        let computed = format!("{:016x}", m.manifest_checksum());
+        if stored != computed {
+            return Err(anyhow::anyhow!(
+                "{}: manifest checksum mismatch (stored {}, computed {})",
+                path.display(),
+                stored,
+                computed
+            ));
+        }
+        Ok(m)
+    }
+
+    /// Re-checksums every payload file relative to `base_dir`; returns
+    /// the names that are missing or whose contents changed.
+    pub fn verify_payloads(&self, base_dir: &Path) -> Vec<String> {
+        let mut bad = Vec::new();
+        for (name, p) in &self.payloads {
+            match fs::read(base_dir.join(&p.path)) {
+                Ok(data) => {
+                    let got = format!("{:016x}", fnv1a64(&data));
+                    if got != p.fnv1a64 || data.len() as u64 != p.bytes {
+                        bad.push(name.clone());
+                    }
+                }
+                Err(_) => bad.push(name.clone()),
+            }
+        }
+        bad
+    }
+}
+
+/// Resolves the directory bench artifacts should land in:
+/// `STRUM_BENCH_DIR` if set, else `.`; created if needed.
+pub fn bench_dir() -> PathBuf {
+    let dir = std::env::var("STRUM_BENCH_DIR")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("."));
+    let _ = fs::create_dir_all(&dir);
+    dir
+}
+
+fn git_state() -> (String, bool) {
+    let run = |args: &[&str]| -> Option<String> {
+        let out = std::process::Command::new("git").args(args).output().ok()?;
+        if !out.status.success() {
+            return None;
+        }
+        Some(String::from_utf8_lossy(&out.stdout).trim().to_string())
+    };
+    match run(&["rev-parse", "HEAD"]) {
+        Some(commit) => {
+            let dirty = run(&["status", "--porcelain"])
+                .map(|s| !s.is_empty())
+                .unwrap_or(false);
+            (commit, dirty)
+        }
+        None => ("unknown".to_string(), false),
+    }
+}
+
+fn hostname() -> String {
+    fs::read_to_string("/proc/sys/kernel/hostname")
+        .map(|s| s.trim().to_string())
+        .ok()
+        .filter(|s| !s.is_empty())
+        .or_else(|| std::env::var("HOSTNAME").ok().filter(|s| !s.is_empty()))
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn cpu_model() -> String {
+    fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|text| {
+            text.lines()
+                .find(|l| l.starts_with("model name"))
+                .and_then(|l| l.split(':').nth(1))
+                .map(|s| s.trim().to_string())
+        })
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// RFC 3339 UTC timestamp from the system clock, no external crates:
+/// civil-from-days (Howard Hinnant's algorithm) over the Unix epoch.
+fn utc_now_rfc3339() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let days = (secs / 86_400) as i64;
+    let (h, m, s) = {
+        let rem = secs % 86_400;
+        (rem / 3600, (rem % 3600) / 60, rem % 60)
+    };
+    let (y, mo, d) = civil_from_days(days);
+    format!(
+        "{:04}-{:02}-{:02}T{:02}:{:02}:{:02}Z",
+        y, mo, d, h, m, s
+    )
+}
+
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = (if mp < 10 { mp + 3 } else { mp - 9 }) as u32;
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("strum-manifest-{}-{}", tag, std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn capture_fills_environment() {
+        let m = RunManifest::capture("r1");
+        assert_eq!(m.format_version, MANIFEST_FORMAT_VERSION);
+        assert_eq!(m.run_id, "r1");
+        assert!(m.cores >= 1);
+        assert!(["scalar", "sse2", "avx2"].contains(&m.kernel_isa.as_str()));
+        assert!(m.timestamp_utc.ends_with('Z'));
+    }
+
+    #[test]
+    fn save_load_verify_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let payload = dir.join("BENCH_x.json");
+        fs::write(&payload, b"{\"images_per_s\": 10}").unwrap();
+        let mut m = RunManifest::capture("r2");
+        m.add_payload("x", &payload).unwrap();
+        let mpath = dir.join("MANIFEST_x.json");
+        m.save(&mpath).unwrap();
+
+        let loaded = RunManifest::load_verified(&mpath).unwrap();
+        assert_eq!(loaded, m);
+        assert!(loaded.verify_payloads(&dir).is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tampering_is_detected() {
+        let dir = tmp_dir("tamper");
+        let payload = dir.join("BENCH_y.json");
+        fs::write(&payload, b"{\"p99\": 5}").unwrap();
+        let mut m = RunManifest::capture("r3");
+        m.add_payload("y", &payload).unwrap();
+        let mpath = dir.join("MANIFEST_y.json");
+        m.save(&mpath).unwrap();
+
+        // Payload edited after checksumming → verify_payloads flags it.
+        fs::write(&payload, b"{\"p99\": 6}").unwrap();
+        let loaded = RunManifest::load_verified(&mpath).unwrap();
+        assert_eq!(loaded.verify_payloads(&dir), vec!["y".to_string()]);
+
+        // Manifest field edited → whole-manifest checksum mismatch.
+        let text = fs::read_to_string(&mpath).unwrap();
+        let corrupted = text.replace("\"run_id\": \"r3\"", "\"run_id\": \"rX\"");
+        assert_ne!(text, corrupted);
+        fs::write(&mpath, corrupted).unwrap();
+        assert!(RunManifest::load_verified(&mpath).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn civil_from_days_known_dates() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1)); // 2024-01-01
+        assert_eq!(civil_from_days(11_016), (2000, 2, 29)); // leap day
+    }
+}

@@ -1,0 +1,51 @@
+//! # Observability subsystem
+//!
+//! The crate's end-to-end observability layer, in three parts:
+//!
+//! * [`schema`] / [`writer`] — **structured runtime telemetry**: a
+//!   schema-versioned tagged [`Event`] enum (request done/shed/rejected
+//!   per variant, batch formation, variant lifecycle, server connection
+//!   lifecycle, periodic engine gauges) written as JSONL by a
+//!   non-blocking [`TelemetrySink`] — bounded channel into a dedicated
+//!   flusher thread with size-based rotation and a retention cap. The
+//!   hot path never serializes or touches disk; overload drops events
+//!   and counts them (`telemetry_dropped` in the metrics snapshot).
+//!   Enabled via `strum serve --telemetry-out DIR
+//!   [--telemetry-interval-s N]`; a disabled sink is a no-op handle.
+//! * [`manifest`] — **bench provenance**: every `BENCH_*.json` from the
+//!   `hot_paths` harness and `strum loadgen` is wrapped by a
+//!   [`RunManifest`] (format version, run id, UTC timestamp, git
+//!   commit + dirty flag, host/CPU/cores, kernel-dispatch tier,
+//!   `STRUM_BENCH_QUICK`) carrying FNV-1a checksums per payload plus a
+//!   whole-manifest checksum computed with the field removed.
+//! * [`diff`] — **the regression gate**: `strum bench-diff BASE NEW
+//!   [--threshold-pct N]` verifies both manifests' checksums, pairs
+//!   payloads by bench name, compares direction-classified metrics
+//!   (throughput up, percentiles down, sheds gated only when the base
+//!   run shed), and exits nonzero with a per-metric table on any
+//!   regression past threshold. CI runs it against a fresh quick run.
+//!
+//! The `run_id` threads through all three: the sink stamps it on every
+//! JSONL line, the manifest records it, and loadgen reuses one id for
+//! both so a bench artifact can be joined to the event log it was
+//! measured under.
+
+pub mod diff;
+pub mod manifest;
+pub mod schema;
+pub mod writer;
+
+pub use diff::{diff_manifests, render_table, DiffReport, MetricDelta};
+pub use manifest::{bench_dir, PayloadEntry, RunManifest, MANIFEST_FORMAT_VERSION};
+pub use schema::{validate_line, Event, GaugeRow, ParsedLine, ShedStage, SCHEMA_VERSION};
+pub use writer::{segment_files, TelemetryConfig, TelemetrySink};
+
+/// Generates a process-unique run id: epoch millis + pid, hex. Unique
+/// enough to correlate a run's manifest with its JSONL log; not a UUID.
+pub fn fresh_run_id() -> String {
+    let ms = std::time::SystemTime::now()
+        .duration_since(std::time::SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_millis())
+        .unwrap_or(0);
+    format!("{:x}-{:x}", ms, std::process::id())
+}

@@ -1,0 +1,499 @@
+//! Telemetry event schema: the tagged event enum every JSONL line is
+//! one serialization of, plus the line validator the tests and external
+//! consumers use.
+//!
+//! Every line is a self-describing JSON object carrying three envelope
+//! fields — `schema_version` (this file's [`SCHEMA_VERSION`]), `run_id`
+//! (one per [`super::TelemetrySink`], correlating the log with the run
+//! manifest written next to bench JSONs), and `ts_ms` (unix epoch
+//! milliseconds) — plus `event` (the tag) and the tag's own fields.
+//! Consumers MUST ignore unknown fields and unknown tags: minor schema
+//! growth adds fields/tags, a major change bumps [`SCHEMA_VERSION`].
+//!
+//! Events are plain values: the hot path constructs one and hands it to
+//! the sink's bounded channel; serialization happens on the flusher
+//! thread ([`super::writer`]), never on the request path.
+
+use crate::coordinator::MetricsSnapshot;
+use crate::util::json::Json;
+use std::sync::Arc;
+
+/// Telemetry line schema version. Bump on breaking changes only;
+/// additive fields keep the version.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Where a deadline shed happened (mirrors the serving tier's three
+/// shed stages; the wait-stage shed is client-side and not an engine
+/// event).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedStage {
+    /// Refused at submit: the deadline had already passed.
+    Door,
+    /// Dropped by a worker: the deadline passed while queued.
+    Queue,
+}
+
+impl ShedStage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedStage::Door => "door",
+            ShedStage::Queue => "queue",
+        }
+    }
+}
+
+/// Per-variant gauge row inside an [`Event::EngineGauges`] snapshot.
+#[derive(Debug, Clone)]
+pub struct GaugeRow {
+    pub key: String,
+    pub queued: usize,
+    pub completed: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    pub throughput_rps: f64,
+    pub p99_us: f64,
+}
+
+/// One telemetry event. Variant keys ride as `Arc<str>` so per-request
+/// events clone a pointer, not a heap string, on the hot path.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A request completed; counts reconcile with the metrics snapshot's
+    /// per-variant `completed`.
+    RequestDone {
+        key: Arc<str>,
+        latency_us: u64,
+        /// The request's total deadline budget (enqueue → deadline),
+        /// absent for requests submitted without one.
+        deadline_budget_ms: Option<u64>,
+        batch_occupancy: u32,
+        batch_padded: u32,
+    },
+    /// A request shed for a passed deadline (door or queue stage);
+    /// counts reconcile with the snapshot's per-variant `shed`.
+    RequestShed { key: Arc<str>, stage: ShedStage },
+    /// A submit refused with QueueFull backpressure; counts reconcile
+    /// with the snapshot's per-variant `rejected`.
+    RequestRejected { key: Arc<str>, depth: usize },
+    /// A worker cut a batch from a variant queue.
+    BatchFormed {
+        key: Arc<str>,
+        occupancy: u32,
+        padded: u32,
+    },
+    /// A variant was hot-added to the engine.
+    VariantRegistered {
+        key: Arc<str>,
+        net: String,
+        backend: String,
+    },
+    /// A variant finished draining and was removed.
+    VariantRetired { key: Arc<str> },
+    /// The wire server accepted a connection.
+    ConnOpened { peer: String },
+    /// A connection closed (EOF, error, or drain) after serving
+    /// `requests` framed requests.
+    ConnClosed { peer: String, requests: u64 },
+    /// The wire server began its graceful drain.
+    ServerDrain { connections: u64, requests: u64 },
+    /// Periodic engine gauge snapshot (one row per live variant).
+    EngineGauges {
+        uptime_s: f64,
+        workers: usize,
+        variants: Vec<GaugeRow>,
+    },
+}
+
+impl Event {
+    /// The line's `event` tag.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Event::RequestDone { .. } => "request_done",
+            Event::RequestShed { .. } => "request_shed",
+            Event::RequestRejected { .. } => "request_rejected",
+            Event::BatchFormed { .. } => "batch_formed",
+            Event::VariantRegistered { .. } => "variant_registered",
+            Event::VariantRetired { .. } => "variant_retired",
+            Event::ConnOpened { .. } => "conn_opened",
+            Event::ConnClosed { .. } => "conn_closed",
+            Event::ServerDrain { .. } => "server_drain",
+            Event::EngineGauges { .. } => "engine_gauges",
+        }
+    }
+
+    /// Builds a periodic gauge event from a typed metrics snapshot.
+    pub fn gauges(snap: &MetricsSnapshot) -> Event {
+        Event::EngineGauges {
+            uptime_s: snap.uptime_s,
+            workers: snap.workers,
+            variants: snap
+                .variants
+                .iter()
+                .map(|v| GaugeRow {
+                    key: v.key.clone(),
+                    queued: v.queued,
+                    completed: v.completed,
+                    shed: v.shed,
+                    rejected: v.rejected,
+                    throughput_rps: v.throughput_rps,
+                    p99_us: v.latency.p99_us,
+                })
+                .collect(),
+        }
+    }
+
+    /// Serializes one JSONL line body (envelope + tag fields). Runs on
+    /// the flusher thread only.
+    pub fn to_json(&self, run_id: &str, ts_ms: u64) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            ("run_id", Json::str(run_id)),
+            ("ts_ms", Json::Num(ts_ms as f64)),
+            ("event", Json::str(self.tag())),
+        ];
+        match self {
+            Event::RequestDone {
+                key,
+                latency_us,
+                deadline_budget_ms,
+                batch_occupancy,
+                batch_padded,
+            } => {
+                fields.push(("key", Json::str(&**key)));
+                fields.push(("latency_us", Json::Num(*latency_us as f64)));
+                fields.push((
+                    "deadline_budget_ms",
+                    match deadline_budget_ms {
+                        Some(ms) => Json::Num(*ms as f64),
+                        None => Json::Null,
+                    },
+                ));
+                fields.push(("batch_occupancy", Json::Num(*batch_occupancy as f64)));
+                fields.push(("batch_padded", Json::Num(*batch_padded as f64)));
+            }
+            Event::RequestShed { key, stage } => {
+                fields.push(("key", Json::str(&**key)));
+                fields.push(("stage", Json::str(stage.name())));
+            }
+            Event::RequestRejected { key, depth } => {
+                fields.push(("key", Json::str(&**key)));
+                fields.push(("depth", Json::Num(*depth as f64)));
+            }
+            Event::BatchFormed {
+                key,
+                occupancy,
+                padded,
+            } => {
+                fields.push(("key", Json::str(&**key)));
+                fields.push(("occupancy", Json::Num(*occupancy as f64)));
+                fields.push(("padded", Json::Num(*padded as f64)));
+            }
+            Event::VariantRegistered { key, net, backend } => {
+                fields.push(("key", Json::str(&**key)));
+                fields.push(("net", Json::str(net.as_str())));
+                fields.push(("backend", Json::str(backend.as_str())));
+            }
+            Event::VariantRetired { key } => {
+                fields.push(("key", Json::str(&**key)));
+            }
+            Event::ConnOpened { peer } => {
+                fields.push(("peer", Json::str(peer.as_str())));
+            }
+            Event::ConnClosed { peer, requests } => {
+                fields.push(("peer", Json::str(peer.as_str())));
+                fields.push(("requests", Json::Num(*requests as f64)));
+            }
+            Event::ServerDrain {
+                connections,
+                requests,
+            } => {
+                fields.push(("connections", Json::Num(*connections as f64)));
+                fields.push(("requests", Json::Num(*requests as f64)));
+            }
+            Event::EngineGauges {
+                uptime_s,
+                workers,
+                variants,
+            } => {
+                fields.push(("uptime_s", Json::Num(*uptime_s)));
+                fields.push(("workers", Json::Num(*workers as f64)));
+                fields.push((
+                    "variants",
+                    Json::Arr(
+                        variants
+                            .iter()
+                            .map(|g| {
+                                Json::obj(vec![
+                                    ("key", Json::str(g.key.as_str())),
+                                    ("queued", Json::Num(g.queued as f64)),
+                                    ("completed", Json::Num(g.completed as f64)),
+                                    ("shed", Json::Num(g.shed as f64)),
+                                    ("rejected", Json::Num(g.rejected as f64)),
+                                    ("throughput_rps", Json::Num(g.throughput_rps)),
+                                    ("p99_us", Json::Num(g.p99_us)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
+            }
+        }
+        Json::obj(fields)
+    }
+}
+
+/// A validated, partially-decoded telemetry line: the envelope plus the
+/// fields reconciliation cares about. Unknown tags are rejected by
+/// [`validate_line`] (this crate emits only known tags; a consumer
+/// tolerating foreign producers should skip them instead).
+#[derive(Debug, Clone)]
+pub struct ParsedLine {
+    pub schema_version: u32,
+    pub run_id: String,
+    pub ts_ms: u64,
+    pub tag: String,
+    /// Variant key, for per-variant events.
+    pub key: Option<String>,
+}
+
+/// Known event tags, for validation.
+const KNOWN_TAGS: &[&str] = &[
+    "request_done",
+    "request_shed",
+    "request_rejected",
+    "batch_formed",
+    "variant_registered",
+    "variant_retired",
+    "conn_opened",
+    "conn_closed",
+    "server_drain",
+    "engine_gauges",
+];
+
+/// Parses and validates one JSONL line against the schema: well-formed
+/// JSON object, complete envelope, supported `schema_version`, known
+/// tag, and the tag's required fields present with the right types.
+pub fn validate_line(line: &str) -> crate::Result<ParsedLine> {
+    let v = Json::parse(line).map_err(|e| anyhow::anyhow!("unparseable line: {}", e))?;
+    anyhow::ensure!(v.as_obj().is_some(), "line is not a JSON object");
+    let version = v
+        .get("schema_version")
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| anyhow::anyhow!("missing schema_version"))? as u32;
+    anyhow::ensure!(
+        version == SCHEMA_VERSION,
+        "unsupported schema_version {} (supported: {})",
+        version,
+        SCHEMA_VERSION
+    );
+    let run_id = v
+        .get("run_id")
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow::anyhow!("missing run_id"))?
+        .to_string();
+    let ts_ms = v
+        .get("ts_ms")
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| anyhow::anyhow!("missing ts_ms"))? as u64;
+    let tag = v
+        .get("event")
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow::anyhow!("missing event tag"))?
+        .to_string();
+    anyhow::ensure!(KNOWN_TAGS.contains(&tag.as_str()), "unknown event tag '{}'", tag);
+    let require_str = |field: &str| -> crate::Result<String> {
+        v.get(field)
+            .and_then(|x| x.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("{}: missing string field '{}'", tag, field))
+    };
+    let require_num = |field: &str| -> crate::Result<f64> {
+        v.get(field)
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("{}: missing numeric field '{}'", tag, field))
+    };
+    let key = match tag.as_str() {
+        "request_done" => {
+            require_num("latency_us")?;
+            require_num("batch_occupancy")?;
+            Some(require_str("key")?)
+        }
+        "request_shed" => {
+            let stage = require_str("stage")?;
+            anyhow::ensure!(
+                stage == "door" || stage == "queue",
+                "request_shed: bad stage '{}'",
+                stage
+            );
+            Some(require_str("key")?)
+        }
+        "request_rejected" => {
+            require_num("depth")?;
+            Some(require_str("key")?)
+        }
+        "batch_formed" => {
+            require_num("occupancy")?;
+            require_num("padded")?;
+            Some(require_str("key")?)
+        }
+        "variant_registered" => {
+            require_str("net")?;
+            require_str("backend")?;
+            Some(require_str("key")?)
+        }
+        "variant_retired" => Some(require_str("key")?),
+        "conn_opened" => {
+            require_str("peer")?;
+            None
+        }
+        "conn_closed" => {
+            require_str("peer")?;
+            require_num("requests")?;
+            None
+        }
+        "server_drain" => {
+            require_num("connections")?;
+            require_num("requests")?;
+            None
+        }
+        "engine_gauges" => {
+            require_num("uptime_s")?;
+            anyhow::ensure!(
+                v.get("variants").and_then(|x| x.as_arr()).is_some(),
+                "engine_gauges: missing variants array"
+            );
+            None
+        }
+        _ => unreachable!("tag checked against KNOWN_TAGS"),
+    };
+    Ok(ParsedLine {
+        schema_version: version,
+        run_id,
+        ts_ms,
+        tag,
+        key,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key() -> Arc<str> {
+        Arc::from("mini_cnn_s:base")
+    }
+
+    #[test]
+    fn every_event_serializes_and_validates() {
+        let events = vec![
+            Event::RequestDone {
+                key: key(),
+                latency_us: 420,
+                deadline_budget_ms: Some(25),
+                batch_occupancy: 3,
+                batch_padded: 4,
+            },
+            Event::RequestShed {
+                key: key(),
+                stage: ShedStage::Door,
+            },
+            Event::RequestShed {
+                key: key(),
+                stage: ShedStage::Queue,
+            },
+            Event::RequestRejected {
+                key: key(),
+                depth: 1024,
+            },
+            Event::BatchFormed {
+                key: key(),
+                occupancy: 7,
+                padded: 8,
+            },
+            Event::VariantRegistered {
+                key: key(),
+                net: "mini_cnn_s".into(),
+                backend: "native".into(),
+            },
+            Event::VariantRetired { key: key() },
+            Event::ConnOpened {
+                peer: "127.0.0.1:5000".into(),
+            },
+            Event::ConnClosed {
+                peer: "127.0.0.1:5000".into(),
+                requests: 12,
+            },
+            Event::ServerDrain {
+                connections: 3,
+                requests: 36,
+            },
+            Event::EngineGauges {
+                uptime_s: 1.5,
+                workers: 2,
+                variants: vec![GaugeRow {
+                    key: "k".into(),
+                    queued: 0,
+                    completed: 10,
+                    shed: 1,
+                    rejected: 0,
+                    throughput_rps: 6.7,
+                    p99_us: 900.0,
+                }],
+            },
+        ];
+        for e in events {
+            let line = e.to_json("run-abc", 1234).to_string();
+            let parsed = validate_line(&line).unwrap_or_else(|err| {
+                panic!("event {} failed validation: {} ({})", e.tag(), err, line)
+            });
+            assert_eq!(parsed.schema_version, SCHEMA_VERSION);
+            assert_eq!(parsed.run_id, "run-abc");
+            assert_eq!(parsed.ts_ms, 1234);
+            assert_eq!(parsed.tag, e.tag());
+        }
+    }
+
+    #[test]
+    fn validate_rejects_malformed_lines() {
+        // Not JSON at all.
+        assert!(validate_line("not json").is_err());
+        // Not an object.
+        assert!(validate_line("[1,2]").is_err());
+        // Missing envelope fields.
+        assert!(validate_line(r#"{"event":"request_done"}"#).is_err());
+        // Unknown tag.
+        assert!(validate_line(
+            r#"{"schema_version":1,"run_id":"r","ts_ms":1,"event":"nonsense"}"#
+        )
+        .is_err());
+        // Future schema version.
+        assert!(validate_line(
+            r#"{"schema_version":99,"run_id":"r","ts_ms":1,"event":"server_drain","connections":0,"requests":0}"#
+        )
+        .is_err());
+        // Known tag with a missing required field.
+        assert!(validate_line(
+            r#"{"schema_version":1,"run_id":"r","ts_ms":1,"event":"request_done","key":"k"}"#
+        )
+        .is_err());
+        // Bad shed stage.
+        assert!(validate_line(
+            r#"{"schema_version":1,"run_id":"r","ts_ms":1,"event":"request_shed","key":"k","stage":"wait"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn null_deadline_budget_is_valid() {
+        let e = Event::RequestDone {
+            key: key(),
+            latency_us: 1,
+            deadline_budget_ms: None,
+            batch_occupancy: 1,
+            batch_padded: 1,
+        };
+        let line = e.to_json("r", 0).to_string();
+        assert!(line.contains("\"deadline_budget_ms\":null"));
+        validate_line(&line).unwrap();
+    }
+}

@@ -1,0 +1,187 @@
+//! End-to-end telemetry test: serve real wire requests over loopback
+//! TCP with a live JSONL sink, then reconcile the event log against the
+//! engine's typed metrics snapshot.
+//!
+//! The contract under test is 1:1 emission — every
+//! `record_done`/`record_shed`/`record_rejected` call site also emits
+//! exactly one event — so per-variant counts derived from the log must
+//! equal the snapshot's counters exactly (given zero channel drops,
+//! which the test also asserts).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
+use strum_dpu::coordinator::{Engine, EngineOptions, Router, SubmitError};
+use strum_dpu::model::eval::EvalConfig;
+use strum_dpu::quant::Method;
+use strum_dpu::server::{WireClient, WireResponse, WireServer, WireServerOptions};
+use strum_dpu::telemetry::{segment_files, validate_line, TelemetryConfig, TelemetrySink};
+use strum_dpu::util::prng::Rng;
+
+const IMG: usize = 16;
+const CLASSES: usize = 8;
+
+fn fleet_engine(sink: TelemetrySink, seed: u64) -> anyhow::Result<(Arc<Engine>, Vec<f32>)> {
+    let mut weights = synth_net_weights("mini_cnn_s", IMG, CLASSES, seed)?;
+    let px = IMG * IMG * 3;
+    let mut rng = Rng::new(seed ^ 1);
+    let calib: Vec<f32> = (0..4 * px).map(|_| rng.f32()).collect();
+    weights.manifest.act_scales = calibrate_act_scales(&weights, &calib, 4)?;
+    let mut router = Router::native();
+    let engine = Arc::new(Engine::start(EngineOptions {
+        workers: 2,
+        max_wait: Duration::from_millis(1),
+        telemetry: sink,
+        telemetry_interval: Some(Duration::from_millis(50)),
+        ..EngineOptions::default()
+    }));
+    for (label, method, p) in [
+        ("base", Method::Baseline, 0.0),
+        ("mip2q-L7", Method::Mip2q { l_max: 7 }, 0.5),
+    ] {
+        let cfg = EvalConfig::paper(method, p);
+        let v = router.register_native_weights(label, &weights, &cfg)?;
+        engine.register(v)?;
+    }
+    let image: Vec<f32> = (0..px).map(|_| rng.f32()).collect();
+    Ok((engine, image))
+}
+
+#[test]
+fn wire_serving_events_reconcile_with_metrics() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("strum-telemetry-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sink = TelemetrySink::open(TelemetryConfig::under(&dir))?;
+    let run_id = sink.run_id().to_string();
+    assert!(!run_id.is_empty());
+
+    let (engine, image) = fleet_engine(sink.clone(), 91)?;
+    let server = WireServer::bind(
+        "127.0.0.1:0",
+        engine.clone(),
+        WireServerOptions {
+            conn_workers: 2,
+            telemetry: sink.clone(),
+        },
+    )?;
+    let addr = server.local_addr().to_string();
+
+    // Real framed requests over loopback, round-robined across the
+    // fleet; every one should complete (no deadline pressure).
+    let keys = ["base", "mip2q-L7"];
+    let mut client = WireClient::connect(&addr)?;
+    let mut wire_ok = 0usize;
+    for i in 0..40 {
+        match client.infer(keys[i % keys.len()], &image)? {
+            WireResponse::Infer(_) => wire_ok += 1,
+            WireResponse::Error { code, detail } => {
+                panic!("unexpected wire error {:?}: {}", code, detail)
+            }
+        }
+    }
+    assert_eq!(wire_ok, 40);
+
+    // Deterministic door sheds: an already-expired deadline is refused
+    // at submit, recording one shed metric + one request_shed event.
+    let past = Instant::now()
+        .checked_sub(Duration::from_millis(50))
+        .expect("monotonic clock far enough from boot");
+    let mut door_sheds = 0u64;
+    for _ in 0..7 {
+        match engine.submit_deadline("base", image.clone(), Some(past)) {
+            Err(SubmitError::Expired { .. }) => door_sheds += 1,
+            other => panic!("expected Expired, got {:?}", other.map(|_| "ticket")),
+        }
+    }
+    assert_eq!(door_sheds, 7);
+
+    // Snapshot after all request activity is finished (every wire call
+    // above was synchronous), then tear down and drain the sink.
+    let snap = engine.metrics();
+    drop(client);
+    server.shutdown();
+    if let Ok(engine) = Arc::try_unwrap(engine) {
+        engine.shutdown();
+    }
+    sink.flush();
+    assert_eq!(sink.dropped(), 0, "bounded channel must not have overflowed");
+
+    // Read every rotated segment back and validate line by line.
+    let files = segment_files(&dir, &run_id);
+    assert!(!files.is_empty(), "no telemetry segments under {:?}", dir);
+    let mut lines = 0u64;
+    let mut tags: BTreeMap<String, u64> = BTreeMap::new();
+    // (tag, variant key) -> count, for per-variant reconciliation.
+    let mut per_key: BTreeMap<(String, String), u64> = BTreeMap::new();
+    for f in &files {
+        for line in std::fs::read_to_string(f)?.lines() {
+            let parsed = validate_line(line)
+                .unwrap_or_else(|e| panic!("invalid telemetry line {:?}: {:#}", line, e));
+            assert_eq!(parsed.run_id, run_id, "all lines share the sink's run_id");
+            lines += 1;
+            *tags.entry(parsed.tag.clone()).or_insert(0) += 1;
+            if let Some(key) = parsed.key {
+                *per_key.entry((parsed.tag, key)).or_insert(0) += 1;
+            }
+        }
+    }
+    assert_eq!(
+        lines,
+        sink.emitted(),
+        "every accepted event reaches disk exactly once"
+    );
+
+    // Fleet-level reconciliation: done + shed + rejected totals match.
+    assert_eq!(tags.get("request_done").copied().unwrap_or(0), snap.fleet.completed);
+    assert_eq!(tags.get("request_shed").copied().unwrap_or(0), snap.fleet.shed);
+    assert_eq!(tags.get("request_rejected").copied().unwrap_or(0), snap.fleet.rejected);
+    assert_eq!(snap.fleet.completed, 40);
+    assert_eq!(snap.fleet.shed, 7);
+
+    // Per-variant reconciliation against each snapshot row.
+    for v in &snap.variants {
+        let count = |tag: &str| {
+            per_key
+                .get(&(tag.to_string(), v.key.clone()))
+                .copied()
+                .unwrap_or(0)
+        };
+        assert_eq!(count("request_done"), v.completed, "done for {}", v.key);
+        assert_eq!(count("request_shed"), v.shed, "shed for {}", v.key);
+        assert_eq!(count("request_rejected"), v.rejected, "rejected for {}", v.key);
+    }
+
+    // Lifecycle events: both registrations, plus the connection open/
+    // close pair and the server drain marker.
+    assert_eq!(tags.get("variant_registered").copied().unwrap_or(0), 2);
+    assert!(tags.get("conn_opened").copied().unwrap_or(0) >= 1);
+    assert!(tags.get("conn_closed").copied().unwrap_or(0) >= 1);
+    assert_eq!(tags.get("server_drain").copied().unwrap_or(0), 1);
+    // Batches were formed for the completed requests.
+    assert!(tags.get("batch_formed").copied().unwrap_or(0) >= 1);
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
+#[test]
+fn disabled_sink_serves_without_writing_anything() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("strum-telemetry-off-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sink = TelemetrySink::disabled();
+    assert!(!sink.is_enabled());
+    assert_eq!(sink.run_id(), "");
+
+    let (engine, image) = fleet_engine(sink.clone(), 93)?;
+    for _ in 0..5 {
+        engine.submit("base", image.clone()).expect("submit").wait()?;
+    }
+    let snap = engine.metrics();
+    assert_eq!(snap.fleet.completed, 5);
+    assert_eq!(snap.telemetry_dropped, 0);
+    sink.flush(); // no-op, must not block
+    assert!(!dir.exists(), "disabled sink must never create files");
+    Ok(())
+}
