@@ -552,6 +552,73 @@ impl CompiledNet {
     }
 }
 
+/// The deploy-relevant prefix of a `.strumc` file: versions + identity,
+/// readable without validating the body checksum.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactHeader {
+    pub format_version: u32,
+    pub encoder_version: u32,
+    pub identity: ArtifactIdentity,
+}
+
+impl ArtifactHeader {
+    /// The deploy version key the gateway's rolling-deploy watcher
+    /// tracks: a new weights fingerprint (new weights push) or a new
+    /// encoder version (new toolchain) is a new deployable version.
+    pub fn version_key(&self) -> String {
+        format!(
+            "{}/fp:{:016x}/enc:{}",
+            self.identity.net, self.identity.weights_fp, self.encoder_version
+        )
+    }
+}
+
+/// Reads just the identity prefix of a `.strumc` file — magic, format,
+/// encoder version, and the [`ArtifactIdentity`] fields — WITHOUT
+/// verifying the declared length or body checksum. This is deliberate:
+/// the rolling-deploy watcher must notice a *corrupt* push as a new
+/// version (so the deploy is attempted, fails replica health, and rolls
+/// back with telemetry) rather than silently ignoring it; full
+/// validation happens where the bytes are trusted, in
+/// [`CompiledNet::load`].
+pub fn read_identity(path: &Path) -> std::result::Result<ArtifactHeader, ArtifactError> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() < 8 || bytes[..8] != MAGIC {
+        return Err(ArtifactError::BadMagic);
+    }
+    let mut c = Cursor { buf: &bytes, pos: 8 };
+    let format_version = c.u32()?;
+    if format_version != FORMAT_VERSION {
+        return Err(ArtifactError::VersionMismatch {
+            kind: "format",
+            found: format_version,
+            want: FORMAT_VERSION,
+        });
+    }
+    let encoder_version = c.u32()?;
+    let _total = c.u64()?;
+    let net = c.string("net")?;
+    let method = method_from_wire(c.u8()?, c.u8()?)?;
+    let p = f64::from_bits(c.u64()?);
+    let block = (c.u32()? as usize, c.u32()? as usize);
+    let act_quant = c.u8()? != 0;
+    let unstructured = c.u8()? != 0;
+    let weights_fp = c.u64()?;
+    Ok(ArtifactHeader {
+        format_version,
+        encoder_version,
+        identity: ArtifactIdentity {
+            net,
+            method,
+            p,
+            block,
+            act_quant,
+            unstructured,
+            weights_fp,
+        },
+    })
+}
+
 /// Recomputes the declared length + trailing checksum of a raw artifact
 /// buffer in place (test/tooling helper for patching header fields).
 pub fn reseal(bytes: &mut Vec<u8>) {
@@ -754,6 +821,42 @@ mod tests {
         c.encoder_version = ENCODER_VERSION;
         c.save(&path).unwrap();
         assert!(CompiledNet::load(&path).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn read_identity_survives_body_corruption() {
+        let w = small_weights();
+        let cfg = EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.25);
+        let c = compile_net(&w, &cfg).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("strum-identity-{}.strumc", std::process::id()));
+        c.save(&path).unwrap();
+
+        let head = read_identity(&path).unwrap();
+        assert_eq!(head.encoder_version, c.encoder_version);
+        assert_eq!(head.identity, c.identity);
+        assert!(head.version_key().starts_with("mini_cnn_s/fp:"));
+
+        // Flip a body byte WITHOUT resealing: the full loader must
+        // refuse the file, but the identity prefix must still read —
+        // the deploy watcher keys rollbacks off it.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 9;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            CompiledNet::load(&path),
+            Err(ArtifactError::ChecksumMismatch { .. })
+        ));
+        assert_eq!(read_identity(&path).unwrap(), head);
+
+        // A different weights push is a different version key.
+        let mut w2 = w.clone();
+        w2.blob[0] += 1.0;
+        let c2 = compile_net(&w2, &cfg).unwrap();
+        c2.save(&path).unwrap();
+        assert_ne!(read_identity(&path).unwrap().version_key(), head.version_key());
         let _ = std::fs::remove_file(&path);
     }
 

@@ -440,6 +440,68 @@ impl MetricsSnapshot {
     }
 }
 
+/// Counters parsed back from a replica's metrics-op JSON — the inverse
+/// of [`MetricsSnapshot::to_json`] for the fields a supervisor needs.
+/// The gateway's health checker probes each replica over the wire
+/// metrics op and differences successive `WireCounts` to get
+/// per-interval error/shed rates; parsing is tolerant (missing fields
+/// read as zero) so an older replica binary still health-checks.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WireCounts {
+    pub requests: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub shed: u64,
+    pub uptime_s: f64,
+    /// Per-variant `(key, completed)` rows, in snapshot order.
+    pub variants: Vec<(String, u64)>,
+}
+
+impl WireCounts {
+    /// Parses the JSON string returned by the wire metrics op.
+    pub fn from_metrics_json(json: &str) -> crate::Result<WireCounts> {
+        let j = Json::parse(json).map_err(|e| anyhow::anyhow!("metrics json: {}", e))?;
+        let num = |v: Option<&Json>| v.and_then(Json::as_f64).unwrap_or(0.0);
+        let fleet = j.get("fleet");
+        let counter = |key: &str| num(fleet.and_then(|f| f.get(key))) as u64;
+        let variants = j
+            .get("variants")
+            .and_then(Json::as_arr)
+            .map(|rows| {
+                rows.iter()
+                    .filter_map(|row| {
+                        let key = row.get("key")?.as_str()?.to_string();
+                        Some((key, num(row.get("completed")) as u64))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(WireCounts {
+            requests: counter("requests"),
+            completed: counter("completed"),
+            rejected: counter("rejected"),
+            shed: counter("shed"),
+            uptime_s: num(j.get("uptime_s")),
+            variants,
+        })
+    }
+
+    /// Fraction of requests in `self − earlier` that were shed or
+    /// rejected (0 when no new requests arrived). `earlier` must be an
+    /// older probe of the *same process*; a restart resets counters,
+    /// which the caller detects via [`WireCounts::uptime_s`] going
+    /// backwards and re-bases instead of differencing.
+    pub fn unhealthy_rate_since(&self, earlier: &WireCounts) -> f64 {
+        let requests = self.requests.saturating_sub(earlier.requests);
+        if requests == 0 {
+            return 0.0;
+        }
+        let bad = self.shed.saturating_sub(earlier.shed)
+            + self.rejected.saturating_sub(earlier.rejected);
+        bad as f64 / requests as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -665,5 +727,60 @@ mod tests {
         }
         assert_eq!(r.len(), 1);
         assert_eq!(r.seen(), 1000);
+    }
+
+    #[test]
+    fn wire_counts_roundtrip_through_snapshot_json() {
+        let m = Metrics::default();
+        for _ in 0..5 {
+            m.record_request();
+        }
+        m.record_rejected();
+        m.record_shed();
+        m.record_done(Duration::from_micros(100));
+        m.record_done(Duration::from_micros(200));
+        m.record_done(Duration::from_micros(300));
+        let v = m.snapshot("net:base:p0:native", "net", "native", 4, 10, Duration::from_secs(2), 0);
+        let snap = MetricsSnapshot {
+            schema_version: METRICS_SCHEMA_VERSION,
+            wall_s: 2.0,
+            uptime_s: 2.0,
+            workers: 4,
+            telemetry_dropped: 0,
+            fleet: FleetSnapshot::rollup(std::slice::from_ref(&v), Duration::from_secs(2), &[]),
+            variants: vec![v],
+        };
+        let counts = WireCounts::from_metrics_json(&snap.to_json().to_string_pretty()).unwrap();
+        assert_eq!(counts.requests, 5);
+        assert_eq!(counts.completed, 3);
+        assert_eq!(counts.rejected, 1);
+        assert_eq!(counts.shed, 1);
+        assert_eq!(counts.uptime_s, 2.0);
+        assert_eq!(
+            counts.variants,
+            vec![("net:base:p0:native".to_string(), 3)]
+        );
+    }
+
+    #[test]
+    fn wire_counts_rate_differences_probes() {
+        let a = WireCounts {
+            requests: 100,
+            shed: 2,
+            rejected: 0,
+            ..Default::default()
+        };
+        let b = WireCounts {
+            requests: 200,
+            shed: 12,
+            rejected: 10,
+            ..Default::default()
+        };
+        assert!((b.unhealthy_rate_since(&a) - 0.2).abs() < 1e-12);
+        // No new traffic → healthy by definition, not NaN.
+        assert_eq!(a.unhealthy_rate_since(&a), 0.0);
+        // Tolerant parse: missing fields read as zero, not errors.
+        let empty = WireCounts::from_metrics_json("{}").unwrap();
+        assert_eq!(empty, WireCounts::default());
     }
 }

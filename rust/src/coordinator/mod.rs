@@ -58,6 +58,7 @@ pub use engine::{
     Engine, EngineOptions, InferReply, ReplyError, SubmitError, Ticket, VariantHandle,
 };
 pub use metrics::{
-    FleetSnapshot, LatencyStats, MetricsSnapshot, VariantSnapshot, METRICS_SCHEMA_VERSION,
+    FleetSnapshot, LatencyStats, MetricsSnapshot, VariantSnapshot, WireCounts,
+    METRICS_SCHEMA_VERSION,
 };
 pub use router::{Router, Variant};

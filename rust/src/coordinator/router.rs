@@ -149,6 +149,20 @@ impl Router {
         Ok((self.insert(key, backend)?, outcome))
     }
 
+    /// Registers a variant straight from a standalone compiled artifact
+    /// (`strum serve --artifact FILE`): decode-only bind, no weights or
+    /// cache on the path. This is the replica-fleet deploy unit — a
+    /// corrupt or version-skewed file fails here, at startup, where a
+    /// supervisor can see it.
+    pub fn register_native_compiled(
+        &mut self,
+        key: &str,
+        compiled: &crate::artifact::CompiledNet,
+    ) -> Result<Arc<Variant>> {
+        let backend: Arc<dyn Backend> = Arc::new(NativeBackend::from_compiled(compiled)?);
+        self.insert(key, backend)
+    }
+
     fn insert(&mut self, key: &str, backend: Arc<dyn Backend>) -> Result<Arc<Variant>> {
         let v = Arc::new(Variant::from_backend(key, backend));
         self.variants.insert(key.to_string(), v.clone());

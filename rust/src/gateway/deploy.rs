@@ -1,0 +1,372 @@
+//! Rolling deploys with auto-rollback.
+//!
+//! The watcher polls a `.strumc` artifact path for a changed
+//! `version_key` (weights fingerprint + encoder version from the
+//! header — mtime is not identity, and a same-bytes rewrite is not a
+//! deploy). On a new version it:
+//!
+//! 1. spawns a fresh cohort of supervised replicas whose serve command
+//!    loads the artifact (`--artifact PATH`),
+//! 2. gates on the whole cohort becoming healthy within
+//!    `health_timeout` — a corrupt artifact fails *here*, because its
+//!    replicas die at `CompiledNet::load` before printing an address,
+//! 3. shifts traffic by swapping `active_cohort` (the router prefers
+//!    the active cohort; the old one instantly becomes fallback),
+//! 4. holds a probation window: any new-cohort death, restart, or
+//!    shed/reject rate above `regress_threshold` restores the old
+//!    cohort and rolls back,
+//! 5. on success, marks the old cohort's supervised replicas Draining
+//!    (their slot threads kill them once in-flight work reaches zero).
+//!
+//! A rolled-back version is remembered and never redeployed until the
+//! artifact changes again — otherwise the watcher would hot-loop on a
+//! bad push. Under `fail_on_rollback` a rollback also latches
+//! `rollback_fatal`, which the CLI turns into a nonzero exit (the CI
+//! rollback smoke asserts on exactly this).
+
+use super::{supervisor, DeployPolicy, GatewayShared, Replica, ReplicaSpec, ReplicaState};
+use crate::artifact;
+use crate::telemetry::Event;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Poll cadence while waiting on cohort health / probation.
+const WATCH_POLL: Duration = Duration::from_millis(50);
+
+pub(crate) fn spawn_watcher(
+    shared: Arc<GatewayShared>,
+    policy: DeployPolicy,
+    spec: ReplicaSpec,
+    backoff_base: Duration,
+    backoff_cap: Duration,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("gw-deploy".into())
+        .spawn(move || watcher_loop(&shared, &policy, &spec, backoff_base, backoff_cap))
+        .expect("spawn gateway deploy watcher")
+}
+
+fn watcher_loop(
+    shared: &Arc<GatewayShared>,
+    policy: &DeployPolicy,
+    spec: &ReplicaSpec,
+    backoff_base: Duration,
+    backoff_cap: Duration,
+) {
+    // The boot fleet's version (if the artifact is readable now) is the
+    // baseline: redeploying what is already serving is a no-op.
+    let mut current: Option<String> = artifact::read_identity(&policy.artifact)
+        .ok()
+        .map(|h| h.version_key());
+    let mut rejected: Option<String> = None;
+    while !shared.stopping.load(Ordering::Acquire) {
+        sleep_interruptible(shared, policy.poll);
+        if shared.stopping.load(Ordering::Acquire) {
+            return;
+        }
+        let Ok(header) = artifact::read_identity(&policy.artifact) else {
+            // Unreadable mid-write (or corrupt): keep serving what we
+            // have and look again next poll.
+            continue;
+        };
+        let version = header.version_key();
+        if Some(&version) == current.as_ref() || Some(&version) == rejected.as_ref() {
+            continue;
+        }
+        match run_deploy(shared, policy, spec, &version, backoff_base, backoff_cap) {
+            DeployOutcome::Completed => {
+                current = Some(version);
+                rejected = None;
+            }
+            DeployOutcome::RolledBack => rejected = Some(version),
+            DeployOutcome::Stopping => return,
+        }
+    }
+}
+
+enum DeployOutcome {
+    Completed,
+    RolledBack,
+    Stopping,
+}
+
+fn run_deploy(
+    shared: &Arc<GatewayShared>,
+    policy: &DeployPolicy,
+    spec: &ReplicaSpec,
+    version: &str,
+    backoff_base: Duration,
+    backoff_cap: Duration,
+) -> DeployOutcome {
+    shared.deploys.fetch_add(1, Ordering::Relaxed);
+    let cohort = shared.next_cohort.fetch_add(1, Ordering::Relaxed);
+    shared.telemetry.emit(Event::DeployStarted {
+        cohort,
+        version: version.to_string(),
+    });
+
+    // The new cohort serves from the artifact; the spec's own args stay
+    // (variants registered from weights remain available during and
+    // after the deploy).
+    let mut cohort_spec = spec.clone();
+    cohort_spec.args.push("--artifact".to_string());
+    cohort_spec
+        .args
+        .push(policy.artifact.to_string_lossy().into_owned());
+
+    let mut cohort_ids = Vec::with_capacity(policy.replicas);
+    {
+        let mut fleet = shared.replicas.lock().unwrap();
+        for _ in 0..policy.replicas.max(1) {
+            let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+            fleet.push(Replica::new(id, cohort, true));
+            cohort_ids.push(id);
+        }
+    }
+    for &id in &cohort_ids {
+        let h = supervisor::spawn_slot(
+            shared.clone(),
+            id,
+            cohort_spec.clone(),
+            backoff_base,
+            backoff_cap,
+        );
+        shared.slots.lock().unwrap().push(h);
+    }
+
+    // Health gate: every cohort replica Up + healthy before any traffic
+    // shifts. A cohort that dies on startup (corrupt artifact) restarts
+    // against this deadline and never passes.
+    let deadline = Instant::now() + policy.health_timeout;
+    loop {
+        if shared.stopping.load(Ordering::Acquire) {
+            return DeployOutcome::Stopping;
+        }
+        let healthy = count_healthy(shared, &cohort_ids);
+        if healthy == cohort_ids.len() {
+            break;
+        }
+        if Instant::now() >= deadline {
+            rollback(
+                shared,
+                cohort,
+                version,
+                "cohort never became healthy",
+                policy.fail_on_rollback,
+            );
+            return DeployOutcome::RolledBack;
+        }
+        std::thread::sleep(WATCH_POLL);
+    }
+
+    // Shift: the router prefers the new cohort from here on. The old
+    // cohort keeps serving as fallback through probation, so a rollback
+    // is a pointer swap, not a cold start.
+    let old_cohort = shared.active_cohort.swap(cohort, Ordering::SeqCst);
+
+    // Probation: watch the new cohort for deaths, restarts, and
+    // shed/reject regressions before committing.
+    let restarts_at_shift = restart_total(shared, &cohort_ids);
+    let probation_end = Instant::now() + policy.probation;
+    while Instant::now() < probation_end {
+        if shared.stopping.load(Ordering::Acquire) {
+            return DeployOutcome::Stopping;
+        }
+        if let Some(reason) = regression(shared, &cohort_ids, restarts_at_shift, policy) {
+            shared.active_cohort.store(old_cohort, Ordering::SeqCst);
+            rollback(shared, cohort, version, &reason, policy.fail_on_rollback);
+            return DeployOutcome::RolledBack;
+        }
+        std::thread::sleep(WATCH_POLL);
+    }
+
+    // Commit: drain every supervised replica outside the new cohort.
+    {
+        let mut fleet = shared.replicas.lock().unwrap();
+        for r in fleet.iter_mut() {
+            if r.cohort != cohort && r.supervised && r.state != ReplicaState::Retired {
+                r.state = ReplicaState::Draining;
+                r.healthy = false;
+            }
+        }
+    }
+    shared.telemetry.emit(Event::DeployCompleted {
+        cohort,
+        version: version.to_string(),
+    });
+    DeployOutcome::Completed
+}
+
+fn count_healthy(shared: &GatewayShared, ids: &[u64]) -> usize {
+    let fleet = shared.replicas.lock().unwrap();
+    fleet
+        .iter()
+        .filter(|r| ids.contains(&r.id) && r.healthy && r.state == ReplicaState::Up)
+        .count()
+}
+
+fn restart_total(shared: &GatewayShared, ids: &[u64]) -> u64 {
+    let fleet = shared.replicas.lock().unwrap();
+    fleet
+        .iter()
+        .filter(|r| ids.contains(&r.id))
+        .map(|r| r.restarts)
+        .sum()
+}
+
+/// First probation violation in the cohort, if any.
+fn regression(
+    shared: &GatewayShared,
+    ids: &[u64],
+    restarts_at_shift: u64,
+    policy: &DeployPolicy,
+) -> Option<String> {
+    let fleet = shared.replicas.lock().unwrap();
+    let mut restarts = 0u64;
+    for r in fleet.iter().filter(|r| ids.contains(&r.id)) {
+        if r.state == ReplicaState::Dead {
+            return Some(format!("replica {} died during probation", r.id));
+        }
+        if r.unhealthy_rate > policy.regress_threshold {
+            return Some(format!(
+                "replica {} shed/reject rate {:.3} over threshold {:.3}",
+                r.id, r.unhealthy_rate, policy.regress_threshold
+            ));
+        }
+        restarts += r.restarts;
+    }
+    if restarts > restarts_at_shift {
+        return Some("replica restarted during probation".to_string());
+    }
+    None
+}
+
+/// Drains the failed cohort, emits `deploy_rolled_back`, and (under
+/// `fail_on_rollback`) latches the fatal flag the CLI exits on.
+fn rollback(shared: &GatewayShared, cohort: u64, version: &str, reason: &str, fatal: bool) {
+    shared.rollbacks.fetch_add(1, Ordering::Relaxed);
+    {
+        let mut fleet = shared.replicas.lock().unwrap();
+        for r in fleet.iter_mut() {
+            if r.cohort == cohort && r.state != ReplicaState::Retired {
+                r.state = ReplicaState::Draining;
+                r.healthy = false;
+            }
+        }
+    }
+    shared.telemetry.emit(Event::DeployRolledBack {
+        cohort,
+        version: version.to_string(),
+        reason: reason.to_string(),
+    });
+    if fatal {
+        shared.rollback_fatal.store(true, Ordering::Release);
+    }
+}
+
+fn sleep_interruptible(shared: &GatewayShared, total: Duration) {
+    let mut left = total;
+    while !left.is_zero() {
+        if shared.stopping.load(Ordering::Acquire) {
+            return;
+        }
+        let step = WATCH_POLL.min(left);
+        std::thread::sleep(step);
+        left -= step;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn policy() -> DeployPolicy {
+        DeployPolicy {
+            artifact: std::path::PathBuf::from("/nonexistent.strumc"),
+            replicas: 2,
+            ..DeployPolicy::default()
+        }
+    }
+
+    fn shared_with(replicas: Vec<Replica>) -> GatewayShared {
+        use crate::telemetry::TelemetrySink;
+        use std::sync::atomic::{AtomicBool, AtomicU64};
+        use std::sync::Mutex;
+        GatewayShared {
+            replicas: Mutex::new(replicas),
+            stopping: AtomicBool::new(false),
+            active_cohort: AtomicU64::new(0),
+            next_id: AtomicU64::new(100),
+            next_cohort: AtomicU64::new(1),
+            retries: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
+            upstream_errors: AtomicU64::new(0),
+            deploys: AtomicU64::new(0),
+            rollbacks: AtomicU64::new(0),
+            rollback_fatal: AtomicBool::new(false),
+            telemetry: TelemetrySink::disabled(),
+            slots: Mutex::new(Vec::new()),
+            lat: Mutex::new(super::super::LatRing::new()),
+            p95_us: AtomicU64::new(0),
+        }
+    }
+
+    fn cohort_replica(id: u64, cohort: u64) -> Replica {
+        let mut r = Replica::new(id, cohort, true);
+        r.state = ReplicaState::Up;
+        r.healthy = true;
+        r
+    }
+
+    #[test]
+    fn regression_flags_death_rate_and_restarts() {
+        let mut dead = cohort_replica(1, 1);
+        dead.state = ReplicaState::Dead;
+        let shared = shared_with(vec![cohort_replica(0, 1), dead]);
+        let p = policy();
+        let reason = regression(&shared, &[0, 1], 0, &p).expect("death is a regression");
+        assert!(reason.contains("died"), "{}", reason);
+
+        let mut shedding = cohort_replica(2, 1);
+        shedding.unhealthy_rate = 0.5;
+        let shared = shared_with(vec![shedding]);
+        let reason = regression(&shared, &[2], 0, &p).expect("rate is a regression");
+        assert!(reason.contains("shed/reject"), "{}", reason);
+
+        let mut restarted = cohort_replica(3, 1);
+        restarted.restarts = 2;
+        let shared = shared_with(vec![restarted]);
+        let reason = regression(&shared, &[3], 1, &p).expect("restart is a regression");
+        assert!(reason.contains("restarted"), "{}", reason);
+
+        let shared = shared_with(vec![cohort_replica(4, 1)]);
+        assert!(regression(&shared, &[4], 0, &p).is_none());
+    }
+
+    #[test]
+    fn rollback_drains_cohort_and_latches_fatal() {
+        let shared = shared_with(vec![cohort_replica(0, 0), cohort_replica(1, 1)]);
+        rollback(&shared, 1, "net/fp:00/enc:1", "probe failed", true);
+        assert_eq!(shared.rollbacks.load(Ordering::Relaxed), 1);
+        assert!(shared.rollback_fatal.load(Ordering::Acquire));
+        let fleet = shared.replicas.lock().unwrap();
+        let old = fleet.iter().find(|r| r.id == 0).unwrap();
+        let bad = fleet.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(old.state, ReplicaState::Up, "other cohorts untouched");
+        assert_eq!(bad.state, ReplicaState::Draining);
+        assert!(!bad.healthy);
+    }
+
+    #[test]
+    fn rng_smoke_for_jittered_polls() {
+        // Determinism guard for the watcher's only nondeterministic
+        // dependency (shared with the supervisor's backoff).
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        assert_eq!(a.f64().to_bits(), b.f64().to_bits());
+    }
+}

@@ -1,0 +1,120 @@
+//! Fleet health checking: probe every routable replica's wire metrics
+//! op on an interval and fold the answers into the fleet table.
+//!
+//! A successful probe resets the consecutive-failure count, marks the
+//! replica healthy, and differences the returned [`WireCounts`] against
+//! the previous probe to compute the replica's shed+reject rate over
+//! the interval (the signal the deploy watcher's probation uses). A
+//! replica whose engine uptime went *backwards* was restarted behind
+//! our back, so the diff re-bases instead of reporting garbage deltas.
+//!
+//! A failed probe increments `consec_fail`; at `fail_threshold` the
+//! replica stops being routable until a probe succeeds again. The
+//! router independently marks a replica unhealthy on a forward-level
+//! transport error — the prober is the recovery path that brings it
+//! back.
+//!
+//! Probes use one dial attempt and a short read timeout: against a dead
+//! replica, failing fast and letting the router route around it beats
+//! waiting out a backoff.
+
+use super::{with_replica, GatewayShared, ReplicaState};
+use crate::coordinator::WireCounts;
+use crate::server::WireClient;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Per-probe read timeout (loopback metrics answer in microseconds;
+/// seconds of silence means the replica is wedged, not slow).
+const PROBE_TIMEOUT: Duration = Duration::from_secs(2);
+
+pub(crate) fn spawn_prober(
+    shared: Arc<GatewayShared>,
+    interval: Duration,
+    fail_threshold: u32,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("gw-health".into())
+        .spawn(move || prober_loop(&shared, interval, fail_threshold))
+        .expect("spawn gateway health thread")
+}
+
+fn prober_loop(shared: &GatewayShared, interval: Duration, fail_threshold: u32) {
+    let fail_threshold = fail_threshold.max(1);
+    while !shared.stopping.load(Ordering::Acquire) {
+        let targets: Vec<(u64, String)> = shared
+            .replicas
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| r.state == ReplicaState::Up)
+            .filter_map(|r| r.addr.clone().map(|a| (r.id, a)))
+            .collect();
+        for (id, addr) in targets {
+            if shared.stopping.load(Ordering::Acquire) {
+                return;
+            }
+            match probe(&addr) {
+                Ok(counts) => record_success(shared, id, counts),
+                Err(_) => record_failure(shared, id, fail_threshold),
+            }
+        }
+        sleep_interruptible(shared, interval);
+    }
+}
+
+fn probe(addr: &str) -> crate::Result<WireCounts> {
+    let mut client = WireClient::new(addr)
+        .with_connect_attempts(1)
+        .with_read_timeout(PROBE_TIMEOUT);
+    WireCounts::from_metrics_json(&client.metrics()?)
+}
+
+fn record_success(shared: &GatewayShared, id: u64, counts: WireCounts) {
+    with_replica(shared, id, |r| {
+        // The probe may have raced a supervisor transition (death,
+        // drain); only an Up replica takes health updates.
+        if r.state != ReplicaState::Up {
+            return;
+        }
+        r.consec_fail = 0;
+        r.healthy = true;
+        r.unhealthy_rate = match &r.last_counts {
+            // Uptime going backwards = the process restarted between
+            // probes; differencing across the restart would produce
+            // negative deltas, so re-base at zero.
+            Some(prev) if counts.uptime_s >= prev.uptime_s => {
+                counts.unhealthy_rate_since(prev)
+            }
+            _ => 0.0,
+        };
+        r.last_counts = Some(counts);
+    });
+}
+
+fn record_failure(shared: &GatewayShared, id: u64, fail_threshold: u32) {
+    with_replica(shared, id, |r| {
+        if r.state != ReplicaState::Up {
+            return;
+        }
+        r.consec_fail = r.consec_fail.saturating_add(1);
+        if r.consec_fail >= fail_threshold {
+            r.healthy = false;
+        }
+    });
+}
+
+fn sleep_interruptible(shared: &GatewayShared, total: Duration) {
+    let slice = Duration::from_millis(50);
+    let mut left = total;
+    while !left.is_zero() {
+        if shared.stopping.load(Ordering::Acquire) {
+            return;
+        }
+        let step = slice.min(left);
+        std::thread::sleep(step);
+        left -= step;
+    }
+}

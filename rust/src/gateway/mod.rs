@@ -1,0 +1,727 @@
+//! Replica-fleet gateway: a supervisor + routing tier that fronts N
+//! `strum serve` replicas behind one wire endpoint.
+//!
+//! `strum gateway --replicas N` spawns N child `strum serve --listen
+//! 127.0.0.1:0` processes, scrapes each child's ephemeral port from its
+//! `listening on ADDR` stdout line, and mounts a [`GatewayHandler`] on
+//! the same [`WireServer`](crate::server::WireServer) front-end the
+//! replicas themselves use — clients speak the identical protocol to a
+//! gateway and to a single replica. Four cooperating pieces:
+//!
+//! * [`supervisor`] — one slot thread per replica: spawn, scrape the
+//!   address, poll for exit, restart with capped jittered exponential
+//!   backoff. A replica marked [`ReplicaState::Draining`] is killed
+//!   only after its in-flight requests drain.
+//! * [`health`] — probes every replica's wire metrics op on an
+//!   interval, differencing [`WireCounts`] snapshots into per-replica
+//!   shed/reject rates and flipping `healthy` on consecutive failures.
+//! * [`router`] — shed-aware forwarding: per-variant least-outstanding
+//!   selection over healthy replicas of the active cohort, ONE bounded
+//!   retry on another replica when a forward comes back retryable, and
+//!   optional tail hedging after a p95-derived delay.
+//! * [`deploy`] — rolling deploys: watch a `.strumc` artifact path for
+//!   a new version (weights fingerprint + encoder version from the
+//!   header), bring up a fresh cohort, shift traffic, hold probation,
+//!   and either drain the old cohort or roll back.
+//!
+//! ## Failure model
+//!
+//! The gateway narrows what clients can observe compared to a raw
+//! replica (see the [`server`](crate::server) failure model for the
+//! per-replica contract):
+//!
+//! - A replica crash mid-request surfaces as a connection error to the
+//!   *gateway*, never to the client: the router retries once on another
+//!   healthy replica (inference is idempotent; the failed forward
+//!   committed no response). Only when no healthy replica remains does
+//!   the client see a typed [`ErrorCode::Upstream`] refusal.
+//! - Retryable outcomes are the shed family plus `QueueFull` and
+//!   `ShuttingDown` — states another replica may not share.
+//!   Application errors (`BadImage`, `UnknownVariant`, `BadFrame`) are
+//!   deterministic and forwarded verbatim, never retried.
+//! - A forward **timeout** is terminal ([`WireClient`] semantics): the
+//!   replica may still be executing, and re-submitting would double
+//!   offered load exactly when the fleet is saturated.
+//! - Deadline budgets shrink as they travel: the gateway forwards the
+//!   *remaining* budget, so a retry never grants more time than the
+//!   client asked for.
+//!
+//! [`WireCounts`]: crate::coordinator::WireCounts
+//! [`ErrorCode::Upstream`]: crate::server::ErrorCode::Upstream
+//! [`WireClient`]: crate::server::WireClient
+
+pub mod deploy;
+pub mod health;
+pub mod router;
+pub mod supervisor;
+
+pub use router::GatewayHandler;
+
+use crate::coordinator::WireCounts;
+use crate::telemetry::TelemetrySink;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How to launch one supervised replica process. The command must print
+/// `listening on ADDR` on stdout once its wire server is bound (the
+/// supervisor scrapes the ephemeral port from that line).
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    pub binary: PathBuf,
+    pub args: Vec<String>,
+    /// Extra environment for the child (e.g. `STRUM_FAULT_PLAN` to arm
+    /// exactly one replica of a fleet with a fault plan).
+    pub env: Vec<(String, String)>,
+}
+
+/// Replica lifecycle. Only `Up` + healthy replicas are routable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Process spawned, address not yet scraped.
+    Starting,
+    /// Address known; serving (routable once the prober marks it healthy).
+    Up,
+    /// No new work; killed once in-flight requests drain.
+    Draining,
+    /// Process exited unexpectedly; the supervisor is backing off
+    /// toward a restart.
+    Dead,
+    /// Permanently gone (drained out, or the gateway stopped).
+    Retired,
+}
+
+impl ReplicaState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplicaState::Starting => "starting",
+            ReplicaState::Up => "up",
+            ReplicaState::Draining => "draining",
+            ReplicaState::Dead => "dead",
+            ReplicaState::Retired => "retired",
+        }
+    }
+}
+
+/// One replica's live record in the fleet table. All mutation happens
+/// under the fleet mutex; the supervisor, prober, router, and deploy
+/// watcher each own disjoint transitions.
+#[derive(Debug)]
+pub struct Replica {
+    pub id: u64,
+    /// Deploy generation: 0 is the boot fleet, each rolling deploy
+    /// allocates the next.
+    pub cohort: u64,
+    /// Spawned and restarted by a supervisor slot (false = attached to
+    /// an externally managed address via `--attach`).
+    pub supervised: bool,
+    pub state: ReplicaState,
+    pub addr: Option<String>,
+    pub pid: Option<u32>,
+    /// Routable: flipped true by a successful health probe, false by
+    /// `fail_threshold` consecutive probe failures or a forward-level
+    /// transport error.
+    pub healthy: bool,
+    pub consec_fail: u32,
+    pub restarts: u64,
+    /// In-flight forwards per variant key (least-outstanding routing).
+    pub outstanding: HashMap<String, usize>,
+    pub outstanding_total: usize,
+    /// Successful forwards completed through the gateway.
+    pub served: u64,
+    /// Last health-probe counters (for differencing).
+    pub last_counts: Option<WireCounts>,
+    /// Shed+reject rate over the last probe interval.
+    pub unhealthy_rate: f64,
+}
+
+impl Replica {
+    fn new(id: u64, cohort: u64, supervised: bool) -> Replica {
+        Replica {
+            id,
+            cohort,
+            supervised,
+            state: ReplicaState::Starting,
+            addr: None,
+            pid: None,
+            healthy: false,
+            consec_fail: 0,
+            restarts: 0,
+            outstanding: HashMap::new(),
+            outstanding_total: 0,
+            served: 0,
+            last_counts: None,
+            unhealthy_rate: 0.0,
+        }
+    }
+
+    fn attached(id: u64, addr: String) -> Replica {
+        let mut r = Replica::new(id, 0, false);
+        r.state = ReplicaState::Up;
+        r.addr = Some(addr);
+        r
+    }
+
+    pub fn outstanding_for(&self, key: &str) -> usize {
+        self.outstanding.get(key).copied().unwrap_or(0)
+    }
+}
+
+/// Small ring of recent forward latencies; p95 is recomputed every 64
+/// inserts (cheap enough to sort 256 samples, rare enough to stay off
+/// the hot path) and published through `GatewayShared::p95_us`.
+pub(crate) struct LatRing {
+    buf: Vec<u64>,
+    pos: usize,
+    since_recompute: usize,
+}
+
+impl LatRing {
+    const CAP: usize = 256;
+    const RECOMPUTE_EVERY: usize = 64;
+
+    fn new() -> LatRing {
+        LatRing {
+            buf: Vec::with_capacity(LatRing::CAP),
+            pos: 0,
+            since_recompute: 0,
+        }
+    }
+
+    /// Records one latency; returns a fresh p95 when due.
+    pub(crate) fn push(&mut self, us: u64) -> Option<u64> {
+        if self.buf.len() < LatRing::CAP {
+            self.buf.push(us);
+        } else {
+            self.buf[self.pos] = us;
+            self.pos = (self.pos + 1) % LatRing::CAP;
+        }
+        self.since_recompute += 1;
+        if self.since_recompute < LatRing::RECOMPUTE_EVERY {
+            return None;
+        }
+        self.since_recompute = 0;
+        let mut sorted = self.buf.clone();
+        sorted.sort_unstable();
+        let idx = (sorted.len().saturating_sub(1)) * 95 / 100;
+        Some(sorted[idx])
+    }
+}
+
+/// State shared by the router, supervisor slots, health prober, and
+/// deploy watcher.
+pub struct GatewayShared {
+    pub replicas: Mutex<Vec<Replica>>,
+    pub stopping: AtomicBool,
+    /// Cohort the router prefers; other healthy cohorts are fallback.
+    pub active_cohort: AtomicU64,
+    pub(crate) next_id: AtomicU64,
+    pub(crate) next_cohort: AtomicU64,
+    pub retries: AtomicU64,
+    pub hedges: AtomicU64,
+    pub hedge_wins: AtomicU64,
+    pub upstream_errors: AtomicU64,
+    pub deploys: AtomicU64,
+    pub rollbacks: AtomicU64,
+    /// Set when a rollback fired under `fail_on_rollback`; the CLI exits
+    /// nonzero on it (the CI rollback smoke's exit-code assertion).
+    pub rollback_fatal: AtomicBool,
+    pub telemetry: TelemetrySink,
+    pub(crate) slots: Mutex<Vec<JoinHandle<()>>>,
+    pub(crate) lat: Mutex<LatRing>,
+    /// Published p95 forward latency, microseconds (0 = no samples yet).
+    pub p95_us: AtomicU64,
+}
+
+/// Runs `f` on the replica record with this id (if it still exists).
+pub(crate) fn with_replica<T>(
+    shared: &GatewayShared,
+    id: u64,
+    f: impl FnOnce(&mut Replica) -> T,
+) -> Option<T> {
+    let mut fleet = shared.replicas.lock().unwrap();
+    fleet.iter_mut().find(|r| r.id == id).map(f)
+}
+
+pub(crate) fn replica_state(shared: &GatewayShared, id: u64) -> Option<ReplicaState> {
+    with_replica(shared, id, |r| r.state)
+}
+
+/// Tail-hedging policy: when to fire a second forward for a request
+/// whose primary has not answered yet.
+#[derive(Debug, Clone, Copy)]
+pub enum HedgePolicy {
+    /// Fixed delay in milliseconds.
+    FixedMs(u64),
+    /// Delay = the gateway's observed p95 forward latency (20 ms until
+    /// enough samples exist; clamped to [1 ms, 500 ms]).
+    P95,
+}
+
+/// Rolling-deploy policy for `--watch-artifact`.
+#[derive(Debug, Clone)]
+pub struct DeployPolicy {
+    /// `.strumc` path to watch. A changed `version_key` (weights
+    /// fingerprint + encoder version) triggers a deploy.
+    pub artifact: PathBuf,
+    /// Cohort size (replicas per deploy).
+    pub replicas: usize,
+    /// Watch poll interval.
+    pub poll: Duration,
+    /// How long the new cohort gets to become fully healthy before the
+    /// deploy rolls back.
+    pub health_timeout: Duration,
+    /// Post-shift window in which a death or shed/reject regression in
+    /// the new cohort triggers rollback.
+    pub probation: Duration,
+    /// Shed+reject rate (per probe interval) above which probation
+    /// fails.
+    pub regress_threshold: f64,
+    /// Latch `rollback_fatal` on any rollback (CI exit-code gate).
+    pub fail_on_rollback: bool,
+}
+
+impl Default for DeployPolicy {
+    fn default() -> DeployPolicy {
+        DeployPolicy {
+            artifact: PathBuf::new(),
+            replicas: 1,
+            poll: Duration::from_millis(500),
+            health_timeout: Duration::from_secs(30),
+            probation: Duration::from_secs(5),
+            regress_threshold: 0.2,
+            fail_on_rollback: false,
+        }
+    }
+}
+
+/// Everything `Gateway::start` needs.
+pub struct GatewayOptions {
+    /// Supervised replica count (0 with a non-empty `attach` is valid).
+    pub replicas: usize,
+    /// How to launch supervised replicas (required when `replicas > 0`).
+    pub spec: Option<ReplicaSpec>,
+    /// Externally managed replica addresses to route to as cohort 0.
+    pub attach: Vec<String>,
+    /// Arm supervised slot `index` with a fault-plan spec via the
+    /// child's `STRUM_FAULT_PLAN` environment.
+    pub fault_replica: Option<(usize, String)>,
+    pub probe_interval: Duration,
+    /// Consecutive probe failures before a replica is unroutable.
+    pub fail_threshold: u32,
+    /// One bounded retry-on-another-replica for retryable outcomes.
+    pub retry: bool,
+    pub hedge: Option<HedgePolicy>,
+    /// Per-forward read timeout (also bounds hedging waits).
+    pub forward_timeout: Duration,
+    pub restart_backoff_base: Duration,
+    pub restart_backoff_cap: Duration,
+    pub watch: Option<DeployPolicy>,
+    pub telemetry: TelemetrySink,
+}
+
+impl Default for GatewayOptions {
+    fn default() -> GatewayOptions {
+        GatewayOptions {
+            replicas: 0,
+            spec: None,
+            attach: Vec::new(),
+            fault_replica: None,
+            probe_interval: Duration::from_millis(250),
+            fail_threshold: 2,
+            retry: true,
+            hedge: None,
+            forward_timeout: Duration::from_secs(10),
+            restart_backoff_base: Duration::from_millis(100),
+            restart_backoff_cap: Duration::from_secs(5),
+            watch: None,
+            telemetry: TelemetrySink::disabled(),
+        }
+    }
+}
+
+/// Point-in-time copy of one replica row.
+#[derive(Debug, Clone)]
+pub struct ReplicaView {
+    pub id: u64,
+    pub cohort: u64,
+    pub state: &'static str,
+    pub addr: Option<String>,
+    pub pid: Option<u32>,
+    pub healthy: bool,
+    pub restarts: u64,
+    pub consec_fail: u32,
+    pub outstanding: usize,
+    pub served: u64,
+    pub unhealthy_rate: f64,
+}
+
+/// Typed snapshot of the whole gateway fleet (the gateway-level analogue
+/// of the engine's `MetricsSnapshot`).
+#[derive(Debug, Clone)]
+pub struct FleetView {
+    pub replicas: Vec<ReplicaView>,
+    pub active_cohort: u64,
+    pub retries: u64,
+    pub hedges: u64,
+    pub hedge_wins: u64,
+    pub upstream_errors: u64,
+    pub deploys: u64,
+    pub rollbacks: u64,
+}
+
+impl FleetView {
+    pub fn completed(&self) -> u64 {
+        self.replicas.iter().map(|r| r.served).sum()
+    }
+
+    pub fn healthy(&self) -> usize {
+        self.replicas.iter().filter(|r| r.healthy).count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "replicas",
+                Json::Arr(
+                    self.replicas
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::Num(r.id as f64)),
+                                ("cohort", Json::Num(r.cohort as f64)),
+                                ("state", Json::str(r.state)),
+                                (
+                                    "addr",
+                                    match &r.addr {
+                                        Some(a) => Json::str(a.as_str()),
+                                        None => Json::Null,
+                                    },
+                                ),
+                                (
+                                    "pid",
+                                    match r.pid {
+                                        Some(p) => Json::Num(p as f64),
+                                        None => Json::Null,
+                                    },
+                                ),
+                                ("healthy", Json::Bool(r.healthy)),
+                                ("restarts", Json::Num(r.restarts as f64)),
+                                ("outstanding", Json::Num(r.outstanding as f64)),
+                                ("served", Json::Num(r.served as f64)),
+                                ("unhealthy_rate", Json::Num(r.unhealthy_rate)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("active_cohort", Json::Num(self.active_cohort as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("hedges", Json::Num(self.hedges as f64)),
+            ("hedge_wins", Json::Num(self.hedge_wins as f64)),
+            ("upstream_errors", Json::Num(self.upstream_errors as f64)),
+            ("deploys", Json::Num(self.deploys as f64)),
+            ("rollbacks", Json::Num(self.rollbacks as f64)),
+        ])
+    }
+
+    /// Human summary for the CLI exit report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.replicas {
+            out.push_str(&format!(
+                "replica id={} cohort={} state={} healthy={} restarts={} served={}{}\n",
+                r.id,
+                r.cohort,
+                r.state,
+                r.healthy,
+                r.restarts,
+                r.served,
+                match &r.addr {
+                    Some(a) => format!(" addr={}", a),
+                    None => String::new(),
+                }
+            ));
+        }
+        out.push_str(&format!(
+            "gateway: completed={} retries={} hedges={} hedge_wins={} upstream_errors={} \
+             deploys={} rollbacks={}",
+            self.completed(),
+            self.retries,
+            self.hedges,
+            self.hedge_wins,
+            self.upstream_errors,
+            self.deploys,
+            self.rollbacks
+        ));
+        out
+    }
+}
+
+pub(crate) fn fleet_view(shared: &GatewayShared) -> FleetView {
+    let replicas = shared
+        .replicas
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|r| ReplicaView {
+            id: r.id,
+            cohort: r.cohort,
+            state: r.state.name(),
+            addr: r.addr.clone(),
+            pid: r.pid,
+            healthy: r.healthy,
+            restarts: r.restarts,
+            consec_fail: r.consec_fail,
+            outstanding: r.outstanding_total,
+            served: r.served,
+            unhealthy_rate: r.unhealthy_rate,
+        })
+        .collect();
+    FleetView {
+        replicas,
+        active_cohort: shared.active_cohort.load(Ordering::Relaxed),
+        retries: shared.retries.load(Ordering::Relaxed),
+        hedges: shared.hedges.load(Ordering::Relaxed),
+        hedge_wins: shared.hedge_wins.load(Ordering::Relaxed),
+        upstream_errors: shared.upstream_errors.load(Ordering::Relaxed),
+        deploys: shared.deploys.load(Ordering::Relaxed),
+        rollbacks: shared.rollbacks.load(Ordering::Relaxed),
+    }
+}
+
+/// The running gateway: supervisor slots + health prober + optional
+/// deploy watcher, and the [`GatewayHandler`] to mount on a
+/// [`WireServer`](crate::server::WireServer).
+pub struct Gateway {
+    shared: Arc<GatewayShared>,
+    handler: Arc<GatewayHandler>,
+    health: Option<JoinHandle<()>>,
+    watcher: Option<JoinHandle<()>>,
+}
+
+impl Gateway {
+    pub fn start(opts: GatewayOptions) -> crate::Result<Gateway> {
+        anyhow::ensure!(
+            opts.replicas > 0 || !opts.attach.is_empty(),
+            "gateway needs supervised replicas or attached addresses"
+        );
+        anyhow::ensure!(
+            opts.replicas == 0 || opts.spec.is_some(),
+            "supervised replicas need a ReplicaSpec"
+        );
+        if opts.watch.is_some() {
+            anyhow::ensure!(
+                opts.spec.is_some(),
+                "--watch-artifact requires supervised replicas (a spec to respawn from)"
+            );
+        }
+        let shared = Arc::new(GatewayShared {
+            replicas: Mutex::new(Vec::new()),
+            stopping: AtomicBool::new(false),
+            active_cohort: AtomicU64::new(0),
+            next_id: AtomicU64::new(0),
+            next_cohort: AtomicU64::new(1),
+            retries: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
+            upstream_errors: AtomicU64::new(0),
+            deploys: AtomicU64::new(0),
+            rollbacks: AtomicU64::new(0),
+            rollback_fatal: AtomicBool::new(false),
+            telemetry: opts.telemetry.clone(),
+            slots: Mutex::new(Vec::new()),
+            lat: Mutex::new(LatRing::new()),
+            p95_us: AtomicU64::new(0),
+        });
+
+        // Fleet records first, then threads: a slot thread must find
+        // its record the moment it starts.
+        let mut supervised_ids = Vec::new();
+        {
+            let mut fleet = shared.replicas.lock().unwrap();
+            for addr in &opts.attach {
+                let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+                fleet.push(Replica::attached(id, addr.clone()));
+            }
+            for _ in 0..opts.replicas {
+                let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+                fleet.push(Replica::new(id, 0, true));
+                supervised_ids.push(id);
+            }
+        }
+        if let Some(spec) = &opts.spec {
+            for (i, id) in supervised_ids.iter().enumerate() {
+                let mut s = spec.clone();
+                if let Some((idx, plan)) = &opts.fault_replica {
+                    if *idx == i {
+                        s.env.push(("STRUM_FAULT_PLAN".to_string(), plan.clone()));
+                    }
+                }
+                let h = supervisor::spawn_slot(
+                    shared.clone(),
+                    *id,
+                    s,
+                    opts.restart_backoff_base,
+                    opts.restart_backoff_cap,
+                );
+                shared.slots.lock().unwrap().push(h);
+            }
+        }
+        let health = health::spawn_prober(shared.clone(), opts.probe_interval, opts.fail_threshold);
+        let watcher = match (&opts.watch, &opts.spec) {
+            (Some(policy), Some(spec)) => Some(deploy::spawn_watcher(
+                shared.clone(),
+                policy.clone(),
+                spec.clone(),
+                opts.restart_backoff_base,
+                opts.restart_backoff_cap,
+            )),
+            _ => None,
+        };
+        let handler = Arc::new(GatewayHandler::new(
+            shared.clone(),
+            opts.retry,
+            opts.hedge,
+            opts.forward_timeout,
+        ));
+        Ok(Gateway {
+            shared,
+            handler,
+            health: Some(health),
+            watcher,
+        })
+    }
+
+    /// The wire handler to mount:
+    /// `WireServer::bind_handler(addr, gateway.handler(), opts)`.
+    pub fn handler(&self) -> Arc<GatewayHandler> {
+        self.handler.clone()
+    }
+
+    pub fn shared(&self) -> &Arc<GatewayShared> {
+        &self.shared
+    }
+
+    pub fn snapshot(&self) -> FleetView {
+        fleet_view(&self.shared)
+    }
+
+    /// True once a rollback fired under `fail_on_rollback`.
+    pub fn rollback_fired(&self) -> bool {
+        self.shared.rollback_fatal.load(Ordering::Acquire)
+    }
+
+    /// Blocks until at least `n` replicas are healthy (true) or the
+    /// timeout passes (false).
+    pub fn wait_healthy(&self, n: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let healthy = self
+                .shared
+                .replicas
+                .lock()
+                .unwrap()
+                .iter()
+                .filter(|r| r.healthy)
+                .count();
+            if healthy >= n {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+
+    /// Stops every thread and kills every supervised child. Idempotent.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        if self.shared.stopping.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if let Some(h) = self.health.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.watcher.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = {
+            let mut slots = self.shared.slots.lock().unwrap();
+            slots.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lat_ring_publishes_p95_periodically() {
+        let mut ring = LatRing::new();
+        let mut published = None;
+        for i in 0..64u64 {
+            published = ring.push(i * 10).or(published);
+        }
+        // 64 samples 0..630: p95 index = 63*95/100 = 59 → 590.
+        assert_eq!(published, Some(590));
+        // Not republished until another 64 inserts.
+        assert_eq!(ring.push(1), None);
+    }
+
+    #[test]
+    fn fleet_view_rolls_up_counters() {
+        let shared = GatewayShared {
+            replicas: Mutex::new(vec![
+                {
+                    let mut r = Replica::attached(0, "127.0.0.1:1".into());
+                    r.healthy = true;
+                    r.served = 3;
+                    r
+                },
+                Replica::new(1, 0, true),
+            ]),
+            stopping: AtomicBool::new(false),
+            active_cohort: AtomicU64::new(0),
+            next_id: AtomicU64::new(2),
+            next_cohort: AtomicU64::new(1),
+            retries: AtomicU64::new(2),
+            hedges: AtomicU64::new(1),
+            hedge_wins: AtomicU64::new(1),
+            upstream_errors: AtomicU64::new(0),
+            deploys: AtomicU64::new(0),
+            rollbacks: AtomicU64::new(0),
+            rollback_fatal: AtomicBool::new(false),
+            telemetry: TelemetrySink::disabled(),
+            slots: Mutex::new(Vec::new()),
+            lat: Mutex::new(LatRing::new()),
+            p95_us: AtomicU64::new(0),
+        };
+        let view = fleet_view(&shared);
+        assert_eq!(view.replicas.len(), 2);
+        assert_eq!(view.completed(), 3);
+        assert_eq!(view.healthy(), 1);
+        assert_eq!(view.retries, 2);
+        let json = view.to_json().to_string();
+        assert!(json.contains("\"state\":\"up\""));
+        assert!(json.contains("\"state\":\"starting\""));
+    }
+}

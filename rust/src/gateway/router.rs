@@ -1,0 +1,589 @@
+//! Shed-aware request routing over the replica fleet.
+//!
+//! [`GatewayHandler`] implements [`WireHandler`], so the gateway's
+//! front-end is the same [`WireServer`](crate::server::WireServer) a
+//! replica uses — acceptor, worker pool, graceful drain, fault
+//! injection and all. Routing policy:
+//!
+//! * **Selection** — among healthy `Up` replicas, prefer the active
+//!   cohort, then the fewest in-flight forwards *for the requested
+//!   variant*, then the fewest overall (per-variant least-outstanding).
+//! * **Retry** — at most ONE retry on a *different* replica, only for
+//!   outcomes another replica may not share: the shed family,
+//!   `QueueFull`, `ShuttingDown`, and transport errors. Application
+//!   errors are deterministic and forwarded verbatim. The retry is
+//!   budget-aware: it forwards only the budget that remains, and a
+//!   request whose budget is already gone is shed at the gateway.
+//! * **Hedging** (opt-in) — if the primary has not answered within the
+//!   hedge delay (fixed, or the gateway's observed p95 forward
+//!   latency), fire the same request at a second replica and take the
+//!   first answer; `hedge_fired` telemetry records who won. Losing
+//!   forwards are left to finish on a detached thread — inference is
+//!   idempotent and the reply is simply dropped.
+//! * **Exhaustion** — when no healthy replica remains, the client gets
+//!   a typed [`ErrorCode::Upstream`] refusal (or the last typed
+//!   refusal a replica produced, which is strictly more informative).
+//!
+//! A forward-level transport error marks the replica unhealthy
+//! immediately (the health prober will bring it back); waiting for the
+//! prober to notice would route more requests into a dead process.
+
+use super::{fleet_view, with_replica, GatewayShared, HedgePolicy, ReplicaState};
+use crate::server::proto::{ErrorCode, Request, Response};
+use crate::server::{ServerStats, WireClient, WireHandler, WireResponse};
+use crate::telemetry::Event;
+use crate::util::json::Json;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Default hedge delay until enough latency samples exist for a p95.
+const HEDGE_DELAY_FLOOR: Duration = Duration::from_millis(1);
+const HEDGE_DELAY_DEFAULT: Duration = Duration::from_millis(20);
+const HEDGE_DELAY_CEIL: Duration = Duration::from_millis(500);
+
+/// Routes wire requests across the replica fleet.
+pub struct GatewayHandler {
+    shared: Arc<GatewayShared>,
+    retry: bool,
+    hedge: Option<HedgePolicy>,
+    forward_timeout: Duration,
+}
+
+impl WireHandler for GatewayHandler {
+    fn handle(&self, req: Request, arrived: Instant, stats: &ServerStats) -> Response {
+        match req {
+            Request::Metrics => Response::MetricsJson(self.metrics_json(stats)),
+            Request::Infer {
+                key,
+                deadline_budget_ms,
+                image,
+            } => self.route(&key, deadline_budget_ms, image, arrived),
+        }
+    }
+}
+
+impl GatewayHandler {
+    pub(crate) fn new(
+        shared: Arc<GatewayShared>,
+        retry: bool,
+        hedge: Option<HedgePolicy>,
+        forward_timeout: Duration,
+    ) -> GatewayHandler {
+        GatewayHandler {
+            shared,
+            retry,
+            hedge,
+            forward_timeout,
+        }
+    }
+
+    /// Outcomes worth one try on a different replica: states of *that*
+    /// replica (load, drain), not properties of the request.
+    fn retryable(code: ErrorCode) -> bool {
+        code.is_shed() || matches!(code, ErrorCode::QueueFull | ErrorCode::ShuttingDown)
+    }
+
+    fn route(&self, key: &str, budget_ms: u32, image: Vec<f32>, arrived: Instant) -> Response {
+        let deadline = (budget_ms > 0)
+            .then(|| arrived + Duration::from_millis(budget_ms as u64));
+        let attempts = if self.retry { 2 } else { 1 };
+        let mut tried: Vec<u64> = Vec::new();
+        let mut last_refusal: Option<Response> = None;
+        for attempt in 0..attempts {
+            // Budget-aware: forward only what remains; a request whose
+            // budget burned down at the gateway is shed typed, exactly
+            // as a replica's door check would.
+            let remaining_ms = match deadline {
+                Some(d) => {
+                    let rem = d.saturating_duration_since(Instant::now());
+                    if rem.is_zero() {
+                        return Response::Error {
+                            code: ErrorCode::Expired,
+                            detail: format!(
+                                "budget of {} ms elapsed at the gateway",
+                                budget_ms
+                            ),
+                        };
+                    }
+                    rem.as_millis().clamp(1, u32::MAX as u128) as u32
+                }
+                None => 0,
+            };
+            let Some((id, addr)) = pick(&self.shared, key, &tried) else {
+                // Nothing healthy left. A typed refusal from the
+                // previous attempt is more informative than a generic
+                // upstream error.
+                self.shared.upstream_errors.fetch_add(1, Ordering::Relaxed);
+                return last_refusal.unwrap_or_else(|| Response::Error {
+                    code: ErrorCode::Upstream,
+                    detail: format!("no healthy replica for '{}'", key),
+                });
+            };
+            tried.push(id);
+            let t0 = Instant::now();
+            let outcome = self.forward_hedged(id, &addr, key, remaining_ms, &image, &mut tried);
+            match outcome {
+                Ok(resp @ Response::Logits { .. }) => {
+                    self.record_latency(t0.elapsed());
+                    return resp;
+                }
+                Ok(Response::Error { code, detail }) => {
+                    if Self::retryable(code) && attempt + 1 < attempts {
+                        self.shared.retries.fetch_add(1, Ordering::Relaxed);
+                        self.shared.telemetry.emit(Event::RouteRetry {
+                            key: Arc::from(key),
+                            reason: code.name().to_string(),
+                        });
+                        last_refusal = Some(Response::Error { code, detail });
+                        continue;
+                    }
+                    return Response::Error { code, detail };
+                }
+                Ok(resp) => return resp,
+                Err(detail) => {
+                    // Transport failure: the replica is suspect NOW —
+                    // stop routing to it before the prober notices.
+                    with_replica(&self.shared, id, |r| {
+                        r.consec_fail = r.consec_fail.saturating_add(1);
+                        r.healthy = false;
+                    });
+                    if attempt + 1 < attempts {
+                        self.shared.retries.fetch_add(1, Ordering::Relaxed);
+                        self.shared.telemetry.emit(Event::RouteRetry {
+                            key: Arc::from(key),
+                            reason: "transport".to_string(),
+                        });
+                        last_refusal = Some(Response::Error {
+                            code: ErrorCode::Upstream,
+                            detail: detail.clone(),
+                        });
+                        continue;
+                    }
+                    self.shared.upstream_errors.fetch_add(1, Ordering::Relaxed);
+                    return Response::Error {
+                        code: ErrorCode::Upstream,
+                        detail,
+                    };
+                }
+            }
+        }
+        // The final iteration always returns above.
+        unreachable!("route loop exits via return");
+    }
+
+    /// One forward, optionally shadowed by a tail hedge. The primary's
+    /// outstanding slot was already taken by `pick`; this owns its
+    /// release (and the backup's) via [`OutstandingGuard`].
+    fn forward_hedged(
+        &self,
+        primary_id: u64,
+        primary_addr: &str,
+        key: &str,
+        budget_ms: u32,
+        image: &[f32],
+        tried: &mut Vec<u64>,
+    ) -> Result<Response, String> {
+        let primary_guard = OutstandingGuard::new(self.shared.clone(), primary_id, key);
+        let Some(policy) = self.hedge else {
+            return forward_raw(
+                primary_addr,
+                key,
+                budget_ms,
+                image,
+                self.forward_timeout,
+                primary_guard,
+            );
+        };
+        let (tx, rx) = mpsc::channel::<(bool, Result<Response, String>)>();
+        spawn_forward(
+            tx.clone(),
+            false,
+            primary_addr.to_string(),
+            key.to_string(),
+            budget_ms,
+            image.to_vec(),
+            self.forward_timeout,
+            primary_guard,
+        );
+        let delay = self.hedge_delay(policy);
+        let first = match rx.recv_timeout(delay) {
+            Ok(msg) => Some(msg),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err("forward thread vanished".to_string())
+            }
+        };
+        if let Some((_, result)) = first {
+            return result;
+        }
+        // Primary is slow: fire the hedge at a different replica (if
+        // one exists) and take the first answer. Prefer a success over
+        // whichever error arrives first.
+        let Some((backup_id, backup_addr)) = pick(&self.shared, key, tried) else {
+            return self.await_forward(&rx);
+        };
+        tried.push(backup_id);
+        self.shared.hedges.fetch_add(1, Ordering::Relaxed);
+        let backup_guard = OutstandingGuard::new(self.shared.clone(), backup_id, key);
+        spawn_forward(
+            tx,
+            true,
+            backup_addr,
+            key.to_string(),
+            budget_ms,
+            image.to_vec(),
+            self.forward_timeout,
+            backup_guard,
+        );
+        let mut first_error: Option<Result<Response, String>> = None;
+        for _ in 0..2 {
+            match rx.recv_timeout(self.forward_timeout + Duration::from_secs(1)) {
+                Ok((from_hedge, result)) => {
+                    let won = matches!(result, Ok(Response::Logits { .. }));
+                    if won {
+                        if from_hedge {
+                            self.shared.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                        }
+                        self.shared.telemetry.emit(Event::HedgeFired {
+                            key: Arc::from(key),
+                            win: from_hedge,
+                        });
+                        return result;
+                    }
+                    if first_error.is_none() {
+                        first_error = Some(result);
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        self.shared.telemetry.emit(Event::HedgeFired {
+            key: Arc::from(key),
+            win: false,
+        });
+        first_error.unwrap_or_else(|| Err("hedged forwards timed out".to_string()))
+    }
+
+    /// Blocks for the primary's answer when no hedge replica exists.
+    fn await_forward(
+        &self,
+        rx: &mpsc::Receiver<(bool, Result<Response, String>)>,
+    ) -> Result<Response, String> {
+        match rx.recv_timeout(self.forward_timeout + Duration::from_secs(1)) {
+            Ok((_, result)) => result,
+            Err(_) => Err("forward timed out".to_string()),
+        }
+    }
+
+    fn hedge_delay(&self, policy: HedgePolicy) -> Duration {
+        match policy {
+            HedgePolicy::FixedMs(ms) => Duration::from_millis(ms.max(1)),
+            HedgePolicy::P95 => {
+                let us = self.shared.p95_us.load(Ordering::Relaxed);
+                if us == 0 {
+                    HEDGE_DELAY_DEFAULT
+                } else {
+                    Duration::from_micros(us).clamp(HEDGE_DELAY_FLOOR, HEDGE_DELAY_CEIL)
+                }
+            }
+        }
+    }
+
+    fn record_latency(&self, took: Duration) {
+        let us = took.as_micros().min(u64::MAX as u128) as u64;
+        let fresh = self.shared.lat.lock().unwrap().push(us);
+        if let Some(p95) = fresh {
+            self.shared.p95_us.store(p95, Ordering::Relaxed);
+        }
+    }
+
+    /// The gateway's metrics op: fleet-level counters, per-replica rows
+    /// (the `BENCH_fleet.json` source), and a `variants` passthrough
+    /// from one healthy replica so `strum loadgen` discovers keys and
+    /// image geometry exactly as it would from a single replica.
+    fn metrics_json(&self, stats: &ServerStats) -> String {
+        let view = fleet_view(&self.shared);
+        let s = stats.snapshot();
+        let mut fleet_json = view.to_json();
+        if let Json::Obj(map) = &mut fleet_json {
+            map.insert("schema_version".to_string(), Json::Num(1.0));
+            map.insert("gateway".to_string(), Json::Bool(true));
+            map.insert("variants".to_string(), self.upstream_variants());
+            map.insert(
+                "fleet".to_string(),
+                Json::obj(vec![
+                    ("requests", Json::Num(s.requests as f64)),
+                    ("completed", Json::Num(view.completed() as f64)),
+                    ("rejected", Json::Num(0.0)),
+                    ("shed", Json::Num(0.0)),
+                ]),
+            );
+        }
+        fleet_json.to_string_pretty()
+    }
+
+    /// Fetches one healthy replica's `variants` metrics array verbatim.
+    fn upstream_variants(&self) -> Json {
+        let target = {
+            let fleet = self.shared.replicas.lock().unwrap();
+            fleet
+                .iter()
+                .find(|r| r.healthy && r.state == ReplicaState::Up)
+                .and_then(|r| r.addr.clone())
+        };
+        let Some(addr) = target else {
+            return Json::Arr(Vec::new());
+        };
+        let mut client = WireClient::new(addr)
+            .with_connect_attempts(1)
+            .with_read_timeout(Duration::from_secs(2));
+        client
+            .metrics()
+            .ok()
+            .and_then(|raw| Json::parse(&raw).ok())
+            .and_then(|j| j.get("variants").cloned())
+            .unwrap_or_else(|| Json::Arr(Vec::new()))
+    }
+}
+
+/// Picks the routable replica with the fewest in-flight forwards for
+/// `key` (active cohort first, total outstanding as tiebreak) and takes
+/// an outstanding slot on it under the same lock — two concurrent picks
+/// cannot double-book the same idle replica.
+pub(crate) fn pick(
+    shared: &GatewayShared,
+    key: &str,
+    exclude: &[u64],
+) -> Option<(u64, String)> {
+    let mut fleet = shared.replicas.lock().unwrap();
+    let active = shared.active_cohort.load(Ordering::Relaxed);
+    let mut best: Option<usize> = None;
+    let mut best_rank = (true, usize::MAX, usize::MAX, u64::MAX);
+    for (i, r) in fleet.iter().enumerate() {
+        if !r.healthy || r.state != ReplicaState::Up || r.addr.is_none() {
+            continue;
+        }
+        if exclude.contains(&r.id) {
+            continue;
+        }
+        let rank = (
+            r.cohort != active,
+            r.outstanding_for(key),
+            r.outstanding_total,
+            r.id,
+        );
+        if best.is_none() || rank < best_rank {
+            best = Some(i);
+            best_rank = rank;
+        }
+    }
+    let i = best?;
+    let r = &mut fleet[i];
+    *r.outstanding.entry(key.to_string()).or_insert(0) += 1;
+    r.outstanding_total += 1;
+    Some((r.id, r.addr.clone().expect("routable replica has an addr")))
+}
+
+/// Releases one outstanding slot when dropped; a successful forward
+/// also bumps the replica's served count. Travels into hedge threads.
+struct OutstandingGuard {
+    shared: Arc<GatewayShared>,
+    id: u64,
+    key: String,
+    success: bool,
+}
+
+impl OutstandingGuard {
+    fn new(shared: Arc<GatewayShared>, id: u64, key: &str) -> OutstandingGuard {
+        OutstandingGuard {
+            shared,
+            id,
+            key: key.to_string(),
+            success: false,
+        }
+    }
+}
+
+impl Drop for OutstandingGuard {
+    fn drop(&mut self) {
+        let _ = with_replica(&self.shared, self.id, |r| {
+            if let Some(n) = r.outstanding.get_mut(&self.key) {
+                *n = n.saturating_sub(1);
+            }
+            r.outstanding_total = r.outstanding_total.saturating_sub(1);
+            if self.success {
+                r.served += 1;
+            }
+        });
+    }
+}
+
+/// One wire forward: single dial (failover beats backoff), bounded
+/// read. Returns the replica's typed response verbatim, or the
+/// transport error as a string.
+fn forward_raw(
+    addr: &str,
+    key: &str,
+    budget_ms: u32,
+    image: &[f32],
+    timeout: Duration,
+    mut guard: OutstandingGuard,
+) -> Result<Response, String> {
+    let mut client = WireClient::new(addr)
+        .with_connect_attempts(1)
+        .with_read_timeout(timeout);
+    let result = match client.infer_budget_ms(key, image, budget_ms) {
+        Ok(WireResponse::Infer(inf)) => Ok(Response::Logits {
+            class: inf.class as u32,
+            latency_us: inf.latency_us,
+            occupancy: inf.batch.0.min(u16::MAX as usize) as u16,
+            padded: inf.batch.1.min(u16::MAX as usize) as u16,
+            logits: inf.logits,
+        }),
+        Ok(WireResponse::Error { code, detail }) => Ok(Response::Error { code, detail }),
+        Err(e) => Err(format!("{:#}", e)),
+    };
+    guard.success = matches!(result, Ok(Response::Logits { .. }));
+    result
+}
+
+/// Runs `forward_raw` on a detached thread, reporting through `tx`.
+/// Detached on purpose: a hedge loser must be free to finish (and
+/// release its outstanding slot via the guard) after the winner's
+/// answer has already been returned.
+#[allow(clippy::too_many_arguments)]
+fn spawn_forward(
+    tx: mpsc::Sender<(bool, Result<Response, String>)>,
+    from_hedge: bool,
+    addr: String,
+    key: String,
+    budget_ms: u32,
+    image: Vec<f32>,
+    timeout: Duration,
+    guard: OutstandingGuard,
+) {
+    let spawned = std::thread::Builder::new()
+        .name("gw-forward".into())
+        .spawn(move || {
+            let result = forward_raw(&addr, &key, budget_ms, &image, timeout, guard);
+            let _ = tx.send((from_hedge, result));
+        });
+    if spawned.is_err() {
+        // Thread spawn failed (resource exhaustion): the receiver sees
+        // a disconnect once every sender is gone and surfaces a typed
+        // upstream error. Nothing to do here.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{GatewayOptions, Replica, ReplicaState};
+    use super::*;
+    use crate::gateway::Gateway;
+    use crate::telemetry::TelemetrySink;
+
+    fn bare_shared() -> Arc<GatewayShared> {
+        // Gateway::start needs replicas; build the shared state through
+        // an attach-mode gateway pointed at unreachable addresses.
+        let gw = Gateway::start(GatewayOptions {
+            attach: vec!["127.0.0.1:1".into()],
+            telemetry: TelemetrySink::disabled(),
+            ..GatewayOptions::default()
+        })
+        .unwrap();
+        let shared = gw.shared().clone();
+        gw.shutdown();
+        shared
+    }
+
+    fn add_replica(shared: &GatewayShared, id: u64, cohort: u64, healthy: bool) {
+        let mut fleet = shared.replicas.lock().unwrap();
+        let mut r = Replica::attached(id, format!("127.0.0.1:{}", 40000 + id));
+        r.cohort = cohort;
+        r.healthy = healthy;
+        fleet.push(r);
+    }
+
+    #[test]
+    fn pick_prefers_active_cohort_and_least_outstanding() {
+        let shared = bare_shared();
+        shared.replicas.lock().unwrap().clear();
+        add_replica(&shared, 10, 0, true);
+        add_replica(&shared, 11, 0, true);
+        add_replica(&shared, 12, 1, true); // not the active cohort
+        // Equal load: lowest id of the active cohort wins, and the pick
+        // takes an outstanding slot.
+        let (id, _) = pick(&shared, "k", &[]).unwrap();
+        assert_eq!(id, 10);
+        // Now 10 has one in flight for "k": 11 is less loaded.
+        let (id, _) = pick(&shared, "k", &[]).unwrap();
+        assert_eq!(id, 11);
+        // Excluding both healthy active replicas falls back to the
+        // other cohort rather than refusing.
+        let (id, _) = pick(&shared, "k", &[10, 11]).unwrap();
+        assert_eq!(id, 12);
+        // Per-variant counts: a different key sees both at zero again.
+        let (id, _) = pick(&shared, "other", &[]).unwrap();
+        assert_eq!(id, 10);
+    }
+
+    #[test]
+    fn pick_skips_unhealthy_and_non_up() {
+        let shared = bare_shared();
+        shared.replicas.lock().unwrap().clear();
+        add_replica(&shared, 20, 0, false);
+        add_replica(&shared, 21, 0, true);
+        {
+            let mut fleet = shared.replicas.lock().unwrap();
+            fleet.iter_mut().find(|r| r.id == 21).unwrap().state = ReplicaState::Draining;
+        }
+        assert!(pick(&shared, "k", &[]).is_none());
+        {
+            let mut fleet = shared.replicas.lock().unwrap();
+            let r = fleet.iter_mut().find(|r| r.id == 21).unwrap();
+            r.state = ReplicaState::Up;
+        }
+        assert_eq!(pick(&shared, "k", &[]).unwrap().0, 21);
+    }
+
+    #[test]
+    fn outstanding_guard_releases_and_counts_served() {
+        let shared = bare_shared();
+        shared.replicas.lock().unwrap().clear();
+        add_replica(&shared, 30, 0, true);
+        let (id, _) = pick(&shared, "k", &[]).unwrap();
+        {
+            let mut g = OutstandingGuard::new(shared.clone(), id, "k");
+            g.success = true;
+        }
+        let fleet = shared.replicas.lock().unwrap();
+        let r = fleet.iter().find(|r| r.id == 30).unwrap();
+        assert_eq!(r.outstanding_total, 0);
+        assert_eq!(r.outstanding_for("k"), 0);
+        assert_eq!(r.served, 1);
+    }
+
+    #[test]
+    fn retryable_covers_load_states_only() {
+        for code in [
+            ErrorCode::Shed,
+            ErrorCode::DeadlineExpired,
+            ErrorCode::Expired,
+            ErrorCode::QueueFull,
+            ErrorCode::ShuttingDown,
+        ] {
+            assert!(GatewayHandler::retryable(code), "{:?}", code);
+        }
+        for code in [
+            ErrorCode::BadImage,
+            ErrorCode::UnknownVariant,
+            ErrorCode::BadFrame,
+            ErrorCode::Batch,
+            ErrorCode::Retired,
+            ErrorCode::Upstream,
+        ] {
+            assert!(!GatewayHandler::retryable(code), "{:?}", code);
+        }
+    }
+}

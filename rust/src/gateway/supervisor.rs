@@ -1,0 +1,334 @@
+//! Replica supervision: one slot thread per supervised replica.
+//!
+//! A slot owns its child process end to end: spawn with piped stdout,
+//! scrape the `listening on ADDR` line (ephemeral ports — no port
+//! assignment to coordinate), then poll `try_wait` while watching the
+//! fleet record for drain orders. An unexpected exit marks the replica
+//! [`ReplicaState::Dead`], emits `replica_died`, and respawns after a
+//! capped jittered exponential backoff (`replica_restarted` carries the
+//! chosen pause). A replica marked [`ReplicaState::Draining`] is killed
+//! only once the router's in-flight count reaches zero — "graceful"
+//! drain is a gateway-level property: traffic stops first, the process
+//! dies after.
+//!
+//! The scrape reader thread keeps draining the child's stdout after the
+//! address line, so a chatty child can never block on a full pipe.
+
+use super::{replica_state, with_replica, GatewayShared, ReplicaSpec, ReplicaState};
+use crate::telemetry::Event;
+use crate::util::prng::Rng;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long a fresh child gets to print its address before the slot
+/// gives up on it (covers artifact loads on a cold cache). A child that
+/// exits sooner is noticed immediately via its closed stdout.
+const SCRAPE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Poll cadence for child exit + drain orders.
+const POLL: Duration = Duration::from_millis(50);
+
+/// A replica ordered to drain while requests are still in flight is
+/// force-killed after this long anyway (a wedged forward must not pin
+/// a drain forever).
+const DRAIN_FORCE_KILL: Duration = Duration::from_secs(10);
+
+pub(crate) fn spawn_slot(
+    shared: Arc<GatewayShared>,
+    id: u64,
+    spec: ReplicaSpec,
+    backoff_base: Duration,
+    backoff_cap: Duration,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("gw-slot-{}", id))
+        .spawn(move || slot_loop(&shared, id, &spec, backoff_base, backoff_cap))
+        .expect("spawn gateway slot thread")
+}
+
+fn slot_loop(
+    shared: &GatewayShared,
+    id: u64,
+    spec: &ReplicaSpec,
+    backoff_base: Duration,
+    backoff_cap: Duration,
+) {
+    let mut rng = Rng::new(0x51A7 ^ id ^ ((std::process::id() as u64) << 32));
+    loop {
+        if should_retire(shared, id) {
+            retire(shared, id);
+            return;
+        }
+        let cohort = with_replica(shared, id, |r| r.cohort).unwrap_or(0);
+        // One spawn → serve → death cycle. Every path through it ends
+        // with the replica Dead (respawn below) except a clean exit of
+        // the slot itself (stop / drain), which returns.
+        match spawn_child(spec) {
+            Ok(mut child) => {
+                let pid = child.id();
+                let addr = child
+                    .stdout
+                    .take()
+                    .and_then(|out| scrape_listen_addr(out, SCRAPE_TIMEOUT));
+                match addr {
+                    Some(addr) => {
+                        with_replica(shared, id, |r| {
+                            r.state = ReplicaState::Up;
+                            r.addr = Some(addr.clone());
+                            r.pid = Some(pid);
+                            r.consec_fail = 0;
+                        });
+                        shared.telemetry.emit(Event::ReplicaSpawned {
+                            id,
+                            cohort,
+                            addr,
+                            pid,
+                        });
+                        if !monitor(shared, id, &mut child) {
+                            // Stopped or drained out: child killed,
+                            // record retired, slot done.
+                            return;
+                        }
+                    }
+                    None => {
+                        // Never printed an address: crashed during
+                        // startup (a corrupt artifact fails exactly
+                        // here) or wedged. Reap and record the death.
+                        let _ = child.kill();
+                        let exit_code =
+                            child.wait().ok().and_then(|s| s.code()).map(|c| c as i64);
+                        let restarts =
+                            with_replica(shared, id, |r| r.restarts).unwrap_or(0);
+                        mark_dead(shared, id);
+                        shared.telemetry.emit(Event::ReplicaDied {
+                            id,
+                            cohort,
+                            exit_code,
+                            restarts,
+                        });
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("gateway: replica {} failed to spawn: {:#}", id, e);
+                mark_dead(shared, id);
+            }
+        }
+        if should_retire(shared, id) {
+            retire(shared, id);
+            return;
+        }
+        let restarts = with_replica(shared, id, |r| {
+            r.restarts += 1;
+            r.restarts
+        })
+        .unwrap_or(1);
+        let pause_for = next_backoff(&mut rng, restarts, backoff_base, backoff_cap);
+        shared.telemetry.emit(Event::ReplicaRestarted {
+            id,
+            cohort,
+            restarts,
+            backoff_ms: pause_for.as_millis() as u64,
+        });
+        if !pause(shared, id, pause_for) {
+            retire(shared, id);
+            return;
+        }
+    }
+}
+
+fn spawn_child(spec: &ReplicaSpec) -> std::io::Result<Child> {
+    let mut cmd = Command::new(&spec.binary);
+    cmd.args(&spec.args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .stdin(Stdio::null());
+    for (k, v) in &spec.env {
+        cmd.env(k, v);
+    }
+    cmd.spawn()
+}
+
+/// Reads the child's stdout until `listening on ADDR` appears, then
+/// keeps draining in the background so the pipe never fills. Returns
+/// `None` on timeout or if stdout closes first (startup crash — the
+/// dropped sender makes `recv_timeout` fail fast, no timeout wait).
+fn scrape_listen_addr(stdout: ChildStdout, timeout: Duration) -> Option<String> {
+    let (tx, rx) = mpsc::channel::<String>();
+    let spawned = std::thread::Builder::new()
+        .name("gw-scrape".into())
+        .spawn(move || {
+            let reader = BufReader::new(stdout);
+            let mut sent = false;
+            for line in reader.lines() {
+                let Ok(line) = line else { break };
+                if !sent {
+                    if let Some(pos) = line.find("listening on ") {
+                        let addr = line[pos + "listening on ".len()..].trim().to_string();
+                        if !addr.is_empty() {
+                            let _ = tx.send(addr);
+                            sent = true;
+                        }
+                    }
+                }
+                // Keep consuming lines until EOF (child exit).
+            }
+        });
+    if spawned.is_err() {
+        return None;
+    }
+    rx.recv_timeout(timeout).ok()
+}
+
+/// Watches a live child. Returns `true` if the child died unexpectedly
+/// (the slot should back off and respawn), `false` if the slot should
+/// exit (gateway stopping, or the replica drained out and was killed).
+fn monitor(shared: &GatewayShared, id: u64, child: &mut Child) -> bool {
+    let mut drain_seen: Option<Instant> = None;
+    loop {
+        if shared.stopping.load(Ordering::Acquire) {
+            kill_and_retire(shared, id, child);
+            return false;
+        }
+        match replica_state(shared, id) {
+            Some(ReplicaState::Draining) | Some(ReplicaState::Retired) | None => {
+                let since = *drain_seen.get_or_insert_with(Instant::now);
+                let outstanding =
+                    with_replica(shared, id, |r| r.outstanding_total).unwrap_or(0);
+                if outstanding == 0 || since.elapsed() >= DRAIN_FORCE_KILL {
+                    kill_and_retire(shared, id, child);
+                    return false;
+                }
+            }
+            _ => {}
+        }
+        match child.try_wait() {
+            Ok(Some(status)) => {
+                let (restarts, cohort) =
+                    with_replica(shared, id, |r| (r.restarts, r.cohort)).unwrap_or((0, 0));
+                mark_dead(shared, id);
+                shared.telemetry.emit(Event::ReplicaDied {
+                    id,
+                    cohort,
+                    exit_code: status.code().map(|c| c as i64),
+                    restarts,
+                });
+                return true;
+            }
+            Ok(None) | Err(_) => std::thread::sleep(POLL),
+        }
+    }
+}
+
+fn kill_and_retire(shared: &GatewayShared, id: u64, child: &mut Child) {
+    let _ = child.kill();
+    let _ = child.wait();
+    retire(shared, id);
+}
+
+fn mark_dead(shared: &GatewayShared, id: u64) {
+    with_replica(shared, id, |r| {
+        r.state = ReplicaState::Dead;
+        r.healthy = false;
+        r.addr = None;
+        r.pid = None;
+        r.last_counts = None;
+    });
+}
+
+fn retire(shared: &GatewayShared, id: u64) {
+    with_replica(shared, id, |r| {
+        r.state = ReplicaState::Retired;
+        r.healthy = false;
+        r.addr = None;
+        r.pid = None;
+    });
+}
+
+fn should_retire(shared: &GatewayShared, id: u64) -> bool {
+    if shared.stopping.load(Ordering::Acquire) {
+        return true;
+    }
+    matches!(
+        replica_state(shared, id),
+        Some(ReplicaState::Draining) | Some(ReplicaState::Retired) | None
+    )
+}
+
+/// Capped exponential backoff with ×[0.5, 1.5) jitter, keyed off the
+/// replica's restart count (mass restarts de-correlate via the jitter).
+fn next_backoff(rng: &mut Rng, restarts: u64, base: Duration, cap: Duration) -> Duration {
+    let exp = base.saturating_mul(1u32 << restarts.min(6) as u32);
+    let jitter = 0.5 + rng.f64();
+    exp.mul_f64(jitter).min(cap)
+}
+
+/// Sleeps in slices, bailing early when the gateway stops or the
+/// replica is ordered out. Returns `false` when the slot should exit.
+fn pause(shared: &GatewayShared, id: u64, total: Duration) -> bool {
+    let deadline = Instant::now() + total;
+    while Instant::now() < deadline {
+        if should_retire(shared, id) {
+            return false;
+        }
+        std::thread::sleep(POLL.min(deadline.saturating_duration_since(Instant::now())));
+    }
+    !should_retire(shared, id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let mut rng = Rng::new(9);
+        let base = Duration::from_millis(100);
+        let cap = Duration::from_secs(5);
+        let b1 = next_backoff(&mut rng, 1, base, cap);
+        // restarts=1 → 200ms ± jitter ∈ [100ms, 300ms).
+        assert!(b1 >= Duration::from_millis(100) && b1 < Duration::from_millis(300));
+        // Deep restart counts saturate at the cap regardless of jitter.
+        for _ in 0..8 {
+            assert!(next_backoff(&mut rng, 60, base, cap) <= cap);
+        }
+    }
+
+    #[test]
+    fn scrape_finds_the_address_line_and_drains() {
+        // A real child process exercising the pipe: prints noise, the
+        // address line, then more noise.
+        let mut child = Command::new("sh")
+            .args([
+                "-c",
+                "echo warming up; echo 'listening on 127.0.0.1:41999'; echo trailing",
+            ])
+            .stdout(Stdio::piped())
+            .spawn()
+            .expect("spawn sh");
+        let out = child.stdout.take().unwrap();
+        let addr = scrape_listen_addr(out, Duration::from_secs(10));
+        assert_eq!(addr.as_deref(), Some("127.0.0.1:41999"));
+        let _ = child.wait();
+    }
+
+    #[test]
+    fn scrape_fails_fast_on_startup_crash() {
+        // Child exits without the line: the closed pipe must end the
+        // scrape well before the timeout.
+        let mut child = Command::new("sh")
+            .args(["-c", "echo error: artifact corrupt >&2; exit 1"])
+            .stdout(Stdio::piped())
+            .spawn()
+            .expect("spawn sh");
+        let out = child.stdout.take().unwrap();
+        let t0 = Instant::now();
+        assert_eq!(scrape_listen_addr(out, Duration::from_secs(30)), None);
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        let _ = child.wait();
+    }
+}

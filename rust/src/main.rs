@@ -11,7 +11,11 @@
 //!   serve      Run the multi-variant serving engine: synthetic load, or a TCP
 //!              wire front-end with --listen ADDR; --telemetry-out DIR streams
 //!              structured JSONL events (see `telemetry::schema`)
+//!   gateway    Supervise N `strum serve` replicas behind one wire endpoint:
+//!              health-checked shed-aware routing, bounded retry/hedging,
+//!              rolling deploys with auto-rollback, fault injection for chaos tests
 //!   loadgen    Open-loop wire load generator against a running `strum serve --listen`
+//!              or `strum gateway` (--target gateway adds per-replica BENCH rows)
 //!   bench-diff Compare two run manifests (MANIFEST_*.json) and gate on regressions
 //!   selfcheck  Runtime round-trip (HLO load/execute) sanity check
 //!
@@ -22,11 +26,14 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use strum_dpu::artifact::{weights_fingerprint, ArtifactCache};
+use strum_dpu::artifact::{weights_fingerprint, ArtifactCache, CompiledNet};
 use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
 use strum_dpu::backend::BackendKind;
 use strum_dpu::coordinator::{Engine, EngineOptions, Router, SubmitError, VariantHandle};
-use strum_dpu::server::{WireClient, WireResponse, WireServer, WireServerOptions};
+use strum_dpu::gateway::{DeployPolicy, Gateway, GatewayOptions, HedgePolicy, ReplicaSpec};
+use strum_dpu::server::{
+    FaultPlan, WireClient, WireResponse, WireServer, WireServerOptions,
+};
 use strum_dpu::encode::{decode_layer, encode_layer};
 use strum_dpu::encode::compression::ratio_for;
 use strum_dpu::hw::power::Activity;
@@ -86,6 +93,16 @@ fn parse_backend(args: &Args) -> Result<BackendKind> {
         .ok_or_else(|| anyhow::anyhow!("unknown backend '{}' (pjrt|native)", name))
 }
 
+/// Fault plan for chaos tests: `--fault-plan SPEC` wins, else the
+/// `STRUM_FAULT_PLAN` environment (how a gateway arms one replica of a
+/// supervised fleet), else nothing.
+fn fault_plan(args: &Args) -> Result<Option<FaultPlan>> {
+    match args.opt_str("fault-plan") {
+        Some(spec) => Ok(Some(FaultPlan::parse(&spec)?)),
+        None => FaultPlan::from_env(),
+    }
+}
+
 fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "quantize" => cmd_quantize(args),
@@ -96,6 +113,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "hw" => cmd_hw(args),
         "report" => cmd_report(args),
         "serve" => cmd_serve(args),
+        "gateway" => cmd_gateway(args),
         "loadgen" => cmd_loadgen(args),
         "bench-diff" => cmd_bench_diff(args),
         "selfcheck" => cmd_selfcheck(args),
@@ -109,7 +127,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "strum — StruM structured mixed precision DPU coordinator\n\
-         usage: strum <quantize|compile|cache-gc|eval|sim|hw|report|serve|loadgen|bench-diff|selfcheck> [flags]\n\
+         usage: strum <quantize|compile|cache-gc|eval|sim|hw|report|serve|gateway|loadgen|bench-diff|selfcheck> [flags]\n\
          common: --artifacts DIR --net NAME --method {{baseline|sparsity|dliq-qN|mip2q-LN}} --p F\n\
          compile: strum compile --net N [--all-nets] [--variants base,dliq,mip2q] [--out FILE]\n\
                  quantize + encode once and write versioned .strumc artifact(s) into\n\
@@ -147,9 +165,37 @@ fn print_help() {
                  rotating telemetry-<run_id>.NNNN.jsonl segments under DIR; the\n\
                  per-event cost on the request path is one bounded-channel push.\n\
                  --telemetry-interval-s N (default 5) paces the gauge snapshots.\n\
+                 --artifact FILE additionally registers the compiled .strumc net\n\
+                 (the rolling-deploy serve path); --fault-plan SPEC (or the\n\
+                 STRUM_FAULT_PLAN env) arms deliberate misbehaviour for chaos\n\
+                 tests: kill-after=N,drop-conn-every=N,delay-ms=N,corrupt-every=N.\n\
+         gateway: strum gateway --replicas 3 --variants base,mip2q --listen ADDR\n\
+                 [--net N] [--workers N] [--attach A1,A2] [--fault-replica IDX:SPEC]\n\
+                 [--no-retry] [--hedge | --hedge-ms N] [--probe-interval-ms 250]\n\
+                 [--fail-after 2] [--forward-timeout-s 10] [--conn-workers N]\n\
+                 [--watch-artifact FILE [--deploy-replicas N] [--probation-s 5]\n\
+                  [--regress-threshold 0.2] [--deploy-timeout-s 30] [--fail-on-rollback]]\n\
+                 [--telemetry-out DIR] [--duration-s N]\n\
+                 spawns N supervised `strum serve --listen 127.0.0.1:0` replicas\n\
+                 (ephemeral ports scraped from their stdout), restarts crashes\n\
+                 with capped jittered backoff, health-probes the fleet over the\n\
+                 wire metrics op, and serves the same protocol on --listen with\n\
+                 per-variant least-outstanding routing, ONE bounded retry on\n\
+                 shed/connection errors, and optional tail hedging (--hedge uses\n\
+                 the observed p95 delay). --watch-artifact polls a .strumc for a\n\
+                 new version, rolls a fresh cohort, shifts traffic, and auto-\n\
+                 rolls-back on regression during probation; with\n\
+                 --fail-on-rollback a rollback makes the process exit nonzero.\n\
+                 --fault-replica arms one replica's STRUM_FAULT_PLAN for chaos\n\
+                 smokes. Exits with a per-replica fleet summary.\n\
          loadgen: strum loadgen --addr HOST:PORT [--requests 500 | --duration-s N]\n\
                  [--rate 500] [--concurrency 4] [--deadline-ms N] [--variants k1,k2]\n\
-                 [--out BENCH_wire_serve.json] [--bench-dir DIR] [--seed N] [--img N]\n\
+                 [--target gateway] [--out BENCH_wire_serve.json] [--bench-dir DIR]\n\
+                 [--seed N] [--img N]\n\
+                 --target gateway snapshots the gateway's fleet metrics before and\n\
+                 after the run and adds per-replica served/throughput rows plus\n\
+                 retry/hedge/rollback counters to the output (default out name\n\
+                 becomes BENCH_fleet.json).\n\
                  open-loop Poisson arrivals against a running wire server; variant\n\
                  keys and image geometry are discovered from the server's metrics\n\
                  op unless --variants overrides them. Reports p50/p95/p99 latency\n\
@@ -458,10 +504,17 @@ fn parse_variant_specs(args: &Args) -> Result<Vec<(Method, f64, usize)>> {
 /// The deterministic synthetic fallback net used when artifacts are
 /// missing. `strum compile` and a later `strum serve` must build
 /// byte-identical weights here, so the cache fingerprints line up and
-/// the serve run hits the compiled artifact.
-fn synthetic_weights(net: &str) -> Result<NetWeights> {
+/// the serve run hits the compiled artifact. `--synth-seed` varies the
+/// weights (and therefore the weights fingerprint) — how a test pushes
+/// a genuinely *new* artifact version through the deploy watcher
+/// without real model files.
+fn synth_seed(args: &Args) -> u64 {
+    args.usize("synth-seed", 11) as u64
+}
+
+fn synthetic_weights(net: &str, seed: u64) -> Result<NetWeights> {
     let (img, classes) = (16usize, 10usize);
-    let mut w = synth_net_weights(net, img, classes, 11)?;
+    let mut w = synth_net_weights(net, img, classes, seed)?;
     let mut rng = Rng::new(0xCA11B);
     let px = img * img * 3;
     let calib: Vec<f32> = (0..4 * px).map(|_| rng.f32()).collect();
@@ -498,7 +551,7 @@ fn cmd_compile(args: &Args) -> Result<()> {
             Ok(w) => w,
             Err(e) => {
                 println!("artifacts unavailable ({:#}); compiling the synthetic {}", e, net);
-                synthetic_weights(net)?
+                synthetic_weights(net, synth_seed(args))?
             }
         };
         for &(method, p, _) in &specs {
@@ -575,7 +628,7 @@ fn cmd_cache_gc(args: &Args) -> Result<()> {
                     "{}: weights unavailable ({:#}); judging against the synthetic fingerprint",
                     net, e
                 );
-                live.push((net.clone(), weights_fingerprint(&synthetic_weights(net)?)));
+                live.push((net.clone(), weights_fingerprint(&synthetic_weights(net, synth_seed(args))?)));
             }
             Err(e) => {
                 println!(
@@ -647,7 +700,7 @@ fn build_fleet(args: &Args) -> Result<Fleet> {
             match loaded {
                 Ok((w, d)) => (Some(w), d),
                 Err(e) => {
-                    let w = synthetic_weights(&net)?;
+                    let w = synthetic_weights(&net, synth_seed(args))?;
                     let (img, classes) =
                         (w.manifest.layers[0].oh, w.manifest.num_classes);
                     let n = 64usize;
@@ -725,6 +778,30 @@ fn build_fleet(args: &Args) -> Result<Fleet> {
         } else {
             engine.register(v)?
         });
+    }
+    // The rolling-deploy serve path: --artifact FILE additionally binds
+    // a compiled .strumc net. A corrupt or version-skewed artifact fails
+    // HERE, before the server binds — the process dies without printing
+    // `listening on`, which is exactly what the gateway's deploy health
+    // gate keys off.
+    if let Some(path) = args.opt_str("artifact") {
+        anyhow::ensure!(
+            backend == BackendKind::Native,
+            "--artifact is a native-backend serve path"
+        );
+        let compiled =
+            CompiledNet::load(std::path::Path::new(&path)).map_err(anyhow::Error::from)?;
+        let id = &compiled.identity;
+        let key = format!("{}:{}:p{}:{}", id.net, id.method.name(), id.p, backend.name());
+        if router.get(&key).is_some() {
+            // A --variants spec already registered this exact point
+            // from the same weights; the artifact adds nothing.
+            println!("artifact {} matches already-registered {}", path, key);
+        } else {
+            let v = router.register_native_compiled(&key, &compiled)?;
+            println!("registered {} from artifact {} (batches: {:?})", key, path, v.batches());
+            handles.push(engine.register(v)?);
+        }
     }
     println!(
         "serving {} variant(s) on {} shared workers",
@@ -830,6 +907,7 @@ fn serve_wire(args: &Args, fleet: Fleet, listen: &str) -> Result<()> {
         WireServerOptions {
             conn_workers: args.usize("conn-workers", 4),
             telemetry: fleet.telemetry.clone(),
+            fault: fault_plan(args)?,
         },
     )?;
     println!("listening on {}", server.local_addr());
@@ -858,17 +936,236 @@ fn serve_wire(args: &Args, fleet: Fleet, listen: &str) -> Result<()> {
     Ok(())
 }
 
+/// `strum gateway`: supervise a replica fleet behind one wire endpoint.
+/// Children are this same binary running `serve --listen 127.0.0.1:0`;
+/// their ephemeral ports are scraped from stdout, so nothing needs port
+/// coordination. The gateway speaks the identical wire protocol on
+/// `--listen` — clients cannot tell it from a single replica.
+fn cmd_gateway(args: &Args) -> Result<()> {
+    let replicas = args.usize("replicas", 3);
+    let attach: Vec<String> = args
+        .opt_str("attach")
+        .map(|l| {
+            l.split(',')
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+                .map(String::from)
+                .collect()
+        })
+        .unwrap_or_default();
+    let telemetry = match args.opt_str("telemetry-out") {
+        Some(dir) => {
+            let sink = TelemetrySink::open(TelemetryConfig::under(&dir))?;
+            println!("telemetry: JSONL events under {} (run_id {})", dir, sink.run_id());
+            sink
+        }
+        None => TelemetrySink::disabled(),
+    };
+
+    // The supervised-replica launch spec: every pass-through flag the
+    // children need rides in argv; the variants fleet must match across
+    // replicas or routing keys would differ per replica.
+    let spec = if replicas > 0 {
+        let mut cargs: Vec<String> = vec![
+            "serve".into(),
+            "--backend".into(),
+            "native".into(),
+            "--listen".into(),
+            "127.0.0.1:0".into(),
+        ];
+        for flag in ["variants", "net", "workers", "queue-depth", "max-wait-ms", "synth-seed"] {
+            if let Some(v) = args.opt_str(flag) {
+                cargs.push(format!("--{}", flag));
+                cargs.push(v);
+            }
+        }
+        Some(ReplicaSpec {
+            binary: std::env::current_exe()?,
+            args: cargs,
+            env: Vec::new(),
+        })
+    } else {
+        None
+    };
+
+    // --fault-replica IDX:SPEC arms exactly one supervised slot with a
+    // fault plan through its environment (the chaos-smoke hook).
+    let fault_replica = match args.opt_str("fault-replica") {
+        Some(s) => {
+            let (idx, plan) = s
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("--fault-replica wants IDX:SPEC, got '{}'", s))?;
+            let idx: usize = idx
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad replica index '{}' in --fault-replica", idx))?;
+            anyhow::ensure!(idx < replicas, "--fault-replica index {} out of range", idx);
+            // Validate the spec now — a typo should fail the gateway,
+            // not silently arm nothing in the child.
+            FaultPlan::parse(plan)?;
+            Some((idx, plan.to_string()))
+        }
+        None => None,
+    };
+
+    let hedge = if args.flag("hedge") {
+        Some(HedgePolicy::P95)
+    } else {
+        args.opt_str("hedge-ms")
+            .and_then(|s| s.parse::<u64>().ok())
+            .map(HedgePolicy::FixedMs)
+    };
+    let watch = args.opt_str("watch-artifact").map(|p| DeployPolicy {
+        artifact: PathBuf::from(p),
+        replicas: args.usize("deploy-replicas", replicas.max(1)),
+        poll: Duration::from_millis(args.usize("deploy-poll-ms", 500) as u64),
+        health_timeout: Duration::from_secs_f64(args.f64("deploy-timeout-s", 30.0)),
+        probation: Duration::from_secs_f64(args.f64("probation-s", 5.0)),
+        regress_threshold: args.f64("regress-threshold", 0.2),
+        fail_on_rollback: args.flag("fail-on-rollback"),
+    });
+
+    let expected = replicas + attach.len();
+    let gw = Gateway::start(GatewayOptions {
+        replicas,
+        spec,
+        attach,
+        fault_replica,
+        probe_interval: Duration::from_millis(args.usize("probe-interval-ms", 250) as u64),
+        fail_threshold: args.usize("fail-after", 2) as u32,
+        retry: !args.flag("no-retry"),
+        hedge,
+        forward_timeout: Duration::from_secs_f64(args.f64("forward-timeout-s", 10.0)),
+        restart_backoff_base: Duration::from_millis(
+            args.usize("restart-backoff-ms", 100) as u64
+        ),
+        restart_backoff_cap: Duration::from_secs(5),
+        watch,
+        telemetry: telemetry.clone(),
+    })?;
+
+    // Gate the front-end on fleet health: a client connecting the
+    // moment the address prints must find routable replicas (loadgen's
+    // first act is a metrics probe that needs a healthy upstream).
+    let boot_wait = Duration::from_secs_f64(args.f64("boot-timeout-s", 60.0));
+    if !gw.wait_healthy(expected, boot_wait) {
+        let healthy = gw.snapshot().healthy();
+        anyhow::ensure!(
+            healthy > 0,
+            "no replica became healthy within {:?}",
+            boot_wait
+        );
+        println!(
+            "warning: only {}/{} replicas healthy after {:?}; serving anyway",
+            healthy, expected, boot_wait
+        );
+    }
+
+    let server = WireServer::bind_handler(
+        args.str("listen", "127.0.0.1:0"),
+        gw.handler(),
+        WireServerOptions {
+            conn_workers: args.usize("conn-workers", 4),
+            telemetry: telemetry.clone(),
+            fault: fault_plan(args)?,
+        },
+    )?;
+    println!(
+        "gateway listening on {} fronting {} replica(s)",
+        server.local_addr(),
+        expected
+    );
+
+    let duration = args.f64("duration-s", 0.0);
+    if duration <= 0.0 {
+        println!("serving until killed (pass --duration-s N for a bounded run)");
+    }
+    let t0 = Instant::now();
+    loop {
+        if duration > 0.0 && t0.elapsed() >= Duration::from_secs_f64(duration) {
+            break;
+        }
+        if gw.rollback_fired() {
+            println!("gateway: deploy rolled back under --fail-on-rollback; shutting down");
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    let stats = server.stats();
+    server.shutdown();
+    let failed = gw.rollback_fired();
+    let view = gw.snapshot();
+    gw.shutdown();
+    println!("{}", view.render());
+    println!(
+        "wire: connections={} requests={} shed_presubmit={} protocol_errors={}",
+        stats.connections, stats.requests, stats.shed_presubmit, stats.protocol_errors
+    );
+    if let Some(path) = args.opt_str("metrics-out") {
+        std::fs::write(&path, view.to_json().to_string_pretty())?;
+        println!("wrote {}", path);
+    }
+    telemetry.flush();
+    anyhow::ensure!(!failed, "deploy rolled back (--fail-on-rollback)");
+    Ok(())
+}
+
+/// One replica row parsed out of the gateway's fleet metrics.
+struct ReplicaRow {
+    id: u64,
+    cohort: u64,
+    state: String,
+    served: u64,
+    restarts: u64,
+}
+
+/// Parses the `replicas` array of a gateway metrics document.
+fn fleet_rows(metrics: &Json) -> Vec<ReplicaRow> {
+    metrics
+        .get("replicas")
+        .and_then(|r| r.as_arr())
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|r| {
+                    Some(ReplicaRow {
+                        id: r.get("id")?.as_usize()? as u64,
+                        cohort: r.get("cohort")?.as_usize()? as u64,
+                        state: r.get("state")?.as_str()?.to_string(),
+                        served: r.get("served")?.as_usize()? as u64,
+                        restarts: r.get("restarts")?.as_usize()? as u64,
+                    })
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn fetch_fleet_metrics(addr: &str) -> Result<Json> {
+    let mut client = WireClient::connect(addr)?;
+    Json::parse(&client.metrics()?)
+        .map_err(|e| anyhow::anyhow!("gateway sent unparseable metrics JSON: {:?}", e))
+}
+
 /// Open-loop wire load generator: Poisson arrivals at `--rate` req/s
 /// split across `--concurrency` connections, each request carrying the
 /// `--deadline-ms` budget. Latency percentiles plus shed/error counts
 /// are printed and written as JSON to `--out` (the `BENCH_wire_serve`
-/// artifact).
+/// artifact). `--target gateway` adds per-replica fleet rows (the
+/// `BENCH_fleet` artifact).
 fn cmd_loadgen(args: &Args) -> Result<()> {
     let addr = args.str("addr", "127.0.0.1:7411");
     let rate = args.f64("rate", 500.0);
     anyhow::ensure!(rate > 0.0, "--rate must be positive");
     let concurrency = args.usize("concurrency", 4).max(1);
     let deadline_ms = args.usize("deadline-ms", 0) as u32;
+    // --target gateway: also snapshot the gateway's fleet metrics before
+    // and after the run, emitting per-replica throughput rows.
+    let target_kind = args.str("target", "server");
+    let gateway_target = match target_kind.as_str() {
+        "gateway" => true,
+        "server" => false,
+        other => anyhow::bail!("unknown --target '{}' (server|gateway)", other),
+    };
     // Artifacts land in --bench-dir (default $STRUM_BENCH_DIR, else .),
     // never unconditionally in the CWD.
     let dir = match args.opt_str("bench-dir") {
@@ -878,7 +1175,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         }
         None => bench_dir(),
     };
-    let out = dir.join(args.str("out", "BENCH_wire_serve.json"));
+    let default_out = if gateway_target {
+        "BENCH_fleet.json"
+    } else {
+        "BENCH_wire_serve.json"
+    };
+    let out = dir.join(args.str("out", default_out));
     let seed = args.usize("seed", 7) as u64;
 
     // Discover the fleet from the server's metrics op: variant keys and
@@ -921,6 +1223,19 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         !targets.is_empty(),
         "no variants to target (server reported none; pass --variants)"
     );
+    if gateway_target {
+        anyhow::ensure!(
+            metrics.get("gateway").and_then(|g| g.as_bool()).unwrap_or(false),
+            "--target gateway, but {} does not report gateway metrics",
+            addr
+        );
+    }
+    // Pre-run per-replica served counts, for throughput deltas.
+    let pre_fleet: Vec<ReplicaRow> = if gateway_target {
+        fleet_rows(&metrics)
+    } else {
+        Vec::new()
+    };
     drop(probe);
 
     // The open-loop arrival schedule: requests fire at their scheduled
@@ -1073,7 +1388,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         pct(99.0),
         lat_max,
     );
-    let json = Json::obj(vec![
+    let mut json = Json::obj(vec![
         ("addr", Json::str(addr.as_str())),
         ("requests", Json::Num(n as f64)),
         ("rate_target", Json::Num(rate)),
@@ -1110,6 +1425,48 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             Json::Arr(targets.iter().map(|(k, _)| Json::str(k.as_str())).collect()),
         ),
     ]);
+    if gateway_target {
+        match fetch_fleet_metrics(&addr) {
+            Ok(post) => {
+                let rows = fleet_rows(&post);
+                let pre_served =
+                    |id: u64| pre_fleet.iter().find(|r| r.id == id).map(|r| r.served).unwrap_or(0);
+                println!("fleet (per-replica over this run):");
+                let mut row_json = Vec::new();
+                for r in &rows {
+                    let delta = r.served.saturating_sub(pre_served(r.id));
+                    let rps = delta as f64 / wall.max(1e-9);
+                    println!(
+                        "  replica id={} cohort={} state={} served={} thrpt={:.1} req/s restarts={}",
+                        r.id, r.cohort, r.state, delta, rps, r.restarts
+                    );
+                    row_json.push(Json::obj(vec![
+                        ("id", Json::Num(r.id as f64)),
+                        ("cohort", Json::Num(r.cohort as f64)),
+                        ("state", Json::str(r.state.as_str())),
+                        ("served", Json::Num(delta as f64)),
+                        ("throughput_rps", Json::Num(rps)),
+                        ("restarts", Json::Num(r.restarts as f64)),
+                    ]));
+                }
+                let counter = |k: &str| post.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let fleet_obj = Json::obj(vec![
+                    ("replicas", Json::Arr(row_json)),
+                    ("retries", Json::Num(counter("retries"))),
+                    ("hedges", Json::Num(counter("hedges"))),
+                    ("hedge_wins", Json::Num(counter("hedge_wins"))),
+                    ("upstream_errors", Json::Num(counter("upstream_errors"))),
+                    ("deploys", Json::Num(counter("deploys"))),
+                    ("rollbacks", Json::Num(counter("rollbacks"))),
+                    ("active_cohort", Json::Num(counter("active_cohort"))),
+                ]);
+                if let Json::Obj(map) = &mut json {
+                    map.insert("fleet".to_string(), fleet_obj);
+                }
+            }
+            Err(e) => println!("warning: post-run fleet metrics unavailable: {:#}", e),
+        }
+    }
     std::fs::write(&out, json.to_string_pretty())?;
     println!("wrote {}", out.display());
 

@@ -1,18 +1,31 @@
 //! Wire client: typed request/response calls over one cached TCP
-//! connection, with lazy connect and one transparent reconnect retry.
+//! connection, with lazy connect, bounded reconnect backoff, and one
+//! transparent in-call retry.
 //!
 //! Server-side refusals (queue full, deadline shed, unknown variant, …)
 //! are *data*, not errors: they come back as
 //! [`WireResponse::Error`] with a typed [`ErrorCode`], so a load
 //! generator can count sheds without string-matching. Transport and
-//! protocol failures are `anyhow` errors.
+//! protocol failures are `anyhow` errors wrapping a typed
+//! [`WireCallError`] that carries the connect-attempt count — a caller
+//! (the gateway's health checker, the router's failover path) can
+//! distinguish "transient blip, first dial succeeded on retry" from
+//! "dead: every backoff attempt refused".
+//!
+//! Connect semantics: a dial that fails is retried up to
+//! [`WireClient::with_connect_attempts`] times with capped exponential
+//! backoff and multiplicative jitter (via [`crate::util::prng`], so
+//! replicas restarted en masse don't re-dial in lockstep).
 //!
 //! Retry semantics: a call that fails on a *reused* connection is
 //! retried once on a fresh one (the cached socket may have idled out);
 //! a call that fails on a fresh connection is reported. Inference is
 //! idempotent, so the rare double-execute a retry can cause is safe.
+//! A read **timeout** is terminal and never retried — the server may
+//! still be executing the request.
 
 use super::proto::{self, ErrorCode, ProtoError, Request, Response};
+use crate::util::prng::Rng;
 use std::io;
 use std::net::TcpStream;
 use std::time::Duration;
@@ -22,6 +35,15 @@ use std::time::Duration;
 /// the pool) produces a typed transport error here, never an indefinite
 /// hang, honoring the "shed or fail, never hang" contract end to end.
 pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Default dial attempts per call (first try + backed-off retries).
+pub const DEFAULT_CONNECT_ATTEMPTS: u32 = 3;
+
+/// First backoff step; doubles per attempt, jittered ×[0.5, 1.5).
+const BACKOFF_BASE: Duration = Duration::from_millis(20);
+
+/// Backoff ceiling.
+const BACKOFF_CAP: Duration = Duration::from_secs(2);
 
 /// One successful wire inference.
 #[derive(Debug, Clone)]
@@ -61,20 +83,68 @@ impl WireResponse {
     }
 }
 
+/// A transport/protocol failure with its retry history attached.
+/// Surfaced through `anyhow` (downcast to inspect): `connect_attempts`
+/// tells a supervisor whether the peer answered the dial at all, and
+/// `timed_out` marks the one failure mode a caller must never blindly
+/// re-submit (the request may still be executing server-side).
+#[derive(Debug)]
+pub struct WireCallError {
+    pub addr: String,
+    /// TCP dials performed across the whole call (0 when a cached
+    /// connection failed mid-call without any redial).
+    pub connect_attempts: u32,
+    /// The call died waiting on a reply, not dialing or writing.
+    pub timed_out: bool,
+    pub detail: String,
+}
+
+impl std::fmt::Display for WireCallError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.timed_out {
+            write!(
+                f,
+                "wire call to {} timed out ({}); not retried — the server may still be executing",
+                self.addr, self.detail
+            )
+        } else {
+            write!(
+                f,
+                "wire call to {} failed after {} connect attempt(s): {}",
+                self.addr, self.connect_attempts, self.detail
+            )
+        }
+    }
+}
+
+impl std::error::Error for WireCallError {}
+
 /// Client for the `strum` wire protocol.
 pub struct WireClient {
     addr: String,
     stream: Option<TcpStream>,
     read_timeout: Duration,
+    connect_attempts: u32,
+    rng: Rng,
 }
 
 impl WireClient {
     /// Lazy client: connects on first call.
     pub fn new(addr: impl Into<String>) -> WireClient {
+        let addr = addr.into();
+        // Deterministic per-address jitter stream: two clients dialing
+        // the same restarted replica still de-correlate because each
+        // process mixes its own pid in.
+        let mut seed = 0xcbf29ce484222325u64 ^ (std::process::id() as u64);
+        for b in addr.bytes() {
+            seed = (seed ^ b as u64).wrapping_mul(0x100000001b3);
+        }
         WireClient {
-            addr: addr.into(),
+            addr,
             stream: None,
             read_timeout: DEFAULT_READ_TIMEOUT,
+            connect_attempts: DEFAULT_CONNECT_ATTEMPTS,
+            rng: Rng::new(seed),
         }
     }
 
@@ -86,11 +156,22 @@ impl WireClient {
         self
     }
 
-    /// Eager client: fails fast if the server is unreachable.
+    /// Overrides the dial attempts per call (floored at 1). Routers use
+    /// 1: on a fleet, failing over to another replica beats waiting out
+    /// a backoff against a dead one.
+    pub fn with_connect_attempts(mut self, attempts: u32) -> WireClient {
+        self.connect_attempts = attempts.max(1);
+        self
+    }
+
+    /// Eager client: fails fast if the server is unreachable (single
+    /// dial, no backoff — backoff applies to calls, where the caller
+    /// has expressed intent to wait).
     pub fn connect(addr: impl Into<String>) -> crate::Result<WireClient> {
-        let mut c = WireClient::new(addr);
+        let mut c = WireClient::new(addr).with_connect_attempts(1);
         c.ensure()
             .map_err(|e| anyhow::anyhow!("connect to {} failed: {}", c.addr, e))?;
+        c.connect_attempts = DEFAULT_CONNECT_ATTEMPTS;
         Ok(c)
     }
 
@@ -103,23 +184,48 @@ impl WireClient {
         self.stream = None;
     }
 
-    fn ensure(&mut self) -> io::Result<()> {
-        if self.stream.is_none() {
-            let s = TcpStream::connect(&self.addr)?;
-            let _ = s.set_nodelay(true);
-            let _ = s.set_read_timeout(Some(self.read_timeout));
-            let _ = s.set_write_timeout(Some(self.read_timeout));
-            self.stream = Some(s);
+    /// Backoff before dial `attempt` (1-based; attempt 0 dials
+    /// immediately): `BACKOFF_BASE · 2^(attempt-1)`, jittered
+    /// ×[0.5, 1.5), capped at [`BACKOFF_CAP`].
+    fn backoff(&mut self, attempt: u32) -> Duration {
+        let exp = BACKOFF_BASE.saturating_mul(1u32 << (attempt - 1).min(16));
+        let jitter = 0.5 + self.rng.f64();
+        exp.mul_f64(jitter).min(BACKOFF_CAP)
+    }
+
+    /// Ensures a live connection, dialing with bounded backoff. Returns
+    /// the number of dials performed (0 = cached connection reused).
+    fn ensure(&mut self) -> io::Result<u32> {
+        if self.stream.is_some() {
+            return Ok(0);
         }
-        Ok(())
+        let mut last = None;
+        for attempt in 0..self.connect_attempts {
+            if attempt > 0 {
+                let pause = self.backoff(attempt);
+                std::thread::sleep(pause);
+            }
+            match TcpStream::connect(&self.addr) {
+                Ok(s) => {
+                    let _ = s.set_nodelay(true);
+                    let _ = s.set_read_timeout(Some(self.read_timeout));
+                    let _ = s.set_write_timeout(Some(self.read_timeout));
+                    self.stream = Some(s);
+                    return Ok(attempt + 1);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.expect("connect_attempts floored at 1"))
     }
 
     fn call(&mut self, payload: &[u8]) -> crate::Result<Response> {
+        let mut dials = 0u32;
         for attempt in 0..2u8 {
             let reused = self.stream.is_some();
             let mut timed_out = false;
             let result = (|| -> Result<Response, ProtoError> {
-                self.ensure()?;
+                dials += self.ensure()?;
                 let s = self.stream.as_mut().expect("ensure just connected");
                 proto::write_frame(s, payload)?;
                 let frame = proto::read_frame_poll(s, || {
@@ -140,12 +246,12 @@ impl WireClient {
                     // re-submitting would double the offered load
                     // exactly when the server is saturated.
                     if timed_out {
-                        return Err(anyhow::anyhow!(
-                            "wire call to {} timed out after {:?} (server saturated, \
-                             stalled, or unreachable mid-call)",
-                            self.addr,
-                            self.read_timeout
-                        ));
+                        return Err(anyhow::Error::new(WireCallError {
+                            addr: self.addr.clone(),
+                            connect_attempts: dials,
+                            timed_out: true,
+                            detail: format!("no reply within {:?}", self.read_timeout),
+                        }));
                     }
                     // Retry once only for a stale cached connection
                     // (idled out / server-side drop between calls).
@@ -154,7 +260,12 @@ impl WireClient {
                     if attempt == 0 && reused && retryable {
                         continue;
                     }
-                    return Err(anyhow::anyhow!("wire call to {} failed: {}", self.addr, e));
+                    return Err(anyhow::Error::new(WireCallError {
+                        addr: self.addr.clone(),
+                        connect_attempts: dials,
+                        timed_out: false,
+                        detail: e.to_string(),
+                    }));
                 }
             }
         }

@@ -1,6 +1,11 @@
-//! Per-connection request loop: framed read → deadline stamp → engine
-//! submit → framed reply, one request at a time per connection
+//! Per-connection request loop: framed read → deadline stamp → handler
+//! dispatch → framed reply, one request at a time per connection
 //! (pipelining safety comes from the strict request/response ordering).
+//!
+//! The loop is handler-agnostic ([`WireHandler`]): the engine answers
+//! requests locally; the gateway answers them by routing to replicas.
+//! This module also implements [`WireHandler`] for [`Engine`] — the
+//! deadline-propagation logic below is that implementation.
 //!
 //! Deadline propagation: the absolute deadline is derived from the
 //! frame's *arrival instant* plus the client's relative budget. From
@@ -10,9 +15,15 @@
 //! before execution), or at the wait (`DeadlineExpired` — the reply
 //! missed the budget; the engine may still finish it, but nobody is
 //! listening). None of the three can hang the connection.
+//!
+//! Graceful drain: a read aborted by the stop flag answers a typed
+//! `ShuttingDown` frame before closing, so a peer that was between
+//! requests learns the server is gone from a *frame*, not from a reset
+//! socket (see the module-level "Failure model").
 
+use super::fault::FaultState;
 use super::proto::{self, ErrorCode, ProtoError, Request, Response};
-use super::ServerStats;
+use super::{ServerStats, WireHandler};
 use crate::coordinator::{Engine, ReplyError};
 use std::io;
 use std::net::TcpStream;
@@ -30,15 +41,29 @@ const READ_POLL: Duration = Duration::from_millis(100);
 /// next call.
 const CONN_READ_DEADLINE: Duration = Duration::from_secs(60);
 
+/// Writes the one-frame `ShuttingDown` refusal used everywhere a
+/// connection is turned away during drain (acceptor race, backlog
+/// drain, idle reads aborted by the stop flag).
+pub(crate) fn write_refusal(w: &mut impl io::Write) -> io::Result<()> {
+    proto::write_frame(
+        w,
+        &proto::encode_response(&Response::Error {
+            code: ErrorCode::ShuttingDown,
+            detail: "server is draining".into(),
+        }),
+    )
+}
+
 /// Serves one connection to completion. Returns the number of framed
 /// requests answered (for the `conn_closed` telemetry event) when the
 /// peer closes, the stream breaks, a protocol error is answered, or the
 /// server stops.
 pub(crate) fn serve_conn(
     mut stream: TcpStream,
-    engine: &Engine,
+    handler: &dyn WireHandler,
     stats: &ServerStats,
     stopping: &AtomicBool,
+    fault: Option<&FaultState>,
 ) -> u64 {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(READ_POLL));
@@ -50,13 +75,24 @@ pub(crate) fn serve_conn(
         // stalled past the deadline (those bytes could not be answered
         // in time anyway).
         let wait_started = Instant::now();
+        let mut stop_abort = false;
         let read = proto::read_frame_poll(&mut stream, || {
-            stopping.load(Ordering::Acquire) || wait_started.elapsed() >= CONN_READ_DEADLINE
+            if stopping.load(Ordering::Acquire) {
+                stop_abort = true;
+                return true;
+            }
+            wait_started.elapsed() >= CONN_READ_DEADLINE
         });
         let payload = match read {
             Ok(Some(p)) => p,
-            // Clean EOF or a drained stop — nothing to answer.
-            Ok(None) => return served,
+            Ok(None) => {
+                // A drained stop gets a typed refusal; a clean peer EOF
+                // gets nothing (there is nobody left to read it).
+                if stop_abort {
+                    let _ = write_refusal(&mut stream);
+                }
+                return served;
+            }
             Err(ProtoError::FrameTooLarge { len }) => {
                 stats.record_protocol_error();
                 let _ = respond(
@@ -90,23 +126,53 @@ pub(crate) fn serve_conn(
                 return served;
             }
         };
-        let resp = match req {
-            Request::Metrics => {
-                Response::MetricsJson(engine.metrics().to_json().to_string_pretty())
-            }
+        // Fault injection applies to infer requests only: metrics
+        // probes stay truthful so health checkers see an accurate view
+        // of a replica that is misbehaving at the request layer.
+        let action = match (&req, fault) {
+            (Request::Infer { .. }, Some(f)) => f.next_action(),
+            _ => Default::default(),
+        };
+        if matches!(req, Request::Infer { .. }) {
+            stats.record_request();
+        }
+        let resp = handler.handle(req, arrived, stats);
+        if let Some(d) = action.delay {
+            std::thread::sleep(d);
+        }
+        if action.kill {
+            eprintln!("fault: kill-after tripped, exiting");
+            std::process::exit(super::fault::FAULT_KILL_EXIT);
+        }
+        if action.drop_conn {
+            return served;
+        }
+        let wrote = if action.corrupt {
+            // A garbage frame the peer's decoder must reject — length
+            // prefix valid, payload version byte nonsense.
+            proto::write_frame(&mut stream, &[0xFF, 0xFF, 0xFF, 0xFF])
+        } else {
+            respond(&mut stream, &resp)
+        };
+        if wrote.is_err() {
+            return served;
+        }
+        served += 1;
+    }
+}
+
+/// The engine is the canonical wire handler: requests are answered by
+/// local inference through the multi-variant queue.
+impl WireHandler for Engine {
+    fn handle(&self, req: Request, arrived: Instant, stats: &ServerStats) -> Response {
+        match req {
+            Request::Metrics => Response::MetricsJson(self.metrics().to_json().to_string_pretty()),
             Request::Infer {
                 key,
                 deadline_budget_ms,
                 image,
-            } => {
-                stats.record_request();
-                handle_infer(engine, stats, &key, image, deadline_budget_ms, arrived)
-            }
-        };
-        if respond(&mut stream, &resp).is_err() {
-            return served;
+            } => handle_infer(self, stats, &key, image, deadline_budget_ms, arrived),
         }
-        served += 1;
     }
 }
 
@@ -179,4 +245,23 @@ fn handle_infer(
 
 fn respond(stream: &mut TcpStream, resp: &Response) -> io::Result<()> {
     proto::write_frame(stream, &proto::encode_response(resp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refusal_is_one_typed_shutting_down_frame() {
+        let mut buf = Vec::new();
+        write_refusal(&mut buf).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        let payload = proto::read_frame(&mut r).unwrap().expect("one frame");
+        match proto::decode_response(&payload).unwrap() {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::ShuttingDown),
+            other => panic!("expected a typed refusal, got {:?}", other),
+        }
+        // Nothing after the refusal frame.
+        assert!(proto::read_frame(&mut r).unwrap().is_none());
+    }
 }

@@ -35,12 +35,43 @@
 //! shutdown begins. Engine-level request events (done/shed/rejected,
 //! batches, gauges) come from the engine's own instrumentation — the
 //! two layers share one `run_id` because they share one sink.
+//!
+//! ## Failure model
+//!
+//! What a peer can observe from this server, and what each observation
+//! licenses it to do:
+//!
+//! - **Logits frame** — the request executed exactly once. Terminal.
+//! - **Typed refusal frame** ([`ErrorCode`]) — the request was *not*
+//!   executed (shed family, `QueueFull`, `ShuttingDown`, `Expired`) or
+//!   failed in a way retrying elsewhere can help
+//!   (`Shed`/`DeadlineExpired` on another, less-loaded replica).
+//!   Application errors (`BadImage`, `UnknownVariant`, `BadFrame`,
+//!   `Batch`) are deterministic: retrying them anywhere yields the same
+//!   answer, so upstream routers must *not* retry those.
+//! - **Connection error before any response byte** — the request may or
+//!   may not have been read, but no reply was committed; inference is
+//!   idempotent, so one bounded retry is safe.
+//! - **Read timeout mid-call** — the server may still be executing;
+//!   blind retry doubles offered load exactly when the server is
+//!   saturated. [`WireClient`] treats this as terminal.
+//!
+//! Graceful drain strengthens the first two: every connection accepted
+//! before `shutdown()` gets either a real answer or a typed
+//! `ShuttingDown` refusal — including connections that race the stop
+//! flag in the acceptor or sit unread in a worker's queue. Sockets
+//! still in the kernel backlog when the listener closes are reset,
+//! which peers see as a connection error (retriable, nothing
+//! processed). A [`fault::FaultPlan`] can inject crashes, drops,
+//! delays, and corrupt frames to prove supervisors survive each case.
 
 pub mod client;
 mod conn;
+pub mod fault;
 pub mod proto;
 
-pub use client::{WireClient, WireInfer, WireResponse};
+pub use client::{WireCallError, WireClient, WireInfer, WireResponse};
+pub use fault::{FaultPlan, FaultState};
 pub use proto::{ErrorCode, ProtoError};
 
 use crate::coordinator::Engine;
@@ -49,7 +80,18 @@ use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Answers decoded wire requests. The [`Engine`] is the canonical
+/// implementation (local inference); the gateway implements it to
+/// route requests across a replica fleet — both reuse the same
+/// acceptor/worker/drain/fault machinery by construction.
+pub trait WireHandler: Send + Sync + 'static {
+    /// Answers one request. `arrived` is the instant the request frame
+    /// finished reading — deadline budgets count down from it.
+    fn handle(&self, req: proto::Request, arrived: Instant, stats: &ServerStats)
+        -> proto::Response;
+}
 
 /// Server tunables.
 #[derive(Debug, Clone)]
@@ -60,6 +102,9 @@ pub struct WireServerOptions {
     /// Structured-event sink for connection lifecycle events; share the
     /// engine's sink so both layers log under one `run_id`.
     pub telemetry: TelemetrySink,
+    /// Deliberate misbehaviour for chaos tests ([`fault`]); `None` (the
+    /// default) injects nothing.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for WireServerOptions {
@@ -67,6 +112,7 @@ impl Default for WireServerOptions {
         WireServerOptions {
             conn_workers: 4,
             telemetry: TelemetrySink::disabled(),
+            fault: None,
         }
     }
 }
@@ -118,15 +164,16 @@ pub struct ServerStatsSnapshot {
 }
 
 struct ServerShared {
-    engine: Arc<Engine>,
+    handler: Arc<dyn WireHandler>,
     queue: Mutex<VecDeque<TcpStream>>,
     cv: Condvar,
     stopping: AtomicBool,
     stats: ServerStats,
     telemetry: TelemetrySink,
+    fault: Option<FaultState>,
 }
 
-/// Blocking TCP front-end over a shared [`Engine`].
+/// Blocking TCP front-end over a [`WireHandler`] (usually an [`Engine`]).
 pub struct WireServer {
     addr: SocketAddr,
     shared: Arc<ServerShared>,
@@ -143,15 +190,26 @@ impl WireServer {
         engine: Arc<Engine>,
         opts: WireServerOptions,
     ) -> crate::Result<WireServer> {
+        WireServer::bind_handler(addr, engine, opts)
+    }
+
+    /// [`bind`](WireServer::bind) for any [`WireHandler`] — the gateway
+    /// front-end mounts its router here.
+    pub fn bind_handler(
+        addr: &str,
+        handler: Arc<impl WireHandler>,
+        opts: WireServerOptions,
+    ) -> crate::Result<WireServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let shared = Arc::new(ServerShared {
-            engine,
+            handler,
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             stopping: AtomicBool::new(false),
             stats: ServerStats::default(),
             telemetry: opts.telemetry.clone(),
+            fault: opts.fault.filter(|p| !p.is_empty()).map(FaultState::new),
         });
         let workers = opts.conn_workers.max(1);
         let mut threads = Vec::with_capacity(workers + 1);
@@ -233,7 +291,14 @@ fn accept_loop(listener: &TcpListener, sh: &ServerShared) {
         match listener.accept() {
             Ok((stream, _)) => {
                 if sh.stopping.load(Ordering::Acquire) {
-                    // The shutdown wake-up (or a straggler) — drop it.
+                    // Raced the stop flag: this is the shutdown wake-up
+                    // or a real straggler that connected in the same
+                    // tick. A straggler must get a typed `ShuttingDown`
+                    // frame, not a silently dropped socket — and so
+                    // must anything already sitting in the kernel
+                    // accept backlog behind it.
+                    refuse_conn(stream);
+                    drain_backlog(listener);
                     return;
                 }
                 sh.stats.record_connection();
@@ -249,6 +314,25 @@ fn accept_loop(listener: &TcpListener, sh: &ServerShared) {
                 std::thread::sleep(Duration::from_millis(10));
             }
         }
+    }
+}
+
+/// Answers a connection the server can no longer serve with one typed
+/// `ShuttingDown` frame (best-effort, bounded) and closes it.
+fn refuse_conn(mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let _ = conn::write_refusal(&mut stream);
+}
+
+/// Empties the kernel accept backlog at shutdown, refusing each pending
+/// connection with a typed frame instead of leaving it to be reset when
+/// the listener closes.
+fn drain_backlog(listener: &TcpListener) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    while let Ok((stream, _)) = listener.accept() {
+        refuse_conn(stream);
     }
 }
 
@@ -272,7 +356,13 @@ fn conn_worker(sh: &ServerShared) {
             .map(|a| a.to_string())
             .unwrap_or_else(|_| "unknown".to_string());
         sh.telemetry.emit(Event::ConnOpened { peer: peer.clone() });
-        let served = conn::serve_conn(stream, &sh.engine, &sh.stats, &sh.stopping);
+        let served = conn::serve_conn(
+            stream,
+            &*sh.handler,
+            &sh.stats,
+            &sh.stopping,
+            sh.fault.as_ref(),
+        );
         sh.telemetry.emit(Event::ConnClosed {
             peer,
             requests: served,

@@ -56,7 +56,9 @@ pub const OP_METRICS_JSON: u8 = 0x83;
 
 /// Typed wire error codes. `1..=5` mirror [`SubmitError`]; `6..=8` are
 /// the three deadline-shed stages (door / queue / wait); `9` is a
-/// backend execution failure; `10` a malformed frame.
+/// backend execution failure; `10` a malformed frame; `11` is a
+/// gateway-level refusal (no healthy upstream replica, or the bounded
+/// retry budget was exhausted without a definitive answer).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ErrorCode {
     QueueFull = 1,
@@ -74,6 +76,8 @@ pub enum ErrorCode {
     Batch = 9,
     /// The request frame could not be decoded.
     BadFrame = 10,
+    /// The gateway could not reach a healthy upstream replica.
+    Upstream = 11,
 }
 
 impl ErrorCode {
@@ -93,6 +97,7 @@ impl ErrorCode {
             8 => ErrorCode::DeadlineExpired,
             9 => ErrorCode::Batch,
             10 => ErrorCode::BadFrame,
+            11 => ErrorCode::Upstream,
             _ => return None,
         })
     }
@@ -130,6 +135,7 @@ impl ErrorCode {
             ErrorCode::DeadlineExpired => "deadline_expired",
             ErrorCode::Batch => "batch_failed",
             ErrorCode::BadFrame => "bad_frame",
+            ErrorCode::Upstream => "upstream",
         }
     }
 }
@@ -653,11 +659,12 @@ mod tests {
             ErrorCode::DeadlineExpired,
             ErrorCode::Batch,
             ErrorCode::BadFrame,
+            ErrorCode::Upstream,
         ] {
             assert_eq!(ErrorCode::from_u8(code.as_u8()), Some(code));
         }
         assert_eq!(ErrorCode::from_u8(0), None);
-        assert_eq!(ErrorCode::from_u8(11), None);
+        assert_eq!(ErrorCode::from_u8(12), None);
         assert!(ErrorCode::Expired.is_shed());
         assert!(ErrorCode::Shed.is_shed());
         assert!(ErrorCode::DeadlineExpired.is_shed());

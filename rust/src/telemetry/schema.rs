@@ -102,6 +102,48 @@ pub enum Event {
         workers: usize,
         variants: Vec<GaugeRow>,
     },
+    /// The gateway supervisor spawned (or respawned) a replica process
+    /// and scraped its listen address.
+    ReplicaSpawned {
+        id: u64,
+        cohort: u64,
+        addr: String,
+        pid: u32,
+    },
+    /// A supervised replica process exited (crash, fault-plan kill, or
+    /// drain); `exit_code` is absent when the process died to a signal.
+    ReplicaDied {
+        id: u64,
+        cohort: u64,
+        exit_code: Option<i64>,
+        restarts: u64,
+    },
+    /// The supervisor scheduled a crashed replica's restart after a
+    /// backoff pause.
+    ReplicaRestarted {
+        id: u64,
+        cohort: u64,
+        restarts: u64,
+        backoff_ms: u64,
+    },
+    /// A rolling deploy began: a new artifact version was observed and
+    /// a fresh cohort of replicas is coming up.
+    DeployStarted { cohort: u64, version: String },
+    /// The new cohort survived probation and owns the traffic.
+    DeployCompleted { cohort: u64, version: String },
+    /// The new cohort regressed (or never became healthy) and traffic
+    /// returned to the previous cohort.
+    DeployRolledBack {
+        cohort: u64,
+        version: String,
+        reason: String,
+    },
+    /// The gateway router retried a request on another replica after a
+    /// shed or connection failure.
+    RouteRetry { key: Arc<str>, reason: String },
+    /// The gateway fired a tail hedge; `win` marks whether the hedge's
+    /// reply beat the primary's.
+    HedgeFired { key: Arc<str>, win: bool },
 }
 
 impl Event {
@@ -118,6 +160,14 @@ impl Event {
             Event::ConnClosed { .. } => "conn_closed",
             Event::ServerDrain { .. } => "server_drain",
             Event::EngineGauges { .. } => "engine_gauges",
+            Event::ReplicaSpawned { .. } => "replica_spawned",
+            Event::ReplicaDied { .. } => "replica_died",
+            Event::ReplicaRestarted { .. } => "replica_restarted",
+            Event::DeployStarted { .. } => "deploy_started",
+            Event::DeployCompleted { .. } => "deploy_completed",
+            Event::DeployRolledBack { .. } => "deploy_rolled_back",
+            Event::RouteRetry { .. } => "route_retry",
+            Event::HedgeFired { .. } => "hedge_fired",
         }
     }
 
@@ -237,6 +287,67 @@ impl Event {
                     ),
                 ));
             }
+            Event::ReplicaSpawned {
+                id,
+                cohort,
+                addr,
+                pid,
+            } => {
+                fields.push(("id", Json::Num(*id as f64)));
+                fields.push(("cohort", Json::Num(*cohort as f64)));
+                fields.push(("addr", Json::str(addr.as_str())));
+                fields.push(("pid", Json::Num(*pid as f64)));
+            }
+            Event::ReplicaDied {
+                id,
+                cohort,
+                exit_code,
+                restarts,
+            } => {
+                fields.push(("id", Json::Num(*id as f64)));
+                fields.push(("cohort", Json::Num(*cohort as f64)));
+                fields.push((
+                    "exit_code",
+                    match exit_code {
+                        Some(c) => Json::Num(*c as f64),
+                        None => Json::Null,
+                    },
+                ));
+                fields.push(("restarts", Json::Num(*restarts as f64)));
+            }
+            Event::ReplicaRestarted {
+                id,
+                cohort,
+                restarts,
+                backoff_ms,
+            } => {
+                fields.push(("id", Json::Num(*id as f64)));
+                fields.push(("cohort", Json::Num(*cohort as f64)));
+                fields.push(("restarts", Json::Num(*restarts as f64)));
+                fields.push(("backoff_ms", Json::Num(*backoff_ms as f64)));
+            }
+            Event::DeployStarted { cohort, version }
+            | Event::DeployCompleted { cohort, version } => {
+                fields.push(("cohort", Json::Num(*cohort as f64)));
+                fields.push(("version", Json::str(version.as_str())));
+            }
+            Event::DeployRolledBack {
+                cohort,
+                version,
+                reason,
+            } => {
+                fields.push(("cohort", Json::Num(*cohort as f64)));
+                fields.push(("version", Json::str(version.as_str())));
+                fields.push(("reason", Json::str(reason.as_str())));
+            }
+            Event::RouteRetry { key, reason } => {
+                fields.push(("key", Json::str(&**key)));
+                fields.push(("reason", Json::str(reason.as_str())));
+            }
+            Event::HedgeFired { key, win } => {
+                fields.push(("key", Json::str(&**key)));
+                fields.push(("win", Json::Bool(*win)));
+            }
         }
         Json::obj(fields)
     }
@@ -268,6 +379,14 @@ const KNOWN_TAGS: &[&str] = &[
     "conn_closed",
     "server_drain",
     "engine_gauges",
+    "replica_spawned",
+    "replica_died",
+    "replica_restarted",
+    "deploy_started",
+    "deploy_completed",
+    "deploy_rolled_back",
+    "route_retry",
+    "hedge_fired",
 ];
 
 /// Parses and validates one JSONL line against the schema: well-formed
@@ -364,6 +483,56 @@ pub fn validate_line(line: &str) -> crate::Result<ParsedLine> {
             );
             None
         }
+        "replica_spawned" => {
+            require_num("id")?;
+            require_num("cohort")?;
+            require_str("addr")?;
+            require_num("pid")?;
+            None
+        }
+        "replica_died" => {
+            require_num("id")?;
+            require_num("cohort")?;
+            require_num("restarts")?;
+            // exit_code may be null (killed by signal); when present it
+            // must be numeric.
+            if let Some(code) = v.get("exit_code") {
+                anyhow::ensure!(
+                    matches!(code, Json::Null | Json::Num(_)),
+                    "replica_died: exit_code must be null or numeric"
+                );
+            }
+            None
+        }
+        "replica_restarted" => {
+            require_num("id")?;
+            require_num("cohort")?;
+            require_num("restarts")?;
+            require_num("backoff_ms")?;
+            None
+        }
+        "deploy_started" | "deploy_completed" => {
+            require_num("cohort")?;
+            require_str("version")?;
+            None
+        }
+        "deploy_rolled_back" => {
+            require_num("cohort")?;
+            require_str("version")?;
+            require_str("reason")?;
+            None
+        }
+        "route_retry" => {
+            require_str("reason")?;
+            Some(require_str("key")?)
+        }
+        "hedge_fired" => {
+            anyhow::ensure!(
+                v.get("win").and_then(|x| x.as_bool()).is_some(),
+                "hedge_fired: missing bool field 'win'"
+            );
+            Some(require_str("key")?)
+        }
         _ => unreachable!("tag checked against KNOWN_TAGS"),
     };
     Ok(ParsedLine {
@@ -440,6 +609,51 @@ mod tests {
                     p99_us: 900.0,
                 }],
             },
+            Event::ReplicaSpawned {
+                id: 1,
+                cohort: 0,
+                addr: "127.0.0.1:41234".into(),
+                pid: 4242,
+            },
+            Event::ReplicaDied {
+                id: 1,
+                cohort: 0,
+                exit_code: Some(113),
+                restarts: 2,
+            },
+            Event::ReplicaDied {
+                id: 2,
+                cohort: 0,
+                exit_code: None,
+                restarts: 0,
+            },
+            Event::ReplicaRestarted {
+                id: 1,
+                cohort: 0,
+                restarts: 3,
+                backoff_ms: 160,
+            },
+            Event::DeployStarted {
+                cohort: 1,
+                version: "mini_cnn_s/fp:deadbeef/enc:1".into(),
+            },
+            Event::DeployCompleted {
+                cohort: 1,
+                version: "mini_cnn_s/fp:deadbeef/enc:1".into(),
+            },
+            Event::DeployRolledBack {
+                cohort: 1,
+                version: "mini_cnn_s/fp:deadbeef/enc:1".into(),
+                reason: "cohort never became healthy".into(),
+            },
+            Event::RouteRetry {
+                key: key(),
+                reason: "shed".into(),
+            },
+            Event::HedgeFired {
+                key: key(),
+                win: true,
+            },
         ];
         for e in events {
             let line = e.to_json("run-abc", 1234).to_string();
@@ -479,6 +693,23 @@ mod tests {
         // Bad shed stage.
         assert!(validate_line(
             r#"{"schema_version":1,"run_id":"r","ts_ms":1,"event":"request_shed","key":"k","stage":"wait"}"#
+        )
+        .is_err());
+        // Gateway events with missing required fields.
+        assert!(validate_line(
+            r#"{"schema_version":1,"run_id":"r","ts_ms":1,"event":"replica_spawned","id":0}"#
+        )
+        .is_err());
+        assert!(validate_line(
+            r#"{"schema_version":1,"run_id":"r","ts_ms":1,"event":"replica_died","id":0,"cohort":0,"restarts":0,"exit_code":"boom"}"#
+        )
+        .is_err());
+        assert!(validate_line(
+            r#"{"schema_version":1,"run_id":"r","ts_ms":1,"event":"deploy_rolled_back","cohort":1,"version":"v"}"#
+        )
+        .is_err());
+        assert!(validate_line(
+            r#"{"schema_version":1,"run_id":"r","ts_ms":1,"event":"hedge_fired","key":"k","win":"yes"}"#
         )
         .is_err());
     }

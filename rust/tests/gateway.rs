@@ -1,0 +1,473 @@
+//! Gateway integration tests — the replica-fleet tier end to end.
+//!
+//! Attach-mode tests mount in-process `WireServer` replicas (fast, no
+//! child processes) under a `Gateway` and drive the full stack: fleet
+//! health probing → shed-aware routing → retry/hedging → typed errors.
+//! Supervised-mode tests spawn the real `strum` binary
+//! (`CARGO_BIN_EXE_strum`) as child replicas: kill-mid-load chaos with
+//! zero client-visible failures, and a corrupt-artifact rolling deploy
+//! that must auto-roll-back.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
+use strum_dpu::backend::{Backend, BackendKind};
+use strum_dpu::coordinator::{BatchPolicy, Engine, EngineOptions, Router, Variant};
+use strum_dpu::gateway::{DeployPolicy, Gateway, GatewayOptions, HedgePolicy, ReplicaSpec};
+use strum_dpu::model::eval::EvalConfig;
+use strum_dpu::model::import::NetWeights;
+use strum_dpu::quant::Method;
+use strum_dpu::server::{
+    ErrorCode, WireClient, WireResponse, WireServer, WireServerOptions,
+};
+use strum_dpu::util::json::Json;
+use strum_dpu::util::prng::Rng;
+
+const IMG: usize = 16;
+const CLASSES: usize = 7;
+
+fn calibrated_weights(seed: u64) -> NetWeights {
+    let mut w = synth_net_weights("mini_cnn_s", IMG, CLASSES, seed).unwrap();
+    let calib: Vec<f32> = {
+        let mut rng = Rng::new(seed ^ 0xA5A5);
+        (0..4 * IMG * IMG * 3).map(|_| rng.f32()).collect()
+    };
+    w.manifest.act_scales = calibrate_act_scales(&w, &calib, 4).unwrap();
+    w
+}
+
+/// One in-process replica serving variant "base" from shared weights.
+fn replica() -> (Arc<Engine>, WireServer, String) {
+    let weights = calibrated_weights(33);
+    let mut router = Router::native();
+    let engine = Arc::new(Engine::start(EngineOptions {
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        ..EngineOptions::default()
+    }));
+    let cfg = EvalConfig::paper(Method::Baseline, 0.0);
+    let v = router.register_native_weights("base", &weights, &cfg).unwrap();
+    engine.register(v).unwrap();
+    let server =
+        WireServer::bind("127.0.0.1:0", engine.clone(), WireServerOptions::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    (engine, server, addr)
+}
+
+fn random_image(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..IMG * IMG * 3).map(|_| rng.f32()).collect()
+}
+
+fn attach_gateway(addrs: Vec<String>, opts: GatewayOptions) -> (Gateway, WireServer, String) {
+    let gw = Gateway::start(GatewayOptions {
+        attach: addrs,
+        probe_interval: Duration::from_millis(50),
+        fail_threshold: 1,
+        ..opts
+    })
+    .unwrap();
+    let front = WireServer::bind_handler(
+        "127.0.0.1:0",
+        gw.handler(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let addr = front.local_addr().to_string();
+    (gw, front, addr)
+}
+
+/// Routing + failover: requests flow through the gateway to healthy
+/// replicas; killing the replica taking the traffic reroutes (one
+/// bounded retry) with zero client-visible errors.
+#[test]
+fn gateway_routes_and_fails_over_on_replica_death() {
+    let (_e0, s0, a0) = replica();
+    let (_e1, s1, a1) = replica();
+    let (gw, front, addr) = attach_gateway(vec![a0, a1], GatewayOptions::default());
+    assert!(gw.wait_healthy(2, Duration::from_secs(10)), "both replicas healthy");
+
+    let mut client = WireClient::connect(&addr).unwrap();
+    let image = random_image(5);
+    for _ in 0..6 {
+        let r = client.infer("base", &image).unwrap().into_infer().unwrap();
+        assert_eq!(r.logits.len(), CLASSES);
+    }
+    // Sequential load always finds zero outstanding, so the lowest-id
+    // replica (id 0) takes every request. Kill exactly that one.
+    s0.shutdown();
+    for _ in 0..6 {
+        let r = client.infer("base", &image).unwrap().into_infer().unwrap();
+        assert_eq!(r.logits.len(), CLASSES);
+    }
+    let view = gw.snapshot();
+    // Either the router hit the dead replica and retried, or the prober
+    // caught it first and routed around — both are correct failover.
+    let r0_unhealthy = view.replicas.iter().any(|r| r.id == 0 && !r.healthy);
+    assert!(
+        view.retries >= 1 || r0_unhealthy,
+        "failover left no trace (retries={}, fleet={:?})",
+        view.retries,
+        view.replicas
+    );
+    assert_eq!(view.upstream_errors, 0, "no request may surface an upstream error");
+    assert_eq!(view.completed(), 12);
+    front.shutdown();
+    s1.shutdown();
+    gw.shutdown();
+}
+
+/// Application errors are deterministic: forwarded verbatim, never
+/// retried on another replica.
+#[test]
+fn gateway_does_not_retry_application_errors() {
+    let (_e0, s0, a0) = replica();
+    let (_e1, s1, a1) = replica();
+    let (gw, front, addr) = attach_gateway(vec![a0, a1], GatewayOptions::default());
+    assert!(gw.wait_healthy(2, Duration::from_secs(10)));
+    let mut client = WireClient::connect(&addr).unwrap();
+    let resp = client.infer("no-such-variant", &random_image(1)).unwrap();
+    assert_eq!(resp.error_code(), Some(ErrorCode::UnknownVariant));
+    let resp = client.infer("base", &[0.0f32; 3]).unwrap();
+    assert_eq!(resp.error_code(), Some(ErrorCode::BadImage));
+    assert_eq!(gw.snapshot().retries, 0, "app errors must not be retried");
+    front.shutdown();
+    s0.shutdown();
+    s1.shutdown();
+    gw.shutdown();
+}
+
+/// With no healthy replica the client gets a typed Upstream refusal —
+/// not a hang, not a dropped connection.
+#[test]
+fn gateway_with_no_healthy_replica_returns_typed_upstream() {
+    // An address nothing listens on: the replica never becomes healthy
+    // (attached replicas start unroutable until a probe succeeds).
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        format!("127.0.0.1:{}", l.local_addr().unwrap().port())
+    };
+    let (gw, front, addr) = attach_gateway(vec![dead], GatewayOptions::default());
+    let mut client = WireClient::connect(&addr).unwrap();
+    let resp = client.infer("base", &random_image(1)).unwrap();
+    assert_eq!(resp.error_code(), Some(ErrorCode::Upstream));
+    assert!(gw.snapshot().upstream_errors >= 1);
+    front.shutdown();
+    gw.shutdown();
+}
+
+/// The gateway's metrics op reports fleet rows plus a variants
+/// passthrough, so `strum loadgen` discovers keys exactly as it would
+/// from a single replica.
+#[test]
+fn gateway_metrics_report_fleet_and_variant_passthrough() {
+    let (_e0, s0, a0) = replica();
+    let (gw, front, addr) = attach_gateway(vec![a0], GatewayOptions::default());
+    assert!(gw.wait_healthy(1, Duration::from_secs(10)));
+    let mut client = WireClient::connect(&addr).unwrap();
+    client.infer("base", &random_image(3)).unwrap().into_infer().unwrap();
+    let metrics = Json::parse(&client.metrics().unwrap()).unwrap();
+    assert_eq!(metrics.get("gateway").and_then(|g| g.as_bool()), Some(true));
+    let variants = metrics.get("variants").unwrap().as_arr().unwrap();
+    assert_eq!(variants[0].get("key").unwrap().as_str().unwrap(), "base");
+    assert_eq!(variants[0].get("img").unwrap().as_usize().unwrap(), IMG);
+    let replicas = metrics.get("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(replicas.len(), 1);
+    assert_eq!(replicas[0].get("state").unwrap().as_str().unwrap(), "up");
+    assert_eq!(replicas[0].get("served").unwrap().as_usize().unwrap(), 1);
+    front.shutdown();
+    s0.shutdown();
+    gw.shutdown();
+}
+
+// ---------------------------------------------------------------- hedging
+
+/// Backend with a configurable service time (for hedge determinism).
+struct SlowBackend {
+    delay: Duration,
+    sizes: Vec<usize>,
+}
+
+impl Backend for SlowBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+    fn net(&self) -> &str {
+        "slow"
+    }
+    fn classes(&self) -> usize {
+        CLASSES
+    }
+    fn img(&self) -> usize {
+        IMG
+    }
+    fn batch_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+    fn pick_batch(&self, n: usize) -> usize {
+        n.max(1)
+    }
+    fn infer_batch(&self, _images: Vec<f32>, batch: usize) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        Ok(vec![0.0; batch * CLASSES])
+    }
+}
+
+fn slow_replica(delay: Duration) -> (Arc<Engine>, WireServer, String) {
+    let engine = Arc::new(Engine::start(EngineOptions {
+        workers: 1,
+        max_wait: Duration::ZERO,
+        ..EngineOptions::default()
+    }));
+    let variant = Arc::new(Variant {
+        key: "slow".to_string(),
+        net: "slow".to_string(),
+        classes: CLASSES,
+        img: IMG,
+        backend: Arc::new(SlowBackend {
+            delay,
+            sizes: vec![1, 2, 4, 8, 16],
+        }),
+    });
+    engine
+        .register_with(
+            variant,
+            BatchPolicy {
+                max_batch: 16,
+                max_wait: Duration::ZERO,
+            },
+            64,
+        )
+        .unwrap();
+    let server =
+        WireServer::bind("127.0.0.1:0", engine.clone(), WireServerOptions::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    (engine, server, addr)
+}
+
+/// Tail hedging: when the primary dawdles past the hedge delay, the
+/// backup answers first and wins.
+#[test]
+fn hedge_fires_and_backup_wins_against_a_slow_primary() {
+    // Replica 0 (always picked first on idle ranks) is slow; replica 1
+    // is fast. A 5 ms fixed hedge fires well inside the 150 ms primary.
+    let (_e0, s0, a0) = slow_replica(Duration::from_millis(150));
+    let (_e1, s1, a1) = slow_replica(Duration::from_millis(1));
+    let (gw, front, addr) = attach_gateway(
+        vec![a0, a1],
+        GatewayOptions {
+            hedge: Some(HedgePolicy::FixedMs(5)),
+            ..GatewayOptions::default()
+        },
+    );
+    assert!(gw.wait_healthy(2, Duration::from_secs(10)));
+    let mut client = WireClient::connect(&addr).unwrap();
+    let image = random_image(8);
+    for _ in 0..3 {
+        let r = client.infer("slow", &image).unwrap().into_infer().unwrap();
+        assert_eq!(r.logits.len(), CLASSES);
+        // Let the abandoned slow primary drain its outstanding slot, so
+        // the next request picks the slow replica again (lowest id on an
+        // idle tie) and must hedge again.
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    let view = gw.snapshot();
+    assert!(view.hedges >= 3, "every request should have hedged (got {})", view.hedges);
+    assert!(view.hedge_wins >= 1, "the fast backup should win at least once");
+    front.shutdown();
+    s0.shutdown();
+    s1.shutdown();
+    gw.shutdown();
+}
+
+// ------------------------------------------- supervised replicas (chaos)
+
+fn strum_binary() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_BIN_EXE_strum"))
+}
+
+fn serve_spec() -> ReplicaSpec {
+    ReplicaSpec {
+        binary: strum_binary(),
+        args: [
+            "serve",
+            "--backend",
+            "native",
+            "--variants",
+            "base",
+            "--listen",
+            "127.0.0.1:0",
+            "--workers",
+            "1",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+        env: Vec::new(),
+    }
+}
+
+/// Discovers the child fleet's variant key + image size via the
+/// gateway's metrics passthrough.
+fn discover_variant(addr: &str) -> (String, usize) {
+    let mut client = WireClient::connect(addr).unwrap();
+    let metrics = Json::parse(&client.metrics().unwrap()).unwrap();
+    let v = &metrics.get("variants").unwrap().as_arr().unwrap()[0];
+    (
+        v.get("key").unwrap().as_str().unwrap().to_string(),
+        v.get("img").unwrap().as_usize().unwrap(),
+    )
+}
+
+/// THE chaos invariant: a replica armed to kill itself mid-run dies and
+/// is restarted by its supervisor, and the client sees zero failed
+/// requests throughout — sheds and retries are the gateway's problem.
+#[test]
+fn supervised_fleet_survives_replica_kill_with_zero_client_errors() {
+    let gw = Gateway::start(GatewayOptions {
+        replicas: 2,
+        spec: Some(serve_spec()),
+        // Replica slot 0 exits (code 113) after 5 inferences.
+        fault_replica: Some((0, "kill-after=5".to_string())),
+        probe_interval: Duration::from_millis(100),
+        fail_threshold: 1,
+        restart_backoff_base: Duration::from_millis(50),
+        ..GatewayOptions::default()
+    })
+    .unwrap();
+    assert!(
+        gw.wait_healthy(2, Duration::from_secs(60)),
+        "both children must come up"
+    );
+    let front = WireServer::bind_handler(
+        "127.0.0.1:0",
+        gw.handler(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let addr = front.local_addr().to_string();
+    let (key, img) = discover_variant(&addr);
+    let image: Vec<f32> = {
+        let mut rng = Rng::new(17);
+        (0..img * img * 3).map(|_| rng.f32()).collect()
+    };
+
+    let mut client = WireClient::connect(&addr).unwrap();
+    let mut completed = 0usize;
+    for _ in 0..40 {
+        match client.infer(&key, &image).unwrap() {
+            WireResponse::Infer(_) => completed += 1,
+            WireResponse::Error { code, detail } => {
+                panic!("client-visible error {:?}: {}", code, detail)
+            }
+        }
+    }
+    assert_eq!(completed, 40, "zero client-visible failures through the kill");
+
+    // The kill really happened and the supervisor restarted the slot.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let view = gw.snapshot();
+        if view.replicas.iter().any(|r| r.restarts >= 1) {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "expected a supervised restart; fleet: {:?}",
+            view.replicas
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let view = gw.snapshot();
+    assert!(view.retries >= 1, "the kill must have forced at least one retry");
+    assert_eq!(view.upstream_errors, 0);
+    front.shutdown();
+    gw.shutdown();
+}
+
+/// Rolling deploy of a corrupt artifact: the new cohort can never
+/// become healthy (its replicas die loading the artifact), so the
+/// deploy rolls back inside the health gate, latches the fatal flag
+/// under fail_on_rollback, and the old cohort keeps serving.
+#[test]
+fn corrupt_artifact_deploy_rolls_back_and_old_cohort_keeps_serving() {
+    let dir = std::env::temp_dir().join(format!("strum-gw-rollback-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let artifact_path = dir.join("push.strumc");
+
+    let gw = Gateway::start(GatewayOptions {
+        replicas: 1,
+        spec: Some(serve_spec()),
+        probe_interval: Duration::from_millis(100),
+        fail_threshold: 2,
+        restart_backoff_base: Duration::from_millis(50),
+        watch: Some(DeployPolicy {
+            artifact: artifact_path.clone(),
+            replicas: 1,
+            poll: Duration::from_millis(100),
+            health_timeout: Duration::from_secs(5),
+            probation: Duration::from_millis(300),
+            regress_threshold: 0.2,
+            fail_on_rollback: true,
+        }),
+        ..GatewayOptions::default()
+    })
+    .unwrap();
+    assert!(gw.wait_healthy(1, Duration::from_secs(60)), "boot replica up");
+    let front = WireServer::bind_handler(
+        "127.0.0.1:0",
+        gw.handler(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let addr = front.local_addr().to_string();
+    let (key, img) = discover_variant(&addr);
+    let image: Vec<f32> = {
+        let mut rng = Rng::new(23);
+        (0..img * img * 3).map(|_| rng.f32()).collect()
+    };
+    let mut client = WireClient::connect(&addr).unwrap();
+    client.infer(&key, &image).unwrap().into_infer().unwrap();
+
+    // Push a new-version-but-corrupt artifact: a real compile from
+    // DIFFERENT weights (new fingerprint → the watcher sees a new
+    // version), truncated so `CompiledNet::load` fails in the children.
+    let weights = calibrated_weights(99);
+    let compiled =
+        strum_dpu::artifact::compile_net(&weights, &EvalConfig::paper(Method::Baseline, 0.0))
+            .unwrap();
+    compiled.save(&artifact_path).unwrap();
+    let bytes = std::fs::read(&artifact_path).unwrap();
+    assert!(bytes.len() > 200, "artifact too small to truncate meaningfully");
+    std::fs::write(&artifact_path, &bytes[..bytes.len() - 64]).unwrap();
+    // The header still parses (new version visible)…
+    strum_dpu::artifact::read_identity(&artifact_path).expect("truncated header must parse");
+    // …but a full load fails, which is what the deploy children hit.
+    assert!(strum_dpu::artifact::CompiledNet::load(&artifact_path).is_err());
+
+    // The watcher must attempt the deploy, fail its health gate, and
+    // roll back with the fatal latch.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !gw.rollback_fired() {
+        assert!(
+            Instant::now() < deadline,
+            "rollback never fired; fleet: {:?}",
+            gw.snapshot().replicas
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let view = gw.snapshot();
+    assert_eq!(view.deploys, 1);
+    assert_eq!(view.rollbacks, 1);
+    assert_eq!(view.active_cohort, 0, "traffic must stay on the boot cohort");
+
+    // The old cohort still serves.
+    let r = client.infer(&key, &image).unwrap().into_infer().unwrap();
+    assert_eq!(r.logits.len(), CLASSES);
+
+    front.shutdown();
+    gw.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

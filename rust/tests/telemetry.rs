@@ -64,6 +64,7 @@ fn wire_serving_events_reconcile_with_metrics() -> anyhow::Result<()> {
         WireServerOptions {
             conn_workers: 2,
             telemetry: sink.clone(),
+            ..WireServerOptions::default()
         },
     )?;
     let addr = server.local_addr().to_string();
