@@ -193,6 +193,40 @@ impl Ticket {
     }
 }
 
+/// Completion callback for [`Engine::submit_callback`]: invoked exactly
+/// once, on an engine worker thread, when the request resolves. Keep it
+/// cheap (enqueue + wake) — it runs inside the batch-completion path.
+pub type ReplyCallback = Box<dyn FnOnce(crate::Result<InferReply>) + Send + 'static>;
+
+/// Where a request's reply goes: a channel behind a [`Ticket`] (the
+/// blocking API) or a one-shot completion callback (the async wire tier,
+/// which must never park a thread per in-flight request).
+enum ReplyTo {
+    Channel(mpsc::Sender<crate::Result<InferReply>>),
+    Callback(Mutex<Option<ReplyCallback>>),
+}
+
+impl ReplyTo {
+    fn callback(cb: ReplyCallback) -> ReplyTo {
+        ReplyTo::Callback(Mutex::new(Some(cb)))
+    }
+
+    /// Delivers the reply. At most one delivery wins; a second send (or
+    /// a send to a dropped ticket) is a no-op.
+    fn send(&self, r: crate::Result<InferReply>) {
+        match self {
+            ReplyTo::Channel(tx) => {
+                let _ = tx.send(r);
+            }
+            ReplyTo::Callback(cb) => {
+                if let Some(f) = cb.lock().unwrap().take() {
+                    f(r);
+                }
+            }
+        }
+    }
+}
+
 /// Engine tunables. `workers == 0` sizes the pool to the machine.
 #[derive(Debug, Clone)]
 pub struct EngineOptions {
@@ -231,7 +265,7 @@ impl Default for EngineOptions {
 
 struct Request {
     image: Vec<f32>,
-    tx: mpsc::Sender<crate::Result<InferReply>>,
+    reply: ReplyTo,
     enqueued: Instant,
     /// Shed (typed `ReplyError::Shed`) instead of executed if still
     /// queued past this instant.
@@ -513,6 +547,32 @@ impl Engine {
         submit_shared(&self.shared, key, image, deadline)
     }
 
+    /// Submits one image whose reply is delivered through `cb` instead
+    /// of a [`Ticket`] — the async wire tier's submit path, where no
+    /// thread may park per in-flight request. The callback fires exactly
+    /// once, on an engine worker thread, when the request completes, is
+    /// shed from the queue, or fails; door-stage refusals never enqueue
+    /// and hand the callback back untouched so the caller can answer
+    /// synchronously with the typed [`SubmitError`].
+    pub fn submit_callback(
+        &self,
+        key: &str,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+        cb: ReplyCallback,
+    ) -> Result<(), (SubmitError, ReplyCallback)> {
+        match submit_reply(&self.shared, key, image, deadline, ReplyTo::callback(cb)) {
+            Ok(()) => Ok(()),
+            Err((e, reply)) => match reply {
+                ReplyTo::Callback(m) => {
+                    let cb = m.into_inner().unwrap().expect("callback not yet invoked");
+                    Err((e, cb))
+                }
+                ReplyTo::Channel(_) => unreachable!("submitted a callback reply"),
+            },
+        }
+    }
+
     /// Live variant keys, sorted.
     pub fn keys(&self) -> Vec<String> {
         let st = self.shared.state.lock().unwrap();
@@ -656,23 +716,42 @@ fn submit_shared(
     image: Vec<f32>,
     deadline: Option<Instant>,
 ) -> Result<Ticket, SubmitError> {
+    let (tx, rx) = mpsc::channel();
+    submit_reply(shared, key, image, deadline, ReplyTo::Channel(tx))
+        .map_err(|(e, _reply)| e)?;
+    Ok(Ticket { rx })
+}
+
+/// Shared submit path. Refusals return the untouched [`ReplyTo`]
+/// alongside the typed error so a callback submitter can reclaim its
+/// callback (a channel submitter just drops it).
+fn submit_reply(
+    shared: &EngineShared,
+    key: &str,
+    image: Vec<f32>,
+    deadline: Option<Instant>,
+    reply: ReplyTo,
+) -> Result<(), (SubmitError, ReplyTo)> {
     let mut st = shared.state.lock().unwrap();
     if st.stopping {
-        return Err(SubmitError::ShuttingDown);
+        return Err((SubmitError::ShuttingDown, reply));
     }
     let Some(slot) = st.slots.iter_mut().find(|s| s.variant.key == key) else {
-        return Err(SubmitError::UnknownVariant { key: key.into() });
+        return Err((SubmitError::UnknownVariant { key: key.into() }, reply));
     };
     if slot.retiring {
-        return Err(SubmitError::Retired { key: key.into() });
+        return Err((SubmitError::Retired { key: key.into() }, reply));
     }
     let px = slot.variant.image_len();
     if image.len() != px {
-        return Err(SubmitError::BadImage {
-            key: key.into(),
-            expected: px,
-            got: image.len(),
-        });
+        return Err((
+            SubmitError::BadImage {
+                key: key.into(),
+                expected: px,
+                got: image.len(),
+            },
+            reply,
+        ));
     }
     // Already-late work never enters the queue: shedding at the door is
     // the cheapest shed there is.
@@ -683,7 +762,7 @@ fn submit_shared(
                 key: slot.key_arc.clone(),
                 stage: ShedStage::Door,
             });
-            return Err(SubmitError::Expired { key: key.into() });
+            return Err((SubmitError::Expired { key: key.into() }, reply));
         }
     }
     if slot.queue.len() >= slot.depth {
@@ -692,22 +771,24 @@ fn submit_shared(
             key: slot.key_arc.clone(),
             depth: slot.depth,
         });
-        return Err(SubmitError::QueueFull {
-            key: key.into(),
-            depth: slot.depth,
-        });
+        return Err((
+            SubmitError::QueueFull {
+                key: key.into(),
+                depth: slot.depth,
+            },
+            reply,
+        ));
     }
     slot.metrics.record_request();
-    let (tx, rx) = mpsc::channel();
     slot.queue.push_back(Request {
         image,
-        tx,
+        reply,
         enqueued: Instant::now(),
         deadline,
     });
     drop(st);
     shared.cv.notify_all();
-    Ok(Ticket { rx })
+    Ok(())
 }
 
 /// Deficit-round-robin pick over the variant queues (state lock held).
@@ -819,7 +900,7 @@ fn execute_batch(job: &Job, telemetry: &TelemetrySink) {
             key: job.key_arc.clone(),
             stage: ShedStage::Queue,
         });
-        let _ = r.tx.send(Err(ReplyError::Shed.into()));
+        r.reply.send(Err(ReplyError::Shed.into()));
     }
     if live.is_empty() {
         return;
@@ -854,7 +935,7 @@ fn execute_batch(job: &Job, telemetry: &TelemetrySink) {
                     batch_occupancy: n as u32,
                     batch_padded: bsz as u32,
                 });
-                let _ = r.tx.send(Ok(InferReply {
+                r.reply.send(Ok(InferReply {
                     class: preds[i],
                     logits: logits[i * v.classes..(i + 1) * v.classes].to_vec(),
                     latency,
@@ -865,7 +946,7 @@ fn execute_batch(job: &Job, telemetry: &TelemetrySink) {
         Err(e) => {
             let msg = format!("{}", e);
             for r in &live {
-                let _ = r.tx.send(Err(ReplyError::Batch(msg.clone()).into()));
+                r.reply.send(Err(ReplyError::Batch(msg.clone()).into()));
             }
         }
     }

@@ -55,7 +55,8 @@ pub mod router;
 
 pub use batcher::BatchPolicy;
 pub use engine::{
-    Engine, EngineOptions, InferReply, ReplyError, SubmitError, Ticket, VariantHandle,
+    Engine, EngineOptions, InferReply, ReplyCallback, ReplyError, SubmitError, Ticket,
+    VariantHandle,
 };
 pub use metrics::{
     FleetSnapshot, LatencyStats, MetricsSnapshot, VariantSnapshot, WireCounts,

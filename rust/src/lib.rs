@@ -31,7 +31,7 @@
 //! | [`backend::kernels`] | §IV-C.1, §V-B | SIMD kernel layer: AVX2/SSE2 int8 micro-kernels with bit-exact scalar fallback (`STRUM_KERNEL` pins a path), cache-blocked GEMM driver, activation-sparsity row skip, scratch arenas, fused requantize/ReLU/pool/quantize epilogues |
 //! | [`runtime`] | — | PJRT CPU client wrapper (feature `pjrt`): load HLO text, compile, execute |
 //! | [`coordinator`] | — | multi-variant serving engine: one shared worker pool, per-variant bounded queues + deficit-round-robin batch scheduling (per-variant priority weights), handle-based submit (`Ticket`/`SubmitError`), per-request deadlines with typed sheds (`ReplyError`), typed `MetricsSnapshot` |
-//! | [`server`] | — | wire serving front-end: versioned length-prefixed TCP protocol (`server::proto`), blocking accept/worker server with graceful drain, deadline-budget propagation and three-stage shedding, `WireClient` with bounded-backoff dialing + `strum loadgen` open-loop load generator, fault-injection hooks (`server::fault`) for chaos tests |
+//! | [`server`] | — | wire serving front-end: versioned length-prefixed TCP protocol with v2 correlation-id pipelining + streaming batches (`server::proto`), async poll(2)-based tier (`server::aio`, one poller + conn-worker pool, completion callbacks into the engine) with an HTTP/1.1 + Prometheus gateway (`server::http`), deprecated blocking tier behind `--legacy-threads`, `WireClient`/`PipelinedClient`/`HttpClient` + `strum loadgen` open-loop load generator, fault-injection hooks (`server::fault`) for chaos tests |
 //! | [`gateway`] | — | replica-fleet tier: supervisor (spawn/scrape/restart with capped jittered backoff), wire-metrics health prober, shed-aware router (least-outstanding, one bounded retry, tail hedging), rolling deploys with probation + auto-rollback |
 //! | [`report`] | §VII | regenerators for Table I and Figs. 10–13 + ablations |
 //! | [`telemetry`] | — | observability: schema-versioned JSONL event sink (non-blocking, rotating), versioned bench run-manifests with FNV-1a checksums, `strum bench-diff` regression gate |

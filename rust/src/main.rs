@@ -32,7 +32,7 @@ use strum_dpu::backend::BackendKind;
 use strum_dpu::coordinator::{Engine, EngineOptions, Router, SubmitError, VariantHandle};
 use strum_dpu::gateway::{DeployPolicy, Gateway, GatewayOptions, HedgePolicy, ReplicaSpec};
 use strum_dpu::server::{
-    FaultPlan, WireClient, WireResponse, WireServer, WireServerOptions,
+    AioServer, FaultPlan, HttpClient, WireClient, WireResponse, WireServer, WireServerOptions,
 };
 use strum_dpu::encode::{decode_layer, encode_layer};
 use strum_dpu::encode::compression::ratio_for;
@@ -148,7 +148,8 @@ fn print_help() {
                  [--backend {{pjrt|native}}] [--workers N] [--queue-depth N] [--max-wait-ms 4]\n\
                  [--max-batch N] [--metrics-out FILE]\n\
                  [--telemetry-out DIR [--telemetry-interval-s N]]\n\
-                 [--listen ADDR [--duration-s N] [--conn-workers N]]\n\
+                 [--listen ADDR [--http-listen ADDR] [--legacy-threads]\n\
+                  [--duration-s N] [--conn-workers N]]\n\
                  one shared worker pool serves every variant; variant specs are\n\
                  base|dliq|mip2q aliases or method names, with optional @p (e.g.\n\
                  mip2q-L5@0.25) and an optional :W DRR priority weight (e.g.\n\
@@ -159,7 +160,14 @@ fn print_help() {
                  `strum compile` first and cold start is a read+decode, not a re-quantization.\n\
                  --listen binds the TCP wire front-end (127.0.0.1:0 picks a free\n\
                  port, printed as 'listening on ADDR') instead of the synthetic\n\
-                 self-load; stop with --duration-s or a signal.\n\
+                 self-load; stop with --duration-s or a signal. The front-end is\n\
+                 the async tier: one poller owns every connection (v2 clients\n\
+                 pipeline out of order by correlation id; v1 clients are served\n\
+                 in order). --http-listen ADDR additionally exposes HTTP/1.1:\n\
+                 POST /v1/infer (JSON), GET /v1/metrics (JSON), GET /metrics\n\
+                 (Prometheus text), printed as 'http listening on ADDR'.\n\
+                 --legacy-threads falls back to the deprecated thread-per-conn\n\
+                 tier (binary protocol only).\n\
                  --telemetry-out DIR streams schema-versioned JSONL events (request\n\
                  done/shed/rejected, batches, conn lifecycle, periodic gauges) to\n\
                  rotating telemetry-<run_id>.NNNN.jsonl segments under DIR; the\n\
@@ -190,8 +198,13 @@ fn print_help() {
                  smokes. Exits with a per-replica fleet summary.\n\
          loadgen: strum loadgen --addr HOST:PORT [--requests 500 | --duration-s N]\n\
                  [--rate 500] [--concurrency 4] [--deadline-ms N] [--variants k1,k2]\n\
-                 [--target gateway] [--out BENCH_wire_serve.json] [--bench-dir DIR]\n\
-                 [--seed N] [--img N]\n\
+                 [--proto {{binary|http}}] [--connections N] [--target gateway]\n\
+                 [--out BENCH_wire_serve.json] [--bench-dir DIR] [--seed N] [--img N]\n\
+                 --proto http drives the server's HTTP tier (--addr names the\n\
+                 --http-listen port) with the same Poisson core; the output JSON\n\
+                 records which proto ran. --connections N holds N extra idle\n\
+                 sockets open across the run and fails unless every one\n\
+                 survives (raise `ulimit -n` for thousand-connection soaks).\n\
                  --target gateway snapshots the gateway's fleet metrics before and\n\
                  after the run and adds per-replica served/throughput rows plus\n\
                  retry/hedge/rollback counters to the output (default out name\n\
@@ -901,16 +914,43 @@ fn serve_synthetic(args: &Args, fleet: Fleet) -> Result<()> {
 /// resolved address is printed as `listening on ADDR` for scripts to
 /// scrape. Runs for `--duration-s` seconds, or until killed when 0.
 fn serve_wire(args: &Args, fleet: Fleet, listen: &str) -> Result<()> {
-    let server = WireServer::bind(
-        listen,
-        fleet.engine.clone(),
-        WireServerOptions {
-            conn_workers: args.usize("conn-workers", 4),
-            telemetry: fleet.telemetry.clone(),
-            fault: fault_plan(args)?,
-        },
-    )?;
-    println!("listening on {}", server.local_addr());
+    enum Front {
+        Aio(AioServer),
+        Legacy(WireServer),
+    }
+    let opts = WireServerOptions {
+        conn_workers: args.usize("conn-workers", 4),
+        telemetry: fleet.telemetry.clone(),
+        fault: fault_plan(args)?,
+    };
+    let http_listen = args.opt_str("http-listen");
+    let front = if args.flag("legacy-threads") {
+        anyhow::ensure!(
+            http_listen.is_none(),
+            "--http-listen needs the async tier; drop --legacy-threads"
+        );
+        Front::Legacy(WireServer::bind(listen, fleet.engine.clone(), opts)?)
+    } else {
+        Front::Aio(AioServer::bind(
+            Some(listen),
+            http_listen.as_deref(),
+            fleet.engine.clone(),
+            opts,
+        )?)
+    };
+    // Scrape order contract: the binary address always prints first
+    // (scripts read the first `listening on`), the HTTP one after it.
+    match &front {
+        Front::Aio(s) => {
+            if let Some(a) = s.local_addr() {
+                println!("listening on {}", a);
+            }
+            if let Some(a) = s.http_addr() {
+                println!("http listening on {}", a);
+            }
+        }
+        Front::Legacy(s) => println!("listening on {}", s.local_addr()),
+    }
     let duration = args.f64("duration-s", 0.0);
     if duration <= 0.0 {
         println!("serving until killed (pass --duration-s N for a bounded run)");
@@ -919,13 +959,29 @@ fn serve_wire(args: &Args, fleet: Fleet, listen: &str) -> Result<()> {
         }
     }
     std::thread::sleep(Duration::from_secs_f64(duration));
-    let stats = server.stats();
-    server.shutdown();
+    let stats = match front {
+        Front::Aio(s) => {
+            let stats = s.stats();
+            s.shutdown();
+            stats
+        }
+        Front::Legacy(s) => {
+            let stats = s.stats();
+            s.shutdown();
+            stats
+        }
+    };
     let snapshot = fleet.engine.metrics();
     println!("{}", snapshot.render());
     println!(
-        "wire: connections={} requests={} shed_presubmit={} protocol_errors={}",
-        stats.connections, stats.requests, stats.shed_presubmit, stats.protocol_errors
+        "wire: connections={} requests={} shed_presubmit={} protocol_errors={} \
+         http_requests={} pipelined_conns={}",
+        stats.connections,
+        stats.requests,
+        stats.shed_presubmit,
+        stats.protocol_errors,
+        stats.http_requests,
+        stats.pipelined_conns
     );
     if let Some(path) = args.opt_str("metrics-out") {
         std::fs::write(&path, snapshot.to_json().to_string_pretty())?;
@@ -1060,8 +1116,14 @@ fn cmd_gateway(args: &Args) -> Result<()> {
         );
     }
 
-    let server = WireServer::bind_handler(
-        args.str("listen", "127.0.0.1:0"),
+    // The gateway fronts the fleet on the async tier: the same
+    // `GatewayHandler` serves binary frames and, with `--http-listen`,
+    // HTTP/JSON — each blocking route occupies one dispatch worker.
+    let gw_listen = args.str("listen", "127.0.0.1:0");
+    let gw_http = args.opt_str("http-listen");
+    let server = AioServer::bind_handler(
+        Some(gw_listen.as_str()),
+        gw_http.as_deref(),
         gw.handler(),
         WireServerOptions {
             conn_workers: args.usize("conn-workers", 4),
@@ -1071,9 +1133,12 @@ fn cmd_gateway(args: &Args) -> Result<()> {
     )?;
     println!(
         "gateway listening on {} fronting {} replica(s)",
-        server.local_addr(),
+        server.local_addr().expect("wire listener bound"),
         expected
     );
+    if let Some(a) = server.http_addr() {
+        println!("http listening on {}", a);
+    }
 
     let duration = args.f64("duration-s", 0.0);
     if duration <= 0.0 {
@@ -1098,8 +1163,14 @@ fn cmd_gateway(args: &Args) -> Result<()> {
     gw.shutdown();
     println!("{}", view.render());
     println!(
-        "wire: connections={} requests={} shed_presubmit={} protocol_errors={}",
-        stats.connections, stats.requests, stats.shed_presubmit, stats.protocol_errors
+        "wire: connections={} requests={} shed_presubmit={} protocol_errors={} \
+         http_requests={} pipelined_conns={}",
+        stats.connections,
+        stats.requests,
+        stats.shed_presubmit,
+        stats.protocol_errors,
+        stats.http_requests,
+        stats.pipelined_conns
     );
     if let Some(path) = args.opt_str("metrics-out") {
         std::fs::write(&path, view.to_json().to_string_pretty())?;
@@ -1140,10 +1211,20 @@ fn fleet_rows(metrics: &Json) -> Vec<ReplicaRow> {
         .unwrap_or_default()
 }
 
-fn fetch_fleet_metrics(addr: &str) -> Result<Json> {
-    let mut client = WireClient::connect(addr)?;
-    Json::parse(&client.metrics()?)
-        .map_err(|e| anyhow::anyhow!("gateway sent unparseable metrics JSON: {:?}", e))
+/// Fetches a server's metrics document over either protocol: the wire
+/// metrics op, or `GET /v1/metrics` when loadgen targets the HTTP tier
+/// (the JSON body is the identical document).
+fn fetch_metrics_json(addr: &str, http: bool) -> Result<Json> {
+    let text = if http {
+        let mut client = HttpClient::new(addr);
+        let (status, body) = client.request("GET", "/v1/metrics", None)?;
+        anyhow::ensure!(status == 200, "GET /v1/metrics returned {}", status);
+        body
+    } else {
+        WireClient::connect(addr)?.metrics()?
+    };
+    Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("server sent unparseable metrics JSON: {:?}", e))
 }
 
 /// Open-loop wire load generator: Poisson arrivals at `--rate` req/s
@@ -1158,6 +1239,13 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     anyhow::ensure!(rate > 0.0, "--rate must be positive");
     let concurrency = args.usize("concurrency", 4).max(1);
     let deadline_ms = args.usize("deadline-ms", 0) as u32;
+    // --proto http drives the async tier's HTTP/JSON endpoints with the
+    // same Poisson arrival core; --addr then names the HTTP listener.
+    let proto_http = match args.str("proto", "binary").as_str() {
+        "http" => true,
+        "binary" => false,
+        other => anyhow::bail!("unknown --proto '{}' (binary|http)", other),
+    };
     // --target gateway: also snapshot the gateway's fleet metrics before
     // and after the run, emitting per-replica throughput rows.
     let target_kind = args.str("target", "server");
@@ -1185,9 +1273,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
 
     // Discover the fleet from the server's metrics op: variant keys and
     // the image geometry each expects.
-    let mut probe = WireClient::connect(&addr)?;
-    let metrics = Json::parse(&probe.metrics()?)
-        .map_err(|e| anyhow::anyhow!("server sent unparseable metrics JSON: {:?}", e))?;
+    let metrics = fetch_metrics_json(&addr, proto_http)?;
     let discovered: Vec<(String, usize)> = metrics
         .get("variants")
         .and_then(|v| v.as_arr())
@@ -1236,7 +1322,32 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     } else {
         Vec::new()
     };
-    drop(probe);
+
+    // --connections N: hold N extra *idle* sockets open across the whole
+    // run and assert every one survives it — the async tier's poller
+    // must carry them for free (no thread, no wakeups). Sized runs need
+    // a raised fd limit (`ulimit -n`), which is why the dial error
+    // mentions it.
+    let idle_target = args.usize("connections", 0);
+    let mut idle_conns: Vec<std::net::TcpStream> = Vec::with_capacity(idle_target);
+    for i in 0..idle_target {
+        let s = std::net::TcpStream::connect(&addr).map_err(|e| {
+            anyhow::anyhow!(
+                "idle connection {}/{} failed: {} (raise `ulimit -n`?)",
+                i + 1,
+                idle_target,
+                e
+            )
+        })?;
+        s.set_nonblocking(true)?;
+        idle_conns.push(s);
+    }
+    if idle_target > 0 {
+        println!(
+            "soak: {} idle connection(s) held open through the run",
+            idle_target
+        );
+    }
 
     // The open-loop arrival schedule: requests fire at their scheduled
     // instants regardless of how fast earlier ones complete (within each
@@ -1294,7 +1405,20 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         shed: usize,
         errors: usize,
         transport: usize,
-        per_code: std::collections::BTreeMap<&'static str, usize>,
+        per_code: std::collections::BTreeMap<String, usize>,
+    }
+
+    /// One worker's connection, either protocol.
+    enum LoadConn {
+        Bin(WireClient),
+        Http(HttpClient),
+    }
+
+    /// One request's classified outcome, protocol-independent.
+    enum Verdict {
+        Done,
+        Refused { name: String, shed: bool },
+        Transport,
     }
 
     let t0 = Instant::now();
@@ -1306,7 +1430,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             let addr = addr.clone();
             let mut rng = Rng::new(seed ^ (0x9E3779B9 + ti as u64));
             joins.push(scope.spawn(move || {
-                let mut client = WireClient::new(addr);
+                let mut client = if proto_http {
+                    LoadConn::Http(HttpClient::new(addr))
+                } else {
+                    LoadConn::Bin(WireClient::new(addr))
+                };
                 let mut out = Outcome::default();
                 let mut idx = ti;
                 while idx < arrivals.len() {
@@ -1318,20 +1446,52 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                         std::thread::sleep(wait);
                     }
                     let sent = Instant::now();
-                    match client.infer_budget_ms(key, &image, deadline_ms) {
-                        Ok(WireResponse::Infer(_)) => {
+                    let verdict = match &mut client {
+                        LoadConn::Bin(c) => match c.infer_budget_ms(key, &image, deadline_ms) {
+                            Ok(WireResponse::Infer(_)) => Verdict::Done,
+                            Ok(WireResponse::Error { code, .. }) => Verdict::Refused {
+                                name: code.name().to_string(),
+                                shed: code.is_shed(),
+                            },
+                            Err(_) => Verdict::Transport,
+                        },
+                        LoadConn::Http(c) => match c.infer(key, &image, deadline_ms) {
+                            Ok((200, _)) => Verdict::Done,
+                            Ok((_, body)) => {
+                                // Non-200 bodies carry the typed error
+                                // name; classify sheds exactly like the
+                                // binary path does with is_shed().
+                                let name = Json::parse(&body)
+                                    .ok()
+                                    .and_then(|j| {
+                                        j.get("error")
+                                            .and_then(|e| e.as_str())
+                                            .map(str::to_string)
+                                    })
+                                    .unwrap_or_else(|| "http_error".to_string());
+                                let shed = matches!(
+                                    name.as_str(),
+                                    "expired" | "shed" | "deadline_expired"
+                                );
+                                Verdict::Refused { name, shed }
+                            }
+                            Err(_) => Verdict::Transport,
+                        },
+                    };
+                    match verdict {
+                        Verdict::Done => {
                             out.completed += 1;
                             out.lat_us.push(sent.elapsed().as_secs_f64() * 1e6);
                         }
-                        Ok(WireResponse::Error { code, .. }) => {
-                            *out.per_code.entry(code.name()).or_insert(0) += 1;
-                            if code.is_shed() {
+                        Verdict::Refused { name, shed } => {
+                            *out.per_code.entry(name).or_insert(0) += 1;
+                            if shed {
                                 out.shed += 1;
                             } else {
                                 out.errors += 1;
                             }
                         }
-                        Err(_) => {
+                        Verdict::Transport => {
                             out.transport += 1;
                             out.errors += 1;
                         }
@@ -1348,9 +1508,25 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     });
     let wall = t0.elapsed().as_secs_f64();
 
+    // Soak verdict: an idle socket that is still open blocks on peek
+    // (WouldBlock); EOF or reset means the server dropped it under load.
+    let idle_alive = idle_conns
+        .iter()
+        .filter(|s| {
+            let mut b = [0u8; 1];
+            matches!(s.peek(&mut b), Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock)
+        })
+        .count();
+    if idle_target > 0 {
+        println!(
+            "soak: {}/{} idle connection(s) survived the run",
+            idle_alive, idle_target
+        );
+    }
+
     let mut lat = Summary::new();
     let (mut completed, mut shed, mut errors, mut transport) = (0usize, 0usize, 0usize, 0usize);
-    let mut per_code: std::collections::BTreeMap<&'static str, usize> =
+    let mut per_code: std::collections::BTreeMap<String, usize> =
         std::collections::BTreeMap::new();
     for o in &outcomes {
         completed += o.completed;
@@ -1361,7 +1537,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             lat.push(*v);
         }
         for (k, c) in &o.per_code {
-            *per_code.entry(k).or_insert(0) += c;
+            *per_code.entry(k.clone()).or_insert(0) += c;
         }
     }
     for (code, count) in &per_code {
@@ -1390,6 +1566,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     );
     let mut json = Json::obj(vec![
         ("addr", Json::str(addr.as_str())),
+        ("proto", Json::str(if proto_http { "http" } else { "binary" })),
+        ("idle_connections", Json::Num(idle_target as f64)),
+        ("idle_alive", Json::Num(idle_alive as f64)),
         ("requests", Json::Num(n as f64)),
         ("rate_target", Json::Num(rate)),
         ("concurrency", Json::Num(concurrency as f64)),
@@ -1426,7 +1605,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         ),
     ]);
     if gateway_target {
-        match fetch_fleet_metrics(&addr) {
+        match fetch_metrics_json(&addr, proto_http) {
             Ok(post) => {
                 let rows = fleet_rows(&post);
                 let pre_served =
@@ -1482,6 +1661,14 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let manifest_path = dir.join(format!("MANIFEST_{}.json", stem));
     manifest.save(&manifest_path)?;
     println!("wrote {}", manifest_path.display());
+    // The soak assertion fires after the artifacts are written, so a
+    // failed run still leaves its evidence on disk.
+    anyhow::ensure!(
+        idle_alive == idle_target,
+        "idle-connection soak failed: only {}/{} connections survived",
+        idle_alive,
+        idle_target
+    );
     Ok(())
 }
 

@@ -1,0 +1,1374 @@
+//! Async wire tier: one readiness-based poller thread serving every
+//! connection — binary protocol and HTTP — over non-blocking
+//! `std::net` sockets, with a small dispatch pool between the poller
+//! and the [`Engine`].
+//!
+//! # Architecture
+//!
+//! ```text
+//!              ┌──────────────────────────────────────────────┐
+//!   sockets ──▶│ poller (1 thread, poll(2) via a tiny FFI     │
+//!              │ shim — no tokio, no libc crate)              │
+//!              │  · accepts on the binary + HTTP listeners    │
+//!              │  · reads/parses frames & HTTP requests       │
+//!              │  · writes replies when sockets are writable  │
+//!              └──────┬─────────────────────────▲─────────────┘
+//!                work │ queue        completions│ + wake fd
+//!              ┌──────▼─────────────────────────┴─────────────┐
+//!              │ dispatch workers (N threads)                 │
+//!              │  · fault injection, request accounting       │
+//!              │  · hand requests to the handler; replies come│
+//!              │    back as completion callbacks (the engine  │
+//!              │    path never blocks a worker on a Ticket)   │
+//!              └──────────────────────────────────────────────┘
+//! ```
+//!
+//! The poller owns *all* connection state; nothing else touches a
+//! socket. Cross-thread communication is two queues: decoded work
+//! flows down to the dispatch pool, encoded completions flow back up,
+//! and a `socketpair`-based wake fd interrupts `poll(2)` whenever a
+//! completion (or shutdown) needs the poller's attention — no
+//! busy-polling anywhere, unlike the legacy blocking tier's 100 ms
+//! stop-flag read loop. One process holds 10k+ idle connections: an
+//! idle connection costs one pollfd entry and its buffers, not a
+//! thread.
+//!
+//! ## Ordering and pipelining
+//!
+//! Every parsed request gets a per-connection sequence number.
+//! Connections that must be answered in order (binary v1 — no
+//! correlation ids — and HTTP/1.1, where ordering is the protocol's
+//! matching rule) buffer out-of-order completions in a `BTreeMap`
+//! until their turn; binary v2 connections write completions the
+//! moment they arrive, since the echoed correlation id does the
+//! matching. At most [`MAX_PIPELINE`] requests may be outstanding per
+//! connection — past that the poller simply stops reading from that
+//! socket (natural TCP backpressure) until replies drain.
+//!
+//! ## Shutdown
+//!
+//! `shutdown()` sets the stop flag and writes the wake byte. The
+//! poller closes its listeners, stops parsing new input, drains every
+//! outstanding reply (bounded by a drain deadline), then appends a
+//! typed `ShuttingDown` refusal (binary) or `503` (HTTP) to each
+//! still-open connection so peers learn the server is gone from a
+//! frame, not a reset — the same contract as the legacy tier.
+
+use super::fault::FaultState;
+use super::http::{self, HttpParse};
+use super::proto::{self, ErrorCode, FramedRequest, Request, Response};
+use super::{ServerStats, ServerStatsSnapshot, WireHandler, WireServerOptions};
+use crate::coordinator::{Engine, InferReply, ReplyCallback, ReplyError, SubmitError};
+use crate::telemetry::{Event, TelemetrySink};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Outstanding-request cap per connection; past it the poller stops
+/// reading that socket until replies drain (TCP backpressure, not an
+/// error).
+pub const MAX_PIPELINE: usize = 128;
+
+/// Poll timeout. Nothing *requires* a wakeup this often — completions
+/// and shutdown interrupt the poll via the wake fd — it only bounds
+/// how stale the idle-connection sweep can get.
+const POLL_TIMEOUT_MS: i32 = 1000;
+
+/// How long shutdown waits for in-flight replies before force-closing.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Per-`read(2)` buffer size.
+const READ_CHUNK: usize = 16 * 1024;
+
+// ------------------------------------------------------- poll(2) shim
+
+#[repr(C)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+#[cfg(target_os = "macos")]
+type Nfds = u32;
+#[cfg(not(target_os = "macos"))]
+type Nfds = std::os::raw::c_ulong;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: Nfds, timeout: i32) -> i32;
+}
+
+/// `poll(2)` with EINTR retry. The only FFI in the crate: three i32/i16
+/// fields and an errno check, small enough to audit at a glance.
+fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    loop {
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as Nfds, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+// ------------------------------------------------------------ handler
+
+/// A completion continuation: called exactly once with the response.
+pub type DoneFn = Box<dyn FnOnce(Response) + Send + 'static>;
+
+/// Completion-style request handler. Unlike [`WireHandler`] this never
+/// blocks the calling thread waiting for the engine: the response is
+/// delivered to `done` whenever it is ready (possibly on another
+/// thread, possibly before `handle_async` returns).
+pub trait AsyncWireHandler: Send + Sync + 'static {
+    fn handle_async(&self, req: Request, arrived: Instant, stats: &ServerStats, done: DoneFn);
+}
+
+/// The two ways a handler can be mounted: completion-native (the
+/// engine), or a blocking [`WireHandler`] (the gateway's router) run
+/// to completion on a dispatch worker — same concurrency as the
+/// legacy tier's conn workers.
+enum HandlerKind {
+    Async(Arc<dyn AsyncWireHandler>),
+    Blocking(Arc<dyn WireHandler>),
+}
+
+impl HandlerKind {
+    fn call(&self, req: Request, arrived: Instant, stats: &ServerStats, done: DoneFn) {
+        match self {
+            HandlerKind::Async(h) => h.handle_async(req, arrived, stats, done),
+            HandlerKind::Blocking(h) => done(h.handle(req, arrived, stats)),
+        }
+    }
+}
+
+/// The engine's completion-native implementation: same deadline
+/// semantics as the blocking [`WireHandler`] impl in `conn` (door shed
+/// → submit → reply mapped arm-for-arm), but the reply arrives via
+/// [`Engine::submit_callback`] instead of parking a thread on a
+/// `Ticket`.
+impl AsyncWireHandler for Engine {
+    fn handle_async(&self, req: Request, arrived: Instant, stats: &ServerStats, done: DoneFn) {
+        match req {
+            Request::Metrics => {
+                done(Response::MetricsJson(
+                    self.metrics().to_json().to_string_pretty(),
+                ));
+            }
+            Request::Infer {
+                key,
+                deadline_budget_ms,
+                image,
+            } => {
+                let deadline = (deadline_budget_ms > 0)
+                    .then(|| arrived + Duration::from_millis(deadline_budget_ms as u64));
+                if let Some(d) = deadline {
+                    if Instant::now() >= d {
+                        stats.record_shed_presubmit();
+                        done(Response::Error {
+                            code: ErrorCode::Expired,
+                            detail: format!(
+                                "budget of {} ms elapsed before submit",
+                                deadline_budget_ms
+                            ),
+                        });
+                        return;
+                    }
+                }
+                let cb: ReplyCallback =
+                    Box::new(move |res| done(reply_to_response(res, deadline)));
+                if let Err((e, cb)) = self.submit_callback(&key, image, deadline, cb) {
+                    // Refused at submit: feed the typed error through the
+                    // same mapper the success path uses.
+                    cb(Err(anyhow::Error::new(e)));
+                }
+            }
+        }
+    }
+}
+
+/// Maps an engine reply to a wire response — the callback-path twin of
+/// the blocking tier's wait mapping. An `Ok` that lands after the
+/// deadline reports `DeadlineExpired`, mirroring `wait_deadline`
+/// abandoning a late reply.
+fn reply_to_response(res: crate::Result<InferReply>, deadline: Option<Instant>) -> Response {
+    match res {
+        Ok(r) => {
+            if let Some(d) = deadline {
+                if Instant::now() > d {
+                    return Response::Error {
+                        code: ErrorCode::DeadlineExpired,
+                        detail: "reply missed the deadline budget".into(),
+                    };
+                }
+            }
+            Response::Logits {
+                class: r.class as u32,
+                latency_us: r.latency.as_micros() as u64,
+                occupancy: r.batch.0.min(u16::MAX as usize) as u16,
+                padded: r.batch.1.min(u16::MAX as usize) as u16,
+                logits: r.logits,
+            }
+        }
+        Err(e) => {
+            let code = if let Some(re) = e.downcast_ref::<ReplyError>() {
+                match re {
+                    ReplyError::Shed => ErrorCode::Shed,
+                    ReplyError::DeadlineExpired => ErrorCode::DeadlineExpired,
+                    ReplyError::Dropped => ErrorCode::ShuttingDown,
+                    ReplyError::Batch(_) => ErrorCode::Batch,
+                }
+            } else if let Some(se) = e.downcast_ref::<SubmitError>() {
+                ErrorCode::from_submit(se)
+            } else {
+                ErrorCode::Batch
+            };
+            Response::Error {
+                code,
+                detail: e.to_string(),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------- plumbing
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum HttpKind {
+    Infer,
+    MetricsJson,
+    Prometheus,
+}
+
+/// How to encode a completion for the wire — fixed at parse time, so
+/// the encoding thread (worker or engine) needs no connection state.
+enum EncodeMode {
+    V1,
+    V2 {
+        corr_id: u32,
+    },
+    Http {
+        kind: HttpKind,
+        keep_alive: bool,
+        method: String,
+        path: String,
+        start: Instant,
+    },
+}
+
+enum WorkItem {
+    One {
+        conn: u64,
+        seq: u64,
+        req: Request,
+        arrived: Instant,
+        mode: EncodeMode,
+    },
+    /// A v2 streaming batch: fans out to one engine submit per image,
+    /// joins into a single `OP_LOGITS_BATCH` completion.
+    Batch {
+        conn: u64,
+        seq: u64,
+        corr_id: u32,
+        key: String,
+        deadline_budget_ms: u32,
+        px: usize,
+        images: Vec<f32>,
+        arrived: Instant,
+    },
+}
+
+/// One encoded reply headed back to the poller.
+struct Completion {
+    conn: u64,
+    seq: u64,
+    bytes: Vec<u8>,
+    /// Close the connection once this reply has flushed.
+    close: bool,
+    /// Fault injection: drop the connection now, without flushing.
+    drop_now: bool,
+}
+
+struct AioShared {
+    handler: HandlerKind,
+    stopping: AtomicBool,
+    stats: ServerStats,
+    telemetry: TelemetrySink,
+    fault: Option<FaultState>,
+    work: Mutex<VecDeque<WorkItem>>,
+    work_cv: Condvar,
+    completions: Mutex<Vec<Completion>>,
+    /// Write side of the poller's wake socketpair (non-blocking; a full
+    /// pipe is fine — pending bytes already guarantee a wakeup).
+    wake_tx: UnixStream,
+}
+
+impl AioShared {
+    fn wake(&self) {
+        let _ = (&self.wake_tx).write(&[1u8]);
+    }
+
+    fn complete(&self, c: Completion) {
+        self.completions.lock().unwrap().push(c);
+        self.wake();
+    }
+
+    fn push_work(&self, item: WorkItem) {
+        self.work.lock().unwrap().push_back(item);
+        self.work_cv.notify_one();
+    }
+}
+
+/// Length-prefixes one payload (the poller writes whole frames from
+/// buffers, never through `write_frame`'s flushing writer).
+fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+fn refusal_frame() -> Vec<u8> {
+    frame(&proto::encode_response(&Response::Error {
+        code: ErrorCode::ShuttingDown,
+        detail: "server is draining".into(),
+    }))
+}
+
+// ------------------------------------------------------------- server
+
+/// Readiness-based front-end serving the binary protocol and HTTP on
+/// one poller. Construct with [`AioServer::bind`] (engine,
+/// completion-native) or [`AioServer::bind_handler`] (any blocking
+/// [`WireHandler`], e.g. the gateway router).
+pub struct AioServer {
+    addr: Option<SocketAddr>,
+    http_addr: Option<SocketAddr>,
+    shared: Arc<AioShared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl AioServer {
+    /// Binds the engine behind the async tier. At least one of `listen`
+    /// (binary protocol) / `http_listen` must be given.
+    pub fn bind(
+        listen: Option<&str>,
+        http_listen: Option<&str>,
+        engine: Arc<Engine>,
+        opts: WireServerOptions,
+    ) -> crate::Result<AioServer> {
+        Self::bind_kind(listen, http_listen, HandlerKind::Async(engine), opts)
+    }
+
+    /// [`bind`](AioServer::bind) for a completion-native handler.
+    pub fn bind_async(
+        listen: Option<&str>,
+        http_listen: Option<&str>,
+        handler: Arc<impl AsyncWireHandler>,
+        opts: WireServerOptions,
+    ) -> crate::Result<AioServer> {
+        Self::bind_kind(listen, http_listen, HandlerKind::Async(handler), opts)
+    }
+
+    /// [`bind`](AioServer::bind) for a blocking [`WireHandler`] — the
+    /// gateway router mounts here; each request occupies a dispatch
+    /// worker for its duration, exactly like the legacy tier's conn
+    /// workers.
+    pub fn bind_handler(
+        listen: Option<&str>,
+        http_listen: Option<&str>,
+        handler: Arc<impl WireHandler>,
+        opts: WireServerOptions,
+    ) -> crate::Result<AioServer> {
+        Self::bind_kind(listen, http_listen, HandlerKind::Blocking(handler), opts)
+    }
+
+    fn bind_kind(
+        listen: Option<&str>,
+        http_listen: Option<&str>,
+        handler: HandlerKind,
+        opts: WireServerOptions,
+    ) -> crate::Result<AioServer> {
+        anyhow::ensure!(
+            listen.is_some() || http_listen.is_some(),
+            "AioServer needs at least one listen address"
+        );
+        let bind_one = |addr: &str| -> crate::Result<TcpListener> {
+            let l = TcpListener::bind(addr)?;
+            l.set_nonblocking(true)?;
+            Ok(l)
+        };
+        let binary = listen.map(bind_one).transpose()?;
+        let httpl = http_listen.map(bind_one).transpose()?;
+        let addr = binary.as_ref().map(|l| l.local_addr()).transpose()?;
+        let http_addr = httpl.as_ref().map(|l| l.local_addr()).transpose()?;
+
+        let (wake_rx, wake_tx) = UnixStream::pair()?;
+        wake_rx.set_nonblocking(true)?;
+        wake_tx.set_nonblocking(true)?;
+
+        let shared = Arc::new(AioShared {
+            handler,
+            stopping: AtomicBool::new(false),
+            stats: ServerStats::default(),
+            telemetry: opts.telemetry.clone(),
+            fault: opts.fault.filter(|p| !p.is_empty()).map(FaultState::new),
+            work: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            completions: Mutex::new(Vec::new()),
+            wake_tx,
+        });
+        let workers = opts.conn_workers.max(1);
+        let mut threads = Vec::with_capacity(workers + 1);
+        {
+            let sh = shared.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("aio-poll".into())
+                    .spawn(move || poller(&sh, binary, httpl, wake_rx))?,
+            );
+        }
+        for i in 0..workers {
+            let sh = shared.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("aio-worker-{}", i))
+                    .spawn(move || dispatch_worker(&sh))?,
+            );
+        }
+        Ok(AioServer {
+            addr,
+            http_addr,
+            shared,
+            threads,
+        })
+    }
+
+    /// Bound binary-protocol address, if a binary listener was opened.
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        self.addr
+    }
+
+    /// Bound HTTP address, if an HTTP listener was opened.
+    pub fn http_addr(&self) -> Option<SocketAddr> {
+        self.http_addr
+    }
+
+    pub fn stats(&self) -> ServerStatsSnapshot {
+        self.shared.stats.snapshot()
+    }
+
+    /// Graceful drain: stop accepting, let in-flight requests answer,
+    /// refuse still-open connections with a typed frame / 503, join
+    /// every thread. Bounded by an internal drain deadline.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        if self.threads.is_empty() {
+            return;
+        }
+        let s = self.shared.stats.snapshot();
+        self.shared.telemetry.emit(Event::ServerDrain {
+            connections: s.connections,
+            requests: s.requests,
+        });
+        self.shared.stopping.store(true, Ordering::Release);
+        self.shared.wake();
+        self.shared.work_cv.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for AioServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+// --------------------------------------------------- dispatch workers
+
+fn dispatch_worker(sh: &Arc<AioShared>) {
+    loop {
+        let item = {
+            let mut q = sh.work.lock().unwrap();
+            loop {
+                if let Some(it) = q.pop_front() {
+                    break Some(it);
+                }
+                if sh.stopping.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = sh
+                    .work_cv
+                    .wait_timeout(q, Duration::from_millis(200))
+                    .unwrap()
+                    .0;
+            }
+        };
+        let Some(item) = item else { return };
+        match item {
+            WorkItem::One {
+                conn,
+                seq,
+                req,
+                arrived,
+                mode,
+            } => run_one(sh, conn, seq, req, arrived, mode),
+            WorkItem::Batch {
+                conn,
+                seq,
+                corr_id,
+                key,
+                deadline_budget_ms,
+                px,
+                images,
+                arrived,
+            } => run_batch(
+                sh,
+                conn,
+                seq,
+                corr_id,
+                key,
+                deadline_budget_ms,
+                px,
+                images,
+                arrived,
+            ),
+        }
+    }
+}
+
+/// Runs one fault action (shared with the batch path). Returns `true`
+/// if the connection should be dropped without a reply.
+fn apply_fault(sh: &Arc<AioShared>, action: &super::fault::FaultAction, conn: u64, seq: u64) -> bool {
+    if let Some(d) = action.delay {
+        std::thread::sleep(d);
+    }
+    if action.kill {
+        eprintln!("fault: kill-after tripped, exiting");
+        std::process::exit(super::fault::FAULT_KILL_EXIT);
+    }
+    if action.drop_conn {
+        sh.complete(Completion {
+            conn,
+            seq,
+            bytes: Vec::new(),
+            close: true,
+            drop_now: true,
+        });
+        return true;
+    }
+    false
+}
+
+fn run_one(sh: &Arc<AioShared>, conn: u64, seq: u64, req: Request, arrived: Instant, mode: EncodeMode) {
+    // Fault injection arms on infer ops only — metrics probes stay
+    // truthful so health checkers see the misbehaving replica (parity
+    // with the blocking tier).
+    let action = match (&req, &sh.fault) {
+        (Request::Infer { .. }, Some(f)) => f.next_action(),
+        _ => Default::default(),
+    };
+    if apply_fault(sh, &action, conn, seq) {
+        return;
+    }
+    if matches!(req, Request::Infer { .. }) {
+        sh.stats.record_request();
+    }
+    let shc = sh.clone();
+    let corrupt = action.corrupt;
+    let done: DoneFn = Box::new(move |resp: Response| {
+        let (bytes, close) = encode_completion(&shc, &mode, &resp, corrupt);
+        shc.complete(Completion {
+            conn,
+            seq,
+            bytes,
+            close,
+            drop_now: false,
+        });
+    });
+    sh.handler.call(req, arrived, &sh.stats, done);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_batch(
+    sh: &Arc<AioShared>,
+    conn: u64,
+    seq: u64,
+    corr_id: u32,
+    key: String,
+    deadline_budget_ms: u32,
+    px: usize,
+    images: Vec<f32>,
+    arrived: Instant,
+) {
+    let count = images.len() / px.max(1);
+    let action = match &sh.fault {
+        Some(f) => f.next_action(),
+        None => Default::default(),
+    };
+    if apply_fault(sh, &action, conn, seq) {
+        return;
+    }
+    let corrupt = action.corrupt;
+    // Fan out one engine submit per image; the last completion to land
+    // encodes the joined OP_LOGITS_BATCH frame. Rows keep submission
+    // order regardless of completion order.
+    let slots: Arc<Mutex<Vec<Option<Response>>>> = Arc::new(Mutex::new(vec![None; count]));
+    let remaining = Arc::new(AtomicUsize::new(count));
+    for i in 0..count {
+        sh.stats.record_request();
+        let req = Request::Infer {
+            key: key.clone(),
+            deadline_budget_ms,
+            image: images[i * px..(i + 1) * px].to_vec(),
+        };
+        let shc = sh.clone();
+        let slots = slots.clone();
+        let remaining = remaining.clone();
+        let done: DoneFn = Box::new(move |resp: Response| {
+            slots.lock().unwrap()[i] = Some(resp);
+            if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let rows: Vec<Response> = slots
+                    .lock()
+                    .unwrap()
+                    .iter_mut()
+                    .map(|s| s.take().expect("every row completed"))
+                    .collect();
+                let bytes = if corrupt {
+                    frame(&[0xFF, 0xFF, 0xFF, 0xFF])
+                } else {
+                    frame(&proto::encode_logits_batch(corr_id, &rows))
+                };
+                shc.complete(Completion {
+                    conn,
+                    seq,
+                    bytes,
+                    close: false,
+                    drop_now: false,
+                });
+            }
+        });
+        sh.handler.call(req, arrived, &sh.stats, done);
+    }
+}
+
+/// Encodes one response per the request's [`EncodeMode`]; returns the
+/// wire bytes and whether the connection closes after them. HTTP
+/// completions emit their `http_request` telemetry here — the one
+/// place every routed HTTP response passes through.
+fn encode_completion(
+    sh: &AioShared,
+    mode: &EncodeMode,
+    resp: &Response,
+    corrupt: bool,
+) -> (Vec<u8>, bool) {
+    match mode {
+        EncodeMode::V1 => {
+            let bytes = if corrupt {
+                frame(&[0xFF, 0xFF, 0xFF, 0xFF])
+            } else {
+                frame(&proto::encode_response(resp))
+            };
+            (bytes, false)
+        }
+        EncodeMode::V2 { corr_id } => {
+            let bytes = if corrupt {
+                frame(&[0xFF, 0xFF, 0xFF, 0xFF])
+            } else {
+                frame(&proto::encode_response_v2(*corr_id, resp))
+            };
+            (bytes, false)
+        }
+        EncodeMode::Http {
+            kind,
+            keep_alive,
+            method,
+            path,
+            start,
+        } => {
+            let status = match resp {
+                Response::Error { code, .. } => http::status_for(*code),
+                _ => 200,
+            };
+            sh.stats.record_http_request();
+            sh.telemetry.emit(Event::HttpRequest {
+                method: method.clone(),
+                path: path.clone(),
+                status,
+                latency_us: start.elapsed().as_micros() as u64,
+            });
+            let bytes = if corrupt {
+                b"garbage that is not HTTP\r\n".to_vec()
+            } else {
+                http::render_response(resp, *keep_alive, matches!(kind, HttpKind::Prometheus))
+            };
+            (bytes, !keep_alive)
+        }
+    }
+}
+
+// -------------------------------------------------------------- poller
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ConnKind {
+    Binary,
+    Http,
+}
+
+struct Conn {
+    stream: TcpStream,
+    peer: String,
+    kind: ConnKind,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    outpos: usize,
+    next_seq: u64,
+    next_write_seq: u64,
+    /// Out-of-order completions waiting their turn (ordered conns).
+    pending: BTreeMap<u64, (Vec<u8>, bool)>,
+    outstanding: usize,
+    served: u64,
+    /// `None` until the first binary frame decides (v1 ⇒ ordered, v2 ⇒
+    /// free); HTTP connections are always ordered.
+    ordered: Option<bool>,
+    reported_pipelined: bool,
+    read_closed: bool,
+    closing: bool,
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, peer: String, kind: ConnKind) -> Conn {
+        Conn {
+            stream,
+            peer,
+            kind,
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+            outpos: 0,
+            next_seq: 0,
+            next_write_seq: 0,
+            pending: BTreeMap::new(),
+            outstanding: 0,
+            served: 0,
+            ordered: match kind {
+                ConnKind::Http => Some(true),
+                ConnKind::Binary => None,
+            },
+            reported_pipelined: false,
+            read_closed: false,
+            closing: false,
+            dead: false,
+        }
+    }
+
+    fn unflushed(&self) -> bool {
+        self.outpos < self.outbuf.len()
+    }
+
+    /// Applies one completion: ordered connections flush strictly by
+    /// sequence number, unordered ones append immediately.
+    fn deliver(&mut self, seq: u64, bytes: Vec<u8>, close: bool, drop_now: bool) {
+        if drop_now {
+            self.dead = true;
+            return;
+        }
+        if self.ordered.unwrap_or(true) {
+            self.pending.insert(seq, (bytes, close));
+            while let Some((b, c)) = self.pending.remove(&self.next_write_seq) {
+                self.next_write_seq += 1;
+                self.outstanding -= 1;
+                self.served += 1;
+                self.outbuf.extend_from_slice(&b);
+                if c {
+                    self.closing = true;
+                }
+            }
+        } else {
+            self.outstanding -= 1;
+            self.served += 1;
+            self.outbuf.extend_from_slice(&bytes);
+            if close {
+                self.closing = true;
+            }
+        }
+    }
+}
+
+fn poller(
+    sh: &Arc<AioShared>,
+    mut binary: Option<TcpListener>,
+    mut httpl: Option<TcpListener>,
+    wake_rx: UnixStream,
+) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_id: u64 = 0;
+    let mut drain_deadline: Option<Instant> = None;
+    let mut fds: Vec<PollFd> = Vec::new();
+    let mut order: Vec<u64> = Vec::new();
+
+    loop {
+        let stopping = sh.stopping.load(Ordering::Acquire);
+        if stopping {
+            if drain_deadline.is_none() {
+                drain_deadline = Some(Instant::now() + DRAIN_DEADLINE);
+                // Close the listeners, refusing anything still in the
+                // kernel backlog with a typed frame / 503.
+                if let Some(l) = binary.take() {
+                    drain_backlog(&l, ConnKind::Binary);
+                }
+                if let Some(l) = httpl.take() {
+                    drain_backlog(&l, ConnKind::Http);
+                }
+            }
+            let drained = conns.values().all(|c| c.outstanding == 0 && !c.unflushed());
+            if drained || Instant::now() >= drain_deadline.unwrap() {
+                final_refusals(sh, conns);
+                return;
+            }
+        }
+
+        // Rebuild the pollfd set. Index 0 is the wake fd, then the
+        // listeners, then every connection (order[] maps fd slots back
+        // to connection ids).
+        fds.clear();
+        order.clear();
+        fds.push(PollFd {
+            fd: wake_rx.as_raw_fd(),
+            events: POLLIN,
+            revents: 0,
+        });
+        let listeners_at = fds.len();
+        for l in binary.iter().chain(httpl.iter()) {
+            fds.push(PollFd {
+                fd: l.as_raw_fd(),
+                events: POLLIN,
+                revents: 0,
+            });
+        }
+        let conns_at = fds.len();
+        for (&id, c) in conns.iter() {
+            let mut events = 0i16;
+            if !c.read_closed && !c.closing && !stopping && c.outstanding < MAX_PIPELINE {
+                events |= POLLIN;
+            }
+            if c.unflushed() {
+                events |= POLLOUT;
+            }
+            fds.push(PollFd {
+                fd: c.stream.as_raw_fd(),
+                events,
+                revents: 0,
+            });
+            order.push(id);
+        }
+
+        if poll_fds(&mut fds, POLL_TIMEOUT_MS).is_err() {
+            // poll(2) itself failing (other than EINTR, retried inside)
+            // means the fd set is broken; spinning would burn a core.
+            std::thread::sleep(Duration::from_millis(10));
+            continue;
+        }
+
+        // Drain the wake fd (bytes carry no meaning beyond the wakeup).
+        if fds[0].revents & POLLIN != 0 {
+            let mut sink = [0u8; 64];
+            while matches!((&wake_rx).read(&mut sink), Ok(n) if n > 0) {}
+        }
+
+        // Accept on readable listeners.
+        if !stopping {
+            let mut slot = listeners_at;
+            for (l, kind) in binary
+                .iter()
+                .map(|l| (l, ConnKind::Binary))
+                .chain(httpl.iter().map(|l| (l, ConnKind::Http)))
+            {
+                if fds[slot].revents & POLLIN != 0 {
+                    accept_ready(sh, l, kind, &mut conns, &mut next_id);
+                }
+                slot += 1;
+            }
+        }
+
+        // Socket readiness.
+        for (i, &id) in order.iter().enumerate() {
+            let revents = fds[conns_at + i].revents;
+            if revents == 0 {
+                continue;
+            }
+            let Some(conn) = conns.get_mut(&id) else { continue };
+            if revents & (POLLERR | POLLNVAL) != 0 {
+                conn.dead = true;
+                continue;
+            }
+            if revents & (POLLIN | POLLHUP) != 0 {
+                try_read(conn);
+                if !stopping {
+                    parse_input(sh, id, conn);
+                }
+            }
+            if revents & POLLOUT != 0 {
+                try_write(conn);
+            }
+        }
+
+        // Apply completions from the dispatch/engine side, then push
+        // any freshly buffered bytes eagerly (most sockets are
+        // writable; waiting a poll round would add latency for
+        // nothing).
+        let ready: Vec<Completion> = std::mem::take(&mut *sh.completions.lock().unwrap());
+        for c in ready {
+            if let Some(conn) = conns.get_mut(&c.conn) {
+                conn.deliver(c.seq, c.bytes, c.close, c.drop_now);
+            }
+        }
+        for conn in conns.values_mut() {
+            if conn.unflushed() && !conn.dead {
+                try_write(conn);
+            }
+        }
+
+        // Sweep closed connections.
+        conns.retain(|_, c| {
+            let done_writing = !c.unflushed();
+            let remove = c.dead
+                || (c.closing && done_writing)
+                || (c.read_closed && c.outstanding == 0 && done_writing);
+            if remove {
+                sh.telemetry.emit(Event::ConnClosed {
+                    peer: c.peer.clone(),
+                    requests: c.served,
+                });
+            }
+            !remove
+        });
+    }
+}
+
+fn accept_ready(
+    sh: &Arc<AioShared>,
+    listener: &TcpListener,
+    kind: ConnKind,
+    conns: &mut HashMap<u64, Conn>,
+    next_id: &mut u64,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                sh.stats.record_connection();
+                let peer = peer.to_string();
+                sh.telemetry.emit(Event::ConnOpened { peer: peer.clone() });
+                let id = *next_id;
+                *next_id += 1;
+                conns.insert(id, Conn::new(stream, peer, kind));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            // Transient accept failure (EMFILE, aborted handshake):
+            // leave it for the next tick rather than spinning here.
+            Err(_) => break,
+        }
+    }
+}
+
+fn try_read(conn: &mut Conn) {
+    let mut buf = [0u8; READ_CHUNK];
+    // Bounded per tick so one firehose connection cannot starve the
+    // rest; leftover bytes re-arm via level-triggered poll.
+    for _ in 0..16 {
+        match conn.stream.read(&mut buf) {
+            Ok(0) => {
+                conn.read_closed = true;
+                return;
+            }
+            Ok(n) => {
+                conn.inbuf.extend_from_slice(&buf[..n]);
+                if n < buf.len() {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+fn try_write(conn: &mut Conn) {
+    while conn.unflushed() {
+        match conn.stream.write(&conn.outbuf[conn.outpos..]) {
+            Ok(0) => {
+                conn.dead = true;
+                return;
+            }
+            Ok(n) => conn.outpos += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+    if !conn.unflushed() {
+        conn.outbuf.clear();
+        conn.outpos = 0;
+    } else if conn.outpos > 64 * 1024 {
+        conn.outbuf.drain(..conn.outpos);
+        conn.outpos = 0;
+    }
+}
+
+/// Parses as many complete requests as the buffer holds, enqueueing
+/// work items. Stops at the pipeline cap (backpressure) or on a
+/// protocol error (typed reply, then close).
+fn parse_input(sh: &Arc<AioShared>, id: u64, conn: &mut Conn) {
+    while !conn.closing && !conn.dead && conn.outstanding < MAX_PIPELINE {
+        match conn.kind {
+            ConnKind::Binary => {
+                if conn.inbuf.len() < 4 {
+                    return;
+                }
+                let len = u32::from_le_bytes(conn.inbuf[..4].try_into().unwrap()) as usize;
+                if len > proto::MAX_FRAME {
+                    sh.stats.record_protocol_error();
+                    // Stop reading immediately — the stream may still be
+                    // feeding bytes, but nothing after a protocol error
+                    // is trustworthy (the typed reply below may queue
+                    // behind in-flight replies before `closing` arms).
+                    conn.read_closed = true;
+                    answer_inline(
+                        conn,
+                        frame(&proto::encode_response(&Response::Error {
+                            code: ErrorCode::BadFrame,
+                            detail: format!("frame of {} bytes exceeds the cap", len),
+                        })),
+                        true,
+                    );
+                    return;
+                }
+                if conn.inbuf.len() < 4 + len {
+                    return;
+                }
+                let payload: Vec<u8> = conn.inbuf[4..4 + len].to_vec();
+                conn.inbuf.drain(..4 + len);
+                let arrived = Instant::now();
+                match proto::decode_request_framed(&payload) {
+                    Ok(framed) => {
+                        if conn.ordered.is_none() {
+                            conn.ordered = Some(matches!(framed, FramedRequest::V1(_)));
+                        }
+                        let seq = begin_request(sh, conn);
+                        let item = match framed {
+                            FramedRequest::V1(req) => WorkItem::One {
+                                conn: id,
+                                seq,
+                                req,
+                                arrived,
+                                mode: EncodeMode::V1,
+                            },
+                            FramedRequest::V2 { corr_id, req } => WorkItem::One {
+                                conn: id,
+                                seq,
+                                req,
+                                arrived,
+                                mode: EncodeMode::V2 { corr_id },
+                            },
+                            FramedRequest::V2Batch {
+                                corr_id,
+                                key,
+                                deadline_budget_ms,
+                                count: _,
+                                px,
+                                images,
+                            } => WorkItem::Batch {
+                                conn: id,
+                                seq,
+                                corr_id,
+                                key,
+                                deadline_budget_ms,
+                                px,
+                                images,
+                                arrived,
+                            },
+                        };
+                        sh.push_work(item);
+                    }
+                    Err(e) => {
+                        sh.stats.record_protocol_error();
+                        conn.read_closed = true;
+                        answer_inline(
+                            conn,
+                            frame(&proto::encode_response(&Response::Error {
+                                code: ErrorCode::BadFrame,
+                                detail: e.to_string(),
+                            })),
+                            true,
+                        );
+                        return;
+                    }
+                }
+            }
+            ConnKind::Http => {
+                let start = Instant::now();
+                match http::try_parse(&conn.inbuf) {
+                    HttpParse::Partial => return,
+                    HttpParse::Bad(why) => {
+                        sh.stats.record_protocol_error();
+                        conn.read_closed = true;
+                        http_inline(sh, conn, "?", "?", 400, "bad_request", &why, false, start);
+                        return;
+                    }
+                    HttpParse::Ready { req, consumed } => {
+                        conn.inbuf.drain(..consumed);
+                        route_http(sh, id, conn, req, start);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Assigns the next sequence number, bumps the outstanding count, and
+/// reports the first moment this connection actually pipelines (≥ 2
+/// outstanding requests).
+fn begin_request(sh: &Arc<AioShared>, conn: &mut Conn) -> u64 {
+    let seq = conn.next_seq;
+    conn.next_seq += 1;
+    conn.outstanding += 1;
+    if conn.outstanding >= 2 && !conn.reported_pipelined {
+        conn.reported_pipelined = true;
+        sh.stats.record_pipelined_conn();
+        sh.telemetry.emit(Event::ConnPipelined {
+            peer: conn.peer.clone(),
+            depth: conn.outstanding as u64,
+        });
+    }
+    seq
+}
+
+/// Delivers a poller-generated reply through the ordinary sequencing
+/// machinery (so it interleaves correctly with in-flight requests).
+fn answer_inline(conn: &mut Conn, bytes: Vec<u8>, close: bool) {
+    let seq = conn.next_seq;
+    conn.next_seq += 1;
+    conn.outstanding += 1;
+    conn.deliver(seq, bytes, close, false);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn http_inline(
+    sh: &Arc<AioShared>,
+    conn: &mut Conn,
+    method: &str,
+    path: &str,
+    status: u16,
+    error: &str,
+    detail: &str,
+    keep_alive: bool,
+    start: Instant,
+) {
+    sh.stats.record_http_request();
+    sh.telemetry.emit(Event::HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        status,
+        latency_us: start.elapsed().as_micros() as u64,
+    });
+    answer_inline(
+        conn,
+        http::error_response(status, error, detail, keep_alive),
+        !keep_alive,
+    );
+}
+
+fn route_http(sh: &Arc<AioShared>, id: u64, conn: &mut Conn, req: http::HttpRequest, start: Instant) {
+    let arrived = Instant::now();
+    let keep_alive = req.keep_alive;
+    let kind = match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/infer") => HttpKind::Infer,
+        ("GET", "/v1/metrics") => HttpKind::MetricsJson,
+        ("GET", "/metrics") => HttpKind::Prometheus,
+        (m, p) => {
+            http_inline(
+                sh,
+                conn,
+                m,
+                p,
+                404,
+                "not_found",
+                &format!("no route {} {}", m, p),
+                keep_alive,
+                start,
+            );
+            return;
+        }
+    };
+    let wire_req = match kind {
+        HttpKind::Infer => match http::parse_infer_body(&req.body) {
+            Ok((key, deadline_ms, image)) => Request::Infer {
+                key,
+                deadline_budget_ms: deadline_ms,
+                image,
+            },
+            Err(why) => {
+                http_inline(
+                    sh,
+                    conn,
+                    &req.method,
+                    &req.path,
+                    400,
+                    "bad_request",
+                    &why,
+                    keep_alive,
+                    start,
+                );
+                return;
+            }
+        },
+        HttpKind::MetricsJson | HttpKind::Prometheus => Request::Metrics,
+    };
+    let seq = begin_request(sh, conn);
+    sh.push_work(WorkItem::One {
+        conn: id,
+        seq,
+        req: wire_req,
+        arrived,
+        mode: EncodeMode::Http {
+            kind,
+            keep_alive,
+            method: req.method,
+            path: req.path,
+            start,
+        },
+    });
+}
+
+/// Refuses whatever sits in the kernel accept backlog at shutdown with
+/// a typed frame / 503 instead of a reset.
+fn drain_backlog(listener: &TcpListener, kind: ConnKind) {
+    while let Ok((mut stream, _)) = listener.accept() {
+        let _ = stream.set_nonblocking(false);
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+        let bytes = match kind {
+            ConnKind::Binary => refusal_frame(),
+            ConnKind::Http => http::error_response(503, "shutting_down", "server is draining", false),
+        };
+        let _ = stream.write_all(&bytes);
+    }
+}
+
+/// End of drain: every connection gets its remaining buffered replies
+/// plus a typed refusal, written best-effort with a bounded timeout,
+/// and its `conn_closed` telemetry event.
+fn final_refusals(sh: &Arc<AioShared>, conns: HashMap<u64, Conn>) {
+    for (_, mut conn) in conns {
+        if !conn.dead && !conn.closing {
+            let bytes = match conn.kind {
+                ConnKind::Binary => refusal_frame(),
+                ConnKind::Http => {
+                    http::error_response(503, "shutting_down", "server is draining", false)
+                }
+            };
+            conn.outbuf.extend_from_slice(&bytes);
+        }
+        if !conn.dead && conn.unflushed() {
+            let _ = conn.stream.set_nonblocking(false);
+            let _ = conn.stream.set_write_timeout(Some(Duration::from_secs(1)));
+            let _ = conn.stream.write_all(&conn.outbuf[conn.outpos..]);
+        }
+        sh.telemetry.emit(Event::ConnClosed {
+            peer: conn.peer.clone(),
+            requests: conn.served,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poll_shim_reports_readiness() {
+        let (a, b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        let mut fds = [PollFd {
+            fd: a.as_raw_fd(),
+            events: POLLIN,
+            revents: 0,
+        }];
+        // Nothing to read yet: poll times out with zero ready fds.
+        assert_eq!(poll_fds(&mut fds, 0).unwrap(), 0);
+        (&b).write_all(&[1]).unwrap();
+        fds[0].revents = 0;
+        assert_eq!(poll_fds(&mut fds, 1000).unwrap(), 1);
+        assert!(fds[0].revents & POLLIN != 0);
+    }
+
+    #[test]
+    fn ordered_delivery_buffers_until_turn() {
+        let stream = {
+            // Any connected socket works; use a loopback pair.
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            let c = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+            let _ = l.accept().unwrap();
+            c
+        };
+        let mut conn = Conn::new(stream, "test".into(), ConnKind::Binary);
+        conn.ordered = Some(true);
+        conn.next_seq = 3;
+        conn.outstanding = 3;
+        conn.deliver(2, b"c".to_vec(), false, false);
+        assert!(conn.outbuf.is_empty(), "seq 2 must wait for 0 and 1");
+        conn.deliver(0, b"a".to_vec(), false, false);
+        assert_eq!(conn.outbuf, b"a", "seq 0 flushes alone");
+        conn.deliver(1, b"b".to_vec(), false, false);
+        assert_eq!(conn.outbuf, b"abc", "1 unlocks the buffered 2");
+        assert_eq!(conn.outstanding, 0);
+        assert_eq!(conn.served, 3);
+    }
+
+    #[test]
+    fn unordered_delivery_is_immediate() {
+        let stream = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            let c = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+            let _ = l.accept().unwrap();
+            c
+        };
+        let mut conn = Conn::new(stream, "test".into(), ConnKind::Binary);
+        conn.ordered = Some(false);
+        conn.next_seq = 2;
+        conn.outstanding = 2;
+        conn.deliver(1, b"late".to_vec(), false, false);
+        assert_eq!(conn.outbuf, b"late");
+        conn.deliver(0, b"early".to_vec(), false, false);
+        assert_eq!(conn.outbuf, b"lateearly");
+    }
+}

@@ -26,7 +26,7 @@
 
 use super::proto::{self, ErrorCode, ProtoError, Request, Response};
 use crate::util::prng::Rng;
-use std::io;
+use std::io::{self, Read, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
@@ -328,5 +328,309 @@ impl WireClient {
                 Err(anyhow::anyhow!("logits response to a metrics request"))
             }
         }
+    }
+}
+
+// --------------------------------------------------- pipelined client
+
+/// Protocol-v2 client: many requests in flight on one connection,
+/// replies matched by correlation id. Unlike [`WireClient`] this is
+/// deliberately bare — no reconnect, no retry — because a pipelined
+/// stream has no safe generic recovery (which of the in-flight
+/// requests executed?); loadgen and tests own that policy.
+pub struct PipelinedClient {
+    stream: TcpStream,
+    next_corr: u32,
+}
+
+impl PipelinedClient {
+    /// Single eager dial (read-bounded by [`DEFAULT_READ_TIMEOUT`]).
+    pub fn connect(addr: &str) -> crate::Result<PipelinedClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("connect to {} failed: {}", addr, e))?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(DEFAULT_READ_TIMEOUT));
+        let _ = stream.set_write_timeout(Some(DEFAULT_READ_TIMEOUT));
+        Ok(PipelinedClient {
+            stream,
+            next_corr: 1,
+        })
+    }
+
+    pub fn with_read_timeout(self, timeout: Duration) -> PipelinedClient {
+        let _ = self
+            .stream
+            .set_read_timeout(Some(timeout.max(Duration::from_millis(1))));
+        self
+    }
+
+    fn fresh_corr(&mut self) -> u32 {
+        let id = self.next_corr;
+        self.next_corr = self.next_corr.wrapping_add(1).max(1);
+        id
+    }
+
+    /// Fires one infer request without waiting; returns its correlation
+    /// id. Replies arrive via [`recv`](PipelinedClient::recv) in
+    /// whatever order the server finishes them.
+    pub fn submit(&mut self, key: &str, image: &[f32], budget_ms: u32) -> crate::Result<u32> {
+        let corr = self.fresh_corr();
+        proto::write_frame(
+            &mut self.stream,
+            &proto::encode_infer_v2(corr, key, budget_ms, image),
+        )?;
+        Ok(corr)
+    }
+
+    /// Fires a metrics request without waiting.
+    pub fn submit_metrics(&mut self) -> crate::Result<u32> {
+        let corr = self.fresh_corr();
+        proto::write_frame(&mut self.stream, &proto::encode_metrics_v2(corr))?;
+        Ok(corr)
+    }
+
+    /// Fires one streaming batch (`images.len() / px` images in one
+    /// frame); the reply is a single `V2Batch` with one row per image
+    /// in submission order.
+    pub fn submit_batch(
+        &mut self,
+        key: &str,
+        budget_ms: u32,
+        px: usize,
+        images: &[f32],
+    ) -> crate::Result<u32> {
+        anyhow::ensure!(px > 0 && images.len() % px == 0, "images must be whole");
+        let corr = self.fresh_corr();
+        proto::write_frame(
+            &mut self.stream,
+            &proto::encode_infer_batch(corr, key, budget_ms, images.len() / px, px, images),
+        )?;
+        Ok(corr)
+    }
+
+    /// Blocks for the next reply frame, whichever request it answers.
+    pub fn recv(&mut self) -> crate::Result<proto::FramedResponse> {
+        let frame = proto::read_frame(&mut self.stream)
+            .map_err(|e| anyhow::anyhow!("pipelined read failed: {}", e))?
+            .ok_or_else(|| anyhow::anyhow!("server closed mid-pipeline"))?;
+        Ok(proto::decode_response_framed(&frame)?)
+    }
+
+    /// [`recv`](PipelinedClient::recv) narrowed to a single v2 infer
+    /// reply: `(corr_id, outcome)`.
+    pub fn recv_infer(&mut self) -> crate::Result<(u32, WireResponse)> {
+        match self.recv()? {
+            proto::FramedResponse::V2 {
+                corr_id,
+                resp: Response::Logits {
+                    class,
+                    latency_us,
+                    occupancy,
+                    padded,
+                    logits,
+                },
+            } => Ok((
+                corr_id,
+                WireResponse::Infer(WireInfer {
+                    class: class as usize,
+                    latency_us,
+                    batch: (occupancy as usize, padded as usize),
+                    logits,
+                }),
+            )),
+            proto::FramedResponse::V2 {
+                corr_id,
+                resp: Response::Error { code, detail },
+            } => Ok((corr_id, WireResponse::Error { code, detail })),
+            other => Err(anyhow::anyhow!(
+                "expected a v2 infer reply, got {:?}",
+                response_kind(&other)
+            )),
+        }
+    }
+}
+
+fn response_kind(r: &proto::FramedResponse) -> &'static str {
+    match r {
+        proto::FramedResponse::V1(_) => "v1",
+        proto::FramedResponse::V2 { .. } => "v2",
+        proto::FramedResponse::V2Batch { .. } => "v2 batch",
+    }
+}
+
+// -------------------------------------------------------- http client
+
+/// Minimal keep-alive HTTP/1.1 caller for the async tier's JSON
+/// endpoints — enough for loadgen and tests (real consumers use curl
+/// or any HTTP library; the server speaks plain HTTP/1.1).
+///
+/// One cached connection, `Content-Length`-framed responses, and the
+/// same one-retry-on-stale-connection policy as [`WireClient`].
+pub struct HttpClient {
+    addr: String,
+    stream: Option<TcpStream>,
+    read_timeout: Duration,
+    dials: u64,
+}
+
+impl HttpClient {
+    pub fn new(addr: impl Into<String>) -> HttpClient {
+        HttpClient {
+            addr: addr.into(),
+            stream: None,
+            read_timeout: DEFAULT_READ_TIMEOUT,
+            dials: 0,
+        }
+    }
+
+    pub fn with_read_timeout(mut self, timeout: Duration) -> HttpClient {
+        self.read_timeout = timeout.max(Duration::from_millis(1));
+        self
+    }
+
+    /// TCP dials performed so far — 1 across many requests proves
+    /// keep-alive reuse.
+    pub fn dials(&self) -> u64 {
+        self.dials
+    }
+
+    /// `POST /v1/infer`; returns `(status, body)`.
+    pub fn infer(
+        &mut self,
+        key: &str,
+        image: &[f32],
+        deadline_ms: u32,
+    ) -> crate::Result<(u16, String)> {
+        use crate::util::json::Json;
+        let body = Json::obj(vec![
+            ("variant", Json::str(key)),
+            ("deadline_ms", Json::Num(deadline_ms as f64)),
+            (
+                "image",
+                Json::Arr(image.iter().map(|&x| Json::Num(x as f64)).collect()),
+            ),
+        ])
+        .to_string();
+        self.request("POST", "/v1/infer", Some(&body))
+    }
+
+    /// Any request against the cached connection; returns
+    /// `(status, body)`. Retries once on a fresh connection if a
+    /// *reused* one failed (idled out between calls).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> crate::Result<(u16, String)> {
+        for attempt in 0..2u8 {
+            let reused = self.stream.is_some();
+            match self.request_once(method, path, body) {
+                Ok(out) => return Ok(out),
+                Err(e) => {
+                    self.stream = None;
+                    if attempt == 0 && reused {
+                        continue;
+                    }
+                    return Err(anyhow::anyhow!("http {} {} failed: {}", method, path, e));
+                }
+            }
+        }
+        unreachable!("retry loop returns on the second attempt");
+    }
+
+    fn request_once(&mut self, method: &str, path: &str, body: Option<&str>) -> io::Result<(u16, String)> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect(&self.addr)?;
+            let _ = s.set_nodelay(true);
+            let _ = s.set_read_timeout(Some(self.read_timeout));
+            let _ = s.set_write_timeout(Some(self.read_timeout));
+            self.dials += 1;
+            self.stream = Some(s);
+        }
+        let stream = self.stream.as_mut().expect("just connected");
+        let body = body.unwrap_or("");
+        let head = format!(
+            "{} {} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            method,
+            path,
+            self.addr,
+            body.len(),
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body.as_bytes())?;
+        stream.flush()?;
+
+        // Read the response: headers to the terminator, then exactly
+        // Content-Length body bytes.
+        let mut buf = Vec::new();
+        let mut chunk = [0u8; 4096];
+        let head_end = loop {
+            if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break i;
+            }
+            if buf.len() > 64 * 1024 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "response headers exceed 64 KiB",
+                ));
+            }
+            let n = stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-response",
+                ));
+            }
+            buf.extend_from_slice(&chunk[..n]);
+        };
+        let head_text = String::from_utf8_lossy(&buf[..head_end]).to_string();
+        let mut lines = head_text.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let status: u16 = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("bad status line {:?}", status_line),
+                )
+            })?;
+        let mut content_length = 0usize;
+        let mut keep_alive = true;
+        for line in lines {
+            let Some((name, value)) = line.split_once(':') else { continue };
+            match name.trim().to_ascii_lowercase().as_str() {
+                "content-length" => {
+                    content_length = value.trim().parse().map_err(|_| {
+                        io::Error::new(io::ErrorKind::InvalidData, "bad content-length")
+                    })?;
+                }
+                "connection" => {
+                    keep_alive = !value.trim().eq_ignore_ascii_case("close");
+                }
+                _ => {}
+            }
+        }
+        let body_start = head_end + 4;
+        let mut body_bytes = buf[body_start..].to_vec();
+        while body_bytes.len() < content_length {
+            let n = stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-body",
+                ));
+            }
+            body_bytes.extend_from_slice(&chunk[..n]);
+        }
+        body_bytes.truncate(content_length);
+        if !keep_alive {
+            self.stream = None;
+        }
+        let text = String::from_utf8(body_bytes)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "body is not utf-8"))?;
+        Ok((status, text))
     }
 }

@@ -1,6 +1,17 @@
-//! Per-connection request loop: framed read → deadline stamp → handler
-//! dispatch → framed reply, one request at a time per connection
-//! (pipelining safety comes from the strict request/response ordering).
+//! Per-connection request loop for the **legacy blocking tier**
+//! (`strum serve --legacy-threads`): framed read → deadline stamp →
+//! handler dispatch → framed reply, one request at a time per
+//! connection (pipelining safety comes from the strict
+//! request/response ordering).
+//!
+//! Deprecated as a serving default — the stop-flag-polling read loop
+//! below wastes a wakeup per [`READ_POLL`] per idle connection, and a
+//! thread per connection caps fleet size. The async tier
+//! ([`super::aio`]) replaces both with one poller and a wake fd; this
+//! tier remains as a fallback and as the simplest reference
+//! implementation of the protocol's serving semantics (the engine
+//! `WireHandler` impl below is the behavioural spec the async tier's
+//! callback path mirrors arm-for-arm).
 //!
 //! The loop is handler-agnostic ([`WireHandler`]): the engine answers
 //! requests locally; the gateway answers them by routing to replicas.

@@ -1,0 +1,540 @@
+//! Minimal HTTP/1.1 support for the async tier: an incremental
+//! request parser, response builders, the `/v1/infer` JSON binding,
+//! and the Prometheus text exposition of `MetricsSnapshot`.
+//!
+//! This is deliberately a *subset* of HTTP/1.1 — exactly what serving
+//! JSON over keep-alive connections needs, with nothing speculative:
+//!
+//! - Request bodies are framed by `Content-Length` only
+//!   (`Transfer-Encoding: chunked` is refused with `400`, never
+//!   misparsed as an empty body).
+//! - Connections are keep-alive by default (HTTP/1.1 semantics);
+//!   `Connection: close` is honored, and HTTP/1.0 peers default to
+//!   close unless they ask for keep-alive.
+//! - Headers are capped at [`MAX_HEADER_BYTES`] and bodies at
+//!   [`MAX_BODY_BYTES`]; a peer exceeding either gets a typed `400`
+//!   and the connection closes — never an unbounded buffer.
+//! - Responses always carry `Content-Length`, so the peer can reuse
+//!   the connection without sniffing for EOF.
+//!
+//! The route table lives in [`aio`](super::aio) (the parser does not
+//! know what paths exist); this module only converts bytes ↔ typed
+//! requests/responses. HTTP/2 and TLS are explicit non-goals for now
+//! (see ROADMAP follow-ups).
+
+use super::proto::{ErrorCode, Response};
+use crate::util::json::Json;
+
+/// Cap on the request line + headers (terminator included).
+pub const MAX_HEADER_BYTES: usize = 64 * 1024;
+
+/// Cap on a request body (matches the binary protocol's frame cap, so
+/// the same image payloads fit through either front door).
+pub const MAX_BODY_BYTES: usize = super::proto::MAX_FRAME;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Path only — a query string, if any, is split off and discarded
+    /// (no endpoint takes query parameters today).
+    pub path: String,
+    /// Whether the connection should stay open after the response.
+    pub keep_alive: bool,
+    pub body: Vec<u8>,
+}
+
+/// Incremental parse result over a connection's read buffer.
+#[derive(Debug)]
+pub enum HttpParse {
+    /// A complete request; `consumed` bytes should be drained from the
+    /// front of the buffer.
+    Ready { req: HttpRequest, consumed: usize },
+    /// The buffer does not hold a complete request yet.
+    Partial,
+    /// Irrecoverably malformed: answer `400` with this detail and
+    /// close (the stream is no longer request-aligned).
+    Bad(String),
+}
+
+/// Attempts to parse one request from the front of `buf`. Never
+/// panics on hostile input; every length is checked against the caps
+/// before any allocation sized from peer data.
+pub fn try_parse(buf: &[u8]) -> HttpParse {
+    let head_end = match find_terminator(buf) {
+        Some(i) => i,
+        None if buf.len() > MAX_HEADER_BYTES => {
+            return HttpParse::Bad(format!("headers exceed the {} byte cap", MAX_HEADER_BYTES));
+        }
+        None => return HttpParse::Partial,
+    };
+    if head_end > MAX_HEADER_BYTES {
+        return HttpParse::Bad(format!("headers exceed the {} byte cap", MAX_HEADER_BYTES));
+    }
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(s) => s,
+        Err(_) => return HttpParse::Bad("headers are not valid utf-8".into()),
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("");
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty() || parts.next().is_some() {
+        return HttpParse::Bad(format!("malformed request line {:?}", request_line));
+    }
+    if !version.starts_with("HTTP/1.") {
+        return HttpParse::Bad(format!("unsupported version {:?}", version));
+    }
+    // HTTP/1.1 defaults to keep-alive; HTTP/1.0 to close.
+    let mut keep_alive = version != "HTTP/1.0";
+    let mut content_length = 0usize;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return HttpParse::Bad(format!("malformed header line {:?}", line));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => match value.parse::<usize>() {
+                Ok(n) if n <= MAX_BODY_BYTES => content_length = n,
+                Ok(n) => {
+                    return HttpParse::Bad(format!(
+                        "body of {} bytes exceeds the {} byte cap",
+                        n, MAX_BODY_BYTES
+                    ));
+                }
+                Err(_) => return HttpParse::Bad(format!("bad content-length {:?}", value)),
+            },
+            "transfer-encoding" => {
+                return HttpParse::Bad("transfer-encoding is not supported; use content-length".into());
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    let body_start = head_end + 4;
+    let total = body_start + content_length;
+    if buf.len() < total {
+        return HttpParse::Partial;
+    }
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    HttpParse::Ready {
+        req: HttpRequest {
+            method,
+            path,
+            keep_alive,
+            body: buf[body_start..total].to_vec(),
+        },
+        consumed: total,
+    }
+}
+
+/// Position of the `\r\n\r\n` header terminator, bounded by the header
+/// cap (a hostile peer cannot make this scan unbounded memory: the
+/// caller stops feeding bytes once `Bad` is returned).
+fn find_terminator(buf: &[u8]) -> Option<usize> {
+    let scan = buf.len().min(MAX_HEADER_BYTES + 4);
+    buf[..scan].windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+// ------------------------------------------------------------ responses
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        410 => "Gone",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Builds one complete response with `Content-Length` framing.
+pub fn response(status: u16, content_type: &str, body: &[u8], keep_alive: bool) -> Vec<u8> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    let mut out = Vec::with_capacity(head.len() + body.len());
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// A JSON `{"error": ..., "detail": ...}` response.
+pub fn error_response(status: u16, error: &str, detail: &str, keep_alive: bool) -> Vec<u8> {
+    let body = Json::obj(vec![
+        ("error", Json::str(error)),
+        ("detail", Json::str(detail)),
+    ])
+    .to_string();
+    response(status, "application/json", body.as_bytes(), keep_alive)
+}
+
+/// HTTP status for a typed wire error (the JSON body still carries the
+/// exact [`ErrorCode`] name — the status is for curl/monitors, the code
+/// for programs).
+pub fn status_for(code: ErrorCode) -> u16 {
+    match code {
+        ErrorCode::BadImage | ErrorCode::BadFrame => 400,
+        ErrorCode::UnknownVariant => 404,
+        ErrorCode::Retired => 410,
+        ErrorCode::Batch => 500,
+        ErrorCode::Upstream => 502,
+        ErrorCode::QueueFull | ErrorCode::ShuttingDown | ErrorCode::Expired | ErrorCode::Shed => {
+            503
+        }
+        ErrorCode::DeadlineExpired => 504,
+    }
+}
+
+/// Parses a `POST /v1/infer` body:
+/// `{"variant": "...", "deadline_ms": N, "image": [f, ...]}`
+/// (`"key"` is accepted as an alias for `"variant"`; `deadline_ms`
+/// defaults to 0 = no deadline). Returns `(key, deadline_ms, image)`.
+pub fn parse_infer_body(body: &[u8]) -> Result<(String, u32, Vec<f32>), String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not utf-8".to_string())?;
+    let json = Json::parse(text).map_err(|e| format!("body is not valid json: {}", e))?;
+    let key = json
+        .get("variant")
+        .or_else(|| json.get("key"))
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| "missing string field \"variant\"".to_string())?
+        .to_string();
+    let deadline_ms = match json.get("deadline_ms") {
+        None | Some(Json::Null) => 0,
+        Some(v) => {
+            let n = v
+                .as_f64()
+                .ok_or_else(|| "\"deadline_ms\" must be a number".to_string())?;
+            if !(0.0..=u32::MAX as f64).contains(&n) {
+                return Err(format!("\"deadline_ms\" {} out of range", n));
+            }
+            n as u32
+        }
+    };
+    let image = json
+        .get("image")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| "missing array field \"image\"".to_string())?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32))
+        .collect::<Option<Vec<f32>>>()
+        .ok_or_else(|| "\"image\" must be an array of numbers".to_string())?;
+    Ok((key, deadline_ms, image))
+}
+
+/// Renders an infer/metrics [`Response`] as one HTTP reply.
+/// `prometheus` switches a `MetricsJson` payload to text exposition
+/// (the `GET /metrics` route); logits serialize through f64, which is
+/// exact for every finite f32, so JSON logits are bit-identical to the
+/// binary protocol's.
+pub fn render_response(resp: &Response, keep_alive: bool, prometheus: bool) -> Vec<u8> {
+    match resp {
+        Response::Logits {
+            class,
+            latency_us,
+            occupancy,
+            padded,
+            logits,
+        } => {
+            let body = Json::obj(vec![
+                ("class", Json::Num(*class as f64)),
+                ("latency_us", Json::Num(*latency_us as f64)),
+                (
+                    "batch",
+                    Json::obj(vec![
+                        ("occupancy", Json::Num(*occupancy as f64)),
+                        ("padded", Json::Num(*padded as f64)),
+                    ]),
+                ),
+                (
+                    "logits",
+                    Json::Arr(logits.iter().map(|&x| Json::Num(x as f64)).collect()),
+                ),
+            ])
+            .to_string();
+            response(200, "application/json", body.as_bytes(), keep_alive)
+        }
+        Response::Error { code, detail } => {
+            error_response(status_for(*code), code.name(), detail, keep_alive)
+        }
+        Response::MetricsJson(json) => {
+            if prometheus {
+                let body = prometheus_text(json);
+                response(
+                    200,
+                    "text/plain; version=0.0.4; charset=utf-8",
+                    body.as_bytes(),
+                    keep_alive,
+                )
+            } else {
+                response(200, "application/json", json.as_bytes(), keep_alive)
+            }
+        }
+    }
+}
+
+// --------------------------------------------------- prometheus export
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn num(v: Option<&Json>) -> f64 {
+    v.and_then(|j| j.as_f64()).unwrap_or(0.0)
+}
+
+/// Renders a `MetricsSnapshot` JSON document as Prometheus text
+/// exposition (format 0.0.4). Unknown/missing fields render as 0 —
+/// a scrape must never fail because a field moved.
+pub fn prometheus_text(metrics_json: &str) -> String {
+    let root = Json::parse(metrics_json).unwrap_or(Json::Null);
+    let mut text = String::new();
+    text.push_str(
+        "# HELP strum_uptime_seconds Seconds since the engine started.\n# TYPE strum_uptime_seconds gauge\n",
+    );
+    text.push_str(&format!(
+        "strum_uptime_seconds {}\n",
+        num(root.get("uptime_s"))
+    ));
+
+    let fleet = [
+        ("requests", "strum_requests_total", "Requests accepted for submit."),
+        ("completed", "strum_requests_completed_total", "Requests answered with logits."),
+        ("rejected", "strum_requests_rejected_total", "Requests refused at submit."),
+        ("shed", "strum_requests_shed_total", "Requests shed by deadline pressure."),
+        ("batches", "strum_batches_total", "Batches executed."),
+    ];
+    for (key, name, help) in fleet {
+        text.push_str(&format!(
+            "# HELP {} {}\n# TYPE {} counter\n",
+            name, help, name
+        ));
+        text.push_str(&format!(
+            "{} {}\n",
+            name,
+            num(root.get("fleet").and_then(|f| f.get(key)))
+        ));
+        if let Some(variants) = root.get("variants").and_then(|v| v.as_arr()) {
+            for row in variants {
+                let label = escape_label(row.get("key").and_then(|k| k.as_str()).unwrap_or("?"));
+                text.push_str(&format!(
+                    "{}{{variant=\"{}\"}} {}\n",
+                    name,
+                    label,
+                    num(row.get(key))
+                ));
+            }
+        }
+    }
+
+    text.push_str(
+        "# HELP strum_queue_depth Requests waiting in a variant's queue.\n# TYPE strum_queue_depth gauge\n",
+    );
+    text.push_str(
+        "# HELP strum_latency_seconds Completed-request latency quantiles.\n# TYPE strum_latency_seconds summary\n",
+    );
+    let mut tail = String::new();
+    if let Some(variants) = root.get("variants").and_then(|v| v.as_arr()) {
+        for row in variants {
+            let label = escape_label(row.get("key").and_then(|k| k.as_str()).unwrap_or("?"));
+            text.push_str(&format!(
+                "strum_queue_depth{{variant=\"{}\"}} {}\n",
+                label,
+                num(row.get("queued"))
+            ));
+            let lat = row.get("latency");
+            for (q, key) in [("0.5", "p50_us"), ("0.95", "p95_us"), ("0.99", "p99_us")] {
+                tail.push_str(&format!(
+                    "strum_latency_seconds{{variant=\"{}\",quantile=\"{}\"}} {}\n",
+                    label,
+                    q,
+                    num(lat.and_then(|l| l.get(key))) / 1e6
+                ));
+            }
+        }
+    }
+    text.push_str(&tail);
+    text.push_str(&format!(
+        "# HELP strum_telemetry_dropped_total Telemetry events dropped by the bounded sink.\n# TYPE strum_telemetry_dropped_total counter\nstrum_telemetry_dropped_total {}\n",
+        num(root.get("telemetry_dropped"))
+    ));
+    text
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_pipelined_keep_alive_requests() {
+        let wire = b"POST /v1/infer HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: 2\r\n\r\n{}GET /v1/metrics HTTP/1.1\r\n\r\n";
+        let HttpParse::Ready { req, consumed } = try_parse(wire) else {
+            panic!("first request should parse");
+        };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/infer");
+        assert!(req.keep_alive);
+        assert_eq!(req.body, b"{}");
+        let HttpParse::Ready { req, consumed: c2 } = try_parse(&wire[consumed..]) else {
+            panic!("second request should parse");
+        };
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/v1/metrics");
+        assert!(req.body.is_empty());
+        assert_eq!(consumed + c2, wire.len());
+    }
+
+    #[test]
+    fn partial_and_malformed_are_distinguished() {
+        assert!(matches!(try_parse(b"GET /metr"), HttpParse::Partial));
+        assert!(matches!(
+            try_parse(b"GET /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nab"),
+            HttpParse::Partial
+        ));
+        assert!(matches!(try_parse(b"NONSENSE\r\n\r\n"), HttpParse::Bad(_)));
+        assert!(matches!(
+            try_parse(b"GET /x HTTP/2.0\r\n\r\n"),
+            HttpParse::Bad(_)
+        ));
+        assert!(matches!(
+            try_parse(b"GET /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            HttpParse::Bad(_)
+        ));
+        assert!(matches!(
+            try_parse(b"GET /x HTTP/1.1\r\nContent-Length: zebra\r\n\r\n"),
+            HttpParse::Bad(_)
+        ));
+        // A header flood is refused once it passes the cap, not buffered
+        // forever.
+        let mut flood = b"GET /x HTTP/1.1\r\n".to_vec();
+        flood.extend(std::iter::repeat(b'h').take(MAX_HEADER_BYTES + 8));
+        assert!(matches!(try_parse(&flood), HttpParse::Bad(_)));
+    }
+
+    #[test]
+    fn connection_header_controls_keep_alive() {
+        let close = b"GET /m HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let HttpParse::Ready { req, .. } = try_parse(close) else {
+            panic!()
+        };
+        assert!(!req.keep_alive);
+        let old = b"GET /m HTTP/1.0\r\n\r\n";
+        let HttpParse::Ready { req, .. } = try_parse(old) else {
+            panic!()
+        };
+        assert!(!req.keep_alive);
+        let old_ka = b"GET /m HTTP/1.0\r\nConnection: keep-alive\r\n\r\n";
+        let HttpParse::Ready { req, .. } = try_parse(old_ka) else {
+            panic!()
+        };
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn infer_body_roundtrip_is_bit_exact() {
+        // Every finite f32 survives the f32→f64→decimal→f64→f32 trip
+        // exactly (f64 shortest-roundtrip printing); spot-check values
+        // with awkward binary fractions.
+        let vals: Vec<f32> = vec![0.1, -2.7182817, 3.4e38, f32::MIN_POSITIVE, 0.0];
+        let body = format!(
+            "{{\"variant\": \"k\", \"deadline_ms\": 7, \"image\": {}}}",
+            Json::Arr(vals.iter().map(|&v| Json::Num(v as f64)).collect()).to_string()
+        );
+        let (key, dl, image) = parse_infer_body(body.as_bytes()).unwrap();
+        assert_eq!(key, "k");
+        assert_eq!(dl, 7);
+        let got: Vec<u32> = image.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
+        // Alias + defaults.
+        let (key, dl, image) = parse_infer_body(b"{\"key\": \"x\", \"image\": []}").unwrap();
+        assert_eq!((key.as_str(), dl, image.len()), ("x", 0, 0));
+        // Typed refusals, not panics.
+        assert!(parse_infer_body(b"{").is_err());
+        assert!(parse_infer_body(b"{\"image\": [1]}").is_err());
+        assert!(parse_infer_body(b"{\"variant\": \"k\", \"image\": [\"a\"]}").is_err());
+        assert!(parse_infer_body(b"{\"variant\": \"k\", \"image\": [1], \"deadline_ms\": -4}").is_err());
+    }
+
+    #[test]
+    fn responses_are_content_length_framed() {
+        let bytes = render_response(
+            &Response::Logits {
+                class: 2,
+                latency_us: 10,
+                occupancy: 1,
+                padded: 2,
+                logits: vec![0.5, -1.5],
+            },
+            true,
+            false,
+        );
+        let text = String::from_utf8(bytes).unwrap();
+        let (head, body) = text.split_once("\r\n\r\n").unwrap();
+        assert!(head.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(head.contains(&format!("Content-Length: {}", body.len())));
+        assert!(head.contains("Connection: keep-alive"));
+        assert!(body.contains("\"logits\":[0.5,-1.5]"));
+        // Error statuses map per code; body keeps the typed name.
+        let bytes = render_response(
+            &Response::Error {
+                code: ErrorCode::UnknownVariant,
+                detail: "no variant \"z\"".into(),
+            },
+            false,
+            false,
+        );
+        let text = String::from_utf8(bytes).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        assert!(text.contains("\"error\":\"unknown_variant\""));
+        assert!(text.contains("Connection: close"));
+    }
+
+    #[test]
+    fn prometheus_text_exposes_known_families() {
+        let json = r#"{
+            "uptime_s": 2.5, "telemetry_dropped": 1,
+            "fleet": {"requests": 10, "completed": 8, "rejected": 1, "shed": 1, "batches": 4},
+            "variants": [{
+                "key": "net:base:p0:native", "requests": 10, "completed": 8,
+                "rejected": 1, "shed": 1, "batches": 4, "queued": 2,
+                "latency": {"p50_us": 1000, "p95_us": 2000, "p99_us": 3000}
+            }]
+        }"#;
+        let text = prometheus_text(json);
+        assert!(text.contains("# TYPE strum_requests_completed_total counter\n"));
+        assert!(text.contains("strum_requests_completed_total 8\n"));
+        assert!(text
+            .contains("strum_requests_completed_total{variant=\"net:base:p0:native\"} 8\n"));
+        assert!(text.contains("strum_uptime_seconds 2.5\n"));
+        assert!(text.contains(
+            "strum_latency_seconds{variant=\"net:base:p0:native\",quantile=\"0.5\"} 0.001\n"
+        ));
+        assert!(text.contains("strum_queue_depth{variant=\"net:base:p0:native\"} 2\n"));
+        // Garbage input degrades to zeros, never a scrape failure.
+        let fallback = prometheus_text("not json");
+        assert!(fallback.contains("strum_requests_total 0\n"));
+    }
+}

@@ -8,20 +8,50 @@
 //! per-request deadline budgets that are enforced server-side at three
 //! stages (door / queue / wait — see [`proto::ErrorCode`]).
 //!
-//! Architecture: one acceptor thread plus a small fixed pool of
-//! connection workers (blocking `std::net` I/O — tokio is not in the
-//! vendored closure, and a handful of OS threads comfortably covers the
-//! fleet sizes this crate serves). Accepted sockets queue behind the
-//! worker pool; each worker owns one connection at a time and runs the
-//! strict request→response loop in [`conn`]. Shutdown is graceful:
-//! in-flight requests get their replies, idle reads notice the stop flag
-//! within one poll interval, and the acceptor is unblocked by a
-//! loopback connect.
+//! Architecture — two tiers share the protocol and handler contract:
+//!
+//! - **Async tier ([`aio`], the default).** One poller thread over
+//!   non-blocking sockets (readiness via a tiny `poll(2)` FFI shim —
+//!   tokio is not in the vendored closure) owns accept, framing, and
+//!   writes for *every* connection; a small dispatch pool hands
+//!   requests to the handler, and the engine answers through
+//!   completion callbacks instead of parking threads. One process
+//!   holds 10k+ idle connections. The same poller serves the binary
+//!   protocol (v1 in-order, v2 pipelined with correlation ids and
+//!   streaming batches) and an HTTP/1.1 + JSON surface ([`http`]).
+//! - **Legacy blocking tier ([`WireServer`], deprecated fallback
+//!   behind `strum serve --legacy-threads`).** One acceptor thread
+//!   plus a fixed pool of connection workers; each worker owns one
+//!   connection and runs the strict request→response loop in [`conn`],
+//!   polling the stop flag on a 200 ms read timeout. Fine for small
+//!   fleets; a wall at production connection counts — prefer the async
+//!   tier.
 //!
 //! [`WireClient`] is the matching client (lazy connect, one transparent
-//! reconnect retry), and `strum loadgen` drives it as an open-loop load
-//! generator; `strum serve --listen ADDR` binds the server in front of
-//! the engine the CLI builds.
+//! reconnect retry), [`PipelinedClient`] its v2 many-in-flight sibling,
+//! and [`HttpClient`] a minimal keep-alive HTTP/1.1 caller; `strum
+//! loadgen` drives all three as an open-loop load generator. `strum
+//! serve --listen ADDR [--http-listen ADDR]` binds the server in front
+//! of the engine the CLI builds.
+//!
+//! ## curl quickstart
+//!
+//! ```text
+//! $ strum serve --compiled zoo.strumc --http-listen 127.0.0.1:8080
+//! http listening on 127.0.0.1:8080
+//!
+//! # Inference (logits are bit-identical to the binary protocol):
+//! $ curl -s -X POST http://127.0.0.1:8080/v1/infer \
+//!     -H 'Content-Type: application/json' \
+//!     -d '{"variant": "mini_cnn_s:base:p0:native",
+//!          "deadline_ms": 250,
+//!          "image": [0.1, 0.2, ...]}'
+//! {"batch":{"occupancy":1,"padded":1},"class":3,"latency_us":412,"logits":[...]}
+//!
+//! # Engine metrics as JSON, or Prometheus text exposition:
+//! $ curl -s http://127.0.0.1:8080/v1/metrics
+//! $ curl -s http://127.0.0.1:8080/metrics | grep strum_requests_completed_total
+//! ```
 //!
 //! ## Observability
 //!
@@ -65,12 +95,15 @@
 //! processed). A [`fault::FaultPlan`] can inject crashes, drops,
 //! delays, and corrupt frames to prove supervisors survive each case.
 
+pub mod aio;
 pub mod client;
 mod conn;
 pub mod fault;
+pub mod http;
 pub mod proto;
 
-pub use client::{WireCallError, WireClient, WireInfer, WireResponse};
+pub use aio::{AioServer, AsyncWireHandler};
+pub use client::{HttpClient, PipelinedClient, WireCallError, WireClient, WireInfer, WireResponse};
 pub use fault::{FaultPlan, FaultState};
 pub use proto::{ErrorCode, ProtoError};
 
@@ -126,6 +159,8 @@ pub struct ServerStats {
     requests: AtomicU64,
     shed_presubmit: AtomicU64,
     protocol_errors: AtomicU64,
+    http_requests: AtomicU64,
+    pipelined_conns: AtomicU64,
 }
 
 impl ServerStats {
@@ -141,6 +176,12 @@ impl ServerStats {
     pub(crate) fn record_protocol_error(&self) {
         self.protocol_errors.fetch_add(1, Ordering::Relaxed);
     }
+    pub(crate) fn record_http_request(&self) {
+        self.http_requests.fetch_add(1, Ordering::Relaxed);
+    }
+    pub(crate) fn record_pipelined_conn(&self) {
+        self.pipelined_conns.fetch_add(1, Ordering::Relaxed);
+    }
 
     pub fn snapshot(&self) -> ServerStatsSnapshot {
         ServerStatsSnapshot {
@@ -148,6 +189,8 @@ impl ServerStats {
             requests: self.requests.load(Ordering::Relaxed),
             shed_presubmit: self.shed_presubmit.load(Ordering::Relaxed),
             protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            http_requests: self.http_requests.load(Ordering::Relaxed),
+            pipelined_conns: self.pipelined_conns.load(Ordering::Relaxed),
         }
     }
 }
@@ -161,6 +204,13 @@ pub struct ServerStatsSnapshot {
     /// already elapsed at dequeue).
     pub shed_presubmit: u64,
     pub protocol_errors: u64,
+    /// HTTP responses written (async tier only; every routed or refused
+    /// HTTP request counts exactly once, matching its `http_request`
+    /// telemetry event).
+    pub http_requests: u64,
+    /// Connections that had ≥ 2 requests outstanding at least once
+    /// (async tier only; matches `conn_pipelined` telemetry 1:1).
+    pub pipelined_conns: u64,
 }
 
 struct ServerShared {
@@ -173,7 +223,12 @@ struct ServerShared {
     fault: Option<FaultState>,
 }
 
-/// Blocking TCP front-end over a [`WireHandler`] (usually an [`Engine`]).
+/// Blocking TCP front-end over a [`WireHandler`] (usually an
+/// [`Engine`]) — the **legacy tier**, kept as a fallback behind
+/// `strum serve --legacy-threads`. Prefer [`AioServer`]: one poller
+/// holds thousands of connections where this tier needs a thread each,
+/// and its shutdown rides a wake fd instead of this tier's 100 ms
+/// stop-flag read polling.
 pub struct WireServer {
     addr: SocketAddr,
     shared: Arc<ServerShared>,

@@ -5,13 +5,17 @@
 //!
 //! ```text
 //! frame   := u32 len · payload            len = payload bytes (≤ MAX_FRAME)
-//! payload := u8 version · u8 op · body
+//! payload := u8 version · u8 op · body              (version 1)
+//!          | u8 version · u8 op · u32 corr_id · body (version 2)
 //!
 //! requests
 //!   OP_INFER   u32 key_len · key bytes (UTF-8 variant key)
 //!              u32 deadline_budget_ms   (0 = no deadline)
 //!              u32 n · n × u32          (f32 bit patterns, row-major image)
 //!   OP_METRICS (empty body)
+//!   OP_INFER_BATCH (v2 only)
+//!              u32 key_len · key bytes · u32 deadline_budget_ms
+//!              u32 count · u32 px · count·px × u32 (f32 bit patterns)
 //!
 //! responses
 //!   OP_LOGITS        u32 class · u64 latency_us
@@ -19,7 +23,25 @@
 //!                    u32 n · n × u32    (f32 bit patterns, logit row)
 //!   OP_ERROR         u8 code · u32 detail_len · detail bytes (UTF-8)
 //!   OP_METRICS_JSON  u32 len · bytes    (MetricsSnapshot JSON)
+//!   OP_LOGITS_BATCH  (v2 only) u32 count · count × row, where
+//!                    row := u8 kind (0 = logits body, 1 = error body)
 //! ```
+//!
+//! ## Version negotiation and pipelining
+//!
+//! Version 1 is the original strict request→response protocol: no
+//! correlation ids, responses in request order. Version 2 prefixes every
+//! payload with a client-chosen `u32 corr_id` echoed verbatim on the
+//! response, which licenses the server to answer **out of order** — a
+//! v2 client can pipeline many requests on one connection and match
+//! replies by id. The version byte travels per frame, and the async
+//! server decides per connection from the FIRST frame: a connection that
+//! opens with v1 is served strictly in order end-to-end (old clients
+//! keep working unchanged against the new tier); one that opens with v2
+//! may see out-of-order completion. `OP_INFER_BATCH` amortizes framing:
+//! `count` images ride one frame, fan out to the engine's batcher
+//! individually, and come back as one `OP_LOGITS_BATCH` frame whose rows
+//! (logits or typed per-image error) are in submission order.
 //!
 //! The deadline travels as a *budget* (relative milliseconds), not an
 //! absolute timestamp — the server stamps the frame's arrival and
@@ -39,20 +61,34 @@ use crate::coordinator::SubmitError;
 use std::fmt;
 use std::io::{self, Read, Write};
 
-/// Wire protocol version carried in every payload.
+/// Original wire protocol version: strict request→response ordering,
+/// no correlation ids. Still fully served (in order) by every tier.
 pub const PROTO_VERSION: u8 = 1;
+
+/// Protocol minor version 2: every payload carries a `u32 corr_id`
+/// after the op byte, responses may return out of order, and the batch
+/// ops ([`OP_INFER_BATCH`]/[`OP_LOGITS_BATCH`]) become available.
+pub const PROTO_V2: u8 = 2;
 
 /// Hard cap on one frame's payload (16 MiB — a 1024×1024×3 image batch
 /// of one still fits with room to spare).
 pub const MAX_FRAME: usize = 1 << 24;
 
+/// Cap on images per `OP_INFER_BATCH` frame (the per-frame byte cap
+/// usually binds first; this bounds decoded allocations for tiny px).
+pub const MAX_BATCH_IMAGES: usize = 4096;
+
 /// Request ops.
 pub const OP_INFER: u8 = 0x01;
 pub const OP_METRICS: u8 = 0x02;
+/// Streaming batch submission: many images in one frame (v2 only).
+pub const OP_INFER_BATCH: u8 = 0x03;
 /// Response ops (high bit set).
 pub const OP_LOGITS: u8 = 0x81;
 pub const OP_ERROR: u8 = 0x82;
 pub const OP_METRICS_JSON: u8 = 0x83;
+/// One row per batched image, submission order (v2 only).
+pub const OP_LOGITS_BATCH: u8 = 0x84;
 
 /// Typed wire error codes. `1..=5` mirror [`SubmitError`]; `6..=8` are
 /// the three deadline-shed stages (door / queue / wait); `9` is a
@@ -172,8 +208,8 @@ impl fmt::Display for ProtoError {
             ProtoError::Truncated { what } => write!(f, "truncated {}", what),
             ProtoError::BadVersion { found } => write!(
                 f,
-                "protocol version {} not supported (this build speaks {})",
-                found, PROTO_VERSION
+                "protocol version {} not supported (this build speaks {} and {})",
+                found, PROTO_VERSION, PROTO_V2
             ),
             ProtoError::BadOp { op } => write!(f, "unknown op 0x{:02x}", op),
             ProtoError::Corrupt(why) => write!(f, "corrupt payload: {}", why),
@@ -443,6 +479,12 @@ impl<'a> Cursor<'a> {
     }
 
     fn finish(self, what: &'static str) -> Result<(), ProtoError> {
+        self.finish_ref(what)
+    }
+
+    /// Non-consuming [`Cursor::finish`] for decoders that still hold a
+    /// borrow (the framed paths).
+    fn finish_ref(&self, what: &'static str) -> Result<(), ProtoError> {
         if self.remaining() != 0 {
             return Err(ProtoError::Corrupt(format!(
                 "{} trailing bytes after {}",
@@ -520,6 +562,309 @@ pub fn decode_response(payload: &[u8]) -> Result<Response, ProtoError> {
             Ok(Response::MetricsJson(json))
         }
         op => Err(ProtoError::BadOp { op }),
+    }
+}
+
+// ------------------------------------------------- v2 framed envelope
+
+/// One decoded request payload with its protocol envelope: the version
+/// the client spoke and (for v2) the correlation id to echo back. The
+/// async server tier decodes through this so one connection can mix
+/// versions per the negotiation rules in the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FramedRequest {
+    /// Version-1 payload: answer in order, encode the reply as v1.
+    V1(Request),
+    /// Version-2 payload: echo `corr_id`, out-of-order replies allowed.
+    V2 { corr_id: u32, req: Request },
+    /// Version-2 streaming batch: `count` images of `px` floats each,
+    /// concatenated in `images`; answered by one `OP_LOGITS_BATCH`
+    /// frame with `count` rows in submission order.
+    V2Batch {
+        corr_id: u32,
+        key: String,
+        deadline_budget_ms: u32,
+        count: usize,
+        px: usize,
+        images: Vec<f32>,
+    },
+}
+
+/// One decoded response payload with its protocol envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FramedResponse {
+    V1(Response),
+    V2 { corr_id: u32, resp: Response },
+    /// Rows are [`Response::Logits`] or [`Response::Error`], one per
+    /// submitted image, in submission order.
+    V2Batch { corr_id: u32, rows: Vec<Response> },
+}
+
+fn header_v2(op: u8, corr_id: u32) -> Vec<u8> {
+    let mut buf = vec![PROTO_V2, op];
+    put_u32(&mut buf, corr_id);
+    buf
+}
+
+/// Serializes a v2 infer request payload from borrowed parts.
+pub fn encode_infer_v2(corr_id: u32, key: &str, deadline_budget_ms: u32, image: &[f32]) -> Vec<u8> {
+    let mut buf = header_v2(OP_INFER, corr_id);
+    put_bytes(&mut buf, key.as_bytes());
+    put_u32(&mut buf, deadline_budget_ms);
+    put_f32s(&mut buf, image);
+    buf
+}
+
+/// Serializes a v2 metrics request payload.
+pub fn encode_metrics_v2(corr_id: u32) -> Vec<u8> {
+    header_v2(OP_METRICS, corr_id)
+}
+
+/// Serializes a v2 streaming-batch request: `images` must hold exactly
+/// `count · px` floats (the images concatenated in submission order).
+pub fn encode_infer_batch(
+    corr_id: u32,
+    key: &str,
+    deadline_budget_ms: u32,
+    count: usize,
+    px: usize,
+    images: &[f32],
+) -> Vec<u8> {
+    debug_assert_eq!(images.len(), count * px);
+    let mut buf = header_v2(OP_INFER_BATCH, corr_id);
+    put_bytes(&mut buf, key.as_bytes());
+    put_u32(&mut buf, deadline_budget_ms);
+    put_u32(&mut buf, count as u32);
+    put_u32(&mut buf, px as u32);
+    for &x in images {
+        put_u32(&mut buf, x.to_bits());
+    }
+    buf
+}
+
+/// Body of a single response, shared by the v1/v2 single encoders and
+/// the batch-row encoder (which prefixes a row kind byte instead of a
+/// payload header).
+fn put_response_body(buf: &mut Vec<u8>, resp: &Response) {
+    match resp {
+        Response::Logits {
+            class,
+            latency_us,
+            occupancy,
+            padded,
+            logits,
+        } => {
+            put_u32(buf, *class);
+            put_u64(buf, *latency_us);
+            buf.extend_from_slice(&occupancy.to_le_bytes());
+            buf.extend_from_slice(&padded.to_le_bytes());
+            put_f32s(buf, logits);
+        }
+        Response::Error { code, detail } => {
+            buf.push(code.as_u8());
+            put_bytes(buf, detail.as_bytes());
+        }
+        Response::MetricsJson(json) => {
+            put_bytes(buf, json.as_bytes());
+        }
+    }
+}
+
+/// Serializes a v2 response payload echoing the request's `corr_id`.
+pub fn encode_response_v2(corr_id: u32, resp: &Response) -> Vec<u8> {
+    let op = match resp {
+        Response::Logits { .. } => OP_LOGITS,
+        Response::Error { .. } => OP_ERROR,
+        Response::MetricsJson(_) => OP_METRICS_JSON,
+    };
+    let mut buf = header_v2(op, corr_id);
+    put_response_body(&mut buf, resp);
+    buf
+}
+
+/// Serializes a v2 batch response: one row per image, submission order.
+/// Rows must be `Logits` or `Error` (a `MetricsJson` row is a caller
+/// bug and panics in debug builds; encoded as an error row otherwise).
+pub fn encode_logits_batch(corr_id: u32, rows: &[Response]) -> Vec<u8> {
+    let mut buf = header_v2(OP_LOGITS_BATCH, corr_id);
+    put_u32(&mut buf, rows.len() as u32);
+    for row in rows {
+        match row {
+            Response::Logits { .. } => {
+                buf.push(0);
+                put_response_body(&mut buf, row);
+            }
+            Response::Error { .. } => {
+                buf.push(1);
+                put_response_body(&mut buf, row);
+            }
+            Response::MetricsJson(_) => {
+                debug_assert!(false, "a metrics row cannot ride a logits batch");
+                buf.push(1);
+                put_response_body(
+                    &mut buf,
+                    &Response::Error {
+                        code: ErrorCode::Batch,
+                        detail: "internal: metrics row in a logits batch".into(),
+                    },
+                );
+            }
+        }
+    }
+    buf
+}
+
+fn decode_request_body(c: &mut Cursor<'_>, op: u8) -> Result<Request, ProtoError> {
+    match op {
+        OP_INFER => {
+            let key = c.string("variant key")?;
+            let deadline_budget_ms = c.u32("deadline budget")?;
+            let image = c.f32_vec("image")?;
+            c.finish_ref("infer request")?;
+            Ok(Request::Infer {
+                key,
+                deadline_budget_ms,
+                image,
+            })
+        }
+        OP_METRICS => {
+            c.finish_ref("metrics request")?;
+            Ok(Request::Metrics)
+        }
+        op => Err(ProtoError::BadOp { op }),
+    }
+}
+
+/// Parses a request payload of either protocol version (the async
+/// tier's decoder). V1 payloads decode exactly as [`decode_request`];
+/// v2 payloads yield the correlation id and unlock the batch op.
+pub fn decode_request_framed(payload: &[u8]) -> Result<FramedRequest, ProtoError> {
+    let mut c = Cursor::new(payload);
+    let version = c.u8("version byte")?;
+    match version {
+        PROTO_VERSION => {
+            let op = c.u8("op byte")?;
+            Ok(FramedRequest::V1(decode_request_body(&mut c, op)?))
+        }
+        PROTO_V2 => {
+            let op = c.u8("op byte")?;
+            let corr_id = c.u32("correlation id")?;
+            if op == OP_INFER_BATCH {
+                let key = c.string("variant key")?;
+                let deadline_budget_ms = c.u32("deadline budget")?;
+                let count = c.u32("batch count")? as usize;
+                let px = c.u32("image length")? as usize;
+                if count == 0 || count > MAX_BATCH_IMAGES {
+                    return Err(ProtoError::Corrupt(format!(
+                        "batch count {} outside 1..={}",
+                        count, MAX_BATCH_IMAGES
+                    )));
+                }
+                let total = count.checked_mul(px).and_then(|t| t.checked_mul(4));
+                match total {
+                    Some(bytes) if bytes == c.remaining() => {}
+                    _ => {
+                        return Err(ProtoError::Truncated { what: "batch images" });
+                    }
+                }
+                let raw = c.bytes(count * px * 4, "batch images")?;
+                let images = raw
+                    .chunks_exact(4)
+                    .map(|b| f32::from_bits(u32::from_le_bytes(b.try_into().unwrap())))
+                    .collect();
+                c.finish_ref("batch request")?;
+                Ok(FramedRequest::V2Batch {
+                    corr_id,
+                    key,
+                    deadline_budget_ms,
+                    count,
+                    px,
+                    images,
+                })
+            } else {
+                let req = decode_request_body(&mut c, op)?;
+                Ok(FramedRequest::V2 { corr_id, req })
+            }
+        }
+        found => Err(ProtoError::BadVersion { found }),
+    }
+}
+
+fn decode_response_body(c: &mut Cursor<'_>, op: u8) -> Result<Response, ProtoError> {
+    match op {
+        OP_LOGITS => {
+            let class = c.u32("class")?;
+            let latency_us = c.u64("latency")?;
+            let occupancy = c.u16("batch occupancy")?;
+            let padded = c.u16("batch padded size")?;
+            let logits = c.f32_vec("logits")?;
+            Ok(Response::Logits {
+                class,
+                latency_us,
+                occupancy,
+                padded,
+                logits,
+            })
+        }
+        OP_ERROR => {
+            let raw = c.u8("error code")?;
+            let code = ErrorCode::from_u8(raw)
+                .ok_or_else(|| ProtoError::Corrupt(format!("error code {}", raw)))?;
+            let detail = c.string("error detail")?;
+            Ok(Response::Error { code, detail })
+        }
+        OP_METRICS_JSON => {
+            let json = c.string("metrics json")?;
+            Ok(Response::MetricsJson(json))
+        }
+        op => Err(ProtoError::BadOp { op }),
+    }
+}
+
+/// Parses a response payload of either protocol version (the pipelined
+/// client's decoder).
+pub fn decode_response_framed(payload: &[u8]) -> Result<FramedResponse, ProtoError> {
+    let mut c = Cursor::new(payload);
+    let version = c.u8("version byte")?;
+    match version {
+        PROTO_VERSION => {
+            let op = c.u8("op byte")?;
+            let resp = decode_response_body(&mut c, op)?;
+            c.finish_ref("response")?;
+            Ok(FramedResponse::V1(resp))
+        }
+        PROTO_V2 => {
+            let op = c.u8("op byte")?;
+            let corr_id = c.u32("correlation id")?;
+            if op == OP_LOGITS_BATCH {
+                let count = c.u32("batch row count")? as usize;
+                if count > MAX_BATCH_IMAGES {
+                    return Err(ProtoError::Corrupt(format!(
+                        "batch row count {} exceeds {}",
+                        count, MAX_BATCH_IMAGES
+                    )));
+                }
+                let mut rows = Vec::with_capacity(count.min(1024));
+                for _ in 0..count {
+                    let kind = c.u8("batch row kind")?;
+                    let row_op = match kind {
+                        0 => OP_LOGITS,
+                        1 => OP_ERROR,
+                        k => {
+                            return Err(ProtoError::Corrupt(format!("batch row kind {}", k)));
+                        }
+                    };
+                    rows.push(decode_response_body(&mut c, row_op)?);
+                }
+                c.finish_ref("batch response")?;
+                Ok(FramedResponse::V2Batch { corr_id, rows })
+            } else {
+                let resp = decode_response_body(&mut c, op)?;
+                c.finish_ref("response")?;
+                Ok(FramedResponse::V2 { corr_id, resp })
+            }
+        }
+        found => Err(ProtoError::BadVersion { found }),
     }
 }
 
@@ -644,6 +989,130 @@ mod tests {
             decode_request(&payload),
             Err(ProtoError::BadOp { .. })
         ));
+    }
+
+    #[test]
+    fn framed_v1_matches_legacy_decoder() {
+        let req = Request::Infer {
+            key: "net:base:p0:native".into(),
+            deadline_budget_ms: 25,
+            image: vec![0.5, -1.25],
+        };
+        let payload = encode_request(&req);
+        assert_eq!(
+            decode_request_framed(&payload).unwrap(),
+            FramedRequest::V1(req)
+        );
+        let resp = Response::MetricsJson("{}".into());
+        let payload = encode_response(&resp);
+        assert_eq!(
+            decode_response_framed(&payload).unwrap(),
+            FramedResponse::V1(resp)
+        );
+    }
+
+    #[test]
+    fn framed_v2_roundtrip_with_corr_ids() {
+        let payload = encode_infer_v2(0xDEAD_BEEF, "k", 12, &[1.0, -2.5]);
+        assert_eq!(
+            decode_request_framed(&payload).unwrap(),
+            FramedRequest::V2 {
+                corr_id: 0xDEAD_BEEF,
+                req: Request::Infer {
+                    key: "k".into(),
+                    deadline_budget_ms: 12,
+                    image: vec![1.0, -2.5],
+                },
+            }
+        );
+        let payload = encode_metrics_v2(7);
+        assert_eq!(
+            decode_request_framed(&payload).unwrap(),
+            FramedRequest::V2 {
+                corr_id: 7,
+                req: Request::Metrics,
+            }
+        );
+        for resp in [
+            Response::Logits {
+                class: 1,
+                latency_us: 99,
+                occupancy: 1,
+                padded: 2,
+                logits: vec![0.25],
+            },
+            Response::Error {
+                code: ErrorCode::Shed,
+                detail: "late".into(),
+            },
+            Response::MetricsJson("{\"fleet\":{}}".into()),
+        ] {
+            let payload = encode_response_v2(42, &resp);
+            assert_eq!(
+                decode_response_framed(&payload).unwrap(),
+                FramedResponse::V2 { corr_id: 42, resp }
+            );
+        }
+        // v1 decoders must refuse v2 payloads (old servers/clients fail
+        // typed, not silently misparse).
+        let payload = encode_metrics_v2(7);
+        assert!(matches!(
+            decode_request(&payload),
+            Err(ProtoError::BadVersion { found: 2 })
+        ));
+    }
+
+    #[test]
+    fn batch_roundtrip_and_validation() {
+        let images: Vec<f32> = (0..6).map(|i| i as f32 * 0.5).collect();
+        let payload = encode_infer_batch(9, "k", 50, 3, 2, &images);
+        assert_eq!(
+            decode_request_framed(&payload).unwrap(),
+            FramedRequest::V2Batch {
+                corr_id: 9,
+                key: "k".into(),
+                deadline_budget_ms: 50,
+                count: 3,
+                px: 2,
+                images,
+            }
+        );
+        // Every truncation of the batch frame is a typed error.
+        for cut in 0..payload.len() {
+            assert!(
+                decode_request_framed(&payload[..cut]).is_err(),
+                "cut {}",
+                cut
+            );
+        }
+        // Zero images and an over-cap count are refused.
+        let empty = encode_infer_batch(1, "k", 0, 0, 2, &[]);
+        assert!(decode_request_framed(&empty).is_err());
+        let mut hostile = header_v2(OP_INFER_BATCH, 1);
+        put_bytes(&mut hostile, b"k");
+        put_u32(&mut hostile, 0);
+        put_u32(&mut hostile, (MAX_BATCH_IMAGES as u32) + 1);
+        put_u32(&mut hostile, 4);
+        assert!(decode_request_framed(&hostile).is_err());
+
+        let rows = vec![
+            Response::Logits {
+                class: 0,
+                latency_us: 10,
+                occupancy: 3,
+                padded: 4,
+                logits: vec![1.0, 2.0],
+            },
+            Response::Error {
+                code: ErrorCode::DeadlineExpired,
+                detail: "row 1 missed".into(),
+            },
+        ];
+        let payload = encode_logits_batch(9, &rows);
+        assert_eq!(
+            decode_response_framed(&payload).unwrap(),
+            FramedResponse::V2Batch { corr_id: 9, rows }
+        );
     }
 
     #[test]

@@ -96,6 +96,21 @@ pub enum Event {
     ConnClosed { peer: String, requests: u64 },
     /// The wire server began its graceful drain.
     ServerDrain { connections: u64, requests: u64 },
+    /// A connection went pipelined: a second request arrived while the
+    /// first was still in flight (async tier only; emitted once per
+    /// connection, at the first overlap). `depth` is the in-flight
+    /// count at that moment. Counts reconcile with the server stats
+    /// snapshot's `pipelined_conns`.
+    ConnPipelined { peer: String, depth: u64 },
+    /// The HTTP gateway answered one request (any endpoint, any
+    /// status). Counts reconcile with the server stats snapshot's
+    /// `http_requests`.
+    HttpRequest {
+        method: String,
+        path: String,
+        status: u16,
+        latency_us: u64,
+    },
     /// Periodic engine gauge snapshot (one row per live variant).
     EngineGauges {
         uptime_s: f64,
@@ -159,6 +174,8 @@ impl Event {
             Event::ConnOpened { .. } => "conn_opened",
             Event::ConnClosed { .. } => "conn_closed",
             Event::ServerDrain { .. } => "server_drain",
+            Event::ConnPipelined { .. } => "conn_pipelined",
+            Event::HttpRequest { .. } => "http_request",
             Event::EngineGauges { .. } => "engine_gauges",
             Event::ReplicaSpawned { .. } => "replica_spawned",
             Event::ReplicaDied { .. } => "replica_died",
@@ -259,6 +276,21 @@ impl Event {
             } => {
                 fields.push(("connections", Json::Num(*connections as f64)));
                 fields.push(("requests", Json::Num(*requests as f64)));
+            }
+            Event::ConnPipelined { peer, depth } => {
+                fields.push(("peer", Json::str(peer.as_str())));
+                fields.push(("depth", Json::Num(*depth as f64)));
+            }
+            Event::HttpRequest {
+                method,
+                path,
+                status,
+                latency_us,
+            } => {
+                fields.push(("method", Json::str(method.as_str())));
+                fields.push(("path", Json::str(path.as_str())));
+                fields.push(("status", Json::Num(*status as f64)));
+                fields.push(("latency_us", Json::Num(*latency_us as f64)));
             }
             Event::EngineGauges {
                 uptime_s,
@@ -378,6 +410,8 @@ const KNOWN_TAGS: &[&str] = &[
     "conn_opened",
     "conn_closed",
     "server_drain",
+    "conn_pipelined",
+    "http_request",
     "engine_gauges",
     "replica_spawned",
     "replica_died",
@@ -473,6 +507,18 @@ pub fn validate_line(line: &str) -> crate::Result<ParsedLine> {
         "server_drain" => {
             require_num("connections")?;
             require_num("requests")?;
+            None
+        }
+        "conn_pipelined" => {
+            require_str("peer")?;
+            require_num("depth")?;
+            None
+        }
+        "http_request" => {
+            require_str("method")?;
+            require_str("path")?;
+            require_num("status")?;
+            require_num("latency_us")?;
             None
         }
         "engine_gauges" => {
@@ -595,6 +641,16 @@ mod tests {
             Event::ServerDrain {
                 connections: 3,
                 requests: 36,
+            },
+            Event::ConnPipelined {
+                peer: "127.0.0.1:5000".into(),
+                depth: 2,
+            },
+            Event::HttpRequest {
+                method: "POST".into(),
+                path: "/v1/infer".into(),
+                status: 200,
+                latency_us: 850,
             },
             Event::EngineGauges {
                 uptime_s: 1.5,

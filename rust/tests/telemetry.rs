@@ -16,7 +16,10 @@ use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
 use strum_dpu::coordinator::{Engine, EngineOptions, Router, SubmitError};
 use strum_dpu::model::eval::EvalConfig;
 use strum_dpu::quant::Method;
-use strum_dpu::server::{WireClient, WireResponse, WireServer, WireServerOptions};
+use strum_dpu::server::{
+    AioServer, HttpClient, PipelinedClient, WireClient, WireResponse, WireServer,
+    WireServerOptions,
+};
 use strum_dpu::telemetry::{segment_files, validate_line, TelemetryConfig, TelemetrySink};
 use strum_dpu::util::prng::Rng;
 
@@ -162,6 +165,97 @@ fn wire_serving_events_reconcile_with_metrics() -> anyhow::Result<()> {
     assert_eq!(tags.get("server_drain").copied().unwrap_or(0), 1);
     // Batches were formed for the completed requests.
     assert!(tags.get("batch_formed").copied().unwrap_or(0) >= 1);
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
+/// Async-tier reconciliation: the `http_request` and `conn_pipelined`
+/// events obey the same 1:1 contract as the request events — the counts
+/// read back from the JSONL log equal the server stats snapshot's
+/// `http_requests` / `pipelined_conns` counters exactly.
+#[test]
+fn aio_http_and_pipeline_events_reconcile_with_stats() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("strum-telemetry-aio-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sink = TelemetrySink::open(TelemetryConfig::under(&dir))?;
+    let run_id = sink.run_id().to_string();
+
+    let (engine, image) = fleet_engine(sink.clone(), 97)?;
+    let server = AioServer::bind(
+        Some("127.0.0.1:0"),
+        Some("127.0.0.1:0"),
+        engine.clone(),
+        WireServerOptions {
+            conn_workers: 2,
+            telemetry: sink.clone(),
+            ..WireServerOptions::default()
+        },
+    )?;
+
+    // HTTP traffic across every endpoint class: infers, a metrics read,
+    // and a 404 — all count as http_request events.
+    let mut http = HttpClient::new(server.http_addr().unwrap().to_string());
+    for _ in 0..4 {
+        let (status, body) = http.infer("base", &image, 0)?;
+        assert_eq!(status, 200, "{}", body);
+    }
+    let (status, _) = http.request("GET", "/v1/metrics", None)?;
+    assert_eq!(status, 200);
+    let (status, _) = http.request("GET", "/nope", None)?;
+    assert_eq!(status, 404);
+
+    // One pipelined v2 connection: ten submits back to back before any
+    // receive guarantees overlapping in-flight requests, so the conn
+    // crosses the pipelined threshold exactly once.
+    let mut pipelined = PipelinedClient::connect(&server.local_addr().unwrap().to_string())?;
+    let mut corrs = Vec::new();
+    for i in 0..10usize {
+        corrs.push(pipelined.submit(["base", "mip2q-L7"][i % 2], &image, 0)?);
+    }
+    let mut seen = Vec::new();
+    for _ in 0..corrs.len() {
+        let (corr, resp) = pipelined.recv_infer()?;
+        assert!(matches!(resp, WireResponse::Infer(_)));
+        seen.push(corr);
+    }
+    seen.sort_unstable();
+    corrs.sort_unstable();
+    assert_eq!(seen, corrs, "every submit answered exactly once");
+
+    let stats = server.stats();
+    drop(http);
+    drop(pipelined);
+    server.shutdown();
+    if let Ok(engine) = Arc::try_unwrap(engine) {
+        engine.shutdown();
+    }
+    sink.flush();
+    assert_eq!(sink.dropped(), 0, "bounded channel must not have overflowed");
+
+    let files = segment_files(&dir, &run_id);
+    assert!(!files.is_empty(), "no telemetry segments under {:?}", dir);
+    let mut tags: BTreeMap<String, u64> = BTreeMap::new();
+    for f in &files {
+        for line in std::fs::read_to_string(f)?.lines() {
+            let parsed = validate_line(line)
+                .unwrap_or_else(|e| panic!("invalid telemetry line {:?}: {:#}", line, e));
+            *tags.entry(parsed.tag).or_insert(0) += 1;
+        }
+    }
+
+    assert_eq!(stats.http_requests, 6);
+    assert_eq!(
+        tags.get("http_request").copied().unwrap_or(0),
+        stats.http_requests,
+        "one http_request event per counted HTTP request"
+    );
+    assert_eq!(stats.pipelined_conns, 1);
+    assert_eq!(
+        tags.get("conn_pipelined").copied().unwrap_or(0),
+        stats.pipelined_conns,
+        "one conn_pipelined event per counted pipelined connection"
+    );
 
     let _ = std::fs::remove_dir_all(&dir);
     Ok(())

@@ -16,7 +16,8 @@ use strum_dpu::model::import::NetWeights;
 use strum_dpu::model::eval::EvalConfig;
 use strum_dpu::quant::Method;
 use strum_dpu::server::{
-    proto, ErrorCode, WireClient, WireResponse, WireServer, WireServerOptions,
+    proto, AioServer, ErrorCode, HttpClient, PipelinedClient, WireClient, WireResponse,
+    WireServer, WireServerOptions,
 };
 use strum_dpu::util::json::Json;
 use strum_dpu::util::prng::Rng;
@@ -463,6 +464,220 @@ fn client_backoff_reports_typed_attempts() {
         .expect_err("still dead");
     let call = err.downcast_ref::<strum_dpu::server::WireCallError>().unwrap();
     assert_eq!(call.connect_attempts, 1);
+}
+
+// ------------------------------------------------- async tier (aio + http)
+
+/// The async tier serves legacy v1 clients unchanged: `WireClient`
+/// against an `AioServer` produces logits bit-identical to in-process
+/// submits, exactly like the blocking tier's acceptance test.
+#[test]
+fn aio_serves_v1_clients_bit_identically() {
+    let (engine, handles, keys) = native_fleet();
+    let server = AioServer::bind(
+        Some("127.0.0.1:0"),
+        None,
+        engine.clone(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let mut client = WireClient::connect(&addr).unwrap();
+    for (vi, key) in keys.iter().enumerate() {
+        let image = random_image(8000 + vi as u64);
+        let local = handles[vi].submit(image.clone()).unwrap().wait().unwrap();
+        let wire = client.infer(key, &image).unwrap().into_infer().unwrap();
+        let a: Vec<u32> = local.logits.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = wire.logits.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "{}", key);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.protocol_errors, 0);
+    assert_eq!(stats.requests, keys.len() as u64);
+    // One v1 client, strictly request/response: never pipelined.
+    assert_eq!(stats.pipelined_conns, 0);
+    server.shutdown();
+}
+
+/// The HTTP acceptance criterion: `POST /v1/infer` answers with logits
+/// bit-identical to the binary protocol for the same image — f32 bit
+/// patterns survive the JSON round trip.
+#[test]
+fn http_and_binary_logits_are_bit_identical() {
+    let (engine, _handles, keys) = native_fleet();
+    let server = AioServer::bind(
+        Some("127.0.0.1:0"),
+        Some("127.0.0.1:0"),
+        engine.clone(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let bin_addr = server.local_addr().unwrap().to_string();
+    let http_addr = server.http_addr().unwrap().to_string();
+    let mut bin = WireClient::connect(&bin_addr).unwrap();
+    let mut http = HttpClient::new(http_addr);
+    for key in &keys {
+        for s in 0..2u64 {
+            let image = random_image(4000 + s);
+            let wire = bin.infer(key, &image).unwrap().into_infer().unwrap();
+            let (status, body) = http.infer(key, &image, 0).unwrap();
+            assert_eq!(status, 200, "{}: {}", key, body);
+            let j = Json::parse(&body).unwrap();
+            let logits: Vec<f32> = j
+                .get("logits")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64().unwrap() as f32)
+                .collect();
+            let a: Vec<u32> = wire.logits.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = logits.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "{} image {}", key, s);
+            assert_eq!(j.get("class").unwrap().as_usize().unwrap(), wire.class);
+        }
+    }
+    let stats = server.stats();
+    assert_eq!(stats.protocol_errors, 0);
+    assert_eq!(stats.http_requests, keys.len() as u64 * 2);
+    server.shutdown();
+}
+
+/// Out-of-order pipelining: on one v2 connection, a fast metrics reply
+/// overtakes a slow in-flight inference; correlation ids pair each
+/// reply with its request.
+#[test]
+fn pipelined_replies_arrive_out_of_order_by_corr_id() {
+    let (engine, _handle) = slow_fleet(Duration::from_millis(60));
+    let server = AioServer::bind(
+        Some("127.0.0.1:0"),
+        None,
+        engine.clone(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let mut client = PipelinedClient::connect(&addr).unwrap();
+    let slow_corr = client.submit("slow", &random_image(1), 0).unwrap();
+    let fast_corr = client.submit_metrics().unwrap();
+    match client.recv().unwrap() {
+        proto::FramedResponse::V2 { corr_id, resp } => {
+            assert_eq!(corr_id, fast_corr, "metrics must overtake the slow infer");
+            assert!(matches!(resp, proto::Response::MetricsJson(_)));
+        }
+        other => panic!("expected a v2 metrics reply, got {:?}", other),
+    }
+    let (corr, second) = client.recv_infer().unwrap();
+    assert_eq!(corr, slow_corr);
+    assert!(matches!(second, WireResponse::Infer(_)));
+    let stats = server.stats();
+    assert_eq!(stats.pipelined_conns, 1);
+    server.shutdown();
+}
+
+/// Streaming batch submission: one v2 frame carrying several images
+/// comes back as one reply with a logits row per image, in submission
+/// order, each row bit-identical to an in-process submit.
+#[test]
+fn streaming_batch_returns_one_row_per_image_in_order() {
+    let (engine, handles, keys) = native_fleet();
+    let server = AioServer::bind(
+        Some("127.0.0.1:0"),
+        None,
+        engine.clone(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let mut client = PipelinedClient::connect(&addr).unwrap();
+    let px = IMG * IMG * 3;
+    let images: Vec<f32> = (0..3u64).flat_map(random_image).collect();
+    let corr = client.submit_batch(keys[0], 0, px, &images).unwrap();
+    match client.recv().unwrap() {
+        proto::FramedResponse::V2Batch { corr_id, rows } => {
+            assert_eq!(corr_id, corr);
+            assert_eq!(rows.len(), 3);
+            for (i, row) in rows.iter().enumerate() {
+                match row {
+                    proto::Response::Logits { logits, .. } => {
+                        let local = handles[0]
+                            .submit(images[i * px..(i + 1) * px].to_vec())
+                            .unwrap()
+                            .wait()
+                            .unwrap();
+                        let a: Vec<u32> = local.logits.iter().map(|x| x.to_bits()).collect();
+                        let b: Vec<u32> = logits.iter().map(|x| x.to_bits()).collect();
+                        assert_eq!(a, b, "row {}", i);
+                    }
+                    other => panic!("row {}: expected logits, got {:?}", i, other),
+                }
+            }
+        }
+        other => panic!("expected a batch reply, got {:?}", other),
+    }
+    server.shutdown();
+}
+
+/// Malformed HTTP must be answered with a 400 and a closed connection —
+/// never a hang, never a panic, and counted as a protocol error.
+#[test]
+fn malformed_http_gets_400_and_never_hangs() {
+    use std::io::{Read, Write};
+    let (engine, _handles, _keys) = native_fleet();
+    let server = AioServer::bind(
+        None,
+        Some("127.0.0.1:0"),
+        engine.clone(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let addr = server.http_addr().unwrap();
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(b"NONSENSE\r\n\r\n").unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).expect("a 400 then EOF, not a hang");
+    let text = String::from_utf8_lossy(&buf);
+    assert!(text.starts_with("HTTP/1.1 400"), "got: {}", text);
+    assert_eq!(server.stats().protocol_errors, 1);
+    server.shutdown();
+}
+
+/// HTTP/1.1 keep-alive: many requests (infer, metrics JSON, Prometheus
+/// text, and a 404) ride one TCP connection, confirmed from both ends —
+/// the client dialed once, the server accepted once.
+#[test]
+fn http_keep_alive_reuses_one_connection() {
+    let (engine, _handles, keys) = native_fleet();
+    let server = AioServer::bind(
+        None,
+        Some("127.0.0.1:0"),
+        engine.clone(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let mut http = HttpClient::new(server.http_addr().unwrap().to_string());
+    for s in 0..5u64 {
+        let (status, body) = http.infer(keys[0], &random_image(300 + s), 0).unwrap();
+        assert_eq!(status, 200, "{}", body);
+    }
+    let (status, body) = http.request("GET", "/v1/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(Json::parse(&body).is_ok(), "metrics body must be JSON");
+    let (status, prom) = http.request("GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(
+        prom.contains("strum_requests_completed_total"),
+        "Prometheus text must expose known families:\n{}",
+        prom
+    );
+    let (status, _) = http.request("GET", "/nope", None).unwrap();
+    assert_eq!(status, 404);
+    assert_eq!(http.dials(), 1, "keep-alive must not redial");
+    let stats = server.stats();
+    assert_eq!(stats.connections, 1);
+    assert_eq!(stats.http_requests, 8);
+    server.shutdown();
 }
 
 /// Wire requests and in-process handles share one engine: the server is
