@@ -41,9 +41,16 @@
 //! matching rule) buffer out-of-order completions in a `BTreeMap`
 //! until their turn; binary v2 connections write completions the
 //! moment they arrive, since the echoed correlation id does the
-//! matching. At most [`MAX_PIPELINE`] requests may be outstanding per
-//! connection — past that the poller simply stops reading from that
-//! socket (natural TCP backpressure) until replies drain.
+//! matching. The version byte travels per frame, and the first frame
+//! fixes the connection's delivery mode: a v1-opened connection may
+//! upgrade to v2 frames (ordered delivery never violates v2's
+//! contract), but a v1 frame on a v2-opened connection is refused with
+//! a typed `BadFrame` — its in-order contract can no longer be
+//! honored once replies flow out of order. At most [`MAX_PIPELINE`]
+//! requests may be outstanding per connection — past that the poller
+//! simply stops reading from that socket (natural TCP backpressure)
+//! until replies drain; requests already buffered past the cap resume
+//! parsing as completions free slots.
 //!
 //! ## Shutdown
 //!
@@ -620,6 +627,26 @@ fn run_batch(
     arrived: Instant,
 ) {
     let count = images.len() / px.max(1);
+    // The decoder rejects zero-image batches, but never trust that from
+    // here: a batch that fans out into nothing would post no completion
+    // and leak the connection's outstanding slot forever.
+    if count == 0 {
+        let bytes = frame(&proto::encode_response_v2(
+            corr_id,
+            &Response::Error {
+                code: ErrorCode::BadFrame,
+                detail: "batch carries no images".into(),
+            },
+        ));
+        sh.complete(Completion {
+            conn,
+            seq,
+            bytes,
+            close: false,
+            drop_now: false,
+        });
+        return;
+    }
     let action = match &sh.fault {
         Some(f) => f.next_action(),
         None => Default::default(),
@@ -941,6 +968,22 @@ fn poller(
                 conn.deliver(c.seq, c.bytes, c.close, c.drop_now);
             }
         }
+        // Completions free pipeline slots; resume parsing any requests
+        // that were buffered past the cap. No new socket bytes will
+        // arrive to re-trigger parse_input — the data already sits in
+        // inbuf, so backpressure must release here or never.
+        if !stopping {
+            for (&id, conn) in conns.iter_mut() {
+                if !conn.inbuf.is_empty()
+                    && !conn.read_closed
+                    && !conn.closing
+                    && !conn.dead
+                    && conn.outstanding < MAX_PIPELINE
+                {
+                    parse_input(sh, id, conn);
+                }
+            }
+        }
         for conn in conns.values_mut() {
             if conn.unflushed() && !conn.dead {
                 try_write(conn);
@@ -1081,8 +1124,33 @@ fn parse_input(sh: &Arc<AioShared>, id: u64, conn: &mut Conn) {
                 let arrived = Instant::now();
                 match proto::decode_request_framed(&payload) {
                     Ok(framed) => {
-                        if conn.ordered.is_none() {
-                            conn.ordered = Some(matches!(framed, FramedRequest::V1(_)));
+                        let is_v1 = matches!(framed, FramedRequest::V1(_));
+                        match conn.ordered {
+                            None => conn.ordered = Some(is_v1),
+                            // A v1 frame after v2 negotiation carries no
+                            // correlation id, and this connection already
+                            // writes replies out of order — v1's strict
+                            // in-order contract can't be honored anymore.
+                            // Refuse the downgrade with a typed error.
+                            // (The upgrade direction, v2 frames on a
+                            // v1-opened connection, is fine: ordered
+                            // delivery never violates v2's contract.)
+                            Some(false) if is_v1 => {
+                                sh.stats.record_protocol_error();
+                                conn.read_closed = true;
+                                answer_inline(
+                                    conn,
+                                    frame(&proto::encode_response(&Response::Error {
+                                        code: ErrorCode::BadFrame,
+                                        detail: "v1 frame on a connection negotiated to v2; \
+                                                 version downgrade mid-connection is not allowed"
+                                            .into(),
+                                    })),
+                                    true,
+                                );
+                                return;
+                            }
+                            _ => {}
                         }
                         let seq = begin_request(sh, conn);
                         let item = match framed {

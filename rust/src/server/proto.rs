@@ -760,6 +760,14 @@ pub fn decode_request_framed(payload: &[u8]) -> Result<FramedRequest, ProtoError
                         count, MAX_BATCH_IMAGES
                     )));
                 }
+                // px == 0 would pass the total-byte check with zero
+                // image bytes and then fan out into nothing downstream
+                // — a request that can never be answered.
+                if px == 0 {
+                    return Err(ProtoError::Corrupt(
+                        "batch image length must be nonzero".into(),
+                    ));
+                }
                 let total = count.checked_mul(px).and_then(|t| t.checked_mul(4));
                 match total {
                     Some(bytes) if bytes == c.remaining() => {}
@@ -943,6 +951,24 @@ mod tests {
         assert!(matches!(
             read_frame(&mut r),
             Err(ProtoError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn zero_pixel_batch_is_refused_at_decode() {
+        // count ≥ 1 with px == 0 satisfies the total-byte check with
+        // zero image bytes, but fans out into nothing downstream — a
+        // request no completion would ever answer. Must be corrupt.
+        let payload = encode_infer_batch(7, "k", 0, 1, 0, &[]);
+        assert!(matches!(
+            decode_request_framed(&payload),
+            Err(ProtoError::Corrupt(_))
+        ));
+        // The same shape with a nonzero px still decodes.
+        let ok = encode_infer_batch(7, "k", 0, 1, 2, &[1.0, 2.0]);
+        assert!(matches!(
+            decode_request_framed(&ok),
+            Ok(FramedRequest::V2Batch { count: 1, px: 2, .. })
         ));
     }
 

@@ -618,6 +618,129 @@ fn streaming_batch_returns_one_row_per_image_in_order() {
     server.shutdown();
 }
 
+/// Backpressure must release: a burst deeper than `MAX_PIPELINE` parks
+/// the excess in the server's input buffer (the poller stops reading at
+/// the cap), and those buffered requests must still be answered once
+/// completions free slots — no new socket bytes will arrive to
+/// re-trigger parsing, so the poller has to resume it on its own.
+#[test]
+fn pipeline_backpressure_resumes_for_buffered_requests() {
+    use std::collections::HashSet;
+    use strum_dpu::server::aio::MAX_PIPELINE;
+    let (engine, _handle) = slow_fleet(Duration::from_millis(5));
+    let server = AioServer::bind(
+        Some("127.0.0.1:0"),
+        None,
+        engine.clone(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let mut client = PipelinedClient::connect(&addr)
+        .unwrap()
+        .with_read_timeout(Duration::from_secs(30));
+    let total = MAX_PIPELINE + 12;
+    let image = random_image(42);
+    let mut want: HashSet<u32> = HashSet::new();
+    for _ in 0..total {
+        want.insert(client.submit("slow", &image, 0).unwrap());
+    }
+    // Every submit must be answered — logits or a typed shed, never a
+    // hang on the requests that were buffered past the pipeline cap.
+    for i in 0..total {
+        match client.recv().expect("every burst request must be answered") {
+            proto::FramedResponse::V2 { corr_id, .. } => {
+                assert!(want.remove(&corr_id), "duplicate corr id {}", corr_id);
+            }
+            other => panic!("reply {}: expected a v2 reply, got {:?}", i, other),
+        }
+    }
+    assert!(want.is_empty());
+    server.shutdown();
+}
+
+/// A batch frame declaring zero-pixel images (`px == 0`, `count ≥ 1`)
+/// carries no image bytes and would fan out into nothing — it must be
+/// refused with a typed error and a closed connection, never parked as
+/// a request that no completion will ever answer (which would leak the
+/// connection forever).
+#[test]
+fn zero_pixel_batch_is_refused_not_leaked() {
+    use std::io::Read;
+    let (engine, _handles, keys) = native_fleet();
+    let server = AioServer::bind(
+        Some("127.0.0.1:0"),
+        None,
+        engine.clone(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let mut s = std::net::TcpStream::connect(server.local_addr().unwrap()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let payload = proto::encode_infer_batch(9, keys[0], 0, 1, 0, &[]);
+    proto::write_frame(&mut s, &payload).unwrap();
+    let reply = proto::read_frame(&mut s)
+        .expect("a typed refusal, not a hang")
+        .unwrap();
+    match proto::decode_response_framed(&reply).unwrap() {
+        proto::FramedResponse::V1(proto::Response::Error { code, .. }) => {
+            assert_eq!(code, ErrorCode::BadFrame);
+        }
+        other => panic!("expected a typed bad-frame error, got {:?}", other),
+    }
+    let mut rest = Vec::new();
+    s.read_to_end(&mut rest).expect("EOF after the refusal");
+    assert!(rest.is_empty(), "connection must close after the refusal");
+    assert_eq!(server.stats().protocol_errors, 1);
+    server.shutdown();
+}
+
+/// A connection that negotiates v2 (unordered replies) with its first
+/// frame may not downgrade to v1 mid-stream: a v1 frame there has no
+/// correlation id and its in-order contract can no longer be honored,
+/// so the server refuses it with a typed `BadFrame` and closes.
+#[test]
+fn version_downgrade_mid_connection_is_refused() {
+    use std::io::Read;
+    let (engine, _handles, _keys) = native_fleet();
+    let server = AioServer::bind(
+        Some("127.0.0.1:0"),
+        None,
+        engine.clone(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let mut s = std::net::TcpStream::connect(server.local_addr().unwrap()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // First frame v2: the connection negotiates unordered delivery.
+    proto::write_frame(&mut s, &proto::encode_metrics_v2(1)).unwrap();
+    let reply = proto::read_frame(&mut s).unwrap().unwrap();
+    match proto::decode_response_framed(&reply).unwrap() {
+        proto::FramedResponse::V2 { corr_id, resp } => {
+            assert_eq!(corr_id, 1);
+            assert!(matches!(resp, proto::Response::MetricsJson(_)));
+        }
+        other => panic!("expected a v2 metrics reply, got {:?}", other),
+    }
+    // Then a v1 frame on the same connection: refused, not served.
+    proto::write_frame(&mut s, &proto::encode_request(&proto::Request::Metrics)).unwrap();
+    let reply = proto::read_frame(&mut s)
+        .expect("a typed refusal, not a hang")
+        .unwrap();
+    match proto::decode_response_framed(&reply).unwrap() {
+        proto::FramedResponse::V1(proto::Response::Error { code, detail }) => {
+            assert_eq!(code, ErrorCode::BadFrame);
+            assert!(detail.contains("downgrade"), "detail: {}", detail);
+        }
+        other => panic!("expected a typed bad-frame error, got {:?}", other),
+    }
+    let mut rest = Vec::new();
+    s.read_to_end(&mut rest).expect("EOF after the refusal");
+    assert!(rest.is_empty(), "connection must close after the refusal");
+    assert_eq!(server.stats().protocol_errors, 1);
+    server.shutdown();
+}
+
 /// Malformed HTTP must be answered with a 400 and a closed connection —
 /// never a hang, never a panic, and counted as a protocol error.
 #[test]
