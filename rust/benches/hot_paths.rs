@@ -227,8 +227,10 @@ fn main() -> anyhow::Result<()> {
     b.section("cold start: variant registration (requantize vs cached artifact)");
     {
         // The compile/serve split's payoff: registering a variant from a
-        // cached .strumc artifact (read + decode + bind) vs re-running
-        // float-load → transform → encode at every process start.
+        // cached .strumc artifact (read + bind prepacked banks) vs
+        // re-running float-load → transform → encode at every process
+        // start — plus the mmap zero-copy bind, which skips even the
+        // read-into-Vec and borrows bank bytes from the mapping.
         let img = 32usize;
         let classes = 10usize;
         let net = "mini_cnn_s";
@@ -261,13 +263,26 @@ fn main() -> anyhow::Result<()> {
                 NetworkPlan::from_artifact(&c).unwrap().classes
             });
             let cached_s = b.results.last().map(|r| r.seconds.mean()).unwrap_or(0.0);
+            // Zero-copy variant of the same path: mmap the artifact and
+            // bind the prepacked banks straight from the mapping — no
+            // read-into-Vec, no decode, no repack.
+            b.run(&format!("register/{}/mmap-bind", label), 1.0, || {
+                let c = CompiledNet::load_mapped(&path).unwrap();
+                NetworkPlan::from_artifact(&c).unwrap().classes
+            });
+            let mmap_s = b.results.last().map(|r| r.seconds.mean()).unwrap_or(0.0);
             rows.push(Json::obj(vec![
                 ("variant", Json::str(label)),
                 ("requantize_mean_s", Json::Num(requantize_s)),
                 ("cached_mean_s", Json::Num(cached_s)),
+                ("mmap_bind_mean_s", Json::Num(mmap_s)),
                 (
                     "speedup",
                     Json::Num(if cached_s > 0.0 { requantize_s / cached_s } else { 0.0 }),
+                ),
+                (
+                    "mmap_speedup",
+                    Json::Num(if mmap_s > 0.0 { requantize_s / mmap_s } else { 0.0 }),
                 ),
                 (
                     "artifact_bytes",

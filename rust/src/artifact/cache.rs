@@ -3,8 +3,9 @@
 //! The serving layer registers variants through
 //! [`ArtifactCache::load_or_compile`]: the identity header
 //! ([`ArtifactIdentity`]) hashes
-//! to a cache path; a valid artifact there is loaded (read + decode, no
-//! quantizer), anything else — missing file, format/encoder version
+//! to a cache path; a valid artifact there is loaded (mmap + zero-copy
+//! bank bind, no quantizer, no decode, no repack), anything else —
+//! missing file, format/encoder version
 //! skew, checksum damage, identity collision — triggers a transparent
 //! recompile that overwrites the slot. Persisting the rebuilt artifact
 //! is best-effort: a read-only cache directory degrades to the old
@@ -104,17 +105,20 @@ impl ArtifactCache {
             .join(format!("{}-{}-{:016x}.strumc", id.net, id.method.name(), id.cache_key()))
     }
 
-    /// Tries a pure load of the artifact for `id`.
+    /// Tries a pure load of the artifact for `id`. Goes through the
+    /// mmap-backed loader so a hit binds its weight banks zero-copy.
     fn try_load(&self, id: &ArtifactIdentity) -> std::result::Result<CompiledNet, MissReason> {
         let path = self.path_for(id);
-        let bytes = match std::fs::read(&path) {
-            Ok(b) => b,
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+        if !path.exists() {
+            return Err(MissReason::NotFound);
+        }
+        let compiled = match CompiledNet::load_mapped(&path) {
+            Ok(c) => c,
+            Err(ArtifactError::Io(e)) if e.kind() == std::io::ErrorKind::NotFound => {
                 return Err(MissReason::NotFound)
             }
-            Err(e) => return Err(MissReason::Load(e.into())),
+            Err(e) => return Err(MissReason::Load(e)),
         };
-        let compiled = CompiledNet::from_bytes(&bytes).map_err(MissReason::Load)?;
         if compiled.encoder_version != self.encoder_version {
             return Err(MissReason::Load(ArtifactError::VersionMismatch {
                 kind: "encoder",

@@ -26,9 +26,36 @@
 //!                  unstructured, weights fingerprint (FNV-1a 64)
 //! classes, img, mean_rmse, n_layers
 //! per layer: name, kind, kh kw ic oc oh ow, act_scale, bias[],
-//!            bank params, bank dims, scales[], bit length, payload bytes
+//!            bank params, bank dims, scales[], bit length, payload bytes,
+//!            prepacked execution banks (format v2, see below)
 //! checksum         u64   FNV-1a 64 of every preceding byte
 //! ```
+//!
+//! ## Prepacked bank section (format v2)
+//!
+//! Format v2 appends the kernel-layout execution banks
+//! ([`crate::encode::PackedBanks`]) to every layer, directly after the
+//! encoded payload:
+//!
+//! ```text
+//! hi_len   u64        == oc·k
+//! hi       hi_len×i8  dense high bank, kernel layout
+//! low_tag  u8         0 = empty, 1 = DLIQ, 2 = MIP2Q CSR
+//! DLIQ:    shift u32, codes_len u64 (== oc·k), codes codes_len×i8
+//! MIP2Q:   n_taps u64, row_ptr (oc+1)×u32, col n_taps×u32,
+//!          shift n_taps×u8, neg n_taps×u8 (0/1)
+//! ```
+//!
+//! The banks used to be rebuilt from the decoded payload at every
+//! registration; carrying them in the container makes serve-time bind
+//! pure layout. [`CompiledNet::load`] mmaps the file and the two dense
+//! i8 banks (`hi`, DLIQ `codes` — alignment-1, the bulk of the bytes)
+//! are borrowed straight from the mapping (zero-copy); the small
+//! alignment-sensitive arrays (CSR, scales, biases) are copied out.
+//! The prepack layout is versioned by [`FORMAT_VERSION`], exactly like
+//! the bank semantics are versioned by [`ENCODER_VERSION`]: a pre-bump
+//! `.strumc` surfaces as `VersionMismatch{kind:"format"}` and the cache
+//! transparently rebuilds it in place.
 //!
 //! Loading is defensive end to end: truncation, a foreign magic, a
 //! format/encoder version skew, and any byte corruption each surface as a
@@ -48,20 +75,23 @@ pub mod cache;
 
 pub use cache::{ArtifactCache, CacheOutcome, GcReport, MissReason};
 
-use crate::encode::{encode_layer, EncodedLayer};
+use crate::encode::{encode_layer, EncodedLayer, LowBank, PackedBanks};
 use crate::model::eval::{transform_network, EvalConfig};
 use crate::model::import::{LayerMeta, NetWeights};
 use crate::quant::{BlockShape, Method, StrumParams};
 use crate::util::hash::{fnv1a64, Fnv1a};
+use crate::util::mmap::{BankI8, MappedFile};
 use crate::Result;
 use anyhow::ensure;
 use std::fmt;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Magic prefix of a `.strumc` file.
 pub const MAGIC: [u8; 8] = *b"STRUMC\x00\x1a";
 /// Container-layout version (bump when the byte layout changes).
-pub const FORMAT_VERSION: u32 = 1;
+/// v2 added the per-layer prepacked execution banks.
+pub const FORMAT_VERSION: u32 = 2;
 /// §IV-D bank-encoder version (bump when encode semantics change — the
 /// cache rebuilds every artifact transparently on mismatch).
 pub const ENCODER_VERSION: u32 = 1;
@@ -210,6 +240,9 @@ pub struct CompiledLayer {
     pub bias: Vec<f32>,
     /// The encoded dual-bank weight stream.
     pub enc: EncodedLayer,
+    /// Kernel-layout execution banks, prepacked at compile time so bind
+    /// is a borrow/memcpy instead of a decode + repack.
+    pub pack: PackedBanks,
 }
 
 /// A fully compiled network: the deployable artifact.
@@ -263,6 +296,7 @@ pub fn compile_net(weights: &NetWeights, cfg: &EvalConfig) -> Result<CompiledNet
             act_scale,
             bias: bias.to_vec(),
             enc: encode_layer(s),
+            pack: PackedBanks::from_layer(s)?,
         });
     }
     let mean_rmse =
@@ -326,6 +360,32 @@ impl CompiledNet {
             w.u64(l.enc.bits as u64);
             w.u64(l.enc.bytes.len() as u64);
             w.buf.extend_from_slice(&l.enc.bytes);
+            // Prepacked execution banks (format v2). `from_layer` is
+            // deterministic, so this section is byte-stable across
+            // recompiles of the same net.
+            w.u64(l.pack.hi.len() as u64);
+            w.i8s(&l.pack.hi);
+            match &l.pack.low {
+                LowBank::Empty => w.buf.push(0),
+                LowBank::Dliq { shift, codes } => {
+                    w.buf.push(1);
+                    w.u32(*shift);
+                    w.u64(codes.len() as u64);
+                    w.i8s(codes);
+                }
+                LowBank::Pow2 { row_ptr, col, shift, neg } => {
+                    w.buf.push(2);
+                    w.u64(col.len() as u64);
+                    for &v in row_ptr {
+                        w.u32(v);
+                    }
+                    for &v in col {
+                        w.u32(v);
+                    }
+                    w.buf.extend_from_slice(shift);
+                    w.buf.extend(neg.iter().map(|&n| n as u8));
+                }
+            }
         }
         let mut bytes = w.buf;
         seal(&mut bytes);
@@ -334,8 +394,22 @@ impl CompiledNet {
 
     /// Parses a `.strumc` byte stream, validating magic, format version,
     /// declared length, and checksum before touching the body. Every
-    /// corruption class maps to a typed [`ArtifactError`].
+    /// corruption class maps to a typed [`ArtifactError`]. Weight banks
+    /// are copied out of the stream (copy-bind); [`Self::load`] maps the
+    /// file and borrows them instead.
     pub fn from_bytes(bytes: &[u8]) -> std::result::Result<CompiledNet, ArtifactError> {
+        Self::parse(bytes, None)
+    }
+
+    /// Shared parse core. When `src` is a live mapping of exactly these
+    /// bytes, the alignment-1 i8 banks (`hi`, DLIQ codes) are borrowed
+    /// from it zero-copy; otherwise they are owned copies. `Cursor.pos`
+    /// is an absolute file offset (the body is a prefix of the file), so
+    /// it doubles as the mapping offset.
+    fn parse(
+        bytes: &[u8],
+        src: Option<&Arc<MappedFile>>,
+    ) -> std::result::Result<CompiledNet, ArtifactError> {
         // Header gate: magic → version → declared length → checksum.
         const HEAD: usize = 8 + 4 + 4 + 8;
         if bytes.len() < 8 {
@@ -464,6 +538,79 @@ impl CompiledNet {
                 )));
             }
             let payload = c.bytes(nbytes)?.to_vec();
+
+            // Prepacked execution banks (format v2).
+            let bank_k = b_rows * b_cols;
+            let hi_len = c.u64()? as usize;
+            if hi_len != b_oc * bank_k {
+                return Err(ArtifactError::Corrupt(format!(
+                    "layer {}: hi bank {} bytes for {}x{} grid",
+                    li, hi_len, b_oc, bank_k
+                )));
+            }
+            let hi = c.i8_bank(hi_len, src, "hi bank")?;
+            let low = match c.u8()? {
+                0 => LowBank::Empty,
+                1 => {
+                    let shift = c.u32()?;
+                    let codes_len = c.u64()? as usize;
+                    if codes_len != hi_len {
+                        return Err(ArtifactError::Corrupt(format!(
+                            "layer {}: dliq bank {} bytes for {}x{} grid",
+                            li, codes_len, b_oc, bank_k
+                        )));
+                    }
+                    LowBank::Dliq { shift, codes: c.i8_bank(codes_len, src, "dliq bank")? }
+                }
+                2 => {
+                    let n_taps = c.u64()? as usize;
+                    // Coarse bound before allocating: the section needs
+                    // 4 bytes per row_ptr entry and 6 per tap.
+                    let need = (b_oc + 1)
+                        .checked_mul(4)
+                        .and_then(|r| n_taps.checked_mul(6).map(|t| r + t));
+                    if need.map(|n| n > c.remaining()).unwrap_or(true) {
+                        return Err(ArtifactError::Corrupt(format!(
+                            "layer {}: {} pow2 taps overrun body",
+                            li, n_taps
+                        )));
+                    }
+                    let mut row_ptr = Vec::with_capacity(b_oc + 1);
+                    for _ in 0..=b_oc {
+                        row_ptr.push(c.u32()?);
+                    }
+                    let mut col = Vec::with_capacity(n_taps);
+                    for _ in 0..n_taps {
+                        col.push(c.u32()?);
+                    }
+                    let shift = c.bytes(n_taps)?.to_vec();
+                    let mut neg = Vec::with_capacity(n_taps);
+                    for &b in c.bytes(n_taps)? {
+                        match b {
+                            0 => neg.push(false),
+                            1 => neg.push(true),
+                            other => {
+                                return Err(ArtifactError::Corrupt(format!(
+                                    "layer {}: pow2 neg byte {}",
+                                    li, other
+                                )))
+                            }
+                        }
+                    }
+                    LowBank::Pow2 { row_ptr, col, shift, neg }
+                }
+                tag => {
+                    return Err(ArtifactError::Corrupt(format!(
+                        "layer {}: low bank tag {}",
+                        li, tag
+                    )))
+                }
+            };
+            let pack = PackedBanks { oc: b_oc, k: bank_k, hi, low };
+            if let Err(e) = pack.validate() {
+                return Err(ArtifactError::Corrupt(format!("layer {}: {}", li, e)));
+            }
+
             layers.push(CompiledLayer {
                 meta: LayerMeta { name: name.clone(), kind, kh, kw, ic, oc, oh, ow },
                 act_scale,
@@ -482,6 +629,7 @@ impl CompiledNet {
                     bytes: payload,
                     bits,
                 },
+                pack,
             });
         }
         if c.remaining() != 0 {
@@ -531,15 +679,31 @@ impl CompiledNet {
         }
     }
 
-    /// Loads a standalone `.strumc` file, enforcing the runtime's
-    /// effective encoder version. [`Self::from_bytes`] checks the
-    /// container format only (the cache pins its own expected encoder
-    /// version); this entry point is for artifacts passed around as
-    /// files (`strum compile --out`), where a stale encoding must
-    /// surface as a typed [`ArtifactError::VersionMismatch`] instead of
-    /// silently decoding old banks with new semantics.
+    /// Loads a `.strumc` file through a read-only mapping: the full
+    /// magic/version/length/checksum gates run against the mapped bytes,
+    /// then the dense i8 weight banks are borrowed from the mapping
+    /// (zero-copy bind — the kernel reads weights straight out of the
+    /// page cache). Falls back to an owned [`Self::from_bytes`] read when
+    /// the platform has no mmap or the mapping fails. No encoder-version
+    /// check: callers pin their own expected version (the cache) or go
+    /// through [`Self::load`].
+    pub fn load_mapped(path: &Path) -> std::result::Result<CompiledNet, ArtifactError> {
+        match MappedFile::open(path) {
+            Some(map) => Self::parse(map.as_slice(), Some(&map)),
+            None => Self::from_bytes(&std::fs::read(path)?),
+        }
+    }
+
+    /// Loads a standalone `.strumc` file (via [`Self::load_mapped`]),
+    /// enforcing the runtime's effective encoder version.
+    /// [`Self::from_bytes`] checks the container format only (the cache
+    /// pins its own expected encoder version); this entry point is for
+    /// artifacts passed around as files (`strum compile --out`), where a
+    /// stale encoding must surface as a typed
+    /// [`ArtifactError::VersionMismatch`] instead of silently decoding
+    /// old banks with new semantics.
     pub fn load(path: &Path) -> std::result::Result<CompiledNet, ArtifactError> {
-        let compiled = Self::from_bytes(&std::fs::read(path)?)?;
+        let compiled = Self::load_mapped(path)?;
         let want = encoder_version();
         if compiled.encoder_version != want {
             return Err(ArtifactError::VersionMismatch {
@@ -582,7 +746,16 @@ impl ArtifactHeader {
 /// validation happens where the bytes are trusted, in
 /// [`CompiledNet::load`].
 pub fn read_identity(path: &Path) -> std::result::Result<ArtifactHeader, ArtifactError> {
-    let bytes = std::fs::read(path)?;
+    // The identity prefix is a few dozen bytes plus the net-name string;
+    // read a bounded head instead of the whole artifact (weight banks
+    // dominate the file and the deploy watcher polls this in a loop).
+    const IDENTITY_READ_CAP: u64 = 64 * 1024;
+    let bytes = {
+        use std::io::Read as _;
+        let mut head = Vec::with_capacity(4096);
+        std::fs::File::open(path)?.take(IDENTITY_READ_CAP).read_to_end(&mut head)?;
+        head
+    };
     if bytes.len() < 8 || bytes[..8] != MAGIC {
         return Err(ArtifactError::BadMagic);
     }
@@ -684,6 +857,9 @@ impl Writer {
             self.u32(x.to_bits());
         }
     }
+    fn i8s(&mut self, xs: &[i8]) {
+        self.buf.extend(xs.iter().map(|&x| x as u8));
+    }
 }
 
 /// Bounds-checked little-endian reader over the (already checksummed)
@@ -731,6 +907,26 @@ impl<'a> Cursor<'a> {
         }
         String::from_utf8(self.bytes(n)?.to_vec())
             .map_err(|_| ArtifactError::Corrupt(format!("{} is not utf-8", what)))
+    }
+
+    /// Reads `n` bytes as an i8 bank: a zero-copy borrow from `src` when
+    /// the stream is a live mapping, an owned copy otherwise. `self.pos`
+    /// is the absolute file offset because the body is a file prefix.
+    fn i8_bank(
+        &mut self,
+        n: usize,
+        src: Option<&Arc<MappedFile>>,
+        what: &str,
+    ) -> std::result::Result<BankI8, ArtifactError> {
+        let off = self.pos;
+        let raw = self.bytes(n)?;
+        if let Some(map) = src {
+            if let Some(bank) = BankI8::borrowed(map, off, n) {
+                return Ok(bank);
+            }
+            return Err(ArtifactError::Corrupt(format!("{} window outside mapping", what)));
+        }
+        Ok(BankI8::from(raw.iter().map(|&b| b as i8).collect::<Vec<i8>>()))
     }
 
     fn f32_vec(&mut self, what: &str) -> std::result::Result<Vec<f32>, ArtifactError> {
@@ -796,9 +992,40 @@ mod tests {
             assert_eq!(a.enc.bits, b.enc.bits);
             assert_eq!(a.bias, b.bias);
             assert_eq!(a.act_scale.to_bits(), b.act_scale.to_bits());
+            assert_eq!(a.pack, b.pack, "prepacked banks survive the roundtrip");
+            assert!(!a.pack.is_mapped(), "from_bytes banks are owned");
         }
         // Re-serialization is byte-stable.
         assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn mapped_load_borrows_banks_and_matches_copy_bind() {
+        let w = small_weights();
+        for (mi, cfg) in [
+            EvalConfig::paper(Method::Dliq { q: 4 }, 0.5),
+            EvalConfig::paper(Method::Mip2q { l_max: 7 }, 0.5),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let c = compile_net(&w, &cfg).unwrap();
+            let path = std::env::temp_dir()
+                .join(format!("strum-mapped-{}-{}.strumc", std::process::id(), mi));
+            c.save(&path).unwrap();
+            let owned = CompiledNet::from_bytes(&std::fs::read(&path).unwrap()).unwrap();
+            let mapped = CompiledNet::load_mapped(&path).unwrap();
+            assert_eq!(mapped.identity, owned.identity);
+            for (a, b) in mapped.layers.iter().zip(owned.layers.iter()) {
+                assert_eq!(a.pack, b.pack, "mapped banks are bit-identical to owned");
+            }
+            // On unix the dense i8 banks really do borrow the mapping.
+            #[cfg(unix)]
+            assert!(mapped.layers.iter().all(|l| l.pack.is_mapped()));
+            // Re-serialization from the mapped form is byte-stable too.
+            assert_eq!(mapped.to_bytes(), std::fs::read(&path).unwrap());
+            let _ = std::fs::remove_file(&path);
+        }
     }
 
     #[test]

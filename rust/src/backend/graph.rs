@@ -351,18 +351,20 @@ impl NetworkPlan {
         Self::bind(&m.net, m.num_classes, mean_rmse, inputs)
     }
 
-    /// Serve time: binds a plan straight from a compiled artifact —
-    /// decode + bind only, no `transform_network`/`encode_layer` call
-    /// anywhere on the path. Bit-identical to [`Self::build`] on the
-    /// same weights + config (asserted across the zoo in
-    /// `tests/artifact.rs`).
+    /// Serve time: binds a plan straight from a compiled artifact's
+    /// prepacked banks — pure layout, no decode, no repack, and no
+    /// `transform_network`/`encode_layer` call anywhere on the path
+    /// (banks of an mmap-loaded artifact stay borrowed from the mapping,
+    /// so the clone below is Arc-cheap). Bit-identical to
+    /// [`Self::build`] on the same weights + config (asserted across the
+    /// zoo in `tests/artifact.rs`).
     pub fn from_artifact(compiled: &crate::artifact::CompiledNet) -> Result<NetworkPlan> {
         ensure!(!compiled.layers.is_empty(), "artifact has no layers");
         let mut inputs = Vec::with_capacity(compiled.layers.len());
         for l in &compiled.layers {
             inputs.push(LayerSource {
                 meta: &l.meta,
-                gemm: StrumGemm::from_encoded(&l.enc)?,
+                gemm: StrumGemm::from_packed(&l.enc, l.pack.clone())?,
                 bias: l.bias.clone(),
                 act_scale: l.act_scale,
             });

@@ -12,6 +12,30 @@
 //! cannot overflow because `2·127² < 2¹⁵·2¹⁵`. This mirrors how
 //! mixed-precision accelerators pack sub-byte operands into wider
 //! datapath lanes (PULP-NN-style sub-word parallelism in software).
+//!
+//! # AVX-512 tier
+//!
+//! The 512-bit kernels are written as inline `asm!` (hardcoded zmm0–15,
+//! xmm clobbers) so they build on stable without the AVX-512 intrinsics
+//! or `#[target_feature]` gates; dispatch guarantees they only run after
+//! `is_x86_feature_detected!` confirms the features. Two sub-paths share
+//! the tier:
+//!
+//! * **BW** (`avx512f+avx512bw`) — `vpmovsxbw` widens 32 int8 lanes per
+//!   load straight from memory, `vpmaddwd`+`vpaddd` accumulate: the AVX2
+//!   scheme at twice the width.
+//! * **VNNI** (`+avx512vnni`) — `vpdpbusd` fuses u8×i8 multiply and
+//!   4-lane dword accumulate. The instruction's first operand is
+//!   *unsigned*, so activations are biased by +128 (`x ^ 0x80`) and the
+//!   bank-constant correction `128·Σw` (computed with a second
+//!   `vpdpbusd` against an all-ones register) is subtracted at the end:
+//!   `Σ(x+128)·w − 128·Σw = Σx·w`. All arithmetic is wrapping int32 on
+//!   both sides, so the identity holds bit-exactly whenever the true dot
+//!   fits in `i32` — the same contract every other kernel has.
+//!
+//! The 2-rows×4-channels `rows2` kernels amortize one weight-bank sweep
+//! over two activation rows (the GEMM driver pairs live rows), which is
+//! where the 512-bit tier earns its keep on large-m conv layers.
 
 /// Scalar reference kernel — the semantics every SIMD path must match
 /// bit-for-bit. Four independent accumulators so LLVM can auto-vectorize
@@ -44,6 +68,24 @@ pub fn dot_i8_x4_scalar(x: &[i8], w0: &[i8], w1: &[i8], w2: &[i8], w3: &[i8]) ->
         dot_i8_scalar(x, w1),
         dot_i8_scalar(x, w2),
         dot_i8_scalar(x, w3),
+    ]
+}
+
+/// Scalar 2×4 reference: two activation rows against the same four
+/// weight rows. Plain composition of two 1×4 calls — the definition the
+/// fused AVX-512 `rows2` kernels must reproduce bit-for-bit.
+#[inline]
+pub fn dot_i8_x4_rows2_scalar(
+    x0: &[i8],
+    x1: &[i8],
+    w0: &[i8],
+    w1: &[i8],
+    w2: &[i8],
+    w3: &[i8],
+) -> [[i32; 4]; 2] {
+    [
+        dot_i8_x4_scalar(x0, w0, w1, w2, w3),
+        dot_i8_x4_scalar(x1, w0, w1, w2, w3),
     ]
 }
 
@@ -280,6 +322,603 @@ mod x86 {
         }
         out
     }
+
+    // ------------------------------------------------------------------
+    // AVX-512 tier — inline asm with hardcoded zmm0..zmm15 (module docs
+    // explain why not intrinsics). Every kernel:
+    //   * processes whole 64-byte chunks in the asm loop, spills its
+    //     accumulator registers to a caller buffer, and leaves the
+    //     `len % 64` tail to the scalar reference;
+    //   * declares all 16 xmm registers clobbered (the xmm clobber
+    //     covers the aliased ymm/zmm register units) and ends with
+    //     `vzeroupper`, so surrounding SSE code pays no transition
+    //     penalty and the compiler keeps nothing live in vector regs;
+    //   * is `unsafe` with a feature-detection contract instead of
+    //     `#[target_feature]`: the bytes are assembled unconditionally
+    //     and must only be *executed* after runtime detection.
+    // ------------------------------------------------------------------
+
+    use std::arch::asm;
+
+    /// 64-byte constants for the VNNI bias trick, 64-aligned so the
+    /// EVEX loads never split a cache line.
+    #[repr(align(64))]
+    struct A64([u8; 64]);
+    /// `x ^ 0x80` == `(x + 128) as u8`: maps i8 −128..=127 → u8 0..=255.
+    static BIAS80: A64 = A64([0x80; 64]);
+    /// All-ones u8 multiplier: `vpdpbusd(acc, ONES01, w)` accumulates Σw.
+    static ONES01: A64 = A64([0x01; 64]);
+
+    /// Wrapping horizontal sum of spilled int32 lanes (wrapping because
+    /// the biased VNNI intermediates may exceed `i32` even when the true
+    /// dot does not; modular arithmetic keeps the end result exact).
+    #[inline]
+    fn wrapping_lane_sum(lanes: &[i32]) -> i32 {
+        lanes.iter().fold(0i32, |a, &b| a.wrapping_add(b))
+    }
+
+    /// True when the `vpdpbusd` sub-path is runnable on this host.
+    pub fn avx512_vnni_available() -> bool {
+        is_x86_feature_detected!("avx512f")
+            && is_x86_feature_detected!("avx512bw")
+            && is_x86_feature_detected!("avx512vnni")
+    }
+
+    /// AVX-512BW dot kernel: 64 int8 lanes per iteration, widened
+    /// straight from memory (`vpmovsxbw zmm, ymmword`) and combined with
+    /// `vpmaddwd` — the AVX2 scheme at twice the width.
+    /// Safety: caller must verify `avx512f` + `avx512bw` via
+    /// `is_x86_feature_detected!`; `x.len() == w.len()`.
+    pub unsafe fn dot_i8_avx512bw(x: &[i8], w: &[i8]) -> i32 {
+        debug_assert_eq!(x.len(), w.len());
+        let n = x.len();
+        let chunks = n - n % 64;
+        let mut s = 0i32;
+        if chunks > 0 {
+            let mut acc = [0i32; 16];
+            asm!(
+                "vpxord zmm0, zmm0, zmm0",
+                "2:",
+                "vpmovsxbw zmm1, ymmword ptr [{x} + {i}]",
+                "vpmovsxbw zmm2, ymmword ptr [{w} + {i}]",
+                "vpmaddwd zmm1, zmm1, zmm2",
+                "vpaddd zmm0, zmm0, zmm1",
+                "vpmovsxbw zmm1, ymmword ptr [{x} + {i} + 32]",
+                "vpmovsxbw zmm2, ymmword ptr [{w} + {i} + 32]",
+                "vpmaddwd zmm1, zmm1, zmm2",
+                "vpaddd zmm0, zmm0, zmm1",
+                "add {i}, 64",
+                "cmp {i}, {end}",
+                "jb 2b",
+                "vmovdqu32 zmmword ptr [{acc}], zmm0",
+                "vzeroupper",
+                x = in(reg) x.as_ptr(),
+                w = in(reg) w.as_ptr(),
+                i = inout(reg) 0usize => _,
+                end = in(reg) chunks,
+                acc = in(reg) acc.as_mut_ptr(),
+                out("xmm0") _, out("xmm1") _, out("xmm2") _, out("xmm3") _,
+                out("xmm4") _, out("xmm5") _, out("xmm6") _, out("xmm7") _,
+                out("xmm8") _, out("xmm9") _, out("xmm10") _, out("xmm11") _,
+                out("xmm12") _, out("xmm13") _, out("xmm14") _, out("xmm15") _,
+                options(nostack),
+            );
+            s = wrapping_lane_sum(&acc);
+        }
+        s.wrapping_add(super::dot_i8_scalar(&x[chunks..], &w[chunks..]))
+    }
+
+    /// AVX-512VNNI dot kernel: `vpdpbusd` fuses u8×i8 multiply + 4-lane
+    /// dword accumulate; activations are biased +128 and the `128·Σw`
+    /// correction (second `vpdpbusd` against all-ones) is subtracted at
+    /// the end (module docs derive the identity).
+    /// Safety: caller must verify [`avx512_vnni_available`];
+    /// `x.len() == w.len()`.
+    pub unsafe fn dot_i8_avx512vnni(x: &[i8], w: &[i8]) -> i32 {
+        debug_assert_eq!(x.len(), w.len());
+        let n = x.len();
+        let chunks = n - n % 64;
+        let mut s = 0i32;
+        if chunks > 0 {
+            let mut acc = [0i32; 16];
+            let mut wsum = [0i32; 16];
+            asm!(
+                "vpxord zmm0, zmm0, zmm0",
+                "vpxord zmm1, zmm1, zmm1",
+                "vmovdqu32 zmm2, zmmword ptr [{ones}]",
+                "2:",
+                "vmovdqu32 zmm3, zmmword ptr [{x} + {i}]",
+                "vpxord zmm3, zmm3, zmmword ptr [{bias}]",
+                "vmovdqu32 zmm4, zmmword ptr [{w} + {i}]",
+                "vpdpbusd zmm0, zmm3, zmm4",
+                "vpdpbusd zmm1, zmm2, zmm4",
+                "add {i}, 64",
+                "cmp {i}, {end}",
+                "jb 2b",
+                "vmovdqu32 zmmword ptr [{acc}], zmm0",
+                "vmovdqu32 zmmword ptr [{ws}], zmm1",
+                "vzeroupper",
+                x = in(reg) x.as_ptr(),
+                w = in(reg) w.as_ptr(),
+                i = inout(reg) 0usize => _,
+                end = in(reg) chunks,
+                ones = in(reg) ONES01.0.as_ptr(),
+                bias = in(reg) BIAS80.0.as_ptr(),
+                acc = in(reg) acc.as_mut_ptr(),
+                ws = in(reg) wsum.as_mut_ptr(),
+                out("xmm0") _, out("xmm1") _, out("xmm2") _, out("xmm3") _,
+                out("xmm4") _, out("xmm5") _, out("xmm6") _, out("xmm7") _,
+                out("xmm8") _, out("xmm9") _, out("xmm10") _, out("xmm11") _,
+                out("xmm12") _, out("xmm13") _, out("xmm14") _, out("xmm15") _,
+                options(nostack),
+            );
+            s = wrapping_lane_sum(&acc)
+                .wrapping_sub(wrapping_lane_sum(&wsum).wrapping_mul(128));
+        }
+        s.wrapping_add(super::dot_i8_scalar(&x[chunks..], &w[chunks..]))
+    }
+
+    /// AVX-512 dot on the best sub-path this host has.
+    /// Safety: caller must verify `avx512f` + `avx512bw`.
+    #[inline]
+    pub unsafe fn dot_i8_avx512(x: &[i8], w: &[i8]) -> i32 {
+        if avx512_vnni_available() {
+            dot_i8_avx512vnni(x, w)
+        } else {
+            dot_i8_avx512bw(x, w)
+        }
+    }
+
+    /// AVX-512BW 1×4 kernel: the widened activation registers are shared
+    /// across four weight rows. Safety: as [`dot_i8_avx512bw`]; all five
+    /// slices equal length.
+    pub unsafe fn dot_i8_x4_avx512bw(
+        x: &[i8],
+        w0: &[i8],
+        w1: &[i8],
+        w2: &[i8],
+        w3: &[i8],
+    ) -> [i32; 4] {
+        let n = x.len();
+        debug_assert!(w0.len() == n && w1.len() == n && w2.len() == n && w3.len() == n);
+        let chunks = n - n % 64;
+        let mut out = [0i32; 4];
+        if chunks > 0 {
+            let mut acc = [0i32; 64];
+            asm!(
+                "vpxord zmm0, zmm0, zmm0",
+                "vpxord zmm1, zmm1, zmm1",
+                "vpxord zmm2, zmm2, zmm2",
+                "vpxord zmm3, zmm3, zmm3",
+                "2:",
+                "vpmovsxbw zmm4, ymmword ptr [{x} + {i}]",
+                "vpmovsxbw zmm5, ymmword ptr [{x} + {i} + 32]",
+                "vpmovsxbw zmm6, ymmword ptr [{w0} + {i}]",
+                "vpmaddwd zmm6, zmm6, zmm4",
+                "vpaddd zmm0, zmm0, zmm6",
+                "vpmovsxbw zmm6, ymmword ptr [{w0} + {i} + 32]",
+                "vpmaddwd zmm6, zmm6, zmm5",
+                "vpaddd zmm0, zmm0, zmm6",
+                "vpmovsxbw zmm6, ymmword ptr [{w1} + {i}]",
+                "vpmaddwd zmm6, zmm6, zmm4",
+                "vpaddd zmm1, zmm1, zmm6",
+                "vpmovsxbw zmm6, ymmword ptr [{w1} + {i} + 32]",
+                "vpmaddwd zmm6, zmm6, zmm5",
+                "vpaddd zmm1, zmm1, zmm6",
+                "vpmovsxbw zmm6, ymmword ptr [{w2} + {i}]",
+                "vpmaddwd zmm6, zmm6, zmm4",
+                "vpaddd zmm2, zmm2, zmm6",
+                "vpmovsxbw zmm6, ymmword ptr [{w2} + {i} + 32]",
+                "vpmaddwd zmm6, zmm6, zmm5",
+                "vpaddd zmm2, zmm2, zmm6",
+                "vpmovsxbw zmm6, ymmword ptr [{w3} + {i}]",
+                "vpmaddwd zmm6, zmm6, zmm4",
+                "vpaddd zmm3, zmm3, zmm6",
+                "vpmovsxbw zmm6, ymmword ptr [{w3} + {i} + 32]",
+                "vpmaddwd zmm6, zmm6, zmm5",
+                "vpaddd zmm3, zmm3, zmm6",
+                "add {i}, 64",
+                "cmp {i}, {end}",
+                "jb 2b",
+                "vmovdqu32 zmmword ptr [{acc}], zmm0",
+                "vmovdqu32 zmmword ptr [{acc} + 64], zmm1",
+                "vmovdqu32 zmmword ptr [{acc} + 128], zmm2",
+                "vmovdqu32 zmmword ptr [{acc} + 192], zmm3",
+                "vzeroupper",
+                x = in(reg) x.as_ptr(),
+                w0 = in(reg) w0.as_ptr(),
+                w1 = in(reg) w1.as_ptr(),
+                w2 = in(reg) w2.as_ptr(),
+                w3 = in(reg) w3.as_ptr(),
+                i = inout(reg) 0usize => _,
+                end = in(reg) chunks,
+                acc = in(reg) acc.as_mut_ptr(),
+                out("xmm0") _, out("xmm1") _, out("xmm2") _, out("xmm3") _,
+                out("xmm4") _, out("xmm5") _, out("xmm6") _, out("xmm7") _,
+                out("xmm8") _, out("xmm9") _, out("xmm10") _, out("xmm11") _,
+                out("xmm12") _, out("xmm13") _, out("xmm14") _, out("xmm15") _,
+                options(nostack),
+            );
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = wrapping_lane_sum(&acc[j * 16..(j + 1) * 16]);
+            }
+        }
+        let t = super::dot_i8_x4_scalar(
+            &x[chunks..],
+            &w0[chunks..],
+            &w1[chunks..],
+            &w2[chunks..],
+            &w3[chunks..],
+        );
+        for j in 0..4 {
+            out[j] = out[j].wrapping_add(t[j]);
+        }
+        out
+    }
+
+    /// AVX-512VNNI 1×4 kernel: one biased activation register drives
+    /// four `vpdpbusd` streams; per-row Σw corrections ride four more.
+    /// Safety: as [`dot_i8_avx512vnni`]; all five slices equal length.
+    pub unsafe fn dot_i8_x4_avx512vnni(
+        x: &[i8],
+        w0: &[i8],
+        w1: &[i8],
+        w2: &[i8],
+        w3: &[i8],
+    ) -> [i32; 4] {
+        let n = x.len();
+        debug_assert!(w0.len() == n && w1.len() == n && w2.len() == n && w3.len() == n);
+        let chunks = n - n % 64;
+        let mut out = [0i32; 4];
+        if chunks > 0 {
+            let mut acc = [0i32; 64];
+            let mut wsum = [0i32; 64];
+            asm!(
+                "vpxord zmm0, zmm0, zmm0",
+                "vpxord zmm1, zmm1, zmm1",
+                "vpxord zmm2, zmm2, zmm2",
+                "vpxord zmm3, zmm3, zmm3",
+                "vpxord zmm4, zmm4, zmm4",
+                "vpxord zmm5, zmm5, zmm5",
+                "vpxord zmm6, zmm6, zmm6",
+                "vpxord zmm7, zmm7, zmm7",
+                "vmovdqu32 zmm8, zmmword ptr [{ones}]",
+                "2:",
+                "vmovdqu32 zmm9, zmmword ptr [{x} + {i}]",
+                "vpxord zmm9, zmm9, zmmword ptr [{bias}]",
+                "vmovdqu32 zmm10, zmmword ptr [{w0} + {i}]",
+                "vpdpbusd zmm0, zmm9, zmm10",
+                "vpdpbusd zmm4, zmm8, zmm10",
+                "vmovdqu32 zmm10, zmmword ptr [{w1} + {i}]",
+                "vpdpbusd zmm1, zmm9, zmm10",
+                "vpdpbusd zmm5, zmm8, zmm10",
+                "vmovdqu32 zmm10, zmmword ptr [{w2} + {i}]",
+                "vpdpbusd zmm2, zmm9, zmm10",
+                "vpdpbusd zmm6, zmm8, zmm10",
+                "vmovdqu32 zmm10, zmmword ptr [{w3} + {i}]",
+                "vpdpbusd zmm3, zmm9, zmm10",
+                "vpdpbusd zmm7, zmm8, zmm10",
+                "add {i}, 64",
+                "cmp {i}, {end}",
+                "jb 2b",
+                "vmovdqu32 zmmword ptr [{acc}], zmm0",
+                "vmovdqu32 zmmword ptr [{acc} + 64], zmm1",
+                "vmovdqu32 zmmword ptr [{acc} + 128], zmm2",
+                "vmovdqu32 zmmword ptr [{acc} + 192], zmm3",
+                "vmovdqu32 zmmword ptr [{ws}], zmm4",
+                "vmovdqu32 zmmword ptr [{ws} + 64], zmm5",
+                "vmovdqu32 zmmword ptr [{ws} + 128], zmm6",
+                "vmovdqu32 zmmword ptr [{ws} + 192], zmm7",
+                "vzeroupper",
+                x = in(reg) x.as_ptr(),
+                w0 = in(reg) w0.as_ptr(),
+                w1 = in(reg) w1.as_ptr(),
+                w2 = in(reg) w2.as_ptr(),
+                w3 = in(reg) w3.as_ptr(),
+                i = inout(reg) 0usize => _,
+                end = in(reg) chunks,
+                ones = in(reg) ONES01.0.as_ptr(),
+                bias = in(reg) BIAS80.0.as_ptr(),
+                acc = in(reg) acc.as_mut_ptr(),
+                ws = in(reg) wsum.as_mut_ptr(),
+                out("xmm0") _, out("xmm1") _, out("xmm2") _, out("xmm3") _,
+                out("xmm4") _, out("xmm5") _, out("xmm6") _, out("xmm7") _,
+                out("xmm8") _, out("xmm9") _, out("xmm10") _, out("xmm11") _,
+                out("xmm12") _, out("xmm13") _, out("xmm14") _, out("xmm15") _,
+                options(nostack),
+            );
+            for (j, o) in out.iter_mut().enumerate() {
+                let corr = wrapping_lane_sum(&wsum[j * 16..(j + 1) * 16]).wrapping_mul(128);
+                *o = wrapping_lane_sum(&acc[j * 16..(j + 1) * 16]).wrapping_sub(corr);
+            }
+        }
+        let t = super::dot_i8_x4_scalar(
+            &x[chunks..],
+            &w0[chunks..],
+            &w1[chunks..],
+            &w2[chunks..],
+            &w3[chunks..],
+        );
+        for j in 0..4 {
+            out[j] = out[j].wrapping_add(t[j]);
+        }
+        out
+    }
+
+    /// AVX-512 1×4 on the best sub-path this host has.
+    /// Safety: caller must verify `avx512f` + `avx512bw`.
+    #[inline]
+    pub unsafe fn dot_i8_x4_avx512(
+        x: &[i8],
+        w0: &[i8],
+        w1: &[i8],
+        w2: &[i8],
+        w3: &[i8],
+    ) -> [i32; 4] {
+        if avx512_vnni_available() {
+            dot_i8_x4_avx512vnni(x, w0, w1, w2, w3)
+        } else {
+            dot_i8_x4_avx512bw(x, w0, w1, w2, w3)
+        }
+    }
+
+    /// AVX-512BW 2×4 kernel: one weight-bank sweep feeds two activation
+    /// rows (the large-m GEMM shape). Safety: as [`dot_i8_avx512bw`];
+    /// all six slices equal length.
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn dot_i8_x4_rows2_avx512bw(
+        x0: &[i8],
+        x1: &[i8],
+        w0: &[i8],
+        w1: &[i8],
+        w2: &[i8],
+        w3: &[i8],
+    ) -> [[i32; 4]; 2] {
+        let n = x0.len();
+        debug_assert!(
+            x1.len() == n && w0.len() == n && w1.len() == n && w2.len() == n && w3.len() == n
+        );
+        let chunks = n - n % 64;
+        let mut out = [[0i32; 4]; 2];
+        if chunks > 0 {
+            let mut acc = [0i32; 128];
+            asm!(
+                "vpxord zmm0, zmm0, zmm0",
+                "vpxord zmm1, zmm1, zmm1",
+                "vpxord zmm2, zmm2, zmm2",
+                "vpxord zmm3, zmm3, zmm3",
+                "vpxord zmm4, zmm4, zmm4",
+                "vpxord zmm5, zmm5, zmm5",
+                "vpxord zmm6, zmm6, zmm6",
+                "vpxord zmm7, zmm7, zmm7",
+                "2:",
+                "vpmovsxbw zmm8, ymmword ptr [{x0} + {i}]",
+                "vpmovsxbw zmm9, ymmword ptr [{x0} + {i} + 32]",
+                "vpmovsxbw zmm10, ymmword ptr [{x1} + {i}]",
+                "vpmovsxbw zmm11, ymmword ptr [{x1} + {i} + 32]",
+                "vpmovsxbw zmm12, ymmword ptr [{w0} + {i}]",
+                "vpmovsxbw zmm13, ymmword ptr [{w0} + {i} + 32]",
+                "vpmaddwd zmm14, zmm12, zmm8",
+                "vpaddd zmm0, zmm0, zmm14",
+                "vpmaddwd zmm14, zmm13, zmm9",
+                "vpaddd zmm0, zmm0, zmm14",
+                "vpmaddwd zmm14, zmm12, zmm10",
+                "vpaddd zmm4, zmm4, zmm14",
+                "vpmaddwd zmm14, zmm13, zmm11",
+                "vpaddd zmm4, zmm4, zmm14",
+                "vpmovsxbw zmm12, ymmword ptr [{w1} + {i}]",
+                "vpmovsxbw zmm13, ymmword ptr [{w1} + {i} + 32]",
+                "vpmaddwd zmm14, zmm12, zmm8",
+                "vpaddd zmm1, zmm1, zmm14",
+                "vpmaddwd zmm14, zmm13, zmm9",
+                "vpaddd zmm1, zmm1, zmm14",
+                "vpmaddwd zmm14, zmm12, zmm10",
+                "vpaddd zmm5, zmm5, zmm14",
+                "vpmaddwd zmm14, zmm13, zmm11",
+                "vpaddd zmm5, zmm5, zmm14",
+                "vpmovsxbw zmm12, ymmword ptr [{w2} + {i}]",
+                "vpmovsxbw zmm13, ymmword ptr [{w2} + {i} + 32]",
+                "vpmaddwd zmm14, zmm12, zmm8",
+                "vpaddd zmm2, zmm2, zmm14",
+                "vpmaddwd zmm14, zmm13, zmm9",
+                "vpaddd zmm2, zmm2, zmm14",
+                "vpmaddwd zmm14, zmm12, zmm10",
+                "vpaddd zmm6, zmm6, zmm14",
+                "vpmaddwd zmm14, zmm13, zmm11",
+                "vpaddd zmm6, zmm6, zmm14",
+                "vpmovsxbw zmm12, ymmword ptr [{w3} + {i}]",
+                "vpmovsxbw zmm13, ymmword ptr [{w3} + {i} + 32]",
+                "vpmaddwd zmm14, zmm12, zmm8",
+                "vpaddd zmm3, zmm3, zmm14",
+                "vpmaddwd zmm14, zmm13, zmm9",
+                "vpaddd zmm3, zmm3, zmm14",
+                "vpmaddwd zmm14, zmm12, zmm10",
+                "vpaddd zmm7, zmm7, zmm14",
+                "vpmaddwd zmm14, zmm13, zmm11",
+                "vpaddd zmm7, zmm7, zmm14",
+                "add {i}, 64",
+                "cmp {i}, {end}",
+                "jb 2b",
+                "vmovdqu32 zmmword ptr [{acc}], zmm0",
+                "vmovdqu32 zmmword ptr [{acc} + 64], zmm1",
+                "vmovdqu32 zmmword ptr [{acc} + 128], zmm2",
+                "vmovdqu32 zmmword ptr [{acc} + 192], zmm3",
+                "vmovdqu32 zmmword ptr [{acc} + 256], zmm4",
+                "vmovdqu32 zmmword ptr [{acc} + 320], zmm5",
+                "vmovdqu32 zmmword ptr [{acc} + 384], zmm6",
+                "vmovdqu32 zmmword ptr [{acc} + 448], zmm7",
+                "vzeroupper",
+                x0 = in(reg) x0.as_ptr(),
+                x1 = in(reg) x1.as_ptr(),
+                w0 = in(reg) w0.as_ptr(),
+                w1 = in(reg) w1.as_ptr(),
+                w2 = in(reg) w2.as_ptr(),
+                w3 = in(reg) w3.as_ptr(),
+                i = inout(reg) 0usize => _,
+                end = in(reg) chunks,
+                acc = in(reg) acc.as_mut_ptr(),
+                out("xmm0") _, out("xmm1") _, out("xmm2") _, out("xmm3") _,
+                out("xmm4") _, out("xmm5") _, out("xmm6") _, out("xmm7") _,
+                out("xmm8") _, out("xmm9") _, out("xmm10") _, out("xmm11") _,
+                out("xmm12") _, out("xmm13") _, out("xmm14") _, out("xmm15") _,
+                options(nostack),
+            );
+            for r in 0..2 {
+                for j in 0..4 {
+                    let base = (r * 4 + j) * 16;
+                    out[r][j] = wrapping_lane_sum(&acc[base..base + 16]);
+                }
+            }
+        }
+        let t = super::dot_i8_x4_rows2_scalar(
+            &x0[chunks..],
+            &x1[chunks..],
+            &w0[chunks..],
+            &w1[chunks..],
+            &w2[chunks..],
+            &w3[chunks..],
+        );
+        for r in 0..2 {
+            for j in 0..4 {
+                out[r][j] = out[r][j].wrapping_add(t[r][j]);
+            }
+        }
+        out
+    }
+
+    /// AVX-512VNNI 2×4 kernel. The Σw correction is per weight row but
+    /// row-independent, so the four correction accumulators are shared
+    /// across both activation rows — that is what makes the register
+    /// budget land exactly on zmm0..zmm15.
+    /// Safety: as [`dot_i8_avx512vnni`]; all six slices equal length.
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn dot_i8_x4_rows2_avx512vnni(
+        x0: &[i8],
+        x1: &[i8],
+        w0: &[i8],
+        w1: &[i8],
+        w2: &[i8],
+        w3: &[i8],
+    ) -> [[i32; 4]; 2] {
+        let n = x0.len();
+        debug_assert!(
+            x1.len() == n && w0.len() == n && w1.len() == n && w2.len() == n && w3.len() == n
+        );
+        let chunks = n - n % 64;
+        let mut out = [[0i32; 4]; 2];
+        if chunks > 0 {
+            let mut acc = [0i32; 128];
+            let mut wsum = [0i32; 64];
+            asm!(
+                "vpxord zmm0, zmm0, zmm0",
+                "vpxord zmm1, zmm1, zmm1",
+                "vpxord zmm2, zmm2, zmm2",
+                "vpxord zmm3, zmm3, zmm3",
+                "vpxord zmm4, zmm4, zmm4",
+                "vpxord zmm5, zmm5, zmm5",
+                "vpxord zmm6, zmm6, zmm6",
+                "vpxord zmm7, zmm7, zmm7",
+                "vpxord zmm8, zmm8, zmm8",
+                "vpxord zmm9, zmm9, zmm9",
+                "vpxord zmm10, zmm10, zmm10",
+                "vpxord zmm11, zmm11, zmm11",
+                "vmovdqu32 zmm12, zmmword ptr [{ones}]",
+                "2:",
+                "vmovdqu32 zmm13, zmmword ptr [{x0} + {i}]",
+                "vpxord zmm13, zmm13, zmmword ptr [{bias}]",
+                "vmovdqu32 zmm14, zmmword ptr [{x1} + {i}]",
+                "vpxord zmm14, zmm14, zmmword ptr [{bias}]",
+                "vmovdqu32 zmm15, zmmword ptr [{w0} + {i}]",
+                "vpdpbusd zmm0, zmm13, zmm15",
+                "vpdpbusd zmm4, zmm14, zmm15",
+                "vpdpbusd zmm8, zmm12, zmm15",
+                "vmovdqu32 zmm15, zmmword ptr [{w1} + {i}]",
+                "vpdpbusd zmm1, zmm13, zmm15",
+                "vpdpbusd zmm5, zmm14, zmm15",
+                "vpdpbusd zmm9, zmm12, zmm15",
+                "vmovdqu32 zmm15, zmmword ptr [{w2} + {i}]",
+                "vpdpbusd zmm2, zmm13, zmm15",
+                "vpdpbusd zmm6, zmm14, zmm15",
+                "vpdpbusd zmm10, zmm12, zmm15",
+                "vmovdqu32 zmm15, zmmword ptr [{w3} + {i}]",
+                "vpdpbusd zmm3, zmm13, zmm15",
+                "vpdpbusd zmm7, zmm14, zmm15",
+                "vpdpbusd zmm11, zmm12, zmm15",
+                "add {i}, 64",
+                "cmp {i}, {end}",
+                "jb 2b",
+                "vmovdqu32 zmmword ptr [{acc}], zmm0",
+                "vmovdqu32 zmmword ptr [{acc} + 64], zmm1",
+                "vmovdqu32 zmmword ptr [{acc} + 128], zmm2",
+                "vmovdqu32 zmmword ptr [{acc} + 192], zmm3",
+                "vmovdqu32 zmmword ptr [{acc} + 256], zmm4",
+                "vmovdqu32 zmmword ptr [{acc} + 320], zmm5",
+                "vmovdqu32 zmmword ptr [{acc} + 384], zmm6",
+                "vmovdqu32 zmmword ptr [{acc} + 448], zmm7",
+                "vmovdqu32 zmmword ptr [{ws}], zmm8",
+                "vmovdqu32 zmmword ptr [{ws} + 64], zmm9",
+                "vmovdqu32 zmmword ptr [{ws} + 128], zmm10",
+                "vmovdqu32 zmmword ptr [{ws} + 192], zmm11",
+                "vzeroupper",
+                x0 = in(reg) x0.as_ptr(),
+                x1 = in(reg) x1.as_ptr(),
+                w0 = in(reg) w0.as_ptr(),
+                w1 = in(reg) w1.as_ptr(),
+                w2 = in(reg) w2.as_ptr(),
+                w3 = in(reg) w3.as_ptr(),
+                i = inout(reg) 0usize => _,
+                end = in(reg) chunks,
+                ones = in(reg) ONES01.0.as_ptr(),
+                bias = in(reg) BIAS80.0.as_ptr(),
+                acc = in(reg) acc.as_mut_ptr(),
+                ws = in(reg) wsum.as_mut_ptr(),
+                out("xmm0") _, out("xmm1") _, out("xmm2") _, out("xmm3") _,
+                out("xmm4") _, out("xmm5") _, out("xmm6") _, out("xmm7") _,
+                out("xmm8") _, out("xmm9") _, out("xmm10") _, out("xmm11") _,
+                out("xmm12") _, out("xmm13") _, out("xmm14") _, out("xmm15") _,
+                options(nostack),
+            );
+            for j in 0..4 {
+                let corr = wrapping_lane_sum(&wsum[j * 16..(j + 1) * 16]).wrapping_mul(128);
+                out[0][j] = wrapping_lane_sum(&acc[j * 16..(j + 1) * 16]).wrapping_sub(corr);
+                out[1][j] =
+                    wrapping_lane_sum(&acc[(4 + j) * 16..(5 + j) * 16]).wrapping_sub(corr);
+            }
+        }
+        let t = super::dot_i8_x4_rows2_scalar(
+            &x0[chunks..],
+            &x1[chunks..],
+            &w0[chunks..],
+            &w1[chunks..],
+            &w2[chunks..],
+            &w3[chunks..],
+        );
+        for r in 0..2 {
+            for j in 0..4 {
+                out[r][j] = out[r][j].wrapping_add(t[r][j]);
+            }
+        }
+        out
+    }
+
+    /// AVX-512 2×4 on the best sub-path this host has.
+    /// Safety: caller must verify `avx512f` + `avx512bw`.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn dot_i8_x4_rows2_avx512(
+        x0: &[i8],
+        x1: &[i8],
+        w0: &[i8],
+        w1: &[i8],
+        w2: &[i8],
+        w3: &[i8],
+    ) -> [[i32; 4]; 2] {
+        if avx512_vnni_available() {
+            dot_i8_x4_rows2_avx512vnni(x0, x1, w0, w1, w2, w3)
+        } else {
+            dot_i8_x4_rows2_avx512bw(x0, x1, w0, w1, w2, w3)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -310,6 +949,62 @@ mod tests {
             assert_eq!(unsafe { dot_i8_sse2(&x, &w) }, want, "sse2 n={}", n);
             if is_x86_feature_detected!("avx2") {
                 assert_eq!(unsafe { dot_i8_avx2(&x, &w) }, want, "avx2 n={}", n);
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx512_kernels_match_scalar_smoke() {
+        if !(is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512bw")) {
+            return; // older host: covered by tests/kernels.rs skip logic
+        }
+        // Off-64 lengths exercise the scalar tail; ±127 the saturation.
+        for n in [0usize, 1, 63, 64, 65, 127, 128, 200, 256, 333] {
+            let x: Vec<i8> = (0..n)
+                .map(|i| match i % 5 {
+                    0 => 127,
+                    1 => -128,
+                    _ => ((i * 37 + 11) % 255) as i8,
+                })
+                .collect();
+            let ws: Vec<Vec<i8>> = (0..4)
+                .map(|j| (0..n).map(|i| ((i * 29 + j * 13 + 7) % 255) as i8).collect())
+                .collect();
+            let want = dot_i8_scalar(&x, &ws[0]);
+            assert_eq!(unsafe { dot_i8_avx512bw(&x, &ws[0]) }, want, "bw n={}", n);
+            let want4 = dot_i8_x4_scalar(&x, &ws[0], &ws[1], &ws[2], &ws[3]);
+            assert_eq!(
+                unsafe { dot_i8_x4_avx512bw(&x, &ws[0], &ws[1], &ws[2], &ws[3]) },
+                want4,
+                "bw x4 n={}",
+                n
+            );
+            let want2 = dot_i8_x4_rows2_scalar(&x, &ws[3], &ws[0], &ws[1], &ws[2], &ws[3]);
+            assert_eq!(
+                unsafe {
+                    dot_i8_x4_rows2_avx512bw(&x, &ws[3], &ws[0], &ws[1], &ws[2], &ws[3])
+                },
+                want2,
+                "bw rows2 n={}",
+                n
+            );
+            if avx512_vnni_available() {
+                assert_eq!(unsafe { dot_i8_avx512vnni(&x, &ws[0]) }, want, "vnni n={}", n);
+                assert_eq!(
+                    unsafe { dot_i8_x4_avx512vnni(&x, &ws[0], &ws[1], &ws[2], &ws[3]) },
+                    want4,
+                    "vnni x4 n={}",
+                    n
+                );
+                assert_eq!(
+                    unsafe {
+                        dot_i8_x4_rows2_avx512vnni(&x, &ws[3], &ws[0], &ws[1], &ws[2], &ws[3])
+                    },
+                    want2,
+                    "vnni rows2 n={}",
+                    n
+                );
             }
         }
     }

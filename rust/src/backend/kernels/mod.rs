@@ -3,15 +3,17 @@
 //! Everything the hot loop of `strum serve|eval --backend native` executes
 //! funnels through here:
 //!
-//! * [`dot_i8`] / [`dot_i8_x4`] — explicit-SIMD int8 dot micro-kernels
-//!   (`dot_i8.rs`): AVX2 and SSE2 via `std::arch`, with a bit-exact
-//!   scalar fallback. Int32 accumulation semantics are preserved exactly
-//!   — every ISA path returns identical bits (asserted by the property
-//!   suite in `tests/kernels.rs`, not eyeballed).
+//! * [`dot_i8`] / [`dot_i8_x4`] / [`dot_i8_x4_rows2`] — explicit-SIMD
+//!   int8 dot micro-kernels (`dot_i8.rs`): AVX-512 (BW or VNNI
+//!   sub-path), AVX2 and SSE2, with a bit-exact scalar fallback. Int32
+//!   accumulation semantics are preserved exactly — every ISA path
+//!   returns identical bits (asserted by the property suite in
+//!   `tests/kernels.rs`, not eyeballed).
 //! * [`gemm_i8_blocked`] — cache-blocked GEMM driver (`pack.rs`): tiles
-//!   output channels in L2-resident strips, register-blocks 4 channels
-//!   per activation pass, and optionally skips all-zero activation rows
-//!   (the software analogue of `sim/`'s SparseFindFirst).
+//!   output channels in L2-resident strips, register-blocks 2 activation
+//!   rows × 4 channels per pass, and optionally skips all-zero
+//!   activation rows (the software analogue of `sim/`'s
+//!   SparseFindFirst).
 //! * [`Scratch`] — reusable per-thread buffer arena (`pack.rs`) replacing
 //!   the per-layer `vec!` allocations of the pre-kernel engine.
 //! * [`Requant`] + the fused epilogues (`epilogue.rs`) —
@@ -19,20 +21,34 @@
 //!   straight off the int32 accumulator tile, so intermediate f32 planes
 //!   never round-trip through memory between layers.
 //!
+//! # ISA tiers
+//!
+//! | tier | width | gate | scheme |
+//! |---|---|---|---|
+//! | `scalar` | — | always | 4-lane unrolled reference (the oracle) |
+//! | `sse2` | 128-bit | x86_64 baseline | unpack-widen + `pmaddwd` |
+//! | `avx2` | 256-bit | `avx2` detected | `cvtepi8_epi16` + `pmaddwd` |
+//! | `avx512` | 512-bit | `avx512f`+`avx512bw` | `vpmovsxbw` + `vpmaddwd`; with `avx512vnni` also detected, `vpdpbusd` u8×i8 fused dot (+128 bias trick) |
+//!
 //! # ISA dispatch
 //!
 //! The instruction set is resolved once per process by [`active_isa`]:
 //!
-//! 1. `STRUM_KERNEL=scalar|sse2|avx2` forces a path. A forced SIMD path
-//!    is honored only if the CPU actually supports it (falling back to
-//!    detection otherwise — never UB); `scalar` always wins, which is the
-//!    supported way to benchmark or debug against the reference kernel.
-//! 2. Otherwise, on x86_64: AVX2 when `is_x86_feature_detected!` says
-//!    so, else SSE2 (baseline on x86_64).
+//! 1. `STRUM_KERNEL=scalar|sse2|avx2|avx512` forces a path. A forced
+//!    SIMD path is honored only if the CPU actually supports it (falling
+//!    back to detection otherwise — never UB); `scalar` always wins,
+//!    which is the supported way to benchmark or debug against the
+//!    reference kernel. Any other value is a hard startup error — a
+//!    typo'd tier name must not silently serve on the wrong kernel.
+//! 2. Otherwise, on x86_64: AVX-512 when `is_x86_feature_detected!`
+//!    confirms `avx512f`+`avx512bw`, else AVX2 when detected, else SSE2
+//!    (baseline on x86_64).
 //! 3. On every other architecture: the scalar reference.
 //!
 //! All paths share one contract: identical int32 accumulators for
-//! identical inputs, so dispatch is invisible to numerics.
+//! identical inputs, so dispatch is invisible to numerics. The resolved
+//! tier is surfaced in `MetricsSnapshot::kernel_isa` and the bench run
+//! manifests.
 
 pub mod dot_i8;
 pub mod epilogue;
@@ -56,6 +72,9 @@ pub enum Isa {
     Sse2,
     /// 256-bit `madd_epi16` kernels (runtime-detected).
     Avx2,
+    /// 512-bit kernels (runtime-detected `avx512f`+`avx512bw`); uses the
+    /// `vpdpbusd` VNNI sub-path when `avx512vnni` is also present.
+    Avx512,
 }
 
 impl Isa {
@@ -64,7 +83,27 @@ impl Isa {
             Isa::Scalar => "scalar",
             Isa::Sse2 => "sse2",
             Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
         }
+    }
+}
+
+/// True when the 512-bit tier can run here (`avx512f`+`avx512bw`).
+#[cfg(target_arch = "x86_64")]
+fn avx512_available() -> bool {
+    is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512bw")
+}
+
+/// True when the AVX-512 tier would use the `vpdpbusd` VNNI sub-path
+/// (bench labeling + graceful test skips on non-VNNI hosts).
+pub fn avx512_vnni_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        dot_i8::avx512_vnni_available()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
     }
 }
 
@@ -77,6 +116,9 @@ pub fn available_isas() -> Vec<Isa> {
         isas.push(Isa::Sse2);
         if is_x86_feature_detected!("avx2") {
             isas.push(Isa::Avx2);
+        }
+        if avx512_available() {
+            isas.push(Isa::Avx512);
         }
     }
     isas
@@ -97,12 +139,34 @@ fn resolve_isa() -> Isa {
                 }
                 // Unsupported force request: fall through to detection.
             }
-            _ => {}
+            #[cfg(target_arch = "x86_64")]
+            "avx512" => {
+                if avx512_available() {
+                    return Isa::Avx512;
+                }
+                // Unsupported force request: fall through to detection.
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            "sse2" | "avx2" | "avx512" => {
+                // Known tier names that cannot run on this architecture:
+                // fall through to detection (scalar).
+            }
+            other => {
+                // A typo must not silently serve on the wrong kernel:
+                // fail fast, at first kernel use, with the valid names.
+                panic!(
+                    "STRUM_KERNEL={:?} is not a known kernel tier \
+                     (expected one of: scalar, sse2, avx2, avx512)",
+                    other
+                );
+            }
         }
     }
     #[cfg(target_arch = "x86_64")]
     {
-        if is_x86_feature_detected!("avx2") {
+        if avx512_available() {
+            Isa::Avx512
+        } else if is_x86_feature_detected!("avx2") {
             Isa::Avx2
         } else {
             Isa::Sse2
@@ -123,12 +187,14 @@ pub fn active_isa() -> Isa {
         1 => Isa::Scalar,
         2 => Isa::Sse2,
         3 => Isa::Avx2,
+        4 => Isa::Avx512,
         _ => {
             let isa = resolve_isa();
             let code = match isa {
                 Isa::Scalar => 1,
                 Isa::Sse2 => 2,
                 Isa::Avx2 => 3,
+                Isa::Avx512 => 4,
             };
             ACTIVE.store(code, Ordering::Relaxed);
             isa
@@ -150,11 +216,13 @@ pub fn dot_i8_isa(isa: Isa, x: &[i8], w: &[i8]) -> i32 {
     match isa {
         Isa::Scalar => dot_i8::dot_i8_scalar(x, w),
         #[cfg(target_arch = "x86_64")]
-        // Safety: Sse2 is baseline on x86_64; Avx2 only enters the
+        // Safety: Sse2 is baseline on x86_64; Avx2/Avx512 only enter the
         // dispatch set after runtime detection.
         Isa::Sse2 => unsafe { dot_i8::dot_i8_sse2(x, w) },
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe { dot_i8::dot_i8_avx2(x, w) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe { dot_i8::dot_i8_avx512(x, w) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => dot_i8::dot_i8_scalar(x, w),
     }
@@ -184,8 +252,49 @@ pub fn dot_i8_x4_isa(
         Isa::Sse2 => unsafe { dot_i8::dot_i8_x4_sse2(x, w0, w1, w2, w3) },
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe { dot_i8::dot_i8_x4_avx2(x, w0, w1, w2, w3) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe { dot_i8::dot_i8_x4_avx512(x, w0, w1, w2, w3) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => dot_i8::dot_i8_x4_scalar(x, w0, w1, w2, w3),
+    }
+}
+
+/// 2×4 register-blocked dot on the active ISA: two activation rows share
+/// one sweep of four weight rows (the GEMM driver's large-m shape).
+#[inline]
+pub fn dot_i8_x4_rows2(
+    x0: &[i8],
+    x1: &[i8],
+    w0: &[i8],
+    w1: &[i8],
+    w2: &[i8],
+    w3: &[i8],
+) -> [[i32; 4]; 2] {
+    dot_i8_x4_rows2_isa(active_isa(), x0, x1, w0, w1, w2, w3)
+}
+
+/// [`dot_i8_x4_rows2`] pinned to a specific ISA. Tiers without a fused
+/// 2×4 kernel compose two 1×4 calls — trivially bit-identical, so the
+/// driver can pair rows unconditionally.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn dot_i8_x4_rows2_isa(
+    isa: Isa,
+    x0: &[i8],
+    x1: &[i8],
+    w0: &[i8],
+    w1: &[i8],
+    w2: &[i8],
+    w3: &[i8],
+) -> [[i32; 4]; 2] {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: see `dot_i8_isa`.
+        Isa::Avx512 => unsafe { dot_i8::dot_i8_x4_rows2_avx512(x0, x1, w0, w1, w2, w3) },
+        _ => [
+            dot_i8_x4_isa(isa, x0, w0, w1, w2, w3),
+            dot_i8_x4_isa(isa, x1, w0, w1, w2, w3),
+        ],
     }
 }
 
@@ -209,6 +318,13 @@ mod tests {
             assert_eq!(dot_i8_isa(isa, &x, &w), want, "{:?}", isa);
             let got = dot_i8_x4_isa(isa, &x, &w, &w, &x, &w);
             assert_eq!(got, dot_i8_x4_isa(Isa::Scalar, &x, &w, &w, &x, &w), "{:?}", isa);
+            let got2 = dot_i8_x4_rows2_isa(isa, &x, &w, &w, &x, &w, &x);
+            assert_eq!(
+                got2,
+                dot_i8_x4_rows2_isa(Isa::Scalar, &x, &w, &w, &x, &w, &x),
+                "{:?}",
+                isa
+            );
         }
     }
 }

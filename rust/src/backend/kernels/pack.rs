@@ -7,9 +7,13 @@
 //! * **Channel strips** — output channels are tiled in strips whose
 //!   weight rows fit comfortably in L2, so one strip stays resident
 //!   while all `m` activation rows stream past it.
-//! * **1×4 register blocking** — within a strip, four weight rows are
-//!   driven per activation pass ([`super::dot_i8_x4`]), sharing the
-//!   activation loads (and their SIMD sign-extensions) across channels.
+//! * **2×4 register blocking** — within a strip, adjacent live
+//!   activation rows are paired and driven against four weight rows per
+//!   pass ([`super::dot_i8_x4_rows2`]): the weight loads are shared
+//!   across both rows (fused in the AVX-512 kernels, composed from two
+//!   1×4 calls elsewhere — bit-identical either way), and the
+//!   activation loads (and their SIMD widenings) are shared across
+//!   channels.
 //! * **Activation-sparsity skip** — an optional per-row nonzero bitmap
 //!   ([`mark_nonzero_rows`]) lets the driver skip all-zero im2col rows
 //!   entirely (their accumulators are exactly 0), the software analogue
@@ -21,7 +25,7 @@
 //! `k`), so blocking order is invisible to numerics: the driver is
 //! bit-identical to the naive triple loop on every ISA path.
 
-use super::{dot_i8_isa, dot_i8_x4_isa, Isa};
+use super::{dot_i8_isa, dot_i8_x4_isa, dot_i8_x4_rows2_isa, Isa};
 
 /// Weight-strip budget in bytes: strips of `nc` channels are sized so
 /// `nc · k` int8 weights stay L2-resident across all `m` activation rows.
@@ -62,17 +66,51 @@ pub fn gemm_i8_blocked_isa(
         return;
     }
     let nc = strip_channels(k, n);
+    let live = |i: usize| nonzero.map_or(true, |nz| nz[i]);
     let mut jc = 0usize;
     while jc < n {
         let jn = nc.min(n - jc);
-        for i in 0..m {
-            let orow = &mut out[i * n + jc..i * n + jc + jn];
-            if let Some(nz) = nonzero {
-                if !nz[i] {
-                    orow.fill(0);
-                    continue;
-                }
+        let mut i = 0usize;
+        while i < m {
+            if !live(i) {
+                out[i * n + jc..i * n + jc + jn].fill(0);
+                i += 1;
+                continue;
             }
+            // Pair this row with the next one when both are live: the
+            // 2×4 kernel shares each weight sweep across both rows.
+            if i + 1 < m && live(i + 1) {
+                let xi = &x[i * k..(i + 1) * k];
+                let xj = &x[(i + 1) * k..(i + 2) * k];
+                let (o0, o1) = out.split_at_mut((i + 1) * n);
+                let orow0 = &mut o0[i * n + jc..i * n + jc + jn];
+                let orow1 = &mut o1[jc..jc + jn];
+                let mut j = 0usize;
+                while j + 4 <= jn {
+                    let base = (jc + j) * k;
+                    let r = dot_i8_x4_rows2_isa(
+                        isa,
+                        xi,
+                        xj,
+                        &w[base..base + k],
+                        &w[base + k..base + 2 * k],
+                        &w[base + 2 * k..base + 3 * k],
+                        &w[base + 3 * k..base + 4 * k],
+                    );
+                    orow0[j..j + 4].copy_from_slice(&r[0]);
+                    orow1[j..j + 4].copy_from_slice(&r[1]);
+                    j += 4;
+                }
+                while j < jn {
+                    let base = (jc + j) * k;
+                    orow0[j] = dot_i8_isa(isa, xi, &w[base..base + k]);
+                    orow1[j] = dot_i8_isa(isa, xj, &w[base..base + k]);
+                    j += 1;
+                }
+                i += 2;
+                continue;
+            }
+            let orow = &mut out[i * n + jc..i * n + jc + jn];
             let xi = &x[i * k..(i + 1) * k];
             let mut j = 0usize;
             while j + 4 <= jn {

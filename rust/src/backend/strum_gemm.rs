@@ -31,31 +31,22 @@
 use super::gemm::dot_i8;
 use super::kernels;
 use crate::encode::format::{decode_layer, EncodedLayer};
+use crate::encode::packed::PackedBanks;
 use crate::quant::{Method, StrumLayer};
+use crate::util::mmap::BankI8;
 use crate::Result;
-use anyhow::{anyhow, ensure};
+use anyhow::ensure;
 
-/// Low-precision bank in execution form.
-#[derive(Debug, Clone)]
-pub enum LowBank {
-    /// No low-bank work: structured sparsity, DLIQ q≤1, or baseline.
-    Empty,
-    /// DLIQ: dense `q`-bit codes per channel (zeros on high slots) plus
-    /// the bank-level realign shift `8-q`.
-    Dliq { shift: u32, codes: Vec<i8> },
-    /// MIP2Q: per-channel CSR of (column, shift, negate) shift-add taps,
-    /// sorted by `(shift, negate)` within each channel so the kernel can
-    /// batch the adds of a group under a single barrel shift.
-    Pow2 {
-        row_ptr: Vec<u32>,
-        col: Vec<u32>,
-        shift: Vec<u8>,
-        neg: Vec<bool>,
-    },
-}
+pub use crate::encode::packed::LowBank;
 
 /// A StruM-encoded weight matrix ready for native execution:
 /// `oc` output channels × `k = rows·cols` reduction lanes.
+///
+/// The bank layout itself lives in [`PackedBanks`] (`encode::packed`) so
+/// `strum compile` can build it once offline; this type adds the
+/// identity/scale metadata and the dual-bank matmul entry points. Banks
+/// are [`BankI8`], so they may borrow straight from an mmap-ed `.strumc`
+/// artifact (zero-copy bind) or own their bytes (compile / copy-bind).
 #[derive(Debug, Clone)]
 pub struct StrumGemm {
     pub name: String,
@@ -63,7 +54,7 @@ pub struct StrumGemm {
     pub oc: usize,
     pub k: usize,
     /// Dense high bank `[oc][k]`: mask-selected INT8 values, 0 elsewhere.
-    pub hi: Vec<i8>,
+    pub hi: BankI8,
     pub low: LowBank,
     /// Per-output-channel dequantization scales.
     pub scales: Vec<f32>,
@@ -73,97 +64,53 @@ impl StrumGemm {
     /// Builds the execution form from a decoded layer (codes + mask, the
     /// §IV-D payload semantics — not the precomputed `values`).
     pub fn from_layer(layer: &StrumLayer) -> Result<StrumGemm> {
-        let oc = layer.oc;
-        let k = layer.rows * layer.cols;
-        ensure!(layer.codes.len() == oc * k, "layer {}: bad code count", layer.name);
-        ensure!(layer.scales.len() == oc, "layer {}: bad scale count", layer.name);
-        let mut hi = vec![0i8; oc * k];
-        let low = match layer.params.method {
-            Method::Baseline => {
-                // Baseline keeps every element in the INT8 bank.
-                hi.copy_from_slice(&layer.codes);
-                LowBank::Empty
-            }
-            Method::StructuredSparsity => {
-                fill_hi(&mut hi, layer);
-                LowBank::Empty
-            }
-            Method::Dliq { q } => {
-                fill_hi(&mut hi, layer);
-                if q <= 1 {
-                    LowBank::Empty
-                } else {
-                    let mut codes = vec![0i8; oc * k];
-                    for i in 0..oc * k {
-                        if !layer.mask[i] {
-                            codes[i] = layer.codes[i];
-                        }
-                    }
-                    LowBank::Dliq {
-                        shift: (8 - q) as u32,
-                        codes,
-                    }
-                }
-            }
-            Method::Mip2q { .. } => {
-                fill_hi(&mut hi, layer);
-                let mut row_ptr = Vec::with_capacity(oc + 1);
-                let mut col = Vec::new();
-                let mut shift = Vec::new();
-                let mut neg = Vec::new();
-                row_ptr.push(0u32);
-                let mut taps: Vec<(u8, bool, u32)> = Vec::with_capacity(k);
-                for c in 0..oc {
-                    taps.clear();
-                    for j in 0..k {
-                        let i = c * k + j;
-                        if layer.mask[i] {
-                            continue;
-                        }
-                        let code = layer.codes[i];
-                        if code == 0 {
-                            return Err(anyhow!(
-                                "layer {}: zero MIP2Q code at ({}, {})",
-                                layer.name,
-                                c,
-                                j
-                            ));
-                        }
-                        taps.push((code.unsigned_abs() - 1, code < 0, j as u32));
-                    }
-                    // Group by (shift, sign): one barrel shift per group
-                    // at execution time instead of one per tap.
-                    taps.sort_unstable();
-                    for &(s, n, j) in &taps {
-                        col.push(j);
-                        shift.push(s);
-                        neg.push(n);
-                    }
-                    row_ptr.push(col.len() as u32);
-                }
-                LowBank::Pow2 {
-                    row_ptr,
-                    col,
-                    shift,
-                    neg,
-                }
-            }
-        };
+        let pack = PackedBanks::from_layer(layer)?;
         Ok(StrumGemm {
             name: layer.name.clone(),
             method: layer.params.method,
-            oc,
-            k,
-            hi,
-            low,
+            oc: pack.oc,
+            k: pack.k,
+            hi: pack.hi,
+            low: pack.low,
             scales: layer.scales.clone(),
         })
     }
 
     /// Decodes a compressed layer and builds the execution form — the
-    /// "serve straight from the bitstream" load path.
+    /// "serve straight from the bitstream" load path (copy-bind).
     pub fn from_encoded(enc: &EncodedLayer) -> Result<StrumGemm> {
         Self::from_layer(&decode_layer(enc)?)
+    }
+
+    /// Wraps already-built banks (the prepacked artifact bind path): no
+    /// decode, no repack — metadata comes from the encoded-layer header,
+    /// banks are used as-is after structural validation. Cheap for
+    /// mmap-backed banks (Arc clone, no byte copy).
+    pub fn from_packed(enc: &EncodedLayer, pack: PackedBanks) -> Result<StrumGemm> {
+        pack.validate()?;
+        ensure!(
+            pack.oc == enc.oc && pack.k == enc.rows * enc.cols,
+            "layer {}: prepacked bank shape {}x{} does not match header {}x{}",
+            enc.name,
+            pack.oc,
+            pack.k,
+            enc.oc,
+            enc.rows * enc.cols
+        );
+        ensure!(
+            enc.scales.len() == pack.oc,
+            "layer {}: bad scale count",
+            enc.name
+        );
+        Ok(StrumGemm {
+            name: enc.name.clone(),
+            method: enc.params.method,
+            oc: pack.oc,
+            k: pack.k,
+            hi: pack.hi,
+            low: pack.low,
+            scales: enc.scales.clone(),
+        })
     }
 
     /// Dual-bank dot product of activation row `x` (`k` lanes) with output
@@ -282,14 +229,6 @@ impl StrumGemm {
             LowBank::Empty => 0,
             LowBank::Dliq { codes, .. } => codes.iter().filter(|&&c| c != 0).count(),
             LowBank::Pow2 { col, .. } => col.len(),
-        }
-    }
-}
-
-fn fill_hi(hi: &mut [i8], layer: &StrumLayer) {
-    for i in 0..hi.len() {
-        if layer.mask[i] {
-            hi[i] = layer.codes[i];
         }
     }
 }

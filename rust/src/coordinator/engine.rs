@@ -247,6 +247,10 @@ pub struct EngineOptions {
     /// Period of the `engine_gauges` ticker; `None` disables it even
     /// when the sink is live.
     pub telemetry_interval: Option<Duration>,
+    /// Pin worker `i` to core `i % cores`
+    /// ([`crate::util::affinity::pin_current_thread`]). Best-effort:
+    /// platforms without `sched_setaffinity` run unpinned, identically.
+    pub pin_workers: bool,
 }
 
 impl Default for EngineOptions {
@@ -259,6 +263,7 @@ impl Default for EngineOptions {
             quantum: 0,
             telemetry: TelemetrySink::disabled(),
             telemetry_interval: None,
+            pin_workers: false,
         }
     }
 }
@@ -375,9 +380,15 @@ impl Engine {
         });
         let defaults = EngineOptions { workers, ..opts };
         let mut threads = Vec::with_capacity(workers);
-        for _ in 0..workers {
+        for i in 0..workers {
             let sh = shared.clone();
-            threads.push(std::thread::spawn(move || worker_loop(&sh)));
+            let pin = defaults.pin_workers;
+            threads.push(std::thread::spawn(move || {
+                if pin {
+                    crate::util::affinity::pin_current_thread(i);
+                }
+                worker_loop(&sh)
+            }));
         }
         // Gauge ticker: periodic engine_gauges snapshots through the
         // same sink. Terminates with the pool via `stopping` + condvar.
@@ -680,6 +691,7 @@ fn snapshot_of(shared: &EngineShared) -> MetricsSnapshot {
         uptime_s,
         workers: shared.workers,
         telemetry_dropped: shared.telemetry.dropped(),
+        kernel_isa: crate::backend::kernels::active_isa().name().to_string(),
         variants,
         fleet,
     }

@@ -19,9 +19,10 @@ use std::time::Duration;
 pub const RESERVOIR_CAP: usize = 4096;
 
 /// Version of the metrics-snapshot JSON layout. v2 added top-level
-/// `schema_version`, `uptime_s`, and `telemetry_dropped`; consumers
-/// must treat a missing field as v1 (additive change, parse tolerantly).
-pub const METRICS_SCHEMA_VERSION: u32 = 2;
+/// `schema_version`, `uptime_s`, and `telemetry_dropped`; v3 added
+/// `kernel_isa`; consumers must treat a missing field as an older
+/// version (additive changes, parse tolerantly).
+pub const METRICS_SCHEMA_VERSION: u32 = 3;
 
 /// Fixed-capacity uniform sample of an unbounded stream (Algorithm R).
 /// After `seen` pushes, each of them is retained with probability
@@ -380,6 +381,10 @@ pub struct MetricsSnapshot {
     /// Telemetry events dropped because the sink's channel was full
     /// (0 when telemetry is disabled).
     pub telemetry_dropped: u64,
+    /// Active kernel ISA tier (`scalar`/`sse2`/`avx2`/`avx512`) — the
+    /// runtime-detected (or `STRUM_KERNEL`-forced) dispatch choice, the
+    /// serving-side twin of the run manifest's `kernel_isa` field.
+    pub kernel_isa: String,
     pub variants: Vec<VariantSnapshot>,
     pub fleet: FleetSnapshot,
 }
@@ -392,6 +397,7 @@ impl MetricsSnapshot {
             ("uptime_s", Json::Num(self.uptime_s)),
             ("workers", Json::Num(self.workers as f64)),
             ("telemetry_dropped", Json::Num(self.telemetry_dropped as f64)),
+            ("kernel_isa", Json::Str(self.kernel_isa.clone())),
             (
                 "variants",
                 Json::Arr(self.variants.iter().map(|v| v.to_json()).collect()),
@@ -587,11 +593,13 @@ mod tests {
             uptime_s: 2.0,
             workers: 4,
             telemetry_dropped: 0,
+            kernel_isa: "scalar".to_string(),
             variants: vec![v],
             fleet,
         };
         let j = snap.to_json();
         assert_eq!(j.get("workers").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("kernel_isa").unwrap().as_str(), Some("scalar"));
         assert_eq!(
             j.get("schema_version").unwrap().as_usize().unwrap(),
             METRICS_SCHEMA_VERSION as usize
@@ -747,6 +755,7 @@ mod tests {
             uptime_s: 2.0,
             workers: 4,
             telemetry_dropped: 0,
+            kernel_isa: "scalar".to_string(),
             fleet: FleetSnapshot::rollup(std::slice::from_ref(&v), Duration::from_secs(2), &[]),
             variants: vec![v],
         };

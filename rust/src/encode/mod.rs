@@ -7,17 +7,23 @@
 //!   block order.
 //! * [`compression`] — the paper's analytic compression ratios (Eq. 1 and
 //!   Eq. 2) plus measured-size accounting to validate them.
+//! * [`packed`] — kernel-layout execution banks ([`packed::PackedBanks`]):
+//!   the dense int8 high bank + DLIQ/MIP2Q low bank the native GEMM
+//!   consumes, built once at compile time and serialized into `.strumc`
+//!   so serve-time bind never repacks.
 //!
 //! Encoded layers are also the payload of compiled `.strumc` artifacts
 //! (`crate::artifact`): `strum compile` serializes them to disk once and
-//! the serve path decodes straight from the cached bank bytes —
+//! the serve path binds straight from the prepacked bank bytes —
 //! [`format::encode_layer_calls`] counts invocations so tests can assert
 //! the cached path never re-encodes.
 
 pub mod bitstream;
 pub mod compression;
 pub mod format;
+pub mod packed;
 
 pub use bitstream::{BitReader, BitWriter};
 pub use compression::{ratio_payload, ratio_sparsity};
 pub use format::{decode_layer, encode_layer, encode_layer_calls, EncodedLayer};
+pub use packed::{LowBank, PackedBanks};

@@ -1,0 +1,235 @@
+//! Kernel-layout prepacked weight banks.
+//!
+//! [`PackedBanks`] is the execution layout the native GEMM consumes: the
+//! dense int8 high bank `[oc][k]`, plus the method-dependent low bank
+//! (dense DLIQ codes, MIP2Q shift-add CSR, or empty). It used to be built
+//! inside `backend::StrumGemm::from_layer` on every registration; hoisting
+//! it here lets `artifact::compile_net` run the packing ONCE offline and
+//! serialize the result into the `.strumc` container, so serve-time bind
+//! is a borrow (mmap) or memcpy (owned) instead of a decode + repack.
+//!
+//! The layout is deliberately byte-stable: `from_layer` is deterministic
+//! (MIP2Q taps sorted by `(shift, sign, col)`), so recompiling the same
+//! net always reproduces identical banks — the artifact byte-stability
+//! tests depend on that.
+
+use crate::quant::{Method, StrumLayer};
+use crate::util::mmap::BankI8;
+use crate::Result;
+use anyhow::{anyhow, ensure};
+
+/// Low-precision bank in execution form.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LowBank {
+    /// No low-bank work: structured sparsity, DLIQ q≤1, or baseline.
+    Empty,
+    /// DLIQ: dense `q`-bit codes per channel (zeros on high slots) plus
+    /// the bank-level realign shift `8-q`.
+    Dliq { shift: u32, codes: BankI8 },
+    /// MIP2Q: per-channel CSR of (column, shift, negate) shift-add taps,
+    /// sorted by `(shift, negate)` within each channel so the kernel can
+    /// batch the adds of a group under a single barrel shift.
+    Pow2 {
+        row_ptr: Vec<u32>,
+        col: Vec<u32>,
+        shift: Vec<u8>,
+        neg: Vec<bool>,
+    },
+}
+
+/// Kernel-layout banks for one layer: `oc` output channels × `k` lanes.
+/// Equality compares bank *contents*, not storage mode (owned vs mapped).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedBanks {
+    pub oc: usize,
+    pub k: usize,
+    /// Dense high bank `[oc][k]`: mask-selected INT8 values, 0 elsewhere.
+    pub hi: BankI8,
+    pub low: LowBank,
+}
+
+impl PackedBanks {
+    /// Builds the execution banks from a StruM-transformed layer (codes +
+    /// mask, the §IV-D payload semantics — not the precomputed `values`).
+    /// Deterministic: identical layers always yield identical banks.
+    pub fn from_layer(layer: &StrumLayer) -> Result<PackedBanks> {
+        let oc = layer.oc;
+        let k = layer.rows * layer.cols;
+        ensure!(layer.codes.len() == oc * k, "layer {}: bad code count", layer.name);
+        ensure!(layer.scales.len() == oc, "layer {}: bad scale count", layer.name);
+        let mut hi = vec![0i8; oc * k];
+        let low = match layer.params.method {
+            Method::Baseline => {
+                // Baseline keeps every element in the INT8 bank.
+                hi.copy_from_slice(&layer.codes);
+                LowBank::Empty
+            }
+            Method::StructuredSparsity => {
+                fill_hi(&mut hi, layer);
+                LowBank::Empty
+            }
+            Method::Dliq { q } => {
+                fill_hi(&mut hi, layer);
+                if q <= 1 {
+                    LowBank::Empty
+                } else {
+                    let mut codes = vec![0i8; oc * k];
+                    for i in 0..oc * k {
+                        if !layer.mask[i] {
+                            codes[i] = layer.codes[i];
+                        }
+                    }
+                    LowBank::Dliq {
+                        shift: (8 - q) as u32,
+                        codes: codes.into(),
+                    }
+                }
+            }
+            Method::Mip2q { .. } => {
+                fill_hi(&mut hi, layer);
+                let mut row_ptr = Vec::with_capacity(oc + 1);
+                let mut col = Vec::new();
+                let mut shift = Vec::new();
+                let mut neg = Vec::new();
+                row_ptr.push(0u32);
+                let mut taps: Vec<(u8, bool, u32)> = Vec::with_capacity(k);
+                for c in 0..oc {
+                    taps.clear();
+                    for j in 0..k {
+                        let i = c * k + j;
+                        if layer.mask[i] {
+                            continue;
+                        }
+                        let code = layer.codes[i];
+                        if code == 0 {
+                            return Err(anyhow!(
+                                "layer {}: zero MIP2Q code at ({}, {})",
+                                layer.name,
+                                c,
+                                j
+                            ));
+                        }
+                        taps.push((code.unsigned_abs() - 1, code < 0, j as u32));
+                    }
+                    // Group by (shift, sign): one barrel shift per group
+                    // at execution time instead of one per tap.
+                    taps.sort_unstable();
+                    for &(s, n, j) in &taps {
+                        col.push(j);
+                        shift.push(s);
+                        neg.push(n);
+                    }
+                    row_ptr.push(col.len() as u32);
+                }
+                LowBank::Pow2 {
+                    row_ptr,
+                    col,
+                    shift,
+                    neg,
+                }
+            }
+        };
+        Ok(PackedBanks {
+            oc,
+            k,
+            hi: hi.into(),
+            low,
+        })
+    }
+
+    /// Structural sanity checks, used after deserializing untrusted bank
+    /// bytes (bounds the kernel indexes rather than trusting the file).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.hi.len() == self.oc * self.k, "hi bank length");
+        match &self.low {
+            LowBank::Empty => {}
+            LowBank::Dliq { shift, codes } => {
+                ensure!(*shift < 8, "dliq realign shift out of range");
+                ensure!(codes.len() == self.oc * self.k, "dliq bank length");
+            }
+            LowBank::Pow2 { row_ptr, col, shift, neg } => {
+                ensure!(row_ptr.len() == self.oc + 1, "pow2 row_ptr length");
+                ensure!(row_ptr.first() == Some(&0), "pow2 row_ptr start");
+                ensure!(
+                    row_ptr.windows(2).all(|w| w[0] <= w[1]),
+                    "pow2 row_ptr not monotonic"
+                );
+                let taps = *row_ptr.last().unwrap() as usize;
+                ensure!(col.len() == taps, "pow2 col length");
+                ensure!(shift.len() == taps, "pow2 shift length");
+                ensure!(neg.len() == taps, "pow2 neg length");
+                ensure!(col.iter().all(|&c| (c as usize) < self.k), "pow2 col bound");
+                ensure!(shift.iter().all(|&s| s < 8), "pow2 shift bound");
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of low-bank taps (diagnostic / bench reporting).
+    pub fn low_taps(&self) -> usize {
+        match &self.low {
+            LowBank::Empty => 0,
+            LowBank::Dliq { codes, .. } => codes.iter().filter(|&&c| c != 0).count(),
+            LowBank::Pow2 { col, .. } => col.len(),
+        }
+    }
+
+    /// True when any bank borrows from a file mapping (zero-copy bind).
+    pub fn is_mapped(&self) -> bool {
+        self.hi.is_mapped()
+            || matches!(&self.low, LowBank::Dliq { codes, .. } if codes.is_mapped())
+    }
+}
+
+fn fill_hi(hi: &mut [i8], layer: &StrumLayer) {
+    for i in 0..hi.len() {
+        if layer.mask[i] {
+            hi[i] = layer.codes[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::tensor::qlayer;
+    use crate::quant::{apply_strum, StrumParams};
+    use crate::util::prng::Rng;
+
+    fn transformed(method: Method, seed: u64) -> StrumLayer {
+        let mut rng = Rng::new(seed);
+        let data: Vec<i8> = (0..4 * 3 * 16)
+            .map(|_| (rng.gaussian() * 40.0).clamp(-127.0, 127.0) as i8)
+            .collect();
+        let layer = qlayer("p", 4, 3, 16, data, vec![0.02; 4]);
+        apply_strum(&layer, &StrumParams::new(method, 1, 8, 0.5))
+    }
+
+    #[test]
+    fn packing_is_deterministic_and_valid() {
+        for method in [
+            Method::Baseline,
+            Method::StructuredSparsity,
+            Method::Dliq { q: 4 },
+            Method::Mip2q { l_max: 7 },
+        ] {
+            let s = transformed(method, 77);
+            let a = PackedBanks::from_layer(&s).unwrap();
+            let b = PackedBanks::from_layer(&s).unwrap();
+            a.validate().unwrap();
+            assert_eq!(&a.hi[..], &b.hi[..], "{:?}", method);
+            assert_eq!(a.low_taps(), b.low_taps(), "{:?}", method);
+            assert!(!a.is_mapped());
+        }
+    }
+
+    #[test]
+    fn validate_rejects_broken_csr() {
+        let s = transformed(Method::Mip2q { l_max: 7 }, 5);
+        let mut p = PackedBanks::from_layer(&s).unwrap();
+        if let LowBank::Pow2 { col, .. } = &mut p.low {
+            col[0] = u32::MAX; // out-of-bounds column
+        }
+        assert!(p.validate().is_err());
+    }
+}

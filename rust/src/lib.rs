@@ -23,19 +23,19 @@
 //! |---|---|---|
 //! | [`quant`] | §IV-A..C | block division, DLIQ, MIP2Q, structured sparsity, INT8 calibration |
 //! | [`encode`] | §IV-D.1 | mask-header + payload weight codec, Eq. 1/2 compression ratios |
-//! | [`artifact`] | §IV-D | compiled `.strumc` model artifacts: `compile_net` (quantize+encode once, offline) + versioned serialization + content-addressed cache; serve-time loads are read+decode+bind with zero quantizer work |
+//! | [`artifact`] | §IV-D | compiled `.strumc` model artifacts: `compile_net` (quantize+encode+prepack once, offline) + versioned serialization with kernel-layout bank sections + content-addressed cache; serve-time loads mmap the file and bind banks zero-copy, with no quantizer, decode, or repack work |
 //! | [`hw`] | §V, §VII-B | gate-level area/power cost model (multipliers, barrel shifters, PEs, DPU) |
 //! | [`sim`] | §V | cycle-level FlexNN DPU simulator with StruM routing + sparsity find-first |
 //! | [`model`] | §VI | network graph, mini zoo metadata, artifact import, top-1 evaluation |
 //! | [`backend`] | §IV-D.2, §V-B | native execution engine: int8 + dual-bank StruM GEMM, im2col conv, graph walk, batch parallelism; `Backend` trait + PJRT adapter |
-//! | [`backend::kernels`] | §IV-C.1, §V-B | SIMD kernel layer: AVX2/SSE2 int8 micro-kernels with bit-exact scalar fallback (`STRUM_KERNEL` pins a path), cache-blocked GEMM driver, activation-sparsity row skip, scratch arenas, fused requantize/ReLU/pool/quantize epilogues |
+//! | [`backend::kernels`] | §IV-C.1, §V-B | SIMD kernel layer: AVX-512 (VNNI `vpdpbusd` when the CPU has it, else BW `vpmaddubsw`) / AVX2 / SSE2 int8 micro-kernels with bit-exact scalar fallback (`STRUM_KERNEL` pins a tier), 2×4 register-blocked cache-blocked GEMM driver, activation-sparsity row skip, scratch arenas, fused requantize/ReLU/pool/quantize epilogues |
 //! | [`runtime`] | — | PJRT CPU client wrapper (feature `pjrt`): load HLO text, compile, execute |
 //! | [`coordinator`] | — | multi-variant serving engine: one shared worker pool, per-variant bounded queues + deficit-round-robin batch scheduling (per-variant priority weights), handle-based submit (`Ticket`/`SubmitError`), per-request deadlines with typed sheds (`ReplyError`), typed `MetricsSnapshot` |
 //! | [`server`] | — | wire serving front-end: versioned length-prefixed TCP protocol with v2 correlation-id pipelining + streaming batches (`server::proto`), async poll(2)-based tier (`server::aio`, one poller + conn-worker pool, completion callbacks into the engine) with an HTTP/1.1 + Prometheus gateway (`server::http`), deprecated blocking tier behind `--legacy-threads`, `WireClient`/`PipelinedClient`/`HttpClient` + `strum loadgen` open-loop load generator, fault-injection hooks (`server::fault`) for chaos tests |
 //! | [`gateway`] | — | replica-fleet tier: supervisor (spawn/scrape/restart with capped jittered backoff), wire-metrics health prober, shed-aware router (least-outstanding, one bounded retry, tail hedging), rolling deploys with probation + auto-rollback |
 //! | [`report`] | §VII | regenerators for Table I and Figs. 10–13 + ablations |
 //! | [`telemetry`] | — | observability: schema-versioned JSONL event sink (non-blocking, rotating), versioned bench run-manifests with FNV-1a checksums, `strum bench-diff` regression gate |
-//! | [`util`] | — | in-tree substrates: JSON, PRNG, stats, CLI, threadpool, bench harness |
+//! | [`util`] | — | in-tree substrates: JSON, PRNG, stats, CLI, threadpool, bench harness, mmap zero-copy banks, worker→core affinity |
 //!
 //! ## The `Backend` contract
 //!
@@ -55,14 +55,17 @@
 //!
 //! The model lifecycle has two phases. **Compile time** (`strum
 //! compile`, [`artifact::compile_net`]) runs float-load →
-//! `transform_network` → `encode_layer` → calibration once and writes a
-//! versioned `.strumc` artifact: identity header, per-layer §IV-D banks,
-//! activation scales, checksum. **Serve time** binds plans from those
-//! bytes ([`backend::NetworkPlan::from_artifact`], bit-identical to the
-//! compile-at-registration [`backend::NetworkPlan::build`]) through a
-//! content-addressed cache ([`artifact::ArtifactCache`]) that rebuilds
-//! transparently on version or weight mismatch — cold-starting a variant
-//! is a read + decode, not a re-quantization.
+//! `transform_network` → `encode_layer` → calibration once, prepacks the
+//! kernel-layout execution banks, and writes a versioned `.strumc`
+//! artifact: identity header, per-layer §IV-D banks + prepacked bank
+//! sections, activation scales, checksum. **Serve time** mmaps the file
+//! ([`artifact::CompiledNet::load_mapped`]) and binds plans straight
+//! from the mapping ([`backend::NetworkPlan::from_artifact`],
+//! bit-identical to the compile-at-registration
+//! [`backend::NetworkPlan::build`]) through a content-addressed cache
+//! ([`artifact::ArtifactCache`]) that rebuilds transparently on format,
+//! encoder, or weight mismatch — cold-starting a variant is a zero-copy
+//! bank bind, not a re-quantization or even a decode.
 
 pub mod artifact;
 pub mod backend;

@@ -146,7 +146,7 @@ fn print_help() {
          report: strum report <table1|fig10|fig11|fig12|fig13|ablation|all> [--limit N] [--out FILE]\n\
          serve:  strum serve --net N --variants base,dliq,mip2q --requests 2000 --rate 500\n\
                  [--backend {{pjrt|native}}] [--workers N] [--queue-depth N] [--max-wait-ms 4]\n\
-                 [--max-batch N] [--metrics-out FILE]\n\
+                 [--max-batch N] [--pin-workers] [--metrics-out FILE]\n\
                  [--telemetry-out DIR [--telemetry-interval-s N]]\n\
                  [--listen ADDR [--http-listen ADDR] [--legacy-threads]\n\
                   [--duration-s N] [--conn-workers N]]\n\
@@ -755,6 +755,7 @@ fn build_fleet(args: &Args) -> Result<Fleet> {
         telemetry: telemetry.clone(),
         telemetry_interval: (gauge_every > 0.0)
             .then(|| Duration::from_secs_f64(gauge_every)),
+        pin_workers: args.flag("pin-workers"),
     }));
     let cache = ArtifactCache::under(&dir);
     let mut handles = Vec::new();

@@ -116,8 +116,10 @@ extern "C" {
     fn poll(fds: *mut PollFd, nfds: Nfds, timeout: i32) -> i32;
 }
 
-/// `poll(2)` with EINTR retry. The only FFI in the crate: three i32/i16
-/// fields and an errno check, small enough to audit at a glance.
+/// `poll(2)` with EINTR retry. The oldest of the crate's three FFI shims
+/// (with `util::mmap` and `util::affinity`, all in the same style):
+/// three i32/i16 fields and an errno check, small enough to audit at a
+/// glance.
 fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
     loop {
         let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as Nfds, timeout_ms) };

@@ -46,7 +46,8 @@ pub struct RunManifest {
     pub hostname: String,
     pub cpu: String,
     pub cores: usize,
-    /// Kernel-dispatch tier resolved by this process (scalar/sse2/avx2).
+    /// Kernel-dispatch tier resolved by this process
+    /// (scalar/sse2/avx2/avx512).
     pub kernel_isa: String,
     pub bench_quick: bool,
     /// Bench name → wrapped artifact, sorted for canonical output.
@@ -369,7 +370,7 @@ mod tests {
         assert_eq!(m.format_version, MANIFEST_FORMAT_VERSION);
         assert_eq!(m.run_id, "r1");
         assert!(m.cores >= 1);
-        assert!(["scalar", "sse2", "avx2"].contains(&m.kernel_isa.as_str()));
+        assert!(["scalar", "sse2", "avx2", "avx512"].contains(&m.kernel_isa.as_str()));
         assert!(m.timestamp_utc.ends_with('Z'));
     }
 

@@ -1,0 +1,248 @@
+//! Read-only memory mapping + borrowed-or-owned byte banks.
+//!
+//! The zero-copy artifact bind path ([`crate::artifact::CompiledNet::load`])
+//! maps a `.strumc` file once and hands out `BankI8` handles that borrow
+//! weight-bank bytes straight from the mapping — no `Vec` copy per layer,
+//! no repack per registration. On platforms without `mmap` (or when the
+//! mapping fails) everything degrades to owned `Vec<i8>` banks, which is
+//! also the copy-bind baseline the bit-identity tests compare against.
+//!
+//! `MappedFile` is a minimal `mmap(2)`/`munmap(2)` shim in the same
+//! audit-at-a-glance style as the `poll(2)` shim in `server::aio`: a
+//! read-only `MAP_PRIVATE` mapping, length + pointer, unmapped on drop.
+//! i8 banks are alignment-1, so borrowing at any byte offset is safe; any
+//! structure needing wider alignment (u32 CSR arrays, f32 scales) stays
+//! owned and copied at parse time.
+
+use std::fmt;
+use std::fs::File;
+use std::path::Path;
+use std::sync::Arc;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// A whole file mapped read-only. Unmapped on drop.
+pub struct MappedFile {
+    ptr: *const u8,
+    len: usize,
+}
+
+// Safety: the mapping is read-only for its entire lifetime and the pointer
+// is never handed out mutably, so shared access across threads is sound.
+unsafe impl Send for MappedFile {}
+unsafe impl Sync for MappedFile {}
+
+impl MappedFile {
+    /// Maps `path` read-only. Returns `None` when the platform has no
+    /// mmap, the file is empty (zero-length mappings are invalid), or the
+    /// mapping call fails — callers fall back to `fs::read`.
+    pub fn open(path: &Path) -> Option<Arc<MappedFile>> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = File::open(path).ok()?;
+            let len = file.metadata().ok()?.len();
+            if len == 0 || len > usize::MAX as u64 {
+                return None;
+            }
+            let len = len as usize;
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            // MAP_FAILED is (void*)-1.
+            if ptr as isize == -1 {
+                return None;
+            }
+            Some(Arc::new(MappedFile { ptr: ptr as *const u8, len }))
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = path;
+            let _ = File::open; // keep the import live on non-unix
+            None
+        }
+    }
+
+    /// The mapped bytes.
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        // Safety: ptr/len came from a successful mmap of exactly `len`
+        // bytes and stay valid until drop.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for MappedFile {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        unsafe {
+            sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+        }
+    }
+}
+
+impl fmt::Debug for MappedFile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("MappedFile").field("len", &self.len).finish()
+    }
+}
+
+/// An int8 weight bank: either owned bytes (copy-bind, compile output)
+/// or a window borrowed from a live mapping (zero-copy bind).
+///
+/// `Deref<Target = [i8]>` keeps every call site (`&bank[a..b]`) agnostic
+/// to the storage; clones of a `Mapped` bank are Arc-cheap.
+#[derive(Clone)]
+pub enum BankI8 {
+    Owned(Vec<i8>),
+    Mapped {
+        map: Arc<MappedFile>,
+        off: usize,
+        len: usize,
+    },
+}
+
+impl BankI8 {
+    /// Borrows `len` bytes at `off` from `map` as an i8 bank. Returns
+    /// `None` when the window falls outside the mapping.
+    pub fn borrowed(map: &Arc<MappedFile>, off: usize, len: usize) -> Option<BankI8> {
+        if off.checked_add(len)? > map.len() {
+            return None;
+        }
+        Some(BankI8::Mapped { map: Arc::clone(map), off, len })
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[i8] {
+        match self {
+            BankI8::Owned(v) => v,
+            BankI8::Mapped { map, off, len } => {
+                let bytes = &map.as_slice()[*off..*off + *len];
+                // Safety: i8 and u8 have identical size/alignment; the
+                // reinterpretation of read-only bytes is value-preserving
+                // two's-complement.
+                unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len()) }
+            }
+        }
+    }
+
+    /// True when the bytes live in a mapping rather than the heap.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, BankI8::Mapped { .. })
+    }
+
+    /// Forces an owned copy (used by tests to compare storage modes).
+    pub fn to_owned_bank(&self) -> BankI8 {
+        BankI8::Owned(self.as_slice().to_vec())
+    }
+}
+
+impl std::ops::Deref for BankI8 {
+    type Target = [i8];
+    #[inline]
+    fn deref(&self) -> &[i8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<i8>> for BankI8 {
+    fn from(v: Vec<i8>) -> BankI8 {
+        BankI8::Owned(v)
+    }
+}
+
+impl fmt::Debug for BankI8 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BankI8::Owned(v) => write!(f, "BankI8::Owned({} bytes)", v.len()),
+            BankI8::Mapped { off, len, .. } => {
+                write!(f, "BankI8::Mapped({} bytes @ {})", len, off)
+            }
+        }
+    }
+}
+
+impl PartialEq for BankI8 {
+    fn eq(&self, other: &BankI8) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    #[test]
+    fn mapped_file_round_trips_bytes() {
+        let dir = std::env::temp_dir().join(format!("strum-mmap-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        let data: Vec<u8> = (0..=255u8).cycle().take(5000).collect();
+        std::fs::File::create(&path).unwrap().write_all(&data).unwrap();
+        if let Some(map) = MappedFile::open(&path) {
+            assert_eq!(map.as_slice(), &data[..]);
+            let bank = BankI8::borrowed(&map, 100, 256).unwrap();
+            assert!(bank.is_mapped());
+            let want: Vec<i8> = data[100..356].iter().map(|&b| b as i8).collect();
+            assert_eq!(&bank[..], &want[..]);
+            assert_eq!(bank.to_owned_bank(), bank);
+            // Out-of-range windows are refused, not UB.
+            assert!(BankI8::borrowed(&map, 4999, 2).is_none());
+            assert!(BankI8::borrowed(&map, usize::MAX, 2).is_none());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_file_yields_no_mapping() {
+        let dir = std::env::temp_dir().join(format!("strum-mmap-empty-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.bin");
+        std::fs::File::create(&path).unwrap();
+        assert!(MappedFile::open(&path).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn owned_bank_derefs() {
+        let bank = BankI8::from(vec![1i8, -2, 3]);
+        assert!(!bank.is_mapped());
+        assert_eq!(&bank[1..], &[-2, 3]);
+    }
+}

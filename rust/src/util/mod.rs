@@ -12,11 +12,16 @@
 //! * [`pool`] — scoped data-parallel map over std threads
 //! * [`bench`] — a criterion-style micro-benchmark harness
 //! * [`proptest`] — a miniature property-testing driver with shrinking
+//! * [`mmap`] — read-only file mapping + borrowed-or-owned i8 banks
+//!   (the zero-copy `.strumc` bind substrate)
+//! * [`affinity`] — best-effort worker→core pinning (`sched_setaffinity`)
 
+pub mod affinity;
 pub mod bench;
 pub mod cli;
 pub mod hash;
 pub mod json;
+pub mod mmap;
 pub mod pool;
 pub mod prng;
 pub mod proptest;

@@ -10,6 +10,7 @@
 use std::path::PathBuf;
 use strum_dpu::artifact::{
     compile_net, reseal, ArtifactCache, ArtifactError, CacheOutcome, CompiledNet, MissReason,
+    FORMAT_VERSION,
 };
 use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
 use strum_dpu::backend::NetworkPlan;
@@ -235,5 +236,93 @@ fn cached_registration_does_no_quantize_or_encode_work() {
     // Counting the comparison plan's own build keeps the accounting
     // honest: the build path DOES transform+encode.
     assert!(transform_network_calls() > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Zero-copy contract: an mmap-bound plan ([`CompiledNet::load_mapped`])
+/// serves logits bit-identical to the copy-bound (`from_bytes`) plan on
+/// every zoo net for both paper methods — and on unix its dense i8
+/// banks really do borrow from the mapping instead of the heap.
+#[test]
+fn mmap_bind_bit_identical_to_copy_bind_on_all_zoo_nets() {
+    let dir = temp_dir("mmap-bind");
+    std::fs::create_dir_all(&dir).unwrap();
+    let img = 12usize;
+    let classes = 4usize;
+    let px = img * img * 3;
+    let images = random_images(2, img, 91);
+    for net in zoo::net_names() {
+        let weights = calibrated_weights(net, img, classes, 17);
+        for (method, p) in [(Method::Dliq { q: 4 }, 0.5), (Method::Mip2q { l_max: 7 }, 0.5)] {
+            let cfg = EvalConfig::paper(method, p);
+            let compiled = compile_net(&weights, &cfg).unwrap();
+            let path = dir.join(format!("{}-{}.strumc", net, method.name()));
+            compiled.save(&path).unwrap();
+            let copied = CompiledNet::from_bytes(&std::fs::read(&path).unwrap()).unwrap();
+            let mapped = CompiledNet::load_mapped(&path).unwrap();
+            #[cfg(unix)]
+            assert!(
+                mapped.layers.iter().all(|l| l.pack.is_mapped()),
+                "{} {:?}: banks did not bind from the mapping",
+                net,
+                method
+            );
+            assert!(copied.layers.iter().all(|l| !l.pack.is_mapped()));
+            let plan_copy = NetworkPlan::from_artifact(&copied).unwrap();
+            let plan_map = NetworkPlan::from_artifact(&mapped).unwrap();
+            for i in 0..2 {
+                let image = &images[i * px..(i + 1) * px];
+                let a = plan_copy.forward_one(image).unwrap();
+                let b = plan_map.forward_one(image).unwrap();
+                let a_bits: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let b_bits: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    a_bits, b_bits,
+                    "{} {:?} image {}: mmap bind diverged from copy bind",
+                    net, method, i
+                );
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Format-bump regression: a pre-bump `.strumc` in the cache (same slot
+/// — versions are not part of the filename) surfaces as a typed format
+/// mismatch, rebuilds in place, and the very next registration is a
+/// pure read with ZERO quantize/encode calls.
+#[test]
+fn format_version_bump_rebuilds_transparently() {
+    let dir = temp_dir("format-bump");
+    let cache = ArtifactCache::with_version(&dir, 1);
+    let weights = calibrated_weights("mini_cnn_s", 8, 4, 53);
+    let cfg = EvalConfig::paper(Method::Dliq { q: 4 }, 0.5);
+    let (c, _) = cache.load_or_compile(&weights, &cfg).unwrap();
+    let slot = cache.path_for(&c.identity);
+    // Masquerade as a pre-bump artifact: older format version, valid
+    // seal, same slot.
+    let mut bytes = std::fs::read(&slot).unwrap();
+    bytes[8..12].copy_from_slice(&(FORMAT_VERSION - 1).to_le_bytes());
+    reseal(&mut bytes);
+    std::fs::write(&slot, &bytes).unwrap();
+    let (_, outcome) = cache.load_or_compile(&weights, &cfg).unwrap();
+    assert!(
+        matches!(
+            outcome,
+            CacheOutcome::Miss(MissReason::Load(ArtifactError::VersionMismatch {
+                kind: "format",
+                ..
+            }))
+        ),
+        "{}",
+        outcome
+    );
+    // The rebuild overwrote the stale file; the next load is quantizer-free.
+    let t0 = transform_network_calls();
+    let e0 = encode_layer_calls();
+    let (_, outcome) = cache.load_or_compile(&weights, &cfg).unwrap();
+    assert!(outcome.is_hit(), "{}", outcome);
+    assert_eq!(transform_network_calls(), t0, "format-bump rebuild left quantize work behind");
+    assert_eq!(encode_layer_calls(), e0, "format-bump rebuild left encode work behind");
     let _ = std::fs::remove_dir_all(&dir);
 }

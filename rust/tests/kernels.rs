@@ -9,7 +9,8 @@
 
 use strum_dpu::backend::graph::{calibrate_act_scales, synth_net_weights};
 use strum_dpu::backend::kernels::{
-    available_isas, dot_i8_isa, dot_i8_x4_isa, gemm_i8_blocked_isa, mark_nonzero_rows, Isa,
+    available_isas, dot_i8_isa, dot_i8_x4_isa, dot_i8_x4_rows2_isa, gemm_i8_blocked_isa,
+    mark_nonzero_rows, Isa,
 };
 use strum_dpu::backend::{parallel, NetworkPlan};
 use strum_dpu::model::eval::{transform_network, EvalConfig};
@@ -109,6 +110,91 @@ fn dot_x4_bit_exact_random() {
             .into_iter()
             .all(|isa| dot_i8_x4_isa(isa, &x, &ws[0], &ws[1], &ws[2], &ws[3]) == want)
     });
+}
+
+/// Scalar oracle for the 2×4 block: eight independent scalar dots.
+fn rows2_oracle(x0: &[i8], x1: &[i8], ws: &[Vec<i8>]) -> [[i32; 4]; 2] {
+    [
+        [
+            dot_i8_isa(Isa::Scalar, x0, &ws[0]),
+            dot_i8_isa(Isa::Scalar, x0, &ws[1]),
+            dot_i8_isa(Isa::Scalar, x0, &ws[2]),
+            dot_i8_isa(Isa::Scalar, x0, &ws[3]),
+        ],
+        [
+            dot_i8_isa(Isa::Scalar, x1, &ws[0]),
+            dot_i8_isa(Isa::Scalar, x1, &ws[1]),
+            dot_i8_isa(Isa::Scalar, x1, &ws[2]),
+            dot_i8_isa(Isa::Scalar, x1, &ws[3]),
+        ],
+    ]
+}
+
+#[test]
+fn dot_x4_rows2_bit_exact_random() {
+    check("dot_i8_x4_rows2 SIMD == scalar singles", 200, |g: &mut Gen| {
+        // Odd lengths on purpose: every fused 2×4 kernel's tail gets hit.
+        let n = g.usize_in(0, 333);
+        let x0: Vec<i8> = (0..n).map(|_| g.i8()).collect();
+        let x1: Vec<i8> = (0..n).map(|_| g.i8()).collect();
+        let ws: Vec<Vec<i8>> = (0..4).map(|_| (0..n).map(|_| g.i8()).collect()).collect();
+        let want = rows2_oracle(&x0, &x1, &ws);
+        available_isas()
+            .into_iter()
+            .all(|isa| dot_i8_x4_rows2_isa(isa, &x0, &x1, &ws[0], &ws[1], &ws[2], &ws[3]) == want)
+    });
+}
+
+#[test]
+fn dot_x4_rows2_bit_exact_unaligned_offsets() {
+    let mut rng = Rng::new(177);
+    let mut buf = || -> Vec<i8> { (0..4103).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect() };
+    let buf_x0 = buf();
+    let buf_x1 = buf();
+    let buf_ws: Vec<Vec<i8>> = (0..4).map(|_| buf()).collect();
+    for off in 0..5usize {
+        for len in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 257, 4000] {
+            let x0 = &buf_x0[off..off + len];
+            let x1 = &buf_x1[1..1 + len];
+            let ws: Vec<Vec<i8>> = buf_ws.iter().map(|b| b[off..off + len].to_vec()).collect();
+            let want = rows2_oracle(x0, x1, &ws);
+            for isa in available_isas() {
+                assert_eq!(
+                    dot_i8_x4_rows2_isa(isa, x0, x1, &ws[0], &ws[1], &ws[2], &ws[3]),
+                    want,
+                    "{:?} off={} len={}",
+                    isa,
+                    off,
+                    len
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dot_x4_rows2_bit_exact_saturated() {
+    // Every product at ±127² keeps all eight accumulators at the int16
+    // madd-pair extreme; 4096 lanes stays far from i32 overflow.
+    for (a, b) in [(127i8, 127i8), (127, -127), (-127, -127), (-127, 127)] {
+        for n in [64usize, 333, 4096] {
+            let x0 = vec![a; n];
+            let x1 = vec![b; n];
+            let ws: Vec<Vec<i8>> = (0..4).map(|_| vec![b; n]).collect();
+            let want = rows2_oracle(&x0, &x1, &ws);
+            for isa in available_isas() {
+                assert_eq!(
+                    dot_i8_x4_rows2_isa(isa, &x0, &x1, &ws[0], &ws[1], &ws[2], &ws[3]),
+                    want,
+                    "{:?} {}x({},{})",
+                    isa,
+                    n,
+                    a,
+                    b
+                );
+            }
+        }
+    }
 }
 
 #[test]
