@@ -37,6 +37,62 @@ use crate::model::import::{LayerMeta, NetWeights};
 use crate::quant::{round_half_away, StrumLayer};
 use crate::Result;
 use anyhow::{anyhow, ensure};
+use std::cell::{Cell, RefCell};
+use std::time::Instant;
+
+/// One profiled layer execution: the layer's name plus the
+/// monotonic-clock duration of its GEMM + epilogue work on the
+/// profiling thread. Produced by [`profile_layers`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerSpan {
+    pub name: String,
+    pub dur_us: u64,
+}
+
+thread_local! {
+    /// Fast flag: is THIS thread inside a [`profile_layers`] scope? The
+    /// unprofiled hot path pays exactly one TLS read per layer.
+    static PROFILING: Cell<bool> = const { Cell::new(false) };
+    /// Layer spans accumulated by the current profiling scope.
+    static LAYER_SPANS: RefCell<Vec<LayerSpan>> = const { RefCell::new(Vec::new()) };
+}
+
+#[inline]
+fn profiling() -> bool {
+    PROFILING.with(|p| p.get())
+}
+
+fn record_layer(name: &str, start: Instant) {
+    LAYER_SPANS.with(|s| {
+        s.borrow_mut().push(LayerSpan {
+            name: name.to_string(),
+            dur_us: start.elapsed().as_micros() as u64,
+        })
+    });
+}
+
+/// Runs `f` with per-layer profiling armed on the calling thread: every
+/// conv accumulation and the fc head executed by THIS thread during `f`
+/// records a [`LayerSpan`] (monotonic deltas). Work `f` fans out to
+/// pool threads is still timed — it is covered by the calling thread's
+/// wait inside the layer — but only the layers the calling thread
+/// drives are recorded, so profile a single image's walk
+/// ([`NetworkPlan::forward_one`]) for a complete per-layer picture.
+pub fn profile_layers<T>(f: impl FnOnce() -> T) -> (T, Vec<LayerSpan>) {
+    struct Disarm;
+    impl Drop for Disarm {
+        fn drop(&mut self) {
+            PROFILING.with(|p| p.set(false));
+        }
+    }
+    PROFILING.with(|p| p.set(true));
+    LAYER_SPANS.with(|s| s.borrow_mut().clear());
+    let _disarm = Disarm;
+    let out = f();
+    drop(_disarm);
+    let spans = LAYER_SPANS.with(|s| std::mem::take(&mut *s.borrow_mut()));
+    (out, spans)
+}
 
 /// One node of a network spec (mirror of `nets.py` spec types).
 #[derive(Debug, Clone, Copy)]
@@ -496,6 +552,7 @@ impl NetworkPlan {
         scr: &mut Scratch,
     ) -> Result<()> {
         let l = &self.layers[li];
+        let prof_start = if profiling() { Some(Instant::now()) } else { None };
         ensure!(
             xq.len() == h * w * l.ic,
             "layer {}: plane {} != {}x{}x{}",
@@ -544,6 +601,9 @@ impl NetworkPlan {
                         .copy_from_slice(&block[i * nch..(i + 1) * nch]);
                 }
             }
+        }
+        if let Some(t0) = prof_start {
+            record_layer(&l.name, t0);
         }
         Ok(())
     }
@@ -738,6 +798,7 @@ impl NetworkPlan {
         let n_conv = self.layers.len() - 1;
         ensure!(li == n_conv, "walk consumed {} of {} conv layers", li, n_conv);
         ensure!(l.name == "fc" && l.ic == c, "unexpected head layer {}", l.name);
+        let prof_start = if profiling() { Some(Instant::now()) } else { None };
         let scale = if l.act_scale > 0.0 { l.act_scale } else { dynamic_scale(&feat) };
         let fq = quantize_plane(&feat, scale);
         let mut acc = vec![0i32; l.oc];
@@ -745,6 +806,9 @@ impl NetworkPlan {
         let combined = combined_for(l, scale, &mut scr.combined);
         let mut logits = vec![0f32; l.oc];
         kernels::requant_bias(&acc, l.oc, combined, &l.bias, &mut logits);
+        if let Some(t0) = prof_start {
+            record_layer(&l.name, t0);
+        }
         Ok(logits)
     }
 

@@ -50,7 +50,7 @@ use anyhow::anyhow;
 use std::path::Path;
 use std::sync::Arc;
 
-pub use graph::NetworkPlan;
+pub use graph::{LayerSpan, NetworkPlan};
 
 /// Which execution engine a variant binds to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -102,6 +102,19 @@ pub trait Backend: Send + Sync {
     /// row-major (owned — PJRT hands the buffer to the device without a
     /// copy), the result `[batch, classes]` row-major.
     fn infer_batch(&self, images: Vec<f32>, batch: usize) -> Result<Vec<f32>>;
+    /// [`Backend::infer_batch`] plus per-layer profiling: returns the
+    /// same logits alongside one [`LayerSpan`] per executed layer of
+    /// ONE representative image's graph walk (monotonic durations
+    /// measured INSIDE the call, so their sum never exceeds the
+    /// caller's execute window). Backends without profiling support
+    /// fall back to the unprofiled path and return no spans.
+    fn infer_batch_profiled(
+        &self,
+        images: Vec<f32>,
+        batch: usize,
+    ) -> Result<(Vec<f32>, Vec<LayerSpan>)> {
+        Ok((self.infer_batch(images, batch)?, Vec::new()))
+    }
 }
 
 /// Native integer engine wrapping a [`NetworkPlan`].
@@ -179,6 +192,38 @@ impl Backend for NativeBackend {
         let active = self.active.fetch_add(1, Ordering::Relaxed) + 1;
         let width = crate::util::pool::width_share(active);
         let r = parallel::infer_batch_width(&self.plan, &images, batch, width);
+        self.active.fetch_sub(1, Ordering::Relaxed);
+        r
+    }
+    /// Native profiling: image 0 of the batch runs on the CALLING
+    /// thread inside a [`graph::profile_layers`] scope (width 1, so
+    /// every layer of that walk is recorded), the rest of the batch
+    /// takes the normal data-parallel path, and the logits are spliced
+    /// back in submission order. Images are independent in this
+    /// backend, so the split is bit-identical to the unprofiled path.
+    fn infer_batch_profiled(
+        &self,
+        images: Vec<f32>,
+        batch: usize,
+    ) -> Result<(Vec<f32>, Vec<LayerSpan>)> {
+        use std::sync::atomic::Ordering;
+        let px = self.plan.img * self.plan.img * 3;
+        if batch == 0 || images.len() != batch * px {
+            // Malformed shapes take the plain path for its error text.
+            return Ok((self.infer_batch(images, batch)?, Vec::new()));
+        }
+        let active = self.active.fetch_add(1, Ordering::Relaxed) + 1;
+        let width = crate::util::pool::width_share(active);
+        let r = (|| {
+            let (first, spans) = graph::profile_layers(|| self.plan.forward_one(&images[..px]));
+            let mut logits = first?;
+            if batch > 1 {
+                let rest =
+                    parallel::infer_batch_width(&self.plan, &images[px..], batch - 1, width)?;
+                logits.extend_from_slice(&rest);
+            }
+            Ok((logits, spans))
+        })();
         self.active.fetch_sub(1, Ordering::Relaxed);
         r
     }

@@ -53,11 +53,12 @@
 
 use super::batcher::BatchPolicy;
 use super::metrics::{
-    FleetSnapshot, Metrics, MetricsSnapshot, VariantSnapshot, METRICS_SCHEMA_VERSION,
+    FleetSnapshot, HistogramSnapshot, Metrics, MetricsSnapshot, VariantSnapshot, WindowSnapshot,
+    METRICS_SCHEMA_VERSION,
 };
 use super::router::Variant;
 use crate::runtime::executable::argmax_rows;
-use crate::telemetry::{Event, ShedStage, TelemetrySink};
+use crate::telemetry::{Event, ShedStage, TelemetrySink, TraceCtx};
 use std::collections::VecDeque;
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -251,6 +252,13 @@ pub struct EngineOptions {
     /// ([`crate::util::affinity::pin_current_thread`]). Best-effort:
     /// platforms without `sched_setaffinity` run unpinned, identically.
     pub pin_workers: bool,
+    /// Per-layer profiling sample rate for traced requests: a traced
+    /// request is profiled iff `trace_sample > 0 && trace_id %
+    /// trace_sample == 0` (deterministic, so tests and `strum tail` can
+    /// predict which ids carry layer spans). `0` disables layer
+    /// profiling entirely; stage spans still flow for every traced
+    /// request. The untraced hot path costs one branch + two reads.
+    pub trace_sample: u32,
 }
 
 impl Default for EngineOptions {
@@ -264,6 +272,7 @@ impl Default for EngineOptions {
             telemetry: TelemetrySink::disabled(),
             telemetry_interval: None,
             pin_workers: false,
+            trace_sample: 0,
         }
     }
 }
@@ -275,6 +284,9 @@ struct Request {
     /// Shed (typed `ReplyError::Shed`) instead of executed if still
     /// queued past this instant.
     deadline: Option<Instant>,
+    /// Trace context when the caller requested tracing (`None` on the
+    /// untraced hot path — no span events are ever constructed then).
+    trace: Option<TraceCtx>,
 }
 
 /// One registered variant: queue + policy + metrics + DRR credit.
@@ -302,12 +314,25 @@ struct EngineState {
     stopping: bool,
 }
 
+/// Fleet totals + merged latency histogram observed at the previous
+/// [`snapshot_of`] call — the baseline `MetricsSnapshot.window` deltas
+/// are computed against. The first window spans boot → first snapshot.
+struct WindowBase {
+    at: Instant,
+    completed: u64,
+    shed: u64,
+    rejected: u64,
+    hist: HistogramSnapshot,
+}
+
 struct EngineShared {
     state: Mutex<EngineState>,
     cv: Condvar,
     started: Instant,
     workers: usize,
     telemetry: TelemetrySink,
+    trace_sample: u32,
+    window_base: Mutex<WindowBase>,
 }
 
 /// A batch a worker pulled off a variant queue.
@@ -335,7 +360,7 @@ impl VariantHandle {
 
     /// Submits one image to this variant.
     pub fn submit(&self, image: Vec<f32>) -> Result<Ticket, SubmitError> {
-        submit_shared(&self.shared, &self.key, image, None)
+        submit_shared(&self.shared, &self.key, image, None, None)
     }
 
     /// Submits one image with a per-request deadline. An already-expired
@@ -347,7 +372,19 @@ impl VariantHandle {
         image: Vec<f32>,
         deadline: Option<Instant>,
     ) -> Result<Ticket, SubmitError> {
-        submit_shared(&self.shared, &self.key, image, deadline)
+        submit_shared(&self.shared, &self.key, image, deadline, None)
+    }
+
+    /// [`VariantHandle::submit_deadline`] plus a trace context: the
+    /// request's stage spans are emitted through the engine's telemetry
+    /// sink under `trace` (see [`crate::telemetry::SPAN_STAGES`]).
+    pub fn submit_traced(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+        trace: Option<TraceCtx>,
+    ) -> Result<Ticket, SubmitError> {
+        submit_shared(&self.shared, &self.key, image, deadline, trace)
     }
 }
 
@@ -377,6 +414,14 @@ impl Engine {
             started: Instant::now(),
             workers,
             telemetry: opts.telemetry.clone(),
+            trace_sample: opts.trace_sample,
+            window_base: Mutex::new(WindowBase {
+                at: Instant::now(),
+                completed: 0,
+                shed: 0,
+                rejected: 0,
+                hist: HistogramSnapshot::default(),
+            }),
         });
         let defaults = EngineOptions { workers, ..opts };
         let mut threads = Vec::with_capacity(workers);
@@ -544,7 +589,7 @@ impl Engine {
 
     /// Submits one image to the variant registered under `key`.
     pub fn submit(&self, key: &str, image: Vec<f32>) -> Result<Ticket, SubmitError> {
-        submit_shared(&self.shared, key, image, None)
+        submit_shared(&self.shared, key, image, None, None)
     }
 
     /// Submits one image under `key` with a per-request deadline (see
@@ -555,7 +600,19 @@ impl Engine {
         image: Vec<f32>,
         deadline: Option<Instant>,
     ) -> Result<Ticket, SubmitError> {
-        submit_shared(&self.shared, key, image, deadline)
+        submit_shared(&self.shared, key, image, deadline, None)
+    }
+
+    /// [`Engine::submit_deadline`] plus a trace context (see
+    /// [`VariantHandle::submit_traced`]).
+    pub fn submit_traced(
+        &self,
+        key: &str,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+        trace: Option<TraceCtx>,
+    ) -> Result<Ticket, SubmitError> {
+        submit_shared(&self.shared, key, image, deadline, trace)
     }
 
     /// Submits one image whose reply is delivered through `cb` instead
@@ -572,7 +629,20 @@ impl Engine {
         deadline: Option<Instant>,
         cb: ReplyCallback,
     ) -> Result<(), (SubmitError, ReplyCallback)> {
-        match submit_reply(&self.shared, key, image, deadline, ReplyTo::callback(cb)) {
+        self.submit_callback_traced(key, image, deadline, None, cb)
+    }
+
+    /// [`Engine::submit_callback`] plus a trace context (the async wire
+    /// tier's traced submit path).
+    pub fn submit_callback_traced(
+        &self,
+        key: &str,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+        trace: Option<TraceCtx>,
+        cb: ReplyCallback,
+    ) -> Result<(), (SubmitError, ReplyCallback)> {
+        match submit_reply(&self.shared, key, image, deadline, trace, ReplyTo::callback(cb)) {
             Ok(()) => Ok(()),
             Err((e, reply)) => match reply {
                 ReplyTo::Callback(m) => {
@@ -684,6 +754,32 @@ fn snapshot_of(shared: &EngineShared) -> MetricsSnapshot {
         merged_lat.extend(samples.into_iter().map(|v| (v, w)));
     }
     let fleet = FleetSnapshot::rollup(&variants, shared.started.elapsed(), &merged_lat);
+    // Windowed view: deltas since the PREVIOUS snapshot call (first
+    // window spans boot → first call). A retired variant's counters
+    // leave the fleet totals, so deltas saturate at zero rather than
+    // underflow across a retire.
+    let mut merged_hist = HistogramSnapshot::default();
+    for v in &variants {
+        merged_hist.merge(&v.hist);
+    }
+    let window = {
+        let mut base = shared.window_base.lock().unwrap();
+        let w = WindowSnapshot::from_deltas(
+            base.at.elapsed().as_secs_f64(),
+            fleet.completed.saturating_sub(base.completed),
+            fleet.shed.saturating_sub(base.shed),
+            fleet.rejected.saturating_sub(base.rejected),
+            &merged_hist.delta_since(&base.hist),
+        );
+        *base = WindowBase {
+            at: Instant::now(),
+            completed: fleet.completed,
+            shed: fleet.shed,
+            rejected: fleet.rejected,
+            hist: merged_hist,
+        };
+        w
+    };
     let uptime_s = shared.started.elapsed().as_secs_f64();
     MetricsSnapshot {
         schema_version: METRICS_SCHEMA_VERSION,
@@ -694,6 +790,7 @@ fn snapshot_of(shared: &EngineShared) -> MetricsSnapshot {
         kernel_isa: crate::backend::kernels::active_isa().name().to_string(),
         variants,
         fleet,
+        window,
     }
 }
 
@@ -703,6 +800,11 @@ fn snapshot_of(shared: &EngineShared) -> MetricsSnapshot {
 /// wakeups alone must not pace emission.
 fn gauge_ticker(shared: &EngineShared, period: Duration) {
     let mut next = Instant::now() + period;
+    // Previous tick's snapshot: each emitted row carries both cumulative
+    // counters and the interval deltas vs. this, so dashboards read
+    // per-interval rates straight off a row instead of differencing
+    // successive snapshots by hand.
+    let mut prev: Option<MetricsSnapshot> = None;
     loop {
         {
             let mut st = shared.state.lock().unwrap();
@@ -718,7 +820,9 @@ fn gauge_ticker(shared: &EngineShared, period: Duration) {
             }
         }
         next += period;
-        shared.telemetry.emit(Event::gauges(&snapshot_of(shared)));
+        let snap = snapshot_of(shared);
+        shared.telemetry.emit(Event::gauges_delta(&snap, prev.as_ref()));
+        prev = Some(snap);
     }
 }
 
@@ -727,9 +831,10 @@ fn submit_shared(
     key: &str,
     image: Vec<f32>,
     deadline: Option<Instant>,
+    trace: Option<TraceCtx>,
 ) -> Result<Ticket, SubmitError> {
     let (tx, rx) = mpsc::channel();
-    submit_reply(shared, key, image, deadline, ReplyTo::Channel(tx))
+    submit_reply(shared, key, image, deadline, trace, ReplyTo::Channel(tx))
         .map_err(|(e, _reply)| e)?;
     Ok(Ticket { rx })
 }
@@ -742,6 +847,7 @@ fn submit_reply(
     key: &str,
     image: Vec<f32>,
     deadline: Option<Instant>,
+    trace: Option<TraceCtx>,
     reply: ReplyTo,
 ) -> Result<(), (SubmitError, ReplyTo)> {
     let mut st = shared.state.lock().unwrap();
@@ -792,11 +898,27 @@ fn submit_reply(
         ));
     }
     slot.metrics.record_request();
+    // Door-admit span: a zero-duration marker stamping the instant the
+    // request entered the queue (the waterfall's anchor point).
+    if let Some(t) = trace {
+        if shared.telemetry.is_enabled() {
+            shared.telemetry.emit(Event::Span {
+                trace: t.trace_id,
+                attempt: t.attempt as u32,
+                stage: "door",
+                key: Some(slot.key_arc.clone()),
+                dur_us: 0,
+                abandoned: false,
+                detail: None,
+            });
+        }
+    }
     slot.queue.push_back(Request {
         image,
         reply,
         enqueued: Instant::now(),
         deadline,
+        trace,
     });
     drop(st);
     shared.cv.notify_all();
@@ -888,7 +1010,7 @@ fn worker_loop(shared: &EngineShared) {
             }
         };
         let Some(job) = job else { return };
-        execute_batch(&job, &shared.telemetry);
+        execute_batch(&job, &shared.telemetry, shared.trace_sample);
         job.inflight.fetch_sub(1, Ordering::AcqRel);
         // Wake napping peers (queued work may be flushable now that this
         // worker is free) and any retire()/shutdown waiter.
@@ -896,7 +1018,7 @@ fn worker_loop(shared: &EngineShared) {
     }
 }
 
-fn execute_batch(job: &Job, telemetry: &TelemetrySink) {
+fn execute_batch(job: &Job, telemetry: &TelemetrySink, trace_sample: u32) {
     let v = &job.variant;
     // Shed already-late requests before spending backend cycles: their
     // deadline passed while they sat in the queue, so nobody is waiting
@@ -925,6 +1047,34 @@ fn execute_batch(job: &Job, telemetry: &TelemetrySink) {
         occupancy: n as u32,
         padded: bsz as u32,
     });
+    // Stage spans at batch formation: queue wait so far plus a batch
+    // marker, per traced request. Untraced requests skip both branches.
+    let spans_on = telemetry.is_enabled();
+    let formed = Instant::now();
+    if spans_on {
+        for r in &live {
+            if let Some(t) = r.trace {
+                telemetry.emit(Event::Span {
+                    trace: t.trace_id,
+                    attempt: t.attempt as u32,
+                    stage: "queue_wait",
+                    key: Some(job.key_arc.clone()),
+                    dur_us: formed.saturating_duration_since(r.enqueued).as_micros() as u64,
+                    abandoned: false,
+                    detail: None,
+                });
+                telemetry.emit(Event::Span {
+                    trace: t.trace_id,
+                    attempt: t.attempt as u32,
+                    stage: "batch",
+                    key: Some(job.key_arc.clone()),
+                    dur_us: 0,
+                    abandoned: false,
+                    detail: Some(format!("occ={} padded={}", n, bsz)),
+                });
+            }
+        }
+    }
     let px = v.image_len();
     let mut images = vec![0f32; bsz * px];
     for (i, r) in live.iter().enumerate() {
@@ -932,8 +1082,42 @@ fn execute_batch(job: &Job, telemetry: &TelemetrySink) {
         debug_assert_eq!(r.image.len(), px);
         images[i * px..(i + 1) * px].copy_from_slice(&r.image);
     }
-    match v.backend.infer_batch(images, bsz) {
-        Ok(logits) => {
+    // 1-in-N layer profiling: the first live traced request whose id
+    // samples in carries this batch's per-layer spans. With
+    // `trace_sample == 0` (or no traced request in the batch) the
+    // backend runs the plain unprofiled path — the hot-path cost of the
+    // whole feature is this branch plus two reads.
+    let profiled: Option<TraceCtx> = if trace_sample > 0 && spans_on {
+        live.iter()
+            .filter_map(|r| r.trace)
+            .find(|t| t.trace_id % trace_sample as u64 == 0)
+    } else {
+        None
+    };
+    let exec_start = Instant::now();
+    let result = if profiled.is_some() {
+        v.backend.infer_batch_profiled(images, bsz)
+    } else {
+        v.backend.infer_batch(images, bsz).map(|l| (l, Vec::new()))
+    };
+    let exec_us = exec_start.elapsed().as_micros() as u64;
+    match result {
+        Ok((logits, layers)) => {
+            // Layer spans are measured INSIDE the execute window, so
+            // their sum can never exceed the execute span below.
+            if let Some(t) = profiled {
+                for l in layers {
+                    telemetry.emit(Event::Span {
+                        trace: t.trace_id,
+                        attempt: t.attempt as u32,
+                        stage: "layer",
+                        key: Some(job.key_arc.clone()),
+                        dur_us: l.dur_us,
+                        abandoned: false,
+                        detail: Some(l.name),
+                    });
+                }
+            }
             let preds = argmax_rows(&logits, v.classes);
             for (i, r) in live.iter().enumerate() {
                 let latency = r.enqueued.elapsed();
@@ -947,12 +1131,39 @@ fn execute_batch(job: &Job, telemetry: &TelemetrySink) {
                     batch_occupancy: n as u32,
                     batch_padded: bsz as u32,
                 });
+                if spans_on {
+                    if let Some(t) = r.trace {
+                        telemetry.emit(Event::Span {
+                            trace: t.trace_id,
+                            attempt: t.attempt as u32,
+                            stage: "execute",
+                            key: Some(job.key_arc.clone()),
+                            dur_us: exec_us,
+                            abandoned: false,
+                            detail: None,
+                        });
+                    }
+                }
+                let write_start = Instant::now();
                 r.reply.send(Ok(InferReply {
                     class: preds[i],
                     logits: logits[i * v.classes..(i + 1) * v.classes].to_vec(),
                     latency,
                     batch: (n, bsz),
                 }));
+                if spans_on {
+                    if let Some(t) = r.trace {
+                        telemetry.emit(Event::Span {
+                            trace: t.trace_id,
+                            attempt: t.attempt as u32,
+                            stage: "reply_write",
+                            key: Some(job.key_arc.clone()),
+                            dur_us: write_start.elapsed().as_micros() as u64,
+                            abandoned: false,
+                            detail: None,
+                        });
+                    }
+                }
             }
         }
         Err(e) => {

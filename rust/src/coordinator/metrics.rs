@@ -20,9 +20,277 @@ pub const RESERVOIR_CAP: usize = 4096;
 
 /// Version of the metrics-snapshot JSON layout. v2 added top-level
 /// `schema_version`, `uptime_s`, and `telemetry_dropped`; v3 added
-/// `kernel_isa`; consumers must treat a missing field as an older
-/// version (additive changes, parse tolerantly).
-pub const METRICS_SCHEMA_VERSION: u32 = 3;
+/// `kernel_isa`; v4 added per-variant log2 latency histograms (`hist`)
+/// and the top-level `window` interval-delta block; consumers must
+/// treat a missing field as an older version (additive changes, parse
+/// tolerantly).
+pub const METRICS_SCHEMA_VERSION: u32 = 4;
+
+/// Number of log2 latency buckets. Bucket 0 holds `0 µs`; bucket
+/// `i ∈ 1..63` holds values whose bit length is `i`, i.e. the range
+/// `[2^(i-1), 2^i − 1]` µs (so the upper edge of bucket 7 is the
+/// 127 µs "±127 edge"); bucket 63 is the overflow bucket (≥ 2^62 µs).
+pub const HIST_BUCKETS: usize = 64;
+
+/// Lock-free shards a [`LatencyHistogram`] spreads its counters over.
+/// Worker threads hash onto a shard (round-robin at first touch) so
+/// concurrent `record` calls on different workers rarely contend on
+/// one cache line; shards are merged at snapshot time.
+const HIST_SHARDS: usize = 8;
+
+/// Log2 bucket index for a latency in microseconds.
+pub fn bucket_index(us: u64) -> usize {
+    if us == 0 {
+        0
+    } else {
+        (64 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper edge (µs) of bucket `i`, `None` for the overflow
+/// bucket (`+Inf` in Prometheus exposition).
+pub fn bucket_le_us(i: usize) -> Option<u64> {
+    if i >= HIST_BUCKETS - 1 {
+        None
+    } else {
+        Some((1u64 << i) - 1)
+    }
+}
+
+#[repr(align(64))]
+struct HistShard {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for HistShard {
+    fn default() -> Self {
+        HistShard {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Fixed-layout log2 latency histogram: [`HIST_BUCKETS`] buckets over
+/// microseconds, sharded per worker thread so the record path is two
+/// relaxed atomic adds with no lock and no allocation. Unlike the
+/// reservoir (a *sample*), the histogram counts every request exactly
+/// once, so bucket counts difference cleanly into per-interval windows
+/// and export directly as Prometheus `_bucket`/`_sum`/`_count`
+/// families.
+pub struct LatencyHistogram {
+    shards: Box<[HistShard]>,
+}
+
+impl std::fmt::Debug for LatencyHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let m = self.merged();
+        write!(f, "LatencyHistogram(count={}, sum_us={})", m.count, m.sum_us)
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            shards: (0..HIST_SHARDS).map(|_| HistShard::default()).collect(),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    fn shard(&self) -> &HistShard {
+        thread_local! {
+            static SHARD_IDX: usize = {
+                static NEXT: AtomicU64 = AtomicU64::new(0);
+                NEXT.fetch_add(1, Ordering::Relaxed) as usize % HIST_SHARDS
+            };
+        }
+        &self.shards[SHARD_IDX.with(|i| *i)]
+    }
+
+    /// Records one latency. Lock-free: a relaxed add into this thread's
+    /// shard.
+    pub fn record(&self, us: u64) {
+        let s = self.shard();
+        s.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        s.sum_us.fetch_add(us, Ordering::Relaxed);
+        s.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Merges every shard into one immutable snapshot.
+    pub fn merged(&self) -> HistogramSnapshot {
+        let mut out = HistogramSnapshot::default();
+        for s in self.shards.iter() {
+            for (i, b) in s.buckets.iter().enumerate() {
+                out.buckets[i] += b.load(Ordering::Relaxed);
+            }
+            out.sum_us += s.sum_us.load(Ordering::Relaxed);
+            out.count += s.count.load(Ordering::Relaxed);
+        }
+        out
+    }
+}
+
+/// One merged, immutable view of a [`LatencyHistogram`] (or a delta of
+/// two — see [`HistogramSnapshot::delta_since`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket counts (NOT cumulative; the Prometheus exposition
+    /// accumulates them into `le` form at render time).
+    pub buckets: [u64; HIST_BUCKETS],
+    /// Sum of every recorded latency, µs.
+    pub sum_us: u64,
+    /// Total recorded latencies.
+    pub count: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot {
+            buckets: [0; HIST_BUCKETS],
+            sum_us: 0,
+            count: 0,
+        }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Bucket-wise `self − earlier`: the histogram of requests recorded
+    /// in the interval between the two snapshots. Saturating, so a
+    /// counter reset (process restart) degrades to zeros instead of
+    /// wrapping.
+    pub fn delta_since(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        let mut out = HistogramSnapshot::default();
+        for i in 0..HIST_BUCKETS {
+            out.buckets[i] = self.buckets[i].saturating_sub(earlier.buckets[i]);
+        }
+        out.sum_us = self.sum_us.saturating_sub(earlier.sum_us);
+        out.count = self.count.saturating_sub(earlier.count);
+        out
+    }
+
+    /// Merges another snapshot into this one (fleet rollups).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for i in 0..HIST_BUCKETS {
+            self.buckets[i] += other.buckets[i];
+        }
+        self.sum_us += other.sum_us;
+        self.count += other.count;
+    }
+
+    /// Quantile estimate (`q ∈ [0, 1]`) by linear interpolation inside
+    /// the covering bucket — the histogram twin of the reservoir
+    /// percentiles, exact to within one bucket's width.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).max(1.0);
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let next = cum + n;
+            if (next as f64) >= target {
+                let lo = if i == 0 { 0.0 } else { (1u64 << (i - 1)) as f64 };
+                let hi = match bucket_le_us(i) {
+                    Some(le) => le as f64 + 1.0,
+                    None => lo * 2.0,
+                };
+                let frac = (target - cum as f64) / n as f64;
+                return lo + (hi - lo) * frac.clamp(0.0, 1.0);
+            }
+            cum = next;
+        }
+        0.0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "buckets",
+                Json::Arr(self.buckets.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            ("sum_us", Json::Num(self.sum_us as f64)),
+            ("count", Json::Num(self.count as f64)),
+        ])
+    }
+
+    /// Tolerant inverse of [`HistogramSnapshot::to_json`] (missing or
+    /// short fields read as zero) — the Prometheus renderer parses the
+    /// snapshot back out of the metrics JSON with this.
+    pub fn from_json(v: &Json) -> HistogramSnapshot {
+        let mut out = HistogramSnapshot::default();
+        if let Some(arr) = v.get("buckets").and_then(Json::as_arr) {
+            for (i, b) in arr.iter().take(HIST_BUCKETS).enumerate() {
+                out.buckets[i] = b.as_f64().unwrap_or(0.0) as u64;
+            }
+        }
+        out.sum_us = v.get("sum_us").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        out.count = v.get("count").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        out
+    }
+}
+
+/// Interval-delta block of a [`MetricsSnapshot`]: what happened since
+/// the *previous* snapshot was taken (fleet-wide), rather than since
+/// boot. The engine keeps the previous observation internally, so each
+/// snapshot call closes one window and opens the next; a periodic
+/// scraper (the gauge ticker, a Prometheus poll) therefore sees clean
+/// per-interval deltas without differencing by hand. The first window
+/// of a process covers boot → first snapshot.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WindowSnapshot {
+    /// Window length in seconds.
+    pub window_s: f64,
+    /// Requests completed in the window.
+    pub completed: u64,
+    /// Requests shed in the window.
+    pub shed: u64,
+    /// Submits rejected in the window.
+    pub rejected: u64,
+    /// Latency quantiles over the window's histogram delta, µs.
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+impl WindowSnapshot {
+    /// Builds the window block from counter/histogram deltas.
+    pub fn from_deltas(
+        window_s: f64,
+        completed: u64,
+        shed: u64,
+        rejected: u64,
+        hist: &HistogramSnapshot,
+    ) -> WindowSnapshot {
+        WindowSnapshot {
+            window_s,
+            completed,
+            shed,
+            rejected,
+            p50_us: hist.quantile_us(0.50),
+            p95_us: hist.quantile_us(0.95),
+            p99_us: hist.quantile_us(0.99),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("window_s", Json::Num(self.window_s)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p95_us", Json::Num(self.p95_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+        ])
+    }
+}
 
 /// Fixed-capacity uniform sample of an unbounded stream (Algorithm R).
 /// After `seen` pushes, each of them is retained with probability
@@ -89,6 +357,8 @@ pub struct Metrics {
     pub padded_slots: AtomicU64,
     latencies_us: Mutex<Reservoir>,
     batch_sizes: Mutex<Reservoir>,
+    /// Log2 latency histogram (every request counted, lock-free).
+    hist: LatencyHistogram,
 }
 
 impl Default for Metrics {
@@ -103,6 +373,7 @@ impl Default for Metrics {
             // Fixed seeds: sampling stays reproducible run to run.
             latencies_us: Mutex::new(Reservoir::new(RESERVOIR_CAP, 0x5EED_1A7E)),
             batch_sizes: Mutex::new(Reservoir::new(RESERVOIR_CAP, 0x5EED_BA7C)),
+            hist: LatencyHistogram::default(),
         }
     }
 }
@@ -129,10 +400,16 @@ impl Metrics {
 
     pub fn record_done(&self, latency: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
+        self.hist.record(latency.as_micros() as u64);
         self.latencies_us
             .lock()
             .unwrap()
             .push(latency.as_secs_f64() * 1e6);
+    }
+
+    /// Merged view of the per-worker histogram shards.
+    pub fn histogram(&self) -> HistogramSnapshot {
+        self.hist.merged()
     }
 
     pub fn latency_summary(&self) -> Summary {
@@ -186,6 +463,7 @@ impl Metrics {
             queued,
             throughput_rps: completed as f64 / wall.as_secs_f64().max(1e-9),
             latency: LatencyStats::from_summary(&self.latency_summary()),
+            hist: self.hist.merged(),
         }
     }
 }
@@ -285,6 +563,8 @@ pub struct VariantSnapshot {
     pub queued: usize,
     pub throughput_rps: f64,
     pub latency: LatencyStats,
+    /// Log2 latency histogram (since boot; every request counted).
+    pub hist: HistogramSnapshot,
 }
 
 impl VariantSnapshot {
@@ -312,6 +592,7 @@ impl VariantSnapshot {
             ("queued", Json::Num(self.queued as f64)),
             ("throughput_rps", Json::Num(self.throughput_rps)),
             ("latency", self.latency.to_json()),
+            ("hist", self.hist.to_json()),
         ])
     }
 }
@@ -387,6 +668,9 @@ pub struct MetricsSnapshot {
     pub kernel_isa: String,
     pub variants: Vec<VariantSnapshot>,
     pub fleet: FleetSnapshot,
+    /// Fleet-wide interval deltas since the previous snapshot call
+    /// (boot → first call for the first window).
+    pub window: WindowSnapshot,
 }
 
 impl MetricsSnapshot {
@@ -403,6 +687,7 @@ impl MetricsSnapshot {
                 Json::Arr(self.variants.iter().map(|v| v.to_json()).collect()),
             ),
             ("fleet", self.fleet.to_json()),
+            ("window", self.window.to_json()),
         ])
     }
 
@@ -441,6 +726,16 @@ impl MetricsSnapshot {
             self.fleet.latency.p50_us,
             self.fleet.latency.p95_us,
             self.fleet.latency.p99_us,
+        ));
+        out.push_str(&format!(
+            "\nwindow: {:.2}s completed={} shed={} rejected={} latency_us p50={:.0} p95={:.0} p99={:.0}",
+            self.window.window_s,
+            self.window.completed,
+            self.window.shed,
+            self.window.rejected,
+            self.window.p50_us,
+            self.window.p95_us,
+            self.window.p99_us,
         ));
         out
     }
@@ -596,9 +891,16 @@ mod tests {
             kernel_isa: "scalar".to_string(),
             variants: vec![v],
             fleet,
+            window: WindowSnapshot::default(),
         };
         let j = snap.to_json();
         assert_eq!(j.get("workers").unwrap().as_usize().unwrap(), 4);
+        // v4: per-variant histogram + top-level window ride the JSON.
+        let vh = j.get("variants").unwrap().as_arr().unwrap()[0]
+            .get("hist")
+            .expect("variant hist");
+        assert_eq!(vh.get("count").unwrap().as_usize(), Some(1));
+        assert!(j.get("window").is_some());
         assert_eq!(j.get("kernel_isa").unwrap().as_str(), Some("scalar"));
         assert_eq!(
             j.get("schema_version").unwrap().as_usize().unwrap(),
@@ -639,6 +941,7 @@ mod tests {
             queued: 0,
             throughput_rps: 0.0,
             latency: LatencyStats::from_summary(&Summary::new()),
+            hist: HistogramSnapshot::default(),
         };
         let f = FleetSnapshot::rollup(
             &[mk(10, 2), mk(5, 1)],
@@ -758,6 +1061,7 @@ mod tests {
             kernel_isa: "scalar".to_string(),
             fleet: FleetSnapshot::rollup(std::slice::from_ref(&v), Duration::from_secs(2), &[]),
             variants: vec![v],
+            window: WindowSnapshot::default(),
         };
         let counts = WireCounts::from_metrics_json(&snap.to_json().to_string_pretty()).unwrap();
         assert_eq!(counts.requests, 5);
@@ -791,5 +1095,101 @@ mod tests {
         // Tolerant parse: missing fields read as zero, not errors.
         let empty = WireCounts::from_metrics_json("{}").unwrap();
         assert_eq!(empty, WireCounts::default());
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        // Bucket 0 is the zero-latency bucket; i >= 1 covers
+        // [2^(i-1), 2^i - 1] us. The paper-adjacent edge case: int8's
+        // +-127 boundary maps to bucket 7 whose upper edge is exactly 127.
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(127), 7);
+        assert_eq!(bucket_le_us(7), Some(127));
+        assert_eq!(bucket_index(128), 8);
+        assert_eq!(bucket_le_us(8), Some(255));
+        // Overflow bucket: everything past 2^62 collapses into bucket 63,
+        // which renders as +Inf (no finite upper edge).
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(bucket_le_us(HIST_BUCKETS - 1), None);
+        assert_eq!(bucket_le_us(0), Some(0));
+    }
+
+    #[test]
+    fn histogram_records_and_merges_shards() {
+        let h = LatencyHistogram::default();
+        h.record(0);
+        h.record(127);
+        h.record(128);
+        h.record(1_000_000);
+        let s = h.merged();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.sum_us, 0 + 127 + 128 + 1_000_000);
+        assert_eq!(s.buckets[0], 1);
+        assert_eq!(s.buckets[7], 1);
+        assert_eq!(s.buckets[8], 1);
+        assert_eq!(s.buckets[bucket_index(1_000_000)], 1);
+    }
+
+    #[test]
+    fn histogram_snapshot_delta_and_quantiles() {
+        let h = LatencyHistogram::default();
+        for _ in 0..90 {
+            h.record(100);
+        }
+        for _ in 0..10 {
+            h.record(10_000);
+        }
+        let s = h.merged();
+        // p50 lands in the bucket covering 100us: [64, 127].
+        let p50 = s.quantile_us(0.5);
+        assert!((64.0..=128.0).contains(&p50), "p50 {}", p50);
+        // p99 lands in the bucket covering 10ms: [8192, 16383].
+        let p99 = s.quantile_us(0.99);
+        assert!((8192.0..=16384.0).contains(&p99), "p99 {}", p99);
+
+        // Delta semantics: windowed view counts only what happened since.
+        let before = s.clone();
+        for _ in 0..5 {
+            h.record(100);
+        }
+        let after = h.merged();
+        let d = after.delta_since(&before);
+        assert_eq!(d.count, 5);
+        assert_eq!(d.sum_us, 500);
+        assert_eq!(d.buckets[bucket_index(100)], 5);
+    }
+
+    #[test]
+    fn histogram_snapshot_json_roundtrip() {
+        let h = LatencyHistogram::default();
+        h.record(42);
+        h.record(4200);
+        let s = h.merged();
+        let back = HistogramSnapshot::from_json(&s.to_json());
+        assert_eq!(back, s);
+        // Tolerant parse: garbage reads as empty, not a panic.
+        assert_eq!(
+            HistogramSnapshot::from_json(&Json::obj(vec![])),
+            HistogramSnapshot::default()
+        );
+    }
+
+    #[test]
+    fn window_snapshot_from_deltas() {
+        let h = LatencyHistogram::default();
+        for _ in 0..10 {
+            h.record(200);
+        }
+        let w = WindowSnapshot::from_deltas(2.0, 10, 1, 2, &h.merged());
+        assert_eq!(w.completed, 10);
+        assert_eq!(w.shed, 1);
+        assert_eq!(w.rejected, 2);
+        assert!((w.window_s - 2.0).abs() < 1e-9);
+        assert!(w.p50_us >= 128.0 && w.p50_us <= 256.0, "p50 {}", w.p50_us);
+        let j = w.to_json();
+        assert_eq!(j.get("completed").unwrap().as_usize(), Some(10));
     }
 }

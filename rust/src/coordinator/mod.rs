@@ -59,7 +59,8 @@ pub use engine::{
     VariantHandle,
 };
 pub use metrics::{
-    FleetSnapshot, LatencyStats, MetricsSnapshot, VariantSnapshot, WireCounts,
+    bucket_index, bucket_le_us, FleetSnapshot, HistogramSnapshot, LatencyHistogram, LatencyStats,
+    MetricsSnapshot, VariantSnapshot, WindowSnapshot, WireCounts, HIST_BUCKETS,
     METRICS_SCHEMA_VERSION,
 };
 pub use router::{Router, Variant};

@@ -80,16 +80,35 @@ fn record_success(shared: &GatewayShared, id: u64, counts: WireCounts) {
             return;
         }
         r.consec_fail = 0;
-        r.healthy = true;
-        r.unhealthy_rate = match &r.last_counts {
-            // Uptime going backwards = the process restarted between
-            // probes; differencing across the restart would produce
-            // negative deltas, so re-base at zero.
+        // A window is comparable iff a previous sample exists and the
+        // engine uptime is monotonic. Uptime going backwards = the
+        // process restarted between probes; differencing across the
+        // restart would produce negative deltas, so the probe only
+        // re-bases at zero.
+        let comparable = match &r.last_counts {
             Some(prev) if counts.uptime_s >= prev.uptime_s => {
-                counts.unhealthy_rate_since(prev)
+                r.unhealthy_rate = counts.unhealthy_rate_since(prev);
+                true
             }
-            _ => 0.0,
+            _ => {
+                r.unhealthy_rate = 0.0;
+                false
+            }
         };
+        if r.probation {
+            // Previously unhealthy: a bare connect/metrics success (or
+            // a re-based sample after a restart) only sets the
+            // baseline. Re-admission requires one clean delta-based
+            // window — two comparable samples with no probe failure in
+            // between.
+            if comparable {
+                r.probation = false;
+                r.healthy = true;
+            }
+        } else {
+            // Fresh replica (never flagged): first success admits.
+            r.healthy = true;
+        }
         r.last_counts = Some(counts);
     });
 }
@@ -102,6 +121,13 @@ fn record_failure(shared: &GatewayShared, id: u64, fail_threshold: u32) {
         r.consec_fail = r.consec_fail.saturating_add(1);
         if r.consec_fail >= fail_threshold {
             r.healthy = false;
+            r.probation = true;
+        }
+        // Any failure dirties the in-progress window: the replica was
+        // unreachable mid-interval, so a later success must start a
+        // fresh baseline before it can count as a clean window.
+        if r.probation {
+            r.last_counts = None;
         }
     });
 }
@@ -116,5 +142,119 @@ fn sleep_interruptible(shared: &GatewayShared, total: Duration) {
         let step = slice.min(left);
         std::thread::sleep(step);
         left -= step;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::Replica;
+    use crate::telemetry::TelemetrySink;
+    use std::sync::atomic::{AtomicBool, AtomicU64};
+    use std::sync::Mutex;
+
+    fn shared_with(replicas: Vec<Replica>) -> GatewayShared {
+        GatewayShared {
+            replicas: Mutex::new(replicas),
+            stopping: AtomicBool::new(false),
+            active_cohort: AtomicU64::new(0),
+            next_id: AtomicU64::new(100),
+            next_cohort: AtomicU64::new(1),
+            retries: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
+            upstream_errors: AtomicU64::new(0),
+            deploys: AtomicU64::new(0),
+            rollbacks: AtomicU64::new(0),
+            rollback_fatal: AtomicBool::new(false),
+            telemetry: TelemetrySink::disabled(),
+            slots: Mutex::new(Vec::new()),
+            lat: Mutex::new(super::super::LatRing::new()),
+            p95_us: AtomicU64::new(0),
+        }
+    }
+
+    fn up_replica(id: u64) -> Replica {
+        let mut r = Replica::attached(id, format!("127.0.0.1:{}", 40000 + id));
+        r.healthy = true;
+        r
+    }
+
+    fn counts(requests: u64, uptime_s: f64) -> WireCounts {
+        WireCounts {
+            requests,
+            completed: requests,
+            rejected: 0,
+            shed: 0,
+            uptime_s,
+            variants: Vec::new(),
+        }
+    }
+
+    fn replica_health(shared: &GatewayShared, id: u64) -> (bool, bool) {
+        with_replica(shared, id, |r| (r.healthy, r.probation)).unwrap()
+    }
+
+    #[test]
+    fn fresh_replica_admits_on_first_successful_probe() {
+        let mut r = up_replica(0);
+        r.healthy = false; // attached but not yet probed
+        let shared = shared_with(vec![r]);
+        record_success(&shared, 0, counts(0, 1.0));
+        assert_eq!(replica_health(&shared, 0), (true, false));
+    }
+
+    #[test]
+    fn flagged_replica_needs_one_clean_window_before_readmission() {
+        // Regression: a replica that crossed the failure threshold used
+        // to flip healthy again on the very next successful probe —
+        // before a single delta window had shown it serving cleanly.
+        let shared = shared_with(vec![up_replica(0)]);
+        record_failure(&shared, 0, 1);
+        assert_eq!(replica_health(&shared, 0), (false, true));
+
+        // First success after the outage: baseline only, still out.
+        record_success(&shared, 0, counts(10, 5.0));
+        assert_eq!(replica_health(&shared, 0), (false, true));
+
+        // Second success completes a comparable delta window: back in.
+        record_success(&shared, 0, counts(20, 6.0));
+        assert_eq!(replica_health(&shared, 0), (true, false));
+    }
+
+    #[test]
+    fn restart_between_probes_rebases_instead_of_readmitting() {
+        let shared = shared_with(vec![up_replica(0)]);
+        record_failure(&shared, 0, 1);
+        record_success(&shared, 0, counts(10, 5.0));
+        // Uptime went backwards: the process restarted mid-window, so
+        // this sample only re-bases — no re-admission yet.
+        record_success(&shared, 0, counts(2, 0.5));
+        assert_eq!(replica_health(&shared, 0), (false, true));
+        // A monotonic follow-up completes the clean window.
+        record_success(&shared, 0, counts(4, 1.5));
+        assert_eq!(replica_health(&shared, 0), (true, false));
+    }
+
+    #[test]
+    fn probe_failure_mid_window_restarts_the_window() {
+        let shared = shared_with(vec![up_replica(0)]);
+        record_failure(&shared, 0, 1);
+        record_success(&shared, 0, counts(10, 5.0));
+        // The window is interrupted by another failed probe: the
+        // baseline is dropped, so the next success starts over.
+        record_failure(&shared, 0, 3);
+        record_success(&shared, 0, counts(12, 7.0));
+        assert_eq!(replica_health(&shared, 0), (false, true));
+        record_success(&shared, 0, counts(14, 8.0));
+        assert_eq!(replica_health(&shared, 0), (true, false));
+    }
+
+    #[test]
+    fn healthy_replica_stays_admitted_across_probes() {
+        let shared = shared_with(vec![up_replica(0)]);
+        record_success(&shared, 0, counts(10, 5.0));
+        record_success(&shared, 0, counts(20, 6.0));
+        assert_eq!(replica_health(&shared, 0), (true, false));
     }
 }

@@ -126,6 +126,13 @@ pub struct Replica {
     /// `fail_threshold` consecutive probe failures or a forward-level
     /// transport error.
     pub healthy: bool,
+    /// Set when the replica is flagged unhealthy (probe threshold,
+    /// forward transport error, death). While set, a successful probe
+    /// alone does not re-admit: the prober requires one clean
+    /// delta-based window (two comparable samples with no failure or
+    /// restart in between) before flipping `healthy` back on. Fresh
+    /// replicas (never flagged) admit on their first successful probe.
+    pub probation: bool,
     pub consec_fail: u32,
     pub restarts: u64,
     /// In-flight forwards per variant key (least-outstanding routing).
@@ -149,6 +156,7 @@ impl Replica {
             addr: None,
             pid: None,
             healthy: false,
+            probation: false,
             consec_fail: 0,
             restarts: 0,
             outstanding: HashMap::new(),

@@ -31,10 +31,11 @@
 use super::{fleet_view, with_replica, GatewayShared, HedgePolicy, ReplicaState};
 use crate::server::proto::{ErrorCode, Request, Response};
 use crate::server::{ServerStats, WireClient, WireHandler, WireResponse};
-use crate::telemetry::Event;
+use crate::telemetry::{Event, TraceCtx};
 use crate::util::json::Json;
+use crate::util::prng::Rng;
 use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Default hedge delay until enough latency samples exist for a p95.
@@ -48,17 +49,32 @@ pub struct GatewayHandler {
     retry: bool,
     hedge: Option<HedgePolicy>,
     forward_timeout: Duration,
+    /// Trace-id mint (when telemetry is on and the client sent none).
+    trace_rng: Mutex<Rng>,
 }
 
 impl WireHandler for GatewayHandler {
-    fn handle(&self, req: Request, arrived: Instant, stats: &ServerStats) -> Response {
+    fn handle(
+        &self,
+        req: Request,
+        arrived: Instant,
+        stats: &ServerStats,
+        trace: Option<TraceCtx>,
+    ) -> Response {
         match req {
             Request::Metrics => Response::MetricsJson(self.metrics_json(stats)),
             Request::Infer {
                 key,
                 deadline_budget_ms,
                 image,
-            } => self.route(&key, deadline_budget_ms, image, arrived),
+            } => {
+                // The gateway is where traces are born: a request that
+                // arrives untraced gets a freshly minted id (only when
+                // telemetry records spans — otherwise minting buys
+                // nothing); a client-supplied id propagates untouched.
+                let trace = trace.or_else(|| self.mint_trace());
+                self.route(&key, deadline_budget_ms, image, arrived, trace)
+            }
         }
     }
 }
@@ -70,12 +86,67 @@ impl GatewayHandler {
         hedge: Option<HedgePolicy>,
         forward_timeout: Duration,
     ) -> GatewayHandler {
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::SystemTime::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0)
+            ^ ((std::process::id() as u64) << 32);
         GatewayHandler {
             shared,
             retry,
             hedge,
             forward_timeout,
+            trace_rng: Mutex::new(Rng::new(seed)),
         }
+    }
+
+    fn mint_trace(&self) -> Option<TraceCtx> {
+        if !self.shared.telemetry.is_enabled() {
+            return None;
+        }
+        let trace_id = self.trace_rng.lock().unwrap().next_u64();
+        Some(TraceCtx {
+            trace_id,
+            attempt: 0,
+        })
+    }
+
+    /// Stamps the next attempt ordinal onto the shared trace id (0 =
+    /// primary as received; each forward — retry or hedge — takes the
+    /// next number).
+    fn next_attempt(trace: Option<TraceCtx>, n: &mut u8) -> Option<TraceCtx> {
+        let t = trace.map(|tc| TraceCtx {
+            trace_id: tc.trace_id,
+            attempt: *n,
+        });
+        if t.is_some() {
+            *n = n.saturating_add(1);
+        }
+        t
+    }
+
+    /// One `gateway_attempt` span: how long this forward held the
+    /// request, and whether its reply was abandoned (hedge loser).
+    fn emit_attempt_span(
+        &self,
+        trace: Option<TraceCtx>,
+        key: &str,
+        took: Duration,
+        abandoned: bool,
+    ) {
+        let Some(t) = trace else { return };
+        if !self.shared.telemetry.is_enabled() {
+            return;
+        }
+        self.shared.telemetry.emit(Event::Span {
+            trace: t.trace_id,
+            attempt: t.attempt as u32,
+            stage: "gateway_attempt",
+            key: Some(Arc::from(key)),
+            dur_us: took.as_micros().min(u64::MAX as u128) as u64,
+            abandoned,
+            detail: None,
+        });
     }
 
     /// Outcomes worth one try on a different replica: states of *that*
@@ -84,12 +155,22 @@ impl GatewayHandler {
         code.is_shed() || matches!(code, ErrorCode::QueueFull | ErrorCode::ShuttingDown)
     }
 
-    fn route(&self, key: &str, budget_ms: u32, image: Vec<f32>, arrived: Instant) -> Response {
+    fn route(
+        &self,
+        key: &str,
+        budget_ms: u32,
+        image: Vec<f32>,
+        arrived: Instant,
+        trace: Option<TraceCtx>,
+    ) -> Response {
         let deadline = (budget_ms > 0)
             .then(|| arrived + Duration::from_millis(budget_ms as u64));
         let attempts = if self.retry { 2 } else { 1 };
         let mut tried: Vec<u64> = Vec::new();
         let mut last_refusal: Option<Response> = None;
+        // Attempt ordinals continue from the client's (a gateway chained
+        // behind another gateway numbers its forwards after upstream's).
+        let mut attempt_no: u8 = trace.map_or(0, |t| t.attempt);
         for attempt in 0..attempts {
             // Budget-aware: forward only what remains; a request whose
             // budget burned down at the gateway is shed typed, exactly
@@ -122,7 +203,16 @@ impl GatewayHandler {
             };
             tried.push(id);
             let t0 = Instant::now();
-            let outcome = self.forward_hedged(id, &addr, key, remaining_ms, &image, &mut tried);
+            let outcome = self.forward_hedged(
+                id,
+                &addr,
+                key,
+                remaining_ms,
+                &image,
+                &mut tried,
+                trace,
+                &mut attempt_no,
+            );
             match outcome {
                 Ok(resp @ Response::Logits { .. }) => {
                     self.record_latency(t0.elapsed());
@@ -147,6 +237,10 @@ impl GatewayHandler {
                     with_replica(&self.shared, id, |r| {
                         r.consec_fail = r.consec_fail.saturating_add(1);
                         r.healthy = false;
+                        // Re-admission goes through the prober's clean
+                        // delta window, starting from a fresh baseline.
+                        r.probation = true;
+                        r.last_counts = None;
                     });
                     if attempt + 1 < attempts {
                         self.shared.retries.fetch_add(1, Ordering::Relaxed);
@@ -174,7 +268,13 @@ impl GatewayHandler {
 
     /// One forward, optionally shadowed by a tail hedge. The primary's
     /// outstanding slot was already taken by `pick`; this owns its
-    /// release (and the backup's) via [`OutstandingGuard`].
+    /// release (and the backup's) via [`OutstandingGuard`]. Each fired
+    /// forward takes the next attempt ordinal from `attempt_no` and
+    /// emits one `gateway_attempt` span when its outcome is decided —
+    /// a hedge loser's span is tagged `abandoned` the moment the winner
+    /// returns (its duration is time-until-abandonment; the detached
+    /// thread keeps running but nobody reads its reply).
+    #[allow(clippy::too_many_arguments)]
     fn forward_hedged(
         &self,
         primary_id: u64,
@@ -183,19 +283,27 @@ impl GatewayHandler {
         budget_ms: u32,
         image: &[f32],
         tried: &mut Vec<u64>,
+        trace: Option<TraceCtx>,
+        attempt_no: &mut u8,
     ) -> Result<Response, String> {
         let primary_guard = OutstandingGuard::new(self.shared.clone(), primary_id, key);
+        let p_trace = Self::next_attempt(trace, attempt_no);
         let Some(policy) = self.hedge else {
-            return forward_raw(
+            let t0 = Instant::now();
+            let result = forward_raw(
                 primary_addr,
                 key,
                 budget_ms,
                 image,
                 self.forward_timeout,
                 primary_guard,
+                p_trace,
             );
+            self.emit_attempt_span(p_trace, key, t0.elapsed(), false);
+            return result;
         };
         let (tx, rx) = mpsc::channel::<(bool, Result<Response, String>)>();
+        let p_start = Instant::now();
         spawn_forward(
             tx.clone(),
             false,
@@ -205,6 +313,7 @@ impl GatewayHandler {
             image.to_vec(),
             self.forward_timeout,
             primary_guard,
+            p_trace,
         );
         let delay = self.hedge_delay(policy);
         let first = match rx.recv_timeout(delay) {
@@ -215,17 +324,22 @@ impl GatewayHandler {
             }
         };
         if let Some((_, result)) = first {
+            self.emit_attempt_span(p_trace, key, p_start.elapsed(), false);
             return result;
         }
         // Primary is slow: fire the hedge at a different replica (if
         // one exists) and take the first answer. Prefer a success over
         // whichever error arrives first.
         let Some((backup_id, backup_addr)) = pick(&self.shared, key, tried) else {
-            return self.await_forward(&rx);
+            let result = self.await_forward(&rx);
+            self.emit_attempt_span(p_trace, key, p_start.elapsed(), false);
+            return result;
         };
         tried.push(backup_id);
         self.shared.hedges.fetch_add(1, Ordering::Relaxed);
         let backup_guard = OutstandingGuard::new(self.shared.clone(), backup_id, key);
+        let h_trace = Self::next_attempt(trace, attempt_no);
+        let h_start = Instant::now();
         spawn_forward(
             tx,
             true,
@@ -235,6 +349,7 @@ impl GatewayHandler {
             image.to_vec(),
             self.forward_timeout,
             backup_guard,
+            h_trace,
         );
         let mut first_error: Option<Result<Response, String>> = None;
         for _ in 0..2 {
@@ -242,6 +357,13 @@ impl GatewayHandler {
                 Ok((from_hedge, result)) => {
                     let won = matches!(result, Ok(Response::Logits { .. }));
                     if won {
+                        let (w_trace, w_took, l_trace, l_took) = if from_hedge {
+                            (h_trace, h_start.elapsed(), p_trace, p_start.elapsed())
+                        } else {
+                            (p_trace, p_start.elapsed(), h_trace, h_start.elapsed())
+                        };
+                        self.emit_attempt_span(w_trace, key, w_took, false);
+                        self.emit_attempt_span(l_trace, key, l_took, true);
                         if from_hedge {
                             self.shared.hedge_wins.fetch_add(1, Ordering::Relaxed);
                         }
@@ -251,6 +373,14 @@ impl GatewayHandler {
                         });
                         return result;
                     }
+                    // A completed (errored) attempt is not abandoned —
+                    // its outcome was read; record its span as-is.
+                    let (e_trace, e_took) = if from_hedge {
+                        (h_trace, h_start.elapsed())
+                    } else {
+                        (p_trace, p_start.elapsed())
+                    };
+                    self.emit_attempt_span(e_trace, key, e_took, false);
                     if first_error.is_none() {
                         first_error = Some(result);
                     }
@@ -422,6 +552,7 @@ impl Drop for OutstandingGuard {
 /// One wire forward: single dial (failover beats backoff), bounded
 /// read. Returns the replica's typed response verbatim, or the
 /// transport error as a string.
+#[allow(clippy::too_many_arguments)]
 fn forward_raw(
     addr: &str,
     key: &str,
@@ -429,11 +560,12 @@ fn forward_raw(
     image: &[f32],
     timeout: Duration,
     mut guard: OutstandingGuard,
+    trace: Option<TraceCtx>,
 ) -> Result<Response, String> {
     let mut client = WireClient::new(addr)
         .with_connect_attempts(1)
         .with_read_timeout(timeout);
-    let result = match client.infer_budget_ms(key, image, budget_ms) {
+    let result = match client.infer_traced(key, image, budget_ms, trace) {
         Ok(WireResponse::Infer(inf)) => Ok(Response::Logits {
             class: inf.class as u32,
             latency_us: inf.latency_us,
@@ -462,11 +594,12 @@ fn spawn_forward(
     image: Vec<f32>,
     timeout: Duration,
     guard: OutstandingGuard,
+    trace: Option<TraceCtx>,
 ) {
     let spawned = std::thread::Builder::new()
         .name("gw-forward".into())
         .spawn(move || {
-            let result = forward_raw(&addr, &key, budget_ms, &image, timeout, guard);
+            let result = forward_raw(&addr, &key, budget_ms, &image, timeout, guard, trace);
             let _ = tx.send((from_hedge, result));
         });
     if spawned.is_err() {

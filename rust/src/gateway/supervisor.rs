@@ -234,6 +234,7 @@ fn mark_dead(shared: &GatewayShared, id: u64) {
     with_replica(shared, id, |r| {
         r.state = ReplicaState::Dead;
         r.healthy = false;
+        r.probation = true;
         r.addr = None;
         r.pid = None;
         r.last_counts = None;

@@ -34,7 +34,7 @@
 //! | [`server`] | — | wire serving front-end: versioned length-prefixed TCP protocol with v2 correlation-id pipelining + streaming batches (`server::proto`), async poll(2)-based tier (`server::aio`, one poller + conn-worker pool, completion callbacks into the engine) with an HTTP/1.1 + Prometheus gateway (`server::http`), deprecated blocking tier behind `--legacy-threads`, `WireClient`/`PipelinedClient`/`HttpClient` + `strum loadgen` open-loop load generator, fault-injection hooks (`server::fault`) for chaos tests |
 //! | [`gateway`] | — | replica-fleet tier: supervisor (spawn/scrape/restart with capped jittered backoff), wire-metrics health prober, shed-aware router (least-outstanding, one bounded retry, tail hedging), rolling deploys with probation + auto-rollback |
 //! | [`report`] | §VII | regenerators for Table I and Figs. 10–13 + ablations |
-//! | [`telemetry`] | — | observability: schema-versioned JSONL event sink (non-blocking, rotating), versioned bench run-manifests with FNV-1a checksums, `strum bench-diff` regression gate |
+//! | [`telemetry`] | — | observability: schema-versioned JSONL event sink (non-blocking, rotating), end-to-end request tracing (64-bit trace ids on the v2 wire, per-stage `span` events, 1-in-N per-layer profiling), versioned bench run-manifests with FNV-1a checksums, `strum bench-diff` regression gate + `--history` trajectory, `strum tail` trace/rate query CLI |
 //! | [`util`] | — | in-tree substrates: JSON, PRNG, stats, CLI, threadpool, bench harness, mmap zero-copy banks, worker→core affinity |
 //!
 //! ## The `Backend` contract
@@ -66,6 +66,24 @@
 //! ([`artifact::ArtifactCache`]) that rebuilds transparently on format,
 //! encoder, or weight mismatch — cold-starting a variant is a zero-copy
 //! bank bind, not a re-quantization or even a decode.
+//!
+//! ## Observability
+//!
+//! Every serving tier shares one telemetry spine ([`telemetry`]): a
+//! non-blocking JSONL sink stamps a `run_id` on schema-versioned events,
+//! and a 64-bit trace id — minted by the gateway or supplied by the
+//! client (`X-Strum-Trace`, `strum loadgen --trace`) — rides an optional
+//! tail on v2 wire frames through retries and hedges (distinct attempt
+//! ordinals; hedge losers tagged `abandoned`). Traced requests emit
+//! `span` events at each pipeline stage (gateway attempt → admission →
+//! queue wait → batch formation → execute → reply write), with per-layer
+//! execute profiling sampled 1-in-N via `EngineOptions::trace_sample` so
+//! untraced traffic never pays for it. Latency distributions aggregate
+//! into lock-free per-worker log2 histograms exported as Prometheus
+//! `_bucket`/`_sum`/`_count` families and windowed snapshot deltas.
+//! `strum tail DIR --trace ID` reconstructs a request's waterfall from
+//! the logs; `strum bench-diff` gates regressions across manifest-
+//! checksummed bench runs.
 
 pub mod artifact;
 pub mod backend;

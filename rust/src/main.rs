@@ -47,7 +47,9 @@ use strum_dpu::sim::config::SimConfig;
 use strum_dpu::sim::driver::simulate_network;
 use strum_dpu::sim::SimMode;
 use strum_dpu::telemetry::{
-    bench_dir, diff_manifests, render_table, RunManifest, TelemetryConfig, TelemetrySink,
+    bench_dir, diff_manifests, fmt_trace, history_manifests, parse_trace, render_history,
+    render_rates, render_table, render_waterfall, scan_dir, RunManifest, TailFilter,
+    TelemetryConfig, TelemetrySink, TraceCtx,
 };
 use strum_dpu::util::cli::Args;
 use strum_dpu::util::json::Json;
@@ -116,6 +118,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "gateway" => cmd_gateway(args),
         "loadgen" => cmd_loadgen(args),
         "bench-diff" => cmd_bench_diff(args),
+        "tail" => cmd_tail(args),
         "selfcheck" => cmd_selfcheck(args),
         _ => {
             print_help();
@@ -127,7 +130,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "strum — StruM structured mixed precision DPU coordinator\n\
-         usage: strum <quantize|compile|cache-gc|eval|sim|hw|report|serve|gateway|loadgen|bench-diff|selfcheck> [flags]\n\
+         usage: strum <quantize|compile|cache-gc|eval|sim|hw|report|serve|gateway|loadgen|bench-diff|tail|selfcheck> [flags]\n\
          common: --artifacts DIR --net NAME --method {{baseline|sparsity|dliq-qN|mip2q-LN}} --p F\n\
          compile: strum compile --net N [--all-nets] [--variants base,dliq,mip2q] [--out FILE]\n\
                  quantize + encode once and write versioned .strumc artifact(s) into\n\
@@ -173,6 +176,10 @@ fn print_help() {
                  rotating telemetry-<run_id>.NNNN.jsonl segments under DIR; the\n\
                  per-event cost on the request path is one bounded-channel push.\n\
                  --telemetry-interval-s N (default 5) paces the gauge snapshots.\n\
+                 --trace-sample N profiles per-layer execute spans for every Nth\n\
+                 traced request (trace_id mod N == 0); 0 (default) keeps the layer\n\
+                 hooks off. Stage spans (door/queue/batch/execute/reply) flow for\n\
+                 every traced request when telemetry is on.\n\
                  --artifact FILE additionally registers the compiled .strumc net\n\
                  (the rolling-deploy serve path); --fault-plan SPEC (or the\n\
                  STRUM_FAULT_PLAN env) arms deliberate misbehaviour for chaos\n\
@@ -200,6 +207,11 @@ fn print_help() {
                  [--rate 500] [--concurrency 4] [--deadline-ms N] [--variants k1,k2]\n\
                  [--proto {{binary|http}}] [--connections N] [--target gateway]\n\
                  [--out BENCH_wire_serve.json] [--bench-dir DIR] [--seed N] [--img N]\n\
+                 [--trace HEX]\n\
+                 --trace HEX traces every request: request i carries trace id\n\
+                 HEX+i on the v2 wire frames (binary) or as an X-Strum-Trace\n\
+                 header (http), so `strum tail DIR --trace <id>` reconstructs\n\
+                 any request's waterfall from the server's --telemetry-out log.\n\
                  --proto http drives the server's HTTP tier (--addr names the\n\
                  --http-listen port) with the same Poisson core; the output JSON\n\
                  records which proto ran. --connections N holds N extra idle\n\
@@ -221,7 +233,22 @@ fn print_help() {
                  (throughput up = good, latency percentiles down = good, shed counts\n\
                  gate only against a nonzero base). Prints a per-metric table and\n\
                  exits nonzero on any regression past the threshold or any\n\
-                 checksum/integrity failure — the CI regression gate."
+                 checksum/integrity failure — the CI regression gate.\n\
+                 strum bench-diff --history DIR1 DIR2 [DIR3 ...] instead renders a\n\
+                 trajectory table across N runs (each arg a manifest file or a dir\n\
+                 holding MANIFEST_*.json), checksum-verified and ordered by manifest\n\
+                 timestamp, with a direction-adjusted drift column (last vs first).\n\
+                 History never gates on drift, only on integrity failures.\n\
+         tail:   strum tail DIR [--run-id R] [--trace HEX] [--event TAG]\n\
+                 [--variant K] [--rates [--window-s 1]] [--limit N]\n\
+                 query the JSONL telemetry segments under DIR (as written by\n\
+                 --telemetry-out): every line is schema-validated, filters AND\n\
+                 together, and output is one line per event (newest last).\n\
+                 --trace HEX instead reconstructs that request's waterfall —\n\
+                 gateway attempts (hedge losers tagged abandoned), queue wait,\n\
+                 batch, execute, per-layer profile — with a layers-vs-execute\n\
+                 cross-check. --rates buckets request outcomes into --window-s\n\
+                 second windows and prints per-window done/shed/rejected + done/s."
     );
 }
 
@@ -756,6 +783,7 @@ fn build_fleet(args: &Args) -> Result<Fleet> {
         telemetry_interval: (gauge_every > 0.0)
             .then(|| Duration::from_secs_f64(gauge_every)),
         pin_workers: args.flag("pin-workers"),
+        trace_sample: args.usize("trace-sample", 0) as u32,
     }));
     let cache = ArtifactCache::under(&dir);
     let mut handles = Vec::new();
@@ -1030,7 +1058,20 @@ fn cmd_gateway(args: &Args) -> Result<()> {
             "--listen".into(),
             "127.0.0.1:0".into(),
         ];
-        for flag in ["variants", "net", "workers", "queue-depth", "max-wait-ms", "synth-seed"] {
+        // telemetry-out rides along so replica engines log spans into
+        // the same directory as the gateway (distinct run_ids keep the
+        // segments apart; `strum tail` scans them together, so one
+        // traced request's gateway + engine spans land in one query).
+        for flag in [
+            "variants",
+            "net",
+            "workers",
+            "queue-depth",
+            "max-wait-ms",
+            "synth-seed",
+            "telemetry-out",
+            "trace-sample",
+        ] {
             if let Some(v) = args.opt_str(flag) {
                 cargs.push(format!("--{}", flag));
                 cargs.push(v);
@@ -1271,6 +1312,14 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     };
     let out = dir.join(args.str("out", default_out));
     let seed = args.usize("seed", 7) as u64;
+    // --trace HEX: request i carries trace id HEX+i on the wire, so any
+    // single request's waterfall is addressable in `strum tail --trace`.
+    let trace_base: Option<u64> = match args.opt_str("trace") {
+        Some(s) => Some(
+            parse_trace(&s).ok_or_else(|| anyhow::anyhow!("bad --trace '{}' (want hex)", s))?,
+        ),
+        None => None,
+    };
 
     // Discover the fleet from the server's metrics op: variant keys and
     // the image geometry each expects.
@@ -1398,6 +1447,13 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         concurrency,
         deadline_ms
     );
+    if let Some(base) = trace_base {
+        println!(
+            "tracing: ids {}..{} (base + request index)",
+            fmt_trace(base),
+            fmt_trace(base.wrapping_add(n as u64 - 1))
+        );
+    }
 
     #[derive(Default)]
     struct Outcome {
@@ -1447,16 +1503,24 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                         std::thread::sleep(wait);
                     }
                     let sent = Instant::now();
+                    let trace_id = trace_base.map(|b| b.wrapping_add(idx as u64));
                     let verdict = match &mut client {
-                        LoadConn::Bin(c) => match c.infer_budget_ms(key, &image, deadline_ms) {
-                            Ok(WireResponse::Infer(_)) => Verdict::Done,
-                            Ok(WireResponse::Error { code, .. }) => Verdict::Refused {
-                                name: code.name().to_string(),
-                                shed: code.is_shed(),
-                            },
-                            Err(_) => Verdict::Transport,
-                        },
-                        LoadConn::Http(c) => match c.infer(key, &image, deadline_ms) {
+                        LoadConn::Bin(c) => {
+                            let ctx = trace_id.map(|t| TraceCtx {
+                                trace_id: t,
+                                attempt: 0,
+                            });
+                            match c.infer_traced(key, &image, deadline_ms, ctx) {
+                                Ok(WireResponse::Infer(_)) => Verdict::Done,
+                                Ok(WireResponse::Error { code, .. }) => Verdict::Refused {
+                                    name: code.name().to_string(),
+                                    shed: code.is_shed(),
+                                },
+                                Err(_) => Verdict::Transport,
+                            }
+                        }
+                        LoadConn::Http(c) => match c.infer_traced(key, &image, deadline_ms, trace_id)
+                        {
                             Ok((200, _)) => Verdict::Done,
                             Ok((_, body)) => {
                                 // Non-200 bodies carry the typed error
@@ -1677,7 +1741,54 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
 /// every shared numeric metric with direction-aware thresholds. Exits
 /// nonzero (via the returned error) on regression or integrity failure,
 /// which is what the CI bench gate keys off.
+/// Resolves one `--history` argument to manifest paths: a file is taken
+/// as-is, a directory contributes every `MANIFEST_*.json` inside it.
+fn manifests_under(arg: &str) -> Result<Vec<PathBuf>> {
+    let path = PathBuf::from(arg);
+    if !path.is_dir() {
+        return Ok(vec![path]);
+    }
+    let mut found: Vec<PathBuf> = std::fs::read_dir(&path)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("MANIFEST_") && n.ends_with(".json"))
+                .unwrap_or(false)
+        })
+        .collect();
+    found.sort();
+    anyhow::ensure!(!found.is_empty(), "no MANIFEST_*.json under {}", arg);
+    Ok(found)
+}
+
 fn cmd_bench_diff(args: &Args) -> Result<()> {
+    // The flag parser reads `--history DIR1 DIR2` as history=DIR1 with
+    // DIR2 positional, so the option value (when not a bare boolean) is
+    // the first run and the positionals are the rest.
+    let history_val = args.opt_str("history");
+    if args.flag("history") || history_val.is_some() {
+        let mut raw: Vec<String> = Vec::new();
+        if let Some(v) = history_val {
+            if !matches!(v.as_str(), "true" | "1" | "yes") {
+                raw.push(v);
+            }
+        }
+        raw.extend(args.positional.iter().cloned());
+        let mut paths: Vec<PathBuf> = Vec::new();
+        for arg in &raw {
+            paths.extend(manifests_under(arg)?);
+        }
+        let report = history_manifests(&paths)?;
+        print!("{}", render_history(&report));
+        anyhow::ensure!(
+            report.checksum_failures.is_empty(),
+            "bench-diff --history: {} integrity failure(s)",
+            report.checksum_failures.len()
+        );
+        return Ok(());
+    }
     let base = args
         .positional
         .first()
@@ -1699,6 +1810,74 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
         report.regressions().count(),
         threshold,
         report.checksum_failures.len()
+    );
+    Ok(())
+}
+
+fn cmd_tail(args: &Args) -> Result<()> {
+    let dir = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: strum tail DIR [--run-id R] [--trace HEX] [--event TAG] [--variant K] [--rates [--window-s N]] [--limit N]"))?;
+    let trace = match args.opt_str("trace") {
+        Some(s) => Some(
+            parse_trace(&s).ok_or_else(|| anyhow::anyhow!("bad --trace '{}' (want hex)", s))?,
+        ),
+        None => None,
+    };
+    let filter = TailFilter {
+        run_id: args.opt_str("run-id"),
+        trace,
+        event: args.opt_str("event"),
+        variant: args.opt_str("variant"),
+    };
+    let scan = scan_dir(std::path::Path::new(dir), &filter)?;
+    anyhow::ensure!(
+        scan.files > 0,
+        "no telemetry-*.jsonl segments under {}",
+        dir
+    );
+    if let Some(t) = trace {
+        print!("{}", render_waterfall(&scan.lines, t));
+    } else if args.flag("rates") {
+        let window_s = args.usize("window-s", 1) as u64;
+        print!("{}", render_rates(&scan.lines, window_s));
+    } else {
+        let limit = args.usize("limit", 0);
+        let start = if limit > 0 && scan.lines.len() > limit {
+            scan.lines.len() - limit
+        } else {
+            0
+        };
+        for l in &scan.lines[start..] {
+            let mut row = format!("{:>13}  {:<18}", l.ts_ms, l.tag);
+            if let Some(k) = &l.key {
+                row.push_str(&format!("  key={}", k));
+            }
+            if let Some(t) = l.trace {
+                row.push_str(&format!("  trace={}", fmt_trace(t)));
+            }
+            if let Some(s) = &l.stage {
+                row.push_str(&format!("  stage={}  attempt={}", s, l.attempt));
+                if l.dur_us > 0 {
+                    row.push_str(&format!("  dur_us={}", l.dur_us));
+                }
+                if l.abandoned {
+                    row.push_str("  abandoned");
+                }
+                if let Some(d) = &l.detail {
+                    row.push_str(&format!("  detail={}", d));
+                }
+            }
+            println!("{}", row);
+        }
+    }
+    eprintln!(
+        "tail: {} file(s), {} line(s) scanned, {} matched, {} invalid",
+        scan.files,
+        scan.total_lines,
+        scan.lines.len(),
+        scan.invalid_lines
     );
     Ok(())
 }

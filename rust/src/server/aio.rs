@@ -66,7 +66,7 @@ use super::http::{self, HttpParse};
 use super::proto::{self, ErrorCode, FramedRequest, Request, Response};
 use super::{ServerStats, ServerStatsSnapshot, WireHandler, WireServerOptions};
 use crate::coordinator::{Engine, InferReply, ReplyCallback, ReplyError, SubmitError};
-use crate::telemetry::{Event, TelemetrySink};
+use crate::telemetry::{Event, TelemetrySink, TraceCtx};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -143,7 +143,14 @@ pub type DoneFn = Box<dyn FnOnce(Response) + Send + 'static>;
 /// delivered to `done` whenever it is ready (possibly on another
 /// thread, possibly before `handle_async` returns).
 pub trait AsyncWireHandler: Send + Sync + 'static {
-    fn handle_async(&self, req: Request, arrived: Instant, stats: &ServerStats, done: DoneFn);
+    fn handle_async(
+        &self,
+        req: Request,
+        arrived: Instant,
+        stats: &ServerStats,
+        trace: Option<TraceCtx>,
+        done: DoneFn,
+    );
 }
 
 /// The two ways a handler can be mounted: completion-native (the
@@ -156,10 +163,17 @@ enum HandlerKind {
 }
 
 impl HandlerKind {
-    fn call(&self, req: Request, arrived: Instant, stats: &ServerStats, done: DoneFn) {
+    fn call(
+        &self,
+        req: Request,
+        arrived: Instant,
+        stats: &ServerStats,
+        trace: Option<TraceCtx>,
+        done: DoneFn,
+    ) {
         match self {
-            HandlerKind::Async(h) => h.handle_async(req, arrived, stats, done),
-            HandlerKind::Blocking(h) => done(h.handle(req, arrived, stats)),
+            HandlerKind::Async(h) => h.handle_async(req, arrived, stats, trace, done),
+            HandlerKind::Blocking(h) => done(h.handle(req, arrived, stats, trace)),
         }
     }
 }
@@ -170,7 +184,14 @@ impl HandlerKind {
 /// [`Engine::submit_callback`] instead of parking a thread on a
 /// `Ticket`.
 impl AsyncWireHandler for Engine {
-    fn handle_async(&self, req: Request, arrived: Instant, stats: &ServerStats, done: DoneFn) {
+    fn handle_async(
+        &self,
+        req: Request,
+        arrived: Instant,
+        stats: &ServerStats,
+        trace: Option<TraceCtx>,
+        done: DoneFn,
+    ) {
         match req {
             Request::Metrics => {
                 done(Response::MetricsJson(
@@ -199,7 +220,8 @@ impl AsyncWireHandler for Engine {
                 }
                 let cb: ReplyCallback =
                     Box::new(move |res| done(reply_to_response(res, deadline)));
-                if let Err((e, cb)) = self.submit_callback(&key, image, deadline, cb) {
+                if let Err((e, cb)) = self.submit_callback_traced(&key, image, deadline, trace, cb)
+                {
                     // Refused at submit: feed the typed error through the
                     // same mapper the success path uses.
                     cb(Err(anyhow::Error::new(e)));
@@ -284,6 +306,7 @@ enum WorkItem {
         seq: u64,
         req: Request,
         arrived: Instant,
+        trace: Option<TraceCtx>,
         mode: EncodeMode,
     },
     /// A v2 streaming batch: fans out to one engine submit per image,
@@ -297,6 +320,7 @@ enum WorkItem {
         px: usize,
         images: Vec<f32>,
         arrived: Instant,
+        trace: Option<TraceCtx>,
     },
 }
 
@@ -538,8 +562,9 @@ fn dispatch_worker(sh: &Arc<AioShared>) {
                 seq,
                 req,
                 arrived,
+                trace,
                 mode,
-            } => run_one(sh, conn, seq, req, arrived, mode),
+            } => run_one(sh, conn, seq, req, arrived, trace, mode),
             WorkItem::Batch {
                 conn,
                 seq,
@@ -549,6 +574,7 @@ fn dispatch_worker(sh: &Arc<AioShared>) {
                 px,
                 images,
                 arrived,
+                trace,
             } => run_batch(
                 sh,
                 conn,
@@ -559,6 +585,7 @@ fn dispatch_worker(sh: &Arc<AioShared>) {
                 px,
                 images,
                 arrived,
+                trace,
             ),
         }
     }
@@ -587,7 +614,15 @@ fn apply_fault(sh: &Arc<AioShared>, action: &super::fault::FaultAction, conn: u6
     false
 }
 
-fn run_one(sh: &Arc<AioShared>, conn: u64, seq: u64, req: Request, arrived: Instant, mode: EncodeMode) {
+fn run_one(
+    sh: &Arc<AioShared>,
+    conn: u64,
+    seq: u64,
+    req: Request,
+    arrived: Instant,
+    trace: Option<TraceCtx>,
+    mode: EncodeMode,
+) {
     // Fault injection arms on infer ops only — metrics probes stay
     // truthful so health checkers see the misbehaving replica (parity
     // with the blocking tier).
@@ -613,7 +648,7 @@ fn run_one(sh: &Arc<AioShared>, conn: u64, seq: u64, req: Request, arrived: Inst
             drop_now: false,
         });
     });
-    sh.handler.call(req, arrived, &sh.stats, done);
+    sh.handler.call(req, arrived, &sh.stats, trace, done);
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -627,6 +662,7 @@ fn run_batch(
     px: usize,
     images: Vec<f32>,
     arrived: Instant,
+    trace: Option<TraceCtx>,
 ) {
     let count = images.len() / px.max(1);
     // The decoder rejects zero-image batches, but never trust that from
@@ -695,7 +731,9 @@ fn run_batch(
                 });
             }
         });
-        sh.handler.call(req, arrived, &sh.stats, done);
+        // Every image of a traced streaming batch shares the frame's
+        // trace context — the spans distinguish them by batch row.
+        sh.handler.call(req, arrived, &sh.stats, trace, done);
     }
 }
 
@@ -1161,13 +1199,15 @@ fn parse_input(sh: &Arc<AioShared>, id: u64, conn: &mut Conn) {
                                 seq,
                                 req,
                                 arrived,
+                                trace: None,
                                 mode: EncodeMode::V1,
                             },
-                            FramedRequest::V2 { corr_id, req } => WorkItem::One {
+                            FramedRequest::V2 { corr_id, req, trace } => WorkItem::One {
                                 conn: id,
                                 seq,
                                 req,
                                 arrived,
+                                trace,
                                 mode: EncodeMode::V2 { corr_id },
                             },
                             FramedRequest::V2Batch {
@@ -1177,6 +1217,7 @@ fn parse_input(sh: &Arc<AioShared>, id: u64, conn: &mut Conn) {
                                 count: _,
                                 px,
                                 images,
+                                trace,
                             } => WorkItem::Batch {
                                 conn: id,
                                 seq,
@@ -1186,6 +1227,7 @@ fn parse_input(sh: &Arc<AioShared>, id: u64, conn: &mut Conn) {
                                 px,
                                 images,
                                 arrived,
+                                trace,
                             },
                         };
                         sh.push_work(item);
@@ -1325,11 +1367,18 @@ fn route_http(sh: &Arc<AioShared>, id: u64, conn: &mut Conn, req: http::HttpRequ
         HttpKind::MetricsJson | HttpKind::Prometheus => Request::Metrics,
     };
     let seq = begin_request(sh, conn);
+    // An `X-Strum-Trace` header enters the span pipeline exactly like a
+    // v2 trace tail; HTTP carries no retry machinery, so attempt is 0.
+    let trace = req.trace.map(|trace_id| TraceCtx {
+        trace_id,
+        attempt: 0,
+    });
     sh.push_work(WorkItem::One {
         conn: id,
         seq,
         req: wire_req,
         arrived,
+        trace,
         mode: EncodeMode::Http {
             kind,
             keep_alive,

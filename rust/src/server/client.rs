@@ -24,7 +24,7 @@
 //! A read **timeout** is terminal and never retried — the server may
 //! still be executing the request.
 
-use super::proto::{self, ErrorCode, ProtoError, Request, Response};
+use super::proto::{self, ErrorCode, ProtoError, Request, Response, TraceCtx};
 use crate::util::prng::Rng;
 use std::io::{self, Read, Write};
 use std::net::TcpStream;
@@ -220,6 +220,14 @@ impl WireClient {
     }
 
     fn call(&mut self, payload: &[u8]) -> crate::Result<Response> {
+        self.call_with(payload, None)
+    }
+
+    /// One request/response exchange. `v2_corr` switches the reply
+    /// decoder to the framed (v2) form and checks the echoed correlation
+    /// id — this client keeps one request in flight, so a mismatch is a
+    /// protocol error, not an out-of-order reply.
+    fn call_with(&mut self, payload: &[u8], v2_corr: Option<u32>) -> crate::Result<Response> {
         let mut dials = 0u32;
         for attempt in 0..2u8 {
             let reused = self.stream.is_some();
@@ -232,9 +240,21 @@ impl WireClient {
                     timed_out = true;
                     true
                 })?;
-                match frame {
-                    Some(p) => proto::decode_response(&p),
-                    None => Err(ProtoError::Truncated { what: "response" }),
+                let p = match frame {
+                    Some(p) => p,
+                    None => return Err(ProtoError::Truncated { what: "response" }),
+                };
+                match v2_corr {
+                    None => proto::decode_response(&p),
+                    Some(want) => match proto::decode_response_framed(&p)? {
+                        proto::FramedResponse::V2 { corr_id, resp } if corr_id == want => Ok(resp),
+                        proto::FramedResponse::V2 { corr_id, .. } => Err(ProtoError::Corrupt(
+                            format!("correlation id {} answers request {}", corr_id, want),
+                        )),
+                        _ => Err(ProtoError::Corrupt(
+                            "expected a single v2 reply".into(),
+                        )),
+                    },
                 }
             })();
             match result {
@@ -296,8 +316,29 @@ impl WireClient {
         image: &[f32],
         budget_ms: u32,
     ) -> crate::Result<WireResponse> {
-        let payload = proto::encode_infer(key, budget_ms, image);
-        match self.call(&payload)? {
+        self.infer_traced(key, image, budget_ms, None)
+    }
+
+    /// [`WireClient::infer_budget_ms`] plus an optional trace context.
+    /// Untraced calls stay on the v1 frame; a traced call rides a v2
+    /// frame (v1 has no trace tail). The async tier accepts v2 frames
+    /// on any connection; the legacy blocking tier is v1-only and
+    /// answers a traced call with a typed `BadFrame`.
+    pub fn infer_traced(
+        &mut self,
+        key: &str,
+        image: &[f32],
+        budget_ms: u32,
+        trace: Option<TraceCtx>,
+    ) -> crate::Result<WireResponse> {
+        let (payload, corr) = match trace {
+            None => (proto::encode_infer(key, budget_ms, image), None),
+            Some(t) => (
+                proto::encode_infer_v2_traced(1, key, budget_ms, image, t),
+                Some(1),
+            ),
+        };
+        match self.call_with(&payload, corr)? {
             Response::Logits {
                 class,
                 latency_us,
@@ -374,11 +415,24 @@ impl PipelinedClient {
     /// id. Replies arrive via [`recv`](PipelinedClient::recv) in
     /// whatever order the server finishes them.
     pub fn submit(&mut self, key: &str, image: &[f32], budget_ms: u32) -> crate::Result<u32> {
+        self.submit_traced(key, image, budget_ms, None)
+    }
+
+    /// [`submit`](PipelinedClient::submit) with an optional trace tail
+    /// on the frame.
+    pub fn submit_traced(
+        &mut self,
+        key: &str,
+        image: &[f32],
+        budget_ms: u32,
+        trace: Option<TraceCtx>,
+    ) -> crate::Result<u32> {
         let corr = self.fresh_corr();
-        proto::write_frame(
-            &mut self.stream,
-            &proto::encode_infer_v2(corr, key, budget_ms, image),
-        )?;
+        let payload = match trace {
+            None => proto::encode_infer_v2(corr, key, budget_ms, image),
+            Some(t) => proto::encode_infer_v2_traced(corr, key, budget_ms, image, t),
+        };
+        proto::write_frame(&mut self.stream, &payload)?;
         Ok(corr)
     }
 
@@ -501,6 +555,19 @@ impl HttpClient {
         image: &[f32],
         deadline_ms: u32,
     ) -> crate::Result<(u16, String)> {
+        self.infer_traced(key, image, deadline_ms, None)
+    }
+
+    /// `POST /v1/infer` carrying an `X-Strum-Trace` header when `trace`
+    /// is set, so the gateway/server stamps the request's spans with
+    /// the caller's trace id instead of minting one.
+    pub fn infer_traced(
+        &mut self,
+        key: &str,
+        image: &[f32],
+        deadline_ms: u32,
+        trace: Option<u64>,
+    ) -> crate::Result<(u16, String)> {
         use crate::util::json::Json;
         let body = Json::obj(vec![
             ("variant", Json::str(key)),
@@ -511,7 +578,15 @@ impl HttpClient {
             ),
         ])
         .to_string();
-        self.request("POST", "/v1/infer", Some(&body))
+        let extra: Vec<(String, String)> = trace
+            .map(|t| {
+                vec![(
+                    "X-Strum-Trace".to_string(),
+                    crate::telemetry::fmt_trace(t),
+                )]
+            })
+            .unwrap_or_default();
+        self.request_ext("POST", "/v1/infer", Some(&body), &extra)
     }
 
     /// Any request against the cached connection; returns
@@ -523,9 +598,20 @@ impl HttpClient {
         path: &str,
         body: Option<&str>,
     ) -> crate::Result<(u16, String)> {
+        self.request_ext(method, path, body, &[])
+    }
+
+    /// [`Self::request`] with extra headers appended to the fixed set.
+    pub fn request_ext(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        extra_headers: &[(String, String)],
+    ) -> crate::Result<(u16, String)> {
         for attempt in 0..2u8 {
             let reused = self.stream.is_some();
-            match self.request_once(method, path, body) {
+            match self.request_once(method, path, body, extra_headers) {
                 Ok(out) => return Ok(out),
                 Err(e) => {
                     self.stream = None;
@@ -539,7 +625,13 @@ impl HttpClient {
         unreachable!("retry loop returns on the second attempt");
     }
 
-    fn request_once(&mut self, method: &str, path: &str, body: Option<&str>) -> io::Result<(u16, String)> {
+    fn request_once(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        extra_headers: &[(String, String)],
+    ) -> io::Result<(u16, String)> {
         if self.stream.is_none() {
             let s = TcpStream::connect(&self.addr)?;
             let _ = s.set_nodelay(true);
@@ -550,13 +642,17 @@ impl HttpClient {
         }
         let stream = self.stream.as_mut().expect("just connected");
         let body = body.unwrap_or("");
-        let head = format!(
-            "{} {} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+        let mut head = format!(
+            "{} {} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
             method,
             path,
             self.addr,
             body.len(),
         );
+        for (k, v) in extra_headers {
+            head.push_str(&format!("{}: {}\r\n", k, v));
+        }
+        head.push_str("\r\n");
         stream.write_all(head.as_bytes())?;
         stream.write_all(body.as_bytes())?;
         stream.flush()?;

@@ -36,6 +36,7 @@ use super::fault::FaultState;
 use super::proto::{self, ErrorCode, ProtoError, Request, Response};
 use super::{ServerStats, WireHandler};
 use crate::coordinator::{Engine, ReplyError};
+use crate::telemetry::TraceCtx;
 use std::io;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -147,7 +148,9 @@ pub(crate) fn serve_conn(
         if matches!(req, Request::Infer { .. }) {
             stats.record_request();
         }
-        let resp = handler.handle(req, arrived, stats);
+        // The legacy tier speaks v1 only, and v1 frames never carry a
+        // trace tail — requests through this loop are always untraced.
+        let resp = handler.handle(req, arrived, stats, None);
         if let Some(d) = action.delay {
             std::thread::sleep(d);
         }
@@ -175,19 +178,26 @@ pub(crate) fn serve_conn(
 /// The engine is the canonical wire handler: requests are answered by
 /// local inference through the multi-variant queue.
 impl WireHandler for Engine {
-    fn handle(&self, req: Request, arrived: Instant, stats: &ServerStats) -> Response {
+    fn handle(
+        &self,
+        req: Request,
+        arrived: Instant,
+        stats: &ServerStats,
+        trace: Option<TraceCtx>,
+    ) -> Response {
         match req {
             Request::Metrics => Response::MetricsJson(self.metrics().to_json().to_string_pretty()),
             Request::Infer {
                 key,
                 deadline_budget_ms,
                 image,
-            } => handle_infer(self, stats, &key, image, deadline_budget_ms, arrived),
+            } => handle_infer(self, stats, &key, image, deadline_budget_ms, arrived, trace),
         }
     }
 }
 
 /// One inference: door-shed check → submit with deadline → bounded wait.
+#[allow(clippy::too_many_arguments)]
 fn handle_infer(
     engine: &Engine,
     stats: &ServerStats,
@@ -195,6 +205,7 @@ fn handle_infer(
     image: Vec<f32>,
     deadline_budget_ms: u32,
     arrived: Instant,
+    trace: Option<TraceCtx>,
 ) -> Response {
     let deadline =
         (deadline_budget_ms > 0).then(|| arrived + Duration::from_millis(deadline_budget_ms as u64));
@@ -216,7 +227,7 @@ fn handle_infer(
     // a server-level presubmit shed — the engine already records it in
     // the variant's shed metric, and counting both layers would tally
     // the same request twice.)
-    let ticket = match engine.submit_deadline(key, image, deadline) {
+    let ticket = match engine.submit_traced(key, image, deadline, trace) {
         Ok(t) => t,
         Err(e) => {
             return Response::Error {

@@ -23,6 +23,8 @@
 //! (see ROADMAP follow-ups).
 
 use super::proto::{ErrorCode, Response};
+use crate::coordinator::{bucket_le_us, HistogramSnapshot};
+use crate::telemetry::parse_trace;
 use crate::util::json::Json;
 
 /// Cap on the request line + headers (terminator included).
@@ -41,6 +43,11 @@ pub struct HttpRequest {
     pub path: String,
     /// Whether the connection should stay open after the response.
     pub keep_alive: bool,
+    /// Trace id from an `X-Strum-Trace` header (hex, as printed by
+    /// [`crate::telemetry::fmt_trace`]); `None` = untraced. A present
+    /// but unparseable value is a `400`, never a silently dropped
+    /// trace.
+    pub trace: Option<u64>,
     pub body: Vec<u8>,
 }
 
@@ -90,6 +97,7 @@ pub fn try_parse(buf: &[u8]) -> HttpParse {
     // HTTP/1.1 defaults to keep-alive; HTTP/1.0 to close.
     let mut keep_alive = version != "HTTP/1.0";
     let mut content_length = 0usize;
+    let mut trace = None;
     for line in lines {
         if line.is_empty() {
             continue;
@@ -121,6 +129,12 @@ pub fn try_parse(buf: &[u8]) -> HttpParse {
                     keep_alive = true;
                 }
             }
+            "x-strum-trace" => match parse_trace(value) {
+                Some(t) => trace = Some(t),
+                None => {
+                    return HttpParse::Bad(format!("bad x-strum-trace value {:?}", value));
+                }
+            },
             _ => {}
         }
     }
@@ -135,6 +149,7 @@ pub fn try_parse(buf: &[u8]) -> HttpParse {
             method,
             path,
             keep_alive,
+            trace,
             body: buf[body_start..total].to_vec(),
         },
         consumed: total,
@@ -305,6 +320,39 @@ fn num(v: Option<&Json>) -> f64 {
     v.and_then(|j| j.as_f64()).unwrap_or(0.0)
 }
 
+/// Emits one histogram series: cumulative `_bucket{le=...}` lines (the
+/// snapshot stores raw per-bucket counts), then `_sum` (seconds) and
+/// `_count`. `labels` is either empty or `key="v",` — the trailing
+/// comma composes with the `le` label.
+fn push_histogram(out: &mut String, name: &str, labels: &str, h: &HistogramSnapshot) {
+    let mut cum = 0u64;
+    for (i, &n) in h.buckets.iter().enumerate() {
+        cum += n;
+        let le = match bucket_le_us(i) {
+            Some(us) => format!("{}", us as f64 / 1e6),
+            None => "+Inf".to_string(),
+        };
+        out.push_str(&format!(
+            "{}_bucket{{{}le=\"{}\"}} {}\n",
+            name, labels, le, cum
+        ));
+    }
+    let plain = labels.trim_end_matches(',');
+    let wrap = |s: &str| {
+        if plain.is_empty() {
+            s.to_string()
+        } else {
+            format!("{}{{{}}}", s, plain)
+        }
+    };
+    out.push_str(&format!(
+        "{} {}\n",
+        wrap(&format!("{}_sum", name)),
+        h.sum_us as f64 / 1e6
+    ));
+    out.push_str(&format!("{} {}\n", wrap(&format!("{}_count", name)), h.count));
+}
+
 /// Renders a `MetricsSnapshot` JSON document as Prometheus text
 /// exposition (format 0.0.4). Unknown/missing fields render as 0 —
 /// a scrape must never fail because a field moved.
@@ -352,10 +400,6 @@ pub fn prometheus_text(metrics_json: &str) -> String {
     text.push_str(
         "# HELP strum_queue_depth Requests waiting in a variant's queue.\n# TYPE strum_queue_depth gauge\n",
     );
-    text.push_str(
-        "# HELP strum_latency_seconds Completed-request latency quantiles.\n# TYPE strum_latency_seconds summary\n",
-    );
-    let mut tail = String::new();
     if let Some(variants) = root.get("variants").and_then(|v| v.as_arr()) {
         for row in variants {
             let label = escape_label(row.get("key").and_then(|k| k.as_str()).unwrap_or("?"));
@@ -364,18 +408,66 @@ pub fn prometheus_text(metrics_json: &str) -> String {
                 label,
                 num(row.get("queued"))
             ));
-            let lat = row.get("latency");
-            for (q, key) in [("0.5", "p50_us"), ("0.95", "p95_us"), ("0.99", "p99_us")] {
-                tail.push_str(&format!(
-                    "strum_latency_seconds{{variant=\"{}\",quantile=\"{}\"}} {}\n",
-                    label,
-                    q,
-                    num(lat.and_then(|l| l.get(key))) / 1e6
-                ));
-            }
         }
     }
-    text.push_str(&tail);
+
+    // Native histogram exposition (replaces the old since-boot summary
+    // quantiles): per-variant series from each row's `hist` block, plus
+    // an unlabeled fleet series merged across variants. Raw per-bucket
+    // counts accumulate into cumulative `le` form here.
+    text.push_str(
+        "# HELP strum_request_latency_seconds Completed-request latency histogram.\n# TYPE strum_request_latency_seconds histogram\n",
+    );
+    let mut fleet_hist = HistogramSnapshot::default();
+    if let Some(variants) = root.get("variants").and_then(|v| v.as_arr()) {
+        for row in variants {
+            let label = escape_label(row.get("key").and_then(|k| k.as_str()).unwrap_or("?"));
+            let h = row
+                .get("hist")
+                .map(HistogramSnapshot::from_json)
+                .unwrap_or_default();
+            fleet_hist.merge(&h);
+            push_histogram(
+                &mut text,
+                "strum_request_latency_seconds",
+                &format!("variant=\"{}\",", label),
+                &h,
+            );
+        }
+    }
+    push_histogram(&mut text, "strum_request_latency_seconds", "", &fleet_hist);
+
+    // Interval-delta block: what the engine observed since the previous
+    // snapshot (scrape-to-scrape when Prometheus is the only caller).
+    if let Some(w) = root.get("window") {
+        text.push_str(
+            "# HELP strum_window_seconds Length of the last metrics window.\n# TYPE strum_window_seconds gauge\n",
+        );
+        text.push_str(&format!(
+            "strum_window_seconds {}\n",
+            num(w.get("window_s"))
+        ));
+        text.push_str(
+            "# HELP strum_window_requests Requests in the last window by outcome.\n# TYPE strum_window_requests gauge\n",
+        );
+        for key in ["completed", "shed", "rejected"] {
+            text.push_str(&format!(
+                "strum_window_requests{{outcome=\"{}\"}} {}\n",
+                key,
+                num(w.get(key))
+            ));
+        }
+        text.push_str(
+            "# HELP strum_window_latency_seconds Latency quantiles over the last window.\n# TYPE strum_window_latency_seconds gauge\n",
+        );
+        for (q, key) in [("0.5", "p50_us"), ("0.95", "p95_us"), ("0.99", "p99_us")] {
+            text.push_str(&format!(
+                "strum_window_latency_seconds{{quantile=\"{}\"}} {}\n",
+                q,
+                num(w.get(key)) / 1e6
+            ));
+        }
+    }
     text.push_str(&format!(
         "# HELP strum_telemetry_dropped_total Telemetry events dropped by the bounded sink.\n# TYPE strum_telemetry_dropped_total counter\nstrum_telemetry_dropped_total {}\n",
         num(root.get("telemetry_dropped"))
@@ -517,10 +609,13 @@ mod tests {
         let json = r#"{
             "uptime_s": 2.5, "telemetry_dropped": 1,
             "fleet": {"requests": 10, "completed": 8, "rejected": 1, "shed": 1, "batches": 4},
+            "window": {"window_s": 1.5, "completed": 3, "shed": 1, "rejected": 0,
+                       "p50_us": 1000, "p95_us": 2000, "p99_us": 3000},
             "variants": [{
                 "key": "net:base:p0:native", "requests": 10, "completed": 8,
                 "rejected": 1, "shed": 1, "batches": 4, "queued": 2,
-                "latency": {"p50_us": 1000, "p95_us": 2000, "p99_us": 3000}
+                "latency": {"p50_us": 1000, "p95_us": 2000, "p99_us": 3000},
+                "hist": {"buckets": [1, 2], "sum_us": 500, "count": 3}
             }]
         }"#;
         let text = prometheus_text(json);
@@ -529,12 +624,50 @@ mod tests {
         assert!(text
             .contains("strum_requests_completed_total{variant=\"net:base:p0:native\"} 8\n"));
         assert!(text.contains("strum_uptime_seconds 2.5\n"));
-        assert!(text.contains(
-            "strum_latency_seconds{variant=\"net:base:p0:native\",quantile=\"0.5\"} 0.001\n"
-        ));
         assert!(text.contains("strum_queue_depth{variant=\"net:base:p0:native\"} 2\n"));
+        // Histogram exposition: cumulative le-form buckets per variant
+        // plus an unlabeled fleet rollup.
+        assert!(text.contains("# TYPE strum_request_latency_seconds histogram\n"));
+        assert!(text.contains(
+            "strum_request_latency_seconds_bucket{variant=\"net:base:p0:native\",le=\"0\"} 1\n"
+        ));
+        assert!(text.contains(
+            "strum_request_latency_seconds_bucket{variant=\"net:base:p0:native\",le=\"+Inf\"} 3\n"
+        ));
+        assert!(text.contains("strum_request_latency_seconds_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text
+            .contains("strum_request_latency_seconds_sum{variant=\"net:base:p0:native\"} 0.0005\n"));
+        assert!(text
+            .contains("strum_request_latency_seconds_count{variant=\"net:base:p0:native\"} 3\n"));
+        assert!(text.contains("strum_request_latency_seconds_count 3\n"));
+        // The old since-boot summary family is gone.
+        assert!(!text.contains("strum_latency_seconds{"));
+        // Window gauges.
+        assert!(text.contains("strum_window_seconds 1.5\n"));
+        assert!(text.contains("strum_window_requests{outcome=\"completed\"} 3\n"));
+        assert!(text.contains("strum_window_latency_seconds{quantile=\"0.5\"} 0.001\n"));
         // Garbage input degrades to zeros, never a scrape failure.
         let fallback = prometheus_text("not json");
         assert!(fallback.contains("strum_requests_total 0\n"));
+        assert!(fallback.contains("strum_request_latency_seconds_count 0\n"));
+    }
+
+    #[test]
+    fn trace_header_parses_and_rejects_garbage() {
+        let wire = b"GET /v1/metrics HTTP/1.1\r\nX-Strum-Trace: 00c0ffee00c0ffee\r\n\r\n";
+        let HttpParse::Ready { req, .. } = try_parse(wire) else {
+            panic!("traced request should parse");
+        };
+        assert_eq!(req.trace, Some(0x00c0_ffee_00c0_ffee));
+        // Absent header = untraced.
+        let HttpParse::Ready { req, .. } = try_parse(b"GET /v1/metrics HTTP/1.1\r\n\r\n") else {
+            panic!()
+        };
+        assert_eq!(req.trace, None);
+        // A malformed value is a typed 400, not a silently dropped trace.
+        assert!(matches!(
+            try_parse(b"GET /v1/metrics HTTP/1.1\r\nX-Strum-Trace: zebra\r\n\r\n"),
+            HttpParse::Bad(_)
+        ));
     }
 }

@@ -66,6 +66,21 @@
 //! batches, gauges) come from the engine's own instrumentation — the
 //! two layers share one `run_id` because they share one sink.
 //!
+//! **Request tracing.** A v2 request frame may carry an optional 9-byte
+//! trace tail — a little-endian `u64` trace id plus a `u8` gateway
+//! attempt ordinal ([`proto`] documents the exact layout). An absent
+//! tail means an untraced request, so untraced v2 traffic is
+//! byte-identical to before; v1 frames never carry traces, and the
+//! legacy blocking tier refuses traced frames as `BadFrame` rather
+//! than silently dropping the id. On HTTP the same context travels as
+//! an `X-Strum-Trace` header (16 hex digits). The async tier decodes
+//! the tail once at framing and hands a
+//! [`crate::telemetry::TraceCtx`] to the handler, which threads it
+//! into the engine so stage spans (and 1-in-N sampled per-layer
+//! profiles) land in telemetry under that id. `WireClient::
+//! infer_traced(.., None)` degrades to a plain v1 frame, so tracing is
+//! strictly opt-in per request.
+//!
 //! ## Failure model
 //!
 //! What a peer can observe from this server, and what each observation
@@ -121,9 +136,17 @@ use std::time::{Duration, Instant};
 /// acceptor/worker/drain/fault machinery by construction.
 pub trait WireHandler: Send + Sync + 'static {
     /// Answers one request. `arrived` is the instant the request frame
-    /// finished reading — deadline budgets count down from it.
-    fn handle(&self, req: proto::Request, arrived: Instant, stats: &ServerStats)
-        -> proto::Response;
+    /// finished reading — deadline budgets count down from it. `trace`
+    /// is the request's trace context, if the peer supplied one (v2
+    /// trace tail or `X-Strum-Trace`); handlers forward it into the
+    /// engine so stage spans land in telemetry under that id.
+    fn handle(
+        &self,
+        req: proto::Request,
+        arrived: Instant,
+        stats: &ServerStats,
+        trace: Option<crate::telemetry::TraceCtx>,
+    ) -> proto::Response;
 }
 
 /// Server tunables.

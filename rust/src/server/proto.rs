@@ -52,6 +52,21 @@
 //! reply misses the budget reports [`ErrorCode::DeadlineExpired`]. The
 //! remaining codes mirror [`SubmitError`] arm for arm.
 //!
+//! ## Trace tail (v2 requests only)
+//!
+//! Any v2 **request** payload may carry an optional 9-byte trailing
+//! field after its body: `u64 trace_id · u8 attempt` (little-endian).
+//! Absent means untraced; v1 payloads never carry it. The decoder
+//! distinguishes the two by exact size arithmetic — after the body,
+//! exactly 0 bytes remaining is untraced, exactly 9 is traced, anything
+//! else is corrupt. One deliberate consequence: a traced frame truncated
+//! at exactly its 9 tail bytes decodes as a valid *untraced* request.
+//! That is trace loss, not data corruption — the tail is observability
+//! metadata, never payload — and it keeps the format backward-compatible
+//! with v2 peers that predate tracing. Responses carry no tail: the
+//! trace id lives in the server's telemetry spans, and v2 responses are
+//! already matched to their request by `corr_id`.
+//!
 //! Decoding is defensive: a hostile peer can produce a typed
 //! [`ProtoError`], never a panic or an unbounded allocation (frames are
 //! capped at [`MAX_FRAME`]; every length field is bounds-checked against
@@ -77,6 +92,12 @@ pub const MAX_FRAME: usize = 1 << 24;
 /// Cap on images per `OP_INFER_BATCH` frame (the per-frame byte cap
 /// usually binds first; this bounds decoded allocations for tiny px).
 pub const MAX_BATCH_IMAGES: usize = 4096;
+
+/// Size of the optional v2 request trace tail: `u64 trace_id · u8
+/// attempt`, appended after the body (see the module docs).
+pub const TRACE_TAIL_BYTES: usize = 9;
+
+pub use crate::telemetry::TraceCtx;
 
 /// Request ops.
 pub const OP_INFER: u8 = 0x01;
@@ -576,7 +597,12 @@ pub enum FramedRequest {
     /// Version-1 payload: answer in order, encode the reply as v1.
     V1(Request),
     /// Version-2 payload: echo `corr_id`, out-of-order replies allowed.
-    V2 { corr_id: u32, req: Request },
+    V2 {
+        corr_id: u32,
+        req: Request,
+        /// Optional trace tail (see the module docs); `None` = untraced.
+        trace: Option<TraceCtx>,
+    },
     /// Version-2 streaming batch: `count` images of `px` floats each,
     /// concatenated in `images`; answered by one `OP_LOGITS_BATCH`
     /// frame with `count` rows in submission order.
@@ -587,6 +613,8 @@ pub enum FramedRequest {
         count: usize,
         px: usize,
         images: Vec<f32>,
+        /// Optional trace tail shared by every image in the batch.
+        trace: Option<TraceCtx>,
     },
 }
 
@@ -620,6 +648,24 @@ pub fn encode_metrics_v2(corr_id: u32) -> Vec<u8> {
     header_v2(OP_METRICS, corr_id)
 }
 
+fn put_trace_tail(buf: &mut Vec<u8>, trace: TraceCtx) {
+    put_u64(buf, trace.trace_id);
+    buf.push(trace.attempt);
+}
+
+/// [`encode_infer_v2`] plus the optional trace tail (see module docs).
+pub fn encode_infer_v2_traced(
+    corr_id: u32,
+    key: &str,
+    deadline_budget_ms: u32,
+    image: &[f32],
+    trace: TraceCtx,
+) -> Vec<u8> {
+    let mut buf = encode_infer_v2(corr_id, key, deadline_budget_ms, image);
+    put_trace_tail(&mut buf, trace);
+    buf
+}
+
 /// Serializes a v2 streaming-batch request: `images` must hold exactly
 /// `count · px` floats (the images concatenated in submission order).
 pub fn encode_infer_batch(
@@ -639,6 +685,21 @@ pub fn encode_infer_batch(
     for &x in images {
         put_u32(&mut buf, x.to_bits());
     }
+    buf
+}
+
+/// [`encode_infer_batch`] plus the optional trace tail (see module docs).
+pub fn encode_infer_batch_traced(
+    corr_id: u32,
+    key: &str,
+    deadline_budget_ms: u32,
+    count: usize,
+    px: usize,
+    images: &[f32],
+    trace: TraceCtx,
+) -> Vec<u8> {
+    let mut buf = encode_infer_batch(corr_id, key, deadline_budget_ms, count, px, images);
+    put_trace_tail(&mut buf, trace);
     buf
 }
 
@@ -714,24 +775,49 @@ pub fn encode_logits_batch(corr_id: u32, rows: &[Response]) -> Vec<u8> {
     buf
 }
 
-fn decode_request_body(c: &mut Cursor<'_>, op: u8) -> Result<Request, ProtoError> {
+/// Decodes a request body WITHOUT asserting the payload is exhausted —
+/// the v2 framed path reads an optional trace tail after the body.
+fn decode_request_body_open(c: &mut Cursor<'_>, op: u8) -> Result<Request, ProtoError> {
     match op {
         OP_INFER => {
             let key = c.string("variant key")?;
             let deadline_budget_ms = c.u32("deadline budget")?;
             let image = c.f32_vec("image")?;
-            c.finish_ref("infer request")?;
             Ok(Request::Infer {
                 key,
                 deadline_budget_ms,
                 image,
             })
         }
-        OP_METRICS => {
-            c.finish_ref("metrics request")?;
-            Ok(Request::Metrics)
-        }
+        OP_METRICS => Ok(Request::Metrics),
         op => Err(ProtoError::BadOp { op }),
+    }
+}
+
+fn decode_request_body(c: &mut Cursor<'_>, op: u8) -> Result<Request, ProtoError> {
+    let req = decode_request_body_open(c, op)?;
+    c.finish_ref(match req {
+        Request::Infer { .. } => "infer request",
+        Request::Metrics => "metrics request",
+    })?;
+    Ok(req)
+}
+
+/// Consumes the optional v2 trace tail: exactly 0 remaining bytes is
+/// untraced, exactly [`TRACE_TAIL_BYTES`] is traced, anything else is
+/// corrupt (same strictness as `finish_ref`, with one legal extra size).
+fn read_trace_tail(c: &mut Cursor<'_>, what: &'static str) -> Result<Option<TraceCtx>, ProtoError> {
+    match c.remaining() {
+        0 => Ok(None),
+        TRACE_TAIL_BYTES => {
+            let trace_id = c.u64("trace id")?;
+            let attempt = c.u8("trace attempt")?;
+            Ok(Some(TraceCtx { trace_id, attempt }))
+        }
+        n => Err(ProtoError::Corrupt(format!(
+            "{} trailing bytes after {}",
+            n, what
+        ))),
     }
 }
 
@@ -771,6 +857,7 @@ pub fn decode_request_framed(payload: &[u8]) -> Result<FramedRequest, ProtoError
                 let total = count.checked_mul(px).and_then(|t| t.checked_mul(4));
                 match total {
                     Some(bytes) if bytes == c.remaining() => {}
+                    Some(bytes) if bytes + TRACE_TAIL_BYTES == c.remaining() => {}
                     _ => {
                         return Err(ProtoError::Truncated { what: "batch images" });
                     }
@@ -780,7 +867,7 @@ pub fn decode_request_framed(payload: &[u8]) -> Result<FramedRequest, ProtoError
                     .chunks_exact(4)
                     .map(|b| f32::from_bits(u32::from_le_bytes(b.try_into().unwrap())))
                     .collect();
-                c.finish_ref("batch request")?;
+                let trace = read_trace_tail(&mut c, "batch request")?;
                 Ok(FramedRequest::V2Batch {
                     corr_id,
                     key,
@@ -788,10 +875,16 @@ pub fn decode_request_framed(payload: &[u8]) -> Result<FramedRequest, ProtoError
                     count,
                     px,
                     images,
+                    trace,
                 })
             } else {
-                let req = decode_request_body(&mut c, op)?;
-                Ok(FramedRequest::V2 { corr_id, req })
+                let req = decode_request_body_open(&mut c, op)?;
+                let trace = read_trace_tail(&mut c, "v2 request")?;
+                Ok(FramedRequest::V2 {
+                    corr_id,
+                    req,
+                    trace,
+                })
             }
         }
         found => Err(ProtoError::BadVersion { found }),
@@ -1049,6 +1142,7 @@ mod tests {
                     deadline_budget_ms: 12,
                     image: vec![1.0, -2.5],
                 },
+                trace: None,
             }
         );
         let payload = encode_metrics_v2(7);
@@ -1057,6 +1151,7 @@ mod tests {
             FramedRequest::V2 {
                 corr_id: 7,
                 req: Request::Metrics,
+                trace: None,
             }
         );
         for resp in [
@@ -1101,6 +1196,7 @@ mod tests {
                 count: 3,
                 px: 2,
                 images,
+                trace: None,
             }
         );
         // Every truncation of the batch frame is a typed error.
@@ -1139,6 +1235,69 @@ mod tests {
             decode_response_framed(&payload).unwrap(),
             FramedResponse::V2Batch { corr_id: 9, rows }
         );
+    }
+
+    #[test]
+    fn trace_tail_roundtrips_on_v2_requests() {
+        let t = TraceCtx {
+            trace_id: 0xFEED_FACE_CAFE_BEEF,
+            attempt: 3,
+        };
+        // Single infer: the tail comes back bit-exact.
+        let payload = encode_infer_v2_traced(11, "k", 25, &[0.5, -1.0], t);
+        match decode_request_framed(&payload).unwrap() {
+            FramedRequest::V2 {
+                corr_id,
+                req,
+                trace,
+            } => {
+                assert_eq!(corr_id, 11);
+                assert_eq!(trace, Some(t));
+                assert_eq!(
+                    req,
+                    Request::Infer {
+                        key: "k".into(),
+                        deadline_budget_ms: 25,
+                        image: vec![0.5, -1.0],
+                    }
+                );
+            }
+            other => panic!("unexpected decode: {:?}", other),
+        }
+        // Batch: one shared tail for every image.
+        let images = [1.0f32, 2.0, 3.0, 4.0];
+        let payload = encode_infer_batch_traced(12, "k", 0, 2, 2, &images, t);
+        match decode_request_framed(&payload).unwrap() {
+            FramedRequest::V2Batch { trace, count, .. } => {
+                assert_eq!(trace, Some(t));
+                assert_eq!(count, 2);
+            }
+            other => panic!("unexpected decode: {:?}", other),
+        }
+        // Documented ambiguity: cutting exactly the 9 tail bytes yields a
+        // valid UNTRACED request (trace loss, not corruption)...
+        let payload = encode_infer_v2_traced(13, "k", 0, &[1.0], t);
+        let cut = &payload[..payload.len() - TRACE_TAIL_BYTES];
+        assert!(matches!(
+            decode_request_framed(cut).unwrap(),
+            FramedRequest::V2 { trace: None, .. }
+        ));
+        // ...while any partial tail is refused as corrupt.
+        for keep in 1..TRACE_TAIL_BYTES {
+            let partial = &payload[..payload.len() - TRACE_TAIL_BYTES + keep];
+            assert!(
+                matches!(
+                    decode_request_framed(partial),
+                    Err(ProtoError::Corrupt(_))
+                ),
+                "partial tail of {} bytes decoded",
+                keep
+            );
+        }
+        // v1 never carries a tail: appending one is trailing garbage.
+        let mut v1 = encode_infer("k", 0, &[1.0]);
+        put_trace_tail(&mut v1, t);
+        assert!(decode_request_framed(&v1).is_err());
     }
 
     #[test]

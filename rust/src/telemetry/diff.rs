@@ -218,6 +218,134 @@ fn compare(
     }
 }
 
+/// One verified run's column in a [`HistoryReport`] trajectory.
+#[derive(Debug, Clone)]
+pub struct HistoryRun {
+    pub run_id: String,
+    pub timestamp_utc: String,
+    /// Gating-direction metrics only (`path → value`); informational
+    /// leaves (configs, sizes) are dropped.
+    pub metrics: BTreeMap<String, f64>,
+}
+
+/// `strum bench-diff --history`: N verified runs' metrics side by side,
+/// oldest first. Unlike the pairwise diff this never gates — it answers
+/// "how did p99 move across the last five runs", not "did it regress".
+#[derive(Debug, Clone, Default)]
+pub struct HistoryReport {
+    /// Runs in manifest-timestamp order (RFC3339 sorts lexically).
+    pub runs: Vec<HistoryRun>,
+    /// `run_id:payload` for payloads whose checksum re-verification
+    /// failed; the whole run is excluded from the table.
+    pub checksum_failures: Vec<String>,
+}
+
+/// Loads and checksum-verifies N manifests, collects each run's
+/// direction-classified metrics, and orders the runs by their manifest
+/// timestamp (not argument order — shell globs don't sort by time).
+pub fn history_manifests(paths: &[std::path::PathBuf]) -> crate::Result<HistoryReport> {
+    anyhow::ensure!(
+        paths.len() >= 2,
+        "--history wants at least two manifests, got {}",
+        paths.len()
+    );
+    let mut report = HistoryReport::default();
+    for path in paths {
+        let m = RunManifest::load_verified(path)?;
+        let dir = path.parent().unwrap_or(Path::new("."));
+        let failures = m.verify_payloads(dir);
+        if !failures.is_empty() {
+            for f in failures {
+                report.checksum_failures.push(format!("{}:{}", m.run_id, f));
+            }
+            continue;
+        }
+        let mut metrics = BTreeMap::new();
+        for (name, p) in &m.payloads {
+            let json = read_payload(dir, &p.path)?;
+            collect_metrics(name, &json, &mut metrics);
+        }
+        metrics.retain(|path, _| {
+            let leaf = path.rsplit('/').next().unwrap_or(path);
+            metric_direction(leaf) != Direction::Ignore
+        });
+        report.runs.push(HistoryRun {
+            run_id: m.run_id.clone(),
+            timestamp_utc: m.timestamp_utc.clone(),
+            metrics,
+        });
+    }
+    report
+        .runs
+        .sort_by(|a, b| (&a.timestamp_utc, &a.run_id).cmp(&(&b.timestamp_utc, &b.run_id)));
+    Ok(report)
+}
+
+/// Renders the trajectory table: one row per metric, one column per
+/// run, plus a direction-adjusted drift column (last vs first, positive
+/// = got worse).
+pub fn render_history(report: &HistoryReport) -> String {
+    let mut out = String::new();
+    if !report.checksum_failures.is_empty() {
+        out.push_str("CHECKSUM FAILURES (runs excluded):\n");
+        for f in &report.checksum_failures {
+            out.push_str(&format!("  {}\n", f));
+        }
+    }
+    if report.runs.is_empty() {
+        out.push_str("no verified runs\n");
+        return out;
+    }
+    out.push_str("runs (oldest first):\n");
+    for (i, r) in report.runs.iter().enumerate() {
+        out.push_str(&format!("  [{}] {}  {}\n", i, r.run_id, r.timestamp_utc));
+    }
+    let mut paths: Vec<&String> = report
+        .runs
+        .iter()
+        .flat_map(|r| r.metrics.keys())
+        .collect();
+    paths.sort();
+    paths.dedup();
+    let width = paths.iter().map(|p| p.len()).max().unwrap_or(6).max(6);
+    out.push_str(&format!("{:<w$}", "metric", w = width));
+    for i in 0..report.runs.len() {
+        out.push_str(&format!("  {:>12}", format!("[{}]", i)));
+    }
+    out.push_str("    drift%\n");
+    for path in &paths {
+        out.push_str(&format!("{:<w$}", path, w = width));
+        for r in &report.runs {
+            match r.metrics.get(*path) {
+                Some(v) => out.push_str(&format!("  {:>12.3}", v)),
+                None => out.push_str(&format!("  {:>12}", "-")),
+            }
+        }
+        let present: Vec<f64> = report
+            .runs
+            .iter()
+            .filter_map(|r| r.metrics.get(*path).copied())
+            .collect();
+        if present.len() >= 2 && present[0].abs() > 1e-12 {
+            let leaf = path.rsplit('/').next().unwrap_or(path);
+            let (first, last) = (present[0], present[present.len() - 1]);
+            let drift = match metric_direction(leaf) {
+                Direction::HigherIsBetter => (first - last) / first * 100.0,
+                _ => (last - first) / first * 100.0,
+            };
+            out.push_str(&format!("  {:>+7.2}%\n", drift));
+        } else {
+            out.push_str(&format!("  {:>8}\n", "-"));
+        }
+    }
+    out.push_str(&format!(
+        "{} metrics across {} runs\n",
+        paths.len(),
+        report.runs.len()
+    ));
+    out
+}
+
 fn read_payload(dir: &Path, file: &str) -> crate::Result<Json> {
     let path = dir.join(file);
     let text = std::fs::read_to_string(&path)?;
@@ -405,6 +533,71 @@ mod tests {
         assert!(diff_manifests(&a, &b, 5.0).is_err());
         let _ = fs::remove_dir_all(&d1);
         let _ = fs::remove_dir_all(&d2);
+    }
+
+    fn write_run_at(dir: &Path, run_id: &str, ts: &str, p99: f64) -> PathBuf {
+        let payload = dir.join("BENCH_serve.json");
+        let body = Json::obj(vec![
+            ("p99_us", Json::Num(p99)),
+            ("throughput_rps", Json::Num(100.0)),
+        ]);
+        fs::write(&payload, body.to_string()).unwrap();
+        let mut m = RunManifest::capture(run_id);
+        m.timestamp_utc = ts.to_string();
+        m.add_payload("serve", &payload).unwrap();
+        let mpath = dir.join("MANIFEST_serve.json");
+        m.save(&mpath).unwrap();
+        mpath
+    }
+
+    #[test]
+    fn history_sorts_by_timestamp_and_reports_drift() {
+        let d1 = tmp_dir("hist-a");
+        let d2 = tmp_dir("hist-b");
+        let d3 = tmp_dir("hist-c");
+        // Passed newest-first on purpose: the sort must go by manifest
+        // timestamp, not argument order.
+        let newest = write_run_at(&d3, "run-c", "2026-08-03T00:00:00Z", 1200.0);
+        let oldest = write_run_at(&d1, "run-a", "2026-08-01T00:00:00Z", 1000.0);
+        let middle = write_run_at(&d2, "run-b", "2026-08-02T00:00:00Z", 1100.0);
+        let r = history_manifests(&[newest, oldest, middle]).unwrap();
+        assert!(r.checksum_failures.is_empty());
+        let ids: Vec<&str> = r.runs.iter().map(|x| x.run_id.as_str()).collect();
+        assert_eq!(ids, vec!["run-a", "run-b", "run-c"]);
+        let table = render_history(&r);
+        // p99 went 1000 → 1200: +20% drift (lower-is-better, so worse).
+        assert!(table.contains("serve/p99_us"), "{}", table);
+        assert!(table.contains("+20.00%"), "{}", table);
+        // Flat throughput drifts 0%.
+        assert!(table.contains("+0.00%") || table.contains("-0.00%"), "{}", table);
+        for d in [&d1, &d2, &d3] {
+            let _ = fs::remove_dir_all(d);
+        }
+    }
+
+    #[test]
+    fn history_excludes_tampered_runs() {
+        let d1 = tmp_dir("histcor-a");
+        let d2 = tmp_dir("histcor-b");
+        let a = write_run_at(&d1, "run-a", "2026-08-01T00:00:00Z", 1000.0);
+        let b = write_run_at(&d2, "run-b", "2026-08-02T00:00:00Z", 1100.0);
+        let payload = d2.join("BENCH_serve.json");
+        let text = fs::read_to_string(&payload).unwrap().replace("1100", "900");
+        fs::write(&payload, text).unwrap();
+        let r = history_manifests(&[a, b]).unwrap();
+        assert_eq!(r.checksum_failures, vec!["run-b:serve".to_string()]);
+        assert_eq!(r.runs.len(), 1);
+        assert!(render_history(&r).contains("CHECKSUM FAILURES"));
+        let _ = fs::remove_dir_all(&d1);
+        let _ = fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn history_wants_two_runs() {
+        let d = tmp_dir("hist-one");
+        let a = write_run_at(&d, "run-a", "2026-08-01T00:00:00Z", 1000.0);
+        assert!(history_manifests(&[a]).is_err());
+        let _ = fs::remove_dir_all(&d);
     }
 
     #[test]

@@ -24,8 +24,25 @@
 //!   (throughput up, percentiles down, sheds gated only when the base
 //!   run shed), and exits nonzero with a per-metric table on any
 //!   regression past threshold. CI runs it against a fresh quick run.
+//!   `strum bench-diff --history DIR...` extends the pairwise gate to a
+//!   trajectory table across N verified runs.
+//! * [`tail`] — **the query CLI**: `strum tail DIR [--run-id R]
+//!   [--trace T] [--event E] [--variant K] [--rates --window-s N]`
+//!   scans the JSONL segments back through [`validate_line`], filters,
+//!   and reconstructs per-trace waterfalls (gateway attempt → queue
+//!   wait → batch → execute → per-layer profile) or windowed request
+//!   rates.
 //!
-//! The `run_id` threads through all three: the sink stamps it on every
+//! Request tracing rides on the same log: a traced request (gateway
+//! mint, client `X-Strum-Trace`, or `strum loadgen --trace`) carries a
+//! 64-bit trace id on the v2 wire frames, and every pipeline stage
+//! emits a schema-v2 `span` event tagged with the trace id, the gateway
+//! attempt number, and (for hedge losers) an `abandoned` flag. Trace
+//! ids print as 16 lowercase hex digits ([`fmt_trace`]/[`parse_trace`]).
+//! Per-layer execute spans are sampled 1-in-N via `EngineOptions::
+//! trace_sample` so the profiling hooks stay off the untraced hot path.
+//!
+//! The `run_id` threads through all of it: the sink stamps it on every
 //! JSONL line, the manifest records it, and loadgen reuses one id for
 //! both so a bench artifact can be joined to the event log it was
 //! measured under.
@@ -33,11 +50,19 @@
 pub mod diff;
 pub mod manifest;
 pub mod schema;
+pub mod tail;
 pub mod writer;
 
-pub use diff::{diff_manifests, render_table, DiffReport, MetricDelta};
+pub use diff::{
+    diff_manifests, history_manifests, render_history, render_table, DiffReport, HistoryReport,
+    MetricDelta,
+};
+pub use tail::{render_rates, render_waterfall, scan_dir, TailFilter, TailScan};
 pub use manifest::{bench_dir, PayloadEntry, RunManifest, MANIFEST_FORMAT_VERSION};
-pub use schema::{validate_line, Event, GaugeRow, ParsedLine, ShedStage, SCHEMA_VERSION};
+pub use schema::{
+    fmt_trace, parse_trace, validate_line, Event, GaugeRow, ParsedLine, ShedStage, TraceCtx,
+    SCHEMA_VERSION, SPAN_STAGES,
+};
 pub use writer::{segment_files, TelemetryConfig, TelemetrySink};
 
 /// Generates a process-unique run id: epoch millis + pid, hex. Unique

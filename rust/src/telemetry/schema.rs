@@ -19,8 +19,53 @@ use crate::util::json::Json;
 use std::sync::Arc;
 
 /// Telemetry line schema version. Bump on breaking changes only;
-/// additive fields keep the version.
-pub const SCHEMA_VERSION: u32 = 1;
+/// additive fields keep the version. v2 added the `span` tag (request
+/// tracing) and the interval-delta fields on `engine_gauges` rows.
+/// [`validate_line`] accepts every version up to this one, so mixed
+/// logs (a v1 segment next to a v2 segment) still parse.
+pub const SCHEMA_VERSION: u32 = 2;
+
+/// Formats a trace id the way it travels in JSON and on the CLI:
+/// 16 lowercase hex digits. Trace ids are random u64s — serializing
+/// them as JSON numbers would lose precision above 2^53, so they ride
+/// as strings everywhere outside the binary wire protocol.
+pub fn fmt_trace(trace: u64) -> String {
+    format!("{:016x}", trace)
+}
+
+/// Parses a trace id as printed by [`fmt_trace`] (any-length hex,
+/// leading `0x` tolerated).
+pub fn parse_trace(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let s = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")).unwrap_or(s);
+    if s.is_empty() || s.len() > 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Trace context attached to one request attempt: the gateway-minted
+/// trace id plus the attempt ordinal (0 = primary; retries and hedges
+/// count up while sharing the trace id). Rides v2 wire frames as the
+/// optional 9-byte tail ([`crate::server::proto::TRACE_TAIL_BYTES`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub attempt: u8,
+}
+
+/// Stage names a [`Event::Span`] may carry, in causal order along the
+/// serving path. `strum tail` sorts a trace's spans by this order when
+/// timestamps tie.
+pub const SPAN_STAGES: &[&str] = &[
+    "gateway_attempt",
+    "door",
+    "queue_wait",
+    "batch",
+    "execute",
+    "layer",
+    "reply_write",
+];
 
 /// Where a deadline shed happened (mirrors the serving tier's three
 /// shed stages; the wait-stage shed is client-side and not an engine
@@ -43,6 +88,11 @@ impl ShedStage {
 }
 
 /// Per-variant gauge row inside an [`Event::EngineGauges`] snapshot.
+/// `completed`/`shed`/`rejected` stay cumulative (since boot) for
+/// compatibility; the `d_*` twins are the deltas over the ticker
+/// interval that ended at this event (`window_s` seconds), so
+/// dashboards read per-interval rates straight off the row instead of
+/// differencing successive snapshots by hand.
 #[derive(Debug, Clone)]
 pub struct GaugeRow {
     pub key: String,
@@ -52,6 +102,14 @@ pub struct GaugeRow {
     pub rejected: u64,
     pub throughput_rps: f64,
     pub p99_us: f64,
+    /// Requests completed in the interval ending at this event.
+    pub d_completed: u64,
+    /// Requests shed in the interval.
+    pub d_shed: u64,
+    /// Submits rejected in the interval.
+    pub d_rejected: u64,
+    /// Interval length in seconds (0 on the first emission).
+    pub window_s: f64,
 }
 
 /// One telemetry event. Variant keys ride as `Arc<str>` so per-request
@@ -159,6 +217,21 @@ pub enum Event {
     /// The gateway fired a tail hedge; `win` marks whether the hedge's
     /// reply beat the primary's.
     HedgeFired { key: Arc<str>, win: bool },
+    /// One timed stage of a traced request (see [`SPAN_STAGES`]).
+    /// Emitted only for requests carrying a trace id, so the untraced
+    /// hot path never constructs one. `attempt` distinguishes gateway
+    /// retries/hedges sharing one trace id; `abandoned` tags the spans
+    /// of a hedge attempt whose reply lost the race (or a retried
+    /// primary). `detail` carries the layer name for `stage == "layer"`.
+    Span {
+        trace: u64,
+        attempt: u32,
+        stage: &'static str,
+        key: Option<Arc<str>>,
+        dur_us: u64,
+        abandoned: bool,
+        detail: Option<String>,
+    },
 }
 
 impl Event {
@@ -185,25 +258,47 @@ impl Event {
             Event::DeployRolledBack { .. } => "deploy_rolled_back",
             Event::RouteRetry { .. } => "route_retry",
             Event::HedgeFired { .. } => "hedge_fired",
+            Event::Span { .. } => "span",
         }
     }
 
     /// Builds a periodic gauge event from a typed metrics snapshot.
+    /// Interval deltas read zero (no earlier snapshot to difference
+    /// against) — the ticker uses [`Event::gauges_delta`].
     pub fn gauges(snap: &MetricsSnapshot) -> Event {
+        Self::gauges_delta(snap, None)
+    }
+
+    /// Builds a gauge event whose rows carry both cumulative counters
+    /// and the deltas since `prev` (the previous ticker snapshot).
+    /// Variants absent from `prev` (hot-added since) report their
+    /// cumulative counts as the delta.
+    pub fn gauges_delta(snap: &MetricsSnapshot, prev: Option<&MetricsSnapshot>) -> Event {
+        let window_s = prev.map_or(0.0, |p| (snap.uptime_s - p.uptime_s).max(0.0));
         Event::EngineGauges {
             uptime_s: snap.uptime_s,
             workers: snap.workers,
             variants: snap
                 .variants
                 .iter()
-                .map(|v| GaugeRow {
-                    key: v.key.clone(),
-                    queued: v.queued,
-                    completed: v.completed,
-                    shed: v.shed,
-                    rejected: v.rejected,
-                    throughput_rps: v.throughput_rps,
-                    p99_us: v.latency.p99_us,
+                .map(|v| {
+                    let old = prev.and_then(|p| p.variants.iter().find(|o| o.key == v.key));
+                    let base = |f: fn(&crate::coordinator::VariantSnapshot) -> u64| {
+                        old.map(f).unwrap_or(0)
+                    };
+                    GaugeRow {
+                        key: v.key.clone(),
+                        queued: v.queued,
+                        completed: v.completed,
+                        shed: v.shed,
+                        rejected: v.rejected,
+                        throughput_rps: v.throughput_rps,
+                        p99_us: v.latency.p99_us,
+                        d_completed: v.completed.saturating_sub(base(|o| o.completed)),
+                        d_shed: v.shed.saturating_sub(base(|o| o.shed)),
+                        d_rejected: v.rejected.saturating_sub(base(|o| o.rejected)),
+                        window_s,
+                    }
                 })
                 .collect(),
         }
@@ -313,6 +408,10 @@ impl Event {
                                     ("rejected", Json::Num(g.rejected as f64)),
                                     ("throughput_rps", Json::Num(g.throughput_rps)),
                                     ("p99_us", Json::Num(g.p99_us)),
+                                    ("d_completed", Json::Num(g.d_completed as f64)),
+                                    ("d_shed", Json::Num(g.d_shed as f64)),
+                                    ("d_rejected", Json::Num(g.d_rejected as f64)),
+                                    ("window_s", Json::Num(g.window_s)),
                                 ])
                             })
                             .collect(),
@@ -380,6 +479,27 @@ impl Event {
                 fields.push(("key", Json::str(&**key)));
                 fields.push(("win", Json::Bool(*win)));
             }
+            Event::Span {
+                trace,
+                attempt,
+                stage,
+                key,
+                dur_us,
+                abandoned,
+                detail,
+            } => {
+                fields.push(("trace", Json::Str(fmt_trace(*trace))));
+                fields.push(("attempt", Json::Num(*attempt as f64)));
+                fields.push(("stage", Json::str(stage)));
+                if let Some(k) = key {
+                    fields.push(("key", Json::str(&**k)));
+                }
+                fields.push(("dur_us", Json::Num(*dur_us as f64)));
+                fields.push(("abandoned", Json::Bool(*abandoned)));
+                if let Some(d) = detail {
+                    fields.push(("detail", Json::str(d.as_str())));
+                }
+            }
         }
         Json::obj(fields)
     }
@@ -397,6 +517,18 @@ pub struct ParsedLine {
     pub tag: String,
     /// Variant key, for per-variant events.
     pub key: Option<String>,
+    /// Trace id, for `span` lines (parsed from the hex string field).
+    pub trace: Option<u64>,
+    /// Span stage, for `span` lines.
+    pub stage: Option<String>,
+    /// Attempt number, for `span` lines (0 otherwise).
+    pub attempt: u32,
+    /// Span duration in microseconds (0 for non-span lines).
+    pub dur_us: u64,
+    /// Whether a span belonged to an abandoned (losing) attempt.
+    pub abandoned: bool,
+    /// Span detail (layer name for `stage == "layer"`).
+    pub detail: Option<String>,
 }
 
 /// Known event tags, for validation.
@@ -421,6 +553,7 @@ const KNOWN_TAGS: &[&str] = &[
     "deploy_rolled_back",
     "route_retry",
     "hedge_fired",
+    "span",
 ];
 
 /// Parses and validates one JSONL line against the schema: well-formed
@@ -434,8 +567,8 @@ pub fn validate_line(line: &str) -> crate::Result<ParsedLine> {
         .and_then(|x| x.as_f64())
         .ok_or_else(|| anyhow::anyhow!("missing schema_version"))? as u32;
     anyhow::ensure!(
-        version == SCHEMA_VERSION,
-        "unsupported schema_version {} (supported: {})",
+        (1..=SCHEMA_VERSION).contains(&version),
+        "unsupported schema_version {} (supported: 1..={})",
         version,
         SCHEMA_VERSION
     );
@@ -465,7 +598,32 @@ pub fn validate_line(line: &str) -> crate::Result<ParsedLine> {
             .and_then(|x| x.as_f64())
             .ok_or_else(|| anyhow::anyhow!("{}: missing numeric field '{}'", tag, field))
     };
+    let mut trace = None;
+    let mut stage_field = None;
+    let mut attempt = 0u32;
+    let mut dur_us = 0u64;
+    let mut abandoned = false;
+    let mut detail = None;
     let key = match tag.as_str() {
+        "span" => {
+            let t = require_str("trace")?;
+            trace = Some(
+                parse_trace(&t)
+                    .ok_or_else(|| anyhow::anyhow!("span: bad trace id '{}'", t))?,
+            );
+            let stage = require_str("stage")?;
+            anyhow::ensure!(
+                SPAN_STAGES.contains(&stage.as_str()),
+                "span: unknown stage '{}'",
+                stage
+            );
+            stage_field = Some(stage);
+            attempt = require_num("attempt")? as u32;
+            dur_us = require_num("dur_us")? as u64;
+            abandoned = v.get("abandoned").and_then(|x| x.as_bool()).unwrap_or(false);
+            detail = v.get("detail").and_then(|x| x.as_str()).map(str::to_string);
+            v.get("key").and_then(|x| x.as_str()).map(str::to_string)
+        }
         "request_done" => {
             require_num("latency_us")?;
             require_num("batch_occupancy")?;
@@ -587,6 +745,12 @@ pub fn validate_line(line: &str) -> crate::Result<ParsedLine> {
         ts_ms,
         tag,
         key,
+        trace,
+        stage: stage_field,
+        attempt,
+        dur_us,
+        abandoned,
+        detail,
     })
 }
 
@@ -663,7 +827,38 @@ mod tests {
                     rejected: 0,
                     throughput_rps: 6.7,
                     p99_us: 900.0,
+                    d_completed: 4,
+                    d_shed: 0,
+                    d_rejected: 0,
+                    window_s: 0.5,
                 }],
+            },
+            Event::Span {
+                trace: 0xDEAD_BEEF_0102_0304,
+                attempt: 0,
+                stage: "queue_wait",
+                key: Some(key()),
+                dur_us: 314,
+                abandoned: false,
+                detail: None,
+            },
+            Event::Span {
+                trace: 1,
+                attempt: 2,
+                stage: "layer",
+                key: Some(key()),
+                dur_us: 42,
+                abandoned: true,
+                detail: Some("conv1".into()),
+            },
+            Event::Span {
+                trace: u64::MAX,
+                attempt: 1,
+                stage: "gateway_attempt",
+                key: None,
+                dur_us: 9000,
+                abandoned: true,
+                detail: None,
             },
             Event::ReplicaSpawned {
                 id: 1,
@@ -768,6 +963,113 @@ mod tests {
             r#"{"schema_version":1,"run_id":"r","ts_ms":1,"event":"hedge_fired","key":"k","win":"yes"}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn trace_ids_roundtrip_as_hex_strings() {
+        for t in [0u64, 1, 0xDEAD_BEEF, u64::MAX, 1 << 63] {
+            assert_eq!(parse_trace(&fmt_trace(t)), Some(t));
+        }
+        assert_eq!(parse_trace("0xAb"), Some(0xab));
+        assert_eq!(parse_trace(" ff "), Some(0xff));
+        assert_eq!(parse_trace(""), None);
+        assert_eq!(parse_trace("zz"), None);
+        assert_eq!(parse_trace("00000000000000000f"), None); // > 16 digits
+        // Full-width ids (the reason trace rides as a string): a JSON
+        // f64 number could not hold this value exactly.
+        let e = Event::Span {
+            trace: u64::MAX - 1,
+            attempt: 0,
+            stage: "execute",
+            key: None,
+            dur_us: 1,
+            abandoned: false,
+            detail: None,
+        };
+        let parsed = validate_line(&e.to_json("r", 0).to_string()).unwrap();
+        assert_eq!(parsed.trace, Some(u64::MAX - 1));
+        assert_eq!(parsed.stage.as_deref(), Some("execute"));
+    }
+
+    #[test]
+    fn v1_lines_still_validate_under_v2() {
+        // A pre-bump segment line (schema_version 1) must keep parsing
+        // so mixed telemetry directories remain queryable.
+        let parsed = validate_line(
+            r#"{"schema_version":1,"run_id":"r","ts_ms":1,"event":"server_drain","connections":0,"requests":0}"#,
+        )
+        .unwrap();
+        assert_eq!(parsed.schema_version, 1);
+        // Future versions are still refused.
+        assert!(validate_line(
+            r#"{"schema_version":3,"run_id":"r","ts_ms":1,"event":"server_drain","connections":0,"requests":0}"#
+        )
+        .is_err());
+        // Span lines with a bad stage or unparseable trace are refused.
+        assert!(validate_line(
+            r#"{"schema_version":2,"run_id":"r","ts_ms":1,"event":"span","trace":"ff","stage":"warp","attempt":0,"dur_us":1}"#
+        )
+        .is_err());
+        assert!(validate_line(
+            r#"{"schema_version":2,"run_id":"r","ts_ms":1,"event":"span","trace":"not-hex","stage":"execute","attempt":0,"dur_us":1}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn gauge_deltas_difference_successive_snapshots() {
+        use crate::coordinator::{
+            FleetSnapshot, LatencyStats, MetricsSnapshot, VariantSnapshot,
+            METRICS_SCHEMA_VERSION,
+        };
+        use crate::util::stats::Summary;
+        use std::time::Duration;
+        let mk = |completed: u64, shed: u64, uptime: f64| {
+            let v = VariantSnapshot {
+                key: "k".into(),
+                net: "n".into(),
+                backend: "native".into(),
+                img: 8,
+                classes: 4,
+                requests: completed,
+                completed,
+                rejected: 0,
+                shed,
+                batches: 1,
+                padded_slots: 0,
+                mean_batch: 1.0,
+                queued: 0,
+                throughput_rps: 0.0,
+                latency: LatencyStats::from_summary(&Summary::new()),
+                hist: Default::default(),
+            };
+            MetricsSnapshot {
+                schema_version: METRICS_SCHEMA_VERSION,
+                wall_s: uptime,
+                uptime_s: uptime,
+                workers: 1,
+                telemetry_dropped: 0,
+                kernel_isa: "scalar".into(),
+                fleet: FleetSnapshot::rollup(std::slice::from_ref(&v), Duration::from_secs(1), &[]),
+                window: Default::default(),
+                variants: vec![v],
+            }
+        };
+        let prev = mk(10, 2, 1.0);
+        let cur = mk(25, 3, 3.0);
+        let Event::EngineGauges { variants, .. } = Event::gauges_delta(&cur, Some(&prev)) else {
+            panic!("wrong event type");
+        };
+        assert_eq!(variants[0].d_completed, 15);
+        assert_eq!(variants[0].d_shed, 1);
+        assert_eq!(variants[0].completed, 25); // cumulative kept
+        assert!((variants[0].window_s - 2.0).abs() < 1e-9);
+        // No prev → deltas read zero-based cumulative, window 0.
+        let Event::EngineGauges { variants, .. } = Event::gauges(&cur) else {
+            panic!("wrong event type");
+        };
+        assert_eq!(variants[0].d_completed, 25);
+        assert_eq!(variants[0].window_s, 0.0);
     }
 
     #[test]

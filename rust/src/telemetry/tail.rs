@@ -1,0 +1,486 @@
+//! `strum tail` — the telemetry query CLI's engine.
+//!
+//! Scans a directory of JSONL telemetry segments (as written by
+//! [`TelemetrySink`](super::TelemetrySink)), validating every line with
+//! [`validate_line`] and applying a [`TailFilter`]. Two renderers sit
+//! on top of the scan:
+//!
+//! * [`render_waterfall`] — reconstructs one traced request end to end:
+//!   gateway attempts (winner + abandoned hedges/retries), queue wait,
+//!   batch formation, execute, per-layer profile, reply write — ordered
+//!   by attempt then pipeline stage, with a layer-total vs execute
+//!   cross-check.
+//! * [`render_rates`] — windowed request rates: buckets
+//!   `request_done`/`request_shed`/`request_rejected` events into
+//!   fixed-width time windows and prints per-window counts and
+//!   throughput.
+//!
+//! Invalid lines are counted and skipped, never fatal: a segment cut
+//! mid-write by a crash ends in a torn line, and the reader must still
+//! serve the 10k lines before it.
+
+use super::schema::{fmt_trace, validate_line, ParsedLine, SPAN_STAGES};
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+/// Line predicate for [`scan_dir`]. Empty filter matches everything;
+/// set fields AND together.
+#[derive(Debug, Clone, Default)]
+pub struct TailFilter {
+    /// Keep only lines stamped with this run id.
+    pub run_id: Option<String>,
+    /// Keep only `span` lines carrying this trace id.
+    pub trace: Option<u64>,
+    /// Keep only lines with this event tag.
+    pub event: Option<String>,
+    /// Keep only lines whose variant key matches.
+    pub variant: Option<String>,
+}
+
+impl TailFilter {
+    pub fn matches(&self, line: &ParsedLine) -> bool {
+        if let Some(r) = &self.run_id {
+            if &line.run_id != r {
+                return false;
+            }
+        }
+        if let Some(t) = self.trace {
+            if line.trace != Some(t) {
+                return false;
+            }
+        }
+        if let Some(e) = &self.event {
+            if &line.tag != e {
+                return false;
+            }
+        }
+        if let Some(v) = &self.variant {
+            if line.key.as_deref() != Some(v.as_str()) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Result of scanning a telemetry directory: the matching lines in
+/// timestamp order, plus scan bookkeeping for the summary footer.
+#[derive(Debug, Default)]
+pub struct TailScan {
+    /// Lines that validated and passed the filter, sorted by `ts_ms`
+    /// (stable, so same-millisecond lines keep file order).
+    pub lines: Vec<ParsedLine>,
+    /// Segment files visited.
+    pub files: usize,
+    /// Non-empty lines read across all segments.
+    pub total_lines: usize,
+    /// Lines that failed schema validation (counted, skipped).
+    pub invalid_lines: usize,
+}
+
+/// Scans every `telemetry-*.jsonl` segment under `dir` (all runs —
+/// narrow with [`TailFilter::run_id`]), in filename order so rotation
+/// sequence numbers read chronologically within a run.
+pub fn scan_dir(dir: &Path, filter: &TailFilter) -> crate::Result<TailScan> {
+    let mut names: Vec<std::path::PathBuf> = Vec::new();
+    for entry in std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {}", dir.display(), e))?
+    {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with("telemetry-") && name.ends_with(".jsonl") {
+            names.push(entry.path());
+        }
+    }
+    names.sort();
+    let mut scan = TailScan::default();
+    for path in names {
+        scan.files += 1;
+        let file = File::open(&path)
+            .map_err(|e| anyhow::anyhow!("cannot open {}: {}", path.display(), e))?;
+        for line in BufReader::new(file).lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            scan.total_lines += 1;
+            match validate_line(&line) {
+                Ok(parsed) => {
+                    if filter.matches(&parsed) {
+                        scan.lines.push(parsed);
+                    }
+                }
+                Err(_) => scan.invalid_lines += 1,
+            }
+        }
+    }
+    scan.lines.sort_by_key(|l| l.ts_ms);
+    Ok(scan)
+}
+
+/// Pipeline position of a span stage, for ordering a waterfall. Stages
+/// outside [`SPAN_STAGES`] (a newer writer) sort last.
+fn stage_rank(stage: &str) -> usize {
+    SPAN_STAGES
+        .iter()
+        .position(|s| *s == stage)
+        .unwrap_or(SPAN_STAGES.len())
+}
+
+/// Renders the waterfall for one trace id from a scan's lines: spans
+/// grouped by attempt (gateway retries/hedges), each attempt's stages
+/// in pipeline order, abandoned attempts tagged. The footer
+/// cross-checks summed per-layer time against the execute span.
+pub fn render_waterfall(lines: &[ParsedLine], trace: u64) -> String {
+    let mut spans: Vec<&ParsedLine> = lines
+        .iter()
+        .filter(|l| l.tag == "span" && l.trace == Some(trace))
+        .collect();
+    if spans.is_empty() {
+        return format!("trace {}: no spans found\n", fmt_trace(trace));
+    }
+    spans.sort_by(|a, b| {
+        (a.attempt, stage_rank(a.stage.as_deref().unwrap_or("")), a.ts_ms).cmp(&(
+            b.attempt,
+            stage_rank(b.stage.as_deref().unwrap_or("")),
+            b.ts_ms,
+        ))
+    });
+    let mut out = format!("trace {} — {} spans\n", fmt_trace(trace), spans.len());
+    let mut cur_attempt: Option<u32> = None;
+    let mut layer_total: u64 = 0;
+    let mut execute_us: Option<u64> = None;
+    for s in &spans {
+        if cur_attempt != Some(s.attempt) {
+            cur_attempt = Some(s.attempt);
+            let abandoned = spans
+                .iter()
+                .filter(|x| x.attempt == s.attempt)
+                .all(|x| x.abandoned);
+            out.push_str(&format!(
+                "attempt {}{}\n",
+                s.attempt,
+                if abandoned { "  [abandoned]" } else { "" }
+            ));
+        }
+        let stage = s.stage.as_deref().unwrap_or("?");
+        let label = match (stage, &s.detail) {
+            ("layer", Some(name)) => format!("layer {}", name),
+            _ => stage.to_string(),
+        };
+        let key = s.key.as_deref().map(|k| format!("  [{}]", k)).unwrap_or_default();
+        out.push_str(&format!("  {:<24} {:>10} us{}\n", label, s.dur_us, key));
+        if !s.abandoned {
+            match stage {
+                "layer" => layer_total += s.dur_us,
+                "execute" => execute_us = Some(s.dur_us),
+                _ => {}
+            }
+        }
+    }
+    if let Some(exec) = execute_us {
+        if layer_total > 0 {
+            out.push_str(&format!(
+                "layers sum {} us / execute {} us{}\n",
+                layer_total,
+                exec,
+                if layer_total > exec {
+                    "  (layers exceed execute: clock skew?)"
+                } else {
+                    ""
+                }
+            ));
+        }
+    }
+    out
+}
+
+/// Renders windowed request rates from a scan's lines: buckets the
+/// request-outcome events into `window_s`-second windows anchored at
+/// the earliest event and prints per-window done/shed/rejected counts
+/// plus completed-per-second.
+pub fn render_rates(lines: &[ParsedLine], window_s: u64) -> String {
+    let window_s = window_s.max(1);
+    let outcomes: Vec<&ParsedLine> = lines
+        .iter()
+        .filter(|l| {
+            matches!(
+                l.tag.as_str(),
+                "request_done" | "request_shed" | "request_rejected"
+            )
+        })
+        .collect();
+    if outcomes.is_empty() {
+        return "no request events in range\n".to_string();
+    }
+    let t0 = outcomes.iter().map(|l| l.ts_ms).min().unwrap();
+    let span_ms = window_s * 1000;
+    let last = outcomes.iter().map(|l| l.ts_ms).max().unwrap();
+    let windows = ((last - t0) / span_ms + 1) as usize;
+    // (done, shed, rejected) per window.
+    let mut counts = vec![(0u64, 0u64, 0u64); windows];
+    for l in &outcomes {
+        let idx = ((l.ts_ms - t0) / span_ms) as usize;
+        let c = &mut counts[idx];
+        match l.tag.as_str() {
+            "request_done" => c.0 += 1,
+            "request_shed" => c.1 += 1,
+            _ => c.2 += 1,
+        }
+    }
+    let mut out = format!(
+        "{:>8}  {:>8}  {:>8}  {:>8}  {:>10}\n",
+        "window_s", "done", "shed", "rejected", "done/s"
+    );
+    for (i, (done, shed, rejected)) in counts.iter().enumerate() {
+        out.push_str(&format!(
+            "{:>8}  {:>8}  {:>8}  {:>8}  {:>10.1}\n",
+            i as u64 * window_s,
+            done,
+            shed,
+            rejected,
+            *done as f64 / window_s as f64
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{Event, ShedStage};
+    use std::io::Write;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "strum-tail-{}-{}-{}",
+            tag,
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_segment(dir: &std::path::Path, name: &str, lines: &[String]) {
+        let mut f = std::fs::File::create(dir.join(name)).unwrap();
+        for l in lines {
+            writeln!(f, "{}", l).unwrap();
+        }
+    }
+
+    fn span(
+        trace: u64,
+        attempt: u32,
+        stage: &'static str,
+        dur_us: u64,
+        abandoned: bool,
+        detail: Option<&str>,
+    ) -> Event {
+        Event::Span {
+            trace,
+            attempt,
+            stage,
+            key: Some(Arc::from("cnn:w8a8")),
+            dur_us,
+            abandoned,
+            detail: detail.map(String::from),
+        }
+    }
+
+    fn line(ev: &Event, run_id: &str, ts_ms: u64) -> String {
+        ev.to_json(run_id, ts_ms).to_string()
+    }
+
+    #[test]
+    fn scan_filters_and_sorts_and_counts_invalid() {
+        let dir = tmp_dir("scan");
+        write_segment(
+            &dir,
+            "telemetry-runa.0000.jsonl",
+            &[
+                line(&span(7, 0, "execute", 100, false, None), "runa", 20),
+                line(&span(7, 0, "queue_wait", 5, false, None), "runa", 10),
+                "not json at all".to_string(),
+            ],
+        );
+        write_segment(
+            &dir,
+            "telemetry-runb.0000.jsonl",
+            &[line(&span(9, 0, "execute", 50, false, None), "runb", 15)],
+        );
+        // A non-telemetry file in the dir is ignored entirely.
+        write_segment(&dir, "notes.txt", &["hello".to_string()]);
+
+        let all = scan_dir(&dir, &TailFilter::default()).unwrap();
+        assert_eq!(all.files, 2);
+        assert_eq!(all.total_lines, 4);
+        assert_eq!(all.invalid_lines, 1);
+        assert_eq!(all.lines.len(), 3);
+        // Sorted by ts_ms across files.
+        let ts: Vec<u64> = all.lines.iter().map(|l| l.ts_ms).collect();
+        assert_eq!(ts, vec![10, 15, 20]);
+
+        let by_run = scan_dir(
+            &dir,
+            &TailFilter {
+                run_id: Some("runb".into()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(by_run.lines.len(), 1);
+        assert_eq!(by_run.lines[0].trace, Some(9));
+
+        let by_trace = scan_dir(
+            &dir,
+            &TailFilter {
+                trace: Some(7),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(by_trace.lines.len(), 2);
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn filter_by_event_and_variant() {
+        let done = Event::RequestDone {
+            key: Arc::from("a"),
+            latency_us: 10,
+            deadline_budget_ms: None,
+            batch_occupancy: 1,
+            batch_padded: 1,
+        };
+        let shed = Event::RequestShed {
+            key: Arc::from("b"),
+            stage: ShedStage::Queue,
+        };
+        let dir = tmp_dir("filter");
+        write_segment(
+            &dir,
+            "telemetry-r.0000.jsonl",
+            &[line(&done, "r", 1), line(&shed, "r", 2)],
+        );
+        let sheds = scan_dir(
+            &dir,
+            &TailFilter {
+                event: Some("request_shed".into()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(sheds.lines.len(), 1);
+        assert_eq!(sheds.lines[0].key.as_deref(), Some("b"));
+
+        let var_a = scan_dir(
+            &dir,
+            &TailFilter {
+                variant: Some("a".into()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(var_a.lines.len(), 1);
+        assert_eq!(var_a.lines[0].tag, "request_done");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn waterfall_orders_attempts_and_stages_and_flags_abandoned() {
+        let t = 0xabcdu64;
+        let dir = tmp_dir("wf");
+        // Written out of order on purpose; hedge attempt 1 lost.
+        write_segment(
+            &dir,
+            "telemetry-r.0000.jsonl",
+            &[
+                line(&span(t, 0, "execute", 900, false, None), "r", 30),
+                line(&span(t, 0, "layer", 400, false, Some("conv1")), "r", 31),
+                line(&span(t, 0, "layer", 300, false, Some("fc")), "r", 32),
+                line(&span(t, 0, "queue_wait", 50, false, None), "r", 20),
+                line(&span(t, 0, "gateway_attempt", 1200, false, None), "r", 40),
+                line(&span(t, 1, "gateway_attempt", 800, true, None), "r", 41),
+                line(&span(999, 0, "execute", 1, false, None), "r", 5),
+            ],
+        );
+        let scan = scan_dir(&dir, &TailFilter::default()).unwrap();
+        let out = render_waterfall(&scan.lines, t);
+        // Both attempts present; the losing hedge is tagged.
+        assert!(out.contains("attempt 0\n"), "{}", out);
+        assert!(out.contains("attempt 1  [abandoned]"), "{}", out);
+        // Stage order within attempt 0: gateway_attempt, queue_wait,
+        // execute, then layers.
+        let ga = out.find("gateway_attempt").unwrap();
+        let qw = out.find("queue_wait").unwrap();
+        let ex = out.find("execute").unwrap();
+        let l1 = out.find("layer conv1").unwrap();
+        let l2 = out.find("layer fc").unwrap();
+        assert!(ga < qw && qw < ex && ex < l1 && l1 < l2, "{}", out);
+        // Footer reconciles layer sum against execute.
+        assert!(out.contains("layers sum 700 us / execute 900 us"), "{}", out);
+        // The other trace's span stayed out.
+        assert_eq!(out.matches("execute").count(), 2, "{}", out); // span line + footer
+
+        let missing = render_waterfall(&scan.lines, 0xdead);
+        assert!(missing.contains("no spans found"), "{}", missing);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rates_bucket_by_window() {
+        let done = |ts: u64| {
+            line(
+                &Event::RequestDone {
+                    key: Arc::from("k"),
+                    latency_us: 5,
+                    deadline_budget_ms: None,
+                    batch_occupancy: 1,
+                    batch_padded: 1,
+                },
+                "r",
+                ts,
+            )
+        };
+        let shed = |ts: u64| {
+            line(
+                &Event::RequestShed {
+                    key: Arc::from("k"),
+                    stage: ShedStage::Door,
+                },
+                "r",
+                ts,
+            )
+        };
+        let dir = tmp_dir("rates");
+        write_segment(
+            &dir,
+            "telemetry-r.0000.jsonl",
+            &[
+                done(1000),
+                done(1500),
+                shed(1900),
+                done(3100), // second 2s window
+            ],
+        );
+        let scan = scan_dir(&dir, &TailFilter::default()).unwrap();
+        let out = render_rates(&scan.lines, 2);
+        let rows: Vec<&str> = out.lines().collect();
+        assert_eq!(rows.len(), 3, "{}", out); // header + 2 windows
+        assert!(rows[1].trim_start().starts_with('0'), "{}", out);
+        // Window 0: 2 done, 1 shed. Window 1: 1 done.
+        assert!(rows[1].contains('2') && rows[1].contains('1'), "{}", out);
+        assert!(rows[2].contains('1'), "{}", out);
+
+        let empty = render_rates(&[], 2);
+        assert!(empty.contains("no request events"), "{}", empty);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

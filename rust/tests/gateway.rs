@@ -19,8 +19,9 @@ use strum_dpu::model::eval::EvalConfig;
 use strum_dpu::model::import::NetWeights;
 use strum_dpu::quant::Method;
 use strum_dpu::server::{
-    ErrorCode, WireClient, WireResponse, WireServer, WireServerOptions,
+    AioServer, ErrorCode, WireClient, WireResponse, WireServer, WireServerOptions,
 };
+use strum_dpu::telemetry::{scan_dir, TailFilter, TelemetryConfig, TelemetrySink, TraceCtx};
 use strum_dpu::util::json::Json;
 use strum_dpu::util::prng::Rng;
 
@@ -279,6 +280,201 @@ fn hedge_fires_and_backup_wins_against_a_slow_primary() {
     s0.shutdown();
     s1.shutdown();
     gw.shutdown();
+}
+
+/// [`slow_replica`] on the async tier: traced requests ride v2 frames
+/// with the 9-byte trace tail, which the legacy blocking tier refuses
+/// by design — both the front and the forward targets must speak v2.
+fn aio_slow_replica(delay: Duration) -> (Arc<Engine>, AioServer, String) {
+    let engine = Arc::new(Engine::start(EngineOptions {
+        workers: 1,
+        max_wait: Duration::ZERO,
+        ..EngineOptions::default()
+    }));
+    let variant = Arc::new(Variant {
+        key: "slow".to_string(),
+        net: "slow".to_string(),
+        classes: CLASSES,
+        img: IMG,
+        backend: Arc::new(SlowBackend {
+            delay,
+            sizes: vec![1, 2, 4, 8, 16],
+        }),
+    });
+    engine
+        .register_with(
+            variant,
+            BatchPolicy {
+                max_batch: 16,
+                max_wait: Duration::ZERO,
+            },
+            64,
+        )
+        .unwrap();
+    let server = AioServer::bind(
+        Some("127.0.0.1:0"),
+        None,
+        engine.clone(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    (engine, server, addr)
+}
+
+/// Collects `(attempt, abandoned)` for every `gateway_attempt` span of
+/// `trace` in `dir`, asserting each span carries the id bit-exact.
+fn attempt_spans(dir: &std::path::Path, trace: u64) -> Vec<(u32, bool)> {
+    let filter = TailFilter {
+        trace: Some(trace),
+        ..TailFilter::default()
+    };
+    let scan = scan_dir(dir, &filter).unwrap();
+    scan.lines
+        .iter()
+        .filter(|l| l.tag == "span" && l.stage.as_deref() == Some("gateway_attempt"))
+        .map(|l| {
+            assert_eq!(l.trace, Some(trace), "trace id must survive bit-exact");
+            (l.attempt, l.abandoned)
+        })
+        .collect()
+}
+
+/// A traced request keeps its 64-bit id bit-exact across a hedge: the
+/// winner's and loser's `gateway_attempt` spans share the id under
+/// distinct attempt ordinals, and exactly the loser is `abandoned`.
+#[test]
+fn traced_hedge_keeps_the_id_and_tags_the_loser_abandoned() {
+    let dir = std::env::temp_dir().join(format!("strum-gw-trace-hedge-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sink = TelemetrySink::open(TelemetryConfig::under(&dir)).unwrap();
+
+    let (_e0, s0, a0) = aio_slow_replica(Duration::from_millis(150));
+    let (_e1, s1, a1) = aio_slow_replica(Duration::from_millis(1));
+    let gw = Gateway::start(GatewayOptions {
+        attach: vec![a0, a1],
+        probe_interval: Duration::from_millis(50),
+        fail_threshold: 1,
+        hedge: Some(HedgePolicy::FixedMs(5)),
+        telemetry: sink.clone(),
+        ..GatewayOptions::default()
+    })
+    .unwrap();
+    assert!(gw.wait_healthy(2, Duration::from_secs(10)));
+    let front = AioServer::bind_handler(
+        Some("127.0.0.1:0"),
+        None,
+        gw.handler(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let addr = front.local_addr().unwrap().to_string();
+
+    const TRACE: u64 = 0xC0FF_EED0_0D01;
+    let mut client = WireClient::connect(&addr).unwrap();
+    let r = client
+        .infer_traced(
+            "slow",
+            &random_image(8),
+            0,
+            Some(TraceCtx {
+                trace_id: TRACE,
+                attempt: 0,
+            }),
+        )
+        .unwrap()
+        .into_infer()
+        .unwrap();
+    assert_eq!(r.logits.len(), CLASSES);
+    assert!(gw.snapshot().hedges >= 1, "a 5 ms hedge must fire inside a 150 ms primary");
+    // Let the abandoned slow forward drain before tearing its engine down.
+    std::thread::sleep(Duration::from_millis(250));
+
+    front.shutdown();
+    s0.shutdown();
+    s1.shutdown();
+    gw.shutdown();
+    sink.flush();
+
+    let attempts = attempt_spans(&dir, TRACE);
+    assert_eq!(attempts.len(), 2, "winner + loser spans (got {:?})", attempts);
+    let mut ords: Vec<u32> = attempts.iter().map(|a| a.0).collect();
+    ords.sort_unstable();
+    assert_eq!(ords, vec![0, 1], "hedge attempts take distinct ordinals");
+    assert_eq!(
+        attempts.iter().filter(|a| a.1).count(),
+        1,
+        "exactly the loser is abandoned (got {:?})",
+        attempts
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A transport-failure retry reuses the client's trace id under the
+/// next attempt ordinal; neither span is abandoned — both outcomes
+/// were read (one errored, one answered).
+#[test]
+fn traced_retry_reuses_the_id_with_distinct_attempts() {
+    let dir = std::env::temp_dir().join(format!("strum-gw-trace-retry-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sink = TelemetrySink::open(TelemetryConfig::under(&dir)).unwrap();
+
+    let (_e0, s0, a0) = aio_slow_replica(Duration::from_millis(1));
+    let (_e1, s1, a1) = aio_slow_replica(Duration::from_millis(1));
+    // A long probe interval keeps the prober out of the race: the dead
+    // replica stays nominally routable, so the router itself must hit
+    // the failure and retry under the same trace.
+    let gw = Gateway::start(GatewayOptions {
+        attach: vec![a0, a1],
+        probe_interval: Duration::from_secs(30),
+        fail_threshold: 1,
+        telemetry: sink.clone(),
+        ..GatewayOptions::default()
+    })
+    .unwrap();
+    assert!(gw.wait_healthy(2, Duration::from_secs(10)));
+    let front = AioServer::bind_handler(
+        Some("127.0.0.1:0"),
+        None,
+        gw.handler(),
+        WireServerOptions::default(),
+    )
+    .unwrap();
+    let addr = front.local_addr().unwrap().to_string();
+
+    // Kill replica 0 — the idle-rank tie routes there first.
+    s0.shutdown();
+    const TRACE: u64 = 0x0DD_BA11;
+    let mut client = WireClient::connect(&addr).unwrap();
+    let r = client
+        .infer_traced(
+            "slow",
+            &random_image(9),
+            0,
+            Some(TraceCtx {
+                trace_id: TRACE,
+                attempt: 0,
+            }),
+        )
+        .unwrap()
+        .into_infer()
+        .unwrap();
+    assert_eq!(r.logits.len(), CLASSES);
+    assert!(gw.snapshot().retries >= 1, "dead replica must force a routed retry");
+
+    front.shutdown();
+    s1.shutdown();
+    gw.shutdown();
+    sink.flush();
+
+    let mut attempts = attempt_spans(&dir, TRACE);
+    attempts.sort_unstable();
+    assert_eq!(
+        attempts,
+        vec![(0, false), (1, false)],
+        "failed forward then retry share the trace, neither abandoned"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 // ------------------------------------------- supervised replicas (chaos)

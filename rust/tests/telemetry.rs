@@ -20,13 +20,19 @@ use strum_dpu::server::{
     AioServer, HttpClient, PipelinedClient, WireClient, WireResponse, WireServer,
     WireServerOptions,
 };
-use strum_dpu::telemetry::{segment_files, validate_line, TelemetryConfig, TelemetrySink};
+use strum_dpu::telemetry::{
+    segment_files, validate_line, TelemetryConfig, TelemetrySink, TraceCtx,
+};
 use strum_dpu::util::prng::Rng;
 
 const IMG: usize = 16;
 const CLASSES: usize = 8;
 
-fn fleet_engine(sink: TelemetrySink, seed: u64) -> anyhow::Result<(Arc<Engine>, Vec<f32>)> {
+fn fleet_engine(
+    sink: TelemetrySink,
+    seed: u64,
+    trace_sample: u32,
+) -> anyhow::Result<(Arc<Engine>, Vec<f32>)> {
     let mut weights = synth_net_weights("mini_cnn_s", IMG, CLASSES, seed)?;
     let px = IMG * IMG * 3;
     let mut rng = Rng::new(seed ^ 1);
@@ -38,6 +44,7 @@ fn fleet_engine(sink: TelemetrySink, seed: u64) -> anyhow::Result<(Arc<Engine>, 
         max_wait: Duration::from_millis(1),
         telemetry: sink,
         telemetry_interval: Some(Duration::from_millis(50)),
+        trace_sample,
         ..EngineOptions::default()
     }));
     for (label, method, p) in [
@@ -60,7 +67,7 @@ fn wire_serving_events_reconcile_with_metrics() -> anyhow::Result<()> {
     let run_id = sink.run_id().to_string();
     assert!(!run_id.is_empty());
 
-    let (engine, image) = fleet_engine(sink.clone(), 91)?;
+    let (engine, image) = fleet_engine(sink.clone(), 91, 0)?;
     let server = WireServer::bind(
         "127.0.0.1:0",
         engine.clone(),
@@ -181,7 +188,7 @@ fn aio_http_and_pipeline_events_reconcile_with_stats() -> anyhow::Result<()> {
     let sink = TelemetrySink::open(TelemetryConfig::under(&dir))?;
     let run_id = sink.run_id().to_string();
 
-    let (engine, image) = fleet_engine(sink.clone(), 97)?;
+    let (engine, image) = fleet_engine(sink.clone(), 97, 0)?;
     let server = AioServer::bind(
         Some("127.0.0.1:0"),
         Some("127.0.0.1:0"),
@@ -269,7 +276,7 @@ fn disabled_sink_serves_without_writing_anything() -> anyhow::Result<()> {
     assert!(!sink.is_enabled());
     assert_eq!(sink.run_id(), "");
 
-    let (engine, image) = fleet_engine(sink.clone(), 93)?;
+    let (engine, image) = fleet_engine(sink.clone(), 93, 0)?;
     for _ in 0..5 {
         engine.submit("base", image.clone()).expect("submit").wait()?;
     }
@@ -278,5 +285,142 @@ fn disabled_sink_serves_without_writing_anything() -> anyhow::Result<()> {
     assert_eq!(snap.telemetry_dropped, 0);
     sink.flush(); // no-op, must not block
     assert!(!dir.exists(), "disabled sink must never create files");
+    Ok(())
+}
+
+/// Tracing reconciliation over the async tier: every traced request's
+/// stage spans land 1:1 against the metrics snapshot, layer profiling
+/// samples exactly the 1-in-N trace ids, and summed layer time never
+/// exceeds the execute span it was measured inside.
+#[test]
+fn traced_requests_emit_spans_that_reconcile_and_sample_layers() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("strum-telemetry-trace-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sink = TelemetrySink::open(TelemetryConfig::under(&dir))?;
+    let run_id = sink.run_id().to_string();
+
+    // trace_sample = 2: even trace ids carry layer spans, odd ones don't.
+    let (engine, image) = fleet_engine(sink.clone(), 89, 2)?;
+    let server = AioServer::bind(
+        Some("127.0.0.1:0"),
+        None,
+        engine.clone(),
+        WireServerOptions {
+            conn_workers: 2,
+            telemetry: sink.clone(),
+            ..WireServerOptions::default()
+        },
+    )?;
+    let mut client = WireClient::connect(&server.local_addr().unwrap().to_string())?;
+
+    // Ten traced requests with consecutive ids (the loadgen --trace
+    // shape), synchronous so each rides its own batch, plus three
+    // untraced ones that must leave no spans at all.
+    let base = 0x1000u64;
+    let traced = 10u64;
+    for i in 0..traced {
+        let ctx = TraceCtx {
+            trace_id: base + i,
+            attempt: 0,
+        };
+        match client.infer_traced("base", &image, 0, Some(ctx))? {
+            WireResponse::Infer(_) => {}
+            WireResponse::Error { code, detail } => {
+                panic!("traced infer failed {:?}: {}", code, detail)
+            }
+        }
+    }
+    for _ in 0..3 {
+        assert!(matches!(
+            client.infer("base", &image)?,
+            WireResponse::Infer(_)
+        ));
+    }
+
+    let snap = engine.metrics();
+    drop(client);
+    server.shutdown();
+    if let Ok(engine) = Arc::try_unwrap(engine) {
+        engine.shutdown();
+    }
+    sink.flush();
+    assert_eq!(sink.dropped(), 0, "bounded channel must not have overflowed");
+
+    // (trace id, stage) -> count; plus per-trace layer/execute micros.
+    let mut stage_counts: BTreeMap<(u64, String), u64> = BTreeMap::new();
+    let mut layer_sum: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut exec_us: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut span_traces: Vec<u64> = Vec::new();
+    for f in &segment_files(&dir, &run_id) {
+        for line in std::fs::read_to_string(f)?.lines() {
+            let parsed = validate_line(line)
+                .unwrap_or_else(|e| panic!("invalid telemetry line {:?}: {:#}", line, e));
+            if parsed.tag != "span" {
+                continue;
+            }
+            let t = parsed.trace.expect("span lines carry a trace id");
+            let stage = parsed.stage.expect("span lines carry a stage");
+            assert!(!parsed.abandoned, "no hedging here, nothing abandoned");
+            span_traces.push(t);
+            match stage.as_str() {
+                "layer" => {
+                    assert!(
+                        parsed.detail.is_some(),
+                        "layer spans carry the layer name"
+                    );
+                    *layer_sum.entry(t).or_insert(0) += parsed.dur_us;
+                }
+                "execute" => {
+                    exec_us.insert(t, parsed.dur_us);
+                }
+                _ => {}
+            }
+            *stage_counts.entry((t, stage)).or_insert(0) += 1;
+        }
+    }
+
+    // Spans exist only for the ten traced requests.
+    span_traces.sort_unstable();
+    span_traces.dedup();
+    assert_eq!(
+        span_traces,
+        (base..base + traced).collect::<Vec<_>>(),
+        "exactly the traced ids appear in the span log"
+    );
+    assert_eq!(snap.fleet.completed, traced + 3);
+
+    // Every traced request shows the full stage pipeline exactly once.
+    for i in 0..traced {
+        let t = base + i;
+        for stage in ["door", "queue_wait", "batch", "execute", "reply_write"] {
+            assert_eq!(
+                stage_counts.get(&(t, stage.to_string())).copied().unwrap_or(0),
+                1,
+                "stage {} for trace {:#x}",
+                stage,
+                t
+            );
+        }
+        // 1-in-2 sampling determinism: even ids profiled, odd ids not.
+        let layers = stage_counts
+            .get(&(t, "layer".to_string()))
+            .copied()
+            .unwrap_or(0);
+        if t % 2 == 0 {
+            assert!(layers > 0, "sampled trace {:#x} has no layer spans", t);
+            // Layers are timed inside the execute window.
+            assert!(
+                layer_sum[&t] <= exec_us[&t],
+                "layers {}us exceed execute {}us for {:#x}",
+                layer_sum[&t],
+                exec_us[&t],
+                t
+            );
+        } else {
+            assert_eq!(layers, 0, "unsampled trace {:#x} was profiled", t);
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
     Ok(())
 }
